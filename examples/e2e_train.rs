@@ -1,0 +1,36 @@
+//! The end-to-end driver (EXPERIMENTS.md §End-to-End): train the largest
+//! exported config with LISA on the instruction corpus for a few hundred
+//! steps, logging the loss curve, throughput, memory and a per-segment
+//! profile, then checkpoint + evaluate.
+//!
+//! ```bash
+//! make artifacts CONFIGS=e2e100m          # ~110M-parameter artifacts
+//! cargo run --release --example e2e_train -- --config e2e100m --steps 200
+//! # CPU-budget alternative (35M params):
+//! cargo run --release --example e2e_train -- --config base --steps 200
+//! ```
+
+use lisa::exp::{self, Ctx};
+use lisa::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    lisa::util::logger::init();
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let a = Args::parse(
+        &raw,
+        &[
+            ("config", "base", "model config to run"),
+            ("steps", "200", "training steps"),
+            ("backend", "pallas", "kernel backend"),
+            ("seed", "42", "seed"),
+        ],
+    )?;
+    let ctx = Ctx {
+        artifacts: "artifacts".into(),
+        results: "results".into(),
+        backend: a.get("backend"),
+        scale: 1.0,
+        seed: a.get_u64("seed")?,
+    };
+    exp::e2e::e2e(&ctx, &a.get("config"), Some(a.get_usize("steps")?))
+}

@@ -1,0 +1,39 @@
+//! Early-exit (DoLa-style) inspection: evaluate exact-match when logits are
+//! read from intermediate depths of a LISA-trained model (paper Table 12).
+//!
+//! ```bash
+//! cargo run --release --example early_exit
+//! ```
+
+use std::path::Path;
+
+use lisa::data::{corpus, encode_sft, split_train_val, DataLoader, Tokenizer};
+use lisa::eval;
+use lisa::lisa::LisaConfig;
+use lisa::runtime::Runtime;
+use lisa::train::{Method, TrainConfig, TrainSession};
+
+fn main() -> anyhow::Result<()> {
+    lisa::util::logger::init();
+    let rt = Runtime::load(Path::new("artifacts/tiny"), "pallas")?;
+    let m = rt.manifest.clone();
+
+    let problems = corpus::gen_math_problems(240, 4, 2);
+    let tok = Tokenizer::build(&corpus::sample_texts(&problems), m.vocab);
+    let (tr, te) = split_train_val(&problems, 0.25, 5);
+    let enc = |xs: &[corpus::Sample]| xs.iter().map(|s| encode_sft(&tok, s, m.seq)).collect::<Vec<_>>();
+    let mut train_dl = DataLoader::new(enc(&tr), m.batch, m.seq, 2);
+    let test_dl = DataLoader::new(enc(&te), m.batch, m.seq, 2);
+
+    let cfg = TrainConfig { steps: 60, lr: 3e-3, seed: 6, log_every: 20, ..Default::default() };
+    let mut sess = TrainSession::new(&rt, Method::Lisa(LisaConfig::paper(2, 5)), cfg);
+    sess.run(&mut train_dl)?;
+    let params = sess.eval_params();
+
+    println!("exit depth -> GSM8K-proxy exact match");
+    for depth in 1..=m.n_layers {
+        let em = eval::exact_match_at_depth(&mut sess.engine, &params, &test_dl, depth)?;
+        println!("  {depth:>2}/{}: {:>5.1}%", m.n_layers, 100.0 * em);
+    }
+    Ok(())
+}

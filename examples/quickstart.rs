@@ -1,0 +1,52 @@
+//! Quickstart: fine-tune a small transformer with LISA and compare it with
+//! full-parameter training — the 60-second tour of the public API.
+//!
+//! ```bash
+//! make artifacts                       # once: AOT-lower the JAX segments
+//! cargo run --release --example quickstart
+//! ```
+
+use std::path::Path;
+
+use lisa::data::{corpus, encode_sft, split_train_val, DataLoader, Tokenizer};
+use lisa::eval;
+use lisa::lisa::LisaConfig;
+use lisa::runtime::Runtime;
+use lisa::train::{Method, TrainConfig, TrainSession};
+
+fn main() -> anyhow::Result<()> {
+    lisa::util::logger::init();
+
+    // 1. A runtime = one model config's AOT artifacts + a PJRT CPU client.
+    let rt = Runtime::load(Path::new("artifacts/tiny"), "pallas")?;
+    let m = rt.manifest.clone();
+    println!("model: {:.1}M params, {} layers", m.n_params as f64 / 1e6, m.n_layers);
+
+    // 2. Synthetic instruction corpus -> tokenizer -> batches.
+    let samples = corpus::gen_instruction_corpus(256, 42);
+    let tok = Tokenizer::build(&corpus::sample_texts(&samples), m.vocab);
+    let (train, val) = split_train_val(&samples, 0.1, 7);
+    let enc = |xs: &[corpus::Sample]| xs.iter().map(|s| encode_sft(&tok, s, m.seq)).collect::<Vec<_>>();
+    let mut train_dl = DataLoader::new(enc(&train), m.batch, m.seq, 1);
+    let val_dl = DataLoader::new(enc(&val), m.batch, m.seq, 1);
+
+    // 3. Train with LISA (γ=2 layers unfrozen, resampled every K=5 steps)
+    //    and with full-parameter AdamW for comparison.
+    for method in [Method::Lisa(LisaConfig::paper(2, 5)), Method::Full] {
+        let label = method.label();
+        let cfg = TrainConfig { steps: 40, lr: 3e-3, seed: 42, log_every: 10, ..Default::default() };
+        let mut sess = TrainSession::new(&rt, method, cfg);
+        let res = sess.run(&mut train_dl)?;
+        let params = sess.eval_params();
+        let rep = eval::evaluate(&mut sess.engine, &params, &val_dl)?;
+        println!(
+            "[{label:>4}] loss {:.3} -> {:.3} | val ppl {:.1} | {:.0} ms/step | peak mem {}",
+            res.loss_curve.first().unwrap().1,
+            res.final_train_loss,
+            rep.ppl,
+            res.median_step_ms(),
+            lisa::util::table::human_bytes(res.peak_mem),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,175 @@
+"""AOT exporter: lower every Layer-2 segment to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto`` —
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per config this writes::
+
+    artifacts/<config>/<segment>.<backend>.hlo.txt   # backend in {pallas,jnp}
+    artifacts/<config>/manifest.json                 # shapes the Rust loader
+                                                     # validates against
+
+Lowering uses ``return_tuple=True`` so every module returns a tuple and the
+Rust side can uniformly unwrap. Python runs only here — never on the
+training path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, ModelConfig
+from .kernels.adamw import HYPER_LEN, adamw_update
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def segment_registry(cfg: ModelConfig, backend: str):
+    """name -> (fn, [operand ShapeDtypeStructs]). Operand order is the ABI
+    the Rust engine follows (rust/src/runtime/artifacts.rs)."""
+    b, t, d, v = cfg.batch, cfg.seq, cfg.d_model, cfg.vocab
+    h3 = _spec((b, t, d))
+    tok = _spec((b, t), jnp.int32)
+    bp = [_spec(s) for _, s in cfg.block_param_shapes()]
+    lp = [_spec(s) for _, s in cfg.lora_param_shapes()]
+    gf, wh = [_spec(s) for _, s in cfg.head_param_shapes()]
+    emb, pos = [_spec(s) for _, s in cfg.embed_param_shapes()]
+    kw = dict(cfg=cfg, backend=backend)
+    n_opt = cfg.d_model * cfg.d_ff  # largest single block tensor
+    flat = _spec((n_opt,))
+
+    return {
+        "embed_fwd": (functools.partial(model.embed_fwd, cfg=cfg),
+                      [tok, emb, pos]),
+        "embed_bwd": (functools.partial(model.embed_bwd, cfg=cfg),
+                      [h3, tok]),
+        "block_fwd": (functools.partial(model.block_fwd, **kw),
+                      [h3, *bp]),
+        "block_bwd_full": (functools.partial(model.block_bwd_full, **kw),
+                           [h3, h3, *bp]),
+        "block_bwd_x": (functools.partial(model.block_bwd_x, **kw),
+                        [h3, h3, *bp]),
+        "block_fwd_lora": (functools.partial(model.block_fwd_lora, **kw),
+                           [h3, *bp, *lp]),
+        "block_bwd_lora": (functools.partial(model.block_bwd_lora, **kw),
+                           [h3, h3, *bp, *lp]),
+        "head_fwd_bwd": (functools.partial(model.head_fwd_bwd, **kw),
+                         [h3, gf, wh, tok]),
+        "head_fwd_bwd_x": (functools.partial(model.head_fwd_bwd_x, **kw),
+                           [h3, gf, wh, tok]),
+        "head_loss": (functools.partial(model.head_loss, **kw),
+                      [h3, gf, wh, tok]),
+        "head_logits": (functools.partial(model.head_logits, **kw),
+                        [h3, gf, wh]),
+        "adamw_update": (
+            lambda p, g, m, vv, hy: adamw_update(p, g, m, vv, hy,
+                                                 interpret=True),
+            [flat, flat, flat, flat, _spec((HYPER_LEN,))]),
+    }
+
+
+def _sig(specs):
+    return [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs]
+
+
+def export_config(cfg: ModelConfig, out_root: str, backends, force=False,
+                  segments=None) -> dict:
+    out_dir = os.path.join(out_root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    # Merge with an existing manifest so partial re-exports (one backend or
+    # a segment subset) don't drop previously exported entries.
+    prev_segments = {}
+    mpath = os.path.join(out_dir, "manifest.json")
+    if os.path.exists(mpath):
+        try:
+            with open(mpath) as f:
+                prev_segments = json.load(f).get("segments", {})
+        except (json.JSONDecodeError, OSError):
+            prev_segments = {}
+    manifest = {
+        "config": {
+            "name": cfg.name, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "vocab": cfg.vocab, "seq": cfg.seq, "batch": cfg.batch,
+            "mlp_ratio": cfg.mlp_ratio, "lora_rank": cfg.lora_rank,
+            "lora_alpha": cfg.lora_alpha, "n_params": cfg.n_params(),
+        },
+        "block_params": [list(s) for _, s in cfg.block_param_shapes()],
+        "block_param_names": [n for n, _ in cfg.block_param_shapes()],
+        "lora_params": [list(s) for _, s in cfg.lora_param_shapes()],
+        "lora_param_names": [n for n, _ in cfg.lora_param_shapes()],
+        "segments": prev_segments,
+    }
+    for backend in backends:
+        reg = segment_registry(cfg, backend)
+        for name, (fn, specs) in reg.items():
+            if segments and name not in segments:
+                continue
+            if name == "adamw_update" and backend != "pallas":
+                continue  # the fused kernel IS the pallas artifact
+            fname = f"{name}.{backend}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            key = f"{name}.{backend}"
+            if os.path.exists(path) and not force:
+                print(f"  [skip] {cfg.name}/{fname}")
+            else:
+                lowered = jax.jit(fn).lower(*specs)
+                out_tree = jax.eval_shape(fn, *specs)
+                text = to_hlo_text(lowered)
+                with open(path, "w") as f:
+                    f.write(text)
+                print(f"  [ok]   {cfg.name}/{fname} "
+                      f"({len(text) // 1024} KiB)")
+            out_tree = jax.eval_shape(fn, *specs)
+            outs = jax.tree_util.tree_leaves(out_tree)
+            manifest["segments"][key] = {
+                "file": fname,
+                "operands": _sig(specs),
+                "outputs": _sig(outs),
+            }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small",
+                    help="comma list from: " + ",".join(CONFIGS))
+    ap.add_argument("--backends", default="pallas,jnp")
+    ap.add_argument("--segments", default="",
+                    help="optional comma list to restrict segments")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    segments = set(s for s in args.segments.split(",") if s) or None
+    for cname in args.configs.split(","):
+        cfg = CONFIGS[cname]
+        print(f"[config {cname}] {cfg.n_params()/1e6:.1f}M params")
+        export_config(cfg, args.out, args.backends.split(","), args.force,
+                      segments)
+    print("AOT export complete.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Model configurations shared by the AOT exporter and (via manifest.json)
+the Rust coordinator.
+
+Trainable configs are sized for the CPU-PJRT testbed; the paper-scale
+entries (TinyLlama / Mistral-7B / LLaMA-2-7B / LLaMA-2-70B / GPT2-small)
+exist only for the analytical memory model (Table 1 / Fig 3) and are never
+lowered to artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    vocab: int
+    seq: int
+    batch: int            # micro-batch baked into the artifact shapes
+    mlp_ratio: int = 4
+    lora_rank: int = 16
+    lora_alpha: float = 32.0
+    # Pallas tile sizes (TPU-aligned where the model allows; divisors of the
+    # relevant dims are picked automatically by the kernels otherwise).
+    block_q: int = 128
+    block_k: int = 128
+    block_n: int = 128    # rmsnorm row tile
+    xent_block_n: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return self.mlp_ratio * self.d_model
+
+    def block_param_shapes(self):
+        d, f = self.d_model, self.d_ff
+        return [
+            ("g1", (d,)), ("wq", (d, d)), ("wk", (d, d)), ("wv", (d, d)),
+            ("wo", (d, d)), ("g2", (d,)), ("w1", (d, f)), ("w2", (f, d)),
+        ]
+
+    def lora_param_shapes(self):
+        d, f, r = self.d_model, self.d_ff, self.lora_rank
+        out = []
+        for nm, din, dout in [("q", d, d), ("k", d, d), ("v", d, d),
+                              ("o", d, d), ("1", d, f), ("2", f, d)]:
+            out.append((f"a{nm}", (din, r)))
+            out.append((f"b{nm}", (r, dout)))
+        return out
+
+    def embed_param_shapes(self):
+        return [("emb", (self.vocab, self.d_model)),
+                ("pos", (self.seq, self.d_model))]
+
+    def head_param_shapes(self):
+        return [("gf", (self.d_model,)),
+                ("wh", (self.d_model, self.vocab))]
+
+    def n_params(self) -> int:
+        total = 0
+        for shapes in (self.embed_param_shapes(), self.head_param_shapes()):
+            for _, s in shapes:
+                n = 1
+                for x in s:
+                    n *= x
+                total += n
+        per_block = 0
+        for _, s in self.block_param_shapes():
+            n = 1
+            for x in s:
+                n *= x
+            per_block += n
+        return total + self.n_layers * per_block
+
+
+CONFIGS = {
+    c.name: c for c in [
+        ModelConfig("tiny", d_model=128, n_layers=4, n_heads=4, vocab=512,
+                    seq=64, batch=2, lora_rank=8),
+        ModelConfig("small", d_model=256, n_layers=6, n_heads=8, vocab=2048,
+                    seq=128, batch=4, lora_rank=16),
+        ModelConfig("base", d_model=512, n_layers=8, n_heads=8, vocab=8192,
+                    seq=128, batch=4, lora_rank=32),
+        ModelConfig("e2e100m", d_model=768, n_layers=12, n_heads=12,
+                    vocab=16384, seq=256, batch=2, lora_rank=64),
+    ]
+}

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels for the LISA reproduction.
+
+All kernels run under ``interpret=True`` (the CPU PJRT plugin cannot execute
+Mosaic custom-calls) and are float32-exact against the oracles in ``ref.py``.
+"""
+
+from . import ref  # noqa: F401
+from .adamw import adamw_update, pack_hyper  # noqa: F401
+from .flash_attention import flash_attention  # noqa: F401
+from .rmsnorm import rmsnorm  # noqa: F401
+from .softmax_xent import softmax_xent  # noqa: F401

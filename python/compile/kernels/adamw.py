@@ -1,0 +1,83 @@
+"""Fused AdamW update as a Pallas kernel.
+
+One elementwise pass over a flat parameter vector: reads (p, g, m, v) tiles
+from HBM into VMEM, applies the decoupled-weight-decay AdamW step and writes
+(p', m', v') back — 4 reads + 3 writes per element, the memory-bound optimum
+(an unfused jnp AdamW materializes ~6 intermediates).
+
+The production optimizer of this repo lives in Rust (``rust/src/opt``); this
+kernel is exported as the ``adamw_update`` artifact for the L1-vs-L3 ablation
+bench (EXPERIMENTS.md §Perf) and as the reference fused formulation.
+
+Hyperparameters arrive as a length-8 float32 operand
+``[lr, beta1, beta2, eps, weight_decay, bc1, bc2, _pad]`` where
+``bc{1,2} = 1 - beta^t`` are the bias corrections precomputed by the caller
+(the step counter lives in the Rust coordinator, not the graph).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+HYPER_LEN = 8
+
+
+def _pick_block(n: int, want: int) -> int:
+    b = min(want, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _kernel(p_ref, g_ref, m_ref, v_ref, hyper_ref, p_out, m_out, v_out):
+    p = p_ref[...]
+    g = g_ref[...]
+    m = m_ref[...]
+    v = v_ref[...]
+    h = hyper_ref[...]
+    lr, b1, b2, eps, wd, bc1, bc2 = h[0], h[1], h[2], h[3], h[4], h[5], h[6]
+    m2 = b1 * m + (1.0 - b1) * g
+    v2 = b2 * v + (1.0 - b2) * g * g
+    mhat = m2 / bc1
+    vhat = v2 / bc2
+    p_out[...] = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    m_out[...] = m2
+    v_out[...] = v2
+
+
+def adamw_update(p, g, m, v, hyper, *, block=4096, interpret=True):
+    """Fused AdamW. All of p,g,m,v are flat [n] float32; hyper is [8].
+
+    Returns (p', m', v').
+    """
+    (n,) = p.shape
+    block = _pick_block(n, block)
+    grid = (n // block,)
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[vec, vec, vec, vec,
+                  pl.BlockSpec((HYPER_LEN,), lambda i: (0,))],
+        out_specs=[vec, vec, vec],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 3,
+        interpret=interpret,
+    )(p, g, m, v, hyper)
+
+
+def pack_hyper(lr, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0,
+               step=1):
+    """Builds the [8] hyper operand; ``step`` is 1-based."""
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    return jnp.array([lr, beta1, beta2, eps, weight_decay, bc1, bc2, 0.0],
+                     dtype=jnp.float32)
+
+
+def vmem_bytes(block: int, bytes_per_el: int = 4) -> int:
+    """Peak VMEM per grid step: 4 input tiles + 3 output tiles + hyper."""
+    return (7 * block + HYPER_LEN) * bytes_per_el

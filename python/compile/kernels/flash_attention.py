@@ -1,0 +1,297 @@
+"""Flash attention as a Pallas kernel (TPU-shaped, run under interpret=True).
+
+This is the Layer-1 hot-spot of the LISA reproduction: causal multi-head
+attention with an online-softmax forward and a two-kernel backward
+(dq kernel gridded over query tiles, dkv kernel gridded over key tiles),
+wrapped in ``jax.custom_vjp`` so the Layer-2 block functions differentiate
+through the hand-written kernels.
+
+Hardware adaptation (paper targets CUDA, we target TPU — see
+DESIGN.md §Hardware-Adaptation): the HBM↔VMEM schedule is expressed with
+``BlockSpec`` — a query tile of shape [block_q, Dh] is staged into VMEM per
+grid step while K/V for the whole sequence are resident (fine for the
+sequence lengths this repo trains: T·Dh·4B ≤ 1 MB ≪ 16 MB VMEM), and the
+inner loop walks K/V in [block_k, Dh] tiles with running (m, l, acc)
+accumulators — the classic online softmax. Tile sizes default to MXU-friendly
+multiples; ``vmem_estimate`` below is what DESIGN/EXPERIMENTS quote.
+
+Everything is float32: the CPU PJRT plugin the Rust runtime uses executes
+the interpret-mode lowering, which is float32-exact against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30  # avoids -inf - -inf = nan in fully-masked tiles
+
+
+def _pick_block(t: int, want: int) -> int:
+    """Largest divisor of ``t`` that is <= want (tiles must divide T here)."""
+    b = min(want, t)
+    while t % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, sm_scale, block_k,
+                causal, seq_len):
+    # q_ref: [1, 1, block_q, d]; k_ref/v_ref: [1, 1, T, d]
+    q = q_ref[0, 0]
+    block_q, d = q.shape
+    start_q = pl.program_id(2) * block_q
+    q_ids = start_q + jax.lax.iota(jnp.int32, block_q)
+
+    m = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc = jnp.zeros((block_q, d), dtype=jnp.float32)
+
+    num_kb = seq_len // block_k
+
+    def body(i, carry):
+        m, l, acc = carry
+        start_k = i * block_k
+        k = k_ref[0, 0, pl.ds(start_k, block_k), :]
+        v = v_ref[0, 0, pl.ds(start_k, block_k), :]
+        s = jnp.dot(q, k.T) * sm_scale  # [block_q, block_k]
+        if causal:
+            k_ids = start_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_ids[:, None] >= k_ids[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v)
+        return m_new, l_new, acc_new
+
+    # Causal runs could bound the loop at the tile containing the last query
+    # index, but fori_loop bounds must be trace-time constants under the
+    # interpret path — we walk all tiles and let the mask zero the upper
+    # triangle. The TPU cost model (triangular schedule) is quoted in §Perf.
+    m, l, acc = jax.lax.fori_loop(0, num_kb, body, (m, l, acc))
+
+    o_ref[0, 0] = acc / l[:, None]
+    lse_ref[0, 0] = m + jnp.log(l)
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels
+# ---------------------------------------------------------------------------
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *,
+                   sm_scale, block_k, causal, seq_len):
+    q = q_ref[0, 0]
+    do = do_ref[0, 0]
+    lse = lse_ref[0, 0]
+    delta = delta_ref[0, 0]
+    block_q, d = q.shape
+    start_q = pl.program_id(2) * block_q
+    q_ids = start_q + jax.lax.iota(jnp.int32, block_q)
+    num_kb = seq_len // block_k
+
+    def body(i, dq):
+        start_k = i * block_k
+        k = k_ref[0, 0, pl.ds(start_k, block_k), :]
+        v = v_ref[0, 0, pl.ds(start_k, block_k), :]
+        s = jnp.dot(q, k.T) * sm_scale
+        if causal:
+            k_ids = start_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_ids[:, None] >= k_ids[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])  # [block_q, block_k]
+        dp = jnp.dot(do, v.T)
+        ds = p * (dp - delta[:, None]) * sm_scale
+        return dq + jnp.dot(ds, k)
+
+    dq = jax.lax.fori_loop(0, num_kb, body, jnp.zeros((block_q, d), jnp.float32))
+    dq_ref[0, 0] = dq
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, *, sm_scale, block_q, causal, seq_len):
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    block_k, d = k.shape
+    start_k = pl.program_id(2) * block_k
+    k_ids = start_k + jax.lax.iota(jnp.int32, block_k)
+    num_qb = seq_len // block_q
+
+    def body(i, carry):
+        dk, dv = carry
+        start_q = i * block_q
+        q = q_ref[0, 0, pl.ds(start_q, block_q), :]
+        do = do_ref[0, 0, pl.ds(start_q, block_q), :]
+        lse = lse_ref[0, 0, pl.ds(start_q, block_q)]
+        delta = delta_ref[0, 0, pl.ds(start_q, block_q)]
+        s = jnp.dot(q, k.T) * sm_scale  # [block_q, block_k]
+        if causal:
+            q_ids = start_q + jax.lax.iota(jnp.int32, block_q)
+            mask = q_ids[:, None] >= k_ids[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dv_new = dv + jnp.dot(p.T, do)
+        dp = jnp.dot(do, v.T)
+        ds = p * (dp - delta[:, None]) * sm_scale
+        dk_new = dk + jnp.dot(ds.T, q)
+        return dk_new, dv_new
+
+    zero = jnp.zeros((block_k, d), jnp.float32)
+    dk, dv = jax.lax.fori_loop(0, num_qb, body, (zero, zero))
+    dk_ref[0, 0] = dk
+    dv_ref[0, 0] = dv
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+def _fwd(q, k, v, *, causal, sm_scale, block_q, block_k, interpret):
+    b, h, t, d = q.shape
+    block_q = _pick_block(t, block_q)
+    block_k = _pick_block(t, block_k)
+    grid = (b, h, t // block_q)
+    kern = functools.partial(_fwd_kernel, sm_scale=sm_scale, block_k=block_k,
+                             causal=causal, seq_len=t)
+    o, lse = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, t, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, t, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b_, h_, i: (b_, h_, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, t), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return o, lse
+
+
+def _bwd(q, k, v, o, lse, do, *, causal, sm_scale, block_q, block_k,
+         interpret):
+    b, h, t, d = q.shape
+    block_q = _pick_block(t, block_q)
+    block_k = _pick_block(t, block_k)
+    delta = jnp.sum(do * o, axis=-1)  # [b, h, t]
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, sm_scale=sm_scale, block_k=block_k,
+                          causal=causal, seq_len=t),
+        grid=(b, h, t // block_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, t, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, t, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b_, h_, i: (b_, h_, i)),
+            pl.BlockSpec((1, 1, block_q), lambda b_, h_, i: (b_, h_, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h_, i: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, d), jnp.float32),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, sm_scale=sm_scale, block_q=block_q,
+                          causal=causal, seq_len=t),
+        grid=(b, h, t // block_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, t, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, t, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, t), lambda b_, h_, i: (b_, h_, 0)),
+            pl.BlockSpec((1, 1, t), lambda b_, h_, i: (b_, h_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, i: (b_, h_, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, t, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Public entry point: custom_vjp so jax.vjp over the L2 block uses our bwd
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal=True, sm_scale=None, block_q=128,
+                    block_k=128, interpret=True):
+    """Causal flash attention. q,k,v: [B,H,T,Dh] float32 -> [B,H,T,Dh]."""
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(q.shape[-1])
+    o, _ = _fwd(q, k, v, causal=causal, sm_scale=sm_scale, block_q=block_q,
+                block_k=block_k, interpret=interpret)
+    return o
+
+
+def _vjp_fwd(q, k, v, causal, sm_scale, block_q, block_k, interpret):
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(q.shape[-1])
+    o, lse = _fwd(q, k, v, causal=causal, sm_scale=sm_scale, block_q=block_q,
+                  block_k=block_k, interpret=interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _vjp_bwd(causal, sm_scale, block_q, block_k, interpret, res, do):
+    q, k, v, o, lse = res
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(q.shape[-1])
+    dq, dk, dv = _bwd(q, k, v, o, lse, do, causal=causal, sm_scale=sm_scale,
+                      block_q=block_q, block_k=block_k, interpret=interpret)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# TPU cost / VMEM model (used by EXPERIMENTS.md §Perf — interpret-mode
+# wallclock is NOT a TPU proxy, so we reason about structure instead)
+# ---------------------------------------------------------------------------
+
+def vmem_bytes(t: int, d: int, block_q: int, block_k: int,
+               bytes_per_el: int = 4) -> int:
+    """Peak VMEM bytes for one grid step of the forward kernel.
+
+    q tile + resident K + resident V + o tile + (m, l, acc) accumulators.
+    """
+    q_tile = block_q * d
+    kv = 2 * t * d
+    o_tile = block_q * d
+    acc = block_q * d + 2 * block_q
+    s_tile = block_q * block_k  # score tile materialized per inner step
+    return (q_tile + kv + o_tile + acc + s_tile) * bytes_per_el
+
+
+def mxu_utilization(t: int, d: int, block_q: int, block_k: int) -> float:
+    """Fraction of MXU-issue slots doing useful work: tiles aligned to 128
+    give 1.0; ragged tiles pay the pad. Causal masking halves useful work
+    in off-diagonal handling; we report the dense-tile bound."""
+    def eff(n: int) -> float:
+        pad = (-n) % 128
+        return n / (n + pad)
+    return eff(block_q) * eff(block_k) * eff(d)

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal of Layer 1: each kernel in
+``flash_attention.py`` / ``rmsnorm.py`` / ``adamw.py`` / ``softmax_xent.py``
+is checked against the function of the same name here by
+``python/tests/test_kernels.py`` over a sweep of shapes, dtypes and tilings.
+
+Everything here is written for clarity, not speed — no tiling, no online
+softmax, no fused updates. Numerics are float32 throughout (the CPU PJRT
+path the Rust runtime uses is float32).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, *, causal: bool = True, sm_scale: float | None = None):
+    """Plain softmax attention. q,k,v: [B, H, T, Dh] -> [B, H, T, Dh]."""
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * sm_scale
+    if causal:
+        t = q.shape[2]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        s = jnp.where(mask[None, None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def attention_lse(q, k, v, *, causal: bool = True, sm_scale: float | None = None):
+    """Returns (o, lse) where lse[b,h,t] = logsumexp of the scaled scores.
+
+    Matches the auxiliary output the flash kernel stashes for its backward.
+    """
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * sm_scale
+    if causal:
+        t = q.shape[2]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        s = jnp.where(mask[None, None, :, :], s, -jnp.inf)
+    lse = jax.scipy.special.logsumexp(s, axis=-1)
+    p = jnp.exp(s - lse[..., None])
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, g, *, eps: float = 1e-6):
+    """RMSNorm over the last axis. x: [..., D], g: [D]."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+# ---------------------------------------------------------------------------
+# AdamW (decoupled weight decay, Loshchilov & Hutter 2017)
+# ---------------------------------------------------------------------------
+
+def adamw(p, g, m, v, *, lr, beta1=0.9, beta2=0.999, eps=1e-8,
+          weight_decay=0.0, step=1):
+    """One AdamW update. Returns (p', m', v'). ``step`` is 1-based."""
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * jnp.square(g)
+    mhat = m2 / (1.0 - beta1 ** step)
+    vhat = v2 / (1.0 - beta2 ** step)
+    p2 = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+    return p2, m2, v2
+
+
+# ---------------------------------------------------------------------------
+# Masked softmax cross-entropy (the LM-head loss)
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, targets):
+    """Mean CE over positions with target >= 0; returns (loss, dlogits).
+
+    logits: [N, V] float32, targets: [N] int32 with -1 = ignore.
+    dlogits is the gradient of the mean loss w.r.t. logits.
+    """
+    valid = targets >= 0
+    safe_t = jnp.where(valid, targets, 0)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe_t[:, None], axis=-1)[:, 0]
+    per_row = (lse - ll) * valid.astype(logits.dtype)
+    denom = jnp.maximum(valid.sum().astype(logits.dtype), 1.0)
+    loss = per_row.sum() / denom
+    probs = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(safe_t, logits.shape[-1], dtype=logits.dtype)
+    dlogits = (probs - onehot) * valid[:, None].astype(logits.dtype) / denom
+    return loss, dlogits

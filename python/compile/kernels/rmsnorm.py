@@ -1,0 +1,129 @@
+"""Fused RMSNorm as a Pallas kernel with a hand-written backward.
+
+Rows of the input are tiled into VMEM ([block_n, D] per grid step); the
+forward computes ``y = x * rsqrt(mean(x^2)+eps) * g`` in one pass and the
+backward produces dx per row-tile plus a per-tile partial dg that is summed
+outside the kernel (cross-grid accumulation into a single [D] output is a
+race under the TPU model, so partials are the portable pattern).
+
+Wrapped in ``jax.custom_vjp`` so Layer-2 blocks differentiate through it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, want: int) -> int:
+    b = min(want, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _fwd_kernel(x_ref, g_ref, y_ref, rstd_ref, *, eps):
+    x = x_ref[...]  # [block_n, d]
+    g = g_ref[...]  # [d]
+    ms = jnp.mean(jnp.square(x), axis=-1)
+    rstd = jax.lax.rsqrt(ms + eps)
+    y_ref[...] = x * rstd[:, None] * g[None, :]
+    rstd_ref[...] = rstd
+
+
+def _bwd_kernel(x_ref, g_ref, rstd_ref, dy_ref, dx_ref, dg_ref):
+    x = x_ref[...]
+    g = g_ref[...]
+    rstd = rstd_ref[...]
+    dy = dy_ref[...]
+    d = x.shape[-1]
+    xhat = x * rstd[:, None]
+    wdy = dy * g[None, :]
+    # dx = rstd * (wdy - xhat * mean(wdy * xhat))
+    c = jnp.sum(wdy * xhat, axis=-1) / d
+    dx_ref[...] = rstd[:, None] * (wdy - xhat * c[:, None])
+    dg_ref[...] = jnp.sum(dy * xhat, axis=0)[None, :]  # partial over this tile
+
+
+def _fwd(x2, g, *, eps, block_n, interpret):
+    n, d = x2.shape
+    block_n = _pick_block(n, block_n)
+    grid = (n // block_n,)
+    y, rstd = pl.pallas_call(
+        functools.partial(_fwd_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2, g)
+    return y, rstd
+
+
+def _bwd(x2, g, rstd, dy2, *, block_n, interpret):
+    n, d = x2.shape
+    block_n = _pick_block(n, block_n)
+    nb = n // block_n
+    dx, dg_part = pl.pallas_call(
+        _bwd_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((nb, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2, g, rstd, dy2)
+    return dx, jnp.sum(dg_part, axis=0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def rmsnorm(x, g, eps=1e-6, block_n=128, interpret=True):
+    """RMSNorm over the last axis. x: [..., D], g: [D] -> [..., D]."""
+    shp = x.shape
+    x2 = x.reshape(-1, shp[-1])
+    y, _ = _fwd(x2, g, eps=eps, block_n=block_n, interpret=interpret)
+    return y.reshape(shp)
+
+
+def _vjp_fwd(x, g, eps, block_n, interpret):
+    shp = x.shape
+    x2 = x.reshape(-1, shp[-1])
+    y, rstd = _fwd(x2, g, eps=eps, block_n=block_n, interpret=interpret)
+    return y.reshape(shp), (x2, g, rstd, shp)
+
+
+def _vjp_bwd(eps, block_n, interpret, res, dy):
+    x2, g, rstd, shp = res
+    dy2 = dy.reshape(-1, shp[-1])
+    dx, dg = _bwd(x2, g, rstd, dy2, block_n=block_n, interpret=interpret)
+    return dx.reshape(shp), dg
+
+
+rmsnorm.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def vmem_bytes(d: int, block_n: int, bytes_per_el: int = 4) -> int:
+    """Peak VMEM per grid step: x tile, y tile, g, rstd."""
+    return (2 * block_n * d + d + block_n) * bytes_per_el

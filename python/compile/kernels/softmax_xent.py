@@ -1,0 +1,108 @@
+"""Fused masked softmax cross-entropy (the LM-head loss) as a Pallas kernel.
+
+For each tile of rows the kernel computes, in one VMEM residency of the
+[block_n, V] logit tile: the row max, the log-sum-exp, the per-row loss
+(masked by ``target >= 0``) and the gradient w.r.t. the logits
+``(softmax - onehot) * valid``. Host-side we reduce per-row losses to the
+mean and scale dlogits by ``1/n_valid`` — the same contract as
+``ref.softmax_xent``.
+
+This fusion is the memory win the LM head needs: an unfused implementation
+materializes probs + onehot + several [N, V] temporaries; here a logit tile
+is read once and its gradient written once.
+
+Targets use ``-1`` as ignore_index (prompt tokens in SFT are masked).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, want: int) -> int:
+    b = min(want, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _kernel(logits_ref, targets_ref, loss_ref, dlogits_ref):
+    logits = logits_ref[...]          # [block_n, V]
+    targets = targets_ref[...]        # [block_n]
+    bn, v = logits.shape
+    valid = targets >= 0
+    safe_t = jnp.where(valid, targets, 0)
+
+    mx = jnp.max(logits, axis=-1)
+    ex = jnp.exp(logits - mx[:, None])
+    denom = jnp.sum(ex, axis=-1)
+    lse = mx + jnp.log(denom)
+
+    cols = jax.lax.iota(jnp.int32, v)
+    onehot = (cols[None, :] == safe_t[:, None]).astype(jnp.float32)
+    ll = jnp.sum(logits * onehot, axis=-1)
+
+    validf = valid.astype(jnp.float32)
+    loss_ref[...] = (lse - ll) * validf
+    probs = ex / denom[:, None]
+    dlogits_ref[...] = (probs - onehot) * validf[:, None]
+
+
+def softmax_xent(logits, targets, *, block_n=8, interpret=True):
+    """Masked mean CE. logits: [N, V] f32, targets: [N] i32 (-1 ignored).
+
+    Returns (loss_scalar, dlogits) — gradients of the mean loss.
+    """
+    n, v = logits.shape
+    block_n = _pick_block(n, block_n)
+    grid = (n // block_n,)
+    per_row, dlogits = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, v), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, v), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n, v), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logits, targets)
+    n_valid = jnp.maximum(jnp.sum((targets >= 0).astype(jnp.float32)), 1.0)
+    return jnp.sum(per_row) / n_valid, dlogits / n_valid
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def xent_loss(logits, targets, block_n=8, interpret=True):
+    """Scalar masked mean CE, differentiable w.r.t. logits via the fused
+    kernel's dlogits (so ``jax.vjp`` over the L2 head uses the kernel)."""
+    loss, _ = softmax_xent(logits, targets, block_n=block_n,
+                           interpret=interpret)
+    return loss
+
+
+def _xl_fwd(logits, targets, block_n, interpret):
+    loss, dlogits = softmax_xent(logits, targets, block_n=block_n,
+                                 interpret=interpret)
+    return loss, dlogits
+
+
+def _xl_bwd(block_n, interpret, dlogits, gbar):
+    return dlogits * gbar, None
+
+
+xent_loss.defvjp(_xl_fwd, _xl_bwd)
+
+
+def vmem_bytes(v: int, block_n: int, bytes_per_el: int = 4) -> int:
+    """Peak VMEM per grid step: logit tile, grad tile, ex tile + row vectors."""
+    return (3 * block_n * v + 6 * block_n) * bytes_per_el

@@ -1,0 +1,210 @@
+"""Layer-2: the transformer segments of the LISA reproduction, in JAX.
+
+The model is *not* lowered as one monolithic train step. LISA's wins come
+from doing different work per transformer block per step, so each segment
+below becomes its own HLO module and the Rust engine schedules them:
+
+    embed_fwd -> block_fwd x L -> head_fwd_bwd -> block_bwd_{full|x} x L
+              -> embed_bwd
+
+Backward segments take the *block input* (not an activation stash) and
+rematerialize the forward inside ``jax.vjp`` — per-block gradient
+checkpointing, which keeps the artifact ABI to plain [B,T,D] tensors and
+bounds activation memory at one residual per block (DESIGN.md §1).
+
+Architecture: decoder-only pre-norm transformer — RMSNorm, causal flash
+attention, GELU MLP (ratio 4), learned positional embeddings, untied LM
+head, final RMSNorm in the head segment. Block parameter order (the ABI the
+Rust side follows, see ``ModelConfig.block_param_shapes``):
+
+    (g1, wq, wk, wv, wo, g2, w1, w2)
+
+``backend`` selects the Layer-1 path: "pallas" routes rmsnorm/attention/
+cross-entropy through the hand-written kernels (interpret=True), "jnp"
+through the pure-jnp oracles — both lower to HLO and the pair is the
+kernel-ablation axis in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.flash_attention import flash_attention
+from .kernels.rmsnorm import rmsnorm
+from .kernels.softmax_xent import xent_loss
+
+
+# ---------------------------------------------------------------------------
+# Primitive selection
+# ---------------------------------------------------------------------------
+
+def _norm(x, g, cfg: ModelConfig, backend: str):
+    if backend == "pallas":
+        return rmsnorm(x, g, 1e-6, cfg.block_n, True)
+    return ref.rmsnorm(x, g)
+
+
+def _attention(q, k, v, cfg: ModelConfig, backend: str):
+    if backend == "pallas":
+        return flash_attention(q, k, v, True, None, cfg.block_q, cfg.block_k,
+                               True)
+    return ref.attention(q, k, v, causal=True)
+
+
+def _xent(logits, targets, cfg: ModelConfig, backend: str):
+    if backend == "pallas":
+        return xent_loss(logits, targets, cfg.xent_block_n, True)
+    # ref path: scalar loss with standard autodiff
+    valid = targets >= 0
+    safe_t = jnp.where(valid, targets, 0)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe_t[:, None], axis=-1)[:, 0]
+    per_row = (lse - ll) * valid.astype(logits.dtype)
+    denom = jnp.maximum(valid.sum().astype(logits.dtype), 1.0)
+    return per_row.sum() / denom
+
+
+# ---------------------------------------------------------------------------
+# Segments
+# ---------------------------------------------------------------------------
+
+def embed_fwd(tokens, emb, pos, *, cfg: ModelConfig):
+    """tokens i32[B,T] -> h f32[B,T,D] = emb[tokens] + pos."""
+    return emb[tokens] + pos[None, :, :]
+
+
+def embed_bwd(dh, tokens, *, cfg: ModelConfig):
+    """Scatter-add token gradients. -> (demb [V,D], dpos [T,D])."""
+    demb = jnp.zeros((cfg.vocab, cfg.d_model), jnp.float32)
+    demb = demb.at[tokens].add(dh)
+    dpos = jnp.sum(dh, axis=0)
+    return demb, dpos
+
+
+def _split_heads(x, cfg: ModelConfig):
+    b, t, _ = x.shape
+    return x.reshape(b, t, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x, cfg: ModelConfig):
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def block_core(h, params, cfg: ModelConfig, backend: str, lora=None):
+    """One pre-norm transformer block. ``lora`` is the 12-tuple of adapters
+    (aq,bq,ak,bk,av,bv,ao,bo,a1,b1,a2,b2) or None."""
+    g1, wq, wk, wv, wo, g2, w1, w2 = params
+    scale = cfg.lora_alpha / cfg.lora_rank if lora is not None else 0.0
+
+    def lin(x, w, a, b):
+        y = x @ w
+        if lora is not None:
+            y = y + (x @ a) @ b * scale
+        return y
+
+    if lora is None:
+        la = [None] * 12
+    else:
+        la = lora
+    x = _norm(h, g1, cfg, backend)
+    q = _split_heads(lin(x, wq, la[0], la[1]), cfg)
+    k = _split_heads(lin(x, wk, la[2], la[3]), cfg)
+    v = _split_heads(lin(x, wv, la[4], la[5]), cfg)
+    o = _merge_heads(_attention(q, k, v, cfg, backend), cfg)
+    h1 = h + lin(o, wo, la[6], la[7])
+    y = _norm(h1, g2, cfg, backend)
+    ff = lin(jax.nn.gelu(lin(y, w1, la[8], la[9])), w2, la[10], la[11])
+    return h1 + ff
+
+
+def block_fwd(h, *params, cfg: ModelConfig, backend: str):
+    return block_core(h, params, cfg, backend)
+
+
+def block_bwd_full(dh_out, h_in, *params, cfg: ModelConfig, backend: str):
+    """Rematerializing backward: -> (dh_in, dg1, dwq, ..., dw2)."""
+    _, vjp = jax.vjp(lambda h, *p: block_core(h, p, cfg, backend),
+                     h_in, *params)
+    grads = vjp(dh_out)
+    return grads  # (dh_in, *dparams)
+
+
+def block_bwd_x(dh_out, h_in, *params, cfg: ModelConfig, backend: str):
+    """Frozen-block backward: input gradient only (no dθ) -> dh_in.
+
+    This is where LISA's FLOP savings are real: the dθ matmuls
+    (dW = x^T @ dy per linear) are never emitted in this module.
+    """
+    _, vjp = jax.vjp(lambda h: block_core(h, params, cfg, backend), h_in)
+    (dh_in,) = vjp(dh_out)
+    return dh_in
+
+
+def block_fwd_lora(h, *ps, cfg: ModelConfig, backend: str):
+    params, lora = ps[:8], ps[8:]
+    return block_core(h, params, cfg, backend, lora=lora)
+
+
+def block_bwd_lora(dh_out, h_in, *ps, cfg: ModelConfig, backend: str):
+    """LoRA backward: -> (dh_in, dA/dB x6 pairs); base weights get none."""
+    params, lora = ps[:8], ps[8:]
+    _, vjp = jax.vjp(
+        lambda h, *l: block_core(h, params, cfg, backend, lora=l),
+        h_in, *lora)
+    return vjp(dh_out)  # (dh_in, *dlora)
+
+
+def _head_loss(h, gf, wh, targets, cfg: ModelConfig, backend: str):
+    x = _norm(h, gf, cfg, backend)
+    logits = x.reshape(-1, cfg.d_model) @ wh
+    return _xent(logits, targets.reshape(-1), cfg, backend)
+
+
+def head_fwd_bwd(h, gf, wh, targets, *, cfg: ModelConfig, backend: str):
+    """Fused head loss + grads: -> (loss, dh, dgf, dwh)."""
+    loss, vjp = jax.vjp(
+        lambda h, gf, wh: _head_loss(h, gf, wh, targets, cfg, backend),
+        h, gf, wh)
+    dh, dgf, dwh = vjp(jnp.float32(1.0))
+    return loss, dh, dgf, dwh
+
+
+def head_fwd_bwd_x(h, gf, wh, targets, *, cfg: ModelConfig, backend: str):
+    """Frozen-head variant (LoRA mode): -> (loss, dh)."""
+    loss, vjp = jax.vjp(
+        lambda h: _head_loss(h, gf, wh, targets, cfg, backend), h)
+    (dh,) = vjp(jnp.float32(1.0))
+    return loss, dh
+
+
+def head_loss(h, gf, wh, targets, *, cfg: ModelConfig, backend: str):
+    """Eval-only loss (no grads)."""
+    return _head_loss(h, gf, wh, targets, cfg, backend)
+
+
+def head_logits(h, gf, wh, *, cfg: ModelConfig, backend: str):
+    """Logits for eval / greedy decode / DoLa early exit: -> [B,T,V]."""
+    x = _norm(h, gf, cfg, backend)
+    return x @ wh
+
+
+# ---------------------------------------------------------------------------
+# Whole-model reference (tests + the pytest oracle for segment composition)
+# ---------------------------------------------------------------------------
+
+def model_loss(tokens, targets, embed_params, blocks_params, head_params,
+               cfg: ModelConfig, backend: str = "jnp", lora=None):
+    """Full forward loss composed from the segments (oracle for tests)."""
+    h = embed_fwd(tokens, *embed_params, cfg=cfg)
+    for i, bp in enumerate(blocks_params):
+        if lora is not None:
+            h = block_fwd_lora(h, *bp, *lora[i], cfg=cfg, backend=backend)
+        else:
+            h = block_fwd(h, *bp, cfg=cfg, backend=backend)
+    return head_loss(h, *head_params, targets, cfg=cfg, backend=backend)

@@ -1,0 +1,75 @@
+"""AOT exporter contract tests: HLO text is parseable-shaped, the manifest
+signature matches the lowered functions, and partial re-exports merge
+rather than clobber.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.configs import CONFIGS, ModelConfig
+
+UNIT = ModelConfig("unitaot", d_model=16, n_layers=2, n_heads=2, vocab=32,
+                   seq=8, batch=1, lora_rank=4, block_q=8, block_k=8,
+                   block_n=8, xent_block_n=4)
+
+
+def test_registry_covers_all_segments():
+    reg = aot.segment_registry(UNIT, "jnp")
+    names = set(reg)
+    expected = {
+        "embed_fwd", "embed_bwd", "block_fwd", "block_bwd_full",
+        "block_bwd_x", "block_fwd_lora", "block_bwd_lora", "head_fwd_bwd",
+        "head_fwd_bwd_x", "head_loss", "head_logits", "adamw_update",
+    }
+    assert names == expected
+
+
+def test_operand_orders_match_config_abi():
+    reg = aot.segment_registry(UNIT, "jnp")
+    _, specs = reg["block_fwd"]
+    # h + 8 block params
+    assert len(specs) == 1 + len(UNIT.block_param_shapes())
+    for spec, (_, shape) in zip(specs[1:], UNIT.block_param_shapes()):
+        assert tuple(spec.shape) == tuple(shape)
+    _, specs = reg["block_bwd_lora"]
+    assert len(specs) == 2 + 8 + 12
+
+
+def test_export_writes_hlo_text_and_manifest(tmp_path):
+    aot.export_config(UNIT, str(tmp_path), ["jnp"],
+                      segments={"embed_fwd", "head_loss"})
+    d = tmp_path / "unitaot"
+    hlo = (d / "embed_fwd.jnp.hlo.txt").read_text()
+    assert hlo.startswith("HloModule"), "must be HLO text, not a proto"
+    man = json.loads((d / "manifest.json").read_text())
+    assert man["config"]["d_model"] == 16
+    assert man["segments"]["embed_fwd.jnp"]["operands"][0]["dtype"] == "int32"
+    out = man["segments"]["head_loss.jnp"]["outputs"]
+    assert out == [{"shape": [], "dtype": "float32"}]
+
+
+def test_reexport_merges_manifest(tmp_path):
+    aot.export_config(UNIT, str(tmp_path), ["jnp"], segments={"embed_fwd"})
+    aot.export_config(UNIT, str(tmp_path), ["jnp"], segments={"head_logits"})
+    man = json.loads((tmp_path / "unitaot" / "manifest.json").read_text())
+    assert "embed_fwd.jnp" in man["segments"]
+    assert "head_logits.jnp" in man["segments"]
+
+
+def test_skip_existing_unless_forced(tmp_path, capsys):
+    aot.export_config(UNIT, str(tmp_path), ["jnp"], segments={"embed_fwd"})
+    capsys.readouterr()
+    aot.export_config(UNIT, str(tmp_path), ["jnp"], segments={"embed_fwd"})
+    assert "[skip]" in capsys.readouterr().out
+
+
+def test_configs_are_well_formed():
+    for name, cfg in CONFIGS.items():
+        assert cfg.d_model % cfg.n_heads == 0, name
+        assert cfg.n_params() > 0
+        assert cfg.lora_rank < cfg.d_model
+        # artifact batch/seq must be positive and modest for CPU
+        assert 1 <= cfg.batch <= 16

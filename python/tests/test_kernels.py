@@ -1,0 +1,197 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle in
+``ref.py``, swept over shapes, tilings and edge cases.
+
+All kernels run under interpret=True (float32-exact on CPU), so tolerances
+are tight. These tests are the gate for `make artifacts`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.adamw import adamw_update, pack_hyper
+from compile.kernels.flash_attention import flash_attention, mxu_utilization, vmem_bytes
+from compile.kernels.rmsnorm import rmsnorm
+from compile.kernels.softmax_xent import softmax_xent, xent_loss
+
+RTOL, ATOL = 2e-5, 2e-5
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_SHAPES = [
+    # (B, H, T, Dh, block_q, block_k)
+    (1, 1, 8, 4, 8, 8),      # single tile
+    (2, 2, 32, 16, 16, 8),   # uneven q/k tiles
+    (1, 4, 64, 32, 16, 32),
+    (2, 1, 33, 8, 16, 16),   # T not divisible by requested tile
+    (1, 2, 128, 64, 128, 128),  # MXU-aligned
+]
+
+
+@pytest.mark.parametrize("b,h,t,d,bq,bk", ATTN_SHAPES)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_forward(b, h, t, d, bq, bk, causal):
+    q, k, v = rand(0, b, h, t, d), rand(1, b, h, t, d), rand(2, b, h, t, d)
+    out = flash_attention(q, k, v, causal, None, bq, bk, True)
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("b,h,t,d,bq,bk", ATTN_SHAPES[:4])
+def test_flash_attention_backward(b, h, t, d, bq, bk):
+    q, k, v = rand(3, b, h, t, d), rand(4, b, h, t, d), rand(5, b, h, t, d)
+    do = rand(6, b, h, t, d)
+
+    f = lambda q, k, v: (flash_attention(q, k, v, True, None, bq, bk, True) * do).sum()
+    fr = lambda q, k, v: (ref.attention(q, k, v, causal=True) * do).sum()
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+    for a, b_, name in zip(g, gr, "qkv"):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"d{name}")
+
+
+def test_flash_attention_scale_override():
+    q, k, v = rand(7, 1, 1, 16, 8), rand(8, 1, 1, 16, 8), rand(9, 1, 1, 16, 8)
+    out = flash_attention(q, k, v, True, 0.5, 8, 8, True)
+    want = ref.attention(q, k, v, causal=True, sm_scale=0.5)
+    np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+
+def test_flash_attention_deterministic():
+    q, k, v = rand(10, 1, 2, 32, 8), rand(11, 1, 2, 32, 8), rand(12, 1, 2, 32, 8)
+    a = flash_attention(q, k, v, True, None, 16, 16, True)
+    b = flash_attention(q, k, v, True, None, 16, 16, True)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_vmem_model_monotone_in_tiles():
+    small = vmem_bytes(t=256, d=64, block_q=64, block_k=64)
+    big = vmem_bytes(t=256, d=64, block_q=128, block_k=128)
+    assert small < big
+    # the e2e100m kernel config must fit a 16 MiB VMEM budget
+    assert vmem_bytes(t=256, d=64, block_q=128, block_k=128) < 16 * 2**20
+
+
+def test_mxu_utilization_prefers_aligned_tiles():
+    assert mxu_utilization(256, 128, 128, 128) == 1.0
+    assert mxu_utilization(256, 64, 96, 96) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,block", [(4, 8, 4), (16, 32, 8), (33, 24, 16), (128, 128, 128)])
+def test_rmsnorm_forward(n, d, block):
+    x, g = rand(20, n, d), rand(21, d)
+    out = rmsnorm(x, g, 1e-6, block, True)
+    np.testing.assert_allclose(out, ref.rmsnorm(x, g), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("n,d,block", [(8, 16, 4), (32, 64, 16)])
+def test_rmsnorm_backward(n, d, block):
+    x, g, dy = rand(22, n, d), rand(23, d), rand(24, n, d)
+    f = lambda x, g: (rmsnorm(x, g, 1e-6, block, True) * dy).sum()
+    fr = lambda x, g: (ref.rmsnorm(x, g) * dy).sum()
+    got = jax.grad(f, argnums=(0, 1))(x, g)
+    want = jax.grad(fr, argnums=(0, 1))(x, g)
+    for a, b, name in zip(got, want, ["dx", "dg"]):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4, err_msg=name)
+
+
+def test_rmsnorm_3d_input():
+    x, g = rand(25, 2, 6, 16), rand(26, 16)
+    out = rmsnorm(x, g, 1e-6, 4, True)
+    np.testing.assert_allclose(out, ref.rmsnorm(x, g), rtol=RTOL, atol=ATOL)
+
+
+def test_rmsnorm_handles_tiny_values():
+    x = jnp.full((4, 8), 1e-20, jnp.float32)
+    g = jnp.ones((8,), jnp.float32)
+    out = rmsnorm(x, g, 1e-6, 4, True)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# ---------------------------------------------------------------------------
+# adamw
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,block", [(16, 8), (100, 32), (4096, 1024)])
+@pytest.mark.parametrize("step", [1, 2, 50])
+@pytest.mark.parametrize("wd", [0.0, 0.1])
+def test_adamw_matches_ref(n, block, step, wd):
+    p, g, m = rand(30, n), rand(31, n), rand(32, n)
+    v = jnp.abs(rand(33, n))
+    hyper = pack_hyper(1e-3, weight_decay=wd, step=step)
+    got = adamw_update(p, g, m, v, hyper, block=block)
+    want = ref.adamw(p, g, m, v, lr=1e-3, weight_decay=wd, step=step)
+    for a, b, name in zip(got, want, ["p", "m", "v"]):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7, err_msg=name)
+
+
+def test_adamw_zero_grad_only_decays():
+    p = rand(34, 32)
+    z = jnp.zeros((32,), jnp.float32)
+    hyper = pack_hyper(0.1, weight_decay=0.5, step=1)
+    p2, m2, v2 = adamw_update(p, z, z, z, hyper, block=16)
+    np.testing.assert_allclose(p2, p - 0.1 * 0.5 * p, rtol=1e-6)
+    np.testing.assert_array_equal(m2, z)
+
+
+# ---------------------------------------------------------------------------
+# softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,v,block", [(4, 8, 2), (16, 64, 8), (32, 128, 32)])
+def test_xent_matches_ref(n, v, block):
+    logits = rand(40, n, v)
+    targets = jnp.arange(n, dtype=jnp.int32) % v
+    l1, d1 = softmax_xent(logits, targets, block_n=block)
+    l2, d2 = ref.softmax_xent(logits, targets)
+    np.testing.assert_allclose(l1, l2, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(d1, d2, rtol=RTOL, atol=ATOL)
+
+
+def test_xent_ignore_index():
+    logits = rand(41, 8, 16)
+    targets = jnp.array([1, -1, 3, -1, 5, 6, -1, 0], jnp.int32)
+    l1, d1 = softmax_xent(logits, targets, block_n=4)
+    l2, d2 = ref.softmax_xent(logits, targets)
+    np.testing.assert_allclose(l1, l2, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(d1, d2, rtol=RTOL, atol=ATOL)
+    # ignored rows have exactly zero gradient
+    assert np.all(np.asarray(d1)[1] == 0.0)
+
+
+def test_xent_all_ignored_is_finite():
+    logits = rand(42, 4, 8)
+    targets = jnp.full((4,), -1, jnp.int32)
+    loss, dl = softmax_xent(logits, targets, block_n=4)
+    assert np.isfinite(float(loss))
+    assert np.all(np.asarray(dl) == 0.0)
+
+
+def test_xent_loss_custom_vjp_grad():
+    logits = rand(43, 8, 32)
+    targets = jnp.arange(8, dtype=jnp.int32)
+    g1 = jax.grad(lambda l: xent_loss(l, targets, 4, True))(logits)
+    g2 = ref.softmax_xent(logits, targets)[1]
+    np.testing.assert_allclose(g1, g2, rtol=RTOL, atol=ATOL)
+
+
+def test_xent_extreme_logits_stable():
+    logits = jnp.array([[1e4, -1e4, 0.0, 5.0]] * 4, jnp.float32)
+    targets = jnp.array([0, 1, 2, 3], jnp.int32)
+    loss, dl = softmax_xent(logits, targets, block_n=4)
+    assert np.isfinite(float(loss))
+    assert np.isfinite(np.asarray(dl)).all()

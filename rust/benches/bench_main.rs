@@ -1,0 +1,208 @@
+//! `cargo bench` — the performance harness (criterion is unavailable in
+//! this image; `lisa::util::bench` provides warmup + median/p95 timing).
+//!
+//! Groups map to the paper artifacts they feed:
+//! * `step/*`        — Fig 4 (single-iteration time per method)
+//! * `segment/*`     — per-executable latency, pallas vs jnp (L1 ablation)
+//! * `adamw/*`       — Rust optimizer vs fused-kernel artifact (§Perf)
+//! * `galore/*`      — projection cost (baseline overhead)
+//! * `host/*`        — L3 substrate hot paths (tensor bridge, dataloader,
+//!                     tokenizer, sampler)
+//!
+//! Set `LISA_BENCH_QUICK=1` for a fast smoke pass.
+
+use std::path::Path;
+
+use lisa::data::{corpus, encode_sft, DataLoader, Tokenizer};
+use lisa::lisa::{LisaConfig, LisaScheduler};
+use lisa::model::{ModelParams, ParamKey};
+use lisa::opt::{adamw::AdamHp, AdamW, Galore, GaloreHp, StatePolicy};
+use lisa::runtime::{HostTensor, Operand, Runtime};
+use lisa::train::{Method, TrainConfig, TrainSession};
+use lisa::util::bench::{black_box, Bench};
+use lisa::util::rng::Rng;
+
+fn bench() -> Bench {
+    if std::env::var("LISA_BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench {
+            warmup: std::time::Duration::from_millis(200),
+            target_time: std::time::Duration::from_secs(3),
+            min_iters: 5,
+            max_iters: 50_000,
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    lisa::util::logger::init();
+    let b = bench();
+    let mut results = Vec::new();
+
+    // ---------------- host substrates (always run) ----------------
+    {
+        let mut rng = Rng::new(1);
+        let n = 1 << 20;
+        let mut p = vec![0f32; n];
+        rng.fill_normal(&mut p, 1.0);
+        let mut g = vec![0f32; n];
+        rng.fill_normal(&mut g, 0.1);
+        let hp = AdamHp::default();
+        let mut opt = AdamW::new(hp, StatePolicy::Keep);
+        results.push(b.run_with_elements("adamw/rust-1M-params", n as u64, || {
+            opt.step(ParamKey::Emb, true, &mut p, &g);
+        }));
+
+        let mut gal = Galore::new(GaloreHp { rank: 32, update_proj_gap: 1_000_000, ..Default::default() }, 2);
+        let (rows, cols) = (512, 2048);
+        let mut w = vec![0f32; rows * cols];
+        let gw = vec![0.01f32; rows * cols];
+        gal.step_matrix(ParamKey::Block(0, 1), true, &mut w, &gw, rows, cols); // build proj
+        results.push(b.run_with_elements("galore/project-512x2048-r32", (rows * cols) as u64, || {
+            gal.step_matrix(ParamKey::Block(0, 1), true, &mut w, &gw, rows, cols);
+        }));
+
+        let t = HostTensor::from_vec(&[64, 64, 64], vec![0.5; 64 * 64 * 64]);
+        results.push(b.run_with_elements("host/tensor-to-literal-1M", t.numel() as u64, || {
+            black_box(t.to_literal().unwrap());
+        }));
+
+        let samples = corpus::gen_instruction_corpus(512, 3);
+        let texts = corpus::sample_texts(&samples);
+        results.push(b.run("host/tokenizer-build-512-samples", || {
+            black_box(Tokenizer::build(&texts, 2048));
+        }));
+        let tok = Tokenizer::build(&texts, 2048);
+        let enc: Vec<_> = samples.iter().map(|s| encode_sft(&tok, s, 128)).collect();
+        let mut dl = DataLoader::new(enc, 4, 128, 1);
+        results.push(b.run("host/dataloader-next-batch", || {
+            black_box(dl.next_batch());
+        }));
+
+        let mut sched = LisaScheduler::new(LisaConfig::paper(2, 1), 32, 5);
+        let mut step = 0usize;
+        results.push(b.run("host/lisa-sampler-resample", || {
+            step += 1;
+            black_box(sched.mask_for_step(step));
+        }));
+    }
+
+    // ---------------- runtime-backed benches ----------------
+    let art = Path::new("artifacts");
+    if art.join("tiny/manifest.json").exists() {
+        for backend in ["pallas", "jnp"] {
+            let rt = Runtime::load(&art.join("tiny"), backend)?;
+            let m = rt.manifest.clone();
+            let mut rng = Rng::new(7);
+            let params = ModelParams::init(&m, &mut rng);
+            let mut h = HostTensor::zeros(&[m.batch, m.seq, m.d_model]);
+            rng.fill_normal(&mut h.data, 1.0);
+            rt.warmup(&["block_fwd", "block_bwd_full", "block_bwd_x"])?;
+            let mut ops: Vec<Operand> = vec![Operand::F32(&h)];
+            ops.extend(params.blocks[0].iter().map(Operand::F32));
+            results.push(b.run(&format!("segment/block_fwd-{backend}"), || {
+                black_box(rt.run("block_fwd", &ops).unwrap());
+            }));
+            let mut bops: Vec<Operand> = vec![Operand::F32(&h), Operand::F32(&h)];
+            bops.extend(params.blocks[0].iter().map(Operand::F32));
+            results.push(b.run(&format!("segment/block_bwd_full-{backend}"), || {
+                black_box(rt.run("block_bwd_full", &bops).unwrap());
+            }));
+            results.push(b.run(&format!("segment/block_bwd_x-{backend}"), || {
+                black_box(rt.run("block_bwd_x", &bops).unwrap());
+            }));
+        }
+
+        // adamw artifact vs rust optimizer at the artifact's size
+        let rt = Runtime::load(&art.join("tiny"), "pallas")?;
+        let seg = rt.manifest.segment("adamw_update", "pallas")?.clone();
+        let n = seg.operands[0].numel();
+        let mut rng = Rng::new(9);
+        let mut mk = |rng: &mut Rng| {
+            let mut t = HostTensor::zeros(&[n]);
+            rng.fill_normal(&mut t.data, 0.1);
+            t
+        };
+        let (p, g, mm, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let hyper = HostTensor::from_vec(&[8], vec![1e-3, 0.9, 0.999, 1e-8, 0.01, 0.1, 0.001, 0.0]);
+        rt.warmup(&["adamw_update"])?;
+        results.push(b.run_with_elements(&format!("adamw/pallas-artifact-{n}"), n as u64, || {
+            black_box(
+                rt.run(
+                    "adamw_update",
+                    &[Operand::F32(&p), Operand::F32(&g), Operand::F32(&mm), Operand::F32(&v), Operand::F32(&hyper)],
+                )
+                .unwrap(),
+            );
+        }));
+        let mut pr = p.data.clone();
+        let mut opt = AdamW::new(AdamHp::default(), StatePolicy::Keep);
+        results.push(b.run_with_elements(&format!("adamw/rust-same-size-{n}"), n as u64, || {
+            opt.step(ParamKey::Emb, true, &mut pr, &g.data);
+        }));
+    }
+
+    // ---------------- end-to-end step benches (Fig 4) ----------------
+    let cfg_name = if art.join("small/manifest.json").exists() { "small" } else { "tiny" };
+    if art.join(cfg_name).join("manifest.json").exists() {
+        let rt = Runtime::load(&art.join(cfg_name), "pallas")?;
+        let m = rt.manifest.clone();
+        let samples = corpus::gen_instruction_corpus(128, 3);
+        let tok = Tokenizer::build(&corpus::sample_texts(&samples), m.vocab);
+        let enc: Vec<_> = samples.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
+        for method in [
+            Method::Full,
+            Method::Lisa(LisaConfig::paper(2, 5)),
+            Method::Lora,
+        ] {
+            let label = method.label().to_string();
+            let mut dl = DataLoader::new(enc.clone(), m.batch, m.seq, 1);
+            let cfg = TrainConfig { steps: 0, lr: 1e-3, log_every: 0, ..Default::default() };
+            let mut sess = TrainSession::new(&rt, method, cfg);
+            // warm executables
+            sess.step(0, &mut dl)?;
+            let mut step = 1usize;
+            let quick = Bench {
+                target_time: std::time::Duration::from_secs(
+                    if std::env::var("LISA_BENCH_QUICK").is_ok() { 2 } else { 8 },
+                ),
+                min_iters: 3,
+                ..Bench::quick()
+            };
+            results.push(quick.run_with_elements(
+                &format!("step/{label}-{cfg_name}"),
+                (m.batch * m.seq) as u64,
+                || {
+                    step += 1;
+                    black_box(sess.step(step, &mut dl).unwrap());
+                },
+            ));
+        }
+
+        // engine overhead: step time minus PJRT execute time
+        rt.reset_stats();
+        let mut dl = DataLoader::new(enc.clone(), m.batch, m.seq, 1);
+        let cfg = TrainConfig { steps: 0, lr: 1e-3, log_every: 0, ..Default::default() };
+        let mut sess = TrainSession::new(&rt, Method::Full, cfg);
+        sess.step(0, &mut dl)?;
+        rt.reset_stats();
+        let t0 = std::time::Instant::now();
+        let n_steps = 5;
+        for s in 1..=n_steps {
+            sess.step(s, &mut dl)?;
+        }
+        let wall = t0.elapsed().as_nanos() as f64;
+        let exec: u128 = rt.stats().values().map(|s| s.total_ns).sum();
+        let overhead = (wall - exec as f64) / wall * 100.0;
+        println!(
+            "engine/overhead-{cfg_name}: {overhead:.1}% of step time outside PJRT execute ({n_steps} steps)"
+        );
+    }
+
+    println!("\n=== bench results ===");
+    for r in &results {
+        println!("{}", r.report());
+    }
+    Ok(())
+}

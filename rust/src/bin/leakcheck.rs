@@ -1,0 +1,37 @@
+//! Leak regression check for the runtime execute path (the upstream `xla`
+//! crate's `execute` leaks input buffers; we use `execute_b` — this binary
+//! verifies RSS stays flat over thousands of calls).
+use std::path::Path;
+use lisa::model::ModelParams;
+use lisa::runtime::{HostTensor, Operand, Runtime};
+use lisa::util::rng::Rng;
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap();
+    let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();
+    pages * 4096.0 / 1e6
+}
+
+fn main() {
+    let rt = Runtime::load(Path::new("artifacts/tiny"), "pallas").unwrap();
+    let m = rt.manifest.clone();
+    let mut rng = Rng::new(7);
+    let params = ModelParams::init(&m, &mut rng);
+    let mut h = HostTensor::zeros(&[m.batch, m.seq, m.d_model]);
+    rng.fill_normal(&mut h.data, 1.0);
+    let mut ops: Vec<Operand> = vec![Operand::F32(&h)];
+    ops.extend(params.blocks[0].iter().map(Operand::F32));
+    rt.run("block_fwd", &ops).unwrap();
+    let r0 = rss_mb();
+    let iters: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(2000);
+    for i in 0..iters {
+        let out = rt.run("block_fwd", &ops).unwrap();
+        drop(out);
+        if i % 500 == 499 {
+            println!("iter {i}: rss {:.1} MB (delta {:+.1})", rss_mb(), rss_mb() - r0);
+        }
+    }
+    let delta = rss_mb() - r0;
+    assert!(delta < 50.0, "leak detected: {delta:.1} MB over {iters} calls");
+    println!("leakcheck OK ({delta:+.1} MB over {iters} calls)");
+}

@@ -1,0 +1,528 @@
+//! Synthetic corpora — the data substrates standing in for the paper's
+//! datasets (DESIGN.md §4 documents each substitution):
+//!
+//! * [`gen_instruction_corpus`] — Alpaca-GPT4 stand-in: templated
+//!   instruction/response pairs across the eight MT-Bench categories, with
+//!   a Zipf-weighted long-tail *fact table* embedded in writing/humanities
+//!   samples so the paper's "LISA memorizes long-tail patterns better"
+//!   claim has a measurable analog.
+//! * [`gen_math_problems`] — GSM8K stand-in: 1–3-step word problems with a
+//!   digit-level final answer for exact-match scoring.
+//! * [`gen_cpt_math_docs`] — OpenWebMath stand-in: plain arithmetic
+//!   documents for continual pre-training.
+//! * [`gen_medqa`] — PubMedQA stand-in: question/context/yes-no-maybe
+//!   grammar where the context entails the label.
+//!
+//! Everything is seeded and deterministic.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Category {
+    Writing,
+    Roleplay,
+    Reasoning,
+    Code,
+    Math,
+    Extraction,
+    Stem,
+    Humanities,
+}
+
+pub const CATEGORIES: [Category; 8] = [
+    Category::Writing,
+    Category::Roleplay,
+    Category::Reasoning,
+    Category::Code,
+    Category::Math,
+    Category::Extraction,
+    Category::Stem,
+    Category::Humanities,
+];
+
+impl Category {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Category::Writing => "writing",
+            Category::Roleplay => "roleplay",
+            Category::Reasoning => "reasoning",
+            Category::Code => "code",
+            Category::Math => "math",
+            Category::Extraction => "extraction",
+            Category::Stem => "stem",
+            Category::Humanities => "humanities",
+        }
+    }
+}
+
+/// One supervised sample. `answer` (when present) is the exact-match span
+/// that follows "answer :" in the response.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub prompt: String,
+    pub response: String,
+    pub category: Category,
+    pub answer: Option<String>,
+    /// Index into the fact table when this sample exercises a long-tail
+    /// fact (the memorization probe id).
+    pub fact_id: Option<usize>,
+}
+
+// ---------------------------------------------------------------------------
+// Word pools
+// ---------------------------------------------------------------------------
+
+const ADJS: &[&str] = &[
+    "crystal", "silver", "ancient", "golden", "marble", "hidden", "sunken",
+    "burning", "frozen", "emerald", "obsidian", "ivory", "crimson", "azure",
+    "gilded", "broken",
+];
+const NOUNS: &[&str] = &[
+    "tower", "bridge", "library", "garden", "temple", "harbor", "citadel",
+    "archive", "fountain", "gallery", "observatory", "amphitheater",
+];
+const PLACES: &[&str] = &[
+    "eldoria", "varneth", "quillmar", "ostrava", "brinmoor", "calvessa",
+    "drenholt", "ferrowick", "galdemar", "hollowreach", "iskarend", "jorvale",
+];
+const QUALITIES: &[&str] = &[
+    "arches", "mosaics", "stairways", "gardens", "bells", "murals",
+    "columns", "lanterns",
+];
+const ROLES: &[&str] = &[
+    "librarian", "navigator", "blacksmith", "astronomer", "healer",
+    "cartographer", "historian", "gardener",
+];
+const PEOPLE: &[&str] = &[
+    "traveler", "student", "merchant", "scholar", "stranger", "apprentice",
+];
+const ITEMS: &[&str] = &[
+    "apples", "coins", "books", "marbles", "stamps", "shells", "pencils",
+    "tickets",
+];
+const ANIMALS: &[&str] = &["sparrow", "otter", "lynx", "heron", "badger", "falcon"];
+const GROUPS: &[&str] = &["bird", "mammal", "hunter", "swimmer", "climber"];
+const DRUGS: &[&str] = &[
+    "relafen", "cortexa", "mivolin", "zanopril", "ferrodine", "luxotan",
+    "novaquin", "teralith",
+];
+const CONDITIONS: &[&str] = &[
+    "hypertension", "insomnia", "migraine", "arthritis", "anemia",
+    "bronchitis", "dermatitis", "fatigue",
+];
+const STEM_QA: &[(&str, &str)] = &[
+    ("what force pulls objects toward earth", "gravity"),
+    ("what gas do plants absorb from the air", "carbon dioxide"),
+    ("what particle carries negative charge", "the electron"),
+    ("what organ pumps blood through the body", "the heart"),
+    ("what planet is known as the red planet", "mars"),
+    ("what is the boiling point of water in celsius", "1 0 0 degrees"),
+    ("what metal is liquid at room temperature", "mercury"),
+    ("what process turns sunlight into plant energy", "photosynthesis"),
+];
+
+/// Deterministic pseudo-name generator (builder names in the fact table).
+fn gen_name(rng: &mut Rng) -> String {
+    const CONS: &[&str] = &["m", "v", "r", "t", "k", "s", "d", "l", "n", "b"];
+    const VOW: &[&str] = &["a", "e", "i", "o", "u"];
+    let syl = |rng: &mut Rng| {
+        format!("{}{}", CONS[rng.below(CONS.len())], VOW[rng.below(VOW.len())])
+    };
+    let first = format!("{}{}", syl(rng), syl(rng));
+    let last = format!("{}{}{}", syl(rng), syl(rng), CONS[rng.below(CONS.len())]);
+    format!("{first} {last}")
+}
+
+// ---------------------------------------------------------------------------
+// Fact table — the long-tail memorization substrate
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fact {
+    pub entity: String,  // "the crystal tower of eldoria"
+    pub builder: String, // "mara venn"
+    pub year: u32,       // 1000..1999
+    pub quality: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct FactTable {
+    pub facts: Vec<Fact>,
+}
+
+pub const N_FACTS: usize = 64;
+const FACT_SEED: u64 = 0xFAC7;
+
+impl FactTable {
+    /// The canonical table shared by the generator and the eval probes.
+    pub fn canonical() -> FactTable {
+        let mut rng = Rng::new(FACT_SEED);
+        let mut facts = Vec::with_capacity(N_FACTS);
+        let mut seen = std::collections::BTreeSet::new();
+        while facts.len() < N_FACTS {
+            let entity = format!(
+                "the {} {} of {}",
+                ADJS[rng.below(ADJS.len())],
+                NOUNS[rng.below(NOUNS.len())],
+                PLACES[rng.below(PLACES.len())]
+            );
+            if !seen.insert(entity.clone()) {
+                continue; // entities must be unique for unambiguous recall
+            }
+            facts.push(Fact {
+                entity,
+                builder: gen_name(&mut rng),
+                year: 1000 + rng.below(1000) as u32,
+                quality: QUALITIES[rng.below(QUALITIES.len())].to_string(),
+            });
+        }
+        FactTable { facts }
+    }
+
+    /// Zipf-weighted fact index: head facts are common, the tail is rare —
+    /// the paper's "long-tailed patterns".
+    pub fn sample_zipf(&self, rng: &mut Rng) -> usize {
+        let w: Vec<f64> = (0..self.facts.len()).map(|i| 1.0 / (i as f64 + 1.0)).collect();
+        rng.sample_weighted(&w)
+    }
+}
+
+fn spell_digits(n: u32) -> String {
+    n.to_string()
+        .chars()
+        .map(|c| c.to_string())
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+// ---------------------------------------------------------------------------
+// Instruction corpus (Alpaca-GPT4 proxy)
+// ---------------------------------------------------------------------------
+
+fn gen_one(cat: Category, facts: &FactTable, rng: &mut Rng) -> Sample {
+    match cat {
+        Category::Writing => {
+            let fi = facts.sample_zipf(rng);
+            let f = &facts.facts[fi];
+            let prompt = format!("write a short story about {} .", f.entity);
+            let response = format!(
+                "{} was built by {} in {} . it is famous for its {} . \
+                 visitors come from {} to see it at dawn .",
+                f.entity,
+                f.builder,
+                spell_digits(f.year),
+                f.quality,
+                PLACES[rng.below(PLACES.len())]
+            );
+            Sample { prompt, response, category: cat, answer: None, fact_id: Some(fi) }
+        }
+        Category::Roleplay => {
+            let role = ROLES[rng.below(ROLES.len())];
+            let person = PEOPLE[rng.below(PEOPLE.len())];
+            let prompt = format!("you are a {role} . greet a {person} .");
+            let response = format!(
+                "welcome , {person} . i am the {role} of this place . \
+                 ask me anything about my craft ."
+            );
+            Sample { prompt, response, category: cat, answer: None, fact_id: None }
+        }
+        Category::Reasoning => {
+            let a = GROUPS[rng.below(GROUPS.len())];
+            let mut b = GROUPS[rng.below(GROUPS.len())];
+            while b == a {
+                b = GROUPS[rng.below(GROUPS.len())];
+            }
+            let x = ANIMALS[rng.below(ANIMALS.len())];
+            let prompt = format!(
+                "every {a} is a {b} . the {x} is a {a} . what is the {x} ? "
+            );
+            let response = format!("answer : the {x} is a {b}");
+            Sample {
+                prompt,
+                response,
+                category: cat,
+                answer: Some(format!("the {x} is a {b}")),
+                fact_id: None,
+            }
+        }
+        Category::Code => {
+            let ops = [("add", "+"), ("sub", "-"), ("mul", "*")];
+            let (name, op) = ops[rng.below(ops.len())];
+            let prompt = format!("write a function named {name} of two numbers .");
+            let response = format!(
+                "answer : def {name} ( x , y ) : return x {op} y"
+            );
+            Sample {
+                prompt,
+                response,
+                category: cat,
+                answer: Some(format!("def {name} ( x , y ) : return x {op} y")),
+                fact_id: None,
+            }
+        }
+        Category::Math => {
+            let a = rng.below(90) as i64 + 10;
+            let b = rng.below(90) as i64 + 10;
+            let (op, res) = match rng.below(3) {
+                0 => ("plus", a + b),
+                1 => ("minus", a - b),
+                _ => ("times", a * b),
+            };
+            let prompt = format!("what is {a} {op} {b} ?");
+            let ans = if res < 0 {
+                format!("minus {}", spell_digits((-res) as u32))
+            } else {
+                spell_digits(res as u32)
+            };
+            let response = format!("answer : {ans}");
+            Sample { prompt, response, category: cat, answer: Some(ans), fact_id: None }
+        }
+        Category::Extraction => {
+            let year = 1000 + rng.below(1000) as u32;
+            let name = gen_name(rng);
+            let place = PLACES[rng.below(PLACES.len())];
+            let prompt = format!(
+                "extract the year from : the treaty of {place} was signed in {} by {name} .",
+                spell_digits(year)
+            );
+            let ans = spell_digits(year);
+            let response = format!("answer : {ans}");
+            Sample { prompt, response, category: cat, answer: Some(ans), fact_id: None }
+        }
+        Category::Stem => {
+            let (q, a) = STEM_QA[rng.below(STEM_QA.len())];
+            let prompt = format!("{q} ?");
+            let response = format!("answer : {a}");
+            Sample {
+                prompt,
+                response,
+                category: cat,
+                answer: Some(a.to_string()),
+                fact_id: None,
+            }
+        }
+        Category::Humanities => {
+            let fi = facts.sample_zipf(rng);
+            let f = &facts.facts[fi];
+            let (prompt, ans) = match rng.below(2) {
+                0 => (format!("who built {} ?", f.entity), f.builder.clone()),
+                _ => (
+                    format!("in what year was {} built ?", f.entity),
+                    spell_digits(f.year),
+                ),
+            };
+            let response = format!("answer : {ans}");
+            Sample {
+                prompt,
+                response,
+                category: cat,
+                answer: Some(ans),
+                fact_id: Some(fi),
+            }
+        }
+    }
+}
+
+/// `n` samples, category-balanced, Zipf-weighted fact usage.
+pub fn gen_instruction_corpus(n: usize, seed: u64) -> Vec<Sample> {
+    let facts = FactTable::canonical();
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| gen_one(CATEGORIES[i % CATEGORIES.len()], &facts, &mut rng))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Math corpora (OpenWebMath / GSM8K proxies)
+// ---------------------------------------------------------------------------
+
+/// Multi-step word problems with digit-level answers (GSM8K proxy).
+pub fn gen_math_problems(n: usize, seed: u64, max_steps: usize) -> Vec<Sample> {
+    let mut rng = Rng::new(seed);
+    let names = ["tom", "ana", "ben", "lea", "sam", "mia"];
+    (0..n)
+        .map(|_| {
+            let who = names[rng.below(names.len())];
+            let item = ITEMS[rng.below(ITEMS.len())];
+            let steps = 1 + rng.below(max_steps.max(1));
+            let mut total = 10 + rng.below(40) as i64;
+            let mut prompt = format!("{who} has {total} {item} .");
+            for _ in 0..steps {
+                if rng.below(2) == 0 {
+                    let d = 1 + rng.below(30) as i64;
+                    total += d;
+                    prompt.push_str(&format!(" {who} buys {d} more ."));
+                } else {
+                    let d = 1 + rng.below((total - 1).max(1) as usize) as i64;
+                    total -= d;
+                    prompt.push_str(&format!(" {who} gives away {d} ."));
+                }
+            }
+            prompt.push_str(&format!(" how many {item} does {who} have ?"));
+            let ans = spell_digits(total as u32);
+            Sample {
+                prompt,
+                response: format!("answer : {ans}"),
+                category: Category::Math,
+                answer: Some(ans),
+                fact_id: None,
+            }
+        })
+        .collect()
+}
+
+/// Plain arithmetic documents for continual pre-training (OpenWebMath
+/// proxy): lines of "compute : a op b = result".
+pub fn gen_cpt_math_docs(n_docs: usize, lines_per_doc: usize, seed: u64) -> Vec<String> {
+    let mut rng = Rng::new(seed);
+    (0..n_docs)
+        .map(|_| {
+            let mut doc = String::new();
+            for _ in 0..lines_per_doc {
+                let a = rng.below(99) as i64 + 1;
+                let b = rng.below(99) as i64 + 1;
+                let (sym, res) = match rng.below(3) {
+                    0 => ("plus", a + b),
+                    1 => ("minus", a - b),
+                    _ => ("times", a * b),
+                };
+                let r = if res < 0 {
+                    format!("minus {}", spell_digits((-res) as u32))
+                } else {
+                    spell_digits(res as u32)
+                };
+                doc.push_str(&format!("compute : {a} {sym} {b} = {r} . "));
+            }
+            doc
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Medical QA (PubMedQA proxy)
+// ---------------------------------------------------------------------------
+
+pub fn gen_medqa(n: usize, seed: u64) -> Vec<Sample> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let drug = DRUGS[rng.below(DRUGS.len())];
+            let cond = CONDITIONS[rng.below(CONDITIONS.len())];
+            let n_pat = 20 + rng.below(400);
+            let (effect, label) = match rng.below(3) {
+                0 => ("significantly reduced", "yes"),
+                1 => ("did not change", "no"),
+                _ => ("showed mixed results for", "maybe"),
+            };
+            let prompt = format!(
+                "question : does {drug} improve {cond} ? context : in a study \
+                 of {} patients , {drug} {effect} {cond} .",
+                spell_digits(n_pat as u32)
+            );
+            Sample {
+                prompt,
+                response: format!("answer : {label}"),
+                category: Category::Stem,
+                answer: Some(label.to_string()),
+                fact_id: None,
+            }
+        })
+        .collect()
+}
+
+/// All raw text of a sample set (tokenizer building).
+pub fn sample_texts(samples: &[Sample]) -> Vec<String> {
+    samples
+        .iter()
+        .map(|s| format!("{} {}", s.prompt, s.response))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let a = gen_instruction_corpus(64, 1);
+        let b = gen_instruction_corpus(64, 1);
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.response, y.response);
+        }
+        let c = gen_instruction_corpus(64, 2);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt));
+    }
+
+    #[test]
+    fn categories_balanced() {
+        let s = gen_instruction_corpus(80, 3);
+        for cat in CATEGORIES {
+            let n = s.iter().filter(|x| x.category == cat).count();
+            assert_eq!(n, 10, "{cat:?}");
+        }
+    }
+
+    #[test]
+    fn fact_table_canonical_and_unique() {
+        let t1 = FactTable::canonical();
+        let t2 = FactTable::canonical();
+        assert_eq!(t1.facts.len(), N_FACTS);
+        for (a, b) in t1.facts.iter().zip(&t2.facts) {
+            assert_eq!(a.entity, b.entity);
+            assert_eq!(a.year, b.year);
+        }
+        let mut ents: Vec<&str> = t1.facts.iter().map(|f| f.entity.as_str()).collect();
+        ents.sort_unstable();
+        ents.dedup();
+        assert_eq!(ents.len(), N_FACTS, "entities must be unique");
+    }
+
+    #[test]
+    fn zipf_skews_to_head() {
+        let t = FactTable::canonical();
+        let mut rng = Rng::new(9);
+        let mut head = 0;
+        let trials = 2000;
+        for _ in 0..trials {
+            if t.sample_zipf(&mut rng) < 8 {
+                head += 1;
+            }
+        }
+        // first 8 of 64 carry sum(1/i, i=1..8)/sum(1/i, i=1..64) ≈ 57%
+        assert!(head > trials * 45 / 100, "head={head}");
+    }
+
+    #[test]
+    fn math_answers_are_correct_format() {
+        for s in gen_math_problems(50, 7, 3) {
+            let ans = s.answer.unwrap();
+            assert!(s.response.ends_with(&ans));
+            assert!(ans.split(' ').all(|d| d.len() == 1 && d.chars().all(|c| c.is_ascii_digit())));
+        }
+    }
+
+    #[test]
+    fn medqa_label_consistent_with_context() {
+        for s in gen_medqa(60, 5) {
+            let a = s.answer.unwrap();
+            if s.prompt.contains("significantly reduced") {
+                assert_eq!(a, "yes");
+            } else if s.prompt.contains("did not change") {
+                assert_eq!(a, "no");
+            } else {
+                assert_eq!(a, "maybe");
+            }
+        }
+    }
+
+    #[test]
+    fn cpt_docs_contain_correct_arithmetic() {
+        let docs = gen_cpt_math_docs(5, 4, 11);
+        assert_eq!(docs.len(), 5);
+        for d in &docs {
+            assert!(d.contains("compute :"));
+        }
+    }
+}

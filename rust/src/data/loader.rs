@@ -1,0 +1,342 @@
+//! Encoding + batching: SFT-style prompt-masked next-token targets, LM-style
+//! continual-pretraining chunks, deterministic shuffled epochs.
+//!
+//! Target convention (matches the `head_*` artifacts): `targets[t]` is the
+//! token the model must predict *after* seeing `tokens[..=t]`, with `-1` at
+//! unsupervised positions (prompt tokens in SFT, padding everywhere).
+
+use crate::engine::Batch;
+use crate::runtime::HostTensorI32;
+use crate::util::rng::Rng;
+
+use super::corpus::{Category, Sample};
+use super::tokenizer::{Tokenizer, BOS, EOS, PAD, SEP};
+
+/// One encoded, seq-length-padded training example.
+#[derive(Debug, Clone)]
+pub struct Encoded {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub category: Option<Category>,
+    /// Target-index span of the exact-match answer, if any.
+    pub answer_span: Option<(usize, usize)>,
+    pub fact_id: Option<usize>,
+}
+
+impl Encoded {
+    pub fn n_supervised(&self) -> usize {
+        self.targets.iter().filter(|&&t| t >= 0).count()
+    }
+}
+
+/// SFT encoding: `<bos> prompt <sep> response <eos>`, loss only on the
+/// response (+ `<eos>`).
+pub fn encode_sft(tok: &Tokenizer, s: &Sample, seq_len: usize) -> Encoded {
+    let mut seq = vec![BOS];
+    seq.extend(tok.encode(&s.prompt));
+    let sep_pos = seq.len();
+    seq.push(SEP);
+    seq.extend(tok.encode(&s.response));
+    seq.push(EOS);
+    seq.truncate(seq_len + 1);
+
+    // answer span in seq coordinates (the answer is the response suffix
+    // just before <eos>)
+    let ans_seq_span = s.answer.as_ref().and_then(|a| {
+        let ans_ids = tok.encode(a);
+        if ans_ids.is_empty() {
+            return None;
+        }
+        let end = seq.len().saturating_sub(1); // drop <eos> (may be truncated away)
+        let has_eos = *seq.last()? == EOS;
+        let end = if has_eos { end } else { seq.len() };
+        if end < ans_ids.len() {
+            return None;
+        }
+        let start = end - ans_ids.len();
+        if seq[start..end] == ans_ids[..] {
+            Some((start, end))
+        } else {
+            None
+        }
+    });
+
+    let mut tokens = vec![PAD; seq_len];
+    let mut targets = vec![-1; seq_len];
+    let n = seq.len().min(seq_len + 1);
+    for t in 0..n.saturating_sub(1) {
+        tokens[t] = seq[t];
+        // supervise only predictions of post-<sep> content
+        if t + 1 > sep_pos {
+            targets[t] = seq[t + 1];
+        }
+    }
+    if n <= seq_len && n > 0 {
+        // last real token still needs to sit in `tokens` when it has no
+        // target (e.g. sequences shorter than seq_len)
+        tokens[n - 1] = seq[n - 1];
+    }
+
+    let answer_span = ans_seq_span.and_then(|(s0, e0)| {
+        // target index for seq position p is p-1
+        if s0 == 0 {
+            return None;
+        }
+        let (ts, te) = (s0 - 1, e0 - 1);
+        if te <= seq_len {
+            Some((ts, te))
+        } else {
+            None
+        }
+    });
+
+    Encoded {
+        tokens,
+        targets,
+        category: Some(s.category),
+        answer_span,
+        fact_id: s.fact_id,
+    }
+}
+
+/// Plain-LM encoding for continual pretraining: documents are concatenated
+/// with `<eos>` separators and chunked into full windows; every position is
+/// supervised.
+pub fn encode_lm_stream(tok: &Tokenizer, docs: &[String], seq_len: usize) -> Vec<Encoded> {
+    let mut stream: Vec<i32> = Vec::new();
+    for d in docs {
+        stream.push(BOS);
+        stream.extend(tok.encode(d));
+        stream.push(EOS);
+    }
+    let mut out = Vec::new();
+    let window = seq_len + 1;
+    let mut i = 0;
+    while i + window <= stream.len() {
+        let seq = &stream[i..i + window];
+        out.push(Encoded {
+            tokens: seq[..seq_len].to_vec(),
+            targets: seq[1..].to_vec(),
+            category: None,
+            answer_span: None,
+            fact_id: None,
+        });
+        i += seq_len;
+    }
+    out
+}
+
+/// Deterministic train/val split (no overlap, preserves order within each).
+pub fn split_train_val<T: Clone>(items: &[T], val_frac: f64, seed: u64) -> (Vec<T>, Vec<T>) {
+    let mut idx: Vec<usize> = (0..items.len()).collect();
+    Rng::new(seed).shuffle(&mut idx);
+    let n_val = ((items.len() as f64) * val_frac).round() as usize;
+    let val_set: std::collections::BTreeSet<usize> = idx[..n_val].iter().copied().collect();
+    let mut train = Vec::with_capacity(items.len() - n_val);
+    let mut val = Vec::with_capacity(n_val);
+    for (i, it) in items.iter().enumerate() {
+        if val_set.contains(&i) {
+            val.push(it.clone());
+        } else {
+            train.push(it.clone());
+        }
+    }
+    (train, val)
+}
+
+/// Cycling, reshuffling batch iterator.
+pub struct DataLoader {
+    data: Vec<Encoded>,
+    batch: usize,
+    seq: usize,
+    rng: Rng,
+    order: Vec<usize>,
+    cursor: usize,
+    pub epochs: usize,
+}
+
+impl DataLoader {
+    pub fn new(data: Vec<Encoded>, batch: usize, seq: usize, seed: u64) -> Self {
+        assert!(!data.is_empty(), "empty dataset");
+        for e in &data {
+            assert_eq!(e.tokens.len(), seq, "encoded seq length mismatch");
+        }
+        let mut dl = DataLoader {
+            order: (0..data.len()).collect(),
+            data,
+            batch,
+            seq,
+            rng: Rng::new(seed),
+            cursor: 0,
+            epochs: 0,
+        };
+        dl.rng.shuffle(&mut dl.order);
+        dl
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn steps_per_epoch(&self) -> usize {
+        (self.data.len() / self.batch).max(1)
+    }
+
+    /// Next `[B, T]` batch, cycling (and reshuffling) at epoch end.
+    pub fn next_batch(&mut self) -> Batch {
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        let mut targets = Vec::with_capacity(self.batch * self.seq);
+        for _ in 0..self.batch {
+            if self.cursor >= self.order.len() {
+                self.cursor = 0;
+                self.epochs += 1;
+                self.rng.shuffle(&mut self.order);
+            }
+            let e = &self.data[self.order[self.cursor]];
+            self.cursor += 1;
+            tokens.extend_from_slice(&e.tokens);
+            targets.extend_from_slice(&e.targets);
+        }
+        Batch {
+            tokens: HostTensorI32::from_vec(&[self.batch, self.seq], tokens),
+            targets: HostTensorI32::from_vec(&[self.batch, self.seq], targets),
+        }
+    }
+
+    /// Fixed-order batches over the whole set (evaluation); the tail that
+    /// doesn't fill a batch is padded with repeats of the last example and
+    /// the returned `n_real` says how many rows are genuine.
+    pub fn eval_batches(&self) -> Vec<(Batch, usize)> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.data.len() {
+            let mut tokens = Vec::with_capacity(self.batch * self.seq);
+            let mut targets = Vec::with_capacity(self.batch * self.seq);
+            let mut n_real = 0;
+            for b in 0..self.batch {
+                let idx = (i + b).min(self.data.len() - 1);
+                if i + b < self.data.len() {
+                    n_real += 1;
+                }
+                let e = &self.data[idx];
+                tokens.extend_from_slice(&e.tokens);
+                // padded duplicate rows are unsupervised so they don't
+                // perturb the loss average
+                if i + b < self.data.len() {
+                    targets.extend_from_slice(&e.targets);
+                } else {
+                    targets.extend(std::iter::repeat(-1).take(self.seq));
+                }
+            }
+            out.push((
+                Batch {
+                    tokens: HostTensorI32::from_vec(&[self.batch, self.seq], tokens),
+                    targets: HostTensorI32::from_vec(&[self.batch, self.seq], targets),
+                },
+                n_real,
+            ));
+            i += self.batch;
+        }
+        out
+    }
+
+    pub fn examples(&self) -> &[Encoded] {
+        &self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::gen_instruction_corpus;
+    use crate::data::tokenizer::Tokenizer;
+
+    fn setup() -> (Tokenizer, Vec<Sample>) {
+        let samples = gen_instruction_corpus(64, 1);
+        let texts = crate::data::corpus::sample_texts(&samples);
+        (Tokenizer::build(&texts, 512), samples)
+    }
+
+    #[test]
+    fn sft_masks_prompt_supervises_response() {
+        let (tok, samples) = setup();
+        let e = encode_sft(&tok, &samples[0], 64);
+        assert_eq!(e.tokens.len(), 64);
+        // some -1 (prompt) and some supervised positions
+        assert!(e.n_supervised() > 0);
+        assert!(e.targets.iter().any(|&t| t == -1));
+        // first token is BOS
+        assert_eq!(e.tokens[0], BOS);
+        // supervised targets must be valid token ids
+        for &t in e.targets.iter().filter(|&&t| t >= 0) {
+            assert!((t as usize) < tok.vocab_size());
+        }
+    }
+
+    #[test]
+    fn answer_span_matches_targets() {
+        let (tok, samples) = setup();
+        for s in samples.iter().filter(|s| s.answer.is_some()) {
+            let e = encode_sft(&tok, s, 64);
+            let Some((a, b)) = e.answer_span else { continue };
+            assert!(a < b && b <= 64);
+            let ans_ids = tok.encode(s.answer.as_ref().unwrap());
+            let span: Vec<i32> = e.targets[a..b].to_vec();
+            assert_eq!(span, ans_ids, "span must be the answer tokens");
+        }
+    }
+
+    #[test]
+    fn lm_stream_full_supervision() {
+        let (tok, _) = setup();
+        let docs = vec!["compute : 1 plus 2 = 3 .".to_string(); 20];
+        let enc = encode_lm_stream(&tok, &docs, 16);
+        assert!(!enc.is_empty());
+        for e in &enc {
+            assert_eq!(e.n_supervised(), 16);
+            // targets are tokens shifted by one
+            assert_eq!(e.tokens[1..], e.targets[..15]);
+        }
+    }
+
+    #[test]
+    fn split_is_disjoint_and_total() {
+        let items: Vec<usize> = (0..100).collect();
+        let (tr, va) = split_train_val(&items, 0.1, 7);
+        assert_eq!(tr.len(), 90);
+        assert_eq!(va.len(), 10);
+        let mut all: Vec<usize> = tr.iter().chain(va.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, items);
+    }
+
+    #[test]
+    fn loader_cycles_and_reshuffles() {
+        let (tok, samples) = setup();
+        let enc: Vec<Encoded> = samples.iter().map(|s| encode_sft(&tok, s, 32)).collect();
+        let mut dl = DataLoader::new(enc, 4, 32, 3);
+        let spe = dl.steps_per_epoch();
+        for _ in 0..spe {
+            let b = dl.next_batch();
+            assert_eq!(b.tokens.shape, vec![4, 32]);
+        }
+        assert_eq!(dl.epochs, 0);
+        dl.next_batch();
+        assert_eq!(dl.epochs, 1);
+    }
+
+    #[test]
+    fn eval_batches_cover_everything_once() {
+        let (tok, samples) = setup();
+        let enc: Vec<Encoded> = samples.iter().map(|s| encode_sft(&tok, s, 32)).collect();
+        let n = enc.len();
+        let dl = DataLoader::new(enc, 6, 32, 3);
+        let batches = dl.eval_batches();
+        let total_real: usize = batches.iter().map(|(_, r)| r).sum();
+        assert_eq!(total_real, n);
+    }
+}

@@ -1,0 +1,9 @@
+//! Data substrates: synthetic corpora, tokenizer, encoding, batching.
+
+pub mod corpus;
+pub mod loader;
+pub mod tokenizer;
+
+pub use corpus::{Category, FactTable, Sample, CATEGORIES};
+pub use loader::{encode_lm_stream, encode_sft, split_train_val, DataLoader, Encoded};
+pub use tokenizer::Tokenizer;

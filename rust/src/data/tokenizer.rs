@@ -1,0 +1,199 @@
+//! Word-level tokenizer with digit splitting, built from the corpus by
+//! frequency (our stand-in for the models' BPE vocabularies).
+//!
+//! Numbers are split into single digits ("1742" -> "1 7 4 2") so the
+//! arithmetic corpora are learnable by a from-scratch model — answer
+//! correctness then decomposes into per-digit next-token predictions.
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const UNK: i32 = 4;
+pub const N_SPECIALS: usize = 5;
+const SPECIAL_NAMES: [&str; N_SPECIALS] = ["<pad>", "<bos>", "<eos>", "<sep>", "<unk>"];
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: HashMap<String, i32>,
+    inv: Vec<String>,
+}
+
+/// Split text into word/digit/punctuation tokens.
+pub fn pretokenize(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for word in text.split_whitespace() {
+        let mut cur = String::new();
+        for c in word.chars() {
+            if c.is_ascii_digit() {
+                if !cur.is_empty() {
+                    out.push(std::mem::take(&mut cur));
+                }
+                out.push(c.to_string());
+            } else if c.is_alphanumeric() || c == '\'' {
+                cur.push(c.to_ascii_lowercase());
+            } else {
+                if !cur.is_empty() {
+                    out.push(std::mem::take(&mut cur));
+                }
+                out.push(c.to_string());
+            }
+        }
+        if !cur.is_empty() {
+            out.push(cur);
+        }
+    }
+    out
+}
+
+impl Tokenizer {
+    /// Build a vocab of at most `vocab_size` entries from the given texts,
+    /// keeping the most frequent words (specials + digits always included).
+    pub fn build(texts: &[String], vocab_size: usize) -> Tokenizer {
+        assert!(vocab_size > N_SPECIALS + 10, "vocab too small");
+        let mut freq: HashMap<String, u64> = HashMap::new();
+        for t in texts {
+            for tok in pretokenize(t) {
+                *freq.entry(tok).or_insert(0) += 1;
+            }
+        }
+        let mut inv: Vec<String> =
+            SPECIAL_NAMES.iter().map(|s| s.to_string()).collect();
+        // digits guaranteed present
+        for d in 0..10 {
+            let s = d.to_string();
+            freq.remove(&s);
+            inv.push(s);
+        }
+        let mut by_freq: Vec<(String, u64)> = freq.into_iter().collect();
+        by_freq.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        for (w, _) in by_freq.into_iter().take(vocab_size - inv.len()) {
+            inv.push(w);
+        }
+        let vocab = inv
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as i32))
+            .collect();
+        Tokenizer { vocab, inv }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.inv.len()
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        pretokenize(text)
+            .into_iter()
+            .map(|t| self.vocab.get(&t).copied().unwrap_or(UNK))
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter(|&&i| i >= N_SPECIALS as i32 || i == UNK)
+            .map(|&i| {
+                self.inv
+                    .get(i as usize)
+                    .map(|s| s.as_str())
+                    .unwrap_or("<oov>")
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn token(&self, id: i32) -> Option<&str> {
+        self.inv.get(id as usize).map(|s| s.as_str())
+    }
+
+    /// Fraction of tokens in `texts` that map to `<unk>` (vocab coverage
+    /// diagnostic — experiments assert this stays tiny).
+    pub fn unk_rate(&self, texts: &[String]) -> f64 {
+        let mut total = 0u64;
+        let mut unk = 0u64;
+        for t in texts {
+            for id in self.encode(t) {
+                total += 1;
+                if id == UNK {
+                    unk += 1;
+                }
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            unk as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Tokenizer {
+        let texts = vec![
+            "the cat sat on the mat .".to_string(),
+            "the dog ate 42 apples !".to_string(),
+        ];
+        Tokenizer::build(&texts, 64)
+    }
+
+    #[test]
+    fn digits_split() {
+        assert_eq!(
+            pretokenize("x42y 1742"),
+            vec!["x", "4", "2", "y", "1", "7", "4", "2"]
+        );
+    }
+
+    #[test]
+    fn punctuation_separated() {
+        assert_eq!(pretokenize("cat, dog."), vec!["cat", ",", "dog", "."]);
+    }
+
+    #[test]
+    fn roundtrip_known_words() {
+        let t = toy();
+        let ids = t.encode("the cat ate 4 2");
+        assert!(!ids.contains(&UNK));
+        assert_eq!(t.decode(&ids), "the cat ate 4 2");
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let t = toy();
+        let ids = t.encode("zebra");
+        assert_eq!(ids, vec![UNK]);
+        assert!(t.unk_rate(&vec!["zebra zebra".into()]) == 1.0);
+    }
+
+    #[test]
+    fn specials_and_digits_reserved() {
+        let t = toy();
+        assert_eq!(t.token(PAD), Some("<pad>"));
+        assert_eq!(t.token(UNK), Some("<unk>"));
+        assert_eq!(t.encode("7"), vec![N_SPECIALS as i32 + 7]);
+    }
+
+    #[test]
+    fn vocab_respects_size_and_freq() {
+        let texts: Vec<String> = (0..100)
+            .map(|i| format!("common word{} rare{}", i % 3, i))
+            .collect();
+        let t = Tokenizer::build(&texts, 20);
+        assert!(t.vocab_size() <= 20);
+        // 'common' must be in vocab, some rareN must not
+        assert!(!t.encode("common").contains(&UNK));
+    }
+
+    #[test]
+    fn deterministic_given_same_input() {
+        let texts = vec!["a b c a b a".to_string()];
+        let t1 = Tokenizer::build(&texts, 32);
+        let t2 = Tokenizer::build(&texts, 32);
+        assert_eq!(t1.encode("a b c"), t2.encode("a b c"));
+    }
+}

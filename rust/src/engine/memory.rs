@@ -1,0 +1,139 @@
+//! Byte-accurate accounting of training-state memory, the measured side of
+//! Table 1 / Fig 3 (the analytical extrapolation to paper-scale models
+//! lives in `membench`).
+//!
+//! Categories follow the paper's memory breakdown: weights, weight
+//! gradients, optimizer state, activations. The engine/optimizer report
+//! their live allocations; the meter tracks the running total's peak —
+//! which is exactly what `torch.cuda.max_memory_allocated` gave the paper.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MemCategory {
+    Params,
+    Grads,
+    OptimState,
+    Activations,
+    LoraAdapters,
+}
+
+impl MemCategory {
+    pub fn label(&self) -> &'static str {
+        match self {
+            MemCategory::Params => "params",
+            MemCategory::Grads => "grads",
+            MemCategory::OptimState => "optim",
+            MemCategory::Activations => "activations",
+            MemCategory::LoraAdapters => "lora",
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct MemoryMeter {
+    current: BTreeMap<MemCategory, u64>,
+    peak_total: u64,
+    peak_by_cat: BTreeMap<MemCategory, u64>,
+}
+
+impl MemoryMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the live byte count of a category (absolute, not delta).
+    pub fn set(&mut self, cat: MemCategory, bytes: u64) {
+        self.current.insert(cat, bytes);
+        let peak_cat = self.peak_by_cat.entry(cat).or_insert(0);
+        *peak_cat = (*peak_cat).max(bytes);
+        let total = self.total();
+        self.peak_total = self.peak_total.max(total);
+    }
+
+    pub fn add(&mut self, cat: MemCategory, bytes: u64) {
+        let cur = self.current.get(&cat).copied().unwrap_or(0);
+        self.set(cat, cur + bytes);
+    }
+
+    pub fn sub(&mut self, cat: MemCategory, bytes: u64) {
+        let cur = self.current.get(&cat).copied().unwrap_or(0);
+        self.set(cat, cur.saturating_sub(bytes));
+    }
+
+    pub fn get(&self, cat: MemCategory) -> u64 {
+        self.current.get(&cat).copied().unwrap_or(0)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.current.values().sum()
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak_total
+    }
+
+    pub fn peak_of(&self, cat: MemCategory) -> u64 {
+        self.peak_by_cat.get(&cat).copied().unwrap_or(0)
+    }
+
+    pub fn reset_peak(&mut self) {
+        self.peak_total = self.total();
+        self.peak_by_cat = self.current.clone();
+    }
+
+    pub fn breakdown(&self) -> Vec<(&'static str, u64)> {
+        [
+            MemCategory::Params,
+            MemCategory::Grads,
+            MemCategory::OptimState,
+            MemCategory::Activations,
+            MemCategory::LoraAdapters,
+        ]
+        .iter()
+        .map(|c| (c.label(), self.peak_of(*c)))
+        .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_total_maximum() {
+        let mut m = MemoryMeter::new();
+        m.set(MemCategory::Params, 100);
+        m.set(MemCategory::Activations, 50);
+        assert_eq!(m.peak(), 150);
+        m.set(MemCategory::Activations, 10);
+        assert_eq!(m.total(), 110);
+        assert_eq!(m.peak(), 150);
+        m.set(MemCategory::Grads, 200);
+        assert_eq!(m.peak(), 310);
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let mut m = MemoryMeter::new();
+        m.add(MemCategory::OptimState, 40);
+        m.add(MemCategory::OptimState, 60);
+        assert_eq!(m.get(MemCategory::OptimState), 100);
+        m.sub(MemCategory::OptimState, 30);
+        assert_eq!(m.get(MemCategory::OptimState), 70);
+        m.sub(MemCategory::OptimState, 1000); // saturates, never underflows
+        assert_eq!(m.get(MemCategory::OptimState), 0);
+        assert_eq!(m.peak_of(MemCategory::OptimState), 100);
+    }
+
+    #[test]
+    fn reset_peak_from_current() {
+        let mut m = MemoryMeter::new();
+        m.set(MemCategory::Params, 500);
+        m.set(MemCategory::Grads, 500);
+        m.set(MemCategory::Grads, 0);
+        assert_eq!(m.peak(), 1000);
+        m.reset_peak();
+        assert_eq!(m.peak(), 500);
+    }
+}

@@ -1,0 +1,7 @@
+//! Layer-granular training engine + memory accounting.
+
+pub mod memory;
+pub mod trainer;
+
+pub use memory::{MemCategory, MemoryMeter};
+pub use trainer::{Batch, Engine, Grads, StepOutput, TrainMask};

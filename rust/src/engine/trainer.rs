@@ -1,0 +1,375 @@
+//! The layer-granular training engine — the L3 heart of this reproduction.
+//!
+//! The model is compiled as per-segment executables (embed / block / head).
+//! This engine schedules them:
+//!
+//! ```text
+//! forward:   embed_fwd -> block_fwd^L (stash inputs) -> head_fwd_bwd
+//! backward:  for l = L-1..0:  block_bwd_full  (trainable: dh + dθ)
+//!                             block_bwd_x     (frozen:    dh only)
+//!            embed_bwd if the embedding is trainable
+//! ```
+//!
+//! That per-block `bwd_full` vs `bwd_x` choice is what makes LISA's savings
+//! *real* here: frozen blocks never compute weight gradients (FLOPs) and
+//! never hold them (bytes). The backward walk also stops early once no
+//! trainable tensor remains below the current block.
+//!
+//! Backward segments rematerialize the forward internally (per-block
+//! gradient checkpointing), so the activation stash is exactly one
+//! `[B, T, D]` residual per block.
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::model::ModelParams;
+use crate::runtime::{HostTensor, HostTensorI32, Operand, Runtime};
+
+use super::memory::{MemCategory, MemoryMeter};
+
+/// Which components are trainable this step (LISA resamples this every K
+/// steps; FT sets everything true; LoRA uses its own path).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TrainMask {
+    pub embed: bool,
+    pub head: bool,
+    pub blocks: Vec<bool>,
+}
+
+impl TrainMask {
+    pub fn all(n_layers: usize) -> Self {
+        TrainMask { embed: true, head: true, blocks: vec![true; n_layers] }
+    }
+
+    pub fn none(n_layers: usize) -> Self {
+        TrainMask { embed: false, head: false, blocks: vec![false; n_layers] }
+    }
+
+    pub fn n_trainable_blocks(&self) -> usize {
+        self.blocks.iter().filter(|&&b| b).count()
+    }
+
+    /// Index of the lowest trainable block, if any.
+    pub fn lowest_trainable_block(&self) -> Option<usize> {
+        self.blocks.iter().position(|&b| b)
+    }
+}
+
+/// One training batch: token ids and (shifted, prompt-masked) targets.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tokens: HostTensorI32,
+    pub targets: HostTensorI32,
+}
+
+/// Gradients for the trainable subset; `None` = frozen, never computed.
+#[derive(Debug, Clone, Default)]
+pub struct Grads {
+    pub emb: Option<HostTensor>,
+    pub pos: Option<HostTensor>,
+    pub blocks: Vec<Option<Vec<HostTensor>>>,
+    pub gf: Option<HostTensor>,
+    pub wh: Option<HostTensor>,
+}
+
+impl Grads {
+    pub fn bytes(&self) -> u64 {
+        let mut b = 0u64;
+        for t in [&self.emb, &self.pos, &self.gf, &self.wh].into_iter().flatten() {
+            b += t.bytes() as u64;
+        }
+        for blk in self.blocks.iter().flatten() {
+            for t in blk {
+                b += t.bytes() as u64;
+            }
+        }
+        b
+    }
+
+    /// Accumulate `other` into `self` (microbatch accumulation). Both must
+    /// cover the same trainable subset.
+    pub fn add_assign(&mut self, other: &Grads) {
+        fn acc(a: &mut Option<HostTensor>, b: &Option<HostTensor>) {
+            match (a, b) {
+                (Some(x), Some(y)) => x.add_assign(y),
+                (None, None) => {}
+                _ => panic!("grad accumulation over mismatched masks"),
+            }
+        }
+        acc(&mut self.emb, &other.emb);
+        acc(&mut self.pos, &other.pos);
+        acc(&mut self.gf, &other.gf);
+        acc(&mut self.wh, &other.wh);
+        assert_eq!(self.blocks.len(), other.blocks.len());
+        for (a, b) in self.blocks.iter_mut().zip(&other.blocks) {
+            match (a, b) {
+                (Some(xs), Some(ys)) => {
+                    for (x, y) in xs.iter_mut().zip(ys) {
+                        x.add_assign(y);
+                    }
+                }
+                (None, None) => {}
+                _ => panic!("grad accumulation over mismatched masks"),
+            }
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for t in [&mut self.emb, &mut self.pos, &mut self.gf, &mut self.wh]
+            .into_iter()
+            .flatten()
+        {
+            t.scale(s);
+        }
+        for blk in self.blocks.iter_mut().flatten() {
+            for t in blk {
+                t.scale(s);
+            }
+        }
+    }
+
+    /// Global gradient L2 norm over the trainable subset.
+    pub fn global_norm(&self) -> f64 {
+        let mut sq = 0.0;
+        for t in [&self.emb, &self.pos, &self.gf, &self.wh].into_iter().flatten() {
+            sq += t.l2_norm().powi(2);
+        }
+        for blk in self.blocks.iter().flatten() {
+            for t in blk {
+                sq += t.l2_norm().powi(2);
+            }
+        }
+        sq.sqrt()
+    }
+}
+
+/// Output of one forward/backward microbatch.
+pub struct StepOutput {
+    pub loss: f32,
+    pub grads: Grads,
+}
+
+/// The engine: schedules segment executables over the runtime.
+pub struct Engine<'rt> {
+    pub rt: &'rt Runtime,
+    pub meter: MemoryMeter,
+    /// Statistics: per-step counts of full vs input-only block backwards
+    /// (the Fig 4 iteration-time mechanism).
+    pub bwd_full_calls: u64,
+    pub bwd_x_calls: u64,
+    pub bwd_skipped: u64,
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Self {
+        Engine {
+            rt,
+            meter: MemoryMeter::new(),
+            bwd_full_calls: 0,
+            bwd_x_calls: 0,
+            bwd_skipped: 0,
+        }
+    }
+
+    fn h_shape(&self) -> Vec<usize> {
+        let m = &self.rt.manifest;
+        vec![m.batch, m.seq, m.d_model]
+    }
+
+    fn block_ops<'a>(
+        h: &'a HostTensor,
+        params: &'a [HostTensor],
+    ) -> Vec<Operand<'a>> {
+        let mut ops: Vec<Operand<'a>> = Vec::with_capacity(1 + params.len());
+        ops.push(Operand::F32(h));
+        ops.extend(params.iter().map(Operand::F32));
+        ops
+    }
+
+    /// Forward through embed + all blocks, returning every block input plus
+    /// the final hidden state (stash[l] is the input of block l).
+    fn forward_stash(
+        &mut self,
+        params: &ModelParams,
+        tokens: &HostTensorI32,
+    ) -> Result<Vec<HostTensor>> {
+        let hs = self.h_shape();
+        let out = self.rt.run(
+            "embed_fwd",
+            &[Operand::I32(tokens), Operand::F32(&params.emb), Operand::F32(&params.pos)],
+        )?;
+        let mut h = HostTensor::from_literal(&out[0], &hs)?;
+        let mut stash = Vec::with_capacity(params.blocks.len() + 1);
+        let mut act_bytes = 0u64;
+        for layer in &params.blocks {
+            act_bytes += h.bytes() as u64;
+            self.meter.set(MemCategory::Activations, act_bytes);
+            let out = self.rt.run("block_fwd", &Self::block_ops(&h, layer))?;
+            let h_next = HostTensor::from_literal(&out[0], &hs)?;
+            stash.push(h);
+            h = h_next;
+        }
+        self.meter.set(MemCategory::Activations, act_bytes + h.bytes() as u64);
+        stash.push(h);
+        Ok(stash)
+    }
+
+    /// Full-parameter / LISA forward+backward over the trainable mask.
+    pub fn forward_backward(
+        &mut self,
+        params: &ModelParams,
+        batch: &Batch,
+        mask: &TrainMask,
+    ) -> Result<StepOutput> {
+        let m = &self.rt.manifest;
+        assert_eq!(mask.blocks.len(), m.n_layers, "mask arity");
+        let hs = self.h_shape();
+        self.meter.set(MemCategory::Params, params.bytes() as u64);
+
+        let mut stash = self.forward_stash(params, &batch.tokens)?;
+        let h_last = stash.pop().expect("stash has final h");
+
+        // Head: fused loss + grads (head trainable) or loss + dh only.
+        let head_seg = if mask.head { "head_fwd_bwd" } else { "head_fwd_bwd_x" };
+        let outs = self.rt.run(
+            head_seg,
+            &[
+                Operand::F32(&h_last),
+                Operand::F32(&params.gf),
+                Operand::F32(&params.wh),
+                Operand::I32(&batch.targets),
+            ],
+        )?;
+        let loss = HostTensor::scalar_from_literal(&outs[0])?;
+        let mut dh = HostTensor::from_literal(&outs[1], &hs)?;
+        let mut grads = Grads {
+            blocks: vec![None; m.n_layers],
+            ..Default::default()
+        };
+        if mask.head {
+            grads.gf = Some(HostTensor::from_literal(&outs[2], &[m.d_model])?);
+            grads.wh = Some(HostTensor::from_literal(&outs[3], &[m.d_model, m.vocab])?);
+        }
+        drop(outs);
+
+        // Backward walk. Stop once nothing below needs gradients.
+        let lowest = if mask.embed {
+            0
+        } else {
+            mask.lowest_trainable_block().unwrap_or(m.n_layers)
+        };
+        let mut grad_bytes = grads.bytes();
+        self.meter.set(MemCategory::Grads, grad_bytes);
+        for l in (0..m.n_layers).rev() {
+            if l < lowest {
+                // No trainable tensors at or below this block: the dL/dx
+                // chain is dead weight — skip it entirely.
+                self.bwd_skipped += 1;
+                continue;
+            }
+            let h_in = &stash[l];
+            if mask.blocks[l] {
+                self.bwd_full_calls += 1;
+                let mut ops = vec![Operand::F32(&dh), Operand::F32(h_in)];
+                ops.extend(params.blocks[l].iter().map(Operand::F32));
+                let outs = self.rt.run("block_bwd_full", &ops)?;
+                let new_dh = HostTensor::from_literal(&outs[0], &hs)?;
+                let mut dthetas = Vec::with_capacity(params.blocks[l].len());
+                for (o, (_, shape)) in outs[1..].iter().zip(&m.block_params) {
+                    dthetas.push(HostTensor::from_literal(o, shape)?);
+                }
+                grad_bytes += dthetas.iter().map(|t| t.bytes() as u64).sum::<u64>();
+                self.meter.set(MemCategory::Grads, grad_bytes);
+                grads.blocks[l] = Some(dthetas);
+                dh = new_dh;
+            } else {
+                self.bwd_x_calls += 1;
+                let mut ops = vec![Operand::F32(&dh), Operand::F32(h_in)];
+                ops.extend(params.blocks[l].iter().map(Operand::F32));
+                let outs = self.rt.run("block_bwd_x", &ops)?;
+                dh = HostTensor::from_literal(&outs[0], &hs)?;
+            }
+        }
+
+        if mask.embed {
+            let outs = self
+                .rt
+                .run("embed_bwd", &[Operand::F32(&dh), Operand::I32(&batch.tokens)])?;
+            grads.emb = Some(HostTensor::from_literal(&outs[0], &[m.vocab, m.d_model])?);
+            grads.pos = Some(HostTensor::from_literal(&outs[1], &[m.seq, m.d_model])?);
+            grad_bytes = grads.bytes();
+            self.meter.set(MemCategory::Grads, grad_bytes);
+        }
+
+        self.meter.set(MemCategory::Activations, 0);
+        Ok(StepOutput { loss, grads })
+    }
+
+    /// Eval-only forward loss (no gradients, no stash retention).
+    pub fn forward_loss(&mut self, params: &ModelParams, batch: &Batch) -> Result<f32> {
+        let hs = self.h_shape();
+        let out = self.rt.run(
+            "embed_fwd",
+            &[
+                Operand::I32(&batch.tokens),
+                Operand::F32(&params.emb),
+                Operand::F32(&params.pos),
+            ],
+        )?;
+        let mut h = HostTensor::from_literal(&out[0], &hs)?;
+        for layer in &params.blocks {
+            let out = self.rt.run("block_fwd", &Self::block_ops(&h, layer))?;
+            h = HostTensor::from_literal(&out[0], &hs)?;
+        }
+        let outs = self.rt.run(
+            "head_loss",
+            &[
+                Operand::F32(&h),
+                Operand::F32(&params.gf),
+                Operand::F32(&params.wh),
+                Operand::I32(&batch.targets),
+            ],
+        )?;
+        HostTensor::scalar_from_literal(&outs[0])
+    }
+
+    /// Logits after running the first `n_blocks` blocks (DoLa-style early
+    /// exit when `n_blocks < L`; full model when `n_blocks == L`).
+    pub fn logits_at(
+        &mut self,
+        params: &ModelParams,
+        tokens: &HostTensorI32,
+        n_blocks: usize,
+    ) -> Result<HostTensor> {
+        let m = &self.rt.manifest;
+        assert!(n_blocks <= m.n_layers);
+        let hs = self.h_shape();
+        let out = self.rt.run(
+            "embed_fwd",
+            &[Operand::I32(tokens), Operand::F32(&params.emb), Operand::F32(&params.pos)],
+        )?;
+        let mut h = HostTensor::from_literal(&out[0], &hs)?;
+        for layer in params.blocks.iter().take(n_blocks) {
+            let out = self.rt.run("block_fwd", &Self::block_ops(&h, layer))?;
+            h = HostTensor::from_literal(&out[0], &hs)?;
+        }
+        let outs = self.rt.run(
+            "head_logits",
+            &[Operand::F32(&h), Operand::F32(&params.gf), Operand::F32(&params.wh)],
+        )?;
+        HostTensor::from_literal(&outs[0], &[m.batch, m.seq, m.vocab])
+    }
+
+    pub fn logits(
+        &mut self,
+        params: &ModelParams,
+        tokens: &HostTensorI32,
+    ) -> Result<HostTensor> {
+        self.logits_at(params, tokens, self.rt.manifest.n_layers)
+    }
+
+    /// Raw literal output passthrough used by the LoRA engine extension.
+    pub(crate) fn run_raw(&self, name: &str, ops: &[Operand]) -> Result<Vec<Literal>> {
+        self.rt.run(name, ops)
+    }
+}

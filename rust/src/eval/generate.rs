@@ -1,0 +1,104 @@
+//! Greedy autoregressive generation through the segment executables —
+//! makes trained checkpoints *usable*, and powers the qualitative samples
+//! in the e2e run.
+//!
+//! The artifacts are fixed-shape `[B, T]`, so generation teacher-forces the
+//! prompt into row 0, then repeatedly runs the full forward and appends the
+//! argmax at the last filled position. O(T) forwards per sample — fine for
+//! the short answers our corpora use (the serving-optimized path would
+//! export a KV-cached decode segment; noted as future work in DESIGN.md).
+
+use anyhow::Result;
+
+use crate::data::tokenizer::{Tokenizer, BOS, EOS, PAD, SEP};
+use crate::engine::Engine;
+use crate::model::ModelParams;
+use crate::runtime::HostTensorI32;
+
+/// Greedily complete `prompt`, returning the generated token ids (response
+/// only, `<eos>`-terminated or length-capped).
+pub fn greedy_complete(
+    eng: &mut Engine,
+    params: &ModelParams,
+    tok: &Tokenizer,
+    prompt: &str,
+    max_new: usize,
+) -> Result<Vec<i32>> {
+    let m = eng.rt.manifest.clone();
+    let mut seq = vec![BOS];
+    seq.extend(tok.encode(prompt));
+    seq.push(SEP);
+    if seq.len() >= m.seq {
+        seq.truncate(m.seq - 1);
+    }
+    let prompt_len = seq.len();
+    let mut out = Vec::new();
+
+    for _ in 0..max_new {
+        if seq.len() >= m.seq {
+            break;
+        }
+        let mut tokens = vec![PAD; m.batch * m.seq];
+        tokens[..seq.len()].copy_from_slice(&seq);
+        let t = HostTensorI32::from_vec(&[m.batch, m.seq], tokens);
+        let logits = eng.logits(params, &t)?; // [B, T, V]
+        let pos = seq.len() - 1;
+        let row = &logits.data[pos * m.vocab..(pos + 1) * m.vocab];
+        let mut best = 0usize;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, &x) in row.iter().enumerate() {
+            if x > bv {
+                bv = x;
+                best = i;
+            }
+        }
+        let id = best as i32;
+        if id == EOS {
+            break;
+        }
+        seq.push(id);
+        out.push(id);
+    }
+    let _ = prompt_len;
+    Ok(out)
+}
+
+/// Convenience: decode the completion to text.
+pub fn greedy_complete_text(
+    eng: &mut Engine,
+    params: &ModelParams,
+    tok: &Tokenizer,
+    prompt: &str,
+    max_new: usize,
+) -> Result<String> {
+    let ids = greedy_complete(eng, params, tok, prompt, max_new)?;
+    Ok(tok.decode(&ids))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+    use crate::util::rng::Rng;
+    use std::path::Path;
+
+    #[test]
+    fn generates_bounded_valid_tokens() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let rt = Runtime::load(&dir, "pallas").unwrap();
+        let m = rt.manifest.clone();
+        let params = ModelParams::init(&m, &mut Rng::new(1));
+        let samples = crate::data::corpus::gen_instruction_corpus(32, 1);
+        let tok = Tokenizer::build(&crate::data::corpus::sample_texts(&samples), m.vocab);
+        let mut eng = Engine::new(&rt);
+        let ids = greedy_complete(&mut eng, &params, &tok, "what is 12 plus 10 ?", 6).unwrap();
+        assert!(ids.len() <= 6);
+        assert!(ids.iter().all(|&i| (i as usize) < m.vocab));
+        // determinism
+        let ids2 = greedy_complete(&mut eng, &params, &tok, "what is 12 plus 10 ?", 6).unwrap();
+        assert_eq!(ids, ids2);
+    }
+}

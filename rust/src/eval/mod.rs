@@ -1,0 +1,247 @@
+//! Evaluation harness: perplexity, teacher-forced token accuracy,
+//! exact-match answers, per-category MT-Bench-proxy scores, long-tail fact
+//! recall (the memorization probe) and DoLa-style early-exit evaluation.
+//!
+//! Scoring substitutions vs the paper (DESIGN.md §4): there is no GPT-4
+//! judge offline, so the MT-Bench proxy is `10 × teacher-forced accuracy on
+//! the scored span` per category (answer span when the sample has one, the
+//! whole response otherwise) — it preserves the orderings the paper's
+//! tables establish, which is the reproduction target.
+
+pub mod generate;
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::data::corpus::{Category, FactTable};
+use crate::data::loader::DataLoader;
+use crate::data::tokenizer::Tokenizer;
+use crate::data::{encode_sft, Encoded};
+use crate::engine::Engine;
+use crate::model::ModelParams;
+use crate::runtime::HostTensor;
+
+#[derive(Debug, Clone, Default)]
+pub struct EvalReport {
+    pub loss: f64,
+    pub ppl: f64,
+    pub token_acc: f64,
+    pub exact_match: f64,
+    pub n_examples: usize,
+}
+
+/// Mean val loss weighted by supervised-token counts, plus perplexity.
+pub fn eval_loss(eng: &mut Engine, params: &ModelParams, dl: &DataLoader) -> Result<(f64, f64)> {
+    let mut total = 0.0f64;
+    let mut weight = 0.0f64;
+    for (batch, _) in dl.eval_batches() {
+        let n_valid = batch.targets.data.iter().filter(|&&t| t >= 0).count();
+        if n_valid == 0 {
+            continue;
+        }
+        let loss = eng.forward_loss(params, &batch)? as f64;
+        total += loss * n_valid as f64;
+        weight += n_valid as f64;
+    }
+    let mean = if weight > 0.0 { total / weight } else { 0.0 };
+    Ok((mean, mean.exp()))
+}
+
+/// Argmax over the vocab for each row position. logits: [B, T, V].
+fn argmax_tokens(logits: &HostTensor) -> Vec<i32> {
+    let v = *logits.shape.last().unwrap();
+    logits
+        .data
+        .chunks_exact(v)
+        .map(|row| {
+            let mut best = 0usize;
+            let mut bv = f32::NEG_INFINITY;
+            for (i, &x) in row.iter().enumerate() {
+                if x > bv {
+                    bv = x;
+                    best = i;
+                }
+            }
+            best as i32
+        })
+        .collect()
+}
+
+/// Per-example teacher-forced correctness on a span of target positions.
+struct SpanScore {
+    correct: usize,
+    total: usize,
+    all_correct: bool,
+}
+
+fn score_spans(
+    eng: &mut Engine,
+    params: &ModelParams,
+    dl: &DataLoader,
+    n_blocks: Option<usize>,
+) -> Result<Vec<SpanScore>> {
+    let seq = dl.examples()[0].tokens.len();
+    let mut out = Vec::with_capacity(dl.len());
+    let mut idx = 0usize;
+    for (batch, n_real) in dl.eval_batches() {
+        let logits = match n_blocks {
+            Some(nb) => eng.logits_at(params, &batch.tokens, nb)?,
+            None => eng.logits(params, &batch.tokens)?,
+        };
+        let preds = argmax_tokens(&logits);
+        for row in 0..n_real {
+            let e = &dl.examples()[idx];
+            idx += 1;
+            let (a, b) = match e.answer_span {
+                Some(span) => span,
+                None => (0, seq),
+            };
+            let mut correct = 0;
+            let mut total = 0;
+            for t in a..b {
+                if e.targets[t] < 0 {
+                    continue;
+                }
+                total += 1;
+                if preds[row * seq + t] == e.targets[t] {
+                    correct += 1;
+                }
+            }
+            out.push(SpanScore { correct, total, all_correct: total > 0 && correct == total });
+        }
+    }
+    Ok(out)
+}
+
+/// Full report: loss/ppl + token accuracy + exact match over answer spans.
+pub fn evaluate(eng: &mut Engine, params: &ModelParams, dl: &DataLoader) -> Result<EvalReport> {
+    let (loss, ppl) = eval_loss(eng, params, dl)?;
+    let spans = score_spans(eng, params, dl, None)?;
+    let (mut c, mut t, mut em, mut em_n) = (0usize, 0usize, 0usize, 0usize);
+    for (s, e) in spans.iter().zip(dl.examples()) {
+        c += s.correct;
+        t += s.total;
+        if e.answer_span.is_some() {
+            em_n += 1;
+            em += s.all_correct as usize;
+        }
+    }
+    Ok(EvalReport {
+        loss,
+        ppl,
+        token_acc: if t > 0 { c as f64 / t as f64 } else { 0.0 },
+        exact_match: if em_n > 0 { em as f64 / em_n as f64 } else { 0.0 },
+        n_examples: dl.len(),
+    })
+}
+
+/// Exact match at an early-exit depth (Table 12: DoLa-style evaluation).
+pub fn exact_match_at_depth(
+    eng: &mut Engine,
+    params: &ModelParams,
+    dl: &DataLoader,
+    n_blocks: usize,
+) -> Result<f64> {
+    let spans = score_spans(eng, params, dl, Some(n_blocks))?;
+    let (mut em, mut n) = (0usize, 0usize);
+    for (s, e) in spans.iter().zip(dl.examples()) {
+        if e.answer_span.is_some() {
+            n += 1;
+            em += s.all_correct as usize;
+        }
+    }
+    Ok(if n > 0 { em as f64 / n as f64 } else { 0.0 })
+}
+
+/// MT-Bench proxy: per-category `10 × span accuracy` (answer span when
+/// present, response otherwise), plus the category average.
+pub fn category_scores(
+    eng: &mut Engine,
+    params: &ModelParams,
+    dl: &DataLoader,
+) -> Result<(BTreeMap<Category, f64>, f64)> {
+    let spans = score_spans(eng, params, dl, None)?;
+    let mut acc: BTreeMap<Category, (usize, usize)> = BTreeMap::new();
+    for (s, e) in spans.iter().zip(dl.examples()) {
+        let Some(cat) = e.category else { continue };
+        let ent = acc.entry(cat).or_insert((0, 0));
+        ent.0 += s.correct;
+        ent.1 += s.total;
+    }
+    let scores: BTreeMap<Category, f64> = acc
+        .into_iter()
+        .map(|(cat, (c, t))| (cat, if t > 0 { 10.0 * c as f64 / t as f64 } else { 0.0 }))
+        .collect();
+    let avg = if scores.is_empty() {
+        0.0
+    } else {
+        scores.values().sum::<f64>() / scores.len() as f64
+    };
+    Ok((scores, avg))
+}
+
+/// Long-tail memorization probe (the Fig 5 substitution): ask the
+/// canonical fact table's humanities questions, report (head, tail)
+/// exact-match where head = the 8 most frequent facts.
+pub fn fact_recall(
+    eng: &mut Engine,
+    params: &ModelParams,
+    tok: &Tokenizer,
+) -> Result<(f64, f64)> {
+    let m = &eng.rt.manifest;
+    let facts = FactTable::canonical();
+    let mut samples = Vec::new();
+    for f in &facts.facts {
+        let year: String = f
+            .year
+            .to_string()
+            .chars()
+            .map(|c| c.to_string())
+            .collect::<Vec<_>>()
+            .join(" ");
+        samples.push(crate::data::Sample {
+            prompt: format!("who built {} ?", f.entity),
+            response: format!("answer : {}", f.builder),
+            category: Category::Humanities,
+            answer: Some(f.builder.clone()),
+            fact_id: Some(samples.len() / 2),
+        });
+        samples.push(crate::data::Sample {
+            prompt: format!("in what year was {} built ?", f.entity),
+            response: format!("answer : {year}"),
+            category: Category::Humanities,
+            answer: Some(year),
+            fact_id: Some(samples.len() / 2),
+        });
+    }
+    let enc: Vec<Encoded> = samples.iter().map(|s| encode_sft(tok, s, m.seq)).collect();
+    let dl = DataLoader::new(enc, m.batch, m.seq, 0);
+    let spans = score_spans(eng, params, &dl, None)?;
+    let (mut hc, mut hn, mut tc, mut tn) = (0usize, 0usize, 0usize, 0usize);
+    for (s, e) in spans.iter().zip(dl.examples()) {
+        let fi = e.fact_id.unwrap_or(usize::MAX);
+        if fi < 8 {
+            hn += 1;
+            hc += s.all_correct as usize;
+        } else {
+            tn += 1;
+            tc += s.all_correct as usize;
+        }
+    }
+    Ok((
+        if hn > 0 { hc as f64 / hn as f64 } else { 0.0 },
+        if tn > 0 { tc as f64 / tn as f64 } else { 0.0 },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        let t = HostTensor::from_vec(&[1, 2, 3], vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0]);
+        assert_eq!(argmax_tokens(&t), vec![1, 0]);
+    }
+}

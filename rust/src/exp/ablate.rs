@@ -1,0 +1,189 @@
+//! Ablations: Table 6 (γ × K), Table 7 (seeds), Table 10 (γ × lr),
+//! Table 11 (LISA-fix), Figs 8/9/10 (the corresponding loss curves), and
+//! the Limitations-section extension (weighted importance sampling).
+
+use anyhow::Result;
+
+use crate::eval;
+use crate::lisa::{LayerDist, LisaConfig};
+use crate::train::{Method, TrainConfig};
+use crate::util::table::{fnum, Table};
+
+use super::common::{math_task, run_arm, sft_task, Ctx};
+
+/// Table 6 + Figs 8/9: γ ∈ {2, 8} × K ∈ {T, T/5, T/10, 1}.
+pub fn tab6_hparams(ctx: &Ctx, config: &str) -> Result<()> {
+    let rt = ctx.runtime(config)?;
+    let steps = ctx.steps(60);
+    let mut task = sft_task(&rt, 320, 0.12, ctx.seed);
+    let n_layers = rt.manifest.n_layers;
+
+    let mut t = Table::new(vec!["gamma", "K", "MT-Bench-proxy", "final-train-loss"]);
+    let mut gamma_curves = Vec::new();
+    let mut k_curves = Vec::new();
+    for gamma in [2usize, n_layers.min(8).max(3)] {
+        for k in [steps, (steps / 5).max(1), (steps / 10).max(1), 1] {
+            let method = Method::Lisa(LisaConfig::paper(gamma, k));
+            let cfg = TrainConfig { steps, lr: 3e-3, seed: ctx.seed, log_every: 0, ..Default::default() };
+            let (res, mut sess) = run_arm(&rt, method, cfg, &mut task.train)?;
+            let params = sess.eval_params();
+            let (_, score) = eval::category_scores(&mut sess.engine, &params, &task.val)?;
+            t.row(vec![
+                gamma.to_string(),
+                k.to_string(),
+                fnum(score, 2),
+                fnum(res.final_train_loss as f64, 4),
+            ]);
+            let curve: Vec<(usize, f64)> =
+                res.loss_curve.iter().map(|&(s, l)| (s, l as f64)).collect();
+            if k == (steps / 10).max(1) {
+                gamma_curves.push((format!("gamma={gamma}"), curve.clone()));
+            }
+            if gamma == 2 {
+                k_curves.push((format!("K={k}"), curve));
+            }
+        }
+    }
+    println!("\n## Table 6 (LISA hyperparameters γ × K on '{config}')\n");
+    t.print();
+    ctx.save_table(&format!("tab6-hparams-{config}"), &t)?;
+    ctx.save_curve(&format!("fig8-gamma-loss-{config}"), &gamma_curves)?;
+    ctx.save_curve(&format!("fig9-periodK-{config}"), &k_curves)?;
+    Ok(())
+}
+
+/// Table 7 + Fig 10: seed sensitivity of the layer sampler.
+pub fn tab7_seeds(ctx: &Ctx, config: &str) -> Result<()> {
+    let rt = ctx.runtime(config)?;
+    let steps = ctx.steps(60);
+    let mut task = sft_task(&rt, 320, 0.12, ctx.seed);
+    let mut t = Table::new(vec!["seed", "MT-Bench-proxy", "final-train-loss"]);
+    let mut curves = Vec::new();
+    let mut scores = Vec::new();
+    for (i, seed) in [1u64, 2, 3].into_iter().enumerate() {
+        let cfg = TrainConfig { steps, lr: 3e-3, seed, log_every: 0, ..Default::default() };
+        let method = Method::Lisa(LisaConfig::paper(2, (steps / 5).max(1)));
+        let (res, mut sess) = run_arm(&rt, method, cfg, &mut task.train)?;
+        let params = sess.eval_params();
+        let (_, score) = eval::category_scores(&mut sess.engine, &params, &task.val)?;
+        scores.push(score);
+        t.row(vec![
+            format!("seed {}", i + 1),
+            fnum(score, 2),
+            fnum(res.final_train_loss as f64, 4),
+        ]);
+        curves.push((
+            format!("seed{}", i + 1),
+            res.loss_curve.iter().map(|&(s, l)| (s, l as f64)).collect(),
+        ));
+    }
+    let spread = scores.iter().cloned().fold(f64::MIN, f64::max)
+        - scores.iter().cloned().fold(f64::MAX, f64::min);
+    println!("\n## Table 7 (seed sensitivity on '{config}'; spread = {spread:.3})\n");
+    t.print();
+    ctx.save_table(&format!("tab7-seeds-{config}"), &t)?;
+    ctx.save_curve(&format!("fig10-randomness-{config}"), &curves)?;
+    Ok(())
+}
+
+/// Table 10: γ × learning-rate grid on the GSM8K proxy.
+pub fn tab10_gamma_lr(ctx: &Ctx, config: &str) -> Result<()> {
+    let rt = ctx.runtime(config)?;
+    let steps = ctx.steps(50);
+    let mut task = math_task(&rt, 320, 160, ctx.seed);
+    let n_layers = rt.manifest.n_layers;
+    let gammas: Vec<usize> = [2usize, 4, 8, 16]
+        .into_iter()
+        .filter(|&g| g <= n_layers)
+        .collect();
+    let lrs = [5e-3f32, 2.5e-3, 1.25e-3, 6.25e-4];
+
+    let mut t = Table::new({
+        let mut h = vec!["gamma".to_string()];
+        h.extend(lrs.iter().map(|l| format!("lr={l:.2e}")));
+        h
+    });
+    for &gamma in &gammas {
+        let mut row = vec![gamma.to_string()];
+        for &lr in &lrs {
+            let cfg = TrainConfig { steps, lr, seed: ctx.seed, log_every: 0, ..Default::default() };
+            let method = Method::Lisa(LisaConfig::paper(gamma, (steps / 5).max(1)));
+            let (_res, mut sess) = run_arm(&rt, method, cfg, &mut task.train)?;
+            let params = sess.eval_params();
+            let em = eval::evaluate(&mut sess.engine, &params, &task.test)?.exact_match;
+            row.push(fnum(100.0 * em, 1));
+        }
+        t.row(row);
+    }
+    println!("\n## Table 10 (γ × η grid, GSM8K-proxy EM% on '{config}')\n");
+    t.print();
+    ctx.save_table(&format!("tab10-gamma-lr-{config}"), &t)?;
+    Ok(())
+}
+
+/// Table 11: resampling LISA vs fixed random layer subsets.
+pub fn tab11_fixed(ctx: &Ctx, config: &str) -> Result<()> {
+    let rt = ctx.runtime(config)?;
+    let steps = ctx.steps(60);
+    let mut task = sft_task(&rt, 320, 0.12, ctx.seed);
+    let mut t = Table::new(vec!["Method", "MT-Bench-proxy", "final-train-loss"]);
+    let k = (steps / 5).max(1);
+    let mut arms: Vec<(String, Method, u64)> =
+        vec![("LISA".into(), Method::Lisa(LisaConfig::paper(2, k)), ctx.seed)];
+    for i in 1..=3u64 {
+        let mut c = LisaConfig::paper(2, k);
+        c.fixed = true;
+        arms.push((format!("LISA-fix-{i}"), Method::Lisa(c), i));
+    }
+    for (label, method, seed) in arms {
+        let cfg = TrainConfig { steps, lr: 3e-3, seed, log_every: 0, ..Default::default() };
+        let (res, mut sess) = run_arm(&rt, method, cfg, &mut task.train)?;
+        let params = sess.eval_params();
+        let (_, score) = eval::category_scores(&mut sess.engine, &params, &task.val)?;
+        t.row(vec![label, fnum(score, 2), fnum(res.final_train_loss as f64, 4)]);
+    }
+    println!("\n## Table 11 (LISA vs fixed layer subsets on '{config}')\n");
+    t.print();
+    ctx.save_table(&format!("tab11-fixed-{config}"), &t)?;
+    Ok(())
+}
+
+/// Extension (paper Limitations §): non-uniform importance sampling driven
+/// by the measured LoRA/FT weight-norm ratio vs uniform LISA.
+pub fn lisa_weighted(ctx: &Ctx, config: &str) -> Result<()> {
+    let rt = ctx.runtime(config)?;
+    let steps = ctx.steps(60);
+    let mut task = sft_task(&rt, 320, 0.12, ctx.seed);
+    let n_layers = rt.manifest.n_layers;
+    let k = (steps / 5).max(1);
+
+    // U-shaped importance: layers near the ends matter more (the paper's
+    // observed skew); middle layers get lower probability.
+    let weights: Vec<f64> = (0..n_layers)
+        .map(|l| {
+            let x = l as f64 / (n_layers - 1).max(1) as f64;
+            0.25 + (2.0 * x - 1.0).powi(2)
+        })
+        .collect();
+
+    let mut t = Table::new(vec!["variant", "MT-Bench-proxy", "final-train-loss"]);
+    let arms: Vec<(&str, LisaConfig)> = vec![
+        ("uniform", LisaConfig::paper(2, k)),
+        ("weighted(U-shape)", {
+            let mut c = LisaConfig::paper(2, k);
+            c.dist = LayerDist::Weighted(weights);
+            c
+        }),
+    ];
+    for (label, lc) in arms {
+        let cfg = TrainConfig { steps, lr: 3e-3, seed: ctx.seed, log_every: 0, ..Default::default() };
+        let (res, mut sess) = run_arm(&rt, Method::Lisa(lc), cfg, &mut task.train)?;
+        let params = sess.eval_params();
+        let (_, score) = eval::category_scores(&mut sess.engine, &params, &task.val)?;
+        t.row(vec![label.to_string(), fnum(score, 2), fnum(res.final_train_loss as f64, 4)]);
+    }
+    println!("\n## Extension: uniform vs importance-weighted layer sampling ('{config}')\n");
+    t.print();
+    ctx.save_table(&format!("lisa-weighted-{config}"), &t)?;
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! Shared plumbing for the experiment drivers: context, suite setup
+//! (corpus → tokenizer → loaders → runtime), arm execution and CSV/markdown
+//! emission.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context as _, Result};
+
+use crate::data::{corpus, encode_lm_stream, encode_sft, split_train_val, DataLoader, Tokenizer};
+use crate::runtime::Runtime;
+use crate::train::{Method, TrainConfig, TrainResult, TrainSession};
+use crate::util::table::Table;
+
+/// Experiment context from the CLI.
+#[derive(Debug, Clone)]
+pub struct Ctx {
+    pub artifacts: PathBuf,
+    pub results: PathBuf,
+    pub backend: String,
+    /// Step-budget multiplier (`--scale 0.25` for smoke runs).
+    pub scale: f64,
+    pub seed: u64,
+}
+
+impl Ctx {
+    pub fn steps(&self, base: usize) -> usize {
+        ((base as f64) * self.scale).round().max(2.0) as usize
+    }
+
+    pub fn runtime(&self, config: &str) -> Result<Runtime> {
+        let dir = self.artifacts.join(config);
+        Runtime::load(&dir, &self.backend).with_context(|| {
+            format!(
+                "loading artifacts for '{config}' — run `make artifacts CONFIGS={config}` first"
+            )
+        })
+    }
+
+    pub fn save_table(&self, id: &str, t: &Table) -> Result<()> {
+        std::fs::create_dir_all(&self.results)?;
+        let path = self.results.join(format!("{id}.csv"));
+        std::fs::write(&path, t.csv())?;
+        log::info!("wrote {}", path.display());
+        Ok(())
+    }
+
+    pub fn save_curve(&self, id: &str, series: &[(String, Vec<(usize, f64)>)]) -> Result<()> {
+        std::fs::create_dir_all(&self.results)?;
+        let mut t = Table::new(vec!["series", "step", "value"]);
+        for (name, pts) in series {
+            for (step, v) in pts {
+                t.row(vec![name.clone(), step.to_string(), format!("{v:.6}")]);
+            }
+        }
+        let path = self.results.join(format!("{id}.csv"));
+        std::fs::write(&path, t.csv())?;
+        log::info!("wrote {}", path.display());
+        Ok(())
+    }
+}
+
+/// A ready-to-train SFT task: tokenizer + train/val loaders.
+pub struct SftTask {
+    pub tok: Tokenizer,
+    pub train: DataLoader,
+    pub val: DataLoader,
+    pub n_train: usize,
+}
+
+/// Instruction-following task (Alpaca-GPT4 proxy) for a given runtime.
+pub fn sft_task(rt: &Runtime, n_samples: usize, val_frac: f64, seed: u64) -> SftTask {
+    let m = &rt.manifest;
+    let samples = corpus::gen_instruction_corpus(n_samples, seed);
+    let tok = Tokenizer::build(&corpus::sample_texts(&samples), m.vocab);
+    let (tr, va) = split_train_val(&samples, val_frac, seed ^ 0x517);
+    let enc_tr: Vec<_> = tr.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
+    let enc_va: Vec<_> = va.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
+    let n_train = enc_tr.len();
+    SftTask {
+        train: DataLoader::new(enc_tr, m.batch, m.seq, seed ^ 0xda7a),
+        val: DataLoader::new(enc_va, m.batch, m.seq, seed ^ 0xe7a1),
+        tok,
+        n_train,
+    }
+}
+
+/// Math-problem task (GSM8K proxy). Tokenizer is built over both the CPT
+/// docs and the problems so the CPT → FT pipeline shares one vocab.
+pub struct MathTask {
+    pub tok: Tokenizer,
+    pub cpt: DataLoader,
+    pub train: DataLoader,
+    pub test: DataLoader,
+}
+
+pub fn math_task(rt: &Runtime, n_problems: usize, n_docs: usize, seed: u64) -> MathTask {
+    let m = &rt.manifest;
+    let docs = corpus::gen_cpt_math_docs(n_docs, 6, seed ^ 0xd0c5);
+    let problems = corpus::gen_math_problems(n_problems, seed, 3);
+    let mut texts = docs.clone();
+    texts.extend(corpus::sample_texts(&problems));
+    let tok = Tokenizer::build(&texts, m.vocab);
+    let (tr, te) = split_train_val(&problems, 0.25, seed ^ 0x7e57);
+    let enc_cpt = encode_lm_stream(&tok, &docs, m.seq);
+    let enc_tr: Vec<_> = tr.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
+    let enc_te: Vec<_> = te.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
+    MathTask {
+        cpt: DataLoader::new(enc_cpt, m.batch, m.seq, seed ^ 1),
+        train: DataLoader::new(enc_tr, m.batch, m.seq, seed ^ 2),
+        test: DataLoader::new(enc_te, m.batch, m.seq, seed ^ 3),
+        tok,
+    }
+}
+
+/// Medical-QA task (PubMedQA proxy).
+pub fn medqa_task(rt: &Runtime, n: usize, seed: u64) -> SftTask {
+    let m = &rt.manifest;
+    let samples = corpus::gen_medqa(n, seed);
+    let tok = Tokenizer::build(&corpus::sample_texts(&samples), m.vocab);
+    let (tr, va) = split_train_val(&samples, 0.2, seed ^ 0x3d);
+    let enc_tr: Vec<_> = tr.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
+    let enc_va: Vec<_> = va.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
+    let n_train = enc_tr.len();
+    SftTask {
+        train: DataLoader::new(enc_tr, m.batch, m.seq, seed ^ 4),
+        val: DataLoader::new(enc_va, m.batch, m.seq, seed ^ 5),
+        tok,
+        n_train,
+    }
+}
+
+/// Train one arm and return (result, session) — the session keeps the
+/// trained parameters for evaluation.
+pub fn run_arm<'rt>(
+    rt: &'rt Runtime,
+    method: Method,
+    cfg: TrainConfig,
+    loader: &mut DataLoader,
+) -> Result<(TrainResult, TrainSession<'rt>)> {
+    let label = method.label();
+    log::info!(
+        "arm [{}] steps={} lr={:.1e} seed={}",
+        label,
+        cfg.steps,
+        cfg.lr,
+        cfg.seed
+    );
+    let t0 = std::time::Instant::now();
+    let mut sess = TrainSession::new(rt, method, cfg);
+    let res = sess.run(loader)?;
+    log::info!(
+        "arm [{}] done in {:.1}s (median {:.0} ms/step, final loss {:.4})",
+        label,
+        t0.elapsed().as_secs_f64(),
+        res.median_step_ms(),
+        res.final_train_loss
+    );
+    Ok((res, sess))
+}
+
+/// Default LR per method, scaled from the paper's Table 15 search: LISA and
+/// LoRA run ~10x the FT learning rate.
+pub fn default_lr(method: &Method) -> f32 {
+    match method {
+        Method::Vanilla => 0.0,
+        Method::Full => 1e-3,
+        Method::Galore(_) => 1e-3,
+        Method::Lisa(_) => 3e-3,
+        Method::Lora => 3e-3,
+    }
+}
+
+pub fn ensure_dir(p: &Path) -> Result<()> {
+    std::fs::create_dir_all(p)?;
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Continual pre-training experiments (paper §4.3, Appendix A.3):
+//! Table 4 (CPT → GSM8K-proxy accuracy + memory) and Fig 7 (γ sweep).
+//!
+//! Pipeline: continual-pretrain on the arithmetic-document corpus (plain
+//! LM loss), checkpoint, fine-tune on the word-problem train split, then
+//! exact-match on held-out problems — structurally identical to the
+//! paper's OpenWebMath → GSM8K pipeline.
+
+use anyhow::Result;
+
+use crate::eval;
+use crate::lisa::LisaConfig;
+use crate::train::{Method, TrainConfig, TrainSession};
+use crate::util::table::{fnum, human_bytes, Table};
+
+use super::common::{math_task, run_arm, Ctx};
+
+/// One CPT→FT pipeline run; returns (EM accuracy, peak CPT memory bytes).
+fn pipeline(
+    ctx: &Ctx,
+    rt: &crate::runtime::Runtime,
+    task: &mut super::common::MathTask,
+    method: Method,
+    cpt_steps: usize,
+    ft_steps: usize,
+) -> Result<(f64, u64)> {
+    // Stage 1: continual pre-training (skipped for Vanilla).
+    let (params, cpt_peak) = if matches!(method, Method::Vanilla) {
+        let mut rng = crate::util::rng::Rng::new(ctx.seed);
+        (crate::model::ModelParams::init(&rt.manifest, &mut rng), 0u64)
+    } else {
+        let cfg = TrainConfig {
+            steps: cpt_steps,
+            lr: super::common::default_lr(&method),
+            seed: ctx.seed,
+            log_every: 0,
+            ..Default::default()
+        };
+        let (res, sess) = run_arm(rt, method.clone(), cfg, &mut task.cpt)?;
+        (sess.eval_params(), res.peak_mem)
+    };
+
+    // Stage 2: supervised fine-tune on word problems (same method; the
+    // paper fine-tunes with the same procedure after CPT).
+    let ft_method = if matches!(method, Method::Vanilla) { Method::Full } else { method };
+    let cfg = TrainConfig {
+        steps: ft_steps,
+        lr: super::common::default_lr(&ft_method),
+        seed: ctx.seed ^ 0xf7,
+        log_every: 0,
+        ..Default::default()
+    };
+    let mut sess = TrainSession::with_params(rt, ft_method, cfg, params);
+    sess.run(&mut task.train)?;
+    let p = sess.eval_params();
+    let em = eval::evaluate(&mut sess.engine, &p, &task.test)?.exact_match;
+    Ok((em, cpt_peak))
+}
+
+/// Table 4: Vanilla / LISA / FT continual pre-training.
+pub fn tab4_cpt(ctx: &Ctx, config: &str) -> Result<()> {
+    let rt = ctx.runtime(config)?;
+    let cpt_steps = ctx.steps(60);
+    let ft_steps = ctx.steps(40);
+    let mut task = math_task(&rt, 400, 240, ctx.seed);
+    let gamma = (rt.manifest.n_layers / 2).max(1); // "half the layers" rule
+
+    let mut t = Table::new(vec!["Method", "GSM8K-proxy(EM%)", "CPT peak mem"]);
+    for method in [
+        Method::Vanilla,
+        Method::Lisa(LisaConfig::paper(gamma, (cpt_steps / 6).max(1))),
+        Method::Full,
+    ] {
+        let label = method.label().to_string();
+        let (em, peak) = pipeline(ctx, &rt, &mut task, method, cpt_steps, ft_steps)?;
+        t.row(vec![
+            label,
+            fnum(100.0 * em, 1),
+            if peak == 0 { "-".into() } else { human_bytes(peak) },
+        ]);
+    }
+    println!("\n## Table 4 (continual pre-training on '{config}', γ=L/2)\n");
+    t.print();
+    ctx.save_table(&format!("tab4-cpt-{config}"), &t)?;
+    Ok(())
+}
+
+/// Fig 7 / Appendix A.3: CPT accuracy across γ ∈ {2,4,8,16} vs FT.
+pub fn fig7_cpt_gamma(ctx: &Ctx, config: &str) -> Result<()> {
+    let rt = ctx.runtime(config)?;
+    let cpt_steps = ctx.steps(50);
+    let ft_steps = ctx.steps(30);
+    let mut task = math_task(&rt, 400, 240, ctx.seed);
+    let n_layers = rt.manifest.n_layers;
+
+    let mut t = Table::new(vec!["arm", "GSM8K-proxy(EM%)"]);
+    for gamma in [2usize, 4, 8, 16] {
+        if gamma > n_layers {
+            continue;
+        }
+        let method = Method::Lisa(LisaConfig::paper(gamma, (cpt_steps / 6).max(1)));
+        let (em, _) = pipeline(ctx, &rt, &mut task, method, cpt_steps, ft_steps)?;
+        t.row(vec![format!("LISA γ={gamma}"), fnum(100.0 * em, 1)]);
+    }
+    let (em_ft, _) = pipeline(ctx, &rt, &mut task, Method::Full, cpt_steps, ft_steps)?;
+    t.row(vec!["FT".to_string(), fnum(100.0 * em_ft, 1)]);
+
+    println!("\n## Fig 7 (CPT γ sweep on '{config}')\n");
+    t.print();
+    ctx.save_table(&format!("fig7-cpt-gamma-{config}"), &t)?;
+    Ok(())
+}

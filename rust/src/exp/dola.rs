@@ -1,0 +1,63 @@
+//! Table 12: LISA × early-exit (DoLa-style) evaluation — exact-match on
+//! the GSM8K-proxy when logits are taken from intermediate depths.
+
+use anyhow::Result;
+
+use crate::eval;
+use crate::lisa::LisaConfig;
+use crate::train::{Method, TrainConfig, TrainSession};
+use crate::util::table::{fnum, Table};
+
+use super::common::{default_lr, math_task, Ctx};
+
+pub fn tab12_dola(ctx: &Ctx, config: &str) -> Result<()> {
+    let rt = ctx.runtime(config)?;
+    let steps = ctx.steps(60);
+    let mut task = math_task(&rt, 320, 160, ctx.seed);
+    let n_layers = rt.manifest.n_layers;
+    let depths = [n_layers / 4, n_layers / 2, (3 * n_layers) / 4, n_layers];
+
+    let mut t = Table::new({
+        let mut h = vec!["method".to_string()];
+        h.extend(depths.iter().map(|d| format!("exit@{d}/{n_layers} EM%")));
+        h
+    });
+
+    let arms: Vec<(String, Option<Method>)> = vec![
+        ("vanilla".into(), None),
+        ("ft".into(), Some(Method::Full)),
+        ("lisa".into(), Some(Method::Lisa(LisaConfig::paper(2, (steps / 5).max(1))))),
+    ];
+    for (label, method) in arms {
+        let mut sess = match method {
+            None => TrainSession::new(
+                &rt,
+                Method::Vanilla,
+                TrainConfig { steps: 0, log_every: 0, ..Default::default() },
+            ),
+            Some(m) => {
+                let cfg = TrainConfig {
+                    steps,
+                    lr: default_lr(&m),
+                    seed: ctx.seed,
+                    log_every: 0,
+                    ..Default::default()
+                };
+                let mut s = TrainSession::new(&rt, m, cfg);
+                s.run(&mut task.train)?;
+                s
+            }
+        };
+        let params = sess.eval_params();
+        let mut row = vec![label];
+        for &d in &depths {
+            let em = eval::exact_match_at_depth(&mut sess.engine, &params, &task.test, d)?;
+            row.push(fnum(100.0 * em, 1));
+        }
+        t.row(row);
+    }
+    println!("\n## Table 12 (early-exit / DoLa-style evaluation on '{config}')\n");
+    t.print();
+    ctx.save_table(&format!("tab12-dola-{config}"), &t)?;
+    Ok(())
+}

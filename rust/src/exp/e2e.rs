@@ -1,0 +1,115 @@
+//! End-to-end driver: the full three-layer system on one real workload —
+//! AOT artifacts → Rust engine → LISA schedule → eval → checkpoint.
+//! This is the run recorded in EXPERIMENTS.md §End-to-End.
+
+use anyhow::Result;
+
+use crate::eval;
+use crate::lisa::LisaConfig;
+use crate::model::checkpoint;
+use crate::train::{Method, TrainConfig, TrainSession};
+use crate::util::table::{fnum, human_bytes, Table};
+
+use super::common::{sft_task, Ctx};
+
+pub fn e2e(ctx: &Ctx, config: &str, steps_override: Option<usize>) -> Result<()> {
+    let rt = ctx.runtime(config)?;
+    let m = &rt.manifest;
+    let steps = steps_override.unwrap_or_else(|| ctx.steps(200));
+    let eval_every = (steps / 5).max(1);
+    log::info!(
+        "e2e: config={config} ({:.1}M params, d={}, L={}, T={}, B={}), {} steps, LISA γ=2 K=10",
+        m.n_params as f64 / 1e6,
+        m.d_model,
+        m.n_layers,
+        m.seq,
+        m.batch,
+        steps
+    );
+
+    let mut task = sft_task(&rt, 640, 0.04, ctx.seed);
+    let method = Method::Lisa(LisaConfig::paper(2, 10));
+    let cfg = TrainConfig {
+        steps: eval_every,
+        lr: 3e-3,
+        seed: ctx.seed,
+        log_every: 0,
+        ..Default::default()
+    };
+    let mut sess = TrainSession::new(&rt, method, cfg);
+
+    let t0 = std::time::Instant::now();
+    let mut curve: Vec<(usize, f64)> = Vec::new();
+    let mut val_curve: Vec<(usize, f64)> = Vec::new();
+    let mut step_times = Vec::new();
+    for step in 0..steps {
+        let ts = std::time::Instant::now();
+        let loss = sess.step(step, &mut task.train)?;
+        step_times.push(ts.elapsed().as_secs_f64() * 1e3);
+        curve.push((step, loss as f64));
+        if step % eval_every == 0 || step + 1 == steps {
+            let params = sess.eval_params();
+            let (vl, _) = eval::eval_loss(&mut sess.engine, &params, &task.val)?;
+            val_curve.push((step, vl));
+            log::info!(
+                "e2e step {step}/{steps}: train {loss:.4} val {vl:.4} ({:.0} ms/step)",
+                crate::util::stats::median(&step_times)
+            );
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let params = sess.eval_params();
+    let rep = eval::evaluate(&mut sess.engine, &params, &task.val)?;
+    let (cats, mt) = eval::category_scores(&mut sess.engine, &params, &task.val)?;
+    let tokens_per_step = (m.batch * m.seq) as f64;
+    let med_ms = crate::util::stats::median(&step_times);
+
+    super::common::ensure_dir(&ctx.results)?;
+    let ckpt = ctx.results.join(format!("e2e-{config}.ckpt"));
+    checkpoint::save_model(&ckpt, &sess.params)?;
+
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["config".to_string(), format!("{config} ({:.1}M params)", m.n_params as f64 / 1e6)]);
+    t.row(vec!["steps".to_string(), steps.to_string()]);
+    t.row(vec!["wall clock".to_string(), format!("{wall:.1} s")]);
+    t.row(vec!["median step".to_string(), format!("{med_ms:.0} ms")]);
+    t.row(vec!["throughput".to_string(), format!("{:.0} tok/s", tokens_per_step / (med_ms / 1e3))]);
+    t.row(vec!["first train loss".to_string(), fnum(curve.first().unwrap().1, 4)]);
+    t.row(vec!["final train loss".to_string(), fnum(curve.last().unwrap().1, 4)]);
+    t.row(vec!["final val loss".to_string(), fnum(val_curve.last().unwrap().1, 4)]);
+    t.row(vec!["val ppl".to_string(), fnum(rep.ppl, 2)]);
+    t.row(vec!["val token acc".to_string(), fnum(rep.token_acc, 3)]);
+    t.row(vec!["val exact match".to_string(), fnum(rep.exact_match, 3)]);
+    t.row(vec!["MT-Bench proxy".to_string(), fnum(mt, 2)]);
+    t.row(vec!["peak tracked mem".to_string(), human_bytes(sess.engine.meter.peak())]);
+    t.row(vec!["checkpoint".to_string(), ckpt.display().to_string()]);
+    println!("\n## End-to-end run ({config})\n");
+    t.print();
+    println!("\nper-category proxy scores:");
+    for (c, s) in &cats {
+        println!("  {:<12} {s:.2}", c.label());
+    }
+
+    ctx.save_table(&format!("e2e-{config}"), &t)?;
+    ctx.save_curve(
+        &format!("e2e-loss-{config}"),
+        &[("train".to_string(), curve), ("val".to_string(), val_curve)],
+    )?;
+
+    // Per-segment runtime profile (the L3 §Perf input).
+    let mut prof = Table::new(vec!["segment", "calls", "total s", "mean ms"]);
+    let mut stats: Vec<_> = rt.stats().into_iter().collect();
+    stats.sort_by(|a, b| b.1.total_ns.cmp(&a.1.total_ns));
+    for (name, s) in stats {
+        prof.row(vec![
+            name,
+            s.calls.to_string(),
+            fnum(s.total_ns as f64 / 1e9, 2),
+            fnum(s.total_ns as f64 / 1e6 / s.calls.max(1) as f64, 1),
+        ]);
+    }
+    println!("\nper-segment profile:");
+    prof.print();
+    ctx.save_table(&format!("e2e-profile-{config}"), &prof)?;
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Experiment harness: one registered driver per paper table/figure
+//! (DESIGN.md §5 is the index). `lisa exp <id>` runs one; `lisa exp all`
+//! runs the full suite in a sensible order.
+
+pub mod ablate;
+pub mod common;
+pub mod cpt;
+pub mod dola;
+pub mod e2e;
+pub mod perfmem;
+pub mod quality;
+pub mod report;
+pub mod theory;
+
+use anyhow::{bail, Result};
+
+pub use common::Ctx;
+
+/// (id, default config, description)
+pub const EXPERIMENTS: &[(&str, &str, &str)] = &[
+    ("tab1-memory", "tiny", "Table 1: peak-memory grid (analytical + measured calibration)"),
+    ("fig3-memory", "tiny", "Fig 3: LLaMA-2-7B memory breakdown by method"),
+    ("fig4-itertime", "small", "Fig 4: single-iteration time by method + 7B FLOP projection"),
+    ("fig1-loss", "small", "Fig 1: train-loss curves FT/LoRA/GaLore/LISA (+Fig 11 val loss)"),
+    ("fig2-weightnorm", "small", "Fig 2/12: layerwise weight-norm skew LoRA vs FT"),
+    ("suite-finetune", "small", "Tables 2, 3, 8 + memorization probe in one pass"),
+    ("tab2-benchmarks", "small", "Table 2 (alias of suite-finetune)"),
+    ("tab3-mtbench", "small", "Table 3 (alias of suite-finetune)"),
+    ("tab8-mtbench-cat", "small", "Table 8 (alias of suite-finetune)"),
+    ("tab4-cpt", "small", "Table 4: continual pre-training → GSM8K-proxy"),
+    ("fig7-cpt-gamma", "small", "Fig 7: CPT γ sweep"),
+    ("tab5-large", "base", "Table 5/9: largest-config stand-in (MT-Bench/GSM8K/PubMedQA proxies)"),
+    ("tab6-hparams", "small", "Table 6 + Figs 8/9: γ × K ablation"),
+    ("tab7-seeds", "small", "Table 7 + Fig 10: seed sensitivity"),
+    ("tab10-gamma-lr", "tiny", "Table 10: γ × learning-rate grid (GSM8K-proxy)"),
+    ("tab11-fixed", "small", "Table 11: LISA vs fixed layer subsets"),
+    ("tab12-dola", "small", "Table 12: early-exit (DoLa) evaluation"),
+    ("lisa-weighted", "small", "Extension: weighted importance sampling (Limitations §)"),
+    ("theory-convergence", "tiny", "Theorem 1: O(1/sqrt(T)) average-regret check on convex quadratics"),
+    ("e2e", "base", "End-to-end system driver (train + eval + checkpoint + profile)"),
+];
+
+pub fn list() {
+    println!("{:<18} {:<7} description", "id", "config");
+    for (id, cfg, desc) in EXPERIMENTS {
+        println!("{id:<18} {cfg:<7} {desc}");
+    }
+}
+
+pub fn run(ctx: &Ctx, id: &str, config_override: Option<&str>, steps: Option<usize>) -> Result<()> {
+    let default_cfg = EXPERIMENTS
+        .iter()
+        .find(|(eid, _, _)| *eid == id)
+        .map(|(_, c, _)| *c);
+    let config = config_override
+        .or(default_cfg)
+        .unwrap_or("small")
+        .to_string();
+    let c = &config;
+    match id {
+        "tab1-memory" => perfmem::tab1_memory(ctx, c),
+        "fig3-memory" => perfmem::fig3_memory(ctx, c),
+        "fig4-itertime" => perfmem::fig4_itertime(ctx, c),
+        "fig1-loss" | "fig11-valloss" | "fig6-convergence" => quality::fig1_loss(ctx, c),
+        "fig2-weightnorm" => quality::fig2_weightnorm(ctx, c),
+        "suite-finetune" | "tab2-benchmarks" | "tab3-mtbench" | "tab8-mtbench-cat" => {
+            quality::suite_finetune(ctx, c)
+        }
+        "tab4-cpt" => cpt::tab4_cpt(ctx, c),
+        "fig7-cpt-gamma" => cpt::fig7_cpt_gamma(ctx, c),
+        "tab5-large" | "tab9-70b-cat" => quality::tab5_large(ctx, c),
+        "tab6-hparams" | "fig8-gamma-loss" | "fig9-periodK" => ablate::tab6_hparams(ctx, c),
+        "tab7-seeds" | "fig10-randomness" => ablate::tab7_seeds(ctx, c),
+        "tab10-gamma-lr" => ablate::tab10_gamma_lr(ctx, c),
+        "tab11-fixed" => ablate::tab11_fixed(ctx, c),
+        "tab12-dola" => dola::tab12_dola(ctx, c),
+        "lisa-weighted" => ablate::lisa_weighted(ctx, c),
+        "theory-convergence" => theory::theory_convergence(ctx, c),
+        "report" => report::write_report(ctx),
+        "e2e" => e2e::e2e(ctx, c, steps),
+        "all" => {
+            // every distinct driver once, cheapest configs first
+            for id in [
+                "tab1-memory", "fig3-memory", "fig4-itertime", "fig2-weightnorm",
+                "suite-finetune", "fig1-loss", "tab4-cpt", "fig7-cpt-gamma",
+                "tab6-hparams", "tab7-seeds", "tab10-gamma-lr", "tab11-fixed",
+                "tab12-dola", "lisa-weighted", "theory-convergence",
+            ] {
+                println!("\n==================== exp {id} ====================");
+                run(ctx, id, config_override, steps)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment '{other}' (try `lisa exp list`)"),
+    }
+}

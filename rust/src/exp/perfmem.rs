@@ -1,0 +1,144 @@
+//! Memory & iteration-time experiments:
+//!
+//! * `tab1-memory` — the Table-1 grid: analytical paper-scale rows plus
+//!   *measured* rows for our trainable configs (meter-calibrated).
+//! * `fig3-memory` — LLaMA-2-7B breakdown by category (analytical) plus
+//!   the measured breakdown of the local config.
+//! * `fig4-itertime` — measured per-step wall-clock per method plus the
+//!   FLOP-model projection to 7B.
+
+use anyhow::Result;
+
+use crate::lisa::LisaConfig;
+use crate::membench::{self, MemMethod, PAPER_MODELS};
+use crate::opt::{GaloreHp, StatePolicy};
+use crate::train::{Method, TrainConfig};
+use crate::util::table::{fnum, human_bytes, Table};
+
+use super::common::{default_lr, run_arm, sft_task, Ctx};
+
+/// Measure peak bytes of a few steps of each method on a local config.
+fn measured_rows(ctx: &Ctx, config: &str) -> Result<Table> {
+    let rt = ctx.runtime(config)?;
+    let mut task = sft_task(&rt, 128, 0.1, ctx.seed);
+    let mut t = Table::new(vec!["method", "measured peak", "params", "grads", "optim", "acts", "lora"]);
+    let n_layers = rt.manifest.n_layers;
+    let methods: Vec<(String, Method)> = vec![
+        ("vanilla(FT)".into(), Method::Full),
+        ("lora".into(), Method::Lora),
+        ("lisa E+H+2L (drop)".into(), Method::Lisa(LisaConfig::paper(2.min(n_layers), 5))),
+    ];
+    for (label, method) in methods {
+        let cfg = TrainConfig {
+            steps: 6,
+            lr: default_lr(&method),
+            seed: ctx.seed,
+            state_policy: StatePolicy::Drop,
+            log_every: 0,
+            ..Default::default()
+        };
+        let (res, _sess) = run_arm(&rt, method, cfg, &mut task.train)?;
+        let get = |k: &str| {
+            res.mem_breakdown
+                .iter()
+                .find(|(n, _)| *n == k)
+                .map(|(_, b)| human_bytes(*b))
+                .unwrap_or_else(|| "0".into())
+        };
+        t.row(vec![
+            label,
+            human_bytes(res.peak_mem),
+            get("params"),
+            get("grads"),
+            get("optim"),
+            get("activations"),
+            get("lora"),
+        ]);
+    }
+    Ok(t)
+}
+
+pub fn tab1_memory(ctx: &Ctx, config: &str) -> Result<()> {
+    println!("\n## Table 1 (peak memory, analytical model at paper scale: fp16 w/g/m/v, T=1024, B=1)\n");
+    let t = membench::table1();
+    t.print();
+    ctx.save_table("tab1-memory", &t)?;
+
+    println!("\n## Table 1 calibration: measured bytes on local config '{config}' (f32 runtime)\n");
+    let m = measured_rows(ctx, config)?;
+    m.print();
+    ctx.save_table(&format!("tab1-measured-{config}"), &m)?;
+    Ok(())
+}
+
+pub fn fig3_memory(ctx: &Ctx, _config: &str) -> Result<()> {
+    println!("\n## Fig 3 (LLaMA-2-7B memory breakdown by method, analytical)\n");
+    let t = membench::fig3_breakdown();
+    t.print();
+    ctx.save_table("fig3-memory", &t)?;
+    Ok(())
+}
+
+pub fn fig4_itertime(ctx: &Ctx, config: &str) -> Result<()> {
+    let rt = ctx.runtime(config)?;
+    let mut task = sft_task(&rt, 128, 0.1, ctx.seed);
+    let steps = ctx.steps(10).max(4);
+
+    let mut t = Table::new(vec![
+        "method", "median ms/step", "speedup vs FT", "bwd_full", "bwd_x", "bwd_skipped",
+    ]);
+    let mut ft_ms = 0.0f64;
+    let methods: Vec<Method> = vec![
+        Method::Full,
+        Method::Lora,
+        Method::Galore(GaloreHp { rank: 8, update_proj_gap: 50, scale: 1.0, ..Default::default() }),
+        Method::Lisa(LisaConfig::paper(2, 5)),
+    ];
+    for method in methods {
+        let label = method.label().to_string();
+        let cfg = TrainConfig { steps, lr: default_lr(&method), seed: ctx.seed, log_every: 0, ..Default::default() };
+        // warm the executable cache before timing
+        let (res, _s) = run_arm(&rt, method.clone(), cfg.clone(), &mut task.train)?;
+        let (res, _s) = if res.median_step_ms() > 0.0 {
+            run_arm(&rt, method, cfg, &mut task.train)?
+        } else {
+            (res, _s)
+        };
+        let ms = res.median_step_ms();
+        if label == "ft" {
+            ft_ms = ms;
+        }
+        t.row(vec![
+            label,
+            fnum(ms, 1),
+            if ft_ms > 0.0 { format!("{:.2}x", ft_ms / ms) } else { "-".into() },
+            res.bwd_full_calls.to_string(),
+            res.bwd_x_calls.to_string(),
+            res.bwd_skipped.to_string(),
+        ]);
+    }
+    println!("\n## Fig 4 (single-iteration time, measured on '{config}')\n");
+    t.print();
+    ctx.save_table(&format!("fig4-itertime-{config}"), &t)?;
+
+    // FLOP-model projection to the paper's 7B testbed.
+    let mut proj = Table::new(vec!["method", "TFLOPs/step @7B", "speedup vs FT"]);
+    let m7 = PAPER_MODELS[3];
+    let ft = membench::step_flops(&m7, MemMethod::Vanilla) as f64;
+    for (label, mm) in [
+        ("FT", MemMethod::Vanilla),
+        ("LoRA r=128", MemMethod::Lora { rank: 128 }),
+        ("LISA E+H+2L", MemMethod::Lisa { extra_layers: 2 }),
+    ] {
+        let f = membench::step_flops(&m7, mm) as f64;
+        proj.row(vec![
+            label.to_string(),
+            fnum(f / 1e12, 1),
+            format!("{:.2}x", ft / f),
+        ]);
+    }
+    println!("\n## Fig 4b (FLOP-model projection to LLaMA-2-7B)\n");
+    proj.print();
+    ctx.save_table("fig4-flop-projection", &proj)?;
+    Ok(())
+}

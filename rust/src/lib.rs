@@ -1,0 +1,25 @@
+//! # LISA — Layerwise Importance Sampled AdamW (NeurIPS 2024) in Rust+JAX+Pallas
+//!
+//! Reproduction of Pan et al., *"LISA: Layerwise Importance Sampling for
+//! Memory-Efficient Large Language Model Fine-Tuning"* as a three-layer
+//! stack: Pallas kernels (L1) and JAX segment functions (L2) are AOT-lowered
+//! to HLO-text artifacts at build time; this crate (L3) owns the entire
+//! training runtime — the layer-granular forward/backward engine, the LISA
+//! sampler, optimizers (AdamW / GaLore / LoRA adapters), synthetic corpora,
+//! evaluation, the memory model and the experiment harness reproducing every
+//! table and figure of the paper.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the results.
+
+pub mod util;
+pub mod runtime;
+pub mod model;
+pub mod engine;
+pub mod lisa;
+pub mod opt;
+pub mod lora;
+pub mod data;
+pub mod eval;
+pub mod train;
+pub mod membench;
+pub mod exp;

@@ -1,0 +1,257 @@
+//! The paper's algorithm: Layerwise Importance Sampled AdamW (Algorithm 1).
+//!
+//! Every `K` optimizer steps:
+//!   1. freeze all intermediate blocks,
+//!   2. always keep the embedding and LM-head trainable,
+//!   3. sample `γ` intermediate blocks to unfreeze.
+//!
+//! The practical sampler (paper §3.2) draws exactly `γ` blocks uniformly —
+//! this upper-bounds unfrozen-layer memory. The general importance-sampling
+//! variant (`LayerDist::Weighted`, the `p^(ℓ) = w̃^(ℓ)/w^(ℓ)` rule from the
+//! motivation and the Limitations section) samples each block independently
+//! or by weighted choice without replacement; it backs the extension
+//! experiment `exp lisa-weighted`.
+
+use crate::engine::TrainMask;
+use crate::util::rng::Rng;
+
+/// Sampling distribution over intermediate blocks.
+#[derive(Debug, Clone)]
+pub enum LayerDist {
+    /// Exactly γ blocks, uniform without replacement (the paper's LISA).
+    Uniform,
+    /// Exactly γ blocks, weighted without replacement by the given
+    /// per-block importance (the w̃/w rule; weights need not normalize).
+    Weighted(Vec<f64>),
+}
+
+#[derive(Debug, Clone)]
+pub struct LisaConfig {
+    /// γ — number of intermediate blocks unfrozen per sampling period.
+    pub gamma: usize,
+    /// K — optimizer steps between resamples.
+    pub period_k: usize,
+    /// Train embedding every step (paper: yes).
+    pub train_embed: bool,
+    /// Train LM head every step (paper: yes).
+    pub train_head: bool,
+    pub dist: LayerDist,
+    /// LISA-fix ablation (Table 11): sample once at step 0 and never again.
+    pub fixed: bool,
+}
+
+impl LisaConfig {
+    pub fn paper(gamma: usize, period_k: usize) -> Self {
+        LisaConfig {
+            gamma,
+            period_k,
+            train_embed: true,
+            train_head: true,
+            dist: LayerDist::Uniform,
+            fixed: false,
+        }
+    }
+}
+
+/// Stateful scheduler: owns the RNG stream for layer selection so runs are
+/// reproducible per seed (Table 7 / Fig 10).
+#[derive(Debug, Clone)]
+pub struct LisaScheduler {
+    cfg: LisaConfig,
+    n_layers: usize,
+    rng: Rng,
+    current: Vec<usize>,
+    /// History of sampled sets (ablation/diagnostics).
+    pub history: Vec<Vec<usize>>,
+    resamples: usize,
+}
+
+impl LisaScheduler {
+    pub fn new(cfg: LisaConfig, n_layers: usize, seed: u64) -> Self {
+        assert!(cfg.gamma <= n_layers, "γ={} > L={}", cfg.gamma, n_layers);
+        assert!(cfg.period_k >= 1, "K must be >= 1");
+        LisaScheduler {
+            cfg,
+            n_layers,
+            rng: Rng::new(seed),
+            current: Vec::new(),
+            history: Vec::new(),
+            resamples: 0,
+        }
+    }
+
+    fn resample(&mut self) {
+        self.current = match &self.cfg.dist {
+            LayerDist::Uniform => self.rng.sample_distinct(self.n_layers, self.cfg.gamma),
+            LayerDist::Weighted(w) => {
+                assert_eq!(w.len(), self.n_layers, "weight arity");
+                // Weighted sampling without replacement: repeatedly draw
+                // from the remaining mass.
+                let mut w = w.clone();
+                let mut out = Vec::with_capacity(self.cfg.gamma);
+                for _ in 0..self.cfg.gamma.min(self.n_layers) {
+                    if w.iter().sum::<f64>() <= 0.0 {
+                        break;
+                    }
+                    let i = self.rng.sample_weighted(&w);
+                    out.push(i);
+                    w[i] = 0.0;
+                }
+                out.sort_unstable();
+                out
+            }
+        };
+        self.history.push(self.current.clone());
+        self.resamples += 1;
+    }
+
+    /// The trainable mask for optimizer step `step` (0-based). Resamples on
+    /// period boundaries (Algorithm 1 line 3), except in `fixed` mode.
+    pub fn mask_for_step(&mut self, step: usize) -> TrainMask {
+        let boundary = step % self.cfg.period_k == 0;
+        if self.current.is_empty() || (boundary && !(self.cfg.fixed && self.resamples > 0)) {
+            self.resample();
+        }
+        let mut blocks = vec![false; self.n_layers];
+        for &l in &self.current {
+            blocks[l] = true;
+        }
+        TrainMask {
+            embed: self.cfg.train_embed,
+            head: self.cfg.train_head,
+            blocks,
+        }
+    }
+
+    pub fn current_layers(&self) -> &[usize] {
+        &self.current
+    }
+
+    pub fn n_resamples(&self) -> usize {
+        self.resamples
+    }
+}
+
+/// The importance weights LISA's motivation derives from LoRA's layerwise
+/// weight-norm skew: `p^(ℓ) ∝ w̃^(ℓ) / w^(ℓ)` where w̃ are LoRA-run norms
+/// and w full-parameter norms (§3.2). Clamped to a small floor so every
+/// layer keeps nonzero probability.
+pub fn importance_weights(lora_norms: &[f64], ft_norms: &[f64]) -> Vec<f64> {
+    assert_eq!(lora_norms.len(), ft_norms.len());
+    lora_norms
+        .iter()
+        .zip(ft_norms)
+        .map(|(&ln, &fn_)| (ln / fn_.max(1e-12)).max(1e-6))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exactly_gamma_blocks_every_period() {
+        let mut s = LisaScheduler::new(LisaConfig::paper(2, 5), 8, 42);
+        for step in 0..50 {
+            let m = s.mask_for_step(step);
+            assert_eq!(m.n_trainable_blocks(), 2, "step {step}");
+            assert!(m.embed && m.head);
+        }
+        assert_eq!(s.n_resamples(), 10);
+    }
+
+    #[test]
+    fn mask_stable_within_period() {
+        let mut s = LisaScheduler::new(LisaConfig::paper(3, 10), 12, 7);
+        let m0 = s.mask_for_step(0);
+        for step in 1..10 {
+            assert_eq!(s.mask_for_step(step), m0);
+        }
+        // Likely different after the boundary (probability of equality is
+        // 1/C(12,3) per draw; over 20 periods this is vanishing).
+        let mut changed = false;
+        for p in 1..20 {
+            if s.mask_for_step(p * 10) != m0 {
+                changed = true;
+                break;
+            }
+        }
+        assert!(changed);
+    }
+
+    #[test]
+    fn seed_determinism_and_divergence() {
+        let seq = |seed: u64| -> Vec<Vec<usize>> {
+            let mut s = LisaScheduler::new(LisaConfig::paper(2, 1), 10, seed);
+            (0..20).map(|i| {
+                s.mask_for_step(i);
+                s.current_layers().to_vec()
+            }).collect()
+        };
+        assert_eq!(seq(1), seq(1));
+        assert_ne!(seq(1), seq(2));
+    }
+
+    #[test]
+    fn fixed_mode_never_resamples() {
+        let mut cfg = LisaConfig::paper(2, 3);
+        cfg.fixed = true;
+        let mut s = LisaScheduler::new(cfg, 8, 5);
+        let m0 = s.mask_for_step(0);
+        for step in 1..60 {
+            assert_eq!(s.mask_for_step(step), m0);
+        }
+        assert_eq!(s.n_resamples(), 1);
+    }
+
+    #[test]
+    fn uniform_coverage_is_roughly_even() {
+        let mut s = LisaScheduler::new(LisaConfig::paper(2, 1), 8, 11);
+        let mut counts = vec![0usize; 8];
+        let trials = 4000;
+        for step in 0..trials {
+            s.mask_for_step(step);
+            for &l in s.current_layers() {
+                counts[l] += 1;
+            }
+        }
+        let expect = trials as f64 * 2.0 / 8.0;
+        for (l, &c) in counts.iter().enumerate() {
+            let dev = (c as f64 - expect).abs() / expect;
+            assert!(dev < 0.15, "layer {l}: count {c} vs expect {expect}");
+        }
+    }
+
+    #[test]
+    fn weighted_dist_respects_weights() {
+        let mut w = vec![1.0; 8];
+        w[3] = 0.0; // never sample layer 3
+        w[0] = 50.0; // almost always sample layer 0
+        let mut cfg = LisaConfig::paper(2, 1);
+        cfg.dist = LayerDist::Weighted(w);
+        let mut s = LisaScheduler::new(cfg, 8, 3);
+        let mut c0 = 0;
+        for step in 0..500 {
+            s.mask_for_step(step);
+            assert!(!s.current_layers().contains(&3));
+            if s.current_layers().contains(&0) {
+                c0 += 1;
+            }
+        }
+        assert!(c0 > 450, "layer 0 sampled only {c0}/500");
+    }
+
+    #[test]
+    fn importance_weights_formula() {
+        let w = importance_weights(&[10.0, 1.0, 0.0], &[10.0, 10.0, 5.0]);
+        assert!((w[0] - 1.0).abs() < 1e-12);
+        assert!((w[1] - 0.1).abs() < 1e-12);
+        assert_eq!(w[2], 1e-6); // floored
+    }
+
+    #[test]
+    #[should_panic(expected = "γ")]
+    fn gamma_exceeding_layers_rejected() {
+        LisaScheduler::new(LisaConfig::paper(9, 1), 8, 0);
+    }
+}

@@ -1,0 +1,244 @@
+//! LoRA baseline (Hu et al. 2022): rank-`r` adapters on every linear layer
+//! of every block (q/k/v/o/w1/w2 — the paper's "all linear layers" setup),
+//! base weights frozen, B-zero init so training starts at the base model.
+//!
+//! The adapters ride dedicated artifacts (`block_fwd_lora` /
+//! `block_bwd_lora`) whose backward produces gradients *only* for A/B —
+//! the base-weight gradient matmuls are never emitted, which is LoRA's
+//! compute/memory profile done honestly rather than masked.
+
+use anyhow::Result;
+
+use crate::engine::{Batch, Engine, MemCategory};
+use crate::model::{ModelParams, ParamKey};
+use crate::opt::linalg::matmul_nn;
+use crate::opt::AdamW;
+use crate::runtime::{HostTensor, Manifest, Operand};
+
+/// Which block tensor each (A, B) adapter pair merges into:
+/// (aq,bq)->wq, (ak,bk)->wk, (av,bv)->wv, (ao,bo)->wo, (a1,b1)->w1,
+/// (a2,b2)->w2 — indices in the block ABI order (g1,wq,wk,wv,wo,g2,w1,w2).
+pub const ADAPTER_TARGETS: [usize; 6] = [1, 2, 3, 4, 6, 7];
+
+#[derive(Debug, Clone)]
+pub struct LoraState {
+    /// `adapters[l]` = the 12 tensors (aq,bq,...,a2,b2) of layer `l`.
+    pub adapters: Vec<Vec<HostTensor>>,
+    pub rank: usize,
+    pub alpha: f64,
+}
+
+impl LoraState {
+    /// A ~ N(0, 1/r), B = 0 (the reference init: ΔW = 0 at step 0).
+    pub fn init(m: &Manifest, rng: &mut crate::util::rng::Rng) -> LoraState {
+        let std = 1.0 / (m.lora_rank as f32);
+        let mut adapters = Vec::with_capacity(m.n_layers);
+        for _ in 0..m.n_layers {
+            let mut layer = Vec::with_capacity(m.lora_params.len());
+            for (name, shape) in &m.lora_params {
+                let mut t = HostTensor::zeros(shape);
+                if name.starts_with('a') {
+                    rng.fill_normal(&mut t.data, std);
+                }
+                layer.push(t);
+            }
+            adapters.push(layer);
+        }
+        LoraState { adapters, rank: m.lora_rank, alpha: m.lora_alpha }
+    }
+
+    pub fn scaling(&self) -> f32 {
+        (self.alpha / self.rank as f64) as f32
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.adapters.iter().flatten().map(|t| t.numel()).sum()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.n_params() * 4) as u64
+    }
+
+    /// Merge adapters back into the base weights (LoRA's deploy move):
+    /// `W += scale * A @ B` for each adapted linear.
+    pub fn merge_into(&self, params: &mut ModelParams) {
+        let s = self.scaling();
+        for (l, layer) in self.adapters.iter().enumerate() {
+            for (pair, &target) in ADAPTER_TARGETS.iter().enumerate() {
+                let a = &layer[2 * pair];
+                let b = &layer[2 * pair + 1];
+                let (din, r) = (a.shape[0], a.shape[1]);
+                let dout = b.shape[1];
+                let delta = matmul_nn(&a.data, &b.data, din, r, dout);
+                let w = &mut params.blocks[l][target];
+                assert_eq!(w.shape, vec![din, dout]);
+                for (wi, di) in w.data.iter_mut().zip(&delta) {
+                    *wi += s * di;
+                }
+            }
+        }
+    }
+}
+
+/// Adapter gradients: `grads[l]` mirrors `LoraState.adapters[l]`.
+pub type LoraGrads = Vec<Vec<HostTensor>>;
+
+pub fn lora_grads_bytes(g: &LoraGrads) -> u64 {
+    g.iter().flatten().map(|t| t.bytes() as u64).sum()
+}
+
+pub fn lora_grads_add_assign(a: &mut LoraGrads, b: &LoraGrads) {
+    assert_eq!(a.len(), b.len());
+    for (la, lb) in a.iter_mut().zip(b) {
+        for (x, y) in la.iter_mut().zip(lb) {
+            x.add_assign(y);
+        }
+    }
+}
+
+pub fn lora_grads_scale(g: &mut LoraGrads, s: f32) {
+    for layer in g.iter_mut() {
+        for t in layer {
+            t.scale(s);
+        }
+    }
+}
+
+/// LoRA forward + backward over the whole model (base weights and
+/// embed/head frozen; returns loss + adapter grads).
+pub fn forward_backward_lora(
+    eng: &mut Engine,
+    params: &ModelParams,
+    lora: &LoraState,
+    batch: &Batch,
+) -> Result<(f32, LoraGrads)> {
+    let m = eng.rt.manifest.clone();
+    let hs = vec![m.batch, m.seq, m.d_model];
+    eng.meter.set(MemCategory::Params, params.bytes() as u64);
+    eng.meter.set(MemCategory::LoraAdapters, lora.bytes());
+
+    // Forward, stashing block inputs.
+    let out = eng.run_raw(
+        "embed_fwd",
+        &[Operand::I32(&batch.tokens), Operand::F32(&params.emb), Operand::F32(&params.pos)],
+    )?;
+    let mut h = HostTensor::from_literal(&out[0], &hs)?;
+    let mut stash = Vec::with_capacity(m.n_layers);
+    let mut act = 0u64;
+    for l in 0..m.n_layers {
+        act += h.bytes() as u64;
+        eng.meter.set(MemCategory::Activations, act);
+        let mut ops = vec![Operand::F32(&h)];
+        ops.extend(params.blocks[l].iter().map(Operand::F32));
+        ops.extend(lora.adapters[l].iter().map(Operand::F32));
+        let out = eng.run_raw("block_fwd_lora", &ops)?;
+        let h_next = HostTensor::from_literal(&out[0], &hs)?;
+        stash.push(h);
+        h = h_next;
+    }
+
+    // Frozen head: loss + dh only.
+    let outs = eng.run_raw(
+        "head_fwd_bwd_x",
+        &[
+            Operand::F32(&h),
+            Operand::F32(&params.gf),
+            Operand::F32(&params.wh),
+            Operand::I32(&batch.targets),
+        ],
+    )?;
+    let loss = HostTensor::scalar_from_literal(&outs[0])?;
+    let mut dh = HostTensor::from_literal(&outs[1], &hs)?;
+
+    // Backward: adapter grads in every block; stop after block 0 (embedding
+    // is frozen in LoRA mode, so d(embed) is never needed).
+    let mut grads: LoraGrads = Vec::with_capacity(m.n_layers);
+    grads.resize_with(m.n_layers, Vec::new);
+    let mut grad_bytes = 0u64;
+    for l in (0..m.n_layers).rev() {
+        let mut ops = vec![Operand::F32(&dh), Operand::F32(&stash[l])];
+        ops.extend(params.blocks[l].iter().map(Operand::F32));
+        ops.extend(lora.adapters[l].iter().map(Operand::F32));
+        let outs = eng.run_raw("block_bwd_lora", &ops)?;
+        dh = HostTensor::from_literal(&outs[0], &hs)?;
+        let mut layer_grads = Vec::with_capacity(m.lora_params.len());
+        for (o, (_, shape)) in outs[1..].iter().zip(&m.lora_params) {
+            layer_grads.push(HostTensor::from_literal(o, shape)?);
+        }
+        grad_bytes += layer_grads.iter().map(|t| t.bytes() as u64).sum::<u64>();
+        eng.meter.set(MemCategory::Grads, grad_bytes);
+        grads[l] = layer_grads;
+    }
+    eng.meter.set(MemCategory::Activations, 0);
+    Ok((loss, grads))
+}
+
+/// Apply adapter gradients with AdamW (every adapter is a decayed matrix).
+pub fn apply_lora_grads(opt: &mut AdamW, lora: &mut LoraState, grads: &LoraGrads) {
+    for (l, (layer, gs)) in lora.adapters.iter_mut().zip(grads).enumerate() {
+        for (t, (a, g)) in layer.iter_mut().zip(gs).enumerate() {
+            opt.step(ParamKey::Lora(l, t), true, &mut a.data, &g.data);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::path::Path;
+
+    fn tiny_manifest() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn init_b_zero_a_nonzero() {
+        let Some(m) = tiny_manifest() else { return };
+        let lora = LoraState::init(&m, &mut Rng::new(1));
+        // even indices are A (nonzero), odd are B (zero)
+        assert!(lora.adapters[0][0].data.iter().any(|&x| x != 0.0));
+        assert!(lora.adapters[0][1].data.iter().all(|&x| x == 0.0));
+        assert_eq!(lora.adapters.len(), m.n_layers);
+    }
+
+    #[test]
+    fn merge_with_zero_b_is_identity() {
+        let Some(m) = tiny_manifest() else { return };
+        let mut rng = Rng::new(2);
+        let mut params = ModelParams::init(&m, &mut rng);
+        let before = params.blocks[0][1].data.clone();
+        let lora = LoraState::init(&m, &mut rng);
+        lora.merge_into(&mut params);
+        assert_eq!(params.blocks[0][1].data, before);
+    }
+
+    #[test]
+    fn merge_applies_scaled_delta() {
+        let Some(m) = tiny_manifest() else { return };
+        let mut rng = Rng::new(3);
+        let mut params = ModelParams::init(&m, &mut rng);
+        let mut lora = LoraState::init(&m, &mut rng);
+        // set B = 1 everywhere for layer 0, pair 0 (wq)
+        lora.adapters[0][1].fill(1.0);
+        let before = params.blocks[0][1].data.clone();
+        lora.merge_into(&mut params);
+        let after = &params.blocks[0][1].data;
+        let changed = after.iter().zip(&before).filter(|(a, b)| a != b).count();
+        assert!(changed > 0, "merge must change wq");
+        // other layers untouched
+        assert_eq!(params.blocks[1][1].data,
+                   ModelParams::init(&m, &mut Rng::new(3)).blocks[1][1].data);
+    }
+
+    #[test]
+    fn grad_helpers() {
+        let g1: LoraGrads = vec![vec![HostTensor::from_vec(&[2], vec![1.0, 2.0])]];
+        let mut g2 = g1.clone();
+        lora_grads_add_assign(&mut g2, &g1);
+        lora_grads_scale(&mut g2, 0.5);
+        assert_eq!(g2[0][0].data, vec![1.0, 2.0]);
+        assert_eq!(lora_grads_bytes(&g2), 8);
+    }
+}

@@ -1,0 +1,187 @@
+//! `lisa` — the coordinator CLI.
+//!
+//! ```text
+//! lisa train  --config small --method lisa --steps 120 ...   one training run
+//! lisa exp <id> [--config C] [--scale 0.5]                   reproduce a paper table/figure
+//! lisa exp list                                              list experiment ids
+//! lisa exp all                                               the full reproduction suite
+//! lisa memory                                                Table-1 memory grid only
+//! lisa info --config small                                   manifest/artifact info
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Result};
+
+use lisa::data::{corpus, encode_sft, split_train_val, DataLoader, Tokenizer};
+use lisa::exp::{self, Ctx};
+use lisa::lisa::LisaConfig;
+use lisa::opt::{GaloreHp, StatePolicy};
+use lisa::train::{Method, TrainConfig, TrainSession};
+use lisa::util::cli::Args;
+
+const SPEC: &[(&str, &str, &str)] = &[
+    ("config", "", "model config (tiny|small|base|e2e100m)"),
+    ("artifacts", "artifacts", "artifacts root directory"),
+    ("results", "results", "results output directory"),
+    ("backend", "pallas", "kernel backend artifacts to load (pallas|jnp)"),
+    ("method", "lisa", "train: vanilla|ft|lisa|lora|galore"),
+    ("steps", "", "training steps (experiment default if empty)"),
+    ("lr", "", "learning rate (method default if empty)"),
+    ("gamma", "2", "LISA: sampled intermediate layers γ"),
+    ("period", "10", "LISA: sampling period K"),
+    ("lisa-state", "keep", "LISA optimizer-state policy on refreeze: keep|drop"),
+    ("galore-rank", "16", "GaLore projection rank"),
+    ("grad-accum", "1", "microbatch accumulation"),
+    ("seed", "42", "master seed"),
+    ("scale", "1.0", "experiment step-budget multiplier"),
+    ("samples", "480", "train: corpus size"),
+    ("eval", "true", "train: evaluate on the val split afterwards"),
+];
+
+fn parse_method(a: &Args) -> Result<Method> {
+    Ok(match a.get("method").as_str() {
+        "vanilla" => Method::Vanilla,
+        "ft" | "full" => Method::Full,
+        "lora" => Method::Lora,
+        "galore" => Method::Galore(GaloreHp {
+            rank: a.get_usize("galore-rank")?,
+            update_proj_gap: 50,
+            scale: 1.0,
+            ..Default::default()
+        }),
+        "lisa" => Method::Lisa(LisaConfig::paper(
+            a.get_usize("gamma")?,
+            a.get_usize("period")?,
+        )),
+        other => bail!("unknown method '{other}'"),
+    })
+}
+
+fn ctx_from(a: &Args) -> Ctx {
+    Ctx {
+        artifacts: PathBuf::from(a.get("artifacts")),
+        results: PathBuf::from(a.get("results")),
+        backend: a.get("backend"),
+        scale: a.get_f64("scale").unwrap_or(1.0),
+        seed: a.get_u64("seed").unwrap_or(42),
+    }
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let ctx = ctx_from(a);
+    let config = a.get_opt("config").unwrap_or_else(|| "small".into());
+    let rt = ctx.runtime(&config)?;
+    let m = rt.manifest.clone();
+    let method = parse_method(a)?;
+    let steps = a.get_opt("steps").map(|s| s.parse()).transpose()?.unwrap_or(100);
+    let lr = a
+        .get_opt("lr")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or_else(|| exp::common::default_lr(&method));
+    let cfg = TrainConfig {
+        steps,
+        lr,
+        grad_accum: a.get_usize("grad-accum")?,
+        seed: ctx.seed,
+        state_policy: if a.get("lisa-state") == "drop" {
+            StatePolicy::Drop
+        } else {
+            StatePolicy::Keep
+        },
+        ..Default::default()
+    };
+
+    let samples = corpus::gen_instruction_corpus(a.get_usize("samples")?, ctx.seed);
+    let tok = Tokenizer::build(&corpus::sample_texts(&samples), m.vocab);
+    let (tr, va) = split_train_val(&samples, 0.1, ctx.seed ^ 0x517);
+    let enc_tr: Vec<_> = tr.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
+    let enc_va: Vec<_> = va.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
+    let mut train_dl = DataLoader::new(enc_tr, m.batch, m.seq, ctx.seed);
+    let val_dl = DataLoader::new(enc_va, m.batch, m.seq, ctx.seed);
+
+    let mut sess = TrainSession::new(&rt, method, cfg);
+    let res = sess.run(&mut train_dl)?;
+    println!(
+        "done: final train loss {:.4}, median {:.0} ms/step, peak mem {}",
+        res.final_train_loss,
+        res.median_step_ms(),
+        lisa::util::table::human_bytes(res.peak_mem)
+    );
+    if a.get_bool("eval") {
+        let params = sess.eval_params();
+        let rep = lisa::eval::evaluate(&mut sess.engine, &params, &val_dl)?;
+        println!(
+            "val: loss {:.4} ppl {:.2} token-acc {:.3} exact-match {:.3}",
+            rep.loss, rep.ppl, rep.token_acc, rep.exact_match
+        );
+    }
+    Ok(())
+}
+
+fn real_main() -> Result<()> {
+    lisa::util::logger::init();
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let a = Args::parse(&raw, SPEC)?;
+    if a.wants_help() || a.positional.is_empty() {
+        print!("{}", a.help("lisa <train|exp|memory|info> [options]"));
+        println!("\nexperiments:");
+        exp::list();
+        return Ok(());
+    }
+    match a.positional[0].as_str() {
+        "train" => cmd_train(&a),
+        "exp" => {
+            let id = a.positional.get(1).map(|s| s.as_str()).unwrap_or("list");
+            if id == "list" {
+                exp::list();
+                return Ok(());
+            }
+            let ctx = ctx_from(&a);
+            let steps = a.get_opt("steps").map(|s| s.parse()).transpose()?;
+            let cfg_override = a.get_opt("config");
+            exp::run(&ctx, id, cfg_override.as_deref(), steps)
+        }
+        "memory" => {
+            let ctx = ctx_from(&a);
+            let cfg = a.get_opt("config").unwrap_or_else(|| "tiny".into());
+            exp::perfmem::tab1_memory(&ctx, &cfg)?;
+            exp::perfmem::fig3_memory(&ctx, &cfg)
+        }
+        "info" => {
+            let ctx = ctx_from(&a);
+            let cfg = a.get_opt("config").unwrap_or_else(|| "small".into());
+            let rt = ctx.runtime(&cfg)?;
+            let m = &rt.manifest;
+            println!(
+                "config {}: {:.2}M params, d_model={} layers={} heads={} vocab={} seq={} batch={}",
+                m.name,
+                m.n_params as f64 / 1e6,
+                m.d_model,
+                m.n_layers,
+                m.n_heads,
+                m.vocab,
+                m.seq,
+                m.batch
+            );
+            println!("segments ({}):", m.segments.len());
+            for (k, s) in &m.segments {
+                println!("  {k:<28} {} operands -> {} outputs", s.operands.len(), s.outputs.len());
+            }
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try --help)"),
+    }
+}
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Checkpointing: a small self-describing binary format (no serde in the
+//! image). Layout:
+//!
+//! ```text
+//! magic "LISAckpt" | u32 version | u32 n_tensors
+//! per tensor: u32 name_len | name bytes | u32 rank | u64 dims[rank]
+//!             | f32 data[numel]
+//! ```
+//!
+//! Little-endian throughout. Used by the continual-pretraining pipeline
+//! (Table 4: CPT checkpoint -> fine-tune) and the e2e example.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::HostTensor;
+
+use super::params::ModelParams;
+
+const MAGIC: &[u8; 8] = b"LISAckpt";
+const VERSION: u32 = 1;
+
+pub fn save_tensors(path: &Path, tensors: &[(String, &HostTensor)]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+        };
+        f.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+pub fn load_tensors(path: &Path) -> Result<BTreeMap<String, HostTensor>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a LISA checkpoint", path.display());
+    }
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    let version = u32::from_le_bytes(u32buf);
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    f.read_exact(&mut u32buf)?;
+    let n = u32::from_le_bytes(u32buf) as usize;
+
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        f.read_exact(&mut u32buf)?;
+        let name_len = u32::from_le_bytes(u32buf) as usize;
+        if name_len > 4096 {
+            bail!("corrupt checkpoint: name_len={name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name not utf8")?;
+        f.read_exact(&mut u32buf)?;
+        let rank = u32::from_le_bytes(u32buf) as usize;
+        if rank > 8 {
+            bail!("corrupt checkpoint: rank={rank}");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        let mut u64buf = [0u8; 8];
+        for _ in 0..rank {
+            f.read_exact(&mut u64buf)?;
+            shape.push(u64::from_le_bytes(u64buf) as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut data = vec![0f32; numel];
+        let bytes: &mut [u8] = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4)
+        };
+        f.read_exact(bytes)?;
+        out.insert(name, HostTensor { shape, data });
+    }
+    Ok(out)
+}
+
+/// Canonical tensor naming for a full model checkpoint.
+fn model_tensor_list(p: &ModelParams) -> Vec<(String, &HostTensor)> {
+    let mut v: Vec<(String, &HostTensor)> = vec![
+        ("emb".into(), &p.emb),
+        ("pos".into(), &p.pos),
+        ("gf".into(), &p.gf),
+        ("wh".into(), &p.wh),
+    ];
+    for (l, layer) in p.blocks.iter().enumerate() {
+        for (t, x) in layer.iter().enumerate() {
+            v.push((format!("block.{l}.{t}"), x));
+        }
+    }
+    v
+}
+
+pub fn save_model(path: &Path, p: &ModelParams) -> Result<()> {
+    save_tensors(path, &model_tensor_list(p))
+}
+
+pub fn load_model(path: &Path, into: &mut ModelParams) -> Result<()> {
+    let mut tensors = load_tensors(path)?;
+    let mut take = |name: &str, dst: &mut HostTensor| -> Result<()> {
+        let t = tensors
+            .remove(name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing tensor '{name}'"))?;
+        if t.shape != dst.shape {
+            bail!("tensor '{name}': shape {:?} != expected {:?}", t.shape, dst.shape);
+        }
+        *dst = t;
+        Ok(())
+    };
+    take("emb", &mut into.emb)?;
+    take("pos", &mut into.pos)?;
+    take("gf", &mut into.gf)?;
+    take("wh", &mut into.wh)?;
+    for l in 0..into.blocks.len() {
+        for t in 0..into.blocks[l].len() {
+            let name = format!("block.{l}.{t}");
+            let x = tensors
+                .remove(&name)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint missing tensor '{name}'"))?;
+            if x.shape != into.blocks[l][t].shape {
+                bail!("tensor '{name}': shape mismatch");
+            }
+            into.blocks[l][t] = x;
+        }
+    }
+    if !tensors.is_empty() {
+        bail!("checkpoint has {} unexpected tensors", tensors.len());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip() {
+        let dir = std::env::temp_dir().join("lisa_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        let a = HostTensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = HostTensor::from_vec(&[4], vec![9.0; 4]);
+        save_tensors(&path, &[("a".into(), &a), ("b".into(), &b)]).unwrap();
+        let m = load_tensors(&path).unwrap();
+        assert_eq!(m["a"], a);
+        assert_eq!(m["b"], b);
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join("lisa_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load_tensors(&path).is_err());
+    }
+}

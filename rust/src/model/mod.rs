@@ -1,0 +1,8 @@
+//! Model-side state owned by the coordinator: parameter store, init,
+//! checkpointing. The architecture itself lives in the AOT artifacts; this
+//! module only knows shapes (from the manifest) and bytes.
+
+pub mod checkpoint;
+pub mod params;
+
+pub use params::{ModelParams, ParamKey};

@@ -1,0 +1,198 @@
+//! Parameter store: every tensor of the transformer, host-side, in the ABI
+//! order the artifacts expect (see `ModelConfig.block_param_shapes` /
+//! `manifest.json`).
+
+
+
+use crate::runtime::{HostTensor, Manifest};
+use crate::util::rng::Rng;
+
+/// Identifies one parameter tensor; the optimizer keys its state on this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ParamKey {
+    Emb,
+    Pos,
+    /// (layer index, tensor index within the block ABI order)
+    Block(usize, usize),
+    /// LoRA adapter: (layer index, adapter index within the LoRA ABI order)
+    Lora(usize, usize),
+    HeadNorm,
+    HeadProj,
+}
+
+impl ParamKey {
+    /// True for tensors that receive weight decay (matrices only — norm
+    /// gains and embeddings are excluded, the standard AdamW convention).
+    pub fn decayed(&self, block_param_names: &[(String, Vec<usize>)]) -> bool {
+        match self {
+            ParamKey::Emb | ParamKey::Pos | ParamKey::HeadNorm => false,
+            ParamKey::HeadProj => true,
+            ParamKey::Lora(..) => true,
+            ParamKey::Block(_, t) => block_param_names
+                .get(*t)
+                .map(|(_, shape)| shape.len() > 1)
+                .unwrap_or(false),
+        }
+    }
+}
+
+/// All trainable tensors of one model instance.
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    pub emb: HostTensor,
+    pub pos: HostTensor,
+    /// `blocks[l]` holds the block-ABI-ordered tensors of layer `l`.
+    pub blocks: Vec<Vec<HostTensor>>,
+    pub gf: HostTensor,
+    pub wh: HostTensor,
+}
+
+impl ModelParams {
+    /// GPT-2-style init: N(0, 0.02) embeddings and matrices, unit norm
+    /// gains, residual-out projections (wo, w2) scaled by 1/sqrt(2L).
+    pub fn init(m: &Manifest, rng: &mut Rng) -> ModelParams {
+        let std = 0.02f32;
+        let resid_scale = 1.0 / ((2 * m.n_layers) as f32).sqrt();
+
+        let mut emb = HostTensor::zeros(&[m.vocab, m.d_model]);
+        rng.fill_normal(&mut emb.data, std);
+        let mut pos = HostTensor::zeros(&[m.seq, m.d_model]);
+        rng.fill_normal(&mut pos.data, std * 0.5);
+
+        let mut blocks = Vec::with_capacity(m.n_layers);
+        for _ in 0..m.n_layers {
+            let mut layer = Vec::with_capacity(m.block_params.len());
+            for (name, shape) in &m.block_params {
+                let mut t = HostTensor::zeros(shape);
+                match name.as_str() {
+                    "g1" | "g2" => t.fill(1.0),
+                    "wo" | "w2" => rng.fill_normal(&mut t.data, std * resid_scale),
+                    _ => rng.fill_normal(&mut t.data, std),
+                }
+                layer.push(t);
+            }
+            blocks.push(layer);
+        }
+
+        let mut gf = HostTensor::zeros(&[m.d_model]);
+        gf.fill(1.0);
+        let mut wh = HostTensor::zeros(&[m.d_model, m.vocab]);
+        rng.fill_normal(&mut wh.data, std);
+
+        ModelParams { emb, pos, blocks, gf, wh }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.iter().map(|(_, t)| t.numel()).sum()
+    }
+
+    /// Total parameter bytes (f32).
+    pub fn bytes(&self) -> usize {
+        self.n_params() * 4
+    }
+
+    /// Iterate every tensor with its key (immutable).
+    pub fn iter(&self) -> impl Iterator<Item = (ParamKey, &HostTensor)> {
+        let blocks = self
+            .blocks
+            .iter()
+            .enumerate()
+            .flat_map(|(l, ts)| {
+                ts.iter().enumerate().map(move |(t, x)| (ParamKey::Block(l, t), x))
+            });
+        [(ParamKey::Emb, &self.emb), (ParamKey::Pos, &self.pos)]
+            .into_iter()
+            .chain(blocks)
+            .chain([(ParamKey::HeadNorm, &self.gf), (ParamKey::HeadProj, &self.wh)])
+    }
+
+    pub fn get_mut(&mut self, key: ParamKey) -> &mut HostTensor {
+        match key {
+            ParamKey::Emb => &mut self.emb,
+            ParamKey::Pos => &mut self.pos,
+            ParamKey::Block(l, t) => &mut self.blocks[l][t],
+            ParamKey::HeadNorm => &mut self.gf,
+            ParamKey::HeadProj => &mut self.wh,
+            ParamKey::Lora(..) => panic!("LoRA adapters live in lora::LoraState"),
+        }
+    }
+
+    /// Mean per-layer weight norm, the Fig 2 / Fig 12 observable:
+    /// index 0 = embedding, 1..=L = blocks, L+1 = head.
+    pub fn layer_weight_norms(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.blocks.len() + 2);
+        out.push(self.emb.l2_norm());
+        for layer in &self.blocks {
+            let norm: f64 = layer.iter().map(|t| t.l2_norm().powi(2)).sum::<f64>().sqrt();
+            out.push(norm);
+        }
+        out.push(self.wh.l2_norm());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::Manifest;
+    use std::path::Path;
+
+    fn tiny_manifest() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn init_matches_manifest_count() {
+        let Some(m) = tiny_manifest() else { return };
+        let mut rng = Rng::new(1);
+        let p = ModelParams::init(&m, &mut rng);
+        assert_eq!(p.n_params(), m.n_params, "init count vs aot.py count");
+        assert_eq!(p.n_layers(), m.n_layers);
+    }
+
+    #[test]
+    fn init_is_seed_deterministic() {
+        let Some(m) = tiny_manifest() else { return };
+        let a = ModelParams::init(&m, &mut Rng::new(9));
+        let b = ModelParams::init(&m, &mut Rng::new(9));
+        assert_eq!(a.emb.data, b.emb.data);
+        assert_eq!(a.blocks[1][3].data, b.blocks[1][3].data);
+    }
+
+    #[test]
+    fn norm_gains_are_ones() {
+        let Some(m) = tiny_manifest() else { return };
+        let p = ModelParams::init(&m, &mut Rng::new(2));
+        // g1 is ABI index 0, g2 index 5
+        assert!(p.blocks[0][0].data.iter().all(|&x| x == 1.0));
+        assert!(p.blocks[0][5].data.iter().all(|&x| x == 1.0));
+        assert!(p.gf.data.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn weight_norms_shape() {
+        let Some(m) = tiny_manifest() else { return };
+        let p = ModelParams::init(&m, &mut Rng::new(2));
+        let norms = p.layer_weight_norms();
+        assert_eq!(norms.len(), m.n_layers + 2);
+        assert!(norms.iter().all(|&n| n > 0.0));
+    }
+
+    #[test]
+    fn decay_policy() {
+        let names = vec![
+            ("g1".to_string(), vec![8usize]),
+            ("wq".to_string(), vec![8, 8]),
+        ];
+        assert!(!ParamKey::Emb.decayed(&names));
+        assert!(!ParamKey::Block(0, 0).decayed(&names));
+        assert!(ParamKey::Block(0, 1).decayed(&names));
+        assert!(ParamKey::HeadProj.decayed(&names));
+    }
+}

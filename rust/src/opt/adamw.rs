@@ -1,0 +1,254 @@
+//! AdamW (Loshchilov & Hutter, decoupled weight decay) over host tensors —
+//! the production optimizer of the coordinator (the fused Pallas variant is
+//! the `adamw_update` artifact, compared in EXPERIMENTS.md §Perf).
+//!
+//! State is allocated *lazily per parameter key*: with LISA only the
+//! currently-unfrozen blocks (plus embed/head) ever hold moments, which is
+//! exactly the paper's memory claim. Two policies for re-frozen blocks:
+//!
+//! * `StatePolicy::Keep` — moments persist across sampling periods (what
+//!   LMFlow's published LISA implementation does);
+//! * `StatePolicy::Drop` — moments are freed when a block is re-frozen (the
+//!   paper's Table-1 memory arithmetic).
+
+use std::collections::BTreeMap;
+
+use crate::model::ParamKey;
+use crate::util::threadpool;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatePolicy {
+    Keep,
+    Drop,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdamHp {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamHp {
+    fn default() -> Self {
+        AdamHp { lr: 1e-4, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.01 }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Slot {
+    t: u64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+#[derive(Debug)]
+pub struct AdamW {
+    pub hp: AdamHp,
+    pub policy: StatePolicy,
+    /// Threads for the elementwise update (1 = serial).
+    pub workers: usize,
+    state: BTreeMap<ParamKey, Slot>,
+}
+
+/// Serial fused update over one chunk. `t` is the 1-based step for this
+/// tensor (bias correction is per-tensor: a freshly-unfrozen block starts
+/// its schedule at t=1, matching a fresh optimizer state).
+#[inline]
+pub fn adamw_chunk(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    hp: &AdamHp,
+    decay: bool,
+    t: u64,
+) {
+    let b1 = hp.beta1;
+    let b2 = hp.beta2;
+    let bc1 = 1.0 - b1.powi(t as i32);
+    let bc2 = 1.0 - b2.powi(t as i32);
+    let wd = if decay { hp.weight_decay } else { 0.0 };
+    let lr = hp.lr;
+    let eps = hp.eps;
+    for i in 0..p.len() {
+        let gi = g[i];
+        let mi = b1 * m[i] + (1.0 - b1) * gi;
+        let vi = b2 * v[i] + (1.0 - b2) * gi * gi;
+        m[i] = mi;
+        v[i] = vi;
+        let mhat = mi / bc1;
+        let vhat = vi / bc2;
+        p[i] -= lr * (mhat / (vhat.sqrt() + eps) + wd * p[i]);
+    }
+}
+
+impl AdamW {
+    pub fn new(hp: AdamHp, policy: StatePolicy) -> Self {
+        AdamW { hp, policy, workers: 1, state: BTreeMap::new() }
+    }
+
+    /// One update for one tensor. Allocates state lazily on first touch.
+    pub fn step(&mut self, key: ParamKey, decay: bool, p: &mut [f32], g: &[f32]) {
+        assert_eq!(p.len(), g.len(), "param/grad length mismatch for {key:?}");
+        let slot = self.state.entry(key).or_insert_with(|| Slot {
+            t: 0,
+            m: vec![0.0; p.len()],
+            v: vec![0.0; p.len()],
+        });
+        slot.t += 1;
+        let t = slot.t;
+        if self.workers <= 1 || p.len() < 1 << 16 {
+            adamw_chunk(p, g, &mut slot.m, &mut slot.v, &self.hp, decay, t);
+        } else {
+            // Split p/g/m/v into aligned disjoint chunks across threads.
+            let parts = threadpool::chunks(p.len(), self.workers);
+            let hp = self.hp;
+            std::thread::scope(|scope| {
+                let mut pr = &mut p[..];
+                let mut gr = &g[..];
+                let mut mr = &mut slot.m[..];
+                let mut vr = &mut slot.v[..];
+                for (_, len) in parts {
+                    let (ph, pt) = pr.split_at_mut(len);
+                    let (gh, gt) = gr.split_at(len);
+                    let (mh, mt) = mr.split_at_mut(len);
+                    let (vh, vt) = vr.split_at_mut(len);
+                    scope.spawn(move || adamw_chunk(ph, gh, mh, vh, &hp, decay, t));
+                    pr = pt;
+                    gr = gt;
+                    mr = mt;
+                    vr = vt;
+                }
+            });
+        }
+    }
+
+    /// Enforce the state policy after a resample: keep only `live` keys
+    /// (plus any non-block keys) under `Drop`.
+    pub fn retain_blocks(&mut self, live: &[usize]) {
+        if self.policy == StatePolicy::Keep {
+            return;
+        }
+        self.state.retain(|k, _| match k {
+            ParamKey::Block(l, _) => live.contains(l),
+            _ => true,
+        });
+    }
+
+    /// Bytes held by optimizer moments (2 f32 per parameter with state).
+    pub fn state_bytes(&self) -> u64 {
+        self.state
+            .values()
+            .map(|s| (s.m.len() + s.v.len()) as u64 * 4)
+            .sum()
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.state.len()
+    }
+
+    /// Step count recorded for a key (diagnostics).
+    pub fn steps_of(&self, key: ParamKey) -> u64 {
+        self.state.get(&key).map(|s| s.t).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f32, b: f32) -> bool {
+        (a - b).abs() <= 1e-6 + 1e-5 * b.abs()
+    }
+
+    /// Hand-computed single-element AdamW step.
+    #[test]
+    fn matches_hand_computation() {
+        let hp = AdamHp { lr: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 };
+        let mut o = AdamW::new(hp, StatePolicy::Keep);
+        let mut p = [1.0f32];
+        o.step(ParamKey::Emb, false, &mut p, &[0.5]);
+        // t=1: m=0.05, v=0.00025; mhat=0.5, vhat=0.25; upd = 0.1*0.5/(0.5+1e-8)
+        assert!(close(p[0], 1.0 - 0.1 * 0.5 / (0.25f32.sqrt() + 1e-8)), "p={}", p[0]);
+    }
+
+    #[test]
+    fn weight_decay_is_decoupled() {
+        let hp = AdamHp { lr: 0.1, weight_decay: 0.5, ..Default::default() };
+        let mut o = AdamW::new(hp, StatePolicy::Keep);
+        let mut p = [2.0f32];
+        // zero gradient: only decay acts: p -= lr * wd * p
+        o.step(ParamKey::Emb, true, &mut p, &[0.0]);
+        assert!(close(p[0], 2.0 - 0.1 * 0.5 * 2.0), "p={}", p[0]);
+        // decay disabled for non-decayed tensors
+        let mut q = [2.0f32];
+        o.step(ParamKey::Pos, false, &mut q, &[0.0]);
+        assert_eq!(q[0], 2.0);
+    }
+
+    #[test]
+    fn lazy_state_and_drop_policy() {
+        let mut o = AdamW::new(AdamHp::default(), StatePolicy::Drop);
+        assert_eq!(o.state_bytes(), 0);
+        let mut p = vec![1.0f32; 100];
+        let g = vec![0.1f32; 100];
+        o.step(ParamKey::Block(3, 0), true, &mut p, &g);
+        o.step(ParamKey::Block(5, 0), true, &mut p, &g);
+        o.step(ParamKey::Emb, false, &mut p, &g);
+        assert_eq!(o.state_bytes(), 3 * 200 * 4);
+        o.retain_blocks(&[5]);
+        // block 3 dropped; embed kept (non-block state survives Drop)
+        assert_eq!(o.n_slots(), 2);
+        assert_eq!(o.steps_of(ParamKey::Block(3, 0)), 0);
+        assert_eq!(o.steps_of(ParamKey::Block(5, 0)), 1);
+    }
+
+    #[test]
+    fn keep_policy_preserves_state() {
+        let mut o = AdamW::new(AdamHp::default(), StatePolicy::Keep);
+        let mut p = vec![1.0f32; 10];
+        o.step(ParamKey::Block(0, 0), true, &mut p, &vec![0.1; 10]);
+        o.retain_blocks(&[7]);
+        assert_eq!(o.steps_of(ParamKey::Block(0, 0)), 1);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let n = 200_000;
+        let mut rng = crate::util::rng::Rng::new(4);
+        let mut p1 = vec![0f32; n];
+        rng.fill_normal(&mut p1, 1.0);
+        let mut g = vec![0f32; n];
+        rng.fill_normal(&mut g, 0.1);
+        let mut p2 = p1.clone();
+
+        let hp = AdamHp::default();
+        let mut serial = AdamW::new(hp, StatePolicy::Keep);
+        serial.workers = 1;
+        let mut par = AdamW::new(hp, StatePolicy::Keep);
+        par.workers = 8;
+        for _ in 0..3 {
+            serial.step(ParamKey::Emb, true, &mut p1, &g);
+            par.step(ParamKey::Emb, true, &mut p2, &g);
+        }
+        assert_eq!(p1, p2, "parallel AdamW must be bit-identical to serial");
+    }
+
+    #[test]
+    fn descends_on_quadratic() {
+        // minimize f(p) = p^2 with gradient 2p
+        let mut o = AdamW::new(
+            AdamHp { lr: 0.05, weight_decay: 0.0, ..Default::default() },
+            StatePolicy::Keep,
+        );
+        let mut p = [3.0f32];
+        for _ in 0..300 {
+            let g = [2.0 * p[0]];
+            o.step(ParamKey::Emb, false, &mut p, &g);
+        }
+        assert!(p[0].abs() < 0.05, "did not converge: p={}", p[0]);
+    }
+}

@@ -1,0 +1,217 @@
+//! Dense f32 linear algebra for the GaLore projector (no BLAS crate in the
+//! image). Matrices are row-major `&[f32]` with explicit dims. Sizes here
+//! are small (projection ranks ≤ 64, model dims ≤ a few thousand), so a
+//! cache-blocked naive kernel is adequate; the training FLOPs live in XLA.
+
+/// c[m,n] = a[m,k] @ b[k,n]
+pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// c[k,n] = a[m,k]^T @ b[m,n]
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    let mut c = vec![0f32; k * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// c[m,k] = a[m,n] @ b[k,n]^T
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0f32; m * k];
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        for j in 0..k {
+            let brow = &b[j * n..(j + 1) * n];
+            let mut s = 0f32;
+            for (&x, &y) in arow.iter().zip(brow) {
+                s += x * y;
+            }
+            c[i * k + j] = s;
+        }
+    }
+    c
+}
+
+/// In-place modified Gram–Schmidt on the columns of q[m,r] (row-major).
+/// Degenerate columns are replaced by deterministic unit vectors.
+pub fn orthonormalize_columns(q: &mut [f32], m: usize, r: usize) {
+    assert_eq!(q.len(), m * r);
+    for j in 0..r {
+        // subtract projections on previous columns
+        for p in 0..j {
+            let mut dot = 0f32;
+            for i in 0..m {
+                dot += q[i * r + j] * q[i * r + p];
+            }
+            for i in 0..m {
+                q[i * r + j] -= dot * q[i * r + p];
+            }
+        }
+        let mut norm = 0f32;
+        for i in 0..m {
+            norm += q[i * r + j] * q[i * r + j];
+        }
+        let norm = norm.sqrt();
+        if norm > 1e-8 {
+            for i in 0..m {
+                q[i * r + j] /= norm;
+            }
+        } else {
+            // degenerate: deterministic basis vector e_{j mod m}
+            for i in 0..m {
+                q[i * r + j] = if i == j % m { 1.0 } else { 0.0 };
+            }
+            // re-orthogonalize against previous columns once
+            for p in 0..j {
+                let mut dot = 0f32;
+                for i in 0..m {
+                    dot += q[i * r + j] * q[i * r + p];
+                }
+                for i in 0..m {
+                    q[i * r + j] -= dot * q[i * r + p];
+                }
+            }
+        }
+    }
+}
+
+/// Top-`r` left-singular-subspace estimate of g[m,n] by subspace (block
+/// power) iteration on G Gᵀ. Returns P[m,r] with orthonormal columns.
+pub fn top_left_subspace(
+    g: &[f32],
+    m: usize,
+    n: usize,
+    r: usize,
+    iters: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> Vec<f32> {
+    assert!(r <= m, "rank {r} > rows {m}");
+    let mut q = vec![0f32; m * r];
+    rng.fill_normal(&mut q, 1.0);
+    orthonormalize_columns(&mut q, m, r);
+    for _ in 0..iters {
+        // z = Gᵀ q  : [n, r]
+        let z = matmul_tn(g, &q, m, n, r);
+        // q = G z   : [m, r]
+        q = matmul_nn(g, &z, m, n, r);
+        orthonormalize_columns(&mut q, m, r);
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_small_known() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let c = matmul_nn(&[1., 2., 3., 4.], &[5., 6., 7., 8.], 2, 2, 2);
+        assert_eq!(c, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn transposed_variants_agree() {
+        let mut rng = Rng::new(1);
+        let (m, k, n) = (5, 4, 3);
+        let mut a = vec![0f32; m * k];
+        let mut b = vec![0f32; k * n];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        let c = matmul_nn(&a, &b, m, k, n);
+        // aT stored as [k,m]
+        let mut at = vec![0f32; k * m];
+        for i in 0..m {
+            for j in 0..k {
+                at[j * m + i] = a[i * k + j];
+            }
+        }
+        let c2 = matmul_tn(&at, &b, k, m, n);
+        for (x, y) in c.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-4);
+        }
+        // bT stored as [n,k]
+        let mut bt = vec![0f32; n * k];
+        for i in 0..k {
+            for j in 0..n {
+                bt[j * k + i] = b[i * n + j];
+            }
+        }
+        let c3 = matmul_nt(&a, &bt, m, k, n);
+        for (x, y) in c.iter().zip(&c3) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gram_schmidt_orthonormal() {
+        let mut rng = Rng::new(2);
+        let (m, r) = (10, 4);
+        let mut q = vec![0f32; m * r];
+        rng.fill_normal(&mut q, 1.0);
+        orthonormalize_columns(&mut q, m, r);
+        for a in 0..r {
+            for b in 0..r {
+                let mut dot = 0f32;
+                for i in 0..m {
+                    dot += q[i * r + a] * q[i * r + b];
+                }
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-4, "({a},{b}) dot={dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn power_iteration_finds_dominant_subspace() {
+        // G = u1 s1 v1ᵀ + u2 s2 v2ᵀ with s1 >> s2: P should span {e0, e1}.
+        let (m, n) = (6, 8);
+        let mut g = vec![0f32; m * n];
+        for j in 0..n {
+            g[0 * n + j] = 10.0 * ((j as f32) * 0.3).sin();
+            g[1 * n + j] = 8.0 * ((j as f32) * 0.7).cos();
+            g[4 * n + j] = 0.01 * ((j as f32) * 1.3).sin();
+        }
+        let mut rng = Rng::new(3);
+        let p = top_left_subspace(&g, m, n, 2, 30, &mut rng);
+        // Projector should capture nearly all the energy of rows 0 and 1.
+        // energy of e0 within span(P): sum_j P[0,j]^2
+        let e0: f32 = (0..2).map(|j| p[0 * 2 + j] * p[0 * 2 + j]).sum();
+        let e1: f32 = (0..2).map(|j| p[1 * 2 + j] * p[1 * 2 + j]).sum();
+        assert!(e0 > 0.99, "e0={e0}");
+        assert!(e1 > 0.99, "e1={e1}");
+    }
+}

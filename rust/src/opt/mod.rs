@@ -1,0 +1,155 @@
+//! Optimizers: AdamW (production), GaLore (baseline), SGD (tests).
+
+pub mod adamw;
+pub mod galore;
+pub mod linalg;
+
+pub use adamw::{AdamHp, AdamW, StatePolicy};
+pub use galore::{Galore, GaloreHp};
+
+use crate::engine::Grads;
+use crate::model::{ModelParams, ParamKey};
+
+/// Plain SGD, used by optimizer-equivalence tests.
+#[derive(Debug, Clone, Copy)]
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Sgd {
+    pub fn step(&self, p: &mut [f32], g: &[f32]) {
+        for (pi, gi) in p.iter_mut().zip(g) {
+            *pi -= self.lr * gi;
+        }
+    }
+}
+
+/// The method-level optimizer the training loop drives: applies a `Grads`
+/// (whatever trainable subset it carries) to the model.
+pub enum Optimizer {
+    AdamW(AdamW),
+    /// GaLore routes 2-D tensors through the projector and 1-D tensors
+    /// through an internal AdamW (GaLore's reference does the same).
+    Galore { proj: Galore, aux: AdamW },
+}
+
+impl Optimizer {
+    pub fn adamw(hp: AdamHp, policy: StatePolicy) -> Self {
+        Optimizer::AdamW(AdamW::new(hp, policy))
+    }
+
+    pub fn galore(hp: GaloreHp, seed: u64) -> Self {
+        Optimizer::Galore {
+            proj: Galore::new(hp, seed),
+            aux: AdamW::new(hp.adam, StatePolicy::Keep),
+        }
+    }
+
+    pub fn set_lr(&mut self, lr: f32) {
+        match self {
+            Optimizer::AdamW(o) => o.hp.lr = lr,
+            Optimizer::Galore { proj, aux } => {
+                proj.hp.adam.lr = lr;
+                aux.hp.lr = lr;
+            }
+        }
+    }
+
+    pub fn lr(&self) -> f32 {
+        match self {
+            Optimizer::AdamW(o) => o.hp.lr,
+            Optimizer::Galore { proj, .. } => proj.hp.adam.lr,
+        }
+    }
+
+    fn step_tensor(
+        &mut self,
+        key: ParamKey,
+        decay: bool,
+        shape: &[usize],
+        p: &mut [f32],
+        g: &[f32],
+    ) {
+        match self {
+            Optimizer::AdamW(o) => o.step(key, decay, p, g),
+            Optimizer::Galore { proj, aux } => {
+                if shape.len() == 2 {
+                    proj.step_matrix(key, decay, p, g, shape[0], shape[1]);
+                } else {
+                    aux.step(key, decay, p, g);
+                }
+            }
+        }
+    }
+
+    /// Apply a gradient set to the model. Only tensors present in `grads`
+    /// move; everything else is untouched (frozen).
+    pub fn apply(&mut self, params: &mut ModelParams, grads: &Grads,
+                 block_names: &[(String, Vec<usize>)]) {
+        if let Some(g) = &grads.emb {
+            let shape = params.emb.shape.clone();
+            self.step_tensor(ParamKey::Emb, false, &shape, &mut params.emb.data, &g.data);
+        }
+        if let Some(g) = &grads.pos {
+            let shape = params.pos.shape.clone();
+            self.step_tensor(ParamKey::Pos, false, &shape, &mut params.pos.data, &g.data);
+        }
+        for (l, blk) in grads.blocks.iter().enumerate() {
+            let Some(gs) = blk else { continue };
+            for (t, g) in gs.iter().enumerate() {
+                let key = ParamKey::Block(l, t);
+                let decay = key.decayed(block_names);
+                let shape = params.blocks[l][t].shape.clone();
+                self.step_tensor(key, decay, &shape, &mut params.blocks[l][t].data, &g.data);
+            }
+        }
+        if let Some(g) = &grads.gf {
+            let shape = params.gf.shape.clone();
+            self.step_tensor(ParamKey::HeadNorm, false, &shape, &mut params.gf.data, &g.data);
+        }
+        if let Some(g) = &grads.wh {
+            let shape = params.wh.shape.clone();
+            self.step_tensor(ParamKey::HeadProj, true, &shape, &mut params.wh.data, &g.data);
+        }
+    }
+
+    /// Post-resample state policy hook (LISA `Drop` mode).
+    pub fn retain_blocks(&mut self, live: &[usize]) {
+        if let Optimizer::AdamW(o) = self {
+            o.retain_blocks(live);
+        }
+    }
+
+    pub fn state_bytes(&self) -> u64 {
+        match self {
+            Optimizer::AdamW(o) => o.state_bytes(),
+            Optimizer::Galore { proj, aux } => proj.state_bytes() + aux.state_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_descends() {
+        let sgd = Sgd { lr: 0.1 };
+        let mut p = [5.0f32];
+        for _ in 0..100 {
+            let g = [2.0 * p[0]];
+            sgd.step(&mut p, &g);
+        }
+        assert!(p[0].abs() < 1e-3);
+    }
+
+    #[test]
+    fn optimizer_lr_plumbing() {
+        let mut o = Optimizer::adamw(AdamHp::default(), StatePolicy::Keep);
+        o.set_lr(0.5);
+        assert_eq!(o.lr(), 0.5);
+        let mut g = Optimizer::galore(GaloreHp::default(), 0);
+        g.set_lr(0.25);
+        assert_eq!(g.lr(), 0.25);
+    }
+}

@@ -1,0 +1,237 @@
+//! Artifact manifest + loader: the contract between `python/compile/aot.py`
+//! and the Rust engine.
+//!
+//! Each config directory under `artifacts/` holds one `<segment>.<backend>`
+//! HLO-text module per entry in `manifest.json`. The loader validates the
+//! manifest signature against what the engine expects at call time —
+//! operand count/shape/dtype mismatches fail at load or call, never as
+//! silent garbage.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype in manifest: {other}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSig> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("sig missing shape"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(
+            j.get("dtype")
+                .and_then(|d| d.as_str())
+                .ok_or_else(|| anyhow!("sig missing dtype"))?,
+        )?;
+        Ok(TensorSig { shape, dtype })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SegmentSig {
+    pub file: String,
+    pub operands: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Parsed `manifest.json` for one model config.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub mlp_ratio: usize,
+    pub lora_rank: usize,
+    pub lora_alpha: f64,
+    pub n_params: usize,
+    /// Block parameter shapes in ABI order (g1, wq, wk, wv, wo, g2, w1, w2).
+    pub block_params: Vec<(String, Vec<usize>)>,
+    /// LoRA adapter shapes in ABI order (aq, bq, ..., a2, b2).
+    pub lora_params: Vec<(String, Vec<usize>)>,
+    /// key = "<segment>.<backend>"
+    pub segments: BTreeMap<String, SegmentSig>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let cfg = j.get("config").ok_or_else(|| anyhow!("manifest missing config"))?;
+        let us = |k: &str| -> Result<usize> {
+            cfg.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("config missing {k}"))
+        };
+
+        let named_shapes = |shapes_key: &str, names_key: &str| -> Result<Vec<(String, Vec<usize>)>> {
+            let shapes = j
+                .get(shapes_key)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("manifest missing {shapes_key}"))?;
+            let names = j
+                .get(names_key)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("manifest missing {names_key}"))?;
+            if shapes.len() != names.len() {
+                bail!("{shapes_key}/{names_key} length mismatch");
+            }
+            names
+                .iter()
+                .zip(shapes)
+                .map(|(n, s)| {
+                    let name = n.as_str().ok_or_else(|| anyhow!("bad name"))?.to_string();
+                    let dims = s
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("bad shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                        .collect::<Result<Vec<_>>>()?;
+                    Ok((name, dims))
+                })
+                .collect()
+        };
+
+        let mut segments = BTreeMap::new();
+        for (key, seg) in j
+            .get("segments")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing segments"))?
+        {
+            let file = seg
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("segment {key} missing file"))?
+                .to_string();
+            let sigs = |k: &str| -> Result<Vec<TensorSig>> {
+                seg.get(k)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("segment {key} missing {k}"))?
+                    .iter()
+                    .map(TensorSig::from_json)
+                    .collect()
+            };
+            segments.insert(
+                key.clone(),
+                SegmentSig { file, operands: sigs("operands")?, outputs: sigs("outputs")? },
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            name: cfg
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("config missing name"))?
+                .to_string(),
+            d_model: us("d_model")?,
+            n_layers: us("n_layers")?,
+            n_heads: us("n_heads")?,
+            vocab: us("vocab")?,
+            seq: us("seq")?,
+            batch: us("batch")?,
+            mlp_ratio: us("mlp_ratio")?,
+            lora_rank: us("lora_rank")?,
+            lora_alpha: cfg
+                .get("lora_alpha")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("config missing lora_alpha"))?,
+            n_params: us("n_params")?,
+            block_params: named_shapes("block_params", "block_param_names")?,
+            lora_params: named_shapes("lora_params", "lora_param_names")?,
+            segments,
+        })
+    }
+
+    pub fn segment(&self, name: &str, backend: &str) -> Result<&SegmentSig> {
+        let key = format!("{name}.{backend}");
+        self.segments
+            .get(&key)
+            .ok_or_else(|| anyhow!("manifest has no segment '{key}' (have: {:?})",
+                                   self.segments.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn hlo_path(&self, sig: &SegmentSig) -> PathBuf {
+        self.dir.join(&sig.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "config": {"name": "t", "d_model": 8, "n_layers": 2, "n_heads": 2,
+                 "vocab": 16, "seq": 4, "batch": 1, "mlp_ratio": 4,
+                 "lora_rank": 2, "lora_alpha": 4.0, "n_params": 100},
+      "block_params": [[8], [8, 8]],
+      "block_param_names": ["g1", "wq"],
+      "lora_params": [[8, 2]],
+      "lora_param_names": ["aq"],
+      "segments": {
+        "block_fwd.jnp": {
+          "file": "block_fwd.jnp.hlo.txt",
+          "operands": [{"shape": [1, 4, 8], "dtype": "float32"}],
+          "outputs": [{"shape": [1, 4, 8], "dtype": "float32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("lisa_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), MINI).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.d_model, 8);
+        assert_eq!(m.block_params[1], ("wq".to_string(), vec![8, 8]));
+        let seg = m.segment("block_fwd", "jnp").unwrap();
+        assert_eq!(seg.operands[0].shape, vec![1, 4, 8]);
+        assert_eq!(seg.operands[0].dtype, DType::F32);
+        assert!(m.segment("nope", "jnp").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let j = Json::parse(r#"{"shape": [1], "dtype": "float64"}"#).unwrap();
+        assert!(TensorSig::from_json(&j).is_err());
+    }
+}

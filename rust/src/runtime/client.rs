@@ -1,0 +1,213 @@
+//! PJRT runtime: compile HLO-text artifacts once, execute them from the
+//! training hot path.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU plugin):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`. Executables are cached per `(segment, backend)`; every
+//! execution validates operand signatures from the manifest and unwraps the
+//! `return_tuple=True` tuple the AOT exporter emits.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::artifacts::{DType, Manifest, SegmentSig};
+use super::tensor::{HostTensor, HostTensorI32};
+
+/// A training-step operand: f32 tensor, i32 tensor, or a borrowed literal.
+pub enum Operand<'a> {
+    F32(&'a HostTensor),
+    I32(&'a HostTensorI32),
+    Lit(&'a Literal),
+}
+
+/// One compiled segment + its manifest signature.
+pub struct Segment {
+    pub name: String,
+    pub sig: SegmentSig,
+    exe: PjRtLoadedExecutable,
+    client: PjRtClient,
+}
+
+impl Segment {
+    /// Execute with signature checking; returns the decomposed output tuple.
+    ///
+    /// Inputs are uploaded with `buffer_from_host_buffer` + `execute_b`
+    /// rather than `execute`: the xla crate's `execute` leaks every input
+    /// device buffer (its C shim `release()`s them and never frees —
+    /// ~1 MB/step on the tiny config, OOM at experiment scale). Owning the
+    /// input `PjRtBuffer`s on the Rust side makes Drop reclaim them.
+    pub fn run(&self, operands: &[Operand]) -> Result<Vec<Literal>> {
+        if operands.len() != self.sig.operands.len() {
+            bail!(
+                "segment {}: got {} operands, expected {}",
+                self.name,
+                operands.len(),
+                self.sig.operands.len()
+            );
+        }
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(operands.len());
+        for (i, (op, sig)) in operands.iter().zip(&self.sig.operands).enumerate() {
+            let buf = match op {
+                Operand::F32(t) => {
+                    if sig.dtype != DType::F32 || t.shape != sig.shape {
+                        bail!(
+                            "segment {} operand {i}: shape/dtype mismatch \
+                             (got f32 {:?}, want {:?} {:?})",
+                            self.name, t.shape, sig.dtype, sig.shape
+                        );
+                    }
+                    self.client
+                        .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)?
+                }
+                Operand::I32(t) => {
+                    if sig.dtype != DType::I32 || t.shape != sig.shape {
+                        bail!(
+                            "segment {} operand {i}: shape/dtype mismatch \
+                             (got i32 {:?}, want {:?} {:?})",
+                            self.name, t.shape, sig.dtype, sig.shape
+                        );
+                    }
+                    self.client
+                        .buffer_from_host_buffer::<i32>(&t.data, &t.shape, None)?
+                }
+                Operand::Lit(l) => self
+                    .client
+                    .buffer_from_host_literal(None, l)
+                    .with_context(|| format!("uploading literal operand {i}"))?,
+            };
+            bufs.push(buf);
+        }
+        let out_bufs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&bufs.iter().collect::<Vec<_>>())
+            .with_context(|| format!("executing segment {}", self.name))?;
+        drop(bufs); // reclaim input device buffers
+        let lit = out_bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of {}", self.name))?;
+        drop(out_bufs);
+        let parts = lit
+            .to_tuple()
+            .with_context(|| format!("untupling output of {}", self.name))?;
+        if parts.len() != self.sig.outputs.len() {
+            bail!(
+                "segment {}: got {} outputs, expected {}",
+                self.name,
+                parts.len(),
+                self.sig.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Convenience: run and convert every output to a HostTensor using the
+    /// manifest output shapes.
+    pub fn run_host(&self, operands: &[Operand]) -> Result<Vec<HostTensor>> {
+        let outs = self.run(operands)?;
+        outs.iter()
+            .zip(&self.sig.outputs)
+            .map(|(lit, sig)| HostTensor::from_literal(lit, &sig.shape))
+            .collect()
+    }
+}
+
+/// Cumulative per-segment execution stats (the L3 profile in §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_ns: u128,
+}
+
+/// The runtime: one PJRT CPU client + compiled segment cache.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    pub backend: String,
+    cache: RefCell<BTreeMap<String, std::rc::Rc<Segment>>>,
+    stats: RefCell<BTreeMap<String, ExecStats>>,
+}
+
+impl Runtime {
+    /// `artifacts_dir` is e.g. `artifacts/tiny`; `backend` is `pallas`/`jnp`.
+    pub fn load(artifacts_dir: &Path, backend: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "runtime: config={} platform={} devices={} backend={backend}",
+            manifest.name,
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime {
+            client,
+            manifest,
+            backend: backend.to_string(),
+            cache: RefCell::new(BTreeMap::new()),
+            stats: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Get (compiling + caching on first use) a segment executable.
+    pub fn segment(&self, name: &str) -> Result<std::rc::Rc<Segment>> {
+        if let Some(seg) = self.cache.borrow().get(name) {
+            return Ok(seg.clone());
+        }
+        let sig = self.manifest.segment(name, &self.backend)?.clone();
+        let path = self.manifest.hlo_path(&sig);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        log::debug!(
+            "compiled {name}.{} in {:.2}s",
+            self.backend,
+            t0.elapsed().as_secs_f64()
+        );
+        let seg = std::rc::Rc::new(Segment {
+            name: name.to_string(),
+            sig,
+            exe,
+            client: self.client.clone(),
+        });
+        self.cache.borrow_mut().insert(name.to_string(), seg.clone());
+        Ok(seg)
+    }
+
+    /// Execute a segment by name, with timing stats.
+    pub fn run(&self, name: &str, operands: &[Operand]) -> Result<Vec<Literal>> {
+        let seg = self.segment(name)?;
+        let t0 = Instant::now();
+        let out = seg.run(operands)?;
+        let dt = t0.elapsed().as_nanos();
+        let mut stats = self.stats.borrow_mut();
+        let e = stats.entry(name.to_string()).or_default();
+        e.calls += 1;
+        e.total_ns += dt;
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> BTreeMap<String, ExecStats> {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        self.stats.borrow_mut().clear();
+    }
+
+    /// Pre-compile a list of segments (warm start before timed runs).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.segment(n)?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime layer: load AOT HLO-text artifacts and execute them from
+//! the Rust training hot path (Python is never on this path).
+
+pub mod artifacts;
+pub mod client;
+pub mod tensor;
+
+pub use artifacts::{DType, Manifest, SegmentSig, TensorSig};
+pub use client::{ExecStats, Operand, Runtime, Segment};
+pub use tensor::{numel, HostTensor, HostTensorI32};

@@ -1,0 +1,176 @@
+//! Host-side tensors and the bridge to `xla::Literal`.
+//!
+//! The coordinator keeps all training state (parameters, optimizer moments,
+//! activation stash) as [`HostTensor`]s — plain shaped `Vec<f32>` /
+//! `Vec<i32>` buffers — and converts to/from PJRT literals at executable
+//! boundaries. Buffers are reused across steps by the engine; conversion is
+//! a memcpy, never a reshape/copy chain.
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+/// Dense float32 host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Dense int32 host tensor (token ids / targets).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostTensor { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        HostTensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostTensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Convert to an `xla::Literal` (memcpy of the raw buffer).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const u8,
+                self.data.len() * 4,
+            )
+        };
+        Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &self.shape,
+            bytes,
+        )
+        .context("creating f32 literal")
+    }
+
+    /// Read back from a literal, checking dtype and element count.
+    pub fn from_literal(lit: &Literal, shape: &[usize]) -> Result<Self> {
+        let n = numel(shape);
+        if lit.element_count() != n {
+            bail!(
+                "literal has {} elements, expected {} for shape {:?}",
+                lit.element_count(),
+                n,
+                shape
+            );
+        }
+        let data = lit.to_vec::<f32>().context("reading f32 literal")?;
+        Ok(HostTensor { shape: shape.to_vec(), data })
+    }
+
+    /// Read a scalar f32 from a rank-0/1-element literal.
+    pub fn scalar_from_literal(lit: &Literal) -> Result<f32> {
+        let v = lit.to_vec::<f32>().context("reading scalar literal")?;
+        if v.len() != 1 {
+            bail!("expected scalar literal, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    /// In-place elementwise add (gradient accumulation).
+    pub fn add_assign(&mut self, other: &HostTensor) {
+        assert_eq!(self.shape, other.shape, "add_assign shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// In-place scale (gradient averaging across microbatches).
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        crate::util::stats::l2_norm(&self.data)
+    }
+}
+
+impl HostTensorI32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostTensorI32 { shape: shape.to_vec(), data: vec![0; numel(shape)] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        HostTensorI32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const u8,
+                self.data.len() * 4,
+            )
+        };
+        Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &self.shape,
+            bytes,
+        )
+        .context("creating s32 literal")
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_numel() {
+        let t = HostTensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.numel(), 24);
+        assert_eq!(t.bytes(), 96);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn accumulate_and_scale() {
+        let mut a = HostTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = HostTensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        a.add_assign(&b);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![1.0, 1.5, 2.0, 2.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let mut a = HostTensor::zeros(&[2]);
+        a.add_assign(&HostTensor::zeros(&[3]));
+    }
+
+    // Literal round-trips are covered by integration tests (they need the
+    // PJRT shared library at runtime).
+}

@@ -1,0 +1,345 @@
+//! The training loop: ties the engine, the LISA scheduler, the optimizers
+//! and the data pipeline together — one `TrainSession` per experiment arm.
+//!
+//! Methods (the paper's comparison set):
+//! * `Vanilla` — no training (baseline rows in Tables 2/3/5)
+//! * `Full`    — full-parameter AdamW (FT)
+//! * `Lisa`    — Algorithm 1 (this paper)
+//! * `Lora`    — adapters on all linear layers
+//! * `Galore`  — rank-r gradient projection
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::{Engine, Grads, MemCategory, TrainMask};
+use crate::lisa::{LisaConfig, LisaScheduler};
+use crate::lora::{self, LoraState};
+use crate::model::ModelParams;
+use crate::opt::{AdamHp, AdamW, GaloreHp, Optimizer, StatePolicy};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub enum Method {
+    Vanilla,
+    Full,
+    Lisa(LisaConfig),
+    Lora,
+    Galore(GaloreHp),
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Vanilla => "vanilla",
+            Method::Full => "ft",
+            Method::Lisa(c) if c.fixed => "lisa-fix",
+            Method::Lisa(_) => "lisa",
+            Method::Lora => "lora",
+            Method::Galore(_) => "galore",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: usize,
+    pub grad_accum: usize,
+    pub weight_decay: f32,
+    pub max_grad_norm: Option<f64>,
+    pub seed: u64,
+    /// LISA optimizer-state policy on re-freeze (DESIGN.md §6).
+    pub state_policy: StatePolicy,
+    /// Record layerwise weight norms every N steps (0 = never) — Fig 2.
+    pub weight_norm_every: usize,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 100,
+            lr: 1e-3,
+            warmup: 10,
+            grad_accum: 1,
+            weight_decay: 0.01,
+            max_grad_norm: Some(1.0),
+            seed: 42,
+            state_policy: StatePolicy::Keep,
+            weight_norm_every: 0,
+            log_every: 20,
+        }
+    }
+}
+
+/// Everything an experiment needs afterwards.
+pub struct TrainResult {
+    pub loss_curve: Vec<(usize, f32)>,
+    /// Layerwise weight-norm trajectory: (step, norms[emb, blocks.., head]).
+    pub weight_norms: Vec<(usize, Vec<f64>)>,
+    pub peak_mem: u64,
+    pub mem_breakdown: Vec<(&'static str, u64)>,
+    pub step_times_ms: Vec<f64>,
+    pub bwd_full_calls: u64,
+    pub bwd_x_calls: u64,
+    pub bwd_skipped: u64,
+    pub final_train_loss: f32,
+}
+
+impl TrainResult {
+    pub fn mean_step_ms(&self) -> f64 {
+        crate::util::stats::mean(&self.step_times_ms)
+    }
+
+    pub fn median_step_ms(&self) -> f64 {
+        crate::util::stats::median(&self.step_times_ms)
+    }
+}
+
+/// One training arm: model + method-specific optimizer state.
+pub struct TrainSession<'rt> {
+    pub engine: Engine<'rt>,
+    pub params: ModelParams,
+    pub lora: Option<LoraState>,
+    pub method: Method,
+    pub cfg: TrainConfig,
+    optimizer: Optimizer,
+    lora_opt: Option<AdamW>,
+    scheduler: Option<LisaScheduler>,
+}
+
+impl<'rt> TrainSession<'rt> {
+    pub fn new(rt: &'rt Runtime, method: Method, cfg: TrainConfig) -> TrainSession<'rt> {
+        let mut rng = Rng::new(cfg.seed);
+        let params = ModelParams::init(&rt.manifest, &mut rng);
+        Self::with_params(rt, method, cfg, params)
+    }
+
+    /// Start from existing parameters (continual-pretraining pipelines).
+    pub fn with_params(
+        rt: &'rt Runtime,
+        method: Method,
+        cfg: TrainConfig,
+        params: ModelParams,
+    ) -> TrainSession<'rt> {
+        let hp = AdamHp { lr: cfg.lr, weight_decay: cfg.weight_decay, ..Default::default() };
+        let mut rng = Rng::new(cfg.seed ^ 0x10c4);
+        let (optimizer, lora, lora_opt, scheduler) = match &method {
+            Method::Vanilla | Method::Full => {
+                (Optimizer::adamw(hp, StatePolicy::Keep), None, None, None)
+            }
+            Method::Lisa(lc) => (
+                Optimizer::adamw(hp, cfg.state_policy),
+                None,
+                None,
+                Some(LisaScheduler::new(lc.clone(), rt.manifest.n_layers, cfg.seed ^ 0x115a)),
+            ),
+            Method::Lora => (
+                Optimizer::adamw(hp, StatePolicy::Keep),
+                Some(LoraState::init(&rt.manifest, &mut rng)),
+                Some(AdamW::new(hp, StatePolicy::Keep)),
+                None,
+            ),
+            Method::Galore(ghp) => {
+                let mut ghp = *ghp;
+                ghp.adam = hp;
+                (Optimizer::galore(ghp, cfg.seed ^ 0x6a10), None, None, None)
+            }
+        };
+        TrainSession {
+            engine: Engine::new(rt),
+            params,
+            lora,
+            method,
+            cfg,
+            optimizer,
+            lora_opt,
+            scheduler,
+        }
+    }
+
+    fn lr_at(&self, step: usize) -> f32 {
+        if self.cfg.warmup > 0 && step < self.cfg.warmup {
+            self.cfg.lr * (step + 1) as f32 / self.cfg.warmup as f32
+        } else {
+            self.cfg.lr
+        }
+    }
+
+    /// One optimizer step (with microbatch accumulation). Returns the mean
+    /// microbatch loss.
+    pub fn step(&mut self, step: usize, loader: &mut crate::data::DataLoader) -> Result<f32> {
+        let lr = self.lr_at(step);
+        self.optimizer.set_lr(lr);
+        if let Some(o) = &mut self.lora_opt {
+            o.hp.lr = lr;
+        }
+
+        let mask = match (&self.method, &mut self.scheduler) {
+            (Method::Vanilla, _) => return Ok(0.0),
+            (Method::Lisa(_), Some(sched)) => {
+                let mask = sched.mask_for_step(step);
+                // state policy: drop moments of re-frozen blocks
+                self.optimizer.retain_blocks(sched.current_layers());
+                mask
+            }
+            (Method::Lora, _) => TrainMask::none(self.params.n_layers()),
+            _ => TrainMask::all(self.params.n_layers()),
+        };
+
+        let mut mean_loss = 0.0f32;
+        match self.method {
+            Method::Lora => {
+                let lora = self.lora.as_ref().expect("lora state");
+                let mut acc: Option<lora::LoraGrads> = None;
+                for _ in 0..self.cfg.grad_accum {
+                    let batch = loader.next_batch();
+                    let (loss, grads) =
+                        lora::forward_backward_lora(&mut self.engine, &self.params, lora, &batch)?;
+                    mean_loss += loss;
+                    match &mut acc {
+                        None => acc = Some(grads),
+                        Some(a) => lora::lora_grads_add_assign(a, &grads),
+                    }
+                }
+                let mut grads = acc.unwrap();
+                if self.cfg.grad_accum > 1 {
+                    lora::lora_grads_scale(&mut grads, 1.0 / self.cfg.grad_accum as f32);
+                }
+                let opt = self.lora_opt.as_mut().expect("lora optimizer");
+                lora::apply_lora_grads(opt, self.lora.as_mut().unwrap(), &grads);
+                self.engine
+                    .meter
+                    .set(MemCategory::OptimState, opt.state_bytes());
+            }
+            _ => {
+                let mut acc: Option<Grads> = None;
+                for _ in 0..self.cfg.grad_accum {
+                    let batch = loader.next_batch();
+                    let out = self.engine.forward_backward(&self.params, &batch, &mask)?;
+                    mean_loss += out.loss;
+                    match &mut acc {
+                        None => acc = Some(out.grads),
+                        Some(a) => a.add_assign(&out.grads),
+                    }
+                }
+                let mut grads = acc.unwrap();
+                if self.cfg.grad_accum > 1 {
+                    grads.scale(1.0 / self.cfg.grad_accum as f32);
+                }
+                if let Some(max) = self.cfg.max_grad_norm {
+                    let norm = grads.global_norm();
+                    if norm > max {
+                        grads.scale((max / norm) as f32);
+                    }
+                }
+                self.optimizer.apply(
+                    &mut self.params,
+                    &grads,
+                    &self.engine.rt.manifest.block_params,
+                );
+                self.engine
+                    .meter
+                    .set(MemCategory::OptimState, self.optimizer.state_bytes());
+            }
+        }
+        Ok(mean_loss / self.cfg.grad_accum as f32)
+    }
+
+    /// Run the full schedule, recording curves.
+    pub fn run(&mut self, loader: &mut crate::data::DataLoader) -> Result<TrainResult> {
+        let mut loss_curve = Vec::with_capacity(self.cfg.steps);
+        let mut weight_norms = Vec::new();
+        let mut step_times = Vec::with_capacity(self.cfg.steps);
+        let mut last = 0.0f32;
+        for step in 0..self.cfg.steps {
+            let t0 = Instant::now();
+            last = self.step(step, loader)?;
+            step_times.push(t0.elapsed().as_secs_f64() * 1e3);
+            loss_curve.push((step, last));
+            if self.cfg.weight_norm_every > 0 && step % self.cfg.weight_norm_every == 0 {
+                weight_norms.push((step, self.effective_weight_norms()));
+            }
+            if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+                log::info!(
+                    "[{}] step {step}/{} loss {last:.4} lr {:.2e}",
+                    self.method.label(),
+                    self.cfg.steps,
+                    self.lr_at(step)
+                );
+            }
+        }
+        if self.cfg.weight_norm_every > 0 {
+            weight_norms.push((self.cfg.steps, self.effective_weight_norms()));
+        }
+        Ok(TrainResult {
+            loss_curve,
+            weight_norms,
+            peak_mem: self.engine.meter.peak(),
+            mem_breakdown: self.engine.meter.breakdown(),
+            step_times_ms: step_times,
+            bwd_full_calls: self.engine.bwd_full_calls,
+            bwd_x_calls: self.engine.bwd_x_calls,
+            bwd_skipped: self.engine.bwd_skipped,
+            final_train_loss: last,
+        })
+    }
+
+    /// Layerwise norms of the *effective* weights (LoRA: base + merged
+    /// delta — the observable Fig 2 plots).
+    pub fn effective_weight_norms(&self) -> Vec<f64> {
+        match &self.lora {
+            None => self.params.layer_weight_norms(),
+            Some(l) => {
+                let mut p = self.params.clone();
+                l.merge_into(&mut p);
+                p.layer_weight_norms()
+            }
+        }
+    }
+
+    /// Merged-parameter view for evaluation (LoRA merges adapters back).
+    pub fn eval_params(&self) -> ModelParams {
+        match &self.lora {
+            None => self.params.clone(),
+            Some(l) => {
+                let mut p = self.params.clone();
+                l.merge_into(&mut p);
+                p
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_labels() {
+        assert_eq!(Method::Full.label(), "ft");
+        assert_eq!(Method::Lisa(LisaConfig::paper(2, 5)).label(), "lisa");
+        let mut fixed = LisaConfig::paper(2, 5);
+        fixed.fixed = true;
+        assert_eq!(Method::Lisa(fixed).label(), "lisa-fix");
+    }
+
+    #[test]
+    fn warmup_schedule() {
+        // lr_at is pure; check via a free function clone of the logic
+        let cfg = TrainConfig { lr: 1.0, warmup: 10, ..Default::default() };
+        let lr_at = |step: usize| -> f32 {
+            if cfg.warmup > 0 && step < cfg.warmup {
+                cfg.lr * (step + 1) as f32 / cfg.warmup as f32
+            } else {
+                cfg.lr
+            }
+        };
+        assert!((lr_at(0) - 0.1).abs() < 1e-6);
+        assert!((lr_at(9) - 1.0).abs() < 1e-6);
+        assert_eq!(lr_at(50), 1.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Micro-benchmark harness (criterion is not available in this image).
+//!
+//! Warmup + timed iterations with median/mean/p95 reporting and a simple
+//! throughput annotation. `cargo bench` runs `rust/benches/bench_main.rs`
+//! (`harness = false`) which drives this.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements
+            .map(|e| e as f64 / (self.median_ns / 1e9))
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:.2} Gelem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:.2} Melem/s", t / 1e6),
+            Some(t) => format!("  {:.0} elem/s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} median {:>12} mean {:>12} p95  ({} iters){}",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+            self.iters,
+            tp
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub target_time: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(300),
+            target_time: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 100_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            target_time: Duration::from_millis(300),
+            min_iters: 3,
+            max_iters: 10_000,
+        }
+    }
+
+    /// Run `f` repeatedly; `f` should perform one unit of work and return a
+    /// value that is black-boxed to prevent dead-code elimination.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + calibrate a single-iteration estimate.
+        let wstart = Instant::now();
+        let mut calib = Vec::new();
+        while wstart.elapsed() < self.warmup || calib.len() < 2 {
+            let t = Instant::now();
+            black_box(f());
+            calib.push(t.elapsed().as_nanos() as f64);
+            if calib.len() > 1000 {
+                break;
+            }
+        }
+        let est = stats::median(&calib).max(1.0);
+        let iters = ((self.target_time.as_nanos() as f64 / est) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: stats::mean(&samples),
+            median_ns: stats::median(&samples),
+            p95_ns: stats::percentile(&samples, 95.0),
+            stddev_ns: stats::stddev(&samples),
+            elements: None,
+        }
+    }
+
+    pub fn run_with_elements<T, F: FnMut() -> T>(
+        &self,
+        name: &str,
+        elements: u64,
+        f: F,
+    ) -> BenchResult {
+        let mut r = self.run(name, f);
+        r.elements = Some(elements);
+        r
+    }
+}
+
+/// Optimization barrier (std::hint::black_box is stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::quick();
+        let r = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let b = Bench::quick();
+        let r = b.run_with_elements("tp", 1_000, || 0u8);
+        assert!(r.throughput().unwrap() > 0.0);
+        assert!(r.report().contains("elem/s"));
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(1500.0).contains("µs"));
+        assert!(fmt_ns(2.5e6).contains("ms"));
+        assert!(fmt_ns(3.2e9).contains(" s"));
+    }
+}

@@ -1,0 +1,208 @@
+//! Hand-rolled CLI argument parser (no `clap` in this image).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, repeated
+//! positionals, and typed getters with defaults. Each binary/subcommand
+//! declares its options for `--help` rendering.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+    spec: Vec<(String, String, String)>, // (name, default, help)
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0} (try --help)")]
+    Unknown(String),
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("option --{0}: cannot parse '{1}' as {2}")]
+    BadValue(String, String, &'static str),
+}
+
+impl Args {
+    /// Parse raw args against a declared option spec.
+    /// `spec`: (name, default ("" = no default, "false" for flags), help).
+    pub fn parse(
+        raw: &[String],
+        spec: &[(&str, &str, &str)],
+    ) -> Result<Args, CliError> {
+        let known: BTreeMap<&str, &str> =
+            spec.iter().map(|(n, d, _)| (*n, *d)).collect();
+        let mut out = Args {
+            spec: spec
+                .iter()
+                .map(|(n, d, h)| (n.to_string(), d.to_string(), h.to_string()))
+                .collect(),
+            ..Default::default()
+        };
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if key == "help" {
+                    out.flags.entry("help".into()).or_default().push("true".into());
+                    i += 1;
+                    continue;
+                }
+                let default = known
+                    .get(key.as_str())
+                    .ok_or_else(|| CliError::Unknown(key.clone()))?;
+                let is_bool_flag = *default == "false" || *default == "true";
+                let val = match inline_val {
+                    Some(v) => v,
+                    None if is_bool_flag => "true".to_string(),
+                    None => {
+                        i += 1;
+                        raw.get(i)
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(key.clone()))?
+                    }
+                };
+                out.flags.entry(key).or_default().push(val);
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn wants_help(&self) -> bool {
+        self.flags.contains_key("help")
+    }
+
+    pub fn help(&self, usage: &str) -> String {
+        let mut s = format!("usage: {usage}\n\noptions:\n");
+        for (n, d, h) in &self.spec {
+            let dd = if d.is_empty() { String::new() } else { format!(" [default: {d}]") };
+            s.push_str(&format!("  --{n:<18} {h}{dd}\n"));
+        }
+        s
+    }
+
+    fn raw(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    fn default_of(&self, key: &str) -> &str {
+        self.spec
+            .iter()
+            .find(|(n, _, _)| n == key)
+            .map(|(_, d, _)| d.as_str())
+            .unwrap_or("")
+    }
+
+    pub fn get(&self, key: &str) -> String {
+        self.raw(key).unwrap_or_else(|| self.default_of(key)).to_string()
+    }
+
+    pub fn get_opt(&self, key: &str) -> Option<String> {
+        let v = self.get(key);
+        if v.is_empty() {
+            None
+        } else {
+            Some(v)
+        }
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize, CliError> {
+        let v = self.get(key);
+        v.parse()
+            .map_err(|_| CliError::BadValue(key.into(), v, "usize"))
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64, CliError> {
+        let v = self.get(key);
+        v.parse().map_err(|_| CliError::BadValue(key.into(), v, "u64"))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64, CliError> {
+        let v = self.get(key);
+        v.parse().map_err(|_| CliError::BadValue(key.into(), v, "f64"))
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key).as_str(), "true" | "1" | "yes")
+    }
+
+    /// Comma-separated list value.
+    pub fn get_list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<(&'static str, &'static str, &'static str)> {
+        vec![
+            ("steps", "100", "training steps"),
+            ("lr", "1e-4", "learning rate"),
+            ("verbose", "false", "log more"),
+            ("name", "", "run name"),
+        ]
+    }
+
+    fn parse(args: &[&str]) -> Args {
+        let raw: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+        Args::parse(&raw, &spec()).unwrap()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parse(&["--steps", "5", "--lr=3e-4", "pos1"]);
+        assert_eq!(a.get_usize("steps").unwrap(), 5);
+        assert_eq!(a.get_f64("lr").unwrap(), 3e-4);
+        assert!(!a.get_bool("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn bool_flag_without_value() {
+        let a = parse(&["--verbose", "cmd"]);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional, vec!["cmd"]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let raw = vec!["--nope".to_string()];
+        assert!(matches!(Args::parse(&raw, &spec()), Err(CliError::Unknown(_))));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let raw = vec!["--steps".to_string()];
+        assert!(matches!(
+            Args::parse(&raw, &spec()),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn last_wins_and_lists() {
+        let a = parse(&["--name", "a", "--name", "b,c"]);
+        assert_eq!(a.get("name"), "b,c");
+        assert_eq!(a.get_list("name"), vec!["b", "c"]);
+    }
+
+    #[test]
+    fn empty_default_is_none() {
+        let a = parse(&[]);
+        assert_eq!(a.get_opt("name"), None);
+        assert!(a.get_opt("steps").is_some());
+    }
+}

@@ -1,0 +1,100 @@
+//! Minimal CSV reader (RFC-4180 quoting) for the report assembler that
+//! turns `results/*.csv` back into tables.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csv {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+pub fn parse(text: &str) -> Csv {
+    let mut records: Vec<Vec<String>> = Vec::new();
+    let mut field = String::new();
+    let mut record: Vec<String> = Vec::new();
+    let mut in_quotes = false;
+    let mut chars = text.chars().peekable();
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                _ => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => record.push(std::mem::take(&mut field)),
+                '\r' => {}
+                '\n' => {
+                    record.push(std::mem::take(&mut field));
+                    if !(record.len() == 1 && record[0].is_empty()) {
+                        records.push(std::mem::take(&mut record));
+                    } else {
+                        record.clear();
+                    }
+                }
+                _ => field.push(c),
+            }
+        }
+    }
+    if !field.is_empty() || !record.is_empty() {
+        record.push(field);
+        records.push(record);
+    }
+    let header = if records.is_empty() { vec![] } else { records.remove(0) };
+    Csv { header, rows: records }
+}
+
+impl Csv {
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    /// Markdown rendering via the table printer.
+    pub fn to_table(&self) -> crate::util::table::Table {
+        let mut t = crate::util::table::Table::new(self.header.clone());
+        for r in &self.rows {
+            let mut row = r.clone();
+            row.resize(self.header.len(), String::new());
+            t.row(row);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_roundtrip() {
+        let c = parse("a,b\n1,2\n3,4\n");
+        assert_eq!(c.header, vec!["a", "b"]);
+        assert_eq!(c.rows, vec![vec!["1", "2"], vec!["3", "4"]]);
+        assert_eq!(c.col("b"), Some(1));
+    }
+
+    #[test]
+    fn quoted_fields() {
+        let c = parse("x,y\n\"a,b\",\"q\"\"z\"\n");
+        assert_eq!(c.rows[0], vec!["a,b", "q\"z"]);
+    }
+
+    #[test]
+    fn tolerates_missing_trailing_newline_and_crlf() {
+        let c = parse("a,b\r\n1,2");
+        assert_eq!(c.rows, vec![vec!["1", "2"]]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let c = parse("");
+        assert!(c.header.is_empty() && c.rows.is_empty());
+    }
+}

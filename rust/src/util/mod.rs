@@ -1,0 +1,13 @@
+//! Infrastructure substrates built from scratch for this image (no
+//! crates.io beyond the `xla` closure — see DESIGN.md §2).
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod logger;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;

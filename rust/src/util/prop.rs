@@ -1,0 +1,146 @@
+//! Property-testing mini-framework (proptest is not available offline).
+//!
+//! A property is a closure over a seeded [`crate::util::rng::Rng`]; the
+//! runner executes it across many random cases and, on failure, reports the
+//! failing case seed so the exact input regenerates deterministically:
+//!
+//! ```ignore
+//! prop_check("adamw matches ref", 256, |rng| {
+//!     let n = 1 + rng.below(512);
+//!     ...
+//!     prop_assert!(close, "diff={diff}");
+//!     Ok(())
+//! });
+//! ```
+//!
+//! Used by the coordinator invariants (LISA sampler distribution, engine
+//! freeze-mask routing, optimizer state management) — see rust/tests/.
+
+use super::rng::Rng;
+
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of `prop`, each with a deterministic per-case
+/// RNG derived from `base_seed`. Panics with the failing seed on error.
+pub fn prop_check_seeded<F>(name: &str, base_seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (reproduce with seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Default-seed variant; override the seed with env `LISA_PROP_SEED` to
+/// replay a failure.
+pub fn prop_check<F>(name: &str, cases: usize, prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let base = std::env::var("LISA_PROP_SEED")
+        .ok()
+        .and_then(|s| {
+            let s = s.trim_start_matches("0x");
+            u64::from_str_radix(s, 16).ok()
+        })
+        .unwrap_or(0xC0FFEE);
+    prop_check_seeded(name, base, cases, prop)
+}
+
+/// Assert inside a property, returning Err instead of panicking so the
+/// runner can attach the case seed.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Assert approximate equality of two f32 slices inside a property.
+#[macro_export]
+macro_rules! prop_assert_allclose {
+    ($a:expr, $b:expr, $rtol:expr, $atol:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a.len() != b.len() {
+            return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+        }
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            let tol = $atol + $rtol * y.abs();
+            if (x - y).abs() > tol {
+                return Err(format!(
+                    "allclose failed at [{i}]: {x} vs {y} (tol {tol})"
+                ));
+            }
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop_check("trivial", 50, |rng| {
+            count += 1;
+            let x = rng.f64();
+            prop_assert!((0.0..1.0).contains(&x));
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        prop_check("fails", 10, |rng| {
+            let x = rng.below(4);
+            prop_assert!(x < 3, "x was {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first = Vec::new();
+        prop_check_seeded("det", 1234, 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        prop_check_seeded("det", 1234, 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn allclose_macro() {
+        fn go() -> super::PropResult {
+            prop_assert_allclose!([1.0f32, 2.0], [1.0f32, 2.0 + 1e-7], 1e-5, 1e-6);
+            Ok(())
+        }
+        assert!(go().is_ok());
+        fn bad() -> super::PropResult {
+            prop_assert_allclose!([1.0f32], [2.0f32], 1e-5, 1e-6);
+            Ok(())
+        }
+        assert!(bad().is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! Aligned-text and markdown table printer for the experiment harness.
+//!
+//! Every `exp <id>` driver emits its paper-table reproduction through this,
+//! so EXPERIMENTS.md rows are copy-pasteable from stdout.
+
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table { header: header.into_iter().map(Into::into).collect(), rows: vec![] }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// GitHub-flavored markdown rendering.
+    pub fn markdown(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, width) in cells.iter().zip(w) {
+                s.push_str(&format!(" {:<width$} |", c, width = width));
+            }
+            s
+        };
+        out.push_str(&fmt_row(&self.header, &w));
+        out.push('\n');
+        out.push('|');
+        for width in &w {
+            out.push_str(&format!("{:-<w$}|", "", w = width + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &w));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering (for results/*.csv dumps).
+    pub fn csv(&self) -> String {
+        let esc = |c: &str| -> String {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.markdown());
+    }
+}
+
+/// Format a float with `p` significant-looking decimals, trimming noise.
+pub fn fnum(x: f64, p: usize) -> String {
+    format!("{:.p$}", x, p = p)
+}
+
+/// Human bytes: 1536 -> "1.5K", 2147483648 -> "2.0G".
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "K", "M", "G", "T"];
+    let mut x = b as f64;
+    let mut u = 0;
+    while x >= 1024.0 && u < UNITS.len() - 1 {
+        x /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b}B")
+    } else {
+        format!("{x:.1}{}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new(vec!["method", "score"]);
+        t.row(vec!["LISA", "4.94"]);
+        t.row(vec!["LoRA", "4.45"]);
+        let md = t.markdown();
+        assert!(md.starts_with("| method | score |"));
+        assert_eq!(md.lines().count(), 4);
+        assert!(md.contains("| LISA   | 4.94  |"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["x,y", "q\"z"]);
+        assert_eq!(t.csv(), "a,b\n\"x,y\",\"q\"\"z\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        Table::new(vec!["a", "b"]).row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn bytes() {
+        assert_eq!(human_bytes(512), "512B");
+        assert_eq!(human_bytes(1536), "1.5K");
+        assert_eq!(human_bytes(2 * 1024 * 1024 * 1024), "2.0G");
+    }
+}

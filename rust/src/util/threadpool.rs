@@ -1,0 +1,157 @@
+//! Scoped parallel-map over std threads (no rayon/tokio in this image).
+//!
+//! Used for data-parallel host work: optimizer updates across parameter
+//! tensors, corpus generation shards, and running independent experiment
+//! arms concurrently. PJRT executions stay on the calling thread — the CPU
+//! client is already internally multi-threaded.
+
+/// Run `f(i, &items[i])` for every item on up to `workers` threads and
+/// collect results in input order.
+pub fn parallel_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let out_ptr = SendPtr(out.as_mut_ptr());
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = &next;
+            let f = &f;
+            let items = &items;
+            let out_ptr = &out_ptr;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                // SAFETY: each index is claimed by exactly one worker via the
+                // atomic counter, so writes to out[i] never alias.
+                unsafe {
+                    *out_ptr.0.add(i) = Some(r);
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("worker wrote every slot")).collect()
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+/// Default worker count: physical parallelism minus one (leave a core for
+/// the PJRT client's own pool), at least 1.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+/// Split `n` items into per-worker contiguous (start, len) chunks.
+pub fn chunks(n: usize, workers: usize) -> Vec<(usize, usize)> {
+    let workers = workers.clamp(1, n.max(1));
+    let base = n / workers;
+    let rem = n % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let len = base + usize::from(w < rem);
+        if len > 0 {
+            out.push((start, len));
+        }
+        start += len;
+    }
+    out
+}
+
+/// Parallel for over mutable chunks of a slice (optimizer hot path: each
+/// worker owns a disjoint subrange of the flat parameter buffer).
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], workers: usize, chunk_of: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let parts = chunks(n, workers);
+    if parts.len() == 1 {
+        chunk_of(0, data);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut offset = 0;
+        for (_, len) in parts {
+            let (head, tail) = rest.split_at_mut(len);
+            let chunk_of = &chunk_of;
+            let start = offset;
+            scope.spawn(move || chunk_of(start, head));
+            rest = tail;
+            offset += len;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(&items, 8, |_, &x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_single_worker_and_empty() {
+        let out = parallel_map(&[1, 2, 3], 1, |i, &x| i + x);
+        assert_eq!(out, vec![1, 3, 5]);
+        let empty: Vec<i32> = parallel_map(&[] as &[i32], 4, |_, &x| x);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn chunk_partition_covers_everything() {
+        for n in [0usize, 1, 7, 64, 101] {
+            for w in [1usize, 2, 3, 8] {
+                let parts = chunks(n, w);
+                let total: usize = parts.iter().map(|(_, l)| l).sum();
+                assert_eq!(total, n);
+                let mut pos = 0;
+                for (s, l) in parts {
+                    assert_eq!(s, pos);
+                    pos += l;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunks_mut_touches_all() {
+        let mut v = vec![0u32; 1000];
+        parallel_chunks_mut(&mut v, 7, |start, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = (start + i) as u32;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i as u32);
+        }
+    }
+}

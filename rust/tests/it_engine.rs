@@ -1,0 +1,175 @@
+//! Deep engine integration: the masked backward (LISA's bwd_full/bwd_x
+//! routing) must produce *identical* gradients to the full backward on the
+//! unfrozen subset, LoRA zero-B must match base forward, and the eval
+//! harness must be self-consistent.
+
+use std::path::{Path, PathBuf};
+
+use lisa::data::{corpus, encode_sft, DataLoader, Tokenizer};
+use lisa::engine::{Batch, Engine, TrainMask};
+use lisa::eval;
+use lisa::lora::{forward_backward_lora, LoraState};
+use lisa::model::ModelParams;
+use lisa::runtime::{HostTensorI32, Runtime};
+use lisa::util::rng::Rng;
+use lisa::util::stats::allclose;
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+fn make_batch(m: &lisa::runtime::Manifest, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let n = m.batch * m.seq;
+    let tokens: Vec<i32> = (0..n).map(|_| rng.below(m.vocab) as i32).collect();
+    let targets: Vec<i32> = tokens
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| if i % 3 == 0 { -1 } else { t })
+        .collect();
+    Batch {
+        tokens: HostTensorI32::from_vec(&[m.batch, m.seq], tokens),
+        targets: HostTensorI32::from_vec(&[m.batch, m.seq], targets),
+    }
+}
+
+#[test]
+fn masked_grads_equal_full_grads_on_unfrozen_subset() {
+    if !artifacts().join("manifest.json").exists() { return; }
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(3));
+    let batch = make_batch(&m, 5);
+
+    let mut eng = Engine::new(&rt);
+    let full = eng
+        .forward_backward(&params, &batch, &TrainMask::all(m.n_layers))
+        .unwrap();
+
+    // freeze all but block 1 (embed+head on)
+    let mut mask = TrainMask::none(m.n_layers);
+    mask.embed = true;
+    mask.head = true;
+    mask.blocks[1] = true;
+    let masked = eng.forward_backward(&params, &batch, &mask).unwrap();
+
+    assert!((full.loss - masked.loss).abs() < 1e-5, "losses must match");
+    // unfrozen block grads identical
+    let a = full.grads.blocks[1].as_ref().unwrap();
+    let b = masked.grads.blocks[1].as_ref().unwrap();
+    for (x, y) in a.iter().zip(b) {
+        assert!(allclose(&x.data, &y.data, 1e-4, 1e-5), "block grads diverge");
+    }
+    // embed/head grads identical
+    assert!(allclose(
+        &full.grads.wh.as_ref().unwrap().data,
+        &masked.grads.wh.as_ref().unwrap().data,
+        1e-4, 1e-5
+    ));
+    assert!(allclose(
+        &full.grads.emb.as_ref().unwrap().data,
+        &masked.grads.emb.as_ref().unwrap().data,
+        1e-4, 1e-5
+    ));
+    // frozen blocks carry no grads
+    assert!(masked.grads.blocks[0].is_none());
+    assert!(masked.grads.blocks[2].is_none());
+}
+
+#[test]
+fn backward_early_stop_does_not_change_unfrozen_grads() {
+    if !artifacts().join("manifest.json").exists() { return; }
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(4));
+    let batch = make_batch(&m, 6);
+    let mut eng = Engine::new(&rt);
+
+    // embed frozen, only top block trainable: backward should stop early
+    let mut mask = TrainMask::none(m.n_layers);
+    mask.head = true;
+    mask.blocks[m.n_layers - 1] = true;
+    let out = eng.forward_backward(&params, &batch, &mask).unwrap();
+    assert!(eng.bwd_skipped as usize >= m.n_layers - 1, "must skip dead backward");
+    assert!(out.grads.emb.is_none());
+
+    // compare against the full-backward reference for the same block
+    let full = eng
+        .forward_backward(&params, &batch, &TrainMask::all(m.n_layers))
+        .unwrap();
+    let a = out.grads.blocks[m.n_layers - 1].as_ref().unwrap();
+    let b = full.grads.blocks[m.n_layers - 1].as_ref().unwrap();
+    for (x, y) in a.iter().zip(b) {
+        assert!(allclose(&x.data, &y.data, 1e-4, 1e-5));
+    }
+}
+
+#[test]
+fn lora_zero_b_forward_matches_base_and_grads_flow() {
+    if !artifacts().join("manifest.json").exists() { return; }
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(7));
+    let lora = LoraState::init(&m, &mut Rng::new(8));
+    let batch = make_batch(&m, 9);
+    let mut eng = Engine::new(&rt);
+
+    let (loss_lora, grads) = forward_backward_lora(&mut eng, &params, &lora, &batch).unwrap();
+    let loss_base = eng.forward_loss(&params, &batch).unwrap();
+    assert!((loss_lora - loss_base).abs() < 1e-5, "B=0 ⇒ identical loss");
+
+    // B grads must be nonzero (dL/dB = scale * (x A)^T dy ≠ 0 generically),
+    // A grads are zero at B=0 (dL/dA = x^T dy B^T = 0).
+    let gb = &grads[0][1];
+    assert!(gb.data.iter().any(|&x| x != 0.0), "dB must flow");
+    let ga = &grads[0][0];
+    assert!(ga.data.iter().all(|&x| x.abs() < 1e-6), "dA must be 0 at B=0");
+}
+
+#[test]
+fn eval_harness_consistency() {
+    if !artifacts().join("manifest.json").exists() { return; }
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(11));
+    let samples = corpus::gen_instruction_corpus(48, 13);
+    let tok = Tokenizer::build(&corpus::sample_texts(&samples), m.vocab);
+    let enc: Vec<_> = samples.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
+    let dl = DataLoader::new(enc, m.batch, m.seq, 1);
+    let mut eng = Engine::new(&rt);
+
+    let rep = eval::evaluate(&mut eng, &params, &dl).unwrap();
+    assert!(rep.loss > 0.0 && rep.loss.is_finite());
+    assert!((rep.ppl - rep.loss.exp()).abs() < 1e-6);
+    assert!((0.0..=1.0).contains(&rep.token_acc));
+    assert!((0.0..=1.0).contains(&rep.exact_match));
+    // untrained model must be near chance on token accuracy
+    assert!(rep.token_acc < 0.3, "untrained acc {}", rep.token_acc);
+
+    // category scores bounded and averaged correctly
+    let (cats, avg) = eval::category_scores(&mut eng, &params, &dl).unwrap();
+    assert!(!cats.is_empty());
+    for (_, s) in &cats {
+        assert!((0.0..=10.0).contains(s));
+    }
+    let mean: f64 = cats.values().sum::<f64>() / cats.len() as f64;
+    assert!((mean - avg).abs() < 1e-9);
+
+    // early exit at full depth == full logits path
+    let em_full = eval::exact_match_at_depth(&mut eng, &params, &dl, m.n_layers).unwrap();
+    assert!((em_full - rep.exact_match).abs() < 1e-9);
+}
+
+#[test]
+fn logits_at_depth_zero_differs_from_full() {
+    if !artifacts().join("manifest.json").exists() { return; }
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(12));
+    let batch = make_batch(&m, 14);
+    let mut eng = Engine::new(&rt);
+    let l0 = eng.logits_at(&params, &batch.tokens, 0).unwrap();
+    let lf = eng.logits(&params, &batch.tokens).unwrap();
+    assert_eq!(l0.shape, lf.shape);
+    assert!(!allclose(&l0.data, &lf.data, 1e-3, 1e-3), "depth-0 must differ");
+}

@@ -1,0 +1,112 @@
+//! Integration: load tiny artifacts, execute segments, cross-check the
+//! pallas and jnp backends against each other (the two lowering paths must
+//! agree bit-for-bit-ish on CPU f32).
+
+use std::path::Path;
+
+use lisa::runtime::{HostTensor, HostTensorI32, Operand, Runtime};
+use lisa::util::rng::Rng;
+use lisa::util::stats::allclose;
+
+fn artifacts() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").leak()
+}
+
+trait Leak {
+    fn leak(self) -> &'static Path;
+}
+impl Leak for std::path::PathBuf {
+    fn leak(self) -> &'static Path {
+        Box::leak(self.into_boxed_path())
+    }
+}
+
+fn have_tiny() -> bool {
+    artifacts().join("tiny/manifest.json").exists()
+}
+
+#[test]
+fn block_fwd_backends_agree() {
+    if !have_tiny() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt_p = Runtime::load(&artifacts().join("tiny"), "pallas").unwrap();
+    let rt_j = Runtime::load(&artifacts().join("tiny"), "jnp").unwrap();
+    let m = &rt_p.manifest;
+    let mut rng = Rng::new(7);
+
+    let mut h = HostTensor::zeros(&[m.batch, m.seq, m.d_model]);
+    rng.fill_normal(&mut h.data, 1.0);
+    let mut params = Vec::new();
+    for (_, shape) in &m.block_params {
+        let mut t = HostTensor::zeros(shape);
+        rng.fill_normal(&mut t.data, 0.05);
+        params.push(t);
+    }
+    let mut ops = vec![Operand::F32(&h)];
+    ops.extend(params.iter().map(Operand::F32));
+
+    let out_p = rt_p.run("block_fwd", &ops).unwrap();
+    let out_j = rt_j.run("block_fwd", &ops).unwrap();
+    let a = HostTensor::from_literal(&out_p[0], &[m.batch, m.seq, m.d_model]).unwrap();
+    let b = HostTensor::from_literal(&out_j[0], &[m.batch, m.seq, m.d_model]).unwrap();
+    assert!(
+        allclose(&a.data, &b.data, 1e-4, 1e-5),
+        "pallas vs jnp block_fwd diverge"
+    );
+    assert!(a.data.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn full_forward_loss_is_finite_and_backends_agree() {
+    if !have_tiny() {
+        return;
+    }
+    let rt_p = Runtime::load(&artifacts().join("tiny"), "pallas").unwrap();
+    let rt_j = Runtime::load(&artifacts().join("tiny"), "jnp").unwrap();
+    let m = rt_p.manifest.clone();
+    let mut rng = Rng::new(3);
+
+    let tokens = HostTensorI32::from_vec(
+        &[m.batch, m.seq],
+        (0..m.batch * m.seq).map(|_| rng.below(m.vocab) as i32).collect(),
+    );
+    let mut emb = HostTensor::zeros(&[m.vocab, m.d_model]);
+    let mut pos = HostTensor::zeros(&[m.seq, m.d_model]);
+    rng.fill_normal(&mut emb.data, 0.02);
+    rng.fill_normal(&mut pos.data, 0.02);
+
+    let losses: Vec<f32> = [&rt_p, &rt_j]
+        .iter()
+        .map(|rt| {
+            let outs = rt
+                .run("embed_fwd", &[Operand::I32(&tokens), Operand::F32(&emb), Operand::F32(&pos)])
+                .unwrap();
+            let h = HostTensor::from_literal(&outs[0], &[m.batch, m.seq, m.d_model]).unwrap();
+            let mut gf = HostTensor::zeros(&[m.d_model]);
+            gf.fill(1.0);
+            let mut wh = HostTensor::zeros(&[m.d_model, m.vocab]);
+            let mut r2 = Rng::new(5);
+            r2.fill_normal(&mut wh.data, 0.02);
+            let outs = rt
+                .run(
+                    "head_loss",
+                    &[Operand::F32(&h), Operand::F32(&gf), Operand::F32(&wh), Operand::I32(&tokens)],
+                )
+                .unwrap();
+            HostTensor::scalar_from_literal(&outs[0]).unwrap()
+        })
+        .collect();
+
+    assert!(losses[0].is_finite());
+    // random init ⇒ loss ≈ ln(vocab)
+    let expect = (m.vocab as f32).ln();
+    assert!(
+        (losses[0] - expect).abs() < 1.0,
+        "loss {} far from ln(V)={}",
+        losses[0],
+        expect
+    );
+    assert!((losses[0] - losses[1]).abs() < 1e-4);
+}

@@ -1,0 +1,84 @@
+//! End-to-end integration: every training method reduces the loss on the
+//! tiny config, and LISA's scheduling behaviour shows up in engine stats.
+
+use std::path::{Path, PathBuf};
+
+use lisa::data::{corpus, encode_sft, DataLoader, Tokenizer};
+use lisa::lisa::LisaConfig;
+use lisa::opt::GaloreHp;
+use lisa::runtime::Runtime;
+use lisa::train::{Method, TrainConfig, TrainSession};
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+fn setup(rt: &Runtime) -> (Tokenizer, DataLoader) {
+    let m = &rt.manifest;
+    let samples = corpus::gen_instruction_corpus(128, 11);
+    let tok = Tokenizer::build(&corpus::sample_texts(&samples), m.vocab);
+    let enc: Vec<_> = samples.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
+    let dl = DataLoader::new(enc, m.batch, m.seq, 5);
+    (tok, dl)
+}
+
+fn run(method: Method, steps: usize) -> (f32, f32, lisa::train::TrainResult) {
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    let (_tok, mut dl) = setup(&rt);
+    let cfg = TrainConfig {
+        steps,
+        lr: 3e-3,
+        warmup: 5,
+        log_every: 0,
+        ..Default::default()
+    };
+    let mut sess = TrainSession::new(&rt, method, cfg);
+    let first_losses: Vec<f32> = (0..3)
+        .map(|s| sess.step(s, &mut dl).unwrap())
+        .collect();
+    let res = sess.run(&mut dl).unwrap();
+    (
+        first_losses[0],
+        res.final_train_loss,
+        res,
+    )
+}
+
+#[test]
+fn ft_reduces_loss() {
+    if !artifacts().join("manifest.json").exists() { return; }
+    let (first, last, res) = run(Method::Full, 30);
+    assert!(last < first * 0.9, "FT loss {first} -> {last}");
+    assert_eq!(res.bwd_x_calls, 0, "FT never uses input-only backward");
+    assert!(res.peak_mem > 0);
+}
+
+#[test]
+fn lisa_reduces_loss_and_freezes_blocks() {
+    if !artifacts().join("manifest.json").exists() { return; }
+    let (first, last, res) = run(Method::Lisa(LisaConfig::paper(2, 5)), 30);
+    assert!(last < first * 0.9, "LISA loss {first} -> {last}");
+    // tiny has 4 blocks, γ=2: every step does 2 full + 2 input-only bwd
+    assert!(res.bwd_x_calls > 0, "LISA must freeze some blocks");
+    assert!(res.bwd_full_calls > 0);
+    let total_steps = (30 + 3) as u64;
+    assert_eq!(res.bwd_full_calls + res.bwd_x_calls + res.bwd_skipped,
+               total_steps * 4);
+}
+
+#[test]
+fn lora_reduces_loss() {
+    if !artifacts().join("manifest.json").exists() { return; }
+    let (first, last, _res) = run(Method::Lora, 30);
+    assert!(last < first * 0.95, "LoRA loss {first} -> {last}");
+}
+
+#[test]
+fn galore_reduces_loss() {
+    if !artifacts().join("manifest.json").exists() { return; }
+    let (first, last, _res) = run(
+        Method::Galore(GaloreHp { rank: 4, update_proj_gap: 10, scale: 1.0, ..Default::default() }),
+        30,
+    );
+    assert!(last < first * 0.95, "GaLore loss {first} -> {last}");
+}

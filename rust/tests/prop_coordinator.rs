@@ -1,0 +1,218 @@
+//! Property-based tests on coordinator invariants (routing, batching,
+//! state management) via the hand-rolled `util::prop` framework.
+
+use lisa::data::{corpus, encode_sft, split_train_val, DataLoader, Tokenizer};
+use lisa::engine::TrainMask;
+use lisa::lisa::{LisaConfig, LisaScheduler};
+use lisa::model::ParamKey;
+use lisa::opt::{adamw::AdamHp, AdamW, StatePolicy};
+use lisa::prop_assert;
+use lisa::util::prop::prop_check;
+use lisa::util::rng::Rng;
+
+#[test]
+fn prop_lisa_mask_routing_invariants() {
+    prop_check("lisa mask invariants", 200, |rng| {
+        let n_layers = 2 + rng.below(30);
+        let gamma = 1 + rng.below(n_layers);
+        let k = 1 + rng.below(20);
+        let seed = rng.next_u64();
+        let mut s = LisaScheduler::new(LisaConfig::paper(gamma, k), n_layers, seed);
+        let steps = 1 + rng.below(100);
+        let mut prev: Option<TrainMask> = None;
+        for step in 0..steps {
+            let m = s.mask_for_step(step);
+            prop_assert!(m.blocks.len() == n_layers);
+            prop_assert!(m.n_trainable_blocks() == gamma,
+                         "γ={gamma} but {} trainable", m.n_trainable_blocks());
+            prop_assert!(m.embed && m.head, "E and H always trainable");
+            // within a period the mask must be identical
+            if step % k != 0 {
+                if let Some(p) = &prev {
+                    prop_assert!(&m == p, "mask changed inside period at step {step}");
+                }
+            }
+            prev = Some(m);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lisa_expected_unfreeze_rate_is_gamma_over_l() {
+    prop_check("importance-sampling rate", 20, |rng| {
+        let n_layers = 4 + rng.below(12);
+        let gamma = 1 + rng.below(n_layers / 2);
+        let seed = rng.next_u64();
+        let mut s = LisaScheduler::new(LisaConfig::paper(gamma, 1), n_layers, seed);
+        let trials = 3000;
+        let mut counts = vec![0usize; n_layers];
+        for step in 0..trials {
+            s.mask_for_step(step);
+            for &l in s.current_layers() {
+                counts[l] += 1;
+            }
+        }
+        let expect = trials as f64 * gamma as f64 / n_layers as f64;
+        for (l, &c) in counts.iter().enumerate() {
+            let dev = (c as f64 - expect).abs() / expect;
+            prop_assert!(dev < 0.25, "layer {l}: {c} vs {expect} (dev {dev:.2})");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adamw_state_tracks_trainable_set_exactly() {
+    prop_check("optimizer state management", 100, |rng| {
+        let n_layers = 2 + rng.below(16);
+        let mut opt = AdamW::new(AdamHp::default(), StatePolicy::Drop);
+        let mut live: Vec<usize> = Vec::new();
+        for _round in 0..10 {
+            // sample a new trainable set and run one update per member
+            let gamma = 1 + rng.below(n_layers);
+            live = rng.sample_distinct(n_layers, gamma);
+            for &l in &live {
+                let mut p = vec![1.0f32; 8];
+                let g = vec![0.1f32; 8];
+                opt.step(ParamKey::Block(l, 0), true, &mut p, &g);
+            }
+            opt.retain_blocks(&live);
+            // invariant: state exists exactly for the live block set
+            for l in 0..n_layers {
+                let has = opt.steps_of(ParamKey::Block(l, 0)) > 0;
+                prop_assert!(
+                    has == live.contains(&l),
+                    "layer {l}: state={has} live={}",
+                    live.contains(&l)
+                );
+            }
+        }
+        let _ = live;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adamw_is_elementwise_and_shift_invariant() {
+    // updating a concatenated tensor == updating the pieces separately
+    prop_check("adamw elementwise", 60, |rng| {
+        let n1 = 1 + rng.below(64);
+        let n2 = 1 + rng.below(64);
+        let mut rng2 = Rng::new(rng.next_u64());
+        let mk = |rng: &mut Rng, n: usize| {
+            let mut v = vec![0f32; n];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        };
+        let p1 = mk(&mut rng2, n1);
+        let p2 = mk(&mut rng2, n2);
+        let g1 = mk(&mut rng2, n1);
+        let g2 = mk(&mut rng2, n2);
+
+        let hp = AdamHp::default();
+        let mut whole = AdamW::new(hp, StatePolicy::Keep);
+        let mut cat_p: Vec<f32> = p1.iter().chain(&p2).copied().collect();
+        let cat_g: Vec<f32> = g1.iter().chain(&g2).copied().collect();
+        whole.step(ParamKey::Emb, true, &mut cat_p, &cat_g);
+
+        let mut parts = AdamW::new(hp, StatePolicy::Keep);
+        let mut q1 = p1.clone();
+        let mut q2 = p2.clone();
+        parts.step(ParamKey::Block(0, 0), true, &mut q1, &g1);
+        parts.step(ParamKey::Block(1, 0), true, &mut q2, &g2);
+
+        let joined: Vec<f32> = q1.iter().chain(&q2).copied().collect();
+        lisa::prop_assert_allclose!(cat_p, joined, 1e-6, 1e-7);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dataloader_batching_covers_dataset() {
+    prop_check("dataloader epoch coverage", 40, |rng| {
+        let n = 4 + rng.below(60);
+        let batch = 1 + rng.below(6);
+        let seq = 16;
+        let samples = corpus::gen_instruction_corpus(n, rng.next_u64());
+        let tok = Tokenizer::build(&corpus::sample_texts(&samples), 512);
+        let enc: Vec<_> = samples.iter().map(|s| encode_sft(&tok, s, seq)).collect();
+        let mut dl = DataLoader::new(enc, batch, seq, rng.next_u64());
+
+        // one epoch of next_batch must emit steps_per_epoch batches of the
+        // right shape, and eval_batches must cover every example once
+        for _ in 0..dl.steps_per_epoch() {
+            let b = dl.next_batch();
+            prop_assert!(b.tokens.shape == vec![batch, seq]);
+            prop_assert!(b.targets.shape == vec![batch, seq]);
+            // every supervised target is a valid token id
+            for &t in b.targets.data.iter() {
+                prop_assert!(t >= -1 && (t as i64) < 512, "bad target {t}");
+            }
+        }
+        let total: usize = dl.eval_batches().iter().map(|(_, r)| r).sum();
+        prop_assert!(total == n, "eval covered {total}/{n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_split_never_leaks_between_train_and_val() {
+    prop_check("train/val disjointness", 60, |rng| {
+        let n = 10 + rng.below(200);
+        let frac = 0.05 + rng.f64() * 0.4;
+        let items: Vec<usize> = (0..n).collect();
+        let (tr, va) = split_train_val(&items, frac, rng.next_u64());
+        prop_assert!(tr.len() + va.len() == n);
+        let vs: std::collections::BTreeSet<_> = va.iter().collect();
+        prop_assert!(tr.iter().all(|x| !vs.contains(x)), "overlap detected");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_arbitrary_tensors() {
+    prop_check("checkpoint roundtrip", 30, |rng| {
+        use lisa::model::checkpoint::{load_tensors, save_tensors};
+        use lisa::runtime::HostTensor;
+        let dir = std::env::temp_dir().join("lisa_prop_ckpt");
+        std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+        let path = dir.join(format!("t{}.ckpt", rng.next_u64()));
+        let n_tensors = 1 + rng.below(6);
+        let mut tensors = Vec::new();
+        for i in 0..n_tensors {
+            let rank = 1 + rng.below(3);
+            let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(8)).collect();
+            let mut t = HostTensor::zeros(&shape);
+            rng.fill_normal(&mut t.data, 1.0);
+            tensors.push((format!("t{i}"), t));
+        }
+        let refs: Vec<(String, &HostTensor)> =
+            tensors.iter().map(|(n, t)| (n.clone(), t)).collect();
+        save_tensors(&path, &refs).map_err(|e| e.to_string())?;
+        let loaded = load_tensors(&path).map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+        prop_assert!(loaded.len() == n_tensors);
+        for (name, t) in &tensors {
+            prop_assert!(loaded.get(name) == Some(t), "tensor {name} corrupted");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tokenizer_encode_ids_in_range() {
+    prop_check("tokenizer id range", 40, |rng| {
+        let vocab = 64 + rng.below(1000);
+        let samples = corpus::gen_instruction_corpus(32, rng.next_u64());
+        let texts = corpus::sample_texts(&samples);
+        let tok = Tokenizer::build(&texts, vocab);
+        prop_assert!(tok.vocab_size() <= vocab);
+        for t in &texts {
+            for id in tok.encode(t) {
+                prop_assert!(id >= 0 && (id as usize) < tok.vocab_size());
+            }
+        }
+        Ok(())
+    });
+}
