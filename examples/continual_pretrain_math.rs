@@ -10,10 +10,10 @@ use std::path::Path;
 
 use lisa::data::{corpus, encode_lm_stream, encode_sft, split_train_val, DataLoader, Tokenizer};
 use lisa::eval;
-use lisa::lisa::LisaConfig;
 use lisa::model::checkpoint;
 use lisa::runtime::Runtime;
-use lisa::train::{Method, TrainConfig, TrainSession};
+use lisa::strategy::StrategySpec;
+use lisa::train::{TrainConfig, TrainSession};
 
 fn main() -> anyhow::Result<()> {
     lisa::util::logger::init();
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     let mut cpt_dl = DataLoader::new(encode_lm_stream(&tok, &docs, m.seq), m.batch, m.seq, 1);
     let gamma = (m.n_layers / 2).max(1);
     let cfg = TrainConfig { steps: 40, lr: 3e-3, seed: 9, log_every: 10, ..Default::default() };
-    let mut sess = TrainSession::new(&rt, Method::Lisa(LisaConfig::paper(gamma, 5)), cfg);
+    let mut sess = TrainSession::new(&rt, &StrategySpec::lisa(gamma, 5), cfg)?;
     let res = sess.run(&mut cpt_dl)?;
     println!("CPT: loss {:.3} -> {:.3}", res.loss_curve[0].1, res.final_train_loss);
 
@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     let mut params = lisa::model::ModelParams::init(&m, &mut lisa::util::rng::Rng::new(0));
     checkpoint::load_model(&ckpt, &mut params)?;
     let cfg = TrainConfig { steps: 40, lr: 3e-3, seed: 10, log_every: 10, ..Default::default() };
-    let mut ft = TrainSession::with_params(&rt, Method::Lisa(LisaConfig::paper(gamma, 5)), cfg, params);
+    let mut ft = TrainSession::with_params(&rt, &StrategySpec::lisa(gamma, 5), cfg, params)?;
     ft.run(&mut train_dl)?;
     let p = ft.eval_params();
     let rep = eval::evaluate(&mut ft.engine, &p, &test_dl)?;

@@ -9,9 +9,9 @@ use std::path::Path;
 
 use lisa::data::{corpus, encode_sft, split_train_val, DataLoader, Tokenizer};
 use lisa::eval;
-use lisa::lisa::LisaConfig;
 use lisa::runtime::Runtime;
-use lisa::train::{Method, TrainConfig, TrainSession};
+use lisa::strategy::StrategySpec;
+use lisa::train::{TrainConfig, TrainSession};
 
 fn main() -> anyhow::Result<()> {
     lisa::util::logger::init();
@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let test_dl = DataLoader::new(enc(&te), m.batch, m.seq, 2);
 
     let cfg = TrainConfig { steps: 60, lr: 3e-3, seed: 6, log_every: 20, ..Default::default() };
-    let mut sess = TrainSession::new(&rt, Method::Lisa(LisaConfig::paper(2, 5)), cfg);
+    let mut sess = TrainSession::new(&rt, &StrategySpec::lisa(2, 5), cfg)?;
     sess.run(&mut train_dl)?;
     let params = sess.eval_params();
 

@@ -10,9 +10,9 @@ use std::path::Path;
 
 use lisa::data::{corpus, encode_sft, split_train_val, DataLoader, Tokenizer};
 use lisa::eval;
-use lisa::lisa::LisaConfig;
 use lisa::runtime::Runtime;
-use lisa::train::{Method, TrainConfig, TrainSession};
+use lisa::strategy::StrategySpec;
+use lisa::train::{TrainConfig, TrainSession};
 
 fn main() -> anyhow::Result<()> {
     lisa::util::logger::init();
@@ -26,10 +26,10 @@ fn main() -> anyhow::Result<()> {
     let mut train_dl = DataLoader::new(enc(&tr), m.batch, m.seq, 4);
     let test_dl = DataLoader::new(enc(&te), m.batch, m.seq, 4);
 
-    for method in [Method::Lisa(LisaConfig::paper(2, 5)), Method::Lora] {
-        let label = method.label();
+    for spec in [StrategySpec::lisa(2, 5), StrategySpec::lora()] {
         let cfg = TrainConfig { steps: 50, lr: 3e-3, seed: 11, log_every: 0, ..Default::default() };
-        let mut sess = TrainSession::new(&rt, method, cfg);
+        let mut sess = TrainSession::new(&rt, &spec, cfg)?;
+        let label = sess.label();
         let res = sess.run(&mut train_dl)?;
         let p = sess.eval_params();
         let rep = eval::evaluate(&mut sess.engine, &p, &test_dl)?;

@@ -10,9 +10,9 @@ use std::path::Path;
 
 use lisa::data::{corpus, encode_sft, split_train_val, DataLoader, Tokenizer};
 use lisa::eval;
-use lisa::lisa::LisaConfig;
 use lisa::runtime::Runtime;
-use lisa::train::{Method, TrainConfig, TrainSession};
+use lisa::strategy::StrategySpec;
+use lisa::train::{TrainConfig, TrainSession};
 
 fn main() -> anyhow::Result<()> {
     lisa::util::logger::init();
@@ -31,11 +31,12 @@ fn main() -> anyhow::Result<()> {
     let val_dl = DataLoader::new(enc(&val), m.batch, m.seq, 1);
 
     // 3. Train with LISA (γ=2 layers unfrozen, resampled every K=5 steps)
-    //    and with full-parameter AdamW for comparison.
-    for method in [Method::Lisa(LisaConfig::paper(2, 5)), Method::Full] {
-        let label = method.label();
+    //    and with full-parameter AdamW for comparison. Any name from
+    //    `strategy::registry()` works here — `lisa exp list` prints them.
+    for spec in [StrategySpec::lisa(2, 5), StrategySpec::ft()] {
         let cfg = TrainConfig { steps: 40, lr: 3e-3, seed: 42, log_every: 10, ..Default::default() };
-        let mut sess = TrainSession::new(&rt, method, cfg);
+        let mut sess = TrainSession::new(&rt, &spec, cfg)?;
+        let label = sess.label();
         let res = sess.run(&mut train_dl)?;
         let params = sess.eval_params();
         let rep = eval::evaluate(&mut sess.engine, &params, &val_dl)?;

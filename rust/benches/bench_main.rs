@@ -18,7 +18,8 @@ use lisa::lisa::{LisaConfig, LisaScheduler};
 use lisa::model::{ModelParams, ParamKey};
 use lisa::opt::{adamw::AdamHp, AdamW, Galore, GaloreHp, StatePolicy};
 use lisa::runtime::{HostTensor, Operand, Runtime};
-use lisa::train::{Method, TrainConfig, TrainSession};
+use lisa::strategy::StrategySpec;
+use lisa::train::{TrainConfig, TrainSession};
 use lisa::util::bench::{black_box, Bench};
 use lisa::util::rng::Rng;
 
@@ -151,15 +152,15 @@ fn main() -> anyhow::Result<()> {
         let samples = corpus::gen_instruction_corpus(128, 3);
         let tok = Tokenizer::build(&corpus::sample_texts(&samples), m.vocab);
         let enc: Vec<_> = samples.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
-        for method in [
-            Method::Full,
-            Method::Lisa(LisaConfig::paper(2, 5)),
-            Method::Lora,
+        for spec in [
+            StrategySpec::ft(),
+            StrategySpec::lisa(2, 5),
+            StrategySpec::lora(),
         ] {
-            let label = method.label().to_string();
             let mut dl = DataLoader::new(enc.clone(), m.batch, m.seq, 1);
             let cfg = TrainConfig { steps: 0, lr: 1e-3, log_every: 0, ..Default::default() };
-            let mut sess = TrainSession::new(&rt, method, cfg);
+            let mut sess = TrainSession::new(&rt, &spec, cfg)?;
+            let label = sess.label().to_string();
             // warm executables
             sess.step(0, &mut dl)?;
             let mut step = 1usize;
@@ -184,7 +185,7 @@ fn main() -> anyhow::Result<()> {
         rt.reset_stats();
         let mut dl = DataLoader::new(enc.clone(), m.batch, m.seq, 1);
         let cfg = TrainConfig { steps: 0, lr: 1e-3, log_every: 0, ..Default::default() };
-        let mut sess = TrainSession::new(&rt, Method::Full, cfg);
+        let mut sess = TrainSession::new(&rt, &StrategySpec::ft(), cfg)?;
         sess.step(0, &mut dl)?;
         rt.reset_stats();
         let t0 = std::time::Instant::now();

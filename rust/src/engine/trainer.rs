@@ -128,6 +128,20 @@ impl Grads {
         }
     }
 
+    /// Per-block gradient L2 norms; `None` = frozen this step (no gradient
+    /// was ever computed). Feeds the gradient-adaptive sampler
+    /// (`strategy::lisa_grad`).
+    pub fn block_norms(&self) -> Vec<Option<f64>> {
+        self.blocks
+            .iter()
+            .map(|blk| {
+                blk.as_ref().map(|ts| {
+                    ts.iter().map(|t| t.l2_norm().powi(2)).sum::<f64>().sqrt()
+                })
+            })
+            .collect()
+    }
+
     /// Global gradient L2 norm over the trainable subset.
     pub fn global_norm(&self) -> f64 {
         let mut sq = 0.0;

@@ -1,12 +1,13 @@
 //! Ablations: Table 6 (γ × K), Table 7 (seeds), Table 10 (γ × lr),
 //! Table 11 (LISA-fix), Figs 8/9/10 (the corresponding loss curves), and
-//! the Limitations-section extension (weighted importance sampling).
+//! the extensions: weighted importance sampling (Limitations §) and
+//! gradient-adaptive sampling (`lisa-grad`, the GRASS direction).
 
 use anyhow::Result;
 
 use crate::eval;
-use crate::lisa::{LayerDist, LisaConfig};
-use crate::train::{Method, TrainConfig};
+use crate::strategy::StrategySpec;
+use crate::train::TrainConfig;
 use crate::util::table::{fnum, Table};
 
 use super::common::{math_task, run_arm, sft_task, Ctx};
@@ -23,9 +24,9 @@ pub fn tab6_hparams(ctx: &Ctx, config: &str) -> Result<()> {
     let mut k_curves = Vec::new();
     for gamma in [2usize, n_layers.min(8).max(3)] {
         for k in [steps, (steps / 5).max(1), (steps / 10).max(1), 1] {
-            let method = Method::Lisa(LisaConfig::paper(gamma, k));
+            let spec = StrategySpec::lisa(gamma, k);
             let cfg = TrainConfig { steps, lr: 3e-3, seed: ctx.seed, log_every: 0, ..Default::default() };
-            let (res, mut sess) = run_arm(&rt, method, cfg, &mut task.train)?;
+            let (res, mut sess) = run_arm(&rt, &spec, cfg, &mut task.train)?;
             let params = sess.eval_params();
             let (_, score) = eval::category_scores(&mut sess.engine, &params, &task.val)?;
             t.row(vec![
@@ -62,8 +63,8 @@ pub fn tab7_seeds(ctx: &Ctx, config: &str) -> Result<()> {
     let mut scores = Vec::new();
     for (i, seed) in [1u64, 2, 3].into_iter().enumerate() {
         let cfg = TrainConfig { steps, lr: 3e-3, seed, log_every: 0, ..Default::default() };
-        let method = Method::Lisa(LisaConfig::paper(2, (steps / 5).max(1)));
-        let (res, mut sess) = run_arm(&rt, method, cfg, &mut task.train)?;
+        let spec = StrategySpec::lisa(2, (steps / 5).max(1));
+        let (res, mut sess) = run_arm(&rt, &spec, cfg, &mut task.train)?;
         let params = sess.eval_params();
         let (_, score) = eval::category_scores(&mut sess.engine, &params, &task.val)?;
         scores.push(score);
@@ -107,8 +108,8 @@ pub fn tab10_gamma_lr(ctx: &Ctx, config: &str) -> Result<()> {
         let mut row = vec![gamma.to_string()];
         for &lr in &lrs {
             let cfg = TrainConfig { steps, lr, seed: ctx.seed, log_every: 0, ..Default::default() };
-            let method = Method::Lisa(LisaConfig::paper(gamma, (steps / 5).max(1)));
-            let (_res, mut sess) = run_arm(&rt, method, cfg, &mut task.train)?;
+            let spec = StrategySpec::lisa(gamma, (steps / 5).max(1));
+            let (_res, mut sess) = run_arm(&rt, &spec, cfg, &mut task.train)?;
             let params = sess.eval_params();
             let em = eval::evaluate(&mut sess.engine, &params, &task.test)?.exact_match;
             row.push(fnum(100.0 * em, 1));
@@ -128,16 +129,14 @@ pub fn tab11_fixed(ctx: &Ctx, config: &str) -> Result<()> {
     let mut task = sft_task(&rt, 320, 0.12, ctx.seed);
     let mut t = Table::new(vec!["Method", "MT-Bench-proxy", "final-train-loss"]);
     let k = (steps / 5).max(1);
-    let mut arms: Vec<(String, Method, u64)> =
-        vec![("LISA".into(), Method::Lisa(LisaConfig::paper(2, k)), ctx.seed)];
+    let mut arms: Vec<(String, StrategySpec, u64)> =
+        vec![("LISA".into(), StrategySpec::lisa(2, k), ctx.seed)];
     for i in 1..=3u64 {
-        let mut c = LisaConfig::paper(2, k);
-        c.fixed = true;
-        arms.push((format!("LISA-fix-{i}"), Method::Lisa(c), i));
+        arms.push((format!("LISA-fix-{i}"), StrategySpec::lisa_fixed(2, k), i));
     }
-    for (label, method, seed) in arms {
+    for (label, spec, seed) in arms {
         let cfg = TrainConfig { steps, lr: 3e-3, seed, log_every: 0, ..Default::default() };
-        let (res, mut sess) = run_arm(&rt, method, cfg, &mut task.train)?;
+        let (res, mut sess) = run_arm(&rt, &spec, cfg, &mut task.train)?;
         let params = sess.eval_params();
         let (_, score) = eval::category_scores(&mut sess.engine, &params, &task.val)?;
         t.row(vec![label, fnum(score, 2), fnum(res.final_train_loss as f64, 4)]);
@@ -167,17 +166,13 @@ pub fn lisa_weighted(ctx: &Ctx, config: &str) -> Result<()> {
         .collect();
 
     let mut t = Table::new(vec!["variant", "MT-Bench-proxy", "final-train-loss"]);
-    let arms: Vec<(&str, LisaConfig)> = vec![
-        ("uniform", LisaConfig::paper(2, k)),
-        ("weighted(U-shape)", {
-            let mut c = LisaConfig::paper(2, k);
-            c.dist = LayerDist::Weighted(weights);
-            c
-        }),
+    let arms: Vec<(&str, StrategySpec)> = vec![
+        ("uniform", StrategySpec::lisa(2, k)),
+        ("weighted(U-shape)", StrategySpec::lisa_weighted(2, k, &weights)),
     ];
-    for (label, lc) in arms {
+    for (label, spec) in arms {
         let cfg = TrainConfig { steps, lr: 3e-3, seed: ctx.seed, log_every: 0, ..Default::default() };
-        let (res, mut sess) = run_arm(&rt, Method::Lisa(lc), cfg, &mut task.train)?;
+        let (res, mut sess) = run_arm(&rt, &spec, cfg, &mut task.train)?;
         let params = sess.eval_params();
         let (_, score) = eval::category_scores(&mut sess.engine, &params, &task.val)?;
         t.row(vec![label.to_string(), fnum(score, 2), fnum(res.final_train_loss as f64, 4)]);
@@ -185,5 +180,41 @@ pub fn lisa_weighted(ctx: &Ctx, config: &str) -> Result<()> {
     println!("\n## Extension: uniform vs importance-weighted layer sampling ('{config}')\n");
     t.print();
     ctx.save_table(&format!("lisa-weighted-{config}"), &t)?;
+    Ok(())
+}
+
+/// Extension (GRASS direction, PAPERS.md): gradient-adaptive importance
+/// sampling — each resample weights blocks by a running EMA of their
+/// gradient norms — vs the paper's uniform LISA and full fine-tuning. This
+/// arm exists purely through the strategy registry: no training-loop code
+/// knows about it.
+pub fn lisa_grad(ctx: &Ctx, config: &str) -> Result<()> {
+    let rt = ctx.runtime(config)?;
+    let steps = ctx.steps(60);
+    let mut task = sft_task(&rt, 320, 0.12, ctx.seed);
+    let k = (steps / 5).max(1);
+
+    let mut t = Table::new(vec!["Method", "MT-Bench-proxy", "final-train-loss"]);
+    for spec in [
+        StrategySpec::lisa(2, k),
+        StrategySpec::lisa_grad(2, k),
+        StrategySpec::ft(),
+    ] {
+        let cfg = TrainConfig {
+            steps,
+            lr: spec.default_lr(),
+            seed: ctx.seed,
+            log_every: 0,
+            ..Default::default()
+        };
+        let (res, mut sess) = run_arm(&rt, &spec, cfg, &mut task.train)?;
+        let label = sess.label().to_string();
+        let params = sess.eval_params();
+        let (_, score) = eval::category_scores(&mut sess.engine, &params, &task.val)?;
+        t.row(vec![label, fnum(score, 2), fnum(res.final_train_loss as f64, 4)]);
+    }
+    println!("\n## Extension: gradient-adaptive importance sampling ('{config}')\n");
+    t.print();
+    ctx.save_table(&format!("lisa-grad-{config}"), &t)?;
     Ok(())
 }

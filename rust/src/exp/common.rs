@@ -8,7 +8,8 @@ use anyhow::{Context as _, Result};
 
 use crate::data::{corpus, encode_lm_stream, encode_sft, split_train_val, DataLoader, Tokenizer};
 use crate::runtime::Runtime;
-use crate::train::{Method, TrainConfig, TrainResult, TrainSession};
+use crate::strategy::StrategySpec;
+use crate::train::{TrainConfig, TrainResult, TrainSession};
 use crate::util::table::Table;
 
 /// Experiment context from the CLI.
@@ -129,24 +130,24 @@ pub fn medqa_task(rt: &Runtime, n: usize, seed: u64) -> SftTask {
     }
 }
 
-/// Train one arm and return (result, session) — the session keeps the
-/// trained parameters for evaluation.
+/// Train one arm from its registry spec and return (result, session) — the
+/// session keeps the trained parameters for evaluation.
 pub fn run_arm<'rt>(
     rt: &'rt Runtime,
-    method: Method,
+    spec: &StrategySpec,
     cfg: TrainConfig,
     loader: &mut DataLoader,
 ) -> Result<(TrainResult, TrainSession<'rt>)> {
-    let label = method.label();
+    let mut sess = TrainSession::new(rt, spec, cfg)?;
+    let label = sess.label();
     log::info!(
         "arm [{}] steps={} lr={:.1e} seed={}",
         label,
-        cfg.steps,
-        cfg.lr,
-        cfg.seed
+        sess.cfg.steps,
+        sess.cfg.lr,
+        sess.cfg.seed
     );
     let t0 = std::time::Instant::now();
-    let mut sess = TrainSession::new(rt, method, cfg);
     let res = sess.run(loader)?;
     log::info!(
         "arm [{}] done in {:.1}s (median {:.0} ms/step, final loss {:.4})",
@@ -156,18 +157,6 @@ pub fn run_arm<'rt>(
         res.final_train_loss
     );
     Ok((res, sess))
-}
-
-/// Default LR per method, scaled from the paper's Table 15 search: LISA and
-/// LoRA run ~10x the FT learning rate.
-pub fn default_lr(method: &Method) -> f32 {
-    match method {
-        Method::Vanilla => 0.0,
-        Method::Full => 1e-3,
-        Method::Galore(_) => 1e-3,
-        Method::Lisa(_) => 3e-3,
-        Method::Lora => 3e-3,
-    }
 }
 
 pub fn ensure_dir(p: &Path) -> Result<()> {

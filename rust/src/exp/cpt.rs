@@ -9,8 +9,8 @@
 use anyhow::Result;
 
 use crate::eval;
-use crate::lisa::LisaConfig;
-use crate::train::{Method, TrainConfig, TrainSession};
+use crate::strategy::StrategySpec;
+use crate::train::{TrainConfig, TrainSession};
 use crate::util::table::{fnum, human_bytes, Table};
 
 use super::common::{math_task, run_arm, Ctx};
@@ -20,37 +20,37 @@ fn pipeline(
     ctx: &Ctx,
     rt: &crate::runtime::Runtime,
     task: &mut super::common::MathTask,
-    method: Method,
+    spec: &StrategySpec,
     cpt_steps: usize,
     ft_steps: usize,
 ) -> Result<(f64, u64)> {
     // Stage 1: continual pre-training (skipped for Vanilla).
-    let (params, cpt_peak) = if matches!(method, Method::Vanilla) {
+    let (params, cpt_peak) = if spec.is("vanilla") {
         let mut rng = crate::util::rng::Rng::new(ctx.seed);
         (crate::model::ModelParams::init(&rt.manifest, &mut rng), 0u64)
     } else {
         let cfg = TrainConfig {
             steps: cpt_steps,
-            lr: super::common::default_lr(&method),
+            lr: spec.default_lr(),
             seed: ctx.seed,
             log_every: 0,
             ..Default::default()
         };
-        let (res, sess) = run_arm(rt, method.clone(), cfg, &mut task.cpt)?;
+        let (res, sess) = run_arm(rt, spec, cfg, &mut task.cpt)?;
         (sess.eval_params(), res.peak_mem)
     };
 
     // Stage 2: supervised fine-tune on word problems (same method; the
     // paper fine-tunes with the same procedure after CPT).
-    let ft_method = if matches!(method, Method::Vanilla) { Method::Full } else { method };
+    let ft_spec = if spec.is("vanilla") { StrategySpec::ft() } else { spec.clone() };
     let cfg = TrainConfig {
         steps: ft_steps,
-        lr: super::common::default_lr(&ft_method),
+        lr: ft_spec.default_lr(),
         seed: ctx.seed ^ 0xf7,
         log_every: 0,
         ..Default::default()
     };
-    let mut sess = TrainSession::with_params(rt, ft_method, cfg, params);
+    let mut sess = TrainSession::with_params(rt, &ft_spec, cfg, params)?;
     sess.run(&mut task.train)?;
     let p = sess.eval_params();
     let em = eval::evaluate(&mut sess.engine, &p, &task.test)?.exact_match;
@@ -66,13 +66,13 @@ pub fn tab4_cpt(ctx: &Ctx, config: &str) -> Result<()> {
     let gamma = (rt.manifest.n_layers / 2).max(1); // "half the layers" rule
 
     let mut t = Table::new(vec!["Method", "GSM8K-proxy(EM%)", "CPT peak mem"]);
-    for method in [
-        Method::Vanilla,
-        Method::Lisa(LisaConfig::paper(gamma, (cpt_steps / 6).max(1))),
-        Method::Full,
+    for spec in [
+        StrategySpec::vanilla(),
+        StrategySpec::lisa(gamma, (cpt_steps / 6).max(1)),
+        StrategySpec::ft(),
     ] {
-        let label = method.label().to_string();
-        let (em, peak) = pipeline(ctx, &rt, &mut task, method, cpt_steps, ft_steps)?;
+        let label = spec.name.clone();
+        let (em, peak) = pipeline(ctx, &rt, &mut task, &spec, cpt_steps, ft_steps)?;
         t.row(vec![
             label,
             fnum(100.0 * em, 1),
@@ -98,11 +98,11 @@ pub fn fig7_cpt_gamma(ctx: &Ctx, config: &str) -> Result<()> {
         if gamma > n_layers {
             continue;
         }
-        let method = Method::Lisa(LisaConfig::paper(gamma, (cpt_steps / 6).max(1)));
-        let (em, _) = pipeline(ctx, &rt, &mut task, method, cpt_steps, ft_steps)?;
+        let spec = StrategySpec::lisa(gamma, (cpt_steps / 6).max(1));
+        let (em, _) = pipeline(ctx, &rt, &mut task, &spec, cpt_steps, ft_steps)?;
         t.row(vec![format!("LISA γ={gamma}"), fnum(100.0 * em, 1)]);
     }
-    let (em_ft, _) = pipeline(ctx, &rt, &mut task, Method::Full, cpt_steps, ft_steps)?;
+    let (em_ft, _) = pipeline(ctx, &rt, &mut task, &StrategySpec::ft(), cpt_steps, ft_steps)?;
     t.row(vec!["FT".to_string(), fnum(100.0 * em_ft, 1)]);
 
     println!("\n## Fig 7 (CPT γ sweep on '{config}')\n");

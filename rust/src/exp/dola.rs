@@ -4,11 +4,11 @@
 use anyhow::Result;
 
 use crate::eval;
-use crate::lisa::LisaConfig;
-use crate::train::{Method, TrainConfig, TrainSession};
+use crate::strategy::StrategySpec;
+use crate::train::{TrainConfig, TrainSession};
 use crate::util::table::{fnum, Table};
 
-use super::common::{default_lr, math_task, Ctx};
+use super::common::{math_task, Ctx};
 
 pub fn tab12_dola(ctx: &Ctx, config: &str) -> Result<()> {
     let rt = ctx.runtime(config)?;
@@ -23,27 +23,27 @@ pub fn tab12_dola(ctx: &Ctx, config: &str) -> Result<()> {
         h
     });
 
-    let arms: Vec<(String, Option<Method>)> = vec![
+    let arms: Vec<(String, Option<StrategySpec>)> = vec![
         ("vanilla".into(), None),
-        ("ft".into(), Some(Method::Full)),
-        ("lisa".into(), Some(Method::Lisa(LisaConfig::paper(2, (steps / 5).max(1))))),
+        ("ft".into(), Some(StrategySpec::ft())),
+        ("lisa".into(), Some(StrategySpec::lisa(2, (steps / 5).max(1)))),
     ];
-    for (label, method) in arms {
-        let mut sess = match method {
+    for (label, spec) in arms {
+        let mut sess = match spec {
             None => TrainSession::new(
                 &rt,
-                Method::Vanilla,
+                &StrategySpec::vanilla(),
                 TrainConfig { steps: 0, log_every: 0, ..Default::default() },
-            ),
-            Some(m) => {
+            )?,
+            Some(spec) => {
                 let cfg = TrainConfig {
                     steps,
-                    lr: default_lr(&m),
+                    lr: spec.default_lr(),
                     seed: ctx.seed,
                     log_every: 0,
                     ..Default::default()
                 };
-                let mut s = TrainSession::new(&rt, m, cfg);
+                let mut s = TrainSession::new(&rt, &spec, cfg)?;
                 s.run(&mut task.train)?;
                 s
             }

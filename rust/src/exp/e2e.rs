@@ -5,9 +5,9 @@
 use anyhow::Result;
 
 use crate::eval;
-use crate::lisa::LisaConfig;
 use crate::model::checkpoint;
-use crate::train::{Method, TrainConfig, TrainSession};
+use crate::strategy::StrategySpec;
+use crate::train::{TrainConfig, TrainSession};
 use crate::util::table::{fnum, human_bytes, Table};
 
 use super::common::{sft_task, Ctx};
@@ -28,7 +28,7 @@ pub fn e2e(ctx: &Ctx, config: &str, steps_override: Option<usize>) -> Result<()>
     );
 
     let mut task = sft_task(&rt, 640, 0.04, ctx.seed);
-    let method = Method::Lisa(LisaConfig::paper(2, 10));
+    let spec = StrategySpec::lisa(2, 10);
     let cfg = TrainConfig {
         steps: eval_every,
         lr: 3e-3,
@@ -36,7 +36,7 @@ pub fn e2e(ctx: &Ctx, config: &str, steps_override: Option<usize>) -> Result<()>
         log_every: 0,
         ..Default::default()
     };
-    let mut sess = TrainSession::new(&rt, method, cfg);
+    let mut sess = TrainSession::new(&rt, &spec, cfg)?;
 
     let t0 = std::time::Instant::now();
     let mut curve: Vec<(usize, f64)> = Vec::new();

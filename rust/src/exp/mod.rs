@@ -36,6 +36,7 @@ pub const EXPERIMENTS: &[(&str, &str, &str)] = &[
     ("tab11-fixed", "small", "Table 11: LISA vs fixed layer subsets"),
     ("tab12-dola", "small", "Table 12: early-exit (DoLa) evaluation"),
     ("lisa-weighted", "small", "Extension: weighted importance sampling (Limitations §)"),
+    ("lisa-grad", "small", "Extension: gradient-adaptive importance sampling (GRASS direction)"),
     ("theory-convergence", "tiny", "Theorem 1: O(1/sqrt(T)) average-regret check on convex quadratics"),
     ("e2e", "base", "End-to-end system driver (train + eval + checkpoint + profile)"),
 ];
@@ -44,6 +45,10 @@ pub fn list() {
     println!("{:<18} {:<7} description", "id", "config");
     for (id, cfg, desc) in EXPERIMENTS {
         println!("{id:<18} {cfg:<7} {desc}");
+    }
+    println!("\nregistered strategies (train --method / experiment arms):");
+    for r in crate::strategy::registry() {
+        println!("{:<12} lr {:<8} {}", r.name, format!("{:.0e}", r.default_lr), r.summary);
     }
 }
 
@@ -75,6 +80,7 @@ pub fn run(ctx: &Ctx, id: &str, config_override: Option<&str>, steps: Option<usi
         "tab11-fixed" => ablate::tab11_fixed(ctx, c),
         "tab12-dola" => dola::tab12_dola(ctx, c),
         "lisa-weighted" => ablate::lisa_weighted(ctx, c),
+        "lisa-grad" => ablate::lisa_grad(ctx, c),
         "theory-convergence" => theory::theory_convergence(ctx, c),
         "report" => report::write_report(ctx),
         "e2e" => e2e::e2e(ctx, c, steps),
@@ -84,7 +90,7 @@ pub fn run(ctx: &Ctx, id: &str, config_override: Option<&str>, steps: Option<usi
                 "tab1-memory", "fig3-memory", "fig4-itertime", "fig2-weightnorm",
                 "suite-finetune", "fig1-loss", "tab4-cpt", "fig7-cpt-gamma",
                 "tab6-hparams", "tab7-seeds", "tab10-gamma-lr", "tab11-fixed",
-                "tab12-dola", "lisa-weighted", "theory-convergence",
+                "tab12-dola", "lisa-weighted", "lisa-grad", "theory-convergence",
             ] {
                 println!("\n==================== exp {id} ====================");
                 run(ctx, id, config_override, steps)?;

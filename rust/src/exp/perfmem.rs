@@ -9,13 +9,13 @@
 
 use anyhow::Result;
 
-use crate::lisa::LisaConfig;
 use crate::membench::{self, MemMethod, PAPER_MODELS};
-use crate::opt::{GaloreHp, StatePolicy};
-use crate::train::{Method, TrainConfig};
+use crate::opt::StatePolicy;
+use crate::strategy::StrategySpec;
+use crate::train::TrainConfig;
 use crate::util::table::{fnum, human_bytes, Table};
 
-use super::common::{default_lr, run_arm, sft_task, Ctx};
+use super::common::{run_arm, sft_task, Ctx};
 
 /// Measure peak bytes of a few steps of each method on a local config.
 fn measured_rows(ctx: &Ctx, config: &str) -> Result<Table> {
@@ -23,21 +23,21 @@ fn measured_rows(ctx: &Ctx, config: &str) -> Result<Table> {
     let mut task = sft_task(&rt, 128, 0.1, ctx.seed);
     let mut t = Table::new(vec!["method", "measured peak", "params", "grads", "optim", "acts", "lora"]);
     let n_layers = rt.manifest.n_layers;
-    let methods: Vec<(String, Method)> = vec![
-        ("vanilla(FT)".into(), Method::Full),
-        ("lora".into(), Method::Lora),
-        ("lisa E+H+2L (drop)".into(), Method::Lisa(LisaConfig::paper(2.min(n_layers), 5))),
+    let specs: Vec<(String, StrategySpec)> = vec![
+        ("vanilla(FT)".into(), StrategySpec::ft()),
+        ("lora".into(), StrategySpec::lora()),
+        ("lisa E+H+2L (drop)".into(), StrategySpec::lisa(2.min(n_layers), 5)),
     ];
-    for (label, method) in methods {
+    for (label, spec) in specs {
         let cfg = TrainConfig {
             steps: 6,
-            lr: default_lr(&method),
+            lr: spec.default_lr(),
             seed: ctx.seed,
             state_policy: StatePolicy::Drop,
             log_every: 0,
             ..Default::default()
         };
-        let (res, _sess) = run_arm(&rt, method, cfg, &mut task.train)?;
+        let (res, _sess) = run_arm(&rt, &spec, cfg, &mut task.train)?;
         let get = |k: &str| {
             res.mem_breakdown
                 .iter()
@@ -88,21 +88,21 @@ pub fn fig4_itertime(ctx: &Ctx, config: &str) -> Result<()> {
         "method", "median ms/step", "speedup vs FT", "bwd_full", "bwd_x", "bwd_skipped",
     ]);
     let mut ft_ms = 0.0f64;
-    let methods: Vec<Method> = vec![
-        Method::Full,
-        Method::Lora,
-        Method::Galore(GaloreHp { rank: 8, update_proj_gap: 50, scale: 1.0, ..Default::default() }),
-        Method::Lisa(LisaConfig::paper(2, 5)),
+    let specs: Vec<StrategySpec> = vec![
+        StrategySpec::ft(),
+        StrategySpec::lora(),
+        StrategySpec::galore(8).with("update-proj-gap", 50usize).with("scale", 1.0f32),
+        StrategySpec::lisa(2, 5),
     ];
-    for method in methods {
-        let label = method.label().to_string();
-        let cfg = TrainConfig { steps, lr: default_lr(&method), seed: ctx.seed, log_every: 0, ..Default::default() };
+    for spec in specs {
+        let cfg = TrainConfig { steps, lr: spec.default_lr(), seed: ctx.seed, log_every: 0, ..Default::default() };
         // warm the executable cache before timing
-        let (res, _s) = run_arm(&rt, method.clone(), cfg.clone(), &mut task.train)?;
+        let (res, sess) = run_arm(&rt, &spec, cfg.clone(), &mut task.train)?;
+        let label = sess.label().to_string();
         let (res, _s) = if res.median_step_ms() > 0.0 {
-            run_arm(&rt, method, cfg, &mut task.train)?
+            run_arm(&rt, &spec, cfg, &mut task.train)?
         } else {
-            (res, _s)
+            (res, sess)
         };
         let ms = res.median_step_ms();
         if label == "ft" {

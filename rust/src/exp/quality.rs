@@ -13,20 +13,19 @@ use anyhow::Result;
 
 use crate::data::corpus::CATEGORIES;
 use crate::eval;
-use crate::lisa::LisaConfig;
-use crate::opt::GaloreHp;
-use crate::train::{Method, TrainConfig};
+use crate::strategy::StrategySpec;
+use crate::train::{TrainConfig, TrainSession};
 use crate::util::table::{fnum, Table};
 
-use super::common::{default_lr, run_arm, sft_task, Ctx};
+use super::common::{run_arm, sft_task, Ctx};
 
-fn methods(gamma: usize, k: usize, galore_rank: usize) -> Vec<Method> {
+fn arm_specs(gamma: usize, k: usize, galore_rank: usize) -> Vec<StrategySpec> {
     vec![
-        Method::Vanilla,
-        Method::Lora,
-        Method::Galore(GaloreHp { rank: galore_rank, update_proj_gap: 50, scale: 1.0, ..Default::default() }),
-        Method::Lisa(LisaConfig::paper(gamma, k)),
-        Method::Full,
+        StrategySpec::vanilla(),
+        StrategySpec::lora(),
+        StrategySpec::galore(galore_rank).with("update-proj-gap", 50usize).with("scale", 1.0f32),
+        StrategySpec::lisa(gamma, k),
+        StrategySpec::ft(),
     ]
 }
 
@@ -55,16 +54,16 @@ pub fn suite_finetune(ctx: &Ctx, config: &str) -> Result<()> {
     });
     let mut probe = Table::new(vec!["Method", "fact-recall-head", "fact-recall-tail"]);
 
-    for method in methods(2, 10, rt.manifest.lora_rank.min(32)) {
-        let label = method.label().to_string();
+    for spec in arm_specs(2, 10, rt.manifest.lora_rank.min(32)) {
         let cfg = TrainConfig {
-            steps: if matches!(method, Method::Vanilla) { 0 } else { steps },
-            lr: default_lr(&method),
+            steps: if spec.is("vanilla") { 0 } else { steps },
+            lr: spec.default_lr(),
             seed: ctx.seed,
             log_every: 25,
             ..Default::default()
         };
-        let (res, mut sess) = run_arm(&rt, method, cfg, &mut task.train)?;
+        let (res, mut sess) = run_arm(&rt, &spec, cfg, &mut task.train)?;
+        let label = sess.label().to_string();
         let params = sess.eval_params();
 
         // curves (train loss EMA for readability, raw in CSV)
@@ -125,19 +124,19 @@ pub fn fig1_loss(ctx: &Ctx, config: &str) -> Result<()> {
     let mut task = sft_task(&rt, 480, 0.1, ctx.seed);
     let mut train_series = Vec::new();
     let mut val_series = Vec::new();
-    for method in methods(2, 10, rt.manifest.lora_rank.min(32)) {
-        if matches!(method, Method::Vanilla) {
+    for spec in arm_specs(2, 10, rt.manifest.lora_rank.min(32)) {
+        if spec.is("vanilla") {
             continue;
         }
-        let label = method.label().to_string();
         let cfg = TrainConfig {
             steps: eval_every, // run in chunks so we can interleave val evals
-            lr: default_lr(&method),
+            lr: spec.default_lr(),
             seed: ctx.seed,
             log_every: 0,
             ..Default::default()
         };
-        let mut sess = crate::train::TrainSession::new(&rt, method, cfg);
+        let mut sess = TrainSession::new(&rt, &spec, cfg)?;
+        let label = sess.label().to_string();
         let mut train_pts = Vec::new();
         let mut val_pts = Vec::new();
         let mut step = 0usize;
@@ -180,17 +179,17 @@ pub fn fig2_weightnorm(ctx: &Ctx, config: &str) -> Result<()> {
     let mut series = Vec::new();
     let mut final_norms = Vec::new();
     let mut abs_norms: Vec<Vec<f64>> = Vec::new();
-    for method in [Method::Lora, Method::Full] {
-        let label = method.label().to_string();
+    for spec in [StrategySpec::lora(), StrategySpec::ft()] {
         let cfg = TrainConfig {
             steps,
-            lr: default_lr(&method),
+            lr: spec.default_lr(),
             seed: ctx.seed,
             weight_norm_every: (steps / 10).max(1),
             log_every: 0,
             ..Default::default()
         };
-        let (res, sess) = run_arm(&rt, method, cfg, &mut task.train)?;
+        let (res, sess) = run_arm(&rt, &spec, cfg, &mut task.train)?;
+        let label = sess.label().to_string();
         // Fig 2 plots the *update* emphasis: norm of (theta - theta_0) per
         // layer. Reconstruct delta norms from initial params.
         let init = crate::model::ModelParams::init(&rt.manifest, &mut crate::util::rng::Rng::new(ctx.seed));
@@ -261,33 +260,31 @@ pub fn tab5_large(ctx: &Ctx, config: &str) -> Result<()> {
     let mut t = Table::new(vec![
         "Method", "MT-Bench-proxy", "GSM8K-proxy(EM%)", "PubMedQA-proxy(EM%)",
     ]);
-    for method in [
-        Method::Vanilla,
-        Method::Lora,
-        Method::Lisa(LisaConfig::paper(4, 10)),
-        Method::Full,
+    for spec in [
+        StrategySpec::vanilla(),
+        StrategySpec::lora(),
+        StrategySpec::lisa(4, 10),
+        StrategySpec::ft(),
     ] {
-        let label = method.label().to_string();
-        let mk_cfg = |steps: usize, m: &Method| TrainConfig {
+        let arm_steps = if spec.is("vanilla") { 0 } else { steps };
+        let mk_cfg = |steps: usize, s: &StrategySpec| TrainConfig {
             steps,
-            lr: default_lr(m),
+            lr: s.default_lr(),
             seed: ctx.seed,
             log_every: 0,
             ..Default::default()
         };
         // instruction arm
-        let (_r1, mut s1) = run_arm(&rt, method.clone(), mk_cfg(
-            if matches!(method, Method::Vanilla) { 0 } else { steps }, &method), &mut sft.train)?;
+        let (_r1, mut s1) = run_arm(&rt, &spec, mk_cfg(arm_steps, &spec), &mut sft.train)?;
+        let label = s1.label().to_string();
         let p1 = s1.eval_params();
         let (_, mt) = eval::category_scores(&mut s1.engine, &p1, &sft.val)?;
         // math arm
-        let (_r2, mut s2) = run_arm(&rt, method.clone(), mk_cfg(
-            if matches!(method, Method::Vanilla) { 0 } else { steps }, &method), &mut math.train)?;
+        let (_r2, mut s2) = run_arm(&rt, &spec, mk_cfg(arm_steps, &spec), &mut math.train)?;
         let p2 = s2.eval_params();
         let gsm = eval::evaluate(&mut s2.engine, &p2, &math.test)?.exact_match;
         // medqa arm
-        let (_r3, mut s3) = run_arm(&rt, method.clone(), mk_cfg(
-            if matches!(method, Method::Vanilla) { 0 } else { steps }, &method), &mut med.train)?;
+        let (_r3, mut s3) = run_arm(&rt, &spec, mk_cfg(arm_steps, &spec), &mut med.train)?;
         let p3 = s3.eval_params();
         let pub_em = eval::evaluate(&mut s3.engine, &p3, &med.val)?.exact_match;
 

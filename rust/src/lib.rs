@@ -4,10 +4,11 @@
 //! Memory-Efficient Large Language Model Fine-Tuning"* as a three-layer
 //! stack: Pallas kernels (L1) and JAX segment functions (L2) are AOT-lowered
 //! to HLO-text artifacts at build time; this crate (L3) owns the entire
-//! training runtime — the layer-granular forward/backward engine, the LISA
-//! sampler, optimizers (AdamW / GaLore / LoRA adapters), synthetic corpora,
-//! evaluation, the memory model and the experiment harness reproducing every
-//! table and figure of the paper.
+//! training runtime — the layer-granular forward/backward engine, the
+//! strategy layer (every fine-tuning method behind one trait + registry,
+//! see `strategy::`), the LISA sampler, optimizers (AdamW / GaLore / LoRA
+//! adapters), synthetic corpora, evaluation, the memory model and the
+//! experiment harness reproducing every table and figure of the paper.
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the results.
 
@@ -20,6 +21,7 @@ pub mod opt;
 pub mod lora;
 pub mod data;
 pub mod eval;
+pub mod strategy;
 pub mod train;
 pub mod membench;
 pub mod exp;

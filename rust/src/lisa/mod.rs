@@ -85,20 +85,7 @@ impl LisaScheduler {
             LayerDist::Uniform => self.rng.sample_distinct(self.n_layers, self.cfg.gamma),
             LayerDist::Weighted(w) => {
                 assert_eq!(w.len(), self.n_layers, "weight arity");
-                // Weighted sampling without replacement: repeatedly draw
-                // from the remaining mass.
-                let mut w = w.clone();
-                let mut out = Vec::with_capacity(self.cfg.gamma);
-                for _ in 0..self.cfg.gamma.min(self.n_layers) {
-                    if w.iter().sum::<f64>() <= 0.0 {
-                        break;
-                    }
-                    let i = self.rng.sample_weighted(&w);
-                    out.push(i);
-                    w[i] = 0.0;
-                }
-                out.sort_unstable();
-                out
+                sample_weighted_distinct(&mut self.rng, w, self.cfg.gamma)
             }
         };
         self.history.push(self.current.clone());
@@ -130,6 +117,33 @@ impl LisaScheduler {
     pub fn n_resamples(&self) -> usize {
         self.resamples
     }
+}
+
+/// Weighted sampling without replacement: `k` distinct indices drawn
+/// proportionally to `w`, each draw removing its index from the mass.
+/// Returned sorted. Shared by the weighted `LisaScheduler` and the
+/// gradient-adaptive strategy (`strategy::lisa_grad`).
+///
+/// Panics when the positive weight mass runs out before `k` draws —
+/// silently under-sampling would break the γ invariant (every period must
+/// unfreeze exactly γ blocks), so exhaustion is a configuration error.
+pub fn sample_weighted_distinct(rng: &mut Rng, w: &[f64], k: usize) -> Vec<usize> {
+    assert!(k <= w.len(), "sample_weighted_distinct: k={} > n={}", k, w.len());
+    let mut w = w.to_vec();
+    let mut out = Vec::with_capacity(k);
+    for draw in 0..k {
+        let mass: f64 = w.iter().sum();
+        assert!(
+            mass.is_finite() && mass > 0.0,
+            "weighted mass exhausted after {draw}/{k} draws — need at least {k} strictly \
+             positive weights"
+        );
+        let i = rng.sample_weighted(&w);
+        out.push(i);
+        w[i] = 0.0;
+    }
+    out.sort_unstable();
+    out
 }
 
 /// The importance weights LISA's motivation derives from LoRA's layerwise
@@ -253,5 +267,32 @@ mod tests {
     #[should_panic(expected = "γ")]
     fn gamma_exceeding_layers_rejected() {
         LisaScheduler::new(LisaConfig::paper(9, 1), 8, 0);
+    }
+
+    #[test]
+    fn weighted_distinct_covers_positive_support() {
+        let mut rng = Rng::new(2);
+        // exactly k positive weights: the draw must return them all
+        let got = sample_weighted_distinct(&mut rng, &[0.0, 3.0, 0.0, 1.0, 2.0], 3);
+        assert_eq!(got, vec![1, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "weighted mass exhausted")]
+    fn weighted_distinct_errors_instead_of_undersampling() {
+        let mut rng = Rng::new(2);
+        // only one positive weight but two draws requested
+        sample_weighted_distinct(&mut rng, &[0.0, 1.0, 0.0, 0.0], 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "weighted mass exhausted")]
+    fn scheduler_resample_errors_when_mass_runs_out() {
+        // γ=2 but only one block has positive weight: the old sampler
+        // silently returned 1 block, breaking the γ invariant.
+        let mut cfg = LisaConfig::paper(2, 1);
+        cfg.dist = LayerDist::Weighted(vec![0.0, 1.0, 0.0, 0.0]);
+        let mut s = LisaScheduler::new(cfg, 4, 1);
+        s.mask_for_step(0);
     }
 }

@@ -3,11 +3,15 @@
 //! ```text
 //! lisa train  --config small --method lisa --steps 120 ...   one training run
 //! lisa exp <id> [--config C] [--scale 0.5]                   reproduce a paper table/figure
-//! lisa exp list                                              list experiment ids
+//! lisa exp list                                              list experiments + strategies
 //! lisa exp all                                               the full reproduction suite
 //! lisa memory                                                Table-1 memory grid only
 //! lisa info --config small                                   manifest/artifact info
 //! ```
+//!
+//! `--method` resolves through the strategy registry
+//! (`strategy::registry()`), so any registered strategy — including ones
+//! added after this file was written — is trainable with no CLI edits.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -16,9 +20,9 @@ use anyhow::{bail, Result};
 
 use lisa::data::{corpus, encode_sft, split_train_val, DataLoader, Tokenizer};
 use lisa::exp::{self, Ctx};
-use lisa::lisa::LisaConfig;
-use lisa::opt::{GaloreHp, StatePolicy};
-use lisa::train::{Method, TrainConfig, TrainSession};
+use lisa::opt::StatePolicy;
+use lisa::strategy::{self, StrategySpec};
+use lisa::train::{LrSchedule, TrainConfig, TrainSession};
 use lisa::util::cli::Args;
 
 const SPEC: &[(&str, &str, &str)] = &[
@@ -26,13 +30,19 @@ const SPEC: &[(&str, &str, &str)] = &[
     ("artifacts", "artifacts", "artifacts root directory"),
     ("results", "results", "results output directory"),
     ("backend", "pallas", "kernel backend artifacts to load (pallas|jnp)"),
-    ("method", "lisa", "train: vanilla|ft|lisa|lora|galore"),
+    ("method", "lisa", "train: any registered strategy (see `lisa exp list`)"),
     ("steps", "", "training steps (experiment default if empty)"),
-    ("lr", "", "learning rate (method default if empty)"),
+    ("lr", "", "peak learning rate (method default if empty)"),
+    ("lr-schedule", "warmup", "lr schedule: constant|warmup|cosine"),
+    ("warmup", "10", "linear warmup steps"),
+    ("weight-decay", "0.01", "AdamW decoupled weight decay"),
+    ("max-grad-norm", "1.0", "global gradient-norm clip ('none' disables)"),
     ("gamma", "2", "LISA: sampled intermediate layers γ"),
     ("period", "10", "LISA: sampling period K"),
     ("lisa-state", "keep", "LISA optimizer-state policy on refreeze: keep|drop"),
     ("galore-rank", "16", "GaLore projection rank"),
+    ("galore-gap", "50", "GaLore projection refresh interval (steps)"),
+    ("galore-scale", "1.0", "GaLore update scale α"),
     ("grad-accum", "1", "microbatch accumulation"),
     ("seed", "42", "master seed"),
     ("scale", "1.0", "experiment step-budget multiplier"),
@@ -40,22 +50,38 @@ const SPEC: &[(&str, &str, &str)] = &[
     ("eval", "true", "train: evaluate on the val split afterwards"),
 ];
 
-fn parse_method(a: &Args) -> Result<Method> {
-    Ok(match a.get("method").as_str() {
-        "vanilla" => Method::Vanilla,
-        "ft" | "full" => Method::Full,
-        "lora" => Method::Lora,
-        "galore" => Method::Galore(GaloreHp {
-            rank: a.get_usize("galore-rank")?,
-            update_proj_gap: 50,
-            scale: 1.0,
-            ..Default::default()
-        }),
-        "lisa" => Method::Lisa(LisaConfig::paper(
-            a.get_usize("gamma")?,
-            a.get_usize("period")?,
-        )),
-        other => bail!("unknown method '{other}'"),
+/// Build a strategy spec from the CLI: the method name routes through the
+/// registry; method-specific flags ride along as spec options (builders
+/// read the keys they understand).
+fn parse_spec(a: &Args) -> Result<StrategySpec> {
+    let name = a.get("method");
+    if strategy::lookup(&name).is_none() {
+        bail!(
+            "unknown method '{name}' — registered: {}",
+            strategy::names().join(", ")
+        );
+    }
+    Ok(StrategySpec::new(&name)
+        .with("gamma", a.get_usize("gamma")?)
+        .with("period", a.get_usize("period")?)
+        .with("rank", a.get_usize("galore-rank")?)
+        .with("update-proj-gap", a.get_usize("galore-gap")?)
+        .with("scale", a.get_f64("galore-scale")?))
+}
+
+fn parse_max_grad_norm(a: &Args) -> Result<Option<f64>> {
+    Ok(match a.get("max-grad-norm").as_str() {
+        "none" | "off" => None,
+        s => {
+            let v: f64 = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--max-grad-norm expects a number or 'none'"))?;
+            if v > 0.0 {
+                Some(v)
+            } else {
+                None
+            }
+        }
     })
 }
 
@@ -74,16 +100,20 @@ fn cmd_train(a: &Args) -> Result<()> {
     let config = a.get_opt("config").unwrap_or_else(|| "small".into());
     let rt = ctx.runtime(&config)?;
     let m = rt.manifest.clone();
-    let method = parse_method(a)?;
+    let spec = parse_spec(a)?;
     let steps = a.get_opt("steps").map(|s| s.parse()).transpose()?.unwrap_or(100);
     let lr = a
         .get_opt("lr")
         .map(|s| s.parse())
         .transpose()?
-        .unwrap_or_else(|| exp::common::default_lr(&method));
+        .unwrap_or_else(|| spec.default_lr());
     let cfg = TrainConfig {
         steps,
         lr,
+        warmup: a.get_usize("warmup")?,
+        schedule: LrSchedule::parse(&a.get("lr-schedule"))?,
+        weight_decay: a.get_f64("weight-decay")? as f32,
+        max_grad_norm: parse_max_grad_norm(a)?,
         grad_accum: a.get_usize("grad-accum")?,
         seed: ctx.seed,
         state_policy: if a.get("lisa-state") == "drop" {
@@ -102,10 +132,11 @@ fn cmd_train(a: &Args) -> Result<()> {
     let mut train_dl = DataLoader::new(enc_tr, m.batch, m.seq, ctx.seed);
     let val_dl = DataLoader::new(enc_va, m.batch, m.seq, ctx.seed);
 
-    let mut sess = TrainSession::new(&rt, method, cfg);
+    let mut sess = TrainSession::new(&rt, &spec, cfg)?;
     let res = sess.run(&mut train_dl)?;
     println!(
-        "done: final train loss {:.4}, median {:.0} ms/step, peak mem {}",
+        "done [{}]: final train loss {:.4}, median {:.0} ms/step, peak mem {}",
+        sess.label(),
         res.final_train_loss,
         res.median_step_ms(),
         lisa::util::table::human_bytes(res.peak_mem)

@@ -182,6 +182,16 @@ impl Galore {
         }
     }
 
+    /// Drop per-block state (projected moments *and* projection basis) of
+    /// blocks not in `live` — the GaLore side of LISA's
+    /// `StatePolicy::Drop`. Non-block keys (embed/head) always survive.
+    pub fn retain_blocks(&mut self, live: &[usize]) {
+        self.state.retain(|k, _| match k {
+            ParamKey::Block(l, _) => live.contains(l),
+            _ => true,
+        });
+    }
+
     /// Optimizer-state bytes: rank-r moments (the GaLore memory win) plus
     /// the projection bases.
     pub fn state_bytes(&self) -> u64 {

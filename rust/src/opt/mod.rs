@@ -38,10 +38,10 @@ impl Optimizer {
         Optimizer::AdamW(AdamW::new(hp, policy))
     }
 
-    pub fn galore(hp: GaloreHp, seed: u64) -> Self {
+    pub fn galore(hp: GaloreHp, policy: StatePolicy, seed: u64) -> Self {
         Optimizer::Galore {
             proj: Galore::new(hp, seed),
-            aux: AdamW::new(hp.adam, StatePolicy::Keep),
+            aux: AdamW::new(hp.adam, policy),
         }
     }
 
@@ -113,10 +113,19 @@ impl Optimizer {
         }
     }
 
-    /// Post-resample state policy hook (LISA `Drop` mode).
+    /// Post-resample state policy hook (LISA `Drop` mode). Propagates to
+    /// every arm: the GaLore projector drops both the projected moments and
+    /// the basis of re-frozen blocks, so `StatePolicy::Drop` is never
+    /// silently ignored.
     pub fn retain_blocks(&mut self, live: &[usize]) {
-        if let Optimizer::AdamW(o) = self {
-            o.retain_blocks(live);
+        match self {
+            Optimizer::AdamW(o) => o.retain_blocks(live),
+            Optimizer::Galore { proj, aux } => {
+                aux.retain_blocks(live);
+                if aux.policy == StatePolicy::Drop {
+                    proj.retain_blocks(live);
+                }
+            }
         }
     }
 
@@ -148,8 +157,44 @@ mod tests {
         let mut o = Optimizer::adamw(AdamHp::default(), StatePolicy::Keep);
         o.set_lr(0.5);
         assert_eq!(o.lr(), 0.5);
-        let mut g = Optimizer::galore(GaloreHp::default(), 0);
+        let mut g = Optimizer::galore(GaloreHp::default(), StatePolicy::Keep, 0);
         g.set_lr(0.25);
         assert_eq!(g.lr(), 0.25);
+    }
+
+    fn galore_with_state(policy: StatePolicy) -> Optimizer {
+        let hp = GaloreHp { rank: 2, ..Default::default() };
+        let mut o = Optimizer::galore(hp, policy, 0);
+        let (rows, cols) = (4usize, 6usize);
+        let mut p = vec![0.1f32; rows * cols];
+        let g = vec![0.1f32; rows * cols];
+        let mut b = vec![0.5f32; 8];
+        let gb = vec![0.1f32; 8];
+        let Optimizer::Galore { proj, aux } = &mut o else { unreachable!() };
+        proj.step_matrix(ParamKey::Block(0, 1), true, &mut p, &g, rows, cols);
+        proj.step_matrix(ParamKey::Block(2, 1), true, &mut p, &g, rows, cols);
+        aux.step(ParamKey::Block(0, 0), false, &mut b, &gb);
+        aux.step(ParamKey::HeadNorm, false, &mut b, &gb);
+        o
+    }
+
+    #[test]
+    fn galore_retain_blocks_propagates_under_drop() {
+        let mut o = galore_with_state(StatePolicy::Drop);
+        o.retain_blocks(&[2]);
+        let Optimizer::Galore { proj, aux } = &o else { unreachable!() };
+        // block 0 dropped from both the projector and the aux AdamW;
+        // the non-block HeadNorm slot survives
+        assert_eq!(proj.n_slots(), 1);
+        assert_eq!(aux.n_slots(), 1);
+    }
+
+    #[test]
+    fn galore_retain_blocks_noop_under_keep() {
+        let mut o = galore_with_state(StatePolicy::Keep);
+        o.retain_blocks(&[2]);
+        let Optimizer::Galore { proj, aux } = &o else { unreachable!() };
+        assert_eq!(proj.n_slots(), 2);
+        assert_eq!(aux.n_slots(), 2);
     }
 }

@@ -1,0 +1,130 @@
+//! The dense-gradient strategies: full-parameter AdamW (`ft`), GaLore
+//! projection (`galore`) — both train every layer every step and differ
+//! only in the optimizer they own — and the no-op `vanilla` baseline.
+
+use anyhow::Result;
+
+use crate::engine::{Batch, Engine, TrainMask};
+use crate::model::ModelParams;
+use crate::opt::{GaloreHp, Optimizer, StatePolicy};
+use crate::runtime::Manifest;
+use crate::train::TrainConfig;
+
+use super::{adam_hp, GradPath, Strategy};
+
+/// Full-mask training with any `Optimizer` (AdamW for `ft`, the projector
+/// stack for `galore`).
+pub struct DenseStrategy {
+    label: &'static str,
+    n_layers: usize,
+    path: GradPath,
+}
+
+impl DenseStrategy {
+    pub fn full(m: &Manifest, cfg: &TrainConfig) -> DenseStrategy {
+        DenseStrategy {
+            label: "ft",
+            n_layers: m.n_layers,
+            path: GradPath::new(Optimizer::adamw(adam_hp(cfg), StatePolicy::Keep)),
+        }
+    }
+
+    pub fn galore(hp: GaloreHp, m: &Manifest, cfg: &TrainConfig) -> DenseStrategy {
+        DenseStrategy {
+            label: "galore",
+            n_layers: m.n_layers,
+            path: GradPath::new(Optimizer::galore(hp, StatePolicy::Keep, cfg.seed ^ 0x6a10)),
+        }
+    }
+}
+
+impl Strategy for DenseStrategy {
+    fn label(&self) -> &'static str {
+        self.label
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.path.opt.set_lr(lr);
+    }
+
+    fn mask_for_step(&mut self, _step: usize) -> TrainMask {
+        TrainMask::all(self.n_layers)
+    }
+
+    fn accumulate_step(
+        &mut self,
+        engine: &mut Engine<'_>,
+        params: &ModelParams,
+        batch: &Batch,
+        mask: &TrainMask,
+    ) -> Result<f32> {
+        self.path.accumulate(engine, params, batch, mask)
+    }
+
+    fn apply(
+        &mut self,
+        engine: &mut Engine<'_>,
+        params: &mut ModelParams,
+        grad_accum: usize,
+        max_grad_norm: Option<f64>,
+    ) -> Result<()> {
+        self.path.apply_finished(engine, params, grad_accum, max_grad_norm);
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> u64 {
+        self.path.opt.state_bytes()
+    }
+}
+
+/// The untrained baseline: every step is a no-op (the driver short-circuits
+/// on `is_noop`, so no batches are consumed).
+pub struct VanillaStrategy {
+    n_layers: usize,
+}
+
+impl VanillaStrategy {
+    pub fn new(n_layers: usize) -> VanillaStrategy {
+        VanillaStrategy { n_layers }
+    }
+}
+
+impl Strategy for VanillaStrategy {
+    fn label(&self) -> &'static str {
+        "vanilla"
+    }
+
+    fn is_noop(&self) -> bool {
+        true
+    }
+
+    fn set_lr(&mut self, _lr: f32) {}
+
+    fn mask_for_step(&mut self, _step: usize) -> TrainMask {
+        TrainMask::none(self.n_layers)
+    }
+
+    fn accumulate_step(
+        &mut self,
+        _engine: &mut Engine<'_>,
+        _params: &ModelParams,
+        _batch: &Batch,
+        _mask: &TrainMask,
+    ) -> Result<f32> {
+        Ok(0.0)
+    }
+
+    fn apply(
+        &mut self,
+        _engine: &mut Engine<'_>,
+        _params: &mut ModelParams,
+        _grad_accum: usize,
+        _max_grad_norm: Option<f64>,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> u64 {
+        0
+    }
+}

@@ -1,0 +1,81 @@
+//! LISA as a strategy: wraps the paper's `LisaScheduler` (Algorithm 1,
+//! uniform / weighted / fixed sampling) around an AdamW whose state policy
+//! decides whether re-frozen blocks keep their moments (DESIGN.md §6).
+
+use anyhow::Result;
+
+use crate::engine::{Batch, Engine, TrainMask};
+use crate::lisa::{LisaConfig, LisaScheduler};
+use crate::model::ModelParams;
+use crate::opt::Optimizer;
+use crate::runtime::Manifest;
+use crate::train::TrainConfig;
+
+use super::{adam_hp, GradPath, Strategy};
+
+pub struct LisaStrategy {
+    label: &'static str,
+    sched: LisaScheduler,
+    path: GradPath,
+}
+
+impl LisaStrategy {
+    pub fn new(lc: LisaConfig, m: &Manifest, cfg: &TrainConfig) -> LisaStrategy {
+        let label = if lc.fixed { "lisa-fix" } else { "lisa" };
+        LisaStrategy {
+            label,
+            // Seed offset matches the pre-refactor TrainSession so existing
+            // curves replay identically.
+            sched: LisaScheduler::new(lc, m.n_layers, cfg.seed ^ 0x115a),
+            path: GradPath::new(Optimizer::adamw(adam_hp(cfg), cfg.state_policy)),
+        }
+    }
+
+    pub fn scheduler(&self) -> &LisaScheduler {
+        &self.sched
+    }
+}
+
+impl Strategy for LisaStrategy {
+    fn label(&self) -> &'static str {
+        self.label
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.path.opt.set_lr(lr);
+    }
+
+    fn mask_for_step(&mut self, step: usize) -> TrainMask {
+        self.sched.mask_for_step(step)
+    }
+
+    fn on_resample(&mut self) {
+        // State policy: under Drop, free moments of re-frozen blocks.
+        self.path.opt.retain_blocks(self.sched.current_layers());
+    }
+
+    fn accumulate_step(
+        &mut self,
+        engine: &mut Engine<'_>,
+        params: &ModelParams,
+        batch: &Batch,
+        mask: &TrainMask,
+    ) -> Result<f32> {
+        self.path.accumulate(engine, params, batch, mask)
+    }
+
+    fn apply(
+        &mut self,
+        engine: &mut Engine<'_>,
+        params: &mut ModelParams,
+        grad_accum: usize,
+        max_grad_norm: Option<f64>,
+    ) -> Result<()> {
+        self.path.apply_finished(engine, params, grad_accum, max_grad_norm);
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> u64 {
+        self.path.opt.state_bytes()
+    }
+}

@@ -1,0 +1,99 @@
+//! LoRA as a strategy: owns the adapter tensors and their AdamW; the base
+//! model is never touched during training and merged only for evaluation.
+
+use anyhow::Result;
+
+use crate::engine::{Batch, Engine, MemCategory, TrainMask};
+use crate::lora::{self, LoraGrads, LoraState};
+use crate::model::ModelParams;
+use crate::opt::{AdamW, StatePolicy};
+use crate::runtime::Manifest;
+use crate::train::TrainConfig;
+use crate::util::rng::Rng;
+
+use super::{adam_hp, Strategy};
+
+pub struct LoraStrategy {
+    lora: LoraState,
+    opt: AdamW,
+    acc: Option<LoraGrads>,
+    n_layers: usize,
+}
+
+impl LoraStrategy {
+    pub fn new(m: &Manifest, cfg: &TrainConfig) -> LoraStrategy {
+        // Seed offset matches the pre-refactor TrainSession adapter init.
+        let mut rng = Rng::new(cfg.seed ^ 0x10c4);
+        LoraStrategy {
+            lora: LoraState::init(m, &mut rng),
+            opt: AdamW::new(adam_hp(cfg), StatePolicy::Keep),
+            acc: None,
+            n_layers: m.n_layers,
+        }
+    }
+
+    pub fn adapters(&self) -> &LoraState {
+        &self.lora
+    }
+}
+
+impl Strategy for LoraStrategy {
+    fn label(&self) -> &'static str {
+        "lora"
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.opt.hp.lr = lr;
+    }
+
+    fn mask_for_step(&mut self, _step: usize) -> TrainMask {
+        // Base weights and embed/head are frozen; training happens in the
+        // adapters via the dedicated LoRA artifacts.
+        TrainMask::none(self.n_layers)
+    }
+
+    fn accumulate_step(
+        &mut self,
+        engine: &mut Engine<'_>,
+        params: &ModelParams,
+        batch: &Batch,
+        _mask: &TrainMask,
+    ) -> Result<f32> {
+        let (loss, grads) = lora::forward_backward_lora(engine, params, &self.lora, batch)?;
+        match &mut self.acc {
+            None => self.acc = Some(grads),
+            Some(a) => lora::lora_grads_add_assign(a, &grads),
+        }
+        Ok(loss)
+    }
+
+    fn apply(
+        &mut self,
+        engine: &mut Engine<'_>,
+        _params: &mut ModelParams,
+        grad_accum: usize,
+        _max_grad_norm: Option<f64>,
+    ) -> Result<()> {
+        let Some(mut grads) = self.acc.take() else { return Ok(()) };
+        if grad_accum > 1 {
+            lora::lora_grads_scale(&mut grads, 1.0 / grad_accum as f32);
+        }
+        lora::apply_lora_grads(&mut self.opt, &mut self.lora, &grads);
+        engine.meter.set(MemCategory::OptimState, self.opt.state_bytes());
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> u64 {
+        self.opt.state_bytes()
+    }
+
+    fn eval_params(&self, base: &ModelParams) -> ModelParams {
+        let mut p = base.clone();
+        self.lora.merge_into(&mut p);
+        p
+    }
+
+    fn effective_weight_norms(&self, base: &ModelParams) -> Vec<f64> {
+        self.eval_params(base).layer_weight_norms()
+    }
+}

@@ -1,0 +1,529 @@
+//! Fine-tuning strategies behind one trait + a name→constructor registry.
+//!
+//! Every training method — full-parameter AdamW, LISA and its variants,
+//! LoRA adapters, GaLore projection — implements [`Strategy`]; the training
+//! loop (`train::TrainSession`) is a thin generic driver over
+//! `Box<dyn Strategy>` and never dispatches on a method enum. Adding a new
+//! method means writing one impl and one [`Registration`] row (see
+//! DESIGN.md §3 — it fits in ~30 lines); the CLI (`lisa train --method`),
+//! `lisa exp list` discovery and every experiment driver pick it up through
+//! the registry with no further edits.
+//!
+//! Registered strategies:
+//!
+//! | name        | summary                                            |
+//! |-------------|----------------------------------------------------|
+//! | `vanilla`   | no training (baseline rows)                        |
+//! | `ft`        | full-parameter AdamW (alias `full`)                |
+//! | `lisa`      | Algorithm 1, uniform or weighted sampling          |
+//! | `lisa-fix`  | one fixed layer draw (Table 11 ablation)           |
+//! | `lisa-grad` | GRASS-style gradient-adaptive importance sampling  |
+//! | `lora`      | rank-r adapters on all linear layers               |
+//! | `galore`    | rank-r gradient projection                         |
+
+pub mod dense;
+pub mod lisa;
+pub mod lisa_grad;
+pub mod lora;
+
+pub use self::dense::{DenseStrategy, VanillaStrategy};
+pub use self::lisa::LisaStrategy;
+pub use self::lisa_grad::LisaGradStrategy;
+pub use self::lora::LoraStrategy;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::engine::{Batch, Engine, Grads, MemCategory, TrainMask};
+use crate::lisa::{LayerDist, LisaConfig};
+use crate::model::ModelParams;
+use crate::opt::{AdamHp, GaloreHp, Optimizer};
+use crate::runtime::Manifest;
+use crate::train::TrainConfig;
+
+/// One fine-tuning method: owns its optimizer state, layer-selection state
+/// and any auxiliary parameters (LoRA adapters). The training loop drives
+/// it through this interface only.
+pub trait Strategy {
+    /// Stable arm label for tables/curves ("ft", "lisa", "lora", ...).
+    fn label(&self) -> &'static str;
+
+    /// True for strategies that perform no updates (the vanilla baseline);
+    /// the driver short-circuits the whole step.
+    fn is_noop(&self) -> bool {
+        false
+    }
+
+    /// Propagate the scheduled learning rate into the owned optimizer(s).
+    fn set_lr(&mut self, lr: f32);
+
+    /// Trainable mask for 0-based optimizer step `step`. Sampling
+    /// strategies resample here on period boundaries.
+    fn mask_for_step(&mut self, step: usize) -> TrainMask;
+
+    /// Called once per step right after `mask_for_step` — the
+    /// optimizer-state policy hook (LISA `StatePolicy::Drop` frees moments
+    /// of re-frozen blocks here). Default: nothing.
+    fn on_resample(&mut self) {}
+
+    /// One microbatch: forward/backward under `mask`, accumulate gradients
+    /// into internal state, return the microbatch loss.
+    fn accumulate_step(
+        &mut self,
+        engine: &mut Engine<'_>,
+        params: &ModelParams,
+        batch: &Batch,
+        mask: &TrainMask,
+    ) -> Result<f32>;
+
+    /// Consume the accumulated gradients: mean over `grad_accum`
+    /// microbatches, clip to `max_grad_norm` where the method does so, and
+    /// apply the optimizer update to `params` (or to internal adapters).
+    fn apply(
+        &mut self,
+        engine: &mut Engine<'_>,
+        params: &mut ModelParams,
+        grad_accum: usize,
+        max_grad_norm: Option<f64>,
+    ) -> Result<()>;
+
+    /// Bytes currently held by optimizer state (the Table-1 observable).
+    fn state_bytes(&self) -> u64;
+
+    /// Parameters to evaluate: the base model for in-place methods, the
+    /// merged model for adapter methods (LoRA's deploy move).
+    fn eval_params(&self, base: &ModelParams) -> ModelParams {
+        base.clone()
+    }
+
+    /// Layerwise norms of the *effective* weights (Fig 2 observable).
+    fn effective_weight_norms(&self, base: &ModelParams) -> Vec<f64> {
+        base.layer_weight_norms()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared machinery for strategies that carry full `Grads`.
+// ---------------------------------------------------------------------------
+
+/// Microbatch gradient accumulator (full-`Grads` strategies).
+#[derive(Debug, Default)]
+pub struct GradAccum {
+    acc: Option<Grads>,
+}
+
+impl GradAccum {
+    pub fn add(&mut self, g: Grads) {
+        match &mut self.acc {
+            None => self.acc = Some(g),
+            Some(a) => a.add_assign(&g),
+        }
+    }
+
+    /// Mean over `grad_accum` microbatches plus optional global-norm clip;
+    /// `None` when nothing was accumulated this step.
+    pub fn finish(&mut self, grad_accum: usize, max_grad_norm: Option<f64>) -> Option<Grads> {
+        let mut g = self.acc.take()?;
+        if grad_accum > 1 {
+            g.scale(1.0 / grad_accum as f32);
+        }
+        if let Some(max) = max_grad_norm {
+            let norm = g.global_norm();
+            if norm > max {
+                g.scale((max / norm) as f32);
+            }
+        }
+        Some(g)
+    }
+}
+
+/// Optimizer + accumulator pair owning the full-`Grads` step protocol
+/// (forward/backward → accumulate → mean → clip → optimizer update) shared
+/// by every strategy that trains base weights (ft, galore, LISA variants).
+pub struct GradPath {
+    pub opt: Optimizer,
+    accum: GradAccum,
+}
+
+impl GradPath {
+    pub fn new(opt: Optimizer) -> GradPath {
+        GradPath { opt, accum: GradAccum::default() }
+    }
+
+    /// One microbatch: forward/backward under `mask`, accumulate, return
+    /// the loss.
+    pub fn accumulate(
+        &mut self,
+        engine: &mut Engine<'_>,
+        params: &ModelParams,
+        batch: &Batch,
+        mask: &TrainMask,
+    ) -> Result<f32> {
+        let out = engine.forward_backward(params, batch, mask)?;
+        self.accum.add(out.grads);
+        Ok(out.loss)
+    }
+
+    /// Mean + clip the accumulated gradients (see [`GradAccum::finish`]).
+    pub fn finish(&mut self, grad_accum: usize, max_grad_norm: Option<f64>) -> Option<Grads> {
+        self.accum.finish(grad_accum, max_grad_norm)
+    }
+
+    /// Apply a finished gradient set through the optimizer + refresh the
+    /// meter.
+    pub fn apply_grads(&mut self, grads: &Grads, engine: &mut Engine<'_>, params: &mut ModelParams) {
+        let rt = engine.rt;
+        self.opt.apply(params, grads, &rt.manifest.block_params);
+        engine.meter.set(MemCategory::OptimState, self.opt.state_bytes());
+    }
+
+    /// `finish` + `apply_grads` in one go — the whole `Strategy::apply`
+    /// body for strategies with no per-step observation.
+    pub fn apply_finished(
+        &mut self,
+        engine: &mut Engine<'_>,
+        params: &mut ModelParams,
+        grad_accum: usize,
+        max_grad_norm: Option<f64>,
+    ) {
+        if let Some(grads) = self.finish(grad_accum, max_grad_norm) {
+            self.apply_grads(&grads, engine, params);
+        }
+    }
+}
+
+/// AdamW hyperparameters every strategy derives from the train config.
+pub(crate) fn adam_hp(cfg: &TrainConfig) -> AdamHp {
+    AdamHp { lr: cfg.lr, weight_decay: cfg.weight_decay, ..Default::default() }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// Method-specific options, CLI-shaped (string key → value). Builders read
+/// the keys they understand and ignore the rest, so one spec can be routed
+/// to any strategy.
+#[derive(Debug, Clone, Default)]
+pub struct StrategyOpts {
+    pairs: Vec<(String, String)>,
+}
+
+impl StrategyOpts {
+    pub fn set(&mut self, key: &str, val: impl std::fmt::Display) {
+        let v = val.to_string();
+        match self.pairs.iter_mut().find(|(k, _)| k.as_str() == key) {
+            Some(p) => p.1 = v,
+            None => self.pairs.push((key.to_string(), v)),
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .find(|(k, _)| k.as_str() == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("strategy option '{key}': cannot parse '{s}'")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        self.parsed(key, default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        self.parsed(key, default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        self.parsed(key, default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        self.parsed(key, default)
+    }
+
+    /// Comma-separated f64 list (`"0.25,1.0,0.25"`).
+    pub fn f64_list(&self, key: &str) -> Result<Option<Vec<f64>>> {
+        let Some(s) = self.get(key) else { return Ok(None) };
+        let mut out = Vec::new();
+        for part in s.split(',').filter(|p| !p.is_empty()) {
+            let v: f64 = part
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("strategy option '{key}': cannot parse '{part}' as f64"))?;
+            out.push(v);
+        }
+        Ok(Some(out))
+    }
+}
+
+/// Declarative arm description: a registered name plus its options. The
+/// experiment drivers and the CLI both build arms from these, so the set of
+/// runnable methods is exactly the registry.
+#[derive(Debug, Clone)]
+pub struct StrategySpec {
+    pub name: String,
+    pub opts: StrategyOpts,
+}
+
+impl StrategySpec {
+    pub fn new(name: &str) -> StrategySpec {
+        StrategySpec { name: name.to_string(), opts: StrategyOpts::default() }
+    }
+
+    pub fn with(mut self, key: &str, val: impl std::fmt::Display) -> StrategySpec {
+        self.opts.set(key, val);
+        self
+    }
+
+    // Sugar for the common arms (still plain specs underneath).
+    pub fn vanilla() -> StrategySpec {
+        StrategySpec::new("vanilla")
+    }
+
+    pub fn ft() -> StrategySpec {
+        StrategySpec::new("ft")
+    }
+
+    pub fn lora() -> StrategySpec {
+        StrategySpec::new("lora")
+    }
+
+    pub fn galore(rank: usize) -> StrategySpec {
+        StrategySpec::new("galore").with("rank", rank)
+    }
+
+    pub fn lisa(gamma: usize, period: usize) -> StrategySpec {
+        StrategySpec::new("lisa").with("gamma", gamma).with("period", period)
+    }
+
+    pub fn lisa_fixed(gamma: usize, period: usize) -> StrategySpec {
+        StrategySpec::new("lisa-fix").with("gamma", gamma).with("period", period)
+    }
+
+    pub fn lisa_weighted(gamma: usize, period: usize, weights: &[f64]) -> StrategySpec {
+        let w = weights.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
+        StrategySpec::lisa(gamma, period).with("weights", w)
+    }
+
+    pub fn lisa_grad(gamma: usize, period: usize) -> StrategySpec {
+        StrategySpec::new("lisa-grad").with("gamma", gamma).with("period", period)
+    }
+
+    /// Alias-aware name check (`spec.is("vanilla")`).
+    pub fn is(&self, name: &str) -> bool {
+        canonical(&self.name) == canonical(name)
+    }
+
+    /// Paper-scaled default learning rate (Table 15 search: LISA/LoRA run
+    /// ~10x the FT rate).
+    pub fn default_lr(&self) -> f32 {
+        lookup(&self.name).map(|r| r.default_lr).unwrap_or(1e-3)
+    }
+
+    pub fn build(&self, m: &Manifest, cfg: &TrainConfig) -> Result<Box<dyn Strategy>> {
+        let reg = lookup(&self.name).ok_or_else(|| {
+            anyhow!("unknown strategy '{}' — registered: {}", self.name, names().join(", "))
+        })?;
+        (reg.build)(&self.opts, m, cfg)
+    }
+}
+
+/// One registry row. To add a method: implement [`Strategy`], write a
+/// builder with this signature, append a row to [`REGISTRY`].
+pub struct Registration {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub default_lr: f32,
+    pub build: fn(&StrategyOpts, &Manifest, &TrainConfig) -> Result<Box<dyn Strategy>>,
+}
+
+static REGISTRY: &[Registration] = &[
+    Registration {
+        name: "vanilla",
+        summary: "no training (baseline rows in Tables 2/3/5)",
+        default_lr: 0.0,
+        build: build_vanilla,
+    },
+    Registration {
+        name: "ft",
+        summary: "full-parameter AdamW fine-tuning (alias: full)",
+        default_lr: 1e-3,
+        build: build_ft,
+    },
+    Registration {
+        name: "lisa",
+        summary: "layerwise importance sampled AdamW (Algorithm 1; uniform or --weights)",
+        default_lr: 3e-3,
+        build: build_lisa,
+    },
+    Registration {
+        name: "lisa-fix",
+        summary: "LISA with a single fixed layer draw (Table 11 ablation)",
+        default_lr: 3e-3,
+        build: build_lisa_fix,
+    },
+    Registration {
+        name: "lisa-grad",
+        summary: "gradient-adaptive LISA: resample by per-block grad-norm EMA (GRASS direction)",
+        default_lr: 3e-3,
+        build: build_lisa_grad,
+    },
+    Registration {
+        name: "lora",
+        summary: "rank-r adapters on all linear layers, base weights frozen",
+        default_lr: 3e-3,
+        build: build_lora,
+    },
+    Registration {
+        name: "galore",
+        summary: "rank-r gradient projection (GaLore baseline)",
+        default_lr: 1e-3,
+        build: build_galore,
+    },
+];
+
+pub fn registry() -> &'static [Registration] {
+    REGISTRY
+}
+
+pub fn lookup(name: &str) -> Option<&'static Registration> {
+    let name = match name {
+        "full" => "ft",
+        "lisa-fixed" => "lisa-fix",
+        n => n,
+    };
+    REGISTRY.iter().find(|r| r.name == name)
+}
+
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|r| r.name).collect()
+}
+
+/// Resolve aliases to the registered name; unknown names pass through.
+pub fn canonical(name: &str) -> &str {
+    lookup(name).map(|r| r.name).unwrap_or(name)
+}
+
+// ---------------------------------------------------------------------------
+// Builders
+// ---------------------------------------------------------------------------
+
+fn build_vanilla(_o: &StrategyOpts, m: &Manifest, _cfg: &TrainConfig) -> Result<Box<dyn Strategy>> {
+    Ok(Box::new(VanillaStrategy::new(m.n_layers)))
+}
+
+fn build_ft(_o: &StrategyOpts, m: &Manifest, cfg: &TrainConfig) -> Result<Box<dyn Strategy>> {
+    Ok(Box::new(DenseStrategy::full(m, cfg)))
+}
+
+fn lisa_config(o: &StrategyOpts, m: &Manifest, fixed: bool) -> Result<LisaConfig> {
+    let mut lc = LisaConfig::paper(o.usize_or("gamma", 2)?, o.usize_or("period", 10)?);
+    lc.fixed = o.bool_or("fixed", fixed)?;
+    lc.train_embed = o.bool_or("train-embed", true)?;
+    lc.train_head = o.bool_or("train-head", true)?;
+    if let Some(w) = o.f64_list("weights")? {
+        ensure!(
+            w.len() == m.n_layers,
+            "lisa weights arity {} != n_layers {}",
+            w.len(),
+            m.n_layers
+        );
+        lc.dist = LayerDist::Weighted(w);
+    }
+    ensure!(lc.gamma <= m.n_layers, "γ={} > L={}", lc.gamma, m.n_layers);
+    Ok(lc)
+}
+
+fn build_lisa(o: &StrategyOpts, m: &Manifest, cfg: &TrainConfig) -> Result<Box<dyn Strategy>> {
+    Ok(Box::new(LisaStrategy::new(lisa_config(o, m, false)?, m, cfg)))
+}
+
+fn build_lisa_fix(o: &StrategyOpts, m: &Manifest, cfg: &TrainConfig) -> Result<Box<dyn Strategy>> {
+    Ok(Box::new(LisaStrategy::new(lisa_config(o, m, true)?, m, cfg)))
+}
+
+fn build_lisa_grad(o: &StrategyOpts, m: &Manifest, cfg: &TrainConfig) -> Result<Box<dyn Strategy>> {
+    let gamma = o.usize_or("gamma", 2)?;
+    let period = o.usize_or("period", 10)?;
+    let beta = o.f64_or("ema-beta", 0.9)?;
+    ensure!(gamma <= m.n_layers, "γ={} > L={}", gamma, m.n_layers);
+    ensure!((0.0..1.0).contains(&beta), "ema-beta must be in [0, 1), got {beta}");
+    Ok(Box::new(LisaGradStrategy::new(gamma, period, beta, m.n_layers, cfg)))
+}
+
+fn build_lora(_o: &StrategyOpts, m: &Manifest, cfg: &TrainConfig) -> Result<Box<dyn Strategy>> {
+    Ok(Box::new(LoraStrategy::new(m, cfg)))
+}
+
+fn build_galore(o: &StrategyOpts, m: &Manifest, cfg: &TrainConfig) -> Result<Box<dyn Strategy>> {
+    let d = GaloreHp::default();
+    let hp = GaloreHp {
+        adam: adam_hp(cfg),
+        rank: o.usize_or("rank", d.rank)?,
+        update_proj_gap: o.usize_or("update-proj-gap", d.update_proj_gap)?,
+        scale: o.f32_or("scale", d.scale)?,
+        power_iters: o.usize_or("power-iters", d.power_iters)?,
+    };
+    Ok(Box::new(DenseStrategy::galore(hp, m, cfg)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_lookup_and_aliases() {
+        for n in ["vanilla", "ft", "lisa", "lisa-fix", "lisa-grad", "lora", "galore"] {
+            assert!(lookup(n).is_some(), "missing registration '{n}'");
+        }
+        assert_eq!(lookup("full").unwrap().name, "ft");
+        assert_eq!(canonical("full"), "ft");
+        assert_eq!(canonical("nope"), "nope");
+        assert!(lookup("nope").is_none());
+    }
+
+    #[test]
+    fn spec_is_alias_aware() {
+        assert!(StrategySpec::new("full").is("ft"));
+        assert!(StrategySpec::vanilla().is("vanilla"));
+        assert!(!StrategySpec::ft().is("lisa"));
+    }
+
+    #[test]
+    fn default_lrs_match_paper_scaling() {
+        assert_eq!(StrategySpec::vanilla().default_lr(), 0.0);
+        assert_eq!(StrategySpec::ft().default_lr(), 1e-3);
+        assert_eq!(StrategySpec::lisa(2, 5).default_lr(), 3e-3);
+        assert_eq!(StrategySpec::lora().default_lr(), 3e-3);
+        assert_eq!(StrategySpec::galore(8).default_lr(), 1e-3);
+        assert_eq!(StrategySpec::lisa_grad(2, 5).default_lr(), 3e-3);
+    }
+
+    #[test]
+    fn opts_roundtrip_and_overwrite() {
+        let mut o = StrategyOpts::default();
+        o.set("gamma", 4usize);
+        o.set("gamma", 8usize);
+        o.set("scale", 1.0f32);
+        assert_eq!(o.usize_or("gamma", 2).unwrap(), 8);
+        assert_eq!(o.f32_or("scale", 0.25).unwrap(), 1.0);
+        assert_eq!(o.usize_or("missing", 7).unwrap(), 7);
+        assert_eq!(o.get("scale"), Some("1"));
+    }
+
+    #[test]
+    fn weights_list_roundtrip() {
+        let spec = StrategySpec::lisa_weighted(2, 5, &[0.25, 1.0, 0.5]);
+        let w = spec.opts.f64_list("weights").unwrap().unwrap();
+        assert_eq!(w, vec![0.25, 1.0, 0.5]);
+        assert!(StrategySpec::lisa(2, 5).opts.f64_list("weights").unwrap().is_none());
+    }
+}

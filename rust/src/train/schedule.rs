@@ -1,0 +1,112 @@
+//! Learning-rate schedules, extracted from the training loop so every
+//! strategy and driver shares one implementation (the old `lr_at` was
+//! warmup-only and copy-pasted into tests).
+//!
+//! All schedules are pure functions of `(step, peak, warmup, total_steps)`;
+//! `TrainConfig` carries one and `TrainSession` queries it each step.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum LrSchedule {
+    /// Peak learning rate from step 0 (no warmup).
+    Constant,
+    /// Linear warmup over `warmup` steps, then constant at peak — the
+    /// original training-loop behaviour and the default.
+    #[default]
+    Warmup,
+    /// Linear warmup, then cosine decay from peak to `min_factor * peak`
+    /// over the remaining `total_steps - warmup` steps.
+    WarmupCosine { min_factor: f32 },
+}
+
+impl LrSchedule {
+    /// Parse a CLI name: `constant`, `warmup` (alias `linear-warmup`),
+    /// `cosine` (alias `warmup-cosine`, decays to zero).
+    pub fn parse(s: &str) -> Result<LrSchedule> {
+        Ok(match s {
+            "constant" => LrSchedule::Constant,
+            "warmup" | "linear-warmup" => LrSchedule::Warmup,
+            "cosine" | "warmup-cosine" => LrSchedule::WarmupCosine { min_factor: 0.0 },
+            other => bail!("unknown lr schedule '{other}' (constant|warmup|cosine)"),
+        })
+    }
+
+    /// Learning rate for 0-based optimizer step `step`. `total_steps` is
+    /// only consulted by the cosine tail; schedules stay well-defined when
+    /// callers step past it (the cosine clamps at its floor).
+    pub fn lr_at(&self, step: usize, peak: f32, warmup: usize, total_steps: usize) -> f32 {
+        if warmup > 0 && step < warmup && *self != LrSchedule::Constant {
+            return peak * (step + 1) as f32 / warmup as f32;
+        }
+        match *self {
+            LrSchedule::Constant | LrSchedule::Warmup => peak,
+            LrSchedule::WarmupCosine { min_factor } => {
+                let decay_steps = total_steps.saturating_sub(warmup).max(1);
+                let t = ((step.saturating_sub(warmup)) as f32 / decay_steps as f32).min(1.0);
+                let floor = peak * min_factor;
+                floor + (peak - floor) * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_matches_legacy_formula() {
+        // The pre-refactor training loop: lr * (step+1)/warmup, then lr.
+        let s = LrSchedule::Warmup;
+        assert!((s.lr_at(0, 1.0, 10, 100) - 0.1).abs() < 1e-6);
+        assert!((s.lr_at(9, 1.0, 10, 100) - 1.0).abs() < 1e-6);
+        assert_eq!(s.lr_at(50, 1.0, 10, 100), 1.0);
+        // warmup=0 degenerates to constant
+        assert_eq!(s.lr_at(0, 1.0, 0, 100), 1.0);
+    }
+
+    #[test]
+    fn constant_ignores_warmup() {
+        let s = LrSchedule::Constant;
+        for step in [0usize, 3, 50] {
+            assert_eq!(s.lr_at(step, 0.5, 10, 100), 0.5);
+        }
+    }
+
+    #[test]
+    fn cosine_decays_from_peak_to_floor() {
+        let s = LrSchedule::WarmupCosine { min_factor: 0.1 };
+        // warmup ramp identical to Warmup
+        assert!((s.lr_at(0, 1.0, 10, 110) - 0.1).abs() < 1e-6);
+        // at end of warmup: peak
+        assert!((s.lr_at(10, 1.0, 10, 110) - 1.0).abs() < 1e-4);
+        // midpoint of decay: halfway between peak and floor
+        assert!((s.lr_at(60, 1.0, 10, 110) - 0.55).abs() < 1e-3);
+        // at/after the horizon: floor, clamped
+        assert!((s.lr_at(110, 1.0, 10, 110) - 0.1).abs() < 1e-4);
+        assert!((s.lr_at(500, 1.0, 10, 110) - 0.1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn cosine_is_monotone_after_warmup() {
+        let s = LrSchedule::WarmupCosine { min_factor: 0.0 };
+        let mut prev = f32::MAX;
+        for step in 10..100 {
+            let lr = s.lr_at(step, 1.0, 10, 100);
+            assert!(lr <= prev + 1e-7, "step {step}: {lr} > {prev}");
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(LrSchedule::parse("constant").unwrap(), LrSchedule::Constant);
+        assert_eq!(LrSchedule::parse("warmup").unwrap(), LrSchedule::Warmup);
+        assert_eq!(
+            LrSchedule::parse("cosine").unwrap(),
+            LrSchedule::WarmupCosine { min_factor: 0.0 }
+        );
+        assert!(LrSchedule::parse("bogus").is_err());
+    }
+}

@@ -114,9 +114,19 @@ impl Rng {
         chosen.into_iter().collect()
     }
 
-    /// Weighted sample of one index proportional to `w` (w >= 0, sum > 0).
+    /// Weighted sample of one index proportional to `w`. Every weight must
+    /// be finite and non-negative with positive total mass — NaN/∞/negative
+    /// entries would silently skew the cumulative walk, so they are
+    /// rejected loudly.
     pub fn sample_weighted(&mut self, w: &[f64]) -> usize {
-        let total: f64 = w.iter().sum();
+        let mut total = 0.0f64;
+        for (i, &wi) in w.iter().enumerate() {
+            assert!(
+                wi.is_finite() && wi >= 0.0,
+                "sample_weighted: weight[{i}] = {wi} (must be finite and >= 0)"
+            );
+            total += wi;
+        }
         assert!(total > 0.0, "sample_weighted: all-zero weights");
         let mut r = self.f64() * total;
         for (i, &wi) in w.iter().enumerate() {
@@ -216,6 +226,24 @@ mod tests {
         assert_eq!(counts[1], 0);
         let ratio = counts[2] as f64 / counts[0] as f64;
         assert!((2.0..4.5).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    #[should_panic(expected = "must be finite and >= 0")]
+    fn weighted_sampling_rejects_negative() {
+        Rng::new(1).sample_weighted(&[1.0, -0.5, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be finite and >= 0")]
+    fn weighted_sampling_rejects_non_finite() {
+        Rng::new(1).sample_weighted(&[1.0, f64::NAN, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "all-zero weights")]
+    fn weighted_sampling_rejects_zero_mass() {
+        Rng::new(1).sample_weighted(&[0.0, 0.0]);
     }
 
     #[test]

@@ -8,7 +8,8 @@ use lisa::data::{corpus, encode_sft, DataLoader, Tokenizer};
 use lisa::engine::{Batch, Engine, TrainMask};
 use lisa::model::{checkpoint, ModelParams};
 use lisa::runtime::{HostTensor, HostTensorI32, Operand, Runtime};
-use lisa::train::{Method, TrainConfig, TrainSession};
+use lisa::strategy::StrategySpec;
+use lisa::train::{TrainConfig, TrainSession};
 use lisa::util::rng::Rng;
 use lisa::util::stats::allclose;
 
@@ -147,11 +148,7 @@ fn lisa_state_drop_vs_keep_changes_memory_not_correctness() {
             log_every: 0,
             ..Default::default()
         };
-        let mut sess = TrainSession::new(
-            &rt,
-            Method::Lisa(lisa::lisa::LisaConfig::paper(1, 3)),
-            cfg,
-        );
+        let mut sess = TrainSession::new(&rt, &StrategySpec::lisa(1, 3), cfg).unwrap();
         let res = sess.run(&mut dl).unwrap();
         (res.final_train_loss, res.peak_mem)
     };

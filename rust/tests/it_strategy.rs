@@ -1,0 +1,241 @@
+//! Strategy-conformance suite: every registered strategy must honour the
+//! driver protocol — correct mask arity, the γ invariant for LISA
+//! variants, deterministic replay per seed, and a faithful
+//! `eval_params` round-trip. Runs against a synthetic manifest so it needs
+//! no AOT artifacts.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use lisa::model::ModelParams;
+use lisa::runtime::Manifest;
+use lisa::strategy::{self, StrategySpec};
+use lisa::train::TrainConfig;
+use lisa::util::rng::Rng;
+
+const N_LAYERS: usize = 8;
+
+/// A manifest with everything strategy construction needs (no segments —
+/// those only matter once an Engine executes).
+fn synth_manifest() -> Manifest {
+    let d = 8usize;
+    let h = 4 * d;
+    let r = 2usize;
+    let block_params: Vec<(String, Vec<usize>)> = vec![
+        ("g1".into(), vec![d]),
+        ("wq".into(), vec![d, d]),
+        ("wk".into(), vec![d, d]),
+        ("wv".into(), vec![d, d]),
+        ("wo".into(), vec![d, d]),
+        ("g2".into(), vec![d]),
+        ("w1".into(), vec![d, h]),
+        ("w2".into(), vec![h, d]),
+    ];
+    let lora_params: Vec<(String, Vec<usize>)> = vec![
+        ("aq".into(), vec![d, r]),
+        ("bq".into(), vec![r, d]),
+        ("ak".into(), vec![d, r]),
+        ("bk".into(), vec![r, d]),
+        ("av".into(), vec![d, r]),
+        ("bv".into(), vec![r, d]),
+        ("ao".into(), vec![d, r]),
+        ("bo".into(), vec![r, d]),
+        ("a1".into(), vec![d, r]),
+        ("b1".into(), vec![r, h]),
+        ("a2".into(), vec![h, r]),
+        ("b2".into(), vec![r, d]),
+    ];
+    Manifest {
+        dir: PathBuf::new(),
+        name: "synthetic".into(),
+        d_model: d,
+        n_layers: N_LAYERS,
+        n_heads: 2,
+        vocab: 32,
+        seq: 4,
+        batch: 2,
+        mlp_ratio: 4,
+        lora_rank: r,
+        lora_alpha: 4.0,
+        n_params: 0,
+        block_params,
+        lora_params,
+        segments: BTreeMap::new(),
+    }
+}
+
+fn cfg(seed: u64) -> TrainConfig {
+    TrainConfig { seed, ..Default::default() }
+}
+
+/// Specs with explicit sampling options so the γ invariant is checkable.
+fn all_specs() -> Vec<StrategySpec> {
+    strategy::registry()
+        .iter()
+        .map(|r| StrategySpec::new(r.name).with("gamma", 3usize).with("period", 4usize))
+        .collect()
+}
+
+#[test]
+fn every_registered_strategy_builds() {
+    let m = synth_manifest();
+    for spec in all_specs() {
+        let s = spec.build(&m, &cfg(42));
+        assert!(s.is_ok(), "'{}' failed to build: {:?}", spec.name, s.err());
+        let s = s.unwrap();
+        assert!(!s.label().is_empty());
+        assert_eq!(s.state_bytes(), 0, "'{}' holds state before any step", spec.name);
+    }
+}
+
+#[test]
+fn mask_arity_matches_n_layers_for_every_strategy() {
+    let m = synth_manifest();
+    for spec in all_specs() {
+        let mut s = spec.build(&m, &cfg(42)).unwrap();
+        for step in 0..25 {
+            let mask = s.mask_for_step(step);
+            assert_eq!(
+                mask.blocks.len(),
+                N_LAYERS,
+                "'{}' mask arity at step {step}",
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn masks_replay_deterministically_per_seed() {
+    let m = synth_manifest();
+    for spec in all_specs() {
+        let mut a = spec.build(&m, &cfg(7)).unwrap();
+        let mut b = spec.build(&m, &cfg(7)).unwrap();
+        for step in 0..25 {
+            assert_eq!(
+                a.mask_for_step(step),
+                b.mask_for_step(step),
+                "'{}' diverged at step {step} under the same seed",
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn lisa_variants_hold_the_gamma_invariant() {
+    let m = synth_manifest();
+    for name in ["lisa", "lisa-fix", "lisa-grad"] {
+        let spec = StrategySpec::new(name).with("gamma", 3usize).with("period", 4usize);
+        let mut s = spec.build(&m, &cfg(42)).unwrap();
+        for step in 0..40 {
+            let mask = s.mask_for_step(step);
+            assert_eq!(
+                mask.n_trainable_blocks(),
+                3,
+                "'{name}' γ invariant at step {step}"
+            );
+            assert!(mask.embed && mask.head, "'{name}' must train embed+head");
+        }
+    }
+}
+
+#[test]
+fn lisa_seeds_diverge() {
+    let m = synth_manifest();
+    for name in ["lisa", "lisa-grad"] {
+        let spec = StrategySpec::new(name).with("gamma", 2usize).with("period", 1usize);
+        let seq = |seed: u64| -> Vec<Vec<bool>> {
+            let mut s = spec.clone().build(&m, &cfg(seed)).unwrap();
+            (0..20).map(|i| s.mask_for_step(i).blocks).collect()
+        };
+        assert_eq!(seq(1), seq(1), "'{name}' same-seed replay");
+        assert_ne!(seq(1), seq(2), "'{name}' different seeds must diverge");
+    }
+}
+
+#[test]
+fn dense_strategies_train_everything_lora_trains_nothing_in_base() {
+    let m = synth_manifest();
+    let mut ft = StrategySpec::ft().build(&m, &cfg(42)).unwrap();
+    let mask = ft.mask_for_step(0);
+    assert!(mask.embed && mask.head);
+    assert_eq!(mask.n_trainable_blocks(), N_LAYERS);
+
+    let mut lora = StrategySpec::lora().build(&m, &cfg(42)).unwrap();
+    let mask = lora.mask_for_step(0);
+    assert!(!mask.embed && !mask.head);
+    assert_eq!(mask.n_trainable_blocks(), 0);
+
+    let mut vanilla = StrategySpec::vanilla().build(&m, &cfg(42)).unwrap();
+    assert!(vanilla.is_noop());
+    assert_eq!(vanilla.mask_for_step(0).n_trainable_blocks(), 0);
+}
+
+#[test]
+fn lora_eval_params_roundtrip_at_init() {
+    // B = 0 at init, so merging adapters must reproduce the base model
+    // bit-for-bit (the eval_params round-trip of the LoRA merge).
+    let m = synth_manifest();
+    let base = ModelParams::init(&m, &mut Rng::new(9));
+    let lora = StrategySpec::lora().build(&m, &cfg(42)).unwrap();
+    let merged = lora.eval_params(&base);
+    assert_eq!(merged.emb.data, base.emb.data);
+    for l in 0..N_LAYERS {
+        for t in 0..base.blocks[l].len() {
+            assert_eq!(
+                merged.blocks[l][t].data, base.blocks[l][t].data,
+                "layer {l} tensor {t} changed by zero-delta merge"
+            );
+        }
+    }
+    // effective norms agree with the base at init, for every strategy
+    for spec in all_specs() {
+        let s = spec.build(&m, &cfg(42)).unwrap();
+        let norms = s.effective_weight_norms(&base);
+        assert_eq!(norms.len(), N_LAYERS + 2, "'{}' norm arity", spec.name);
+    }
+}
+
+#[test]
+fn labels_are_stable() {
+    let m = synth_manifest();
+    let expect = [
+        ("vanilla", "vanilla"),
+        ("ft", "ft"),
+        ("lisa", "lisa"),
+        ("lisa-fix", "lisa-fix"),
+        ("lisa-grad", "lisa-grad"),
+        ("lora", "lora"),
+        ("galore", "galore"),
+    ];
+    for (name, label) in expect {
+        let s = StrategySpec::new(name)
+            .with("gamma", 2usize)
+            .with("period", 4usize)
+            .build(&m, &cfg(42))
+            .unwrap();
+        assert_eq!(s.label(), label);
+    }
+    // the fixed flag relabels plain lisa
+    let s = StrategySpec::lisa(2, 4).with("fixed", true).build(&m, &cfg(42)).unwrap();
+    assert_eq!(s.label(), "lisa-fix");
+}
+
+#[test]
+fn weighted_spec_rejects_wrong_arity() {
+    let m = synth_manifest();
+    let bad = StrategySpec::lisa_weighted(2, 4, &[1.0, 2.0]); // 2 != 8 layers
+    assert!(bad.build(&m, &cfg(42)).is_err());
+    let good = StrategySpec::lisa_weighted(2, 4, &[1.0; N_LAYERS]);
+    assert!(good.build(&m, &cfg(42)).is_ok());
+}
+
+#[test]
+fn unknown_strategy_is_a_clean_error() {
+    let m = synth_manifest();
+    let err = StrategySpec::new("does-not-exist").build(&m, &cfg(42));
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("unknown strategy"), "got: {msg}");
+    assert!(msg.contains("lisa-grad"), "error should list registered names: {msg}");
+}

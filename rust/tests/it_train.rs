@@ -1,13 +1,13 @@
-//! End-to-end integration: every training method reduces the loss on the
-//! tiny config, and LISA's scheduling behaviour shows up in engine stats.
+//! End-to-end integration: every registered training strategy reduces the
+//! loss on the tiny config, and LISA's scheduling behaviour shows up in
+//! engine stats.
 
 use std::path::{Path, PathBuf};
 
 use lisa::data::{corpus, encode_sft, DataLoader, Tokenizer};
-use lisa::lisa::LisaConfig;
-use lisa::opt::GaloreHp;
 use lisa::runtime::Runtime;
-use lisa::train::{Method, TrainConfig, TrainSession};
+use lisa::strategy::StrategySpec;
+use lisa::train::{TrainConfig, TrainSession};
 
 fn artifacts() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
@@ -22,7 +22,7 @@ fn setup(rt: &Runtime) -> (Tokenizer, DataLoader) {
     (tok, dl)
 }
 
-fn run(method: Method, steps: usize) -> (f32, f32, lisa::train::TrainResult) {
+fn run(spec: &StrategySpec, steps: usize) -> (f32, f32, lisa::train::TrainResult) {
     let rt = Runtime::load(&artifacts(), "pallas").unwrap();
     let (_tok, mut dl) = setup(&rt);
     let cfg = TrainConfig {
@@ -32,7 +32,7 @@ fn run(method: Method, steps: usize) -> (f32, f32, lisa::train::TrainResult) {
         log_every: 0,
         ..Default::default()
     };
-    let mut sess = TrainSession::new(&rt, method, cfg);
+    let mut sess = TrainSession::new(&rt, spec, cfg).unwrap();
     let first_losses: Vec<f32> = (0..3)
         .map(|s| sess.step(s, &mut dl).unwrap())
         .collect();
@@ -47,7 +47,7 @@ fn run(method: Method, steps: usize) -> (f32, f32, lisa::train::TrainResult) {
 #[test]
 fn ft_reduces_loss() {
     if !artifacts().join("manifest.json").exists() { return; }
-    let (first, last, res) = run(Method::Full, 30);
+    let (first, last, res) = run(&StrategySpec::ft(), 30);
     assert!(last < first * 0.9, "FT loss {first} -> {last}");
     assert_eq!(res.bwd_x_calls, 0, "FT never uses input-only backward");
     assert!(res.peak_mem > 0);
@@ -56,7 +56,7 @@ fn ft_reduces_loss() {
 #[test]
 fn lisa_reduces_loss_and_freezes_blocks() {
     if !artifacts().join("manifest.json").exists() { return; }
-    let (first, last, res) = run(Method::Lisa(LisaConfig::paper(2, 5)), 30);
+    let (first, last, res) = run(&StrategySpec::lisa(2, 5), 30);
     assert!(last < first * 0.9, "LISA loss {first} -> {last}");
     // tiny has 4 blocks, γ=2: every step does 2 full + 2 input-only bwd
     assert!(res.bwd_x_calls > 0, "LISA must freeze some blocks");
@@ -67,9 +67,22 @@ fn lisa_reduces_loss_and_freezes_blocks() {
 }
 
 #[test]
+fn lisa_grad_reduces_loss_and_freezes_blocks() {
+    if !artifacts().join("manifest.json").exists() { return; }
+    let (first, last, res) = run(&StrategySpec::lisa_grad(2, 5), 30);
+    assert!(last < first * 0.9, "LISA-grad loss {first} -> {last}");
+    // same γ invariant as uniform LISA: never trains all blocks at once
+    assert!(res.bwd_x_calls > 0, "LISA-grad must freeze some blocks");
+    assert!(res.bwd_full_calls > 0);
+    let total_steps = (30 + 3) as u64;
+    assert_eq!(res.bwd_full_calls + res.bwd_x_calls + res.bwd_skipped,
+               total_steps * 4);
+}
+
+#[test]
 fn lora_reduces_loss() {
     if !artifacts().join("manifest.json").exists() { return; }
-    let (first, last, _res) = run(Method::Lora, 30);
+    let (first, last, _res) = run(&StrategySpec::lora(), 30);
     assert!(last < first * 0.95, "LoRA loss {first} -> {last}");
 }
 
@@ -77,8 +90,27 @@ fn lora_reduces_loss() {
 fn galore_reduces_loss() {
     if !artifacts().join("manifest.json").exists() { return; }
     let (first, last, _res) = run(
-        Method::Galore(GaloreHp { rank: 4, update_proj_gap: 10, scale: 1.0, ..Default::default() }),
+        &StrategySpec::galore(4).with("update-proj-gap", 10usize).with("scale", 1.0f32),
         30,
     );
     assert!(last < first * 0.95, "GaLore loss {first} -> {last}");
+}
+
+#[test]
+fn cosine_schedule_trains_end_to_end() {
+    if !artifacts().join("manifest.json").exists() { return; }
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    let (_tok, mut dl) = setup(&rt);
+    let cfg = TrainConfig {
+        steps: 20,
+        lr: 3e-3,
+        warmup: 3,
+        schedule: lisa::train::LrSchedule::WarmupCosine { min_factor: 0.1 },
+        log_every: 0,
+        ..Default::default()
+    };
+    let mut sess = TrainSession::new(&rt, &StrategySpec::ft(), cfg).unwrap();
+    let res = sess.run(&mut dl).unwrap();
+    let first = res.loss_curve.first().unwrap().1;
+    assert!(res.final_train_loss < first, "cosine FT must still descend");
 }
