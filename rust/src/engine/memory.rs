@@ -82,17 +82,29 @@ impl MemoryMeter {
         self.peak_by_cat = self.current.clone();
     }
 
+    /// All categories in the canonical (breakdown/checkpoint) order.
+    pub const ALL: [MemCategory; 5] = [
+        MemCategory::Params,
+        MemCategory::Grads,
+        MemCategory::OptimState,
+        MemCategory::Activations,
+        MemCategory::LoraAdapters,
+    ];
+
+    /// Max-merge a checkpointed peak state (total + per-category bytes in
+    /// [`MemoryMeter::ALL`] order) into this meter, so a resumed run
+    /// reports the whole run's peak — the Table-1 observable — not just
+    /// the post-resume segment's.
+    pub fn restore_peak(&mut self, peak_total: u64, peaks_by_cat: &[u64]) {
+        self.peak_total = self.peak_total.max(peak_total);
+        for (cat, &b) in Self::ALL.iter().zip(peaks_by_cat) {
+            let e = self.peak_by_cat.entry(*cat).or_insert(0);
+            *e = (*e).max(b);
+        }
+    }
+
     pub fn breakdown(&self) -> Vec<(&'static str, u64)> {
-        [
-            MemCategory::Params,
-            MemCategory::Grads,
-            MemCategory::OptimState,
-            MemCategory::Activations,
-            MemCategory::LoraAdapters,
-        ]
-        .iter()
-        .map(|c| (c.label(), self.peak_of(*c)))
-        .collect()
+        Self::ALL.iter().map(|c| (c.label(), self.peak_of(*c))).collect()
     }
 }
 
@@ -124,6 +136,19 @@ mod tests {
         m.sub(MemCategory::OptimState, 1000); // saturates, never underflows
         assert_eq!(m.get(MemCategory::OptimState), 0);
         assert_eq!(m.peak_of(MemCategory::OptimState), 100);
+    }
+
+    #[test]
+    fn restore_peak_max_merges() {
+        let mut m = MemoryMeter::new();
+        m.set(MemCategory::Params, 100);
+        m.restore_peak(900, &[50, 400, 0, 0, 0]);
+        assert_eq!(m.peak(), 900);
+        assert_eq!(m.peak_of(MemCategory::Params), 100, "live peak wins when larger");
+        assert_eq!(m.peak_of(MemCategory::Grads), 400);
+        // a smaller checkpointed peak never lowers the live one
+        m.restore_peak(10, &[1, 1, 1, 1, 1]);
+        assert_eq!(m.peak(), 900);
     }
 
     #[test]

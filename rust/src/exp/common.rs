@@ -21,6 +21,13 @@ pub struct Ctx {
     /// Step-budget multiplier (`--scale 0.25` for smoke runs).
     pub scale: f64,
     pub seed: u64,
+    /// Crash-safe mode (`--save-every N`): training arms that support it
+    /// checkpoint their full state every N steps and resume from an
+    /// existing state file on restart. 0 = off.
+    pub save_every: usize,
+    /// Explicit checkpoint to resume the driver's training run from
+    /// (`--resume PATH`; e2e).
+    pub resume: Option<PathBuf>,
 }
 
 impl Ctx {
@@ -138,6 +145,20 @@ pub fn run_arm<'rt>(
     cfg: TrainConfig,
     loader: &mut DataLoader,
 ) -> Result<(TrainResult, TrainSession<'rt>)> {
+    run_arm_ckpt(rt, spec, cfg, loader, None)
+}
+
+/// [`run_arm`] with crash-safe checkpointing: when `state` names a path
+/// and a period, the arm saves its full training state there every
+/// `every` steps and — if the file already exists from an interrupted
+/// run — resumes from it instead of starting over (Ctx `--save-every`).
+pub fn run_arm_ckpt<'rt>(
+    rt: &'rt Runtime,
+    spec: &StrategySpec,
+    cfg: TrainConfig,
+    loader: &mut DataLoader,
+    state: Option<(&Path, usize)>,
+) -> Result<(TrainResult, TrainSession<'rt>)> {
     let mut sess = TrainSession::new(rt, spec, cfg)?;
     let label = sess.label();
     log::info!(
@@ -148,7 +169,14 @@ pub fn run_arm<'rt>(
         sess.cfg.seed
     );
     let t0 = std::time::Instant::now();
-    let res = sess.run(loader)?;
+    let res = match state {
+        None => sess.run(loader)?,
+        Some((path, every)) => {
+            let resume = path.exists().then_some(path);
+            let conf = crate::train::CheckpointConf { path: path.to_path_buf(), every };
+            sess.run_resumable(loader, Some(&conf), resume)?
+        }
+    };
     log::info!(
         "arm [{}] done in {:.1}s (median {:.0} ms/step, final loss {:.4})",
         label,

@@ -13,7 +13,7 @@ use crate::strategy::StrategySpec;
 use crate::train::{TrainConfig, TrainSession};
 use crate::util::table::{fnum, human_bytes, Table};
 
-use super::common::{math_task, run_arm, Ctx};
+use super::common::{ensure_dir, math_task, run_arm_ckpt, Ctx};
 
 /// One CPT→FT pipeline run; returns (EM accuracy, peak CPT memory bytes).
 fn pipeline(
@@ -24,7 +24,10 @@ fn pipeline(
     cpt_steps: usize,
     ft_steps: usize,
 ) -> Result<(f64, u64)> {
-    // Stage 1: continual pre-training (skipped for Vanilla).
+    // Stage 1: continual pre-training (skipped for Vanilla). With
+    // `--save-every N` the stage checkpoints its full training state and a
+    // restarted `lisa exp` resumes instead of repeating finished work —
+    // CPT is the long preemptible leg of this pipeline.
     let (params, cpt_peak) = if spec.is("vanilla") {
         let mut rng = crate::util::rng::Rng::new(ctx.seed);
         (crate::model::ModelParams::init(&rt.manifest, &mut rng), 0u64)
@@ -36,7 +39,24 @@ fn pipeline(
             log_every: 0,
             ..Default::default()
         };
-        let (res, sess) = run_arm(rt, spec, cfg, &mut task.cpt)?;
+        // distinct state file per arm configuration (fig7 sweeps γ with
+        // the same method name; resuming across configs must not collide)
+        let mut slug = spec.name.clone();
+        for key in ["gamma", "period", "rank"] {
+            if let Some(v) = spec.opts.get(key) {
+                slug.push_str(&format!("-{key}{v}"));
+            }
+        }
+        // steps and seed are config axes too: resuming a different sweep
+        // point must miss, not hard-error on the seed check
+        slug.push_str(&format!("-s{cpt_steps}-seed{}", ctx.seed));
+        let state_path = (ctx.save_every > 0)
+            .then(|| ctx.results.join(format!("cpt-{slug}-{}.state", rt.manifest.name)));
+        if state_path.is_some() {
+            ensure_dir(&ctx.results)?;
+        }
+        let state = state_path.as_deref().map(|p| (p, ctx.save_every));
+        let (res, sess) = run_arm_ckpt(rt, spec, cfg, &mut task.cpt, state)?;
         (sess.eval_params(), res.peak_mem)
     };
 

@@ -29,8 +29,11 @@ pub fn e2e(ctx: &Ctx, config: &str, steps_override: Option<usize>) -> Result<()>
 
     let mut task = sft_task(&rt, 640, 0.04, ctx.seed);
     let spec = StrategySpec::lisa(2, 10);
+    // cfg.steps carries the *real* horizon (the driver steps manually):
+    // the default Warmup schedule ignores it, and checkpoints store it so
+    // resume can validate its position against the run length.
     let cfg = TrainConfig {
-        steps: eval_every,
+        steps,
         lr: 3e-3,
         seed: ctx.seed,
         log_every: 0,
@@ -38,15 +41,31 @@ pub fn e2e(ctx: &Ctx, config: &str, steps_override: Option<usize>) -> Result<()>
     };
     let mut sess = TrainSession::new(&rt, &spec, cfg)?;
 
+    // Crash-safe mode: periodic full-state checkpoints + resume (the
+    // preemptible-workload story — DESIGN.md §7).
+    super::common::ensure_dir(&ctx.results)?;
+    let state_path = ctx.results.join(format!("e2e-{config}.state"));
+    let start = match &ctx.resume {
+        Some(path) => {
+            let next = sess.resume_checkpoint(path, &mut task.train)?;
+            log::info!("e2e: resumed from {} at step {next}/{steps}", path.display());
+            next
+        }
+        None => 0,
+    };
+
     let t0 = std::time::Instant::now();
     let mut curve: Vec<(usize, f64)> = Vec::new();
     let mut val_curve: Vec<(usize, f64)> = Vec::new();
     let mut step_times = Vec::new();
-    for step in 0..steps {
+    for step in start..steps {
         let ts = std::time::Instant::now();
         let loss = sess.step(step, &mut task.train)?;
         step_times.push(ts.elapsed().as_secs_f64() * 1e3);
         curve.push((step, loss as f64));
+        if ctx.save_every > 0 && (step + 1) % ctx.save_every == 0 {
+            sess.save_checkpoint(&state_path, step + 1, &task.train)?;
+        }
         if step % eval_every == 0 || step + 1 == steps {
             let params = sess.eval_params();
             let (vl, _) = eval::eval_loss(&mut sess.engine, &params, &task.val)?;
@@ -73,10 +92,18 @@ pub fn e2e(ctx: &Ctx, config: &str, steps_override: Option<usize>) -> Result<()>
     t.row(vec!["steps".to_string(), steps.to_string()]);
     t.row(vec!["wall clock".to_string(), format!("{wall:.1} s")]);
     t.row(vec!["median step".to_string(), format!("{med_ms:.0} ms")]);
-    t.row(vec!["throughput".to_string(), format!("{:.0} tok/s", tokens_per_step / (med_ms / 1e3))]);
-    t.row(vec!["first train loss".to_string(), fnum(curve.first().unwrap().1, 4)]);
-    t.row(vec!["final train loss".to_string(), fnum(curve.last().unwrap().1, 4)]);
-    t.row(vec!["final val loss".to_string(), fnum(val_curve.last().unwrap().1, 4)]);
+    let throughput = if med_ms > 0.0 {
+        format!("{:.0} tok/s", tokens_per_step / (med_ms / 1e3))
+    } else {
+        "-".to_string() // fully-resumed run: no steps executed
+    };
+    t.row(vec!["throughput".to_string(), throughput]);
+    // a fully-resumed run can execute zero steps: the curves are then empty
+    let first_or = |c: &Vec<(usize, f64)>| c.first().map(|p| p.1).unwrap_or(f64::NAN);
+    let last_or = |c: &Vec<(usize, f64)>| c.last().map(|p| p.1).unwrap_or(f64::NAN);
+    t.row(vec!["first train loss".to_string(), fnum(first_or(&curve), 4)]);
+    t.row(vec!["final train loss".to_string(), fnum(last_or(&curve), 4)]);
+    t.row(vec!["final val loss".to_string(), fnum(last_or(&val_curve), 4)]);
     t.row(vec!["val ppl".to_string(), fnum(rep.ppl, 2)]);
     t.row(vec!["val token acc".to_string(), fnum(rep.token_acc, 3)]);
     t.row(vec!["val exact match".to_string(), fnum(rep.exact_match, 3)]);

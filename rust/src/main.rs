@@ -22,7 +22,7 @@ use lisa::data::{corpus, encode_sft, split_train_val, DataLoader, Tokenizer};
 use lisa::exp::{self, Ctx};
 use lisa::opt::StatePolicy;
 use lisa::strategy::{self, StrategySpec};
-use lisa::train::{LrSchedule, TrainConfig, TrainSession};
+use lisa::train::{CheckpointConf, LrSchedule, TrainConfig, TrainSession};
 use lisa::util::cli::Args;
 
 const SPEC: &[(&str, &str, &str)] = &[
@@ -44,6 +44,9 @@ const SPEC: &[(&str, &str, &str)] = &[
     ("galore-gap", "50", "GaLore projection refresh interval (steps)"),
     ("galore-scale", "1.0", "GaLore update scale α"),
     ("grad-accum", "1", "microbatch accumulation"),
+    ("save-every", "0", "checkpoint full training state every N steps (0 = final save only)"),
+    ("ckpt", "", "training-state checkpoint path (default <results>/train-<method>.state)"),
+    ("resume", "", "resume training from a --save-every checkpoint"),
     ("seed", "42", "master seed"),
     ("scale", "1.0", "experiment step-budget multiplier"),
     ("samples", "480", "train: corpus size"),
@@ -92,6 +95,8 @@ fn ctx_from(a: &Args) -> Ctx {
         backend: a.get("backend"),
         scale: a.get_f64("scale").unwrap_or(1.0),
         seed: a.get_u64("seed").unwrap_or(42),
+        save_every: a.get_usize("save-every").unwrap_or(0),
+        resume: a.get_opt("resume").map(PathBuf::from),
     }
 }
 
@@ -132,8 +137,27 @@ fn cmd_train(a: &Args) -> Result<()> {
     let mut train_dl = DataLoader::new(enc_tr, m.batch, m.seq, ctx.seed);
     let val_dl = DataLoader::new(enc_va, m.batch, m.seq, ctx.seed);
 
+    // `--save-every N` checkpoints periodically; `--ckpt` alone still
+    // writes the terminal checkpoint (every=0 = final save only), so the
+    // flag is never silently ignored.
+    let ckpt = if ctx.save_every > 0 || a.get_opt("ckpt").is_some() {
+        let path = a
+            .get_opt("ckpt")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| ctx.results.join(format!("train-{}.state", spec.name)));
+        if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent)?;
+        }
+        Some(CheckpointConf { path, every: ctx.save_every })
+    } else {
+        None
+    };
+
     let mut sess = TrainSession::new(&rt, &spec, cfg)?;
-    let res = sess.run(&mut train_dl)?;
+    let res = sess.run_resumable(&mut train_dl, ckpt.as_ref(), ctx.resume.as_deref())?;
+    if let Some(c) = &ckpt {
+        println!("checkpoint: {}", c.path.display());
+    }
     println!(
         "done [{}]: final train loss {:.4}, median {:.0} ms/step, peak mem {}",
         sess.label(),

@@ -1,104 +1,588 @@
 //! Checkpointing: a small self-describing binary format (no serde in the
-//! image). Layout:
+//! image). Two versions coexist:
+//!
+//! **v1** — flat weight-only tensor list (the seed format, still readable):
 //!
 //! ```text
-//! magic "LISAckpt" | u32 version | u32 n_tensors
+//! magic "LISAckpt" | u32 version=1 | u32 n_tensors
 //! per tensor: u32 name_len | name bytes | u32 rank | u64 dims[rank]
 //!             | f32 data[numel]
 //! ```
 //!
+//! **v2** — the full training-state format (DESIGN.md §7): named sections,
+//! two dtypes (f32 tensors and raw u64 blobs for RNG/counter state), one
+//! CRC-32 per serialized record, and atomic tmp+rename writes so a `kill`
+//! mid-save never clobbers the previous checkpoint:
+//!
+//! ```text
+//! magic "LISAckpt" | u32 version=2 | u32 n_sections
+//! per section: u32 name_len | name | u32 n_entries | u32 crc(header)
+//! per entry:   u32 name_len | name | u8 dtype(0=f32,1=u64) | u32 rank
+//!              | u64 dims[rank] | data bytes | u32 crc(entry)
+//! ```
+//!
+//! Each CRC covers every serialized byte of its record (length fields
+//! included), so truncation or bit corruption anywhere after the 16-byte
+//! preamble is detected; the preamble itself is guarded by the magic,
+//! version and end-of-file position checks. Every length read from a file
+//! is validated against the remaining file size *before* any allocation —
+//! a corrupt header can neither overflow `numel` nor demand gigabytes.
+//!
 //! Little-endian throughout. Used by the continual-pretraining pipeline
-//! (Table 4: CPT checkpoint -> fine-tune) and the e2e example.
+//! (Table 4: CPT checkpoint -> fine-tune), the e2e example, and the
+//! crash-safe resume protocol (`train::TrainSession::save_checkpoint`).
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::runtime::HostTensor;
+use crate::util::crc32::Crc32;
 
 use super::params::ModelParams;
 
 const MAGIC: &[u8; 8] = b"LISAckpt";
-const VERSION: u32 = 1;
+const V1: u32 = 1;
+const V2: u32 = 2;
+const MAX_NAME: usize = 4096;
+const MAX_RANK: usize = 8;
 
-pub fn save_tensors(path: &Path, tensors: &[(String, &HostTensor)]) -> Result<()> {
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?,
-    );
-    f.write_all(MAGIC)?;
-    f.write_all(&VERSION.to_le_bytes())?;
-    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
-    for (name, t) in tensors {
-        f.write_all(&(name.len() as u32).to_le_bytes())?;
-        f.write_all(name.as_bytes())?;
-        f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
-        for &d in &t.shape {
-            f.write_all(&(d as u64).to_le_bytes())?;
+// ---------------------------------------------------------------------------
+// v2 data model: sections of named blobs
+// ---------------------------------------------------------------------------
+
+/// One serialized value: an f32 tensor (weights, moments) or a raw u64
+/// blob (RNG streams, cursors, counters, bit-cast f64s).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Blob {
+    F32(HostTensor),
+    U64(Vec<u64>),
+}
+
+/// A named group of blobs — one per subsystem in a training-state
+/// checkpoint ("meta", "model", "strategy", "loader"). Readers *take*
+/// entries out, so after a component restored itself the section must be
+/// empty; leftovers mean the file was written by a different
+/// configuration and the load fails loudly instead of resuming wrong.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Section {
+    pub name: String,
+    entries: BTreeMap<String, Blob>,
+}
+
+impl Section {
+    pub fn new(name: &str) -> Section {
+        Section { name: name.to_string(), entries: BTreeMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Remaining (unconsumed) entry names — for error messages.
+    pub fn keys(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    pub fn put_tensor(&mut self, key: &str, t: &HostTensor) {
+        self.entries.insert(key.to_string(), Blob::F32(t.clone()));
+    }
+
+    /// Rank-1 f32 buffer (optimizer moments — shape lives with the params).
+    pub fn put_f32s(&mut self, key: &str, data: &[f32]) {
+        self.entries.insert(
+            key.to_string(),
+            Blob::F32(HostTensor::from_vec(&[data.len()], data.to_vec())),
+        );
+    }
+
+    pub fn put_u64s(&mut self, key: &str, data: Vec<u64>) {
+        self.entries.insert(key.to_string(), Blob::U64(data));
+    }
+
+    pub fn put_u64(&mut self, key: &str, v: u64) {
+        self.put_u64s(key, vec![v]);
+    }
+
+    /// f64s stored bit-exactly (EMA norms survive the round-trip).
+    pub fn put_f64s(&mut self, key: &str, data: &[f64]) {
+        self.put_u64s(key, data.iter().map(|x| x.to_bits()).collect());
+    }
+
+    /// UTF-8 string packed into a u64 blob: word 0 = byte length, then the
+    /// bytes in little-endian words.
+    pub fn put_str(&mut self, key: &str, s: &str) {
+        let bytes = s.as_bytes();
+        let mut words = vec![bytes.len() as u64];
+        for chunk in bytes.chunks(8) {
+            let mut w = [0u8; 8];
+            w[..chunk.len()].copy_from_slice(chunk);
+            words.push(u64::from_le_bytes(w));
         }
-        let bytes: &[u8] = unsafe {
-            std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
-        };
-        f.write_all(bytes)?;
+        self.put_u64s(key, words);
+    }
+
+    fn take(&mut self, key: &str) -> Result<Blob> {
+        self.entries.remove(key).with_context(|| {
+            format!("checkpoint section '{}' missing entry '{key}'", self.name)
+        })
+    }
+
+    pub fn take_tensor(&mut self, key: &str) -> Result<HostTensor> {
+        match self.take(key)? {
+            Blob::F32(t) => Ok(t),
+            Blob::U64(_) => bail!("entry '{key}' is u64, expected f32 tensor"),
+        }
+    }
+
+    pub fn take_f32s(&mut self, key: &str) -> Result<Vec<f32>> {
+        Ok(self.take_tensor(key)?.data)
+    }
+
+    pub fn take_u64s(&mut self, key: &str) -> Result<Vec<u64>> {
+        match self.take(key)? {
+            Blob::U64(v) => Ok(v),
+            Blob::F32(_) => bail!("entry '{key}' is f32, expected u64 blob"),
+        }
+    }
+
+    pub fn take_u64(&mut self, key: &str) -> Result<u64> {
+        let v = self.take_u64s(key)?;
+        ensure!(v.len() == 1, "entry '{key}': expected one u64, got {}", v.len());
+        Ok(v[0])
+    }
+
+    pub fn take_f64s(&mut self, key: &str) -> Result<Vec<f64>> {
+        Ok(self.take_u64s(key)?.into_iter().map(f64::from_bits).collect())
+    }
+
+    pub fn take_str(&mut self, key: &str) -> Result<String> {
+        let words = self.take_u64s(key)?;
+        ensure!(!words.is_empty(), "entry '{key}': empty string blob");
+        let len = words[0] as usize;
+        ensure!(
+            len <= (words.len() - 1) * 8,
+            "entry '{key}': string length {len} exceeds blob"
+        );
+        let mut bytes = Vec::with_capacity(len);
+        for w in &words[1..] {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        bytes.truncate(len);
+        String::from_utf8(bytes).with_context(|| format!("entry '{key}' not utf8"))
+    }
+
+    /// Fixed-width RNG state helpers (the "raw u64 blob" convention).
+    pub fn put_rng(&mut self, key: &str, rng: &crate::util::rng::Rng) {
+        self.put_u64s(key, rng.state().to_vec());
+    }
+
+    pub fn take_rng(&mut self, key: &str) -> Result<crate::util::rng::Rng> {
+        let v = self.take_u64s(key)?;
+        ensure!(v.len() == 4, "entry '{key}': RNG state has {} words, expected 4", v.len());
+        crate::util::rng::Rng::from_state([v[0], v[1], v[2], v[3]])
+    }
+}
+
+/// Error unless every entry of `sec` was consumed — the guard against
+/// silently resuming from a checkpoint written by a different config.
+pub fn ensure_consumed(sec: &Section) -> Result<()> {
+    ensure!(
+        sec.is_empty(),
+        "checkpoint section '{}' has {} unexpected entries (e.g. {:?}) — \
+         written by a different configuration?",
+        sec.name,
+        sec.len(),
+        sec.keys().into_iter().take(4).collect::<Vec<_>>()
+    );
+    Ok(())
+}
+
+/// Remove and return the named section from a loaded checkpoint.
+pub fn take_section(sections: &mut Vec<Section>, name: &str) -> Result<Section> {
+    let i = sections
+        .iter()
+        .position(|s| s.name == name)
+        .with_context(|| format!("checkpoint has no '{name}' section"))?;
+    Ok(sections.remove(i))
+}
+
+// ---------------------------------------------------------------------------
+// Atomic writes
+// ---------------------------------------------------------------------------
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "ckpt".to_string());
+    path.with_file_name(format!("{name}.tmp"))
+}
+
+/// Write via tmp file + fsync + rename: a crash at any point leaves either
+/// the previous file or the new one, never a torn half-write.
+fn atomic_write(
+    path: &Path,
+    write: impl FnOnce(&mut std::io::BufWriter<std::fs::File>) -> Result<()>,
+) -> Result<()> {
+    let tmp = tmp_path(path);
+    let res = (|| -> Result<()> {
+        let f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        let mut w = std::io::BufWriter::new(f);
+        write(&mut w)?;
+        w.flush()?;
+        w.get_ref().sync_all()?;
+        Ok(())
+    })();
+    if let Err(e) = res {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    // Durability, not just process-kill atomicity: the rename itself must
+    // reach disk before we report success, or a power loss could revert
+    // to the previous directory entry after training moved on.
+    #[cfg(unix)]
+    if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::File::open(parent)
+            .and_then(|d| d.sync_all())
+            .with_context(|| format!("fsyncing {}", parent.display()))?;
     }
     Ok(())
 }
 
-pub fn load_tensors(path: &Path) -> Result<BTreeMap<String, HostTensor>> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path)
-            .with_context(|| format!("opening {}", path.display()))?,
-    );
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{} is not a LISA checkpoint", path.display());
-    }
-    let mut u32buf = [0u8; 4];
-    f.read_exact(&mut u32buf)?;
-    let version = u32::from_le_bytes(u32buf);
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version}");
-    }
-    f.read_exact(&mut u32buf)?;
-    let n = u32::from_le_bytes(u32buf) as usize;
+// ---------------------------------------------------------------------------
+// Serialization helpers
+// ---------------------------------------------------------------------------
 
-    let mut out = BTreeMap::new();
-    for _ in 0..n {
-        f.read_exact(&mut u32buf)?;
-        let name_len = u32::from_le_bytes(u32buf) as usize;
-        if name_len > 4096 {
-            bail!("corrupt checkpoint: name_len={name_len}");
-        }
-        let mut name = vec![0u8; name_len];
-        f.read_exact(&mut name)?;
-        let name = String::from_utf8(name).context("tensor name not utf8")?;
-        f.read_exact(&mut u32buf)?;
-        let rank = u32::from_le_bytes(u32buf) as usize;
-        if rank > 8 {
-            bail!("corrupt checkpoint: rank={rank}");
-        }
+fn f32s_as_bytes(data: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+fn u64s_as_bytes(data: &[u64]) -> &[u8] {
+    // u64 is little-endian on every platform this runs on (x86-64/aarch64);
+    // the format is defined as LE and the loader reads words explicitly.
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 8) }
+}
+
+/// Serialize one v2 record (section header or entry) into `buf`.
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_named(buf: &mut Vec<u8>, name: &str) {
+    push_u32(buf, name.len() as u32);
+    buf.extend_from_slice(name.as_bytes());
+}
+
+fn write_record(w: &mut impl Write, buf: &[u8]) -> Result<()> {
+    w.write_all(buf)?;
+    w.write_all(&crate::util::crc32::crc32(buf).to_le_bytes())?;
+    Ok(())
+}
+
+/// Checked reader: tracks the bytes remaining in the file so every length
+/// field is validated before allocation, and feeds parsed bytes to a CRC
+/// accumulator for record verification.
+struct Rd<R: Read> {
+    r: R,
+    remaining: u64,
+    crc: Crc32,
+}
+
+impl<R: Read> Rd<R> {
+    fn new(r: R, len: u64) -> Rd<R> {
+        Rd { r, remaining: len, crc: Crc32::new() }
+    }
+
+    fn fill(&mut self, buf: &mut [u8]) -> Result<()> {
+        ensure!(
+            buf.len() as u64 <= self.remaining,
+            "corrupt checkpoint: record needs {} bytes but only {} remain",
+            buf.len(),
+            self.remaining
+        );
+        self.r.read_exact(buf).context("truncated checkpoint")?;
+        self.remaining -= buf.len() as u64;
+        self.crc.update(buf);
+        Ok(())
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.fill(&mut b)?;
+        Ok(b[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.fill(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.fill(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn name(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        ensure!(len <= MAX_NAME, "corrupt checkpoint: name_len={len}");
+        let mut bytes = vec![0u8; len];
+        self.fill(&mut bytes)?;
+        String::from_utf8(bytes).context("checkpoint name not utf8")
+    }
+
+    /// Validated shape read: bounded rank, overflow-checked numel, and the
+    /// payload must fit in the remaining file — checked *before* the data
+    /// buffer is allocated (an adversarial header can otherwise demand
+    /// `usize::MAX` elements).
+    fn shape(&mut self, width: u64) -> Result<(Vec<usize>, usize)> {
+        let rank = self.u32()? as usize;
+        ensure!(rank <= MAX_RANK, "corrupt checkpoint: rank={rank}");
         let mut shape = Vec::with_capacity(rank);
-        let mut u64buf = [0u8; 8];
         for _ in 0..rank {
-            f.read_exact(&mut u64buf)?;
-            shape.push(u64::from_le_bytes(u64buf) as usize);
+            let d = self.u64()?;
+            ensure!(d <= usize::MAX as u64, "corrupt checkpoint: dim={d}");
+            shape.push(d as usize);
         }
-        let numel: usize = shape.iter().product();
+        let numel = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .context("corrupt checkpoint: shape product overflows")?;
+        let bytes = (numel as u64)
+            .checked_mul(width)
+            .context("corrupt checkpoint: payload size overflows")?;
+        ensure!(
+            bytes <= self.remaining,
+            "corrupt checkpoint: tensor of {bytes} bytes but only {} remain",
+            self.remaining
+        );
+        Ok((shape, numel))
+    }
+
+    fn f32_data(&mut self, numel: usize) -> Result<Vec<f32>> {
         let mut data = vec![0f32; numel];
         let bytes: &mut [u8] = unsafe {
             std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4)
         };
-        f.read_exact(bytes)?;
+        self.fill(bytes)?;
+        Ok(data)
+    }
+
+    fn u64_data(&mut self, numel: usize) -> Result<Vec<u64>> {
+        let mut data = Vec::with_capacity(numel);
+        for _ in 0..numel {
+            data.push(self.u64()?);
+        }
+        Ok(data)
+    }
+
+    fn crc_reset(&mut self) {
+        self.crc = Crc32::new();
+    }
+
+    /// Read the stored record CRC (not fed back into the accumulator) and
+    /// compare against everything parsed since `crc_reset`.
+    fn crc_check(&mut self, what: &str) -> Result<()> {
+        let want = self.crc.finish();
+        ensure!(4 <= self.remaining, "truncated checkpoint: missing {what} crc");
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b).context("truncated checkpoint")?;
+        self.remaining -= 4;
+        let got = u32::from_le_bytes(b);
+        ensure!(
+            got == want,
+            "corrupt checkpoint: {what} crc mismatch ({got:#010x} != {want:#010x})"
+        );
+        Ok(())
+    }
+}
+
+fn open_versioned(path: &Path) -> Result<(Rd<std::io::BufReader<std::fs::File>>, u32)> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let len = f.metadata()?.len();
+    let mut rd = Rd::new(std::io::BufReader::new(f), len);
+    let mut magic = [0u8; 8];
+    rd.fill(&mut magic)
+        .with_context(|| format!("{} is not a LISA checkpoint", path.display()))?;
+    ensure!(&magic == MAGIC, "{} is not a LISA checkpoint", path.display());
+    let version = rd.u32()?;
+    ensure!(
+        version == V1 || version == V2,
+        "unsupported checkpoint version {version}"
+    );
+    Ok((rd, version))
+}
+
+// ---------------------------------------------------------------------------
+// v1: flat weight-only tensor list (legacy, still read + written)
+// ---------------------------------------------------------------------------
+
+/// Legacy v1 writer (weight-only flat list); kept for compatibility
+/// fixtures and external tooling. New code should write sections via
+/// [`save_sections`]. The write is atomic like every checkpoint write.
+pub fn save_tensors(path: &Path, tensors: &[(String, &HostTensor)]) -> Result<()> {
+    atomic_write(path, |f| {
+        f.write_all(MAGIC)?;
+        f.write_all(&V1.to_le_bytes())?;
+        f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in tensors {
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            f.write_all(f32s_as_bytes(&t.data))?;
+        }
+        Ok(())
+    })
+}
+
+fn parse_v1(rd: &mut Rd<impl Read>) -> Result<BTreeMap<String, HostTensor>> {
+    let n = rd.u32()? as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let name = rd.name()?;
+        let (shape, numel) = rd.shape(4)?;
+        let data = rd.f32_data(numel)?;
         out.insert(name, HostTensor { shape, data });
     }
+    ensure!(
+        rd.remaining == 0,
+        "corrupt checkpoint: {} trailing bytes",
+        rd.remaining
+    );
     Ok(out)
 }
 
+/// Read a v1 flat tensor file. v2 files are section-structured — load
+/// those with [`load_sections`] (or [`load_model`], which accepts both).
+pub fn load_tensors(path: &Path) -> Result<BTreeMap<String, HostTensor>> {
+    let (mut rd, version) = open_versioned(path)?;
+    ensure!(
+        version == V1,
+        "{} is a v{version} sectioned checkpoint, not a v1 tensor list",
+        path.display()
+    );
+    parse_v1(&mut rd)
+}
+
+// ---------------------------------------------------------------------------
+// v2: sectioned, CRC-guarded
+// ---------------------------------------------------------------------------
+
+/// Write a v2 sectioned checkpoint atomically (tmp + fsync + rename).
+pub fn save_sections(path: &Path, sections: &[Section]) -> Result<()> {
+    atomic_write(path, |f| {
+        f.write_all(MAGIC)?;
+        f.write_all(&V2.to_le_bytes())?;
+        f.write_all(&(sections.len() as u32).to_le_bytes())?;
+        for sec in sections {
+            let mut header = Vec::new();
+            push_named(&mut header, &sec.name);
+            push_u32(&mut header, sec.entries.len() as u32);
+            write_record(f, &header)?;
+            for (key, blob) in &sec.entries {
+                let mut rec = Vec::new();
+                push_named(&mut rec, key);
+                match blob {
+                    Blob::F32(t) => {
+                        rec.push(0u8);
+                        push_u32(&mut rec, t.shape.len() as u32);
+                        for &d in &t.shape {
+                            push_u64(&mut rec, d as u64);
+                        }
+                        rec.extend_from_slice(f32s_as_bytes(&t.data));
+                    }
+                    Blob::U64(v) => {
+                        rec.push(1u8);
+                        push_u32(&mut rec, 1); // rank-1 by construction
+                        push_u64(&mut rec, v.len() as u64);
+                        rec.extend_from_slice(u64s_as_bytes(v));
+                    }
+                }
+                write_record(f, &rec)?;
+            }
+        }
+        Ok(())
+    })
+}
+
+fn parse_v2(rd: &mut Rd<impl Read>) -> Result<Vec<Section>> {
+    let n_sections = rd.u32()? as usize;
+    let mut out = Vec::new();
+    for _ in 0..n_sections {
+        rd.crc_reset();
+        let name = rd.name()?;
+        let n_entries = rd.u32()? as usize;
+        rd.crc_check("section header")?;
+        let mut sec = Section::new(&name);
+        for _ in 0..n_entries {
+            rd.crc_reset();
+            let key = rd.name()?;
+            let dtype = rd.u8()?;
+            let blob = match dtype {
+                0 => {
+                    let (shape, numel) = rd.shape(4)?;
+                    let data = rd.f32_data(numel)?;
+                    Blob::F32(HostTensor { shape, data })
+                }
+                1 => {
+                    let (shape, numel) = rd.shape(8)?;
+                    ensure!(shape.len() == 1, "u64 blob '{key}' must be rank-1");
+                    Blob::U64(rd.u64_data(numel)?)
+                }
+                d => bail!("corrupt checkpoint: unknown dtype {d} for '{key}'"),
+            };
+            rd.crc_check("entry")?;
+            ensure!(
+                sec.entries.insert(key.clone(), blob).is_none(),
+                "corrupt checkpoint: duplicate entry '{key}' in section '{name}'"
+            );
+        }
+        out.push(sec);
+    }
+    ensure!(
+        rd.remaining == 0,
+        "corrupt checkpoint: {} trailing bytes",
+        rd.remaining
+    );
+    Ok(out)
+}
+
+/// Read a v2 sectioned checkpoint, verifying every record CRC.
+pub fn load_sections(path: &Path) -> Result<Vec<Section>> {
+    let (mut rd, version) = open_versioned(path)?;
+    ensure!(
+        version == V2,
+        "{} is a v{version} checkpoint, expected a v2 sectioned file",
+        path.display()
+    );
+    parse_v2(&mut rd)
+}
+
+// ---------------------------------------------------------------------------
+// Model weights on top of both formats
+// ---------------------------------------------------------------------------
+
 /// Canonical tensor naming for a full model checkpoint.
-fn model_tensor_list(p: &ModelParams) -> Vec<(String, &HostTensor)> {
+pub(crate) fn model_tensor_list(p: &ModelParams) -> Vec<(String, &HostTensor)> {
     let mut v: Vec<(String, &HostTensor)> = vec![
         ("emb".into(), &p.emb),
         ("pos".into(), &p.pos),
@@ -113,19 +597,26 @@ fn model_tensor_list(p: &ModelParams) -> Vec<(String, &HostTensor)> {
     v
 }
 
-pub fn save_model(path: &Path, p: &ModelParams) -> Result<()> {
-    save_tensors(path, &model_tensor_list(p))
+/// The "model" section of a training-state checkpoint.
+pub fn model_section(p: &ModelParams) -> Section {
+    let mut sec = Section::new("model");
+    for (name, t) in model_tensor_list(p) {
+        sec.put_tensor(&name, t);
+    }
+    sec
 }
 
-pub fn load_model(path: &Path, into: &mut ModelParams) -> Result<()> {
-    let mut tensors = load_tensors(path)?;
+/// Restore model weights from a "model" section (shape-checked, every
+/// tensor must be present, nothing may be left over).
+pub fn load_model_section(sec: &mut Section, into: &mut ModelParams) -> Result<()> {
     let mut take = |name: &str, dst: &mut HostTensor| -> Result<()> {
-        let t = tensors
-            .remove(name)
-            .ok_or_else(|| anyhow::anyhow!("checkpoint missing tensor '{name}'"))?;
-        if t.shape != dst.shape {
-            bail!("tensor '{name}': shape {:?} != expected {:?}", t.shape, dst.shape);
-        }
+        let t = sec.take_tensor(name)?;
+        ensure!(
+            t.shape == dst.shape,
+            "tensor '{name}': shape {:?} != expected {:?}",
+            t.shape,
+            dst.shape
+        );
         *dst = t;
         Ok(())
     };
@@ -136,30 +627,52 @@ pub fn load_model(path: &Path, into: &mut ModelParams) -> Result<()> {
     for l in 0..into.blocks.len() {
         for t in 0..into.blocks[l].len() {
             let name = format!("block.{l}.{t}");
-            let x = tensors
-                .remove(&name)
-                .ok_or_else(|| anyhow::anyhow!("checkpoint missing tensor '{name}'"))?;
-            if x.shape != into.blocks[l][t].shape {
-                bail!("tensor '{name}': shape mismatch");
-            }
+            let x = sec.take_tensor(&name)?;
+            ensure!(
+                x.shape == into.blocks[l][t].shape,
+                "tensor '{name}': shape mismatch"
+            );
             into.blocks[l][t] = x;
         }
     }
-    if !tensors.is_empty() {
-        bail!("checkpoint has {} unexpected tensors", tensors.len());
+    ensure_consumed(sec)
+}
+
+/// Write a weights-only checkpoint (v2, one "model" section, atomic).
+pub fn save_model(path: &Path, p: &ModelParams) -> Result<()> {
+    save_sections(path, &[model_section(p)])
+}
+
+/// Read model weights from either a v1 weight-only file or any v2
+/// checkpoint containing a "model" section (including full training-state
+/// checkpoints — the extra sections are ignored).
+pub fn load_model(path: &Path, into: &mut ModelParams) -> Result<()> {
+    let (mut rd, version) = open_versioned(path)?;
+    if version == V1 {
+        let mut sec = Section::new("model");
+        for (name, t) in parse_v1(&mut rd)? {
+            sec.entries.insert(name, Blob::F32(t));
+        }
+        return load_model_section(&mut sec, into);
     }
-    Ok(())
+    let mut sections = parse_v2(&mut rd)?;
+    let mut model = take_section(&mut sections, "model")?;
+    load_model_section(&mut model, into)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn tdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("lisa_ckpt_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn tensor_roundtrip() {
-        let dir = std::env::temp_dir().join("lisa_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("t.ckpt");
+        let path = tdir("v1rt").join("t.ckpt");
         let a = HostTensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         let b = HostTensor::from_vec(&[4], vec![9.0; 4]);
         save_tensors(&path, &[("a".into(), &a), ("b".into(), &b)]).unwrap();
@@ -170,10 +683,122 @@ mod tests {
 
     #[test]
     fn rejects_garbage_file() {
-        let dir = std::env::temp_dir().join("lisa_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("garbage.ckpt");
+        let path = tdir("garbage").join("garbage.ckpt");
         std::fs::write(&path, b"not a checkpoint at all").unwrap();
         assert!(load_tensors(&path).is_err());
+        assert!(load_sections(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_huge_numel_header_without_allocating() {
+        // A v1 header declaring a [2^40, 2^40] tensor: numel overflows and
+        // the payload exceeds the file; the loader must Err before any
+        // allocation (the seed code allocated vec![0f32; numel] first).
+        let path = tdir("huge").join("huge.ckpt");
+        let mut f = Vec::new();
+        f.extend_from_slice(MAGIC);
+        f.extend_from_slice(&1u32.to_le_bytes());
+        f.extend_from_slice(&1u32.to_le_bytes()); // one tensor
+        f.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        f.push(b'x');
+        f.extend_from_slice(&2u32.to_le_bytes()); // rank 2
+        f.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        f.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        std::fs::write(&path, &f).unwrap();
+        let err = format!("{:#}", load_tensors(&path).unwrap_err());
+        assert!(err.contains("corrupt"), "got: {err}");
+    }
+
+    #[test]
+    fn sections_roundtrip_all_dtypes() {
+        let path = tdir("v2rt").join("s.ckpt");
+        let mut a = Section::new("alpha");
+        a.put_tensor("w", &HostTensor::from_vec(&[2, 2], vec![1.0, -2.0, 3.5, 0.0]));
+        a.put_u64s("rng", vec![1, 2, 3, 4]);
+        a.put_u64("step", 7);
+        a.put_f64s("ema", &[0.1, -3.7, f64::MIN_POSITIVE]);
+        a.put_str("label", "lisa-grad");
+        let mut b = Section::new("beta");
+        b.put_f32s("m", &[0.5; 9]);
+        save_sections(&path, &[a.clone(), b.clone()]).unwrap();
+
+        let mut loaded = load_sections(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        let mut la = take_section(&mut loaded, "alpha").unwrap();
+        assert_eq!(la.take_tensor("w").unwrap().data, vec![1.0, -2.0, 3.5, 0.0]);
+        assert_eq!(la.take_u64s("rng").unwrap(), vec![1, 2, 3, 4]);
+        assert_eq!(la.take_u64("step").unwrap(), 7);
+        let ema = la.take_f64s("ema").unwrap();
+        assert_eq!(ema[1].to_bits(), (-3.7f64).to_bits());
+        assert_eq!(la.take_str("label").unwrap(), "lisa-grad");
+        assert!(la.is_empty());
+        let mut lb = take_section(&mut loaded, "beta").unwrap();
+        assert_eq!(lb.take_f32s("m").unwrap(), vec![0.5; 9]);
+        assert!(take_section(&mut loaded, "alpha").is_err());
+    }
+
+    #[test]
+    fn missing_and_wrong_dtype_entries_error() {
+        let mut s = Section::new("x");
+        s.put_u64("n", 3);
+        assert!(s.clone().take_tensor("n").is_err());
+        assert!(s.clone().take_u64s("absent").is_err());
+        assert!(ensure_consumed(&s).is_err());
+        s.take_u64("n").unwrap();
+        assert!(ensure_consumed(&s).is_ok());
+    }
+
+    #[test]
+    fn str_blob_edge_cases() {
+        let mut s = Section::new("x");
+        s.put_str("empty", "");
+        s.put_str("seven", "1234567");
+        s.put_str("eight", "12345678");
+        s.put_str("nine", "123456789");
+        assert_eq!(s.take_str("empty").unwrap(), "");
+        assert_eq!(s.take_str("seven").unwrap(), "1234567");
+        assert_eq!(s.take_str("eight").unwrap(), "12345678");
+        assert_eq!(s.take_str("nine").unwrap(), "123456789");
+    }
+
+    #[test]
+    fn v2_bit_flip_in_tensor_data_is_detected() {
+        let path = tdir("flip").join("f.ckpt");
+        let mut s = Section::new("m");
+        s.put_f32s("w", &[1.0; 32]);
+        save_sections(&path, &[s]).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() - 40; // inside the f32 payload
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", load_sections(&path).unwrap_err());
+        assert!(err.contains("crc"), "got: {err}");
+    }
+
+    #[test]
+    fn save_failure_leaves_previous_checkpoint_intact() {
+        let dir = tdir("atomic");
+        let path = dir.join("state.ckpt");
+        let mut s = Section::new("m");
+        s.put_u64("gen", 1);
+        save_sections(&path, &[s.clone()]).unwrap();
+
+        // Failure injection: a directory squatting on the tmp path makes
+        // File::create fail, standing in for a crash mid-write.
+        let tmp = tmp_path(&path);
+        std::fs::create_dir_all(&tmp).unwrap();
+        let mut s2 = Section::new("m");
+        s2.put_u64("gen", 2);
+        assert!(save_sections(&path, &[s2.clone()]).is_err());
+        let mut loaded = load_sections(&path).unwrap();
+        assert_eq!(loaded[0].take_u64("gen").unwrap(), 1, "old checkpoint must survive");
+
+        // A stale tmp left by a killed writer must not break the next save.
+        std::fs::remove_dir_all(&tmp).unwrap();
+        std::fs::write(&tmp, b"half-written garbage from a dead process").unwrap();
+        save_sections(&path, &[s2]).unwrap();
+        let mut loaded = load_sections(&path).unwrap();
+        assert_eq!(loaded[0].take_u64("gen").unwrap(), 2);
+        assert!(!tmp.exists(), "tmp must be consumed by the rename");
     }
 }

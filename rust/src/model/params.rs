@@ -21,6 +21,47 @@ pub enum ParamKey {
 }
 
 impl ParamKey {
+    /// Stable string form used by checkpoint files to key optimizer state
+    /// ("emb", "block.3.1", "lora.0.4", ...). Matches the model-tensor
+    /// naming of `checkpoint::save_model` where both exist.
+    pub fn name(&self) -> String {
+        match self {
+            ParamKey::Emb => "emb".to_string(),
+            ParamKey::Pos => "pos".to_string(),
+            ParamKey::Block(l, t) => format!("block.{l}.{t}"),
+            ParamKey::Lora(l, t) => format!("lora.{l}.{t}"),
+            ParamKey::HeadNorm => "gf".to_string(),
+            ParamKey::HeadProj => "wh".to_string(),
+        }
+    }
+
+    /// Inverse of [`ParamKey::name`]; errors on anything it did not write
+    /// (checkpoint robustness: corrupt keys must not panic downstream).
+    pub fn parse(s: &str) -> anyhow::Result<ParamKey> {
+        let indexed = |rest: &str| -> Option<(usize, usize)> {
+            let (l, t) = rest.split_once('.')?;
+            Some((l.parse().ok()?, t.parse().ok()?))
+        };
+        match s {
+            "emb" => Ok(ParamKey::Emb),
+            "pos" => Ok(ParamKey::Pos),
+            "gf" => Ok(ParamKey::HeadNorm),
+            "wh" => Ok(ParamKey::HeadProj),
+            _ => {
+                if let Some(rest) = s.strip_prefix("block.") {
+                    if let Some((l, t)) = indexed(rest) {
+                        return Ok(ParamKey::Block(l, t));
+                    }
+                } else if let Some(rest) = s.strip_prefix("lora.") {
+                    if let Some((l, t)) = indexed(rest) {
+                        return Ok(ParamKey::Lora(l, t));
+                    }
+                }
+                anyhow::bail!("unparseable parameter key '{s}'")
+            }
+        }
+    }
+
     /// True for tensors that receive weight decay (matrices only — norm
     /// gains and embeddings are excluded, the standard AdamW convention).
     pub fn decayed(&self, block_param_names: &[(String, Vec<usize>)]) -> bool {
@@ -111,6 +152,19 @@ impl ModelParams {
             .chain([(ParamKey::HeadNorm, &self.gf), (ParamKey::HeadProj, &self.wh)])
     }
 
+    /// Tensor for a key, if it exists in this model (LoRA adapters live in
+    /// `lora::LoraState`, so `Lora` keys return `None` here).
+    pub fn get(&self, key: ParamKey) -> Option<&HostTensor> {
+        match key {
+            ParamKey::Emb => Some(&self.emb),
+            ParamKey::Pos => Some(&self.pos),
+            ParamKey::Block(l, t) => self.blocks.get(l)?.get(t),
+            ParamKey::HeadNorm => Some(&self.gf),
+            ParamKey::HeadProj => Some(&self.wh),
+            ParamKey::Lora(..) => None,
+        }
+    }
+
     pub fn get_mut(&mut self, key: ParamKey) -> &mut HostTensor {
         match key {
             ParamKey::Emb => &mut self.emb,
@@ -182,6 +236,25 @@ mod tests {
         let norms = p.layer_weight_norms();
         assert_eq!(norms.len(), m.n_layers + 2);
         assert!(norms.iter().all(|&n| n > 0.0));
+    }
+
+    #[test]
+    fn param_key_name_roundtrip() {
+        let keys = [
+            ParamKey::Emb,
+            ParamKey::Pos,
+            ParamKey::Block(0, 0),
+            ParamKey::Block(13, 7),
+            ParamKey::Lora(2, 11),
+            ParamKey::HeadNorm,
+            ParamKey::HeadProj,
+        ];
+        for k in keys {
+            assert_eq!(ParamKey::parse(&k.name()).unwrap(), k, "roundtrip of {k:?}");
+        }
+        for bad in ["", "block", "block.1", "block.x.y", "lora.1.", "emb2"] {
+            assert!(ParamKey::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
     }
 
     #[test]

@@ -11,6 +11,9 @@
 
 use std::collections::BTreeMap;
 
+use anyhow::{ensure, Result};
+
+use crate::model::checkpoint::Section;
 use crate::model::ParamKey;
 use crate::util::rng::Rng;
 
@@ -204,6 +207,80 @@ impl Galore {
     pub fn n_slots(&self) -> usize {
         self.state.len()
     }
+
+    /// Serialize the projector state: per-slot moments + basis + step
+    /// counters, plus the basis-refresh RNG stream (resume protocol).
+    pub fn save_state(&self, sec: &mut Section, prefix: &str) {
+        // the slots' proj/m/v layouts are rank-dependent; persist the rank
+        // so resuming under a different --galore-rank fails loudly instead
+        // of indexing garbage
+        sec.put_u64(&format!("{prefix}hp.rank"), self.hp.rank as u64);
+        sec.put_rng(&format!("{prefix}rng"), &self.rng);
+        let keys: Vec<String> = self.state.keys().map(|k| k.name()).collect();
+        sec.put_str(&format!("{prefix}keys"), &keys.join(","));
+        for (k, s) in &self.state {
+            let n = k.name();
+            sec.put_u64(&format!("{prefix}{n}.t"), s.t);
+            sec.put_u64(&format!("{prefix}{n}.proj_step"), s.proj_step);
+            sec.put_f32s(&format!("{prefix}{n}.proj"), &s.proj);
+            sec.put_f32s(&format!("{prefix}{n}.m"), &s.m);
+            sec.put_f32s(&format!("{prefix}{n}.v"), &s.v);
+        }
+    }
+
+    /// Restore the state written by [`Galore::save_state`], replacing any
+    /// existing state. Slot layouts are validated against the configured
+    /// rank and (where the oracle knows them) the parameter shapes, so an
+    /// inconsistent checkpoint errors here instead of projecting garbage.
+    pub fn load_state(
+        &mut self,
+        sec: &mut Section,
+        prefix: &str,
+        shape: super::ShapeFn<'_>,
+    ) -> Result<()> {
+        let rank = sec.take_u64(&format!("{prefix}hp.rank"))?;
+        ensure!(
+            rank == self.hp.rank as u64,
+            "checkpoint GaLore rank {rank} != configured rank {}",
+            self.hp.rank
+        );
+        self.rng = sec.take_rng(&format!("{prefix}rng"))?;
+        self.state.clear();
+        let keys = sec.take_str(&format!("{prefix}keys"))?;
+        for n in keys.split(',').filter(|s| !s.is_empty()) {
+            let key = ParamKey::parse(n)?;
+            let t = sec.take_u64(&format!("{prefix}{n}.t"))?;
+            let proj_step = sec.take_u64(&format!("{prefix}{n}.proj_step"))?;
+            let proj = sec.take_f32s(&format!("{prefix}{n}.proj"))?;
+            let m = sec.take_f32s(&format!("{prefix}{n}.m"))?;
+            let v = sec.take_f32s(&format!("{prefix}{n}.v"))?;
+            ensure!(
+                m.len() == v.len(),
+                "galore slot '{n}': m/v length mismatch ({} vs {})",
+                m.len(),
+                v.len()
+            );
+            ensure!(
+                proj_step <= t,
+                "galore slot '{n}': proj_step {proj_step} > t {t}"
+            );
+            if let Some(s) = shape(key) {
+                ensure!(s.len() == 2, "galore slot '{n}': parameter is not 2-D");
+                let (rows, cols) = (s[0], s[1]);
+                let r = self.hp.rank.min(rows.min(cols));
+                let (short, long) = (rows.min(cols), rows.max(cols));
+                ensure!(
+                    proj.len() == short * r && m.len() == r * long,
+                    "galore slot '{n}': basis/moment sizes ({}, {}) don't fit a \
+                     [{rows}, {cols}] parameter at rank {r}",
+                    proj.len(),
+                    m.len()
+                );
+            }
+            self.state.insert(key, Slot { t, proj, proj_step, m, v });
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -253,6 +330,76 @@ mod tests {
         }
         let l1 = loss(&w);
         assert!(l1 < l0 * 0.05, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn state_roundtrip_continues_bitwise_across_refresh() {
+        // update_proj_gap=2 so the continuation crosses a basis refresh —
+        // the restored RNG stream must reproduce the same power-iteration
+        // draws the uninterrupted run makes.
+        let hp = GaloreHp {
+            adam: AdamHp { lr: 0.05, weight_decay: 0.01, ..Default::default() },
+            rank: 3,
+            update_proj_gap: 2,
+            scale: 0.5,
+            power_iters: 4,
+        };
+        let (rows, cols) = (6usize, 10usize);
+        let mut rng = crate::util::rng::Rng::new(21);
+        let mut p_a = vec![0f32; rows * cols];
+        rng.fill_normal(&mut p_a, 0.5);
+        let mut p_b = p_a.clone();
+        let grads: Vec<Vec<f32>> = (0..7)
+            .map(|_| {
+                let mut g = vec![0f32; rows * cols];
+                rng.fill_normal(&mut g, 0.1);
+                g
+            })
+            .collect();
+
+        let key = ParamKey::Block(1, 1);
+        let mut a = Galore::new(hp, 5);
+        let mut b = Galore::new(hp, 5);
+        for g in &grads[..3] {
+            a.step_matrix(key, true, &mut p_a, g, rows, cols);
+            b.step_matrix(key, true, &mut p_b, g, rows, cols);
+        }
+        let mut sec = Section::new("strategy");
+        a.save_state(&mut sec, "opt.galore.");
+        let mut a2 = Galore::new(hp, 999); // wrong seed on purpose
+        let shape = |_| Some(vec![rows, cols]);
+        a2.load_state(&mut sec, "opt.galore.", &shape).unwrap();
+        assert!(sec.is_empty(), "load must consume every entry");
+        assert_eq!(a2.state_bytes(), b.state_bytes());
+        for g in &grads[3..] {
+            a2.step_matrix(key, true, &mut p_a, g, rows, cols);
+            b.step_matrix(key, true, &mut p_b, g, rows, cols);
+        }
+        assert_eq!(p_a, p_b, "resumed GaLore must be bit-identical");
+    }
+
+    #[test]
+    fn state_load_rejects_rank_mismatch() {
+        let hp4 = GaloreHp { rank: 4, ..Default::default() };
+        let mut a = Galore::new(hp4, 1);
+        let (rows, cols) = (8usize, 12usize);
+        let mut p = vec![0.1f32; rows * cols];
+        let g = vec![0.1f32; rows * cols];
+        a.step_matrix(ParamKey::Block(0, 1), true, &mut p, &g, rows, cols);
+        let mut sec = Section::new("strategy");
+        a.save_state(&mut sec, "opt.galore.");
+        let mut b = Galore::new(GaloreHp { rank: 8, ..Default::default() }, 1);
+        let err = b.load_state(&mut sec, "opt.galore.", &|_| None).unwrap_err();
+        assert!(err.to_string().contains("rank"), "got: {err}");
+
+        // same rank but a slot that doesn't fit the declared parameter
+        let mut sec = Section::new("strategy");
+        a.save_state(&mut sec, "opt.galore.");
+        let mut c = Galore::new(hp4, 1);
+        let err = c
+            .load_state(&mut sec, "opt.galore.", &|_| Some(vec![20, 30]))
+            .unwrap_err();
+        assert!(err.to_string().contains("don't fit"), "got: {err}");
     }
 
     #[test]

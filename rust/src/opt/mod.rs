@@ -10,6 +10,13 @@ pub use galore::{Galore, GaloreHp};
 use crate::engine::Grads;
 use crate::model::{ModelParams, ParamKey};
 
+/// Expected-shape oracle for checkpoint restoration: maps a parameter key
+/// to its tensor shape so restored optimizer state can be size-validated
+/// at load time (a CRC-valid but inconsistent file must error, never
+/// panic mid-step). `None` = shape unknown to the caller; the check is
+/// skipped for that key.
+pub type ShapeFn<'a> = &'a dyn Fn(ParamKey) -> Option<Vec<usize>>;
+
 /// Plain SGD, used by optimizer-equivalence tests.
 #[derive(Debug, Clone, Copy)]
 pub struct Sgd {
@@ -135,6 +142,63 @@ impl Optimizer {
             Optimizer::Galore { proj, aux } => proj.state_bytes() + aux.state_bytes(),
         }
     }
+
+    /// Serialize all optimizer state into a checkpoint section (resume
+    /// protocol). A "kind" tag guards against resuming a run with a
+    /// different optimizer arm.
+    pub fn save_state(&self, sec: &mut crate::model::checkpoint::Section) {
+        match self {
+            Optimizer::AdamW(o) => save_adamw_state(o, sec),
+            Optimizer::Galore { proj, aux } => {
+                sec.put_str("opt.kind", "galore");
+                proj.save_state(sec, "opt.galore.");
+                aux.save_state(sec, "opt.adam.");
+            }
+        }
+    }
+
+    /// Restore the state written by [`Optimizer::save_state`], validating
+    /// slot sizes against `shape` where known.
+    pub fn load_state(
+        &mut self,
+        sec: &mut crate::model::checkpoint::Section,
+        shape: ShapeFn<'_>,
+    ) -> anyhow::Result<()> {
+        match self {
+            Optimizer::AdamW(o) => load_adamw_state(o, sec, shape),
+            Optimizer::Galore { proj, aux } => {
+                let kind = sec.take_str("opt.kind")?;
+                anyhow::ensure!(
+                    kind == "galore",
+                    "checkpoint optimizer kind '{kind}' != configured 'galore'"
+                );
+                proj.load_state(sec, "opt.galore.", shape)?;
+                aux.load_state(sec, "opt.adam.", shape)
+            }
+        }
+    }
+}
+
+/// The tagged-AdamW checkpoint convention ("opt.kind" + "opt.adam."
+/// prefix), shared by the [`Optimizer`] enum and strategies that own a
+/// bare [`AdamW`] (LoRA) — one definition so the two can never diverge.
+pub fn save_adamw_state(o: &AdamW, sec: &mut crate::model::checkpoint::Section) {
+    sec.put_str("opt.kind", "adamw");
+    o.save_state(sec, "opt.adam.");
+}
+
+/// Inverse of [`save_adamw_state`].
+pub fn load_adamw_state(
+    o: &mut AdamW,
+    sec: &mut crate::model::checkpoint::Section,
+    shape: ShapeFn<'_>,
+) -> anyhow::Result<()> {
+    let kind = sec.take_str("opt.kind")?;
+    anyhow::ensure!(
+        kind == "adamw",
+        "checkpoint optimizer kind '{kind}' != configured 'adamw'"
+    );
+    o.load_state(sec, "opt.adam.", shape)
 }
 
 #[cfg(test)]

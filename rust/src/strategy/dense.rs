@@ -5,6 +5,7 @@
 use anyhow::Result;
 
 use crate::engine::{Batch, Engine, TrainMask};
+use crate::model::checkpoint::Section;
 use crate::model::ModelParams;
 use crate::opt::{GaloreHp, Optimizer, StatePolicy};
 use crate::runtime::Manifest;
@@ -75,10 +76,20 @@ impl Strategy for DenseStrategy {
     fn state_bytes(&self) -> u64 {
         self.path.opt.state_bytes()
     }
+
+    fn save_state(&self, sec: &mut Section) -> Result<()> {
+        self.path.save_state(sec);
+        Ok(())
+    }
+
+    fn load_state(&mut self, sec: &mut Section, params: &ModelParams) -> Result<()> {
+        self.path.load_state(sec, &super::param_shape_oracle(params))
+    }
 }
 
 /// The untrained baseline: every step is a no-op (the driver short-circuits
-/// on `is_noop`, so no batches are consumed).
+/// on `is_noop`, so no batches are consumed). Stateless, so the default
+/// `save_state`/`load_state` (nothing persisted) are exactly right.
 pub struct VanillaStrategy {
     n_layers: usize,
 }

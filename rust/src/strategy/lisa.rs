@@ -6,6 +6,7 @@ use anyhow::Result;
 
 use crate::engine::{Batch, Engine, TrainMask};
 use crate::lisa::{LisaConfig, LisaScheduler};
+use crate::model::checkpoint::Section;
 use crate::model::ModelParams;
 use crate::opt::Optimizer;
 use crate::runtime::Manifest;
@@ -77,5 +78,16 @@ impl Strategy for LisaStrategy {
 
     fn state_bytes(&self) -> u64 {
         self.path.opt.state_bytes()
+    }
+
+    fn save_state(&self, sec: &mut Section) -> Result<()> {
+        self.sched.save_state(sec);
+        self.path.save_state(sec);
+        Ok(())
+    }
+
+    fn load_state(&mut self, sec: &mut Section, params: &ModelParams) -> Result<()> {
+        self.sched.load_state(sec)?;
+        self.path.load_state(sec, &super::param_shape_oracle(params))
     }
 }

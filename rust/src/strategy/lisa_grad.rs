@@ -13,6 +13,7 @@ use anyhow::Result;
 
 use crate::engine::{Batch, Engine, Grads, TrainMask};
 use crate::lisa::sample_weighted_distinct;
+use crate::model::checkpoint::Section;
 use crate::model::ModelParams;
 use crate::opt::Optimizer;
 use crate::train::TrainConfig;
@@ -135,6 +136,43 @@ impl Strategy for LisaGradStrategy {
 
     fn state_bytes(&self) -> u64 {
         self.path.opt.state_bytes()
+    }
+
+    fn save_state(&self, sec: &mut Section) -> Result<()> {
+        sec.put_rng("sampler.rng", &self.rng);
+        sec.put_u64s(
+            "sampler.current",
+            self.current.iter().map(|&l| l as u64).collect(),
+        );
+        sec.put_u64("sampler.resamples", self.resamples as u64);
+        sec.put_f64s("sampler.ema", &self.ema);
+        self.path.save_state(sec);
+        Ok(())
+    }
+
+    fn load_state(&mut self, sec: &mut Section, params: &ModelParams) -> Result<()> {
+        use anyhow::ensure;
+        let n_layers = self.ema.len();
+        self.rng = sec.take_rng("sampler.rng")?;
+        let current = sec.take_u64s("sampler.current")?;
+        ensure!(
+            current.len() <= n_layers && current.iter().all(|&l| (l as usize) < n_layers),
+            "sampler state does not fit {n_layers} layers"
+        );
+        self.current = current.into_iter().map(|l| l as usize).collect();
+        self.resamples = sec.take_u64("sampler.resamples")? as usize;
+        let ema = sec.take_f64s("sampler.ema")?;
+        ensure!(
+            ema.len() == n_layers,
+            "EMA arity {} != n_layers {n_layers}",
+            ema.len()
+        );
+        ensure!(
+            ema.iter().all(|e| e.is_finite() && *e >= 0.0),
+            "corrupt EMA weights in checkpoint"
+        );
+        self.ema = ema;
+        self.path.load_state(sec, &super::param_shape_oracle(params))
     }
 }
 

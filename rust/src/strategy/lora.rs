@@ -5,6 +5,7 @@ use anyhow::Result;
 
 use crate::engine::{Batch, Engine, MemCategory, TrainMask};
 use crate::lora::{self, LoraGrads, LoraState};
+use crate::model::checkpoint::Section;
 use crate::model::ModelParams;
 use crate::opt::{AdamW, StatePolicy};
 use crate::runtime::Manifest;
@@ -95,5 +96,46 @@ impl Strategy for LoraStrategy {
 
     fn effective_weight_norms(&self, base: &ModelParams) -> Vec<f64> {
         self.eval_params(base).layer_weight_norms()
+    }
+
+    fn save_state(&self, sec: &mut Section) -> Result<()> {
+        debug_assert!(self.acc.is_none(), "checkpoint mid-accumulation");
+        for (l, layer) in self.lora.adapters.iter().enumerate() {
+            for (i, t) in layer.iter().enumerate() {
+                sec.put_tensor(&format!("adapter.{l}.{i}"), t);
+            }
+        }
+        crate::opt::save_adamw_state(&self.opt, sec);
+        Ok(())
+    }
+
+    fn load_state(&mut self, sec: &mut Section, _params: &ModelParams) -> Result<()> {
+        use anyhow::ensure;
+        for (l, layer) in self.lora.adapters.iter_mut().enumerate() {
+            for (i, t) in layer.iter_mut().enumerate() {
+                let name = format!("adapter.{l}.{i}");
+                let loaded = sec.take_tensor(&name)?;
+                ensure!(
+                    loaded.shape == t.shape,
+                    "adapter '{name}': shape {:?} != expected {:?}",
+                    loaded.shape,
+                    t.shape
+                );
+                *t = loaded;
+            }
+        }
+        self.acc = None;
+        // the optimizer's slots live on the adapters, not the base model —
+        // size-check them against the (just-restored) adapter shapes
+        let adapters = &self.lora.adapters;
+        let shape = |key: crate::model::ParamKey| -> Option<Vec<usize>> {
+            match key {
+                crate::model::ParamKey::Lora(l, i) => {
+                    adapters.get(l)?.get(i).map(|t| t.shape.clone())
+                }
+                _ => None,
+            }
+        };
+        crate::opt::load_adamw_state(&mut self.opt, sec, &shape)
     }
 }

@@ -35,6 +35,7 @@ use anyhow::{anyhow, ensure, Result};
 
 use crate::engine::{Batch, Engine, Grads, MemCategory, TrainMask};
 use crate::lisa::{LayerDist, LisaConfig};
+use crate::model::checkpoint::Section;
 use crate::model::ModelParams;
 use crate::opt::{AdamHp, GaloreHp, Optimizer};
 use crate::runtime::Manifest;
@@ -99,6 +100,35 @@ pub trait Strategy {
     fn effective_weight_norms(&self, base: &ModelParams) -> Vec<f64> {
         base.layer_weight_norms()
     }
+
+    /// Serialize every piece of mutable training state — optimizer
+    /// moments, sampler RNG/EMA/draw history, auxiliary parameters — into
+    /// `sec`, such that [`Strategy::load_state`] on a freshly built
+    /// strategy of the same spec continues the run bit-for-bit
+    /// (`rust/tests/it_resume.rs` is the conformance suite). Called only
+    /// at optimizer-step boundaries, so per-step accumulators are always
+    /// empty. Default: stateless (the vanilla baseline).
+    fn save_state(&self, _sec: &mut Section) -> Result<()> {
+        Ok(())
+    }
+
+    /// Restore the state written by [`Strategy::save_state`]. `params` are
+    /// the already-restored (shape-checked) model weights — the size
+    /// oracle for validating optimizer slots, so an inconsistent
+    /// checkpoint errors here instead of panicking mid-step. Must consume
+    /// every entry it wrote; the session errors on leftovers, so a
+    /// checkpoint from a different method/config fails loudly instead of
+    /// resuming wrong. Default: stateless.
+    fn load_state(&mut self, _sec: &mut Section, _params: &ModelParams) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Shape oracle over the base model for [`crate::opt::ShapeFn`] callers.
+pub(crate) fn param_shape_oracle(
+    params: &ModelParams,
+) -> impl Fn(crate::model::ParamKey) -> Option<Vec<usize>> + '_ {
+    |key| params.get(key).map(|t| t.shape.clone())
 }
 
 // ---------------------------------------------------------------------------
@@ -112,6 +142,10 @@ pub struct GradAccum {
 }
 
 impl GradAccum {
+    pub fn is_empty(&self) -> bool {
+        self.acc.is_none()
+    }
+
     pub fn add(&mut self, g: Grads) {
         match &mut self.acc {
             None => self.acc = Some(g),
@@ -174,6 +208,18 @@ impl GradPath {
         let rt = engine.rt;
         self.opt.apply(params, grads, &rt.manifest.block_params);
         engine.meter.set(MemCategory::OptimState, self.opt.state_bytes());
+    }
+
+    /// Serialize the owned optimizer (the accumulator never persists —
+    /// checkpoints happen at step boundaries where it is empty).
+    pub fn save_state(&self, sec: &mut Section) {
+        debug_assert!(self.accum.is_empty(), "checkpoint mid-accumulation");
+        self.opt.save_state(sec);
+    }
+
+    pub fn load_state(&mut self, sec: &mut Section, shape: crate::opt::ShapeFn<'_>) -> Result<()> {
+        self.accum = GradAccum::default();
+        self.opt.load_state(sec, shape)
     }
 
     /// `finish` + `apply_grads` in one go — the whole `Strategy::apply`

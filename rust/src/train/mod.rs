@@ -17,12 +17,14 @@ pub mod schedule;
 
 pub use self::schedule::LrSchedule;
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
+use crate::data::DataLoader;
 use crate::engine::Engine;
-use crate::model::ModelParams;
+use crate::model::{checkpoint, ModelParams};
 use crate::opt::StatePolicy;
 use crate::runtime::Runtime;
 use crate::strategy::{Strategy, StrategySpec};
@@ -69,6 +71,16 @@ impl TrainConfig {
     pub fn lr_at(&self, step: usize) -> f32 {
         self.schedule.lr_at(step, self.lr, self.warmup, self.steps)
     }
+}
+
+/// Periodic full-state checkpointing for [`TrainSession::run_resumable`]:
+/// write the complete training state to `path` every `every` optimizer
+/// steps (0 = only once, at the end of the run). Writes are atomic
+/// (tmp+rename), so a kill mid-save leaves the previous checkpoint intact.
+#[derive(Debug, Clone)]
+pub struct CheckpointConf {
+    pub path: PathBuf,
+    pub every: usize,
 }
 
 /// Everything an experiment needs afterwards.
@@ -171,12 +183,49 @@ impl<'rt> TrainSession<'rt> {
     }
 
     /// Run the full schedule, recording curves.
-    pub fn run(&mut self, loader: &mut crate::data::DataLoader) -> Result<TrainResult> {
-        let mut loss_curve = Vec::with_capacity(self.cfg.steps);
+    pub fn run(&mut self, loader: &mut DataLoader) -> Result<TrainResult> {
+        self.run_from(loader, 0, None)
+    }
+
+    /// Crash-safe run: optionally resume from a checkpoint written by a
+    /// previous (interrupted) run, and optionally write periodic
+    /// checkpoints. The resumed segment replays the uninterrupted run
+    /// bit-for-bit (`rust/tests/it_resume.rs`); its `TrainResult` covers
+    /// only the steps it actually executed.
+    pub fn run_resumable(
+        &mut self,
+        loader: &mut DataLoader,
+        ckpt: Option<&CheckpointConf>,
+        resume: Option<&Path>,
+    ) -> Result<TrainResult> {
+        let start = match resume {
+            Some(path) => {
+                let next = self.resume_checkpoint(path, loader)?;
+                log::info!(
+                    "[{}] resumed from {} at step {next}/{}",
+                    self.strategy.label(),
+                    path.display(),
+                    self.cfg.steps
+                );
+                next
+            }
+            None => 0,
+        };
+        self.run_from(loader, start, ckpt)
+    }
+
+    fn run_from(
+        &mut self,
+        loader: &mut DataLoader,
+        start: usize,
+        ckpt: Option<&CheckpointConf>,
+    ) -> Result<TrainResult> {
+        let steps = self.cfg.steps;
+        let mut loss_curve = Vec::with_capacity(steps.saturating_sub(start));
         let mut weight_norms = Vec::new();
-        let mut step_times = Vec::with_capacity(self.cfg.steps);
+        let mut step_times = Vec::with_capacity(steps.saturating_sub(start));
         let mut last = 0.0f32;
-        for step in 0..self.cfg.steps {
+        for step in start..steps {
             let t0 = Instant::now();
             last = self.step(step, loader)?;
             step_times.push(t0.elapsed().as_secs_f64() * 1e3);
@@ -188,13 +237,22 @@ impl<'rt> TrainSession<'rt> {
                 log::info!(
                     "[{}] step {step}/{} loss {last:.4} lr {:.2e}",
                     self.strategy.label(),
-                    self.cfg.steps,
+                    steps,
                     self.cfg.lr_at(step)
                 );
             }
+            if let Some(c) = ckpt {
+                if c.every > 0 && (step + 1) % c.every == 0 && step + 1 < steps {
+                    self.save_checkpoint(&c.path, step + 1, loader)?;
+                }
+            }
+        }
+        if let Some(c) = ckpt {
+            // terminal checkpoint: a restarted job resumes to "done"
+            self.save_checkpoint(&c.path, steps, loader)?;
         }
         if self.cfg.weight_norm_every > 0 {
-            weight_norms.push((self.cfg.steps, self.effective_weight_norms()));
+            weight_norms.push((steps, self.effective_weight_norms()));
         }
         Ok(TrainResult {
             loss_curve,
@@ -218,6 +276,122 @@ impl<'rt> TrainSession<'rt> {
     /// Merged-parameter view for evaluation (LoRA merges adapters back).
     pub fn eval_params(&self) -> ModelParams {
         self.strategy.eval_params(&self.params)
+    }
+
+    /// Write the complete training state — model weights, strategy state
+    /// (optimizer moments, sampler RNG/EMA, adapters), loader cursor and
+    /// the clock position — as a v2 checkpoint. `next_step` is the first
+    /// step the resumed run will execute. Atomic: a kill mid-save leaves
+    /// the previous checkpoint intact. Call only at optimizer-step
+    /// boundaries (never mid-accumulation).
+    pub fn save_checkpoint(
+        &self,
+        path: &Path,
+        next_step: usize,
+        loader: &DataLoader,
+    ) -> Result<()> {
+        let mut meta = checkpoint::Section::new("meta");
+        meta.put_str("label", self.strategy.label());
+        meta.put_u64("next_step", next_step as u64);
+        meta.put_u64("seed", self.cfg.seed);
+        meta.put_u64("steps_total", self.cfg.steps as u64);
+        let mut strat = checkpoint::Section::new("strategy");
+        self.strategy.save_state(&mut strat)?;
+        let mut ld = checkpoint::Section::new("loader");
+        loader.save_state(&mut ld);
+        // engine observables (peak memory, backward-call counters) so the
+        // resumed run's TrainResult reports whole-run numbers, not just
+        // the post-resume segment's
+        let mut eng = checkpoint::Section::new("engine");
+        eng.put_u64("bwd_full_calls", self.engine.bwd_full_calls);
+        eng.put_u64("bwd_x_calls", self.engine.bwd_x_calls);
+        eng.put_u64("bwd_skipped", self.engine.bwd_skipped);
+        eng.put_u64("meter.peak", self.engine.meter.peak());
+        eng.put_u64s(
+            "meter.peak_by_cat",
+            self.engine.meter.breakdown().iter().map(|&(_, b)| b).collect(),
+        );
+        checkpoint::save_sections(
+            path,
+            &[meta, checkpoint::model_section(&self.params), strat, ld, eng],
+        )
+    }
+
+    /// Restore the state written by [`TrainSession::save_checkpoint`] into
+    /// this freshly-built session (same spec/config) and `loader` (same
+    /// dataset). Returns the step to continue from. Every mismatch — a
+    /// different method, seed, model shape or dataset size — is an error,
+    /// not a silent divergence.
+    pub fn resume_checkpoint(
+        &mut self,
+        path: &Path,
+        loader: &mut DataLoader,
+    ) -> Result<usize> {
+        let mut sections = checkpoint::load_sections(path)?;
+
+        let mut meta = checkpoint::take_section(&mut sections, "meta")?;
+        let label = meta.take_str("label")?;
+        ensure!(
+            label == self.strategy.label(),
+            "checkpoint was written by method '{label}', this session runs '{}'",
+            self.strategy.label()
+        );
+        let seed = meta.take_u64("seed")?;
+        ensure!(
+            seed == self.cfg.seed,
+            "checkpoint seed {seed} != configured seed {} — the data/sampler \
+             streams would not replay",
+            self.cfg.seed
+        );
+        let next_step = meta.take_u64("next_step")? as usize;
+        let steps_total = meta.take_u64("steps_total")? as usize;
+        // A checkpoint that is already past this session's horizon must not
+        // resume: run_from would execute zero steps and then rewrite the
+        // terminal checkpoint as next_step=cfg.steps while the state is
+        // really at `next_step` — re-training those steps on a later,
+        // longer resume. Shrinking the horizon requires a fresh run.
+        ensure!(
+            next_step <= self.cfg.steps,
+            "checkpoint is at step {next_step} (of a {steps_total}-step run) but this \
+             session trains only {} steps — cannot resume into a shorter schedule",
+            self.cfg.steps
+        );
+        checkpoint::ensure_consumed(&meta)?;
+
+        let mut model = checkpoint::take_section(&mut sections, "model")?;
+        checkpoint::load_model_section(&mut model, &mut self.params)?;
+
+        let mut strat = checkpoint::take_section(&mut sections, "strategy")?;
+        self.strategy.load_state(&mut strat, &self.params)?;
+        checkpoint::ensure_consumed(&strat)?;
+
+        let mut ld = checkpoint::take_section(&mut sections, "loader")?;
+        loader.load_state(&mut ld)?;
+        checkpoint::ensure_consumed(&ld)?;
+
+        let mut eng = checkpoint::take_section(&mut sections, "engine")?;
+        self.engine.bwd_full_calls = eng.take_u64("bwd_full_calls")?;
+        self.engine.bwd_x_calls = eng.take_u64("bwd_x_calls")?;
+        self.engine.bwd_skipped = eng.take_u64("bwd_skipped")?;
+        let peak = eng.take_u64("meter.peak")?;
+        let by_cat = eng.take_u64s("meter.peak_by_cat")?;
+        ensure!(
+            by_cat.len() == crate::engine::MemoryMeter::ALL.len(),
+            "meter peak blob has {} categories, expected {}",
+            by_cat.len(),
+            crate::engine::MemoryMeter::ALL.len()
+        );
+        self.engine.meter.restore_peak(peak, &by_cat);
+        checkpoint::ensure_consumed(&eng)?;
+
+        ensure!(
+            sections.is_empty(),
+            "checkpoint has {} unexpected sections ({:?}) — written by a \
+             different version?",
+            sections.len(),
+            sections.iter().map(|s| s.name.clone()).take(4).collect::<Vec<_>>()
+        );
+        Ok(next_step)
     }
 }
 

@@ -3,6 +3,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod crc32;
 pub mod csv;
 pub mod json;
 pub mod logger;

@@ -1,0 +1,406 @@
+//! Resume-conformance suite: for **every registered strategy**,
+//! interrupted-and-resumed training must reproduce the uninterrupted run
+//! exactly — same loss curve, same weight norms, same final parameters,
+//! bit for bit. Two tiers:
+//!
+//! * engine-free: the sampler/optimizer state protocol replays mask
+//!   streams identically after a save/load round-trip (synthetic
+//!   manifest, no artifacts needed — always runs);
+//! * engine-backed: full differential training runs on the tiny config
+//!   (skipped gracefully when `artifacts/tiny/manifest.json` is absent,
+//!   like `it_train.rs`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use lisa::data::{corpus, encode_sft, DataLoader, Tokenizer};
+use lisa::model::checkpoint::Section;
+use lisa::model::ModelParams;
+use lisa::runtime::{Manifest, Runtime};
+use lisa::strategy::{self, StrategySpec};
+use lisa::train::{TrainConfig, TrainSession};
+
+// ---------------------------------------------------------------------------
+// Shared fixtures
+// ---------------------------------------------------------------------------
+
+const N_LAYERS: usize = 8;
+
+/// Synthetic manifest (same shape as `it_strategy.rs`): everything
+/// strategy construction needs, no artifacts.
+fn synth_manifest() -> Manifest {
+    let d = 8usize;
+    let h = 4 * d;
+    let r = 2usize;
+    let block_params: Vec<(String, Vec<usize>)> = vec![
+        ("g1".into(), vec![d]),
+        ("wq".into(), vec![d, d]),
+        ("wk".into(), vec![d, d]),
+        ("wv".into(), vec![d, d]),
+        ("wo".into(), vec![d, d]),
+        ("g2".into(), vec![d]),
+        ("w1".into(), vec![d, h]),
+        ("w2".into(), vec![h, d]),
+    ];
+    let lora_params: Vec<(String, Vec<usize>)> = vec![
+        ("aq".into(), vec![d, r]),
+        ("bq".into(), vec![r, d]),
+        ("ak".into(), vec![d, r]),
+        ("bk".into(), vec![r, d]),
+        ("av".into(), vec![d, r]),
+        ("bv".into(), vec![r, d]),
+        ("ao".into(), vec![d, r]),
+        ("bo".into(), vec![r, d]),
+        ("a1".into(), vec![d, r]),
+        ("b1".into(), vec![r, h]),
+        ("a2".into(), vec![h, r]),
+        ("b2".into(), vec![r, d]),
+    ];
+    Manifest {
+        dir: PathBuf::new(),
+        name: "synthetic".into(),
+        d_model: d,
+        n_layers: N_LAYERS,
+        n_heads: 2,
+        vocab: 32,
+        seq: 4,
+        batch: 2,
+        mlp_ratio: 4,
+        lora_rank: r,
+        lora_alpha: 4.0,
+        n_params: 0,
+        block_params,
+        lora_params,
+        segments: BTreeMap::new(),
+    }
+}
+
+/// Every registered strategy with explicit sampler options.
+fn all_specs() -> Vec<StrategySpec> {
+    strategy::registry()
+        .iter()
+        .map(|r| {
+            StrategySpec::new(r.name)
+                .with("gamma", 3usize)
+                .with("period", 4usize)
+                .with("rank", 4usize)
+                .with("update-proj-gap", 4usize)
+        })
+        .collect()
+}
+
+fn tdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lisa_resume_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ---------------------------------------------------------------------------
+// Tier 1: engine-free mask-stream conformance (always runs)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_strategy_mask_stream_survives_state_roundtrip() {
+    let m = synth_manifest();
+    let cfg = TrainConfig { seed: 17, ..Default::default() };
+    let params = ModelParams::init(&m, &mut lisa::util::rng::Rng::new(1));
+    for spec in all_specs() {
+        let mut full = spec.build(&m, &cfg).unwrap();
+        let mut part1 = spec.build(&m, &cfg).unwrap();
+        // interrupt at a non-boundary step so the live layer set matters
+        let k = 13usize;
+        for step in 0..k {
+            assert_eq!(
+                full.mask_for_step(step),
+                part1.mask_for_step(step),
+                "'{}' twins diverged before the interrupt",
+                spec.name
+            );
+        }
+        let mut sec = Section::new("strategy");
+        part1.save_state(&mut sec).unwrap();
+        let mut part2 = spec.build(&m, &cfg).unwrap();
+        part2.load_state(&mut sec, &params).unwrap();
+        assert!(
+            sec.is_empty(),
+            "'{}' left {} unconsumed state entries: {:?}",
+            spec.name,
+            sec.len(),
+            sec.keys()
+        );
+        for step in k..45 {
+            assert_eq!(
+                full.mask_for_step(step),
+                part2.mask_for_step(step),
+                "'{}' resumed mask diverged at step {step}",
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn state_roundtrip_through_a_real_file() {
+    // Same conformance but through save_sections/load_sections, so the
+    // serialization layer (CRC, dtypes, atomic write) is in the loop.
+    let m = synth_manifest();
+    let cfg = TrainConfig { seed: 23, ..Default::default() };
+    let params = ModelParams::init(&m, &mut lisa::util::rng::Rng::new(2));
+    let dir = tdir("file");
+    for spec in all_specs() {
+        let path = dir.join(format!("{}.state", spec.name));
+        let mut full = spec.build(&m, &cfg).unwrap();
+        let mut part1 = spec.build(&m, &cfg).unwrap();
+        for step in 0..9 {
+            full.mask_for_step(step);
+            part1.mask_for_step(step);
+        }
+        let mut sec = Section::new("strategy");
+        part1.save_state(&mut sec).unwrap();
+        lisa::model::checkpoint::save_sections(&path, &[sec]).unwrap();
+
+        let mut sections = lisa::model::checkpoint::load_sections(&path).unwrap();
+        let mut sec = lisa::model::checkpoint::take_section(&mut sections, "strategy").unwrap();
+        let mut part2 = spec.build(&m, &cfg).unwrap();
+        part2.load_state(&mut sec, &params).unwrap();
+        assert!(sec.is_empty(), "'{}' leftovers after file roundtrip", spec.name);
+        for step in 9..40 {
+            assert_eq!(
+                full.mask_for_step(step),
+                part2.mask_for_step(step),
+                "'{}' file-roundtrip mask diverged at step {step}",
+                spec.name
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tier 2: engine-backed differential runs (need AOT artifacts)
+// ---------------------------------------------------------------------------
+
+const STEPS: usize = 12;
+const K: usize = 5; // interrupt after 5 optimizer steps (mid-period for K=3)
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+fn have() -> bool {
+    artifacts().join("manifest.json").exists()
+}
+
+/// Specs for the engine runs: tiny has few layers, so γ=2, K=3; GaLore
+/// gets a refresh gap the continuation crosses.
+fn engine_specs() -> Vec<StrategySpec> {
+    vec![
+        StrategySpec::vanilla(),
+        StrategySpec::ft(),
+        StrategySpec::lisa(2, 3),
+        StrategySpec::lisa_fixed(2, 3),
+        StrategySpec::lisa_grad(2, 3),
+        StrategySpec::lora(),
+        StrategySpec::galore(4).with("update-proj-gap", 4),
+    ]
+}
+
+fn make_loader(rt: &Runtime) -> DataLoader {
+    let m = &rt.manifest;
+    let samples = corpus::gen_instruction_corpus(96, 11);
+    let tok = Tokenizer::build(&corpus::sample_texts(&samples), m.vocab);
+    let enc: Vec<_> = samples.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
+    DataLoader::new(enc, m.batch, m.seq, 5)
+}
+
+fn cfg() -> TrainConfig {
+    TrainConfig {
+        steps: STEPS,
+        lr: 3e-3,
+        warmup: 3,
+        log_every: 0,
+        ..Default::default()
+    }
+}
+
+struct RunOut {
+    losses: Vec<f32>,
+    params: Vec<(String, Vec<f32>)>,
+    eval_params: Vec<(String, Vec<f32>)>,
+    norms: Vec<f64>,
+    /// Whole-run engine observables (peak bytes, bwd full/x/skipped) —
+    /// checkpointed, so a resumed run must report the same totals.
+    peak_mem: u64,
+    bwd: (u64, u64, u64),
+}
+
+fn snapshot(p: &ModelParams) -> Vec<(String, Vec<f32>)> {
+    p.iter().map(|(k, t)| (k.name(), t.data.clone())).collect()
+}
+
+fn finish(sess: &TrainSession, losses: Vec<f32>) -> RunOut {
+    RunOut {
+        losses,
+        params: snapshot(&sess.params),
+        eval_params: snapshot(&sess.eval_params()),
+        norms: sess.effective_weight_norms(),
+        peak_mem: sess.engine.meter.peak(),
+        bwd: (
+            sess.engine.bwd_full_calls,
+            sess.engine.bwd_x_calls,
+            sess.engine.bwd_skipped,
+        ),
+    }
+}
+
+fn run_uninterrupted(spec: &StrategySpec) -> RunOut {
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    let mut dl = make_loader(&rt);
+    let mut sess = TrainSession::new(&rt, spec, cfg()).unwrap();
+    let res = sess.run(&mut dl).unwrap();
+    let losses = res.loss_curve.iter().map(|&(_, l)| l).collect();
+    finish(&sess, losses)
+}
+
+/// Train K steps, save the full training state, tear everything down,
+/// rebuild from scratch, resume, train the remaining steps.
+fn run_interrupted(spec: &StrategySpec, path: &Path) -> RunOut {
+    let mut losses = Vec::new();
+    {
+        let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+        let mut dl = make_loader(&rt);
+        let mut sess = TrainSession::new(&rt, spec, cfg()).unwrap();
+        for step in 0..K {
+            losses.push(sess.step(step, &mut dl).unwrap());
+        }
+        sess.save_checkpoint(path, K, &dl).unwrap();
+    } // the "crash": runtime, session and loader all dropped
+
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    let mut dl = make_loader(&rt);
+    let mut sess = TrainSession::new(&rt, spec, cfg()).unwrap();
+    let res = sess.run_resumable(&mut dl, None, Some(path)).unwrap();
+    assert_eq!(res.loss_curve.first().map(|&(s, _)| s), Some(K), "resume step offset");
+    losses.extend(res.loss_curve.iter().map(|&(_, l)| l));
+    finish(&sess, losses)
+}
+
+fn assert_params_eq(a: &[(String, Vec<f32>)], b: &[(String, Vec<f32>)], what: &str, arm: &str) {
+    assert_eq!(a.len(), b.len(), "[{arm}] {what}: tensor count");
+    for ((na, da), (nb, db)) in a.iter().zip(b) {
+        assert_eq!(na, nb, "[{arm}] {what}: tensor order");
+        assert_eq!(da.len(), db.len(), "[{arm}] {what}: '{na}' length");
+        let identical = da
+            .iter()
+            .zip(db)
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(
+            identical,
+            "[{arm}] {what}: tensor '{na}' differs after resume (bit-for-bit required)"
+        );
+    }
+}
+
+#[test]
+fn resume_equals_uninterrupted_for_every_strategy() {
+    if !have() {
+        return;
+    }
+    let dir = tdir("diff");
+    for spec in engine_specs() {
+        let arm = spec.name.clone();
+        let path = dir.join(format!("{arm}.state"));
+        let full = run_uninterrupted(&spec);
+        let resumed = run_interrupted(&spec, &path);
+        assert_eq!(
+            full.losses.len(),
+            resumed.losses.len(),
+            "[{arm}] loss curve length"
+        );
+        for (i, (a, b)) in full.losses.iter().zip(&resumed.losses).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "[{arm}] loss diverged at step {i}: {a} vs {b}"
+            );
+        }
+        assert_params_eq(&full.params, &resumed.params, "base params", &arm);
+        assert_params_eq(&full.eval_params, &resumed.eval_params, "eval params", &arm);
+        assert_eq!(full.norms, resumed.norms, "[{arm}] weight norms");
+        assert_eq!(full.peak_mem, resumed.peak_mem, "[{arm}] peak memory");
+        assert_eq!(full.bwd, resumed.bwd, "[{arm}] backward-call counters");
+    }
+}
+
+#[test]
+fn resume_rejects_method_and_seed_mismatch() {
+    if !have() {
+        return;
+    }
+    let dir = tdir("mismatch");
+    let path = dir.join("lisa.state");
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    let mut dl = make_loader(&rt);
+    let spec = StrategySpec::lisa(2, 3);
+    let mut sess = TrainSession::new(&rt, &spec, cfg()).unwrap();
+    for step in 0..2 {
+        sess.step(step, &mut dl).unwrap();
+    }
+    sess.save_checkpoint(&path, 2, &dl).unwrap();
+
+    // different method
+    let mut other = TrainSession::new(&rt, &StrategySpec::ft(), cfg()).unwrap();
+    let err = other.resume_checkpoint(&path, &mut dl).unwrap_err();
+    assert!(format!("{err:#}").contains("method"), "got: {err:#}");
+
+    // different seed
+    let mut wrong_seed =
+        TrainSession::new(&rt, &spec, TrainConfig { seed: 99, ..cfg() }).unwrap();
+    let err = wrong_seed.resume_checkpoint(&path, &mut dl).unwrap_err();
+    assert!(format!("{err:#}").contains("seed"), "got: {err:#}");
+}
+
+#[test]
+fn kill_during_save_preserves_resumable_checkpoint() {
+    if !have() {
+        return;
+    }
+    let dir = tdir("kill");
+    let path = dir.join("train.state");
+    let spec = StrategySpec::lisa(2, 3);
+    let full = run_uninterrupted(&spec);
+
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    let mut dl = make_loader(&rt);
+    let mut sess = TrainSession::new(&rt, &spec, cfg()).unwrap();
+    let mut losses = Vec::new();
+    for step in 0..K {
+        losses.push(sess.step(step, &mut dl).unwrap());
+    }
+    sess.save_checkpoint(&path, K, &dl).unwrap();
+
+    // a later save is killed mid-write: a directory squatting on the tmp
+    // path makes the write fail exactly like a dead writer would
+    sess.step(K, &mut dl).unwrap();
+    let tmp = path.with_file_name("train.state.tmp");
+    std::fs::create_dir_all(&tmp).unwrap();
+    assert!(sess.save_checkpoint(&path, K + 1, &dl).is_err());
+    std::fs::remove_dir_all(&tmp).unwrap();
+
+    // the previous checkpoint is untouched and resumes to the exact
+    // uninterrupted trajectory
+    let rt2 = Runtime::load(&artifacts(), "pallas").unwrap();
+    let mut dl2 = make_loader(&rt2);
+    let mut sess2 = TrainSession::new(&rt2, &spec, cfg()).unwrap();
+    let res = sess2.run_resumable(&mut dl2, None, Some(&path)).unwrap();
+    let mut resumed_losses = losses;
+    resumed_losses.truncate(K);
+    resumed_losses.extend(res.loss_curve.iter().map(|&(_, l)| l));
+    assert_eq!(
+        full.losses.len(),
+        resumed_losses.len(),
+        "loss curve length after interrupted save"
+    );
+    for (i, (a, b)) in full.losses.iter().zip(&resumed_losses).enumerate() {
+        assert!(a.to_bits() == b.to_bits(), "loss diverged at step {i}");
+    }
+    assert_params_eq(&full.params, &snapshot(&sess2.params), "base params", "lisa-kill");
+}

@@ -1,0 +1,134 @@
+//! Property-based corruption robustness for the checkpoint formats (via
+//! the hand-rolled `util::prop` framework, like `prop_coordinator.rs`):
+//! truncating or bit-flipping a valid checkpoint at *any* offset must
+//! yield `Err` — never a panic, an abort-sized allocation, or a silent
+//! partial load.
+
+use std::path::PathBuf;
+
+use lisa::model::checkpoint::{load_sections, load_tensors, save_sections, save_tensors, Section};
+use lisa::prop_assert;
+use lisa::runtime::HostTensor;
+use lisa::util::prop::prop_check;
+use lisa::util::rng::Rng;
+
+fn tdir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lisa_prop_ckpt2_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A random but valid v2 checkpoint: 1–3 sections mixing every dtype.
+fn random_sections(rng: &mut Rng) -> Vec<Section> {
+    let n_sections = 1 + rng.below(3);
+    (0..n_sections)
+        .map(|s| {
+            let mut sec = Section::new(&format!("sec{s}"));
+            for e in 0..1 + rng.below(4) {
+                match rng.below(4) {
+                    0 => {
+                        let rank = 1 + rng.below(3);
+                        let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(6)).collect();
+                        let mut t = HostTensor::zeros(&shape);
+                        rng.fill_normal(&mut t.data, 1.0);
+                        sec.put_tensor(&format!("t{e}"), &t);
+                    }
+                    1 => {
+                        let n = 1 + rng.below(8);
+                        sec.put_u64s(&format!("u{e}"), (0..n).map(|_| rng.next_u64()).collect());
+                    }
+                    2 => sec.put_str(&format!("s{e}"), "some-label"),
+                    _ => sec.put_f64s(&format!("f{e}"), &[rng.f64(), rng.f64()]),
+                }
+            }
+            sec
+        })
+        .collect()
+}
+
+#[test]
+fn prop_v2_roundtrip_is_exact() {
+    let dir = tdir();
+    prop_check("v2 roundtrip", 40, |rng| {
+        let path = dir.join(format!("rt{}.state", rng.next_u64()));
+        let sections = random_sections(rng);
+        save_sections(&path, &sections).map_err(|e| e.to_string())?;
+        let loaded = load_sections(&path).map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+        prop_assert!(loaded == sections, "roundtrip not exact");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_v2_truncation_at_any_offset_errs() {
+    let dir = tdir();
+    prop_check("v2 truncation", 60, |rng| {
+        let path = dir.join(format!("tr{}.state", rng.next_u64()));
+        save_sections(&path, &random_sections(rng)).map_err(|e| e.to_string())?;
+        let bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+        let cut = rng.below(bytes.len()); // keep 0..len-1 bytes
+        std::fs::write(&path, &bytes[..cut]).map_err(|e| e.to_string())?;
+        let res = load_sections(&path);
+        std::fs::remove_file(&path).ok();
+        prop_assert!(
+            res.is_err(),
+            "truncation to {cut}/{} bytes loaded successfully",
+            bytes.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_v2_bit_flip_at_any_offset_errs() {
+    let dir = tdir();
+    prop_check("v2 bit flip", 120, |rng| {
+        let path = dir.join(format!("bf{}.state", rng.next_u64()));
+        save_sections(&path, &random_sections(rng)).map_err(|e| e.to_string())?;
+        let mut bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+        let byte = rng.below(bytes.len());
+        let bit = rng.below(8);
+        bytes[byte] ^= 1 << bit;
+        std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;
+        let res = load_sections(&path);
+        std::fs::remove_file(&path).ok();
+        prop_assert!(
+            res.is_err(),
+            "bit flip at {byte}:{bit} of {} bytes loaded successfully",
+            bytes.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_v1_truncation_at_any_offset_errs() {
+    let dir = tdir();
+    prop_check("v1 truncation", 60, |rng| {
+        let path = dir.join(format!("v1tr{}.ckpt", rng.next_u64()));
+        let n_tensors = 1 + rng.below(4);
+        let tensors: Vec<(String, HostTensor)> = (0..n_tensors)
+            .map(|i| {
+                let shape = vec![1 + rng.below(5), 1 + rng.below(5)];
+                let mut t = HostTensor::zeros(&shape);
+                rng.fill_normal(&mut t.data, 1.0);
+                (format!("t{i}"), t)
+            })
+            .collect();
+        let refs: Vec<(String, &HostTensor)> =
+            tensors.iter().map(|(n, t)| (n.clone(), t)).collect();
+        save_tensors(&path, &refs).map_err(|e| e.to_string())?;
+        let bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+        let cut = rng.below(bytes.len());
+        std::fs::write(&path, &bytes[..cut]).map_err(|e| e.to_string())?;
+        let res = load_tensors(&path);
+        std::fs::remove_file(&path).ok();
+        prop_assert!(
+            res.is_err(),
+            "v1 truncation to {cut}/{} bytes loaded successfully",
+            bytes.len()
+        );
+        Ok(())
+    });
+}
