@@ -11,8 +11,13 @@ Per config this writes::
     artifacts/<config>/manifest.json                 # shapes the Rust loader
                                                      # validates against
 
-Lowering uses ``return_tuple=True`` so every module returns a tuple and the
-Rust side can uniformly unwrap. Python runs only here — never on the
+Multi-output segments lower with ``return_tuple=True`` (one tuple the Rust
+side unwraps on the host). Single-output segments lower with a *bare* root
+(``return_tuple=False``) and are flagged ``tuple_root: false`` in the
+manifest: their PJRT output buffer IS the value, so the Rust engine can
+chain it straight into the next segment as a device-resident operand
+(``rust/src/runtime/client.rs::run_chained``) — the residual stream never
+round-trips through the host. Python runs only here — never on the
 training path.
 """
 
@@ -33,10 +38,10 @@ from .configs import CONFIGS, ModelConfig
 from .kernels.adamw import HYPER_LEN, adamw_update
 
 
-def to_hlo_text(lowered) -> str:
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
-        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple)
     return comp.as_hlo_text()
 
 
@@ -130,22 +135,32 @@ def export_config(cfg: ModelConfig, out_root: str, backends, force=False,
             fname = f"{name}.{backend}.hlo.txt"
             path = os.path.join(out_dir, fname)
             key = f"{name}.{backend}"
-            if os.path.exists(path) and not force:
+            outs = jax.tree_util.tree_leaves(jax.eval_shape(fn, *specs))
+            # Single-output segments get a bare root so the engine can
+            # keep the output on-device and chain it (tuple_root below is
+            # the loader's contract for which unwrap path to use).
+            tuple_root = len(outs) != 1
+            if os.path.exists(path) and not force and key in prev_segments:
+                # The manifest must describe the HLO that is actually on
+                # disk: a skipped (pre-existing) file keeps whatever root
+                # convention it was exported with — recorded in the
+                # previous manifest, tuple-rooted for legacy exports. A
+                # file with *no* surviving manifest entry (deleted or
+                # corrupt manifest) is re-lowered instead of guessed at.
+                tuple_root = bool(prev_segments[key].get("tuple_root", True))
                 print(f"  [skip] {cfg.name}/{fname}")
             else:
                 lowered = jax.jit(fn).lower(*specs)
-                out_tree = jax.eval_shape(fn, *specs)
-                text = to_hlo_text(lowered)
+                text = to_hlo_text(lowered, return_tuple=tuple_root)
                 with open(path, "w") as f:
                     f.write(text)
                 print(f"  [ok]   {cfg.name}/{fname} "
                       f"({len(text) // 1024} KiB)")
-            out_tree = jax.eval_shape(fn, *specs)
-            outs = jax.tree_util.tree_leaves(out_tree)
             manifest["segments"][key] = {
                 "file": fname,
                 "operands": _sig(specs),
                 "outputs": _sig(outs),
+                "tuple_root": tuple_root,
             }
     with open(os.path.join(out_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1, sort_keys=True)

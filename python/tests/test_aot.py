@@ -40,7 +40,7 @@ def test_operand_orders_match_config_abi():
 
 def test_export_writes_hlo_text_and_manifest(tmp_path):
     aot.export_config(UNIT, str(tmp_path), ["jnp"],
-                      segments={"embed_fwd", "head_loss"})
+                      segments={"embed_fwd", "head_loss", "head_fwd_bwd"})
     d = tmp_path / "unitaot"
     hlo = (d / "embed_fwd.jnp.hlo.txt").read_text()
     assert hlo.startswith("HloModule"), "must be HLO text, not a proto"
@@ -49,6 +49,48 @@ def test_export_writes_hlo_text_and_manifest(tmp_path):
     assert man["segments"]["embed_fwd.jnp"]["operands"][0]["dtype"] == "int32"
     out = man["segments"]["head_loss.jnp"]["outputs"]
     assert out == [{"shape": [], "dtype": "float32"}]
+    # single-output segments export a bare root (device-chainable),
+    # multi-output segments stay tuple-rooted
+    assert man["segments"]["embed_fwd.jnp"]["tuple_root"] is False
+    assert man["segments"]["head_loss.jnp"]["tuple_root"] is False
+    assert man["segments"]["head_fwd_bwd.jnp"]["tuple_root"] is True
+
+
+def test_skipped_reexport_keeps_on_disk_root_convention(tmp_path):
+    # A legacy artifact (tuple-rooted, no manifest flag) re-exported
+    # without --force must stay flagged tuple_root=true: the manifest has
+    # to describe the HLO actually on disk, not what a fresh export would
+    # produce.
+    aot.export_config(UNIT, str(tmp_path), ["jnp"], segments={"block_fwd"})
+    mpath = tmp_path / "unitaot" / "manifest.json"
+    man = json.loads(mpath.read_text())
+    assert man["segments"]["block_fwd.jnp"]["tuple_root"] is False
+    # simulate a legacy manifest entry for the same on-disk file
+    man["segments"]["block_fwd.jnp"].pop("tuple_root")
+    mpath.write_text(json.dumps(man))
+    aot.export_config(UNIT, str(tmp_path), ["jnp"], segments={"block_fwd"})
+    man = json.loads(mpath.read_text())
+    assert man["segments"]["block_fwd.jnp"]["tuple_root"] is True
+    # --force re-lowers and reclaims the bare root
+    aot.export_config(UNIT, str(tmp_path), ["jnp"], segments={"block_fwd"},
+                      force=True)
+    man = json.loads(mpath.read_text())
+    assert man["segments"]["block_fwd.jnp"]["tuple_root"] is False
+
+
+def test_orphaned_hlo_without_manifest_entry_is_relowered(tmp_path, capsys):
+    # An HLO file whose manifest entry is gone (deleted/corrupt manifest)
+    # has an unknowable root convention: the exporter must re-lower it
+    # rather than guess, so the manifest always describes the real file.
+    aot.export_config(UNIT, str(tmp_path), ["jnp"], segments={"block_fwd"})
+    mpath = tmp_path / "unitaot" / "manifest.json"
+    mpath.unlink()
+    capsys.readouterr()
+    aot.export_config(UNIT, str(tmp_path), ["jnp"], segments={"block_fwd"})
+    out = capsys.readouterr().out
+    assert "[ok]" in out and "[skip]" not in out
+    man = json.loads(mpath.read_text())
+    assert man["segments"]["block_fwd.jnp"]["tuple_root"] is False
 
 
 def test_reexport_merges_manifest(tmp_path):

@@ -10,6 +10,12 @@
 //!                     tokenizer, sampler)
 //!
 //! Set `LISA_BENCH_QUICK=1` for a fast smoke pass.
+//!
+//! Every run writes the machine-readable `BENCH_step.json` at the repo
+//! root (schema `lisa-bench-v1`); the `step/*-hostpath` arms rerun the
+//! training step with the device-resident flow disabled, so the file
+//! always carries the before/after pair for the runtime's data-movement
+//! optimization.
 
 use std::path::Path;
 
@@ -152,14 +158,22 @@ fn main() -> anyhow::Result<()> {
         let samples = corpus::gen_instruction_corpus(128, 3);
         let tok = Tokenizer::build(&corpus::sample_texts(&samples), m.vocab);
         let enc: Vec<_> = samples.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
-        for spec in [
-            StrategySpec::ft(),
-            StrategySpec::lisa(2, 5),
-            StrategySpec::lora(),
-        ] {
+        // (spec, name suffix, device-resident flow on/off). The
+        // `-hostpath` arms disable the device cache + buffer chaining —
+        // the seed's upload-everything schedule — so BENCH_step.json
+        // carries the before/after pair for the same binary.
+        let arms: Vec<(StrategySpec, &str, bool)> = vec![
+            (StrategySpec::ft(), "", true),
+            (StrategySpec::ft(), "-hostpath", false),
+            (StrategySpec::lisa(2, 5), "", true),
+            (StrategySpec::lisa(2, 5), "-hostpath", false),
+            (StrategySpec::lora(), "", true),
+        ];
+        for (spec, suffix, device_flow) in arms {
             let mut dl = DataLoader::new(enc.clone(), m.batch, m.seq, 1);
             let cfg = TrainConfig { steps: 0, lr: 1e-3, log_every: 0, ..Default::default() };
             let mut sess = TrainSession::new(&rt, &spec, cfg)?;
+            sess.engine.device_flow = device_flow;
             let label = sess.label().to_string();
             // warm executables
             sess.step(0, &mut dl)?;
@@ -172,13 +186,38 @@ fn main() -> anyhow::Result<()> {
                 ..Bench::quick()
             };
             results.push(quick.run_with_elements(
-                &format!("step/{label}-{cfg_name}"),
+                &format!("step/{label}{suffix}-{cfg_name}"),
                 (m.batch * m.seq) as u64,
                 || {
                     step += 1;
                     black_box(sess.step(step, &mut dl).unwrap());
                 },
             ));
+        }
+
+        // upload traffic: with the cache warm, weight uploads must scale
+        // with the trainable subset only (γ blocks + embed/head for LISA)
+        {
+            let mut dl = DataLoader::new(enc.clone(), m.batch, m.seq, 1);
+            let cfg = TrainConfig { steps: 0, lr: 1e-3, log_every: 0, ..Default::default() };
+            let mut sess = TrainSession::new(&rt, &StrategySpec::lisa(2, 5), cfg)?;
+            sess.step(0, &mut dl)?;
+            rt.reset_stats();
+            for s in 1..=3 {
+                sess.step(s, &mut dl)?;
+            }
+            println!("\nper-segment upload traffic (lisa γ=2, 3 warm steps):");
+            for (name, s) in rt.stats() {
+                println!(
+                    "  {:<18} calls {:>4}  uploads {:>5} ({:>10} B)  device-served {:>5}",
+                    name, s.calls, s.uploads, s.upload_bytes, s.buf_hits
+                );
+            }
+            let cs = sess.engine.device_cache_stats();
+            println!(
+                "  device cache: {} entries, {} B resident, {} hits / {} misses / {} invalidations",
+                cs.entries, cs.resident_bytes, cs.hits, cs.misses, cs.invalidations
+            );
         }
 
         // engine overhead: step time minus PJRT execute time
@@ -205,5 +244,21 @@ fn main() -> anyhow::Result<()> {
     for r in &results {
         println!("{}", r.report());
     }
+
+    // Machine-readable trajectory: BENCH_step.json at the repo root
+    // (cargo bench runs with cwd = rust/). Falls back to the crate dir
+    // when the parent is not writable.
+    let quick = std::env::var("LISA_BENCH_QUICK").is_ok();
+    let note = "generated by `cargo bench` (LISA_BENCH_QUICK=1 for the smoke pass); \
+                step/*-hostpath arms run the pre-device-cache host-roundtrip schedule";
+    let target = Path::new("../BENCH_step.json");
+    let path = if lisa::util::bench::write_json(target, &results, quick, note).is_ok() {
+        target
+    } else {
+        let fallback = Path::new("BENCH_step.json");
+        lisa::util::bench::write_json(fallback, &results, quick, note)?;
+        fallback
+    };
+    println!("\nwrote {} ({} groups)", path.display(), results.len());
     Ok(())
 }

@@ -253,7 +253,7 @@ impl DataLoader {
     /// sequence the uninterrupted run would have (resume protocol,
     /// DESIGN.md §7). The encoded examples themselves are *not* persisted;
     /// they regenerate deterministically from the corpus seed.
-    pub fn save_state(&self, sec: &mut crate::model::checkpoint::Section) {
+    pub fn save_state(&self, sec: &mut crate::model::checkpoint::Section<'_>) {
         sec.put_rng("loader.rng", &self.rng);
         sec.put_u64s(
             "loader.order",
@@ -268,7 +268,7 @@ impl DataLoader {
     /// permutation of its indices).
     pub fn load_state(
         &mut self,
-        sec: &mut crate::model::checkpoint::Section,
+        sec: &mut crate::model::checkpoint::Section<'_>,
     ) -> anyhow::Result<()> {
         use anyhow::ensure;
         self.rng = sec.take_rng("loader.rng")?;

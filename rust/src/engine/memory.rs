@@ -16,6 +16,14 @@ pub enum MemCategory {
     OptimState,
     Activations,
     LoraAdapters,
+    /// Device-resident bytes held by the engine's buffer cache (the
+    /// persistent weight uploads; the chained activation stash is metered
+    /// under `Activations` regardless of which side of the boundary it
+    /// lives on). On the CPU PJRT plugin these are real host RAM on top
+    /// of the `HostTensor` copies, so the cache's cost is tracked where
+    /// Table-1 observables are read — the speedup is never
+    /// free-by-accounting.
+    DeviceBuffers,
 }
 
 impl MemCategory {
@@ -26,6 +34,7 @@ impl MemCategory {
             MemCategory::OptimState => "optim",
             MemCategory::Activations => "activations",
             MemCategory::LoraAdapters => "lora",
+            MemCategory::DeviceBuffers => "device",
         }
     }
 }
@@ -83,12 +92,16 @@ impl MemoryMeter {
     }
 
     /// All categories in the canonical (breakdown/checkpoint) order.
-    pub const ALL: [MemCategory; 5] = [
+    /// `DeviceBuffers` is appended last so checkpoints written before the
+    /// category existed still restore (their blob is a prefix of this
+    /// order).
+    pub const ALL: [MemCategory; 6] = [
         MemCategory::Params,
         MemCategory::Grads,
         MemCategory::OptimState,
         MemCategory::Activations,
         MemCategory::LoraAdapters,
+        MemCategory::DeviceBuffers,
     ];
 
     /// Max-merge a checkpointed peak state (total + per-category bytes in

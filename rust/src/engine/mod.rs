@@ -4,4 +4,4 @@ pub mod memory;
 pub mod trainer;
 
 pub use memory::{MemCategory, MemoryMeter};
-pub use trainer::{Batch, Engine, Grads, StepOutput, TrainMask};
+pub use trainer::{Batch, Engine, Grads, StepOutput, Touched, TrainMask};

@@ -18,12 +18,27 @@
 //! Backward segments rematerialize the forward internally (per-block
 //! gradient checkpointing), so the activation stash is exactly one
 //! `[B, T, D]` residual per block.
+//!
+//! **Device-resident data flow** (DESIGN.md §8): with `device_flow` on
+//! (the default), weight tensors are uploaded once into a
+//! [`DeviceCache`] keyed by [`ParamKey`] + parameter-store generation and
+//! re-served as `Operand::Buf` until a strategy reports them mutated
+//! ([`Touched`]); the residual stream `h`/`dh` chains between segments as
+//! device buffers wherever the artifacts are device-chainable. The host
+//! path (`device_flow = false`) reproduces the original
+//! upload-everything/download-everything schedule bit for bit — it is the
+//! differential baseline for `tests/it_device.rs` and the bench's
+//! before/after comparison.
 
-use anyhow::Result;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
 use xla::Literal;
 
-use crate::model::ModelParams;
-use crate::runtime::{HostTensor, HostTensorI32, Operand, Runtime};
+use crate::model::{ModelParams, ParamKey};
+use crate::runtime::{
+    ChainVal, DeviceCache, DeviceTensor, HostTensor, HostTensorI32, Operand, Runtime, SegId,
+};
 
 use super::memory::{MemCategory, MemoryMeter};
 
@@ -157,10 +172,108 @@ impl Grads {
     }
 }
 
+/// Which parameter tensors a `Strategy::apply` actually mutated — the
+/// device-cache invalidation contract (DESIGN.md §8). The training loop
+/// forwards this to [`Engine::invalidate`]; a strategy that under-reports
+/// would train against stale weights, which `tests/it_device.rs` guards
+/// against differentially.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Touched {
+    /// Nothing changed (vanilla, or a step with no accumulated grads).
+    None,
+    /// Exactly these keys changed (the common case: the trainable subset).
+    Keys(Vec<ParamKey>),
+    /// Everything may have changed (checkpoint restore, store swap).
+    All,
+}
+
+impl Touched {
+    /// The keys a gradient application touches: every tensor present in
+    /// `grads` — which by construction is exactly the trainable subset.
+    pub fn from_grads(grads: &Grads) -> Touched {
+        let mut keys = Vec::new();
+        if grads.emb.is_some() {
+            keys.push(ParamKey::Emb);
+        }
+        if grads.pos.is_some() {
+            keys.push(ParamKey::Pos);
+        }
+        for (l, blk) in grads.blocks.iter().enumerate() {
+            if let Some(ts) = blk {
+                keys.extend((0..ts.len()).map(|t| ParamKey::Block(l, t)));
+            }
+        }
+        if grads.gf.is_some() {
+            keys.push(ParamKey::HeadNorm);
+        }
+        if grads.wh.is_some() {
+            keys.push(ParamKey::HeadProj);
+        }
+        if keys.is_empty() {
+            Touched::None
+        } else {
+            Touched::Keys(keys)
+        }
+    }
+}
+
 /// Output of one forward/backward microbatch.
 pub struct StepOutput {
     pub loss: f32,
     pub grads: Grads,
+}
+
+/// A value of the residual stream between segments: host tensor (legacy
+/// path), a downloaded literal awaiting its single consumer (device path
+/// through tuple-rooted segments), or a live device buffer (device path
+/// through chainable segments — no host transfer at all).
+pub(crate) enum Act {
+    Host(HostTensor),
+    Lit { lit: Literal, shape: Vec<usize> },
+    Dev(DeviceTensor),
+}
+
+impl Act {
+    pub(crate) fn operand(&self) -> Operand<'_> {
+        match self {
+            Act::Host(t) => Operand::F32(t),
+            Act::Lit { lit, .. } => Operand::Lit(lit),
+            Act::Dev(dt) => Operand::Buf(dt),
+        }
+    }
+
+    pub(crate) fn bytes(&self) -> usize {
+        match self {
+            Act::Host(t) => t.bytes(),
+            Act::Lit { shape, .. } => crate::runtime::numel(shape) * 4,
+            Act::Dev(dt) => dt.bytes(),
+        }
+    }
+
+    pub(crate) fn into_host(self) -> Result<HostTensor> {
+        match self {
+            Act::Host(t) => Ok(t),
+            Act::Lit { lit, shape } => HostTensor::from_literal(&lit, &shape),
+            Act::Dev(dt) => dt.to_host(),
+        }
+    }
+}
+
+/// Interned handles for every segment the engine schedules (resolved once
+/// in `Engine::new`; compilation stays lazy).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct SegIds {
+    pub embed_fwd: SegId,
+    pub embed_bwd: SegId,
+    pub block_fwd: SegId,
+    pub block_bwd_full: SegId,
+    pub block_bwd_x: SegId,
+    pub block_fwd_lora: SegId,
+    pub block_bwd_lora: SegId,
+    pub head_fwd_bwd: SegId,
+    pub head_fwd_bwd_x: SegId,
+    pub head_loss: SegId,
+    pub head_logits: SegId,
 }
 
 /// The engine: schedules segment executables over the runtime.
@@ -172,32 +285,186 @@ pub struct Engine<'rt> {
     pub bwd_full_calls: u64,
     pub bwd_x_calls: u64,
     pub bwd_skipped: u64,
+    /// Device-resident flow toggle. On by default; `LISA_DEVICE_FLOW=0`
+    /// (or setting the field) restores the seed's host-roundtrip schedule
+    /// — the bit-for-bit baseline for equivalence tests and benches.
+    pub device_flow: bool,
+    cache: DeviceCache<ParamKey, Rc<DeviceTensor>>,
+    pub(crate) ids: SegIds,
 }
 
 impl<'rt> Engine<'rt> {
     pub fn new(rt: &'rt Runtime) -> Self {
+        let device_flow = std::env::var("LISA_DEVICE_FLOW")
+            .map(|v| v != "0")
+            .unwrap_or(true);
         Engine {
             rt,
             meter: MemoryMeter::new(),
             bwd_full_calls: 0,
             bwd_x_calls: 0,
             bwd_skipped: 0,
+            device_flow,
+            cache: DeviceCache::new(),
+            ids: SegIds {
+                embed_fwd: rt.seg_id("embed_fwd"),
+                embed_bwd: rt.seg_id("embed_bwd"),
+                block_fwd: rt.seg_id("block_fwd"),
+                block_bwd_full: rt.seg_id("block_bwd_full"),
+                block_bwd_x: rt.seg_id("block_bwd_x"),
+                block_fwd_lora: rt.seg_id("block_fwd_lora"),
+                block_bwd_lora: rt.seg_id("block_bwd_lora"),
+                head_fwd_bwd: rt.seg_id("head_fwd_bwd"),
+                head_fwd_bwd_x: rt.seg_id("head_fwd_bwd_x"),
+                head_loss: rt.seg_id("head_loss"),
+                head_logits: rt.seg_id("head_logits"),
+            },
         }
     }
+
+    // -- device cache ------------------------------------------------------
+
+    /// Drop cached device buffers for the keys a strategy mutated.
+    pub fn invalidate(&mut self, touched: &Touched) {
+        match touched {
+            Touched::None => {}
+            Touched::All => self.cache.invalidate_all(),
+            Touched::Keys(keys) => {
+                for k in keys {
+                    self.cache.invalidate(k);
+                }
+            }
+        }
+        self.sync_device_meter();
+    }
+
+    /// Drop every cached device buffer (checkpoint restore, store swap).
+    pub fn invalidate_all(&mut self) {
+        self.cache.invalidate_all();
+        self.sync_device_meter();
+    }
+
+    pub fn device_cache_stats(&self) -> crate::runtime::CacheStats {
+        self.cache.stats()
+    }
+
+    fn sync_device_meter(&mut self) {
+        self.meter
+            .set(MemCategory::DeviceBuffers, self.cache.resident_bytes());
+    }
+
+    /// Cached device buffer for one parameter tensor (uploads on miss).
+    pub(crate) fn param_buf(
+        &mut self,
+        key: ParamKey,
+        src: u64,
+        t: &HostTensor,
+    ) -> Result<Rc<DeviceTensor>> {
+        let rt = self.rt;
+        self.cache.get_or_upload(key, src, || {
+            let dt = DeviceTensor::from_host(&rt.client, t)?;
+            let bytes = dt.bytes() as u64;
+            Ok((Rc::new(dt), bytes))
+        })
+    }
+
+    /// Cached device buffers for every tensor of block `l`, ABI order.
+    pub(crate) fn block_bufs(
+        &mut self,
+        params: &ModelParams,
+        l: usize,
+    ) -> Result<Vec<Rc<DeviceTensor>>> {
+        let src = params.store_id();
+        let out = params.blocks[l]
+            .iter()
+            .enumerate()
+            .map(|(t, x)| self.param_buf(ParamKey::Block(l, t), src, x))
+            .collect();
+        self.sync_device_meter();
+        out
+    }
+
+    /// Cached device buffers for the head (gf, wh).
+    pub(crate) fn head_bufs(
+        &mut self,
+        params: &ModelParams,
+    ) -> Result<(Rc<DeviceTensor>, Rc<DeviceTensor>)> {
+        let src = params.store_id();
+        let gf = self.param_buf(ParamKey::HeadNorm, src, &params.gf)?;
+        let wh = self.param_buf(ParamKey::HeadProj, src, &params.wh)?;
+        self.sync_device_meter();
+        Ok((gf, wh))
+    }
+
+    /// Cached device buffers for the embedding (emb, pos).
+    pub(crate) fn embed_bufs(
+        &mut self,
+        params: &ModelParams,
+    ) -> Result<(Rc<DeviceTensor>, Rc<DeviceTensor>)> {
+        let src = params.store_id();
+        let emb = self.param_buf(ParamKey::Emb, src, &params.emb)?;
+        let pos = self.param_buf(ParamKey::Pos, src, &params.pos)?;
+        self.sync_device_meter();
+        Ok((emb, pos))
+    }
+
+    /// Cached device buffers for the LoRA adapters of layer `l`, ABI
+    /// order (lives here so every parameter-buffer path shares one cache
+    /// API and the device meter).
+    pub(crate) fn adapter_bufs(
+        &mut self,
+        lora: &crate::lora::LoraState,
+        l: usize,
+    ) -> Result<Vec<Rc<DeviceTensor>>> {
+        let src = lora.store_id();
+        let out = lora.adapters[l]
+            .iter()
+            .enumerate()
+            .map(|(i, t)| self.param_buf(ParamKey::Lora(l, i), src, t))
+            .collect();
+        self.sync_device_meter();
+        out
+    }
+
+    // -- execution helpers -------------------------------------------------
 
     fn h_shape(&self) -> Vec<usize> {
         let m = &self.rt.manifest;
         vec![m.batch, m.seq, m.d_model]
     }
 
-    fn block_ops<'a>(
-        h: &'a HostTensor,
-        params: &'a [HostTensor],
-    ) -> Vec<Operand<'a>> {
-        let mut ops: Vec<Operand<'a>> = Vec::with_capacity(1 + params.len());
-        ops.push(Operand::F32(h));
-        ops.extend(params.iter().map(Operand::F32));
-        ops
+    /// Run a single-output segment, keeping the result chained: a device
+    /// buffer when the artifact allows it, otherwise the downloaded value
+    /// (as a literal on the device path, a host tensor on the host path).
+    pub(crate) fn run_chain_act(
+        &self,
+        id: SegId,
+        ops: &[Operand],
+        shape: &[usize],
+    ) -> Result<Act> {
+        if self.device_flow {
+            match self.rt.run_chained(id, ops)? {
+                ChainVal::Dev(dt) => Ok(Act::Dev(dt)),
+                ChainVal::Host(mut lits) => {
+                    let lit = lits.swap_remove(0);
+                    Ok(Act::Lit { lit, shape: shape.to_vec() })
+                }
+            }
+        } else {
+            let outs = self.rt.run_id(id, ops)?;
+            Ok(Act::Host(HostTensor::from_literal(&outs[0], shape)?))
+        }
+    }
+
+    /// Wrap a multi-output segment's chained value (`dh`) for its single
+    /// downstream consumer.
+    pub(crate) fn act_from_literal(&self, lit: Literal, shape: &[usize]) -> Result<Act> {
+        if self.device_flow {
+            Ok(Act::Lit { lit, shape: shape.to_vec() })
+        } else {
+            // host path converts eagerly, matching the seed schedule
+            Ok(Act::Host(HostTensor::from_literal(&lit, shape)?))
+        }
     }
 
     /// Forward through embed + all blocks, returning every block input plus
@@ -206,24 +473,40 @@ impl<'rt> Engine<'rt> {
         &mut self,
         params: &ModelParams,
         tokens: &HostTensorI32,
-    ) -> Result<Vec<HostTensor>> {
+    ) -> Result<Vec<Act>> {
         let hs = self.h_shape();
-        let out = self.rt.run(
-            "embed_fwd",
-            &[Operand::I32(tokens), Operand::F32(&params.emb), Operand::F32(&params.pos)],
-        )?;
-        let mut h = HostTensor::from_literal(&out[0], &hs)?;
+        let mut h = if self.device_flow {
+            let (emb, pos) = self.embed_bufs(params)?;
+            let ops = [Operand::I32(tokens), Operand::Buf(&emb), Operand::Buf(&pos)];
+            self.run_chain_act(self.ids.embed_fwd, &ops, &hs)?
+        } else {
+            let ops = [
+                Operand::I32(tokens),
+                Operand::F32(&params.emb),
+                Operand::F32(&params.pos),
+            ];
+            self.run_chain_act(self.ids.embed_fwd, &ops, &hs)?
+        };
         let mut stash = Vec::with_capacity(params.blocks.len() + 1);
         let mut act_bytes = 0u64;
-        for layer in &params.blocks {
+        for (l, layer) in params.blocks.iter().enumerate() {
             act_bytes += h.bytes() as u64;
             self.meter.set(MemCategory::Activations, act_bytes);
-            let out = self.rt.run("block_fwd", &Self::block_ops(&h, layer))?;
-            let h_next = HostTensor::from_literal(&out[0], &hs)?;
+            let h_next = if self.device_flow {
+                let bufs = self.block_bufs(params, l)?;
+                let mut ops = vec![h.operand()];
+                ops.extend(bufs.iter().map(|b| Operand::Buf(b.as_ref())));
+                self.run_chain_act(self.ids.block_fwd, &ops, &hs)?
+            } else {
+                let mut ops = vec![h.operand()];
+                ops.extend(layer.iter().map(Operand::F32));
+                self.run_chain_act(self.ids.block_fwd, &ops, &hs)?
+            };
             stash.push(h);
             h = h_next;
         }
-        self.meter.set(MemCategory::Activations, act_bytes + h.bytes() as u64);
+        self.meter
+            .set(MemCategory::Activations, act_bytes + h.bytes() as u64);
         stash.push(h);
         Ok(stash)
     }
@@ -235,7 +518,8 @@ impl<'rt> Engine<'rt> {
         batch: &Batch,
         mask: &TrainMask,
     ) -> Result<StepOutput> {
-        let m = &self.rt.manifest;
+        let rt = self.rt;
+        let m = &rt.manifest;
         assert_eq!(mask.blocks.len(), m.n_layers, "mask arity");
         let hs = self.h_shape();
         self.meter.set(MemCategory::Params, params.bytes() as u64);
@@ -244,27 +528,45 @@ impl<'rt> Engine<'rt> {
         let h_last = stash.pop().expect("stash has final h");
 
         // Head: fused loss + grads (head trainable) or loss + dh only.
-        let head_seg = if mask.head { "head_fwd_bwd" } else { "head_fwd_bwd_x" };
-        let outs = self.rt.run(
-            head_seg,
-            &[
-                Operand::F32(&h_last),
+        let head_id = if mask.head { self.ids.head_fwd_bwd } else { self.ids.head_fwd_bwd_x };
+        let outs = if self.device_flow {
+            let (gf, wh) = self.head_bufs(params)?;
+            let ops = [
+                h_last.operand(),
+                Operand::Buf(&gf),
+                Operand::Buf(&wh),
+                Operand::I32(&batch.targets),
+            ];
+            self.rt.run_id(head_id, &ops)?
+        } else {
+            let ops = [
+                h_last.operand(),
                 Operand::F32(&params.gf),
                 Operand::F32(&params.wh),
                 Operand::I32(&batch.targets),
-            ],
-        )?;
-        let loss = HostTensor::scalar_from_literal(&outs[0])?;
-        let mut dh = HostTensor::from_literal(&outs[1], &hs)?;
+            ];
+            self.rt.run_id(head_id, &ops)?
+        };
+        let mut it = outs.into_iter();
+        let loss =
+            HostTensor::scalar_from_literal(&it.next().context("head: missing loss")?)?;
+        let dh_lit = it.next().context("head: missing dh")?;
         let mut grads = Grads {
             blocks: vec![None; m.n_layers],
             ..Default::default()
         };
         if mask.head {
-            grads.gf = Some(HostTensor::from_literal(&outs[2], &[m.d_model])?);
-            grads.wh = Some(HostTensor::from_literal(&outs[3], &[m.d_model, m.vocab])?);
+            grads.gf = Some(HostTensor::from_literal(
+                &it.next().context("head: missing d(gf)")?,
+                &[m.d_model],
+            )?);
+            grads.wh = Some(HostTensor::from_literal(
+                &it.next().context("head: missing d(wh)")?,
+                &[m.d_model, m.vocab],
+            )?);
         }
-        drop(outs);
+        drop(it);
+        let mut dh = self.act_from_literal(dh_lit, &hs)?;
 
         // Backward walk. Stop once nothing below needs gradients.
         let lowest = if mask.embed {
@@ -281,34 +583,49 @@ impl<'rt> Engine<'rt> {
                 self.bwd_skipped += 1;
                 continue;
             }
-            let h_in = &stash[l];
             if mask.blocks[l] {
                 self.bwd_full_calls += 1;
-                let mut ops = vec![Operand::F32(&dh), Operand::F32(h_in)];
-                ops.extend(params.blocks[l].iter().map(Operand::F32));
-                let outs = self.rt.run("block_bwd_full", &ops)?;
-                let new_dh = HostTensor::from_literal(&outs[0], &hs)?;
+                let outs = if self.device_flow {
+                    let bufs = self.block_bufs(params, l)?;
+                    let mut ops = vec![dh.operand(), stash[l].operand()];
+                    ops.extend(bufs.iter().map(|b| Operand::Buf(b.as_ref())));
+                    self.rt.run_id(self.ids.block_bwd_full, &ops)?
+                } else {
+                    let mut ops = vec![dh.operand(), stash[l].operand()];
+                    ops.extend(params.blocks[l].iter().map(Operand::F32));
+                    self.rt.run_id(self.ids.block_bwd_full, &ops)?
+                };
+                let mut it = outs.into_iter();
+                let new_dh_lit = it.next().context("bwd_full: missing dh")?;
                 let mut dthetas = Vec::with_capacity(params.blocks[l].len());
-                for (o, (_, shape)) in outs[1..].iter().zip(&m.block_params) {
-                    dthetas.push(HostTensor::from_literal(o, shape)?);
+                for (o, (_, shape)) in it.zip(&m.block_params) {
+                    dthetas.push(HostTensor::from_literal(&o, shape)?);
                 }
                 grad_bytes += dthetas.iter().map(|t| t.bytes() as u64).sum::<u64>();
                 self.meter.set(MemCategory::Grads, grad_bytes);
                 grads.blocks[l] = Some(dthetas);
-                dh = new_dh;
+                dh = self.act_from_literal(new_dh_lit, &hs)?;
             } else {
                 self.bwd_x_calls += 1;
-                let mut ops = vec![Operand::F32(&dh), Operand::F32(h_in)];
-                ops.extend(params.blocks[l].iter().map(Operand::F32));
-                let outs = self.rt.run("block_bwd_x", &ops)?;
-                dh = HostTensor::from_literal(&outs[0], &hs)?;
+                // Single-output segment: the dh chain through frozen blocks
+                // stays device-resident under chainable artifacts — the
+                // LISA frozen-majority walk never touches the host.
+                dh = if self.device_flow {
+                    let bufs = self.block_bufs(params, l)?;
+                    let mut ops = vec![dh.operand(), stash[l].operand()];
+                    ops.extend(bufs.iter().map(|b| Operand::Buf(b.as_ref())));
+                    self.run_chain_act(self.ids.block_bwd_x, &ops, &hs)?
+                } else {
+                    let mut ops = vec![dh.operand(), stash[l].operand()];
+                    ops.extend(params.blocks[l].iter().map(Operand::F32));
+                    self.run_chain_act(self.ids.block_bwd_x, &ops, &hs)?
+                };
             }
         }
 
         if mask.embed {
-            let outs = self
-                .rt
-                .run("embed_bwd", &[Operand::F32(&dh), Operand::I32(&batch.tokens)])?;
+            let ops = [dh.operand(), Operand::I32(&batch.tokens)];
+            let outs = self.rt.run_id(self.ids.embed_bwd, &ops)?;
             grads.emb = Some(HostTensor::from_literal(&outs[0], &[m.vocab, m.d_model])?);
             grads.pos = Some(HostTensor::from_literal(&outs[1], &[m.seq, m.d_model])?);
             grad_bytes = grads.bytes();
@@ -321,30 +638,72 @@ impl<'rt> Engine<'rt> {
 
     /// Eval-only forward loss (no gradients, no stash retention).
     pub fn forward_loss(&mut self, params: &ModelParams, batch: &Batch) -> Result<f32> {
-        let hs = self.h_shape();
-        let out = self.rt.run(
-            "embed_fwd",
-            &[
-                Operand::I32(&batch.tokens),
-                Operand::F32(&params.emb),
-                Operand::F32(&params.pos),
-            ],
-        )?;
-        let mut h = HostTensor::from_literal(&out[0], &hs)?;
-        for layer in &params.blocks {
-            let out = self.rt.run("block_fwd", &Self::block_ops(&h, layer))?;
-            h = HostTensor::from_literal(&out[0], &hs)?;
-        }
-        let outs = self.rt.run(
-            "head_loss",
-            &[
-                Operand::F32(&h),
+        let h = self.forward_chain(params, &batch.tokens, self.rt.manifest.n_layers)?;
+        if self.device_flow {
+            let (gf, wh) = self.head_bufs(params)?;
+            let ops = [
+                h.operand(),
+                Operand::Buf(&gf),
+                Operand::Buf(&wh),
+                Operand::I32(&batch.targets),
+            ];
+            self.run_scalar(self.ids.head_loss, &ops)
+        } else {
+            let ops = [
+                h.operand(),
                 Operand::F32(&params.gf),
                 Operand::F32(&params.wh),
                 Operand::I32(&batch.targets),
-            ],
-        )?;
-        HostTensor::scalar_from_literal(&outs[0])
+            ];
+            self.run_scalar(self.ids.head_loss, &ops)
+        }
+    }
+
+    /// Chain embed + the first `n_blocks` blocks (no stash).
+    fn forward_chain(
+        &mut self,
+        params: &ModelParams,
+        tokens: &HostTensorI32,
+        n_blocks: usize,
+    ) -> Result<Act> {
+        let hs = self.h_shape();
+        let mut h = if self.device_flow {
+            let (emb, pos) = self.embed_bufs(params)?;
+            let ops = [Operand::I32(tokens), Operand::Buf(&emb), Operand::Buf(&pos)];
+            self.run_chain_act(self.ids.embed_fwd, &ops, &hs)?
+        } else {
+            let ops = [
+                Operand::I32(tokens),
+                Operand::F32(&params.emb),
+                Operand::F32(&params.pos),
+            ];
+            self.run_chain_act(self.ids.embed_fwd, &ops, &hs)?
+        };
+        for (l, layer) in params.blocks.iter().take(n_blocks).enumerate() {
+            h = if self.device_flow {
+                let bufs = self.block_bufs(params, l)?;
+                let mut ops = vec![h.operand()];
+                ops.extend(bufs.iter().map(|b| Operand::Buf(b.as_ref())));
+                self.run_chain_act(self.ids.block_fwd, &ops, &hs)?
+            } else {
+                let mut ops = vec![h.operand()];
+                ops.extend(layer.iter().map(Operand::F32));
+                self.run_chain_act(self.ids.block_fwd, &ops, &hs)?
+            };
+        }
+        Ok(h)
+    }
+
+    fn run_scalar(&self, id: SegId, ops: &[Operand]) -> Result<f32> {
+        if self.device_flow {
+            match self.rt.run_chained(id, ops)? {
+                ChainVal::Dev(dt) => HostTensor::scalar_from_literal(&dt.to_literal()?),
+                ChainVal::Host(lits) => HostTensor::scalar_from_literal(&lits[0]),
+            }
+        } else {
+            let outs = self.rt.run_id(id, ops)?;
+            HostTensor::scalar_from_literal(&outs[0])
+        }
     }
 
     /// Logits after running the first `n_blocks` blocks (DoLa-style early
@@ -355,23 +714,20 @@ impl<'rt> Engine<'rt> {
         tokens: &HostTensorI32,
         n_blocks: usize,
     ) -> Result<HostTensor> {
-        let m = &self.rt.manifest;
+        let rt = self.rt;
+        let m = &rt.manifest;
         assert!(n_blocks <= m.n_layers);
-        let hs = self.h_shape();
-        let out = self.rt.run(
-            "embed_fwd",
-            &[Operand::I32(tokens), Operand::F32(&params.emb), Operand::F32(&params.pos)],
-        )?;
-        let mut h = HostTensor::from_literal(&out[0], &hs)?;
-        for layer in params.blocks.iter().take(n_blocks) {
-            let out = self.rt.run("block_fwd", &Self::block_ops(&h, layer))?;
-            h = HostTensor::from_literal(&out[0], &hs)?;
-        }
-        let outs = self.rt.run(
-            "head_logits",
-            &[Operand::F32(&h), Operand::F32(&params.gf), Operand::F32(&params.wh)],
-        )?;
-        HostTensor::from_literal(&outs[0], &[m.batch, m.seq, m.vocab])
+        let h = self.forward_chain(params, tokens, n_blocks)?;
+        let shape = [m.batch, m.seq, m.vocab];
+        let out = if self.device_flow {
+            let (gf, wh) = self.head_bufs(params)?;
+            let ops = [h.operand(), Operand::Buf(&gf), Operand::Buf(&wh)];
+            self.run_chain_act(self.ids.head_logits, &ops, &shape)?
+        } else {
+            let ops = [h.operand(), Operand::F32(&params.gf), Operand::F32(&params.wh)];
+            self.run_chain_act(self.ids.head_logits, &ops, &shape)?
+        };
+        out.into_host()
     }
 
     pub fn logits(
@@ -380,10 +736,5 @@ impl<'rt> Engine<'rt> {
         tokens: &HostTensorI32,
     ) -> Result<HostTensor> {
         self.logits_at(params, tokens, self.rt.manifest.n_layers)
-    }
-
-    /// Raw literal output passthrough used by the LoRA engine extension.
-    pub(crate) fn run_raw(&self, name: &str, ops: &[Operand]) -> Result<Vec<Literal>> {
-        self.rt.run(name, ops)
     }
 }

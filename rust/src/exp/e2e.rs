@@ -109,6 +109,17 @@ pub fn e2e(ctx: &Ctx, config: &str, steps_override: Option<usize>) -> Result<()>
     t.row(vec!["val exact match".to_string(), fnum(rep.exact_match, 3)]);
     t.row(vec!["MT-Bench proxy".to_string(), fnum(mt, 2)]);
     t.row(vec!["peak tracked mem".to_string(), human_bytes(sess.engine.meter.peak())]);
+    let cs = sess.engine.device_cache_stats();
+    t.row(vec![
+        "device cache".to_string(),
+        format!(
+            "{} bufs, {} resident; {} hits / {} uploads",
+            cs.entries,
+            human_bytes(cs.resident_bytes),
+            cs.hits,
+            cs.misses
+        ),
+    ]);
     t.row(vec!["checkpoint".to_string(), ckpt.display().to_string()]);
     println!("\n## End-to-end run ({config})\n");
     t.print();
@@ -123,8 +134,12 @@ pub fn e2e(ctx: &Ctx, config: &str, steps_override: Option<usize>) -> Result<()>
         &[("train".to_string(), curve), ("val".to_string(), val_curve)],
     )?;
 
-    // Per-segment runtime profile (the L3 §Perf input).
-    let mut prof = Table::new(vec!["segment", "calls", "total s", "mean ms"]);
+    // Per-segment runtime profile (the L3 §Perf input). Upload columns
+    // surface the device-residency win: cached weights and chained
+    // activations show up as device-served operands, not uploads.
+    let mut prof = Table::new(vec![
+        "segment", "calls", "total s", "mean ms", "uploads", "upload MB", "dev-served",
+    ]);
     let mut stats: Vec<_> = rt.stats().into_iter().collect();
     stats.sort_by(|a, b| b.1.total_ns.cmp(&a.1.total_ns));
     for (name, s) in stats {
@@ -133,6 +148,9 @@ pub fn e2e(ctx: &Ctx, config: &str, steps_override: Option<usize>) -> Result<()>
             s.calls.to_string(),
             fnum(s.total_ns as f64 / 1e9, 2),
             fnum(s.total_ns as f64 / 1e6 / s.calls.max(1) as f64, 1),
+            s.uploads.to_string(),
+            fnum(s.upload_bytes as f64 / 1e6, 1),
+            s.buf_hits.to_string(),
         ]);
     }
     println!("\nper-segment profile:");

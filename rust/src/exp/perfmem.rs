@@ -21,7 +21,9 @@ use super::common::{run_arm, sft_task, Ctx};
 fn measured_rows(ctx: &Ctx, config: &str) -> Result<Table> {
     let rt = ctx.runtime(config)?;
     let mut task = sft_task(&rt, 128, 0.1, ctx.seed);
-    let mut t = Table::new(vec!["method", "measured peak", "params", "grads", "optim", "acts", "lora"]);
+    let mut t = Table::new(vec![
+        "method", "measured peak", "params", "grads", "optim", "acts", "lora", "device",
+    ]);
     let n_layers = rt.manifest.n_layers;
     let specs: Vec<(String, StrategySpec)> = vec![
         ("vanilla(FT)".into(), StrategySpec::ft()),
@@ -53,6 +55,7 @@ fn measured_rows(ctx: &Ctx, config: &str) -> Result<Table> {
             get("optim"),
             get("activations"),
             get("lora"),
+            get("device"),
         ]);
     }
     Ok(t)

@@ -121,7 +121,7 @@ impl LisaScheduler {
     /// Serialize the sampler state (RNG stream, live layer set, draw count
     /// and history) so a resumed run draws the exact same layer sequence
     /// the uninterrupted run would have (resume protocol, DESIGN.md §7).
-    pub fn save_state(&self, sec: &mut crate::model::checkpoint::Section) {
+    pub fn save_state(&self, sec: &mut crate::model::checkpoint::Section<'_>) {
         sec.put_rng("sampler.rng", &self.rng);
         sec.put_u64s(
             "sampler.current",
@@ -139,7 +139,7 @@ impl LisaScheduler {
     /// Restore the state written by [`LisaScheduler::save_state`].
     pub fn load_state(
         &mut self,
-        sec: &mut crate::model::checkpoint::Section,
+        sec: &mut crate::model::checkpoint::Section<'_>,
     ) -> anyhow::Result<()> {
         use anyhow::ensure;
         self.rng = sec.take_rng("sampler.rng")?;

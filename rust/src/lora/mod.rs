@@ -7,7 +7,7 @@
 //! the base-weight gradient matmuls are never emitted, which is LoRA's
 //! compute/memory profile done honestly rather than masked.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::engine::{Batch, Engine, MemCategory};
 use crate::model::{ModelParams, ParamKey};
@@ -20,12 +20,26 @@ use crate::runtime::{HostTensor, Manifest, Operand};
 /// (a2,b2)->w2 — indices in the block ABI order (g1,wq,wk,wv,wo,g2,w1,w2).
 pub const ADAPTER_TARGETS: [usize; 6] = [1, 2, 3, 4, 6, 7];
 
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct LoraState {
     /// `adapters[l]` = the 12 tensors (aq,bq,...,a2,b2) of layer `l`.
     pub adapters: Vec<Vec<HostTensor>>,
     pub rank: usize,
     pub alpha: f64,
+    /// Store-generation id for the engine's device cache (same contract
+    /// as `ModelParams::store_id`).
+    store_id: u64,
+}
+
+impl Clone for LoraState {
+    fn clone(&self) -> Self {
+        LoraState {
+            adapters: self.adapters.clone(),
+            rank: self.rank,
+            alpha: self.alpha,
+            store_id: crate::model::params::next_store_id(),
+        }
+    }
 }
 
 impl LoraState {
@@ -44,7 +58,26 @@ impl LoraState {
             }
             adapters.push(layer);
         }
-        LoraState { adapters, rank: m.lora_rank, alpha: m.lora_alpha }
+        LoraState {
+            adapters,
+            rank: m.lora_rank,
+            alpha: m.lora_alpha,
+            store_id: crate::model::params::next_store_id(),
+        }
+    }
+
+    pub fn store_id(&self) -> u64 {
+        self.store_id
+    }
+
+    /// Every adapter's cache key — what a LoRA optimizer step mutates
+    /// (the `Touched` report of `strategy::LoraStrategy::apply`).
+    pub fn touched_keys(&self) -> Vec<ParamKey> {
+        self.adapters
+            .iter()
+            .enumerate()
+            .flat_map(|(l, layer)| (0..layer.len()).map(move |i| ParamKey::Lora(l, i)))
+            .collect()
     }
 
     pub fn scaling(&self) -> f32 {
@@ -106,49 +139,82 @@ pub fn lora_grads_scale(g: &mut LoraGrads, s: f32) {
 
 /// LoRA forward + backward over the whole model (base weights and
 /// embed/head frozen; returns loss + adapter grads).
+///
+/// Under the device flow the frozen base weights are the best possible
+/// cache customers: they are *never* invalidated, so after the first
+/// microbatch only the adapters (invalidated once per optimizer step) and
+/// the token batch ever cross the host→device boundary.
 pub fn forward_backward_lora(
     eng: &mut Engine,
     params: &ModelParams,
     lora: &LoraState,
     batch: &Batch,
 ) -> Result<(f32, LoraGrads)> {
-    let m = eng.rt.manifest.clone();
+    let rt = eng.rt;
+    let m = &rt.manifest;
+    let ids = eng.ids;
     let hs = vec![m.batch, m.seq, m.d_model];
     eng.meter.set(MemCategory::Params, params.bytes() as u64);
     eng.meter.set(MemCategory::LoraAdapters, lora.bytes());
-
     // Forward, stashing block inputs.
-    let out = eng.run_raw(
-        "embed_fwd",
-        &[Operand::I32(&batch.tokens), Operand::F32(&params.emb), Operand::F32(&params.pos)],
-    )?;
-    let mut h = HostTensor::from_literal(&out[0], &hs)?;
+    let mut h = if eng.device_flow {
+        let (emb, pos) = eng.embed_bufs(params)?;
+        let ops = [Operand::I32(&batch.tokens), Operand::Buf(&emb), Operand::Buf(&pos)];
+        eng.run_chain_act(ids.embed_fwd, &ops, &hs)?
+    } else {
+        let ops = [
+            Operand::I32(&batch.tokens),
+            Operand::F32(&params.emb),
+            Operand::F32(&params.pos),
+        ];
+        eng.run_chain_act(ids.embed_fwd, &ops, &hs)?
+    };
     let mut stash = Vec::with_capacity(m.n_layers);
     let mut act = 0u64;
     for l in 0..m.n_layers {
         act += h.bytes() as u64;
         eng.meter.set(MemCategory::Activations, act);
-        let mut ops = vec![Operand::F32(&h)];
-        ops.extend(params.blocks[l].iter().map(Operand::F32));
-        ops.extend(lora.adapters[l].iter().map(Operand::F32));
-        let out = eng.run_raw("block_fwd_lora", &ops)?;
-        let h_next = HostTensor::from_literal(&out[0], &hs)?;
+        let h_next = if eng.device_flow {
+            let base = eng.block_bufs(params, l)?;
+            let adap = eng.adapter_bufs(lora, l)?;
+            let mut ops = vec![h.operand()];
+            ops.extend(base.iter().map(|b| Operand::Buf(b.as_ref())));
+            ops.extend(adap.iter().map(|b| Operand::Buf(b.as_ref())));
+            eng.run_chain_act(ids.block_fwd_lora, &ops, &hs)?
+        } else {
+            let mut ops = vec![h.operand()];
+            ops.extend(params.blocks[l].iter().map(Operand::F32));
+            ops.extend(lora.adapters[l].iter().map(Operand::F32));
+            eng.run_chain_act(ids.block_fwd_lora, &ops, &hs)?
+        };
         stash.push(h);
         h = h_next;
     }
 
     // Frozen head: loss + dh only.
-    let outs = eng.run_raw(
-        "head_fwd_bwd_x",
-        &[
-            Operand::F32(&h),
+    let outs = if eng.device_flow {
+        let (gf, wh) = eng.head_bufs(params)?;
+        let ops = [
+            h.operand(),
+            Operand::Buf(&gf),
+            Operand::Buf(&wh),
+            Operand::I32(&batch.targets),
+        ];
+        rt.run_id(ids.head_fwd_bwd_x, &ops)?
+    } else {
+        let ops = [
+            h.operand(),
             Operand::F32(&params.gf),
             Operand::F32(&params.wh),
             Operand::I32(&batch.targets),
-        ],
-    )?;
-    let loss = HostTensor::scalar_from_literal(&outs[0])?;
-    let mut dh = HostTensor::from_literal(&outs[1], &hs)?;
+        ];
+        rt.run_id(ids.head_fwd_bwd_x, &ops)?
+    };
+    let mut it = outs.into_iter();
+    let loss = HostTensor::scalar_from_literal(&it.next().context("head: missing loss")?)?;
+    let dh_lit = it.next().context("head: missing dh")?;
+    drop(it);
+    let mut dh = eng.act_from_literal(dh_lit, &hs)?;
 
     // Backward: adapter grads in every block; stop after block 0 (embedding
     // is frozen in LoRA mode, so d(embed) is never needed).
@@ -156,18 +222,29 @@ pub fn forward_backward_lora(
     grads.resize_with(m.n_layers, Vec::new);
     let mut grad_bytes = 0u64;
     for l in (0..m.n_layers).rev() {
-        let mut ops = vec![Operand::F32(&dh), Operand::F32(&stash[l])];
-        ops.extend(params.blocks[l].iter().map(Operand::F32));
-        ops.extend(lora.adapters[l].iter().map(Operand::F32));
-        let outs = eng.run_raw("block_bwd_lora", &ops)?;
-        dh = HostTensor::from_literal(&outs[0], &hs)?;
+        let outs = if eng.device_flow {
+            let base = eng.block_bufs(params, l)?;
+            let adap = eng.adapter_bufs(lora, l)?;
+            let mut ops = vec![dh.operand(), stash[l].operand()];
+            ops.extend(base.iter().map(|b| Operand::Buf(b.as_ref())));
+            ops.extend(adap.iter().map(|b| Operand::Buf(b.as_ref())));
+            rt.run_id(ids.block_bwd_lora, &ops)?
+        } else {
+            let mut ops = vec![dh.operand(), stash[l].operand()];
+            ops.extend(params.blocks[l].iter().map(Operand::F32));
+            ops.extend(lora.adapters[l].iter().map(Operand::F32));
+            rt.run_id(ids.block_bwd_lora, &ops)?
+        };
+        let mut it = outs.into_iter();
+        let new_dh_lit = it.next().context("bwd_lora: missing dh")?;
         let mut layer_grads = Vec::with_capacity(m.lora_params.len());
-        for (o, (_, shape)) in outs[1..].iter().zip(&m.lora_params) {
-            layer_grads.push(HostTensor::from_literal(o, shape)?);
+        for (o, (_, shape)) in it.zip(&m.lora_params) {
+            layer_grads.push(HostTensor::from_literal(&o, shape)?);
         }
         grad_bytes += layer_grads.iter().map(|t| t.bytes() as u64).sum::<u64>();
         eng.meter.set(MemCategory::Grads, grad_bytes);
         grads[l] = layer_grads;
+        dh = eng.act_from_literal(new_dh_lit, &hs)?;
     }
     eng.meter.set(MemCategory::Activations, 0);
     Ok((loss, grads))

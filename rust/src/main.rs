@@ -44,6 +44,7 @@ const SPEC: &[(&str, &str, &str)] = &[
     ("galore-gap", "50", "GaLore projection refresh interval (steps)"),
     ("galore-scale", "1.0", "GaLore update scale α"),
     ("grad-accum", "1", "microbatch accumulation"),
+    ("device-flow", "", "train: device-resident params/activations (on|off; default on, or LISA_DEVICE_FLOW)"),
     ("save-every", "0", "checkpoint full training state every N steps (0 = final save only)"),
     ("ckpt", "", "training-state checkpoint path (default <results>/train-<method>.state)"),
     ("resume", "", "resume training from a --save-every checkpoint"),
@@ -154,6 +155,11 @@ fn cmd_train(a: &Args) -> Result<()> {
     };
 
     let mut sess = TrainSession::new(&rt, &spec, cfg)?;
+    // An explicit flag overrides LISA_DEVICE_FLOW in both directions;
+    // leaving it unset keeps the engine default (env-controlled).
+    if let Some(v) = a.get_opt("device-flow") {
+        sess.engine.device_flow = !matches!(v.as_str(), "off" | "0" | "false");
+    }
     let res = sess.run_resumable(&mut train_dl, ckpt.as_ref(), ctx.resume.as_deref())?;
     if let Some(c) = &ckpt {
         println!("checkpoint: {}", c.path.display());
@@ -223,7 +229,12 @@ fn real_main() -> Result<()> {
             );
             println!("segments ({}):", m.segments.len());
             for (k, s) in &m.segments {
-                println!("  {k:<28} {} operands -> {} outputs", s.operands.len(), s.outputs.len());
+                println!(
+                    "  {k:<28} {} operands -> {} outputs{}",
+                    s.operands.len(),
+                    s.outputs.len(),
+                    if s.device_chainable() { "  [device-chainable]" } else { "" }
+                );
             }
             Ok(())
         }

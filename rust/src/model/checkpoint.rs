@@ -32,6 +32,7 @@
 //! (Table 4: CPT checkpoint -> fine-tune), the e2e example, and the
 //! crash-safe resume protocol (`train::TrainSession::save_checkpoint`).
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
@@ -54,10 +55,12 @@ const MAX_RANK: usize = 8;
 // ---------------------------------------------------------------------------
 
 /// One serialized value: an f32 tensor (weights, moments) or a raw u64
-/// blob (RNG streams, cursors, counters, bit-cast f64s).
+/// blob (RNG streams, cursors, counters, bit-cast f64s). Tensor payloads
+/// are `Cow`: the save path *borrows* the live training tensors (no
+/// transient copy of the model per checkpoint), the load path owns them.
 #[derive(Debug, Clone, PartialEq)]
-pub enum Blob {
-    F32(HostTensor),
+pub enum Blob<'a> {
+    F32 { shape: Vec<usize>, data: Cow<'a, [f32]> },
     U64(Vec<u64>),
 }
 
@@ -66,14 +69,19 @@ pub enum Blob {
 /// entries out, so after a component restored itself the section must be
 /// empty; leftovers mean the file was written by a different
 /// configuration and the load fails loudly instead of resuming wrong.
+///
+/// The lifetime is the writer-side borrow: `put_tensor`/`put_f32s` borrow
+/// the caller's buffers and [`save_sections`] streams them through the
+/// CRC accumulator without cloning. Sections returned by a loader are
+/// `Section<'static>` (fully owned).
 #[derive(Debug, Clone, PartialEq)]
-pub struct Section {
+pub struct Section<'a> {
     pub name: String,
-    entries: BTreeMap<String, Blob>,
+    entries: BTreeMap<String, Blob<'a>>,
 }
 
-impl Section {
-    pub fn new(name: &str) -> Section {
+impl<'a> Section<'a> {
+    pub fn new(name: &str) -> Section<'a> {
         Section { name: name.to_string(), entries: BTreeMap::new() }
     }
 
@@ -90,15 +98,31 @@ impl Section {
         self.entries.keys().cloned().collect()
     }
 
-    pub fn put_tensor(&mut self, key: &str, t: &HostTensor) {
-        self.entries.insert(key.to_string(), Blob::F32(t.clone()));
-    }
-
-    /// Rank-1 f32 buffer (optimizer moments — shape lives with the params).
-    pub fn put_f32s(&mut self, key: &str, data: &[f32]) {
+    /// Borrow a tensor into the section (zero-copy; the tensor must
+    /// outlive the section — the normal save path, where sections are
+    /// built and written within one call).
+    pub fn put_tensor(&mut self, key: &str, t: &'a HostTensor) {
         self.entries.insert(
             key.to_string(),
-            Blob::F32(HostTensor::from_vec(&[data.len()], data.to_vec())),
+            Blob::F32 { shape: t.shape.clone(), data: Cow::Borrowed(&t.data) },
+        );
+    }
+
+    /// Owned-tensor variant for callers that build sections from
+    /// temporaries (tests, format tooling).
+    pub fn put_tensor_owned(&mut self, key: &str, t: HostTensor) {
+        self.entries.insert(
+            key.to_string(),
+            Blob::F32 { shape: t.shape, data: Cow::Owned(t.data) },
+        );
+    }
+
+    /// Rank-1 f32 buffer, borrowed (optimizer moments — shape lives with
+    /// the params).
+    pub fn put_f32s(&mut self, key: &str, data: &'a [f32]) {
+        self.entries.insert(
+            key.to_string(),
+            Blob::F32 { shape: vec![data.len()], data: Cow::Borrowed(data) },
         );
     }
 
@@ -128,7 +152,7 @@ impl Section {
         self.put_u64s(key, words);
     }
 
-    fn take(&mut self, key: &str) -> Result<Blob> {
+    fn take(&mut self, key: &str) -> Result<Blob<'a>> {
         self.entries.remove(key).with_context(|| {
             format!("checkpoint section '{}' missing entry '{key}'", self.name)
         })
@@ -136,7 +160,15 @@ impl Section {
 
     pub fn take_tensor(&mut self, key: &str) -> Result<HostTensor> {
         match self.take(key)? {
-            Blob::F32(t) => Ok(t),
+            Blob::F32 { shape, data } => {
+                let data = data.into_owned();
+                ensure!(
+                    crate::runtime::numel(&shape) == data.len(),
+                    "entry '{key}': shape {shape:?} does not fit {} elements",
+                    data.len()
+                );
+                Ok(HostTensor { shape, data })
+            }
             Blob::U64(_) => bail!("entry '{key}' is u64, expected f32 tensor"),
         }
     }
@@ -148,7 +180,7 @@ impl Section {
     pub fn take_u64s(&mut self, key: &str) -> Result<Vec<u64>> {
         match self.take(key)? {
             Blob::U64(v) => Ok(v),
-            Blob::F32(_) => bail!("entry '{key}' is f32, expected u64 blob"),
+            Blob::F32 { .. } => bail!("entry '{key}' is f32, expected u64 blob"),
         }
     }
 
@@ -192,7 +224,7 @@ impl Section {
 
 /// Error unless every entry of `sec` was consumed — the guard against
 /// silently resuming from a checkpoint written by a different config.
-pub fn ensure_consumed(sec: &Section) -> Result<()> {
+pub fn ensure_consumed(sec: &Section<'_>) -> Result<()> {
     ensure!(
         sec.is_empty(),
         "checkpoint section '{}' has {} unexpected entries (e.g. {:?}) — \
@@ -205,7 +237,7 @@ pub fn ensure_consumed(sec: &Section) -> Result<()> {
 }
 
 /// Remove and return the named section from a loaded checkpoint.
-pub fn take_section(sections: &mut Vec<Section>, name: &str) -> Result<Section> {
+pub fn take_section<'a>(sections: &mut Vec<Section<'a>>, name: &str) -> Result<Section<'a>> {
     let i = sections
         .iter()
         .position(|s| s.name == name)
@@ -287,9 +319,18 @@ fn push_named(buf: &mut Vec<u8>, name: &str) {
     buf.extend_from_slice(name.as_bytes());
 }
 
-fn write_record(w: &mut impl Write, buf: &[u8]) -> Result<()> {
-    w.write_all(buf)?;
-    w.write_all(&crate::util::crc32::crc32(buf).to_le_bytes())?;
+/// Stream one record from its parts: the CRC-32 accumulator runs over the
+/// borrowed slices directly, so large tensor payloads are never copied
+/// into an intermediate record buffer (let alone into an owned `Section`).
+fn write_record_parts(w: &mut impl Write, parts: &[&[u8]]) -> Result<()> {
+    let mut crc = Crc32::new();
+    for p in parts {
+        crc.update(p);
+    }
+    for p in parts {
+        w.write_all(p)?;
+    }
+    w.write_all(&crc.finish().to_le_bytes())?;
     Ok(())
 }
 
@@ -488,43 +529,47 @@ pub fn load_tensors(path: &Path) -> Result<BTreeMap<String, HostTensor>> {
 // ---------------------------------------------------------------------------
 
 /// Write a v2 sectioned checkpoint atomically (tmp + fsync + rename).
-pub fn save_sections(path: &Path, sections: &[Section]) -> Result<()> {
+/// The writer streams: record headers go through one small reused buffer
+/// and tensor payloads are CRC'd and written straight from the borrowed
+/// slices — a save never materializes a second copy of the model.
+pub fn save_sections(path: &Path, sections: &[Section<'_>]) -> Result<()> {
     atomic_write(path, |f| {
         f.write_all(MAGIC)?;
         f.write_all(&V2.to_le_bytes())?;
         f.write_all(&(sections.len() as u32).to_le_bytes())?;
+        let mut head = Vec::with_capacity(256);
         for sec in sections {
-            let mut header = Vec::new();
-            push_named(&mut header, &sec.name);
-            push_u32(&mut header, sec.entries.len() as u32);
-            write_record(f, &header)?;
+            head.clear();
+            push_named(&mut head, &sec.name);
+            push_u32(&mut head, sec.entries.len() as u32);
+            write_record_parts(f, &[&head])?;
             for (key, blob) in &sec.entries {
-                let mut rec = Vec::new();
-                push_named(&mut rec, key);
-                match blob {
-                    Blob::F32(t) => {
-                        rec.push(0u8);
-                        push_u32(&mut rec, t.shape.len() as u32);
-                        for &d in &t.shape {
-                            push_u64(&mut rec, d as u64);
+                head.clear();
+                push_named(&mut head, key);
+                let payload: &[u8] = match blob {
+                    Blob::F32 { shape, data } => {
+                        head.push(0u8);
+                        push_u32(&mut head, shape.len() as u32);
+                        for &d in shape.iter() {
+                            push_u64(&mut head, d as u64);
                         }
-                        rec.extend_from_slice(f32s_as_bytes(&t.data));
+                        f32s_as_bytes(data)
                     }
                     Blob::U64(v) => {
-                        rec.push(1u8);
-                        push_u32(&mut rec, 1); // rank-1 by construction
-                        push_u64(&mut rec, v.len() as u64);
-                        rec.extend_from_slice(u64s_as_bytes(v));
+                        head.push(1u8);
+                        push_u32(&mut head, 1); // rank-1 by construction
+                        push_u64(&mut head, v.len() as u64);
+                        u64s_as_bytes(v)
                     }
-                }
-                write_record(f, &rec)?;
+                };
+                write_record_parts(f, &[&head, payload])?;
             }
         }
         Ok(())
     })
 }
 
-fn parse_v2(rd: &mut Rd<impl Read>) -> Result<Vec<Section>> {
+fn parse_v2(rd: &mut Rd<impl Read>) -> Result<Vec<Section<'static>>> {
     let n_sections = rd.u32()? as usize;
     let mut out = Vec::new();
     for _ in 0..n_sections {
@@ -541,7 +586,7 @@ fn parse_v2(rd: &mut Rd<impl Read>) -> Result<Vec<Section>> {
                 0 => {
                     let (shape, numel) = rd.shape(4)?;
                     let data = rd.f32_data(numel)?;
-                    Blob::F32(HostTensor { shape, data })
+                    Blob::F32 { shape, data: Cow::Owned(data) }
                 }
                 1 => {
                     let (shape, numel) = rd.shape(8)?;
@@ -567,7 +612,7 @@ fn parse_v2(rd: &mut Rd<impl Read>) -> Result<Vec<Section>> {
 }
 
 /// Read a v2 sectioned checkpoint, verifying every record CRC.
-pub fn load_sections(path: &Path) -> Result<Vec<Section>> {
+pub fn load_sections(path: &Path) -> Result<Vec<Section<'static>>> {
     let (mut rd, version) = open_versioned(path)?;
     ensure!(
         version == V2,
@@ -597,8 +642,9 @@ pub(crate) fn model_tensor_list(p: &ModelParams) -> Vec<(String, &HostTensor)> {
     v
 }
 
-/// The "model" section of a training-state checkpoint.
-pub fn model_section(p: &ModelParams) -> Section {
+/// The "model" section of a training-state checkpoint. Borrows every
+/// weight tensor — building and writing it costs no parameter copy.
+pub fn model_section(p: &ModelParams) -> Section<'_> {
     let mut sec = Section::new("model");
     for (name, t) in model_tensor_list(p) {
         sec.put_tensor(&name, t);
@@ -608,7 +654,7 @@ pub fn model_section(p: &ModelParams) -> Section {
 
 /// Restore model weights from a "model" section (shape-checked, every
 /// tensor must be present, nothing may be left over).
-pub fn load_model_section(sec: &mut Section, into: &mut ModelParams) -> Result<()> {
+pub fn load_model_section(sec: &mut Section<'_>, into: &mut ModelParams) -> Result<()> {
     let mut take = |name: &str, dst: &mut HostTensor| -> Result<()> {
         let t = sec.take_tensor(name)?;
         ensure!(
@@ -651,7 +697,7 @@ pub fn load_model(path: &Path, into: &mut ModelParams) -> Result<()> {
     if version == V1 {
         let mut sec = Section::new("model");
         for (name, t) in parse_v1(&mut rd)? {
-            sec.entries.insert(name, Blob::F32(t));
+            sec.put_tensor_owned(&name, t);
         }
         return load_model_section(&mut sec, into);
     }
@@ -712,14 +758,16 @@ mod tests {
     #[test]
     fn sections_roundtrip_all_dtypes() {
         let path = tdir("v2rt").join("s.ckpt");
+        let w = HostTensor::from_vec(&[2, 2], vec![1.0, -2.0, 3.5, 0.0]);
+        let moments = [0.5f32; 9];
         let mut a = Section::new("alpha");
-        a.put_tensor("w", &HostTensor::from_vec(&[2, 2], vec![1.0, -2.0, 3.5, 0.0]));
+        a.put_tensor("w", &w);
         a.put_u64s("rng", vec![1, 2, 3, 4]);
         a.put_u64("step", 7);
         a.put_f64s("ema", &[0.1, -3.7, f64::MIN_POSITIVE]);
         a.put_str("label", "lisa-grad");
         let mut b = Section::new("beta");
-        b.put_f32s("m", &[0.5; 9]);
+        b.put_f32s("m", &moments);
         save_sections(&path, &[a.clone(), b.clone()]).unwrap();
 
         let mut loaded = load_sections(&path).unwrap();
@@ -764,8 +812,9 @@ mod tests {
     #[test]
     fn v2_bit_flip_in_tensor_data_is_detected() {
         let path = tdir("flip").join("f.ckpt");
+        let w = [1.0f32; 32];
         let mut s = Section::new("m");
-        s.put_f32s("w", &[1.0; 32]);
+        s.put_f32s("w", &w);
         save_sections(&path, &[s]).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
         let mid = bytes.len() - 40; // inside the f32 payload

@@ -77,8 +77,19 @@ impl ParamKey {
     }
 }
 
+/// Process-unique id for a parameter store *generation*. Every distinct
+/// `ModelParams` (or `lora::LoraState`) instance — fresh init, clone,
+/// merged eval view — gets its own id, so the engine's device cache can
+/// tell "same tensors as last step" from "a different store that happens
+/// to use the same keys" without comparing data.
+pub(crate) fn next_store_id() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
 /// All trainable tensors of one model instance.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct ModelParams {
     pub emb: HostTensor,
     pub pos: HostTensor,
@@ -86,9 +97,53 @@ pub struct ModelParams {
     pub blocks: Vec<Vec<HostTensor>>,
     pub gf: HostTensor,
     pub wh: HostTensor,
+    /// Store-generation id (see [`next_store_id`]). In-place mutation
+    /// keeps the id — that is what the strategy invalidation contract
+    /// (`strategy::Strategy::apply` → `engine::Touched`) covers.
+    store_id: u64,
+}
+
+impl Clone for ModelParams {
+    fn clone(&self) -> Self {
+        // A clone is a *different* store: its tensors may diverge from the
+        // original (LoRA merge, CPT forks), so it must never share cached
+        // device buffers keyed to the source id.
+        ModelParams {
+            emb: self.emb.clone(),
+            pos: self.pos.clone(),
+            blocks: self.blocks.clone(),
+            gf: self.gf.clone(),
+            wh: self.wh.clone(),
+            store_id: next_store_id(),
+        }
+    }
 }
 
 impl ModelParams {
+    /// The store-generation id the engine's device cache stamps uploads
+    /// with.
+    pub fn store_id(&self) -> u64 {
+        self.store_id
+    }
+
+    /// Read-only evaluation view: clones the tensor data but *shares* the
+    /// store-generation id, so feeding it to an engine whose cache is
+    /// warm on the original serves the cached buffers (the bytes are
+    /// identical by construction) instead of evicting the whole cache.
+    /// Contract: a view must stay byte-identical to its source for as
+    /// long as both can reach the same engine — anything that produces
+    /// genuinely different eval weights (LoRA's merge) must use
+    /// `clone()`, which takes a fresh generation.
+    pub fn eval_view(&self) -> ModelParams {
+        ModelParams {
+            emb: self.emb.clone(),
+            pos: self.pos.clone(),
+            blocks: self.blocks.clone(),
+            gf: self.gf.clone(),
+            wh: self.wh.clone(),
+            store_id: self.store_id,
+        }
+    }
     /// GPT-2-style init: N(0, 0.02) embeddings and matrices, unit norm
     /// gains, residual-out projections (wo, w2) scaled by 1/sqrt(2L).
     pub fn init(m: &Manifest, rng: &mut Rng) -> ModelParams {
@@ -120,7 +175,7 @@ impl ModelParams {
         let mut wh = HostTensor::zeros(&[m.d_model, m.vocab]);
         rng.fill_normal(&mut wh.data, std);
 
-        ModelParams { emb, pos, blocks, gf, wh }
+        ModelParams { emb, pos, blocks, gf, wh, store_id: next_store_id() }
     }
 
     pub fn n_layers(&self) -> usize {

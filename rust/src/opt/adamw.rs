@@ -159,10 +159,12 @@ impl AdamW {
     }
 
     /// Serialize every moment slot into `sec` under `prefix` (checkpoint
-    /// resume protocol — DESIGN.md §7). Hyperparameters and policy are
-    /// *not* persisted: they are re-derived from the training config, so a
-    /// resumed run and an uninterrupted run share one source of truth.
-    pub fn save_state(&self, sec: &mut Section, prefix: &str) {
+    /// resume protocol — DESIGN.md §7). Moment buffers are borrowed into
+    /// the section (the streaming writer CRCs them in place — no copy).
+    /// Hyperparameters and policy are *not* persisted: they are re-derived
+    /// from the training config, so a resumed run and an uninterrupted run
+    /// share one source of truth.
+    pub fn save_state<'a>(&'a self, sec: &mut Section<'a>, prefix: &str) {
         let keys: Vec<String> = self.state.keys().map(|k| k.name()).collect();
         sec.put_str(&format!("{prefix}keys"), &keys.join(","));
         for (k, s) in &self.state {
@@ -179,7 +181,7 @@ impl AdamW {
     /// panicking inside `adamw_chunk` on the next step.
     pub fn load_state(
         &mut self,
-        sec: &mut Section,
+        sec: &mut Section<'_>,
         prefix: &str,
         shape: super::ShapeFn<'_>,
     ) -> Result<()> {

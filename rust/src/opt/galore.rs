@@ -210,7 +210,8 @@ impl Galore {
 
     /// Serialize the projector state: per-slot moments + basis + step
     /// counters, plus the basis-refresh RNG stream (resume protocol).
-    pub fn save_state(&self, sec: &mut Section, prefix: &str) {
+    /// Bases and moments are borrowed into the section — no copy.
+    pub fn save_state<'a>(&'a self, sec: &mut Section<'a>, prefix: &str) {
         // the slots' proj/m/v layouts are rank-dependent; persist the rank
         // so resuming under a different --galore-rank fails loudly instead
         // of indexing garbage
@@ -234,7 +235,7 @@ impl Galore {
     /// inconsistent checkpoint errors here instead of projecting garbage.
     pub fn load_state(
         &mut self,
-        sec: &mut Section,
+        sec: &mut Section<'_>,
         prefix: &str,
         shape: super::ShapeFn<'_>,
     ) -> Result<()> {

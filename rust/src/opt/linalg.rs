@@ -1,66 +1,160 @@
-//! Dense f32 linear algebra for the GaLore projector (no BLAS crate in the
-//! image). Matrices are row-major `&[f32]` with explicit dims. Sizes here
-//! are small (projection ranks ≤ 64, model dims ≤ a few thousand), so a
-//! cache-blocked naive kernel is adequate; the training FLOPs live in XLA.
+//! Dense f32 linear algebra for the GaLore projector and the LoRA merge
+//! (no BLAS crate in the image). Matrices are row-major `&[f32]` with
+//! explicit dims.
+//!
+//! The kernels are cache-blocked and parallelized over `util::threadpool`
+//! (output-row chunks per worker, k/i tiles inside), with one invariant
+//! that the agreement tests pin down: **per output element, the
+//! floating-point accumulation order is identical to the serial kernel**
+//! — tiles only split loops, they never reorder a single element's
+//! partial sums, and each worker owns a disjoint row range. So
+//! `workers = 1` and `workers = N` are bit-identical, and GaLore /
+//! LoRA-merge trajectories do not depend on the machine's core count.
+//!
+//! The old `av == 0.0` skip in the inner loops is gone: on dense
+//! gradients the branch is pure misprediction cost, and `c += 0.0 * b`
+//! is bit-identical to skipping for finite inputs.
+
+use crate::util::threadpool;
+
+/// k-dimension tile: keeps the active slice of `b` in cache while a
+/// worker sweeps its rows.
+const TILE: usize = 64;
+
+fn auto_workers(flops: usize) -> usize {
+    // Thread spawn/join costs ~10µs; only fan out when there is real work.
+    if flops < (1 << 21) {
+        1
+    } else {
+        threadpool::default_workers()
+    }
+}
+
+/// Run `body(first_row, rows_chunk)` over disjoint row chunks of `c`.
+fn par_rows<F>(c: &mut [f32], rows: usize, row_len: usize, workers: usize, body: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(c.len(), rows * row_len);
+    let parts = threadpool::chunks(rows, workers);
+    if parts.len() <= 1 {
+        body(0, c);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut rest = c;
+        let mut row = 0;
+        for (_, len) in parts {
+            let (head, tail) = rest.split_at_mut(len * row_len);
+            let body = &body;
+            let first = row;
+            scope.spawn(move || body(first, head));
+            rest = tail;
+            row += len;
+        }
+    });
+}
 
 /// c[m,n] = a[m,k] @ b[k,n]
 pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    matmul_nn_with_workers(a, b, m, k, n, auto_workers(m * k * n))
+}
+
+pub fn matmul_nn_with_workers(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    workers: usize,
+) -> Vec<f32> {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     let mut c = vec![0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
+    par_rows(&mut c, m, n, workers, |r0, chunk| {
+        let mut kk0 = 0;
+        while kk0 < k {
+            let kk1 = (kk0 + TILE).min(k);
+            for (ri, crow) in chunk.chunks_mut(n).enumerate() {
+                let arow = &a[(r0 + ri) * k..(r0 + ri + 1) * k];
+                for (kk, &av) in arow.iter().enumerate().take(kk1).skip(kk0) {
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
             }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
+            kk0 = kk1;
         }
-    }
+    });
     c
 }
 
 /// c[k,n] = a[m,k]^T @ b[m,n]
 pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    matmul_tn_with_workers(a, b, m, k, n, auto_workers(m * k * n))
+}
+
+pub fn matmul_tn_with_workers(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    workers: usize,
+) -> Vec<f32> {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), m * n);
     let mut c = vec![0f32; k * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
+    par_rows(&mut c, k, n, workers, |k0, chunk| {
+        let mut i0 = 0;
+        while i0 < m {
+            let i1 = (i0 + TILE).min(m);
+            for (rk, crow) in chunk.chunks_mut(n).enumerate() {
+                let kk = k0 + rk;
+                for i in i0..i1 {
+                    let av = a[i * k + kk];
+                    let brow = &b[i * n..(i + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
             }
-            let crow = &mut c[kk * n..(kk + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
+            i0 = i1;
         }
-    }
+    });
     c
 }
 
 /// c[m,k] = a[m,n] @ b[k,n]^T
 pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    matmul_nt_with_workers(a, b, m, n, k, auto_workers(m * n * k))
+}
+
+pub fn matmul_nt_with_workers(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    workers: usize,
+) -> Vec<f32> {
     assert_eq!(a.len(), m * n);
     assert_eq!(b.len(), k * n);
     let mut c = vec![0f32; m * k];
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        for j in 0..k {
-            let brow = &b[j * n..(j + 1) * n];
-            let mut s = 0f32;
-            for (&x, &y) in arow.iter().zip(brow) {
-                s += x * y;
+    par_rows(&mut c, m, k, workers, |r0, chunk| {
+        for (ri, crow) in chunk.chunks_mut(k).enumerate() {
+            let arow = &a[(r0 + ri) * n..(r0 + ri + 1) * n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let brow = &b[j * n..(j + 1) * n];
+                let mut s = 0f32;
+                for (&x, &y) in arow.iter().zip(brow) {
+                    s += x * y;
+                }
+                *cv = s;
             }
-            c[i * k + j] = s;
         }
-    }
+    });
     c
 }
 
@@ -176,6 +270,63 @@ mod tests {
         }
     }
 
+    /// The satellite contract: threaded + tiled kernels are bit-identical
+    /// to the single-worker kernel, across shapes that exercise partial
+    /// tiles, uneven worker splits, zeros in the data, and the
+    /// tall/wide/square cases GaLore feeds them.
+    #[test]
+    fn parallel_kernels_match_serial_bitwise() {
+        let mut rng = Rng::new(42);
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (7, 5, 3),
+            (64, 64, 64),
+            (130, 33, 70),   // partial k-tiles + uneven row split
+            (3, 200, 17),    // fewer rows than workers
+            (97, 128, 257),
+        ];
+        for &(m, k, n) in &shapes {
+            let mut a = vec![0f32; m * k];
+            let mut b = vec![0f32; k * n];
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut b, 1.0);
+            // sprinkle exact zeros (the removed skip-branch case)
+            for i in (0..a.len()).step_by(7) {
+                a[i] = 0.0;
+            }
+            for workers in [2usize, 3, 8] {
+                let s = matmul_nn_with_workers(&a, &b, m, k, n, 1);
+                let p = matmul_nn_with_workers(&a, &b, m, k, n, workers);
+                assert!(
+                    s.iter().zip(&p).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "nn {m}x{k}x{n} diverges at {workers} workers"
+                );
+            }
+            // tn: a stored [k_rows= m rows...] — reuse buffers with the
+            // matching dims (a:[m,k] b:[m,n'] with n' = n)
+            let mut b2 = vec![0f32; m * n];
+            rng.fill_normal(&mut b2, 1.0);
+            for workers in [2usize, 5] {
+                let s = matmul_tn_with_workers(&a, &b2, m, k, n, 1);
+                let p = matmul_tn_with_workers(&a, &b2, m, k, n, workers);
+                assert!(
+                    s.iter().zip(&p).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "tn {m}x{k}x{n} diverges at {workers} workers"
+                );
+            }
+            let mut b3 = vec![0f32; n * k];
+            rng.fill_normal(&mut b3, 1.0);
+            for workers in [2usize, 5] {
+                let s = matmul_nt_with_workers(&a, &b3, m, k, n, 1);
+                let p = matmul_nt_with_workers(&a, &b3, m, k, n, workers);
+                assert!(
+                    s.iter().zip(&p).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "nt {m}x{k}x{n} diverges at {workers} workers"
+                );
+            }
+        }
+    }
+
     #[test]
     fn gram_schmidt_orthonormal() {
         let mut rng = Rng::new(2);
@@ -201,16 +352,16 @@ mod tests {
         let (m, n) = (6, 8);
         let mut g = vec![0f32; m * n];
         for j in 0..n {
-            g[0 * n + j] = 10.0 * ((j as f32) * 0.3).sin();
-            g[1 * n + j] = 8.0 * ((j as f32) * 0.7).cos();
+            g[j] = 10.0 * ((j as f32) * 0.3).sin();
+            g[n + j] = 8.0 * ((j as f32) * 0.7).cos();
             g[4 * n + j] = 0.01 * ((j as f32) * 1.3).sin();
         }
         let mut rng = Rng::new(3);
         let p = top_left_subspace(&g, m, n, 2, 30, &mut rng);
         // Projector should capture nearly all the energy of rows 0 and 1.
         // energy of e0 within span(P): sum_j P[0,j]^2
-        let e0: f32 = (0..2).map(|j| p[0 * 2 + j] * p[0 * 2 + j]).sum();
-        let e1: f32 = (0..2).map(|j| p[1 * 2 + j] * p[1 * 2 + j]).sum();
+        let e0: f32 = (0..2).map(|j| p[j] * p[j]).sum();
+        let e1: f32 = (0..2).map(|j| p[2 + j] * p[2 + j]).sum();
         assert!(e0 > 0.99, "e0={e0}");
         assert!(e1 > 0.99, "e1={e1}");
     }

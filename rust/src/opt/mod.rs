@@ -144,9 +144,9 @@ impl Optimizer {
     }
 
     /// Serialize all optimizer state into a checkpoint section (resume
-    /// protocol). A "kind" tag guards against resuming a run with a
-    /// different optimizer arm.
-    pub fn save_state(&self, sec: &mut crate::model::checkpoint::Section) {
+    /// protocol; moments are borrowed, not cloned). A "kind" tag guards
+    /// against resuming a run with a different optimizer arm.
+    pub fn save_state<'a>(&'a self, sec: &mut crate::model::checkpoint::Section<'a>) {
         match self {
             Optimizer::AdamW(o) => save_adamw_state(o, sec),
             Optimizer::Galore { proj, aux } => {
@@ -161,7 +161,7 @@ impl Optimizer {
     /// slot sizes against `shape` where known.
     pub fn load_state(
         &mut self,
-        sec: &mut crate::model::checkpoint::Section,
+        sec: &mut crate::model::checkpoint::Section<'_>,
         shape: ShapeFn<'_>,
     ) -> anyhow::Result<()> {
         match self {
@@ -182,7 +182,7 @@ impl Optimizer {
 /// The tagged-AdamW checkpoint convention ("opt.kind" + "opt.adam."
 /// prefix), shared by the [`Optimizer`] enum and strategies that own a
 /// bare [`AdamW`] (LoRA) — one definition so the two can never diverge.
-pub fn save_adamw_state(o: &AdamW, sec: &mut crate::model::checkpoint::Section) {
+pub fn save_adamw_state<'a>(o: &'a AdamW, sec: &mut crate::model::checkpoint::Section<'a>) {
     sec.put_str("opt.kind", "adamw");
     o.save_state(sec, "opt.adam.");
 }
@@ -190,7 +190,7 @@ pub fn save_adamw_state(o: &AdamW, sec: &mut crate::model::checkpoint::Section) 
 /// Inverse of [`save_adamw_state`].
 pub fn load_adamw_state(
     o: &mut AdamW,
-    sec: &mut crate::model::checkpoint::Section,
+    sec: &mut crate::model::checkpoint::Section<'_>,
     shape: ShapeFn<'_>,
 ) -> anyhow::Result<()> {
     let kind = sec.take_str("opt.kind")?;

@@ -63,6 +63,21 @@ pub struct SegmentSig {
     pub file: String,
     pub operands: Vec<TensorSig>,
     pub outputs: Vec<TensorSig>,
+    /// Whether the module root is a tuple. Single-output segments are
+    /// exported with a bare root (`aot.py` `return_tuple=False`) so their
+    /// output buffer can feed the next segment without a host round-trip;
+    /// multi-output segments — and every pre-existing artifact, where the
+    /// manifest lacks the field — are tuple-rooted and unwrapped on the
+    /// host as before.
+    pub tuple_root: bool,
+}
+
+impl SegmentSig {
+    /// True when execution can hand back the output as a device buffer
+    /// (`Runtime::run_chained` returns `ChainVal::Dev`).
+    pub fn device_chainable(&self) -> bool {
+        !self.tuple_root && self.outputs.len() == 1
+    }
 }
 
 /// Parsed `manifest.json` for one model config.
@@ -149,9 +164,18 @@ impl Manifest {
                     .map(TensorSig::from_json)
                     .collect()
             };
+            let tuple_root = seg
+                .get("tuple_root")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(true);
             segments.insert(
                 key.clone(),
-                SegmentSig { file, operands: sigs("operands")?, outputs: sigs("outputs")? },
+                SegmentSig {
+                    file,
+                    operands: sigs("operands")?,
+                    outputs: sigs("outputs")?,
+                    tuple_root,
+                },
             );
         }
 
@@ -210,7 +234,14 @@ mod tests {
         "block_fwd.jnp": {
           "file": "block_fwd.jnp.hlo.txt",
           "operands": [{"shape": [1, 4, 8], "dtype": "float32"}],
-          "outputs": [{"shape": [1, 4, 8], "dtype": "float32"}]
+          "outputs": [{"shape": [1, 4, 8], "dtype": "float32"}],
+          "tuple_root": false
+        },
+        "head_fwd_bwd.jnp": {
+          "file": "head_fwd_bwd.jnp.hlo.txt",
+          "operands": [{"shape": [1, 4, 8], "dtype": "float32"}],
+          "outputs": [{"shape": [], "dtype": "float32"},
+                      {"shape": [1, 4, 8], "dtype": "float32"}]
         }
       }
     }"#;
@@ -226,6 +257,12 @@ mod tests {
         let seg = m.segment("block_fwd", "jnp").unwrap();
         assert_eq!(seg.operands[0].shape, vec![1, 4, 8]);
         assert_eq!(seg.operands[0].dtype, DType::F32);
+        assert!(!seg.tuple_root);
+        assert!(seg.device_chainable());
+        // missing flag defaults to the legacy tuple-rooted convention
+        let head = m.segment("head_fwd_bwd", "jnp").unwrap();
+        assert!(head.tuple_root);
+        assert!(!head.device_chainable());
         assert!(m.segment("nope", "jnp").is_err());
     }
 

@@ -4,25 +4,41 @@
 //! Wraps the `xla` crate (xla_extension 0.5.1, CPU plugin):
 //! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
 //! `execute`. Executables are cached per `(segment, backend)`; every
-//! execution validates operand signatures from the manifest and unwraps the
-//! `return_tuple=True` tuple the AOT exporter emits.
+//! execution validates operand signatures from the manifest.
+//!
+//! Two execution shapes exist:
+//!
+//! * tuple-rooted segments (multi-output, and every legacy artifact)
+//!   download their output tuple as one literal and untuple on the host;
+//! * bare-rooted single-output segments (`SegmentSig::device_chainable`)
+//!   can return their output *as a device buffer* via
+//!   [`Runtime::run_chained`], which is how the residual stream `h`/`dh`
+//!   flows between block segments without touching the host.
+//!
+//! Segment handles are interned ([`SegId`]): the engine resolves each hot
+//! segment name once and every later call is an index into a vector — no
+//! per-call `String` allocation, no double `BTreeMap` lookup for the
+//! executable cache and the stats table.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
 
 use super::artifacts::{DType, Manifest, SegmentSig};
-use super::tensor::{HostTensor, HostTensorI32};
+use super::tensor::{DeviceTensor, HostTensor, HostTensorI32};
 
-/// A training-step operand: f32 tensor, i32 tensor, or a borrowed literal.
+/// A training-step operand: host f32/i32 tensor (uploaded per call), a
+/// borrowed literal, or an already-device-resident buffer (no transfer).
 pub enum Operand<'a> {
     F32(&'a HostTensor),
     I32(&'a HostTensorI32),
     Lit(&'a Literal),
+    Buf(&'a DeviceTensor),
 }
 
 /// One compiled segment + its manifest signature.
@@ -33,15 +49,23 @@ pub struct Segment {
     client: PjRtClient,
 }
 
+/// Input buffer for one execution: freshly uploaded (owned, reclaimed on
+/// drop right after the call) or borrowed from a cache / chained output.
+enum InBuf<'a> {
+    Owned(xla::PjRtBuffer),
+    Ext(&'a xla::PjRtBuffer),
+}
+
 impl Segment {
-    /// Execute with signature checking; returns the decomposed output tuple.
+    /// Upload/borrow the operand buffers with signature checking.
     ///
-    /// Inputs are uploaded with `buffer_from_host_buffer` + `execute_b`
+    /// Host inputs go through `buffer_from_host_buffer` + `execute_b`
     /// rather than `execute`: the xla crate's `execute` leaks every input
     /// device buffer (its C shim `release()`s them and never frees —
     /// ~1 MB/step on the tiny config, OOM at experiment scale). Owning the
-    /// input `PjRtBuffer`s on the Rust side makes Drop reclaim them.
-    pub fn run(&self, operands: &[Operand]) -> Result<Vec<Literal>> {
+    /// fresh input `PjRtBuffer`s on the Rust side makes Drop reclaim them;
+    /// `Operand::Buf` inputs are borrowed and live on in their cache.
+    fn input_buffers<'a>(&self, operands: &'a [Operand<'a>]) -> Result<Vec<InBuf<'a>>> {
         if operands.len() != self.sig.operands.len() {
             bail!(
                 "segment {}: got {} operands, expected {}",
@@ -50,7 +74,7 @@ impl Segment {
                 self.sig.operands.len()
             );
         }
-        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(operands.len());
+        let mut bufs: Vec<InBuf<'a>> = Vec::with_capacity(operands.len());
         for (i, (op, sig)) in operands.iter().zip(&self.sig.operands).enumerate() {
             let buf = match op {
                 Operand::F32(t) => {
@@ -61,8 +85,10 @@ impl Segment {
                             self.name, t.shape, sig.dtype, sig.shape
                         );
                     }
-                    self.client
-                        .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)?
+                    InBuf::Owned(
+                        self.client
+                            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)?,
+                    )
                 }
                 Operand::I32(t) => {
                     if sig.dtype != DType::I32 || t.shape != sig.shape {
@@ -72,28 +98,65 @@ impl Segment {
                             self.name, t.shape, sig.dtype, sig.shape
                         );
                     }
-                    self.client
-                        .buffer_from_host_buffer::<i32>(&t.data, &t.shape, None)?
+                    InBuf::Owned(
+                        self.client
+                            .buffer_from_host_buffer::<i32>(&t.data, &t.shape, None)?,
+                    )
                 }
-                Operand::Lit(l) => self
-                    .client
-                    .buffer_from_host_literal(None, l)
-                    .with_context(|| format!("uploading literal operand {i}"))?,
+                Operand::Lit(l) => InBuf::Owned(
+                    self.client
+                        .buffer_from_host_literal(None, l)
+                        .with_context(|| format!("uploading literal operand {i}"))?,
+                ),
+                Operand::Buf(dt) => {
+                    if sig.dtype != DType::F32 || dt.shape != sig.shape {
+                        bail!(
+                            "segment {} operand {i}: shape/dtype mismatch \
+                             (got device f32 {:?}, want {:?} {:?})",
+                            self.name, dt.shape, sig.dtype, sig.shape
+                        );
+                    }
+                    InBuf::Ext(dt.buffer())
+                }
             };
             bufs.push(buf);
         }
-        let out_bufs = self
+        Ok(bufs)
+    }
+
+    fn execute(&self, operands: &[Operand]) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        let bufs = self.input_buffers(operands)?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs
+            .iter()
+            .map(|b| match b {
+                InBuf::Owned(x) => x,
+                InBuf::Ext(r) => *r,
+            })
+            .collect();
+        let out = self
             .exe
-            .execute_b::<&xla::PjRtBuffer>(&bufs.iter().collect::<Vec<_>>())
+            .execute_b::<&xla::PjRtBuffer>(&refs)
             .with_context(|| format!("executing segment {}", self.name))?;
-        drop(bufs); // reclaim input device buffers
+        drop(refs);
+        drop(bufs); // reclaim freshly-uploaded input device buffers
+        Ok(out)
+    }
+
+    /// Execute with signature checking; returns the decomposed outputs as
+    /// host literals (the tuple root is downloaded and untupled; a bare
+    /// root is downloaded directly).
+    pub fn run(&self, operands: &[Operand]) -> Result<Vec<Literal>> {
+        let out_bufs = self.execute(operands)?;
         let lit = out_bufs[0][0]
             .to_literal_sync()
             .with_context(|| format!("fetching output of {}", self.name))?;
         drop(out_bufs);
-        let parts = lit
-            .to_tuple()
-            .with_context(|| format!("untupling output of {}", self.name))?;
+        let parts = if self.sig.tuple_root {
+            lit.to_tuple()
+                .with_context(|| format!("untupling output of {}", self.name))?
+        } else {
+            vec![lit]
+        };
         if parts.len() != self.sig.outputs.len() {
             bail!(
                 "segment {}: got {} outputs, expected {}",
@@ -103,6 +166,25 @@ impl Segment {
             );
         }
         Ok(parts)
+    }
+
+    /// Execute a device-chainable segment, keeping its single output on
+    /// the device (zero host transfer on the output side).
+    pub fn run_device(&self, operands: &[Operand]) -> Result<DeviceTensor> {
+        if !self.sig.device_chainable() {
+            bail!(
+                "segment {}: not device-chainable (tuple_root={}, {} outputs)",
+                self.name,
+                self.sig.tuple_root,
+                self.sig.outputs.len()
+            );
+        }
+        let mut out_bufs = self.execute(operands)?;
+        let buf = out_bufs
+            .get_mut(0)
+            .and_then(|d| (!d.is_empty()).then(|| d.remove(0)))
+            .with_context(|| format!("segment {}: no output buffer", self.name))?;
+        Ok(DeviceTensor::wrap(buf, self.sig.outputs[0].shape.clone()))
     }
 
     /// Convenience: run and convert every output to a HostTensor using the
@@ -117,10 +199,37 @@ impl Segment {
 }
 
 /// Cumulative per-segment execution stats (the L3 profile in §Perf).
+/// Upload counters make the device-residency win observable: with the
+/// cache warm, `uploads`/`upload_bytes` scale with the *trainable* tensor
+/// set only while `buf_hits` counts operands served from device.
 #[derive(Debug, Default, Clone)]
 pub struct ExecStats {
     pub calls: u64,
     pub total_ns: u128,
+    /// Host→device operand transfers performed (F32/I32/Lit operands).
+    pub uploads: u64,
+    pub upload_bytes: u64,
+    /// Operands that were already device-resident (`Operand::Buf`).
+    pub buf_hits: u64,
+}
+
+/// Interned segment handle: index into the runtime's slot table. Resolve
+/// once (`Runtime::seg_id`), then every `run_id` call is a vector index —
+/// no `String` allocation or map lookup on the hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegId(usize);
+
+/// Output of [`Runtime::run_chained`]: the single output stayed on device,
+/// or the host literals of a tuple-rooted segment.
+pub enum ChainVal {
+    Dev(DeviceTensor),
+    Host(Vec<Literal>),
+}
+
+struct SegSlot {
+    name: String,
+    seg: Option<Rc<Segment>>,
+    stats: ExecStats,
 }
 
 /// The runtime: one PJRT CPU client + compiled segment cache.
@@ -128,8 +237,8 @@ pub struct Runtime {
     pub client: PjRtClient,
     pub manifest: Manifest,
     pub backend: String,
-    cache: RefCell<BTreeMap<String, std::rc::Rc<Segment>>>,
-    stats: RefCell<BTreeMap<String, ExecStats>>,
+    ids: RefCell<BTreeMap<String, SegId>>,
+    slots: RefCell<Vec<SegSlot>>,
 }
 
 impl Runtime {
@@ -147,16 +256,28 @@ impl Runtime {
             client,
             manifest,
             backend: backend.to_string(),
-            cache: RefCell::new(BTreeMap::new()),
-            stats: RefCell::new(BTreeMap::new()),
+            ids: RefCell::new(BTreeMap::new()),
+            slots: RefCell::new(Vec::new()),
         })
     }
 
-    /// Get (compiling + caching on first use) a segment executable.
-    pub fn segment(&self, name: &str) -> Result<std::rc::Rc<Segment>> {
-        if let Some(seg) = self.cache.borrow().get(name) {
-            return Ok(seg.clone());
+    /// Intern a segment name (no compilation; that stays lazy).
+    pub fn seg_id(&self, name: &str) -> SegId {
+        if let Some(&id) = self.ids.borrow().get(name) {
+            return id;
         }
+        let mut slots = self.slots.borrow_mut();
+        let id = SegId(slots.len());
+        slots.push(SegSlot {
+            name: name.to_string(),
+            seg: None,
+            stats: ExecStats::default(),
+        });
+        self.ids.borrow_mut().insert(name.to_string(), id);
+        id
+    }
+
+    fn compile(&self, name: &str) -> Result<Rc<Segment>> {
         let sig = self.manifest.segment(name, &self.backend)?.clone();
         let path = self.manifest.hlo_path(&sig);
         let t0 = Instant::now();
@@ -172,35 +293,95 @@ impl Runtime {
             self.backend,
             t0.elapsed().as_secs_f64()
         );
-        let seg = std::rc::Rc::new(Segment {
+        Ok(Rc::new(Segment {
             name: name.to_string(),
             sig,
             exe,
             client: self.client.clone(),
-        });
-        self.cache.borrow_mut().insert(name.to_string(), seg.clone());
+        }))
+    }
+
+    /// Get (compiling + caching on first use) a segment executable.
+    pub fn segment(&self, name: &str) -> Result<Rc<Segment>> {
+        self.segment_by_id(self.seg_id(name))
+    }
+
+    pub fn segment_by_id(&self, id: SegId) -> Result<Rc<Segment>> {
+        if let Some(seg) = &self.slots.borrow()[id.0].seg {
+            return Ok(seg.clone());
+        }
+        let name = self.slots.borrow()[id.0].name.clone();
+        let seg = self.compile(&name)?;
+        self.slots.borrow_mut()[id.0].seg = Some(seg.clone());
         Ok(seg)
+    }
+
+    fn record(&self, id: SegId, operands: &[Operand], dt_ns: u128) {
+        let mut slots = self.slots.borrow_mut();
+        let e = &mut slots[id.0].stats;
+        e.calls += 1;
+        e.total_ns += dt_ns;
+        for op in operands {
+            match op {
+                Operand::F32(t) => {
+                    e.uploads += 1;
+                    e.upload_bytes += t.bytes() as u64;
+                }
+                Operand::I32(t) => {
+                    e.uploads += 1;
+                    e.upload_bytes += t.bytes() as u64;
+                }
+                Operand::Lit(l) => {
+                    e.uploads += 1;
+                    e.upload_bytes += (l.element_count() * 4) as u64;
+                }
+                Operand::Buf(_) => e.buf_hits += 1,
+            }
+        }
+    }
+
+    /// Execute an interned segment, outputs as host literals.
+    pub fn run_id(&self, id: SegId, operands: &[Operand]) -> Result<Vec<Literal>> {
+        let seg = self.segment_by_id(id)?;
+        let t0 = Instant::now();
+        let out = seg.run(operands)?;
+        self.record(id, operands, t0.elapsed().as_nanos());
+        Ok(out)
+    }
+
+    /// Execute an interned segment, keeping a chainable output on device
+    /// when the artifact allows it (falling back to host literals for
+    /// tuple-rooted/legacy artifacts).
+    pub fn run_chained(&self, id: SegId, operands: &[Operand]) -> Result<ChainVal> {
+        let seg = self.segment_by_id(id)?;
+        let t0 = Instant::now();
+        let out = if seg.sig.device_chainable() {
+            ChainVal::Dev(seg.run_device(operands)?)
+        } else {
+            ChainVal::Host(seg.run(operands)?)
+        };
+        self.record(id, operands, t0.elapsed().as_nanos());
+        Ok(out)
     }
 
     /// Execute a segment by name, with timing stats.
     pub fn run(&self, name: &str, operands: &[Operand]) -> Result<Vec<Literal>> {
-        let seg = self.segment(name)?;
-        let t0 = Instant::now();
-        let out = seg.run(operands)?;
-        let dt = t0.elapsed().as_nanos();
-        let mut stats = self.stats.borrow_mut();
-        let e = stats.entry(name.to_string()).or_default();
-        e.calls += 1;
-        e.total_ns += dt;
-        Ok(out)
+        self.run_id(self.seg_id(name), operands)
     }
 
     pub fn stats(&self) -> BTreeMap<String, ExecStats> {
-        self.stats.borrow().clone()
+        self.slots
+            .borrow()
+            .iter()
+            .filter(|s| s.stats.calls > 0)
+            .map(|s| (s.name.clone(), s.stats.clone()))
+            .collect()
     }
 
     pub fn reset_stats(&self) {
-        self.stats.borrow_mut().clear();
+        for s in self.slots.borrow_mut().iter_mut() {
+            s.stats = ExecStats::default();
+        }
     }
 
     /// Pre-compile a list of segments (warm start before timed runs).

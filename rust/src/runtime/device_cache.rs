@@ -1,0 +1,253 @@
+//! Persistent device-buffer cache — the core of the device-resident
+//! parameter flow.
+//!
+//! One entry per parameter tensor, keyed by the caller's key type
+//! (`model::ParamKey` in the engine) and stamped with the *store
+//! generation id* of the parameter store it was uploaded from
+//! (`ModelParams::store_id`). A lookup hits only when both the key and
+//! the generation match, so a merged LoRA eval model, a CPT fork or any
+//! other `ModelParams` instance can never be served another store's
+//! bytes. In-place mutation (the optimizer update, checkpoint restore)
+//! keeps the generation — that is exactly what the strategy invalidation
+//! contract covers: `Strategy::apply` reports the keys it touched and the
+//! training loop invalidates them here, so an upload happens only when a
+//! tensor actually changed. For LISA with a frozen-majority mask that
+//! turns ~`(L-γ)/L` of all per-step weight uploads into cache hits.
+//!
+//! Each key holds up to [`MAX_GENERATIONS`] concurrent generations with
+//! LRU eviction inside the key. That is what keeps a periodic
+//! merged-model eval (LoRA: a fresh store generation every time) from
+//! evicting the warm *training* generation: the training entries are
+//! touched every step and survive; the previous eval's entries go cold
+//! and are the ones replaced.
+//!
+//! The cache is value-generic so the eviction/stamping logic is unit
+//! tested without a PJRT client; the engine instantiates it with
+//! `Rc<DeviceTensor>`.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+/// Concurrent store generations kept per key: the training store plus
+/// one eval/fork view. A third generation evicts the least-recently-used.
+pub const MAX_GENERATIONS: usize = 2;
+
+struct Entry<V> {
+    val: V,
+    /// Store-generation id the value was uploaded from.
+    src: u64,
+    bytes: u64,
+    /// Logical timestamp of the last hit/upload (LRU within the key).
+    last_use: u64,
+}
+
+/// Cumulative cache counters (reported next to `ExecStats` so upload
+/// traffic is observable per run).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub invalidations: u64,
+    pub entries: u64,
+    pub resident_bytes: u64,
+}
+
+pub struct DeviceCache<K: Ord + Copy, V> {
+    entries: BTreeMap<K, Vec<Entry<V>>>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    invalidations: u64,
+    resident_bytes: u64,
+}
+
+impl<K: Ord + Copy, V> Default for DeviceCache<K, V> {
+    fn default() -> Self {
+        DeviceCache {
+            entries: BTreeMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            invalidations: 0,
+            resident_bytes: 0,
+        }
+    }
+}
+
+impl<K: Ord + Copy, V: Clone> DeviceCache<K, V> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Serve the cached value for `(key, src)` or upload a fresh one via
+    /// `make` (which returns the value plus its device byte size). Other
+    /// generations of the same key are left resident (up to
+    /// [`MAX_GENERATIONS`]); beyond that the least-recently-used one is
+    /// released.
+    pub fn get_or_upload(
+        &mut self,
+        key: K,
+        src: u64,
+        make: impl FnOnce() -> Result<(V, u64)>,
+    ) -> Result<V> {
+        self.tick += 1;
+        if let Some(list) = self.entries.get_mut(&key) {
+            if let Some(e) = list.iter_mut().find(|e| e.src == src) {
+                e.last_use = self.tick;
+                self.hits += 1;
+                return Ok(e.val.clone());
+            }
+        }
+        self.misses += 1;
+        let (val, bytes) = make()?;
+        let tick = self.tick;
+        let list = self.entries.entry(key).or_default();
+        list.push(Entry { val: val.clone(), src, bytes, last_use: tick });
+        self.resident_bytes += bytes;
+        if list.len() > MAX_GENERATIONS {
+            let (lru, _) = list
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_use)
+                .expect("non-empty list");
+            let old = list.remove(lru);
+            self.resident_bytes -= old.bytes;
+        }
+        Ok(val)
+    }
+
+    /// Drop every generation of `key` (the tensor was mutated in place);
+    /// the next lookup re-uploads. Returns whether anything was resident.
+    ///
+    /// All generations go, not just the mutating store's: identity-
+    /// sharing views (`ModelParams::eval_view`) rely on byte equality
+    /// with their source, so once the source moved nothing under this
+    /// key is trustworthy.
+    pub fn invalidate(&mut self, key: &K) -> bool {
+        match self.entries.remove(key) {
+            Some(list) => {
+                self.invalidations += list.len() as u64;
+                self.resident_bytes -= list.iter().map(|e| e.bytes).sum::<u64>();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop everything (checkpoint restore, store swap).
+    pub fn invalidate_all(&mut self) {
+        self.invalidations += self.len() as u64;
+        self.entries.clear();
+        self.resident_bytes = 0;
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_bytes
+    }
+
+    /// Total resident entries across all keys and generations.
+    pub fn len(&self) -> usize {
+        self.entries.values().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            invalidations: self.invalidations,
+            entries: self.len() as u64,
+            resident_bytes: self.resident_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn up(v: &str, b: u64) -> impl FnOnce() -> Result<(String, u64)> + '_ {
+        move || Ok((v.to_string(), b))
+    }
+
+    #[test]
+    fn hit_after_upload_miss_after_invalidate() {
+        let mut c: DeviceCache<u32, String> = DeviceCache::new();
+        assert_eq!(c.get_or_upload(1, 10, up("a", 4)).unwrap(), "a");
+        // second lookup: hit, the closure must not run
+        assert_eq!(
+            c.get_or_upload(1, 10, || panic!("must not re-upload")).unwrap(),
+            "a"
+        );
+        assert!(c.invalidate(&1));
+        assert!(!c.invalidate(&1), "double invalidate is a no-op");
+        assert_eq!(c.get_or_upload(1, 10, up("b", 4)).unwrap(), "b");
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.invalidations), (1, 2, 1));
+    }
+
+    #[test]
+    fn generations_coexist_and_never_serve_stale() {
+        let mut c: DeviceCache<u32, String> = DeviceCache::new();
+        c.get_or_upload(7, 100, up("train", 8)).unwrap();
+        // same key, different store (e.g. merged LoRA eval params):
+        // uploaded alongside, never served the training bytes
+        assert_eq!(c.get_or_upload(7, 101, up("merged", 8)).unwrap(), "merged");
+        // and back: the training generation survived the eval
+        assert_eq!(
+            c.get_or_upload(7, 100, || panic!("train gen must survive")).unwrap(),
+            "train"
+        );
+        assert_eq!(c.stats().entries, 2);
+        assert_eq!(c.resident_bytes(), 16);
+    }
+
+    #[test]
+    fn third_generation_evicts_the_coldest() {
+        let mut c: DeviceCache<u32, String> = DeviceCache::new();
+        c.get_or_upload(7, 1, up("train", 8)).unwrap();
+        c.get_or_upload(7, 2, up("eval-1", 8)).unwrap();
+        // the training generation is touched again (every step does)...
+        c.get_or_upload(7, 1, || panic!("hit expected")).unwrap();
+        // ...so the next eval generation evicts eval-1, not train
+        c.get_or_upload(7, 3, up("eval-2", 8)).unwrap();
+        assert_eq!(c.stats().entries, 2);
+        assert_eq!(c.resident_bytes(), 16);
+        c.get_or_upload(7, 1, || panic!("train gen must still be resident"))
+            .unwrap();
+        // eval-1 is gone: looking it up re-uploads
+        assert_eq!(c.get_or_upload(7, 2, up("eval-1b", 8)).unwrap(), "eval-1b");
+    }
+
+    #[test]
+    fn invalidate_drops_every_generation_of_the_key() {
+        let mut c: DeviceCache<u32, String> = DeviceCache::new();
+        c.get_or_upload(1, 10, up("a", 100)).unwrap();
+        c.get_or_upload(1, 11, up("b", 50)).unwrap();
+        c.get_or_upload(2, 10, up("c", 7)).unwrap();
+        assert_eq!(c.resident_bytes(), 157);
+        assert!(c.invalidate(&1));
+        assert_eq!(c.resident_bytes(), 7);
+        assert_eq!(c.stats().invalidations, 2);
+        c.invalidate_all();
+        assert_eq!(c.resident_bytes(), 0);
+        assert!(c.is_empty());
+        assert_eq!(c.stats().invalidations, 3);
+    }
+
+    #[test]
+    fn upload_error_leaves_cache_unchanged() {
+        let mut c: DeviceCache<u32, String> = DeviceCache::new();
+        c.get_or_upload(1, 1, up("a", 4)).unwrap();
+        let err = c.get_or_upload(2, 1, || anyhow::bail!("device OOM"));
+        assert!(err.is_err());
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.resident_bytes(), 4);
+        // the failed key stays a miss, the good key stays a hit
+        assert_eq!(c.get_or_upload(1, 1, || panic!("hit expected")).unwrap(), "a");
+    }
+}

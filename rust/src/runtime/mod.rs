@@ -1,10 +1,17 @@
 //! PJRT runtime layer: load AOT HLO-text artifacts and execute them from
 //! the Rust training hot path (Python is never on this path).
+//!
+//! Data-movement contract (DESIGN.md §8): parameters are uploaded once and
+//! cached as device buffers ([`DeviceCache`]); chained activations flow
+//! between segments as [`DeviceTensor`]s via [`ChainVal`]; the host only
+//! ever downloads what it consumes (loss scalars, gradients).
 
 pub mod artifacts;
 pub mod client;
+pub mod device_cache;
 pub mod tensor;
 
 pub use artifacts::{DType, Manifest, SegmentSig, TensorSig};
-pub use client::{ExecStats, Operand, Runtime, Segment};
-pub use tensor::{numel, HostTensor, HostTensorI32};
+pub use client::{ChainVal, ExecStats, Operand, Runtime, SegId, Segment};
+pub use device_cache::{CacheStats, DeviceCache};
+pub use tensor::{numel, DeviceTensor, HostTensor, HostTensorI32};

@@ -6,8 +6,10 @@
 //! boundaries. Buffers are reused across steps by the engine; conversion is
 //! a memcpy, never a reshape/copy chain.
 
+use std::rc::Rc;
+
 use anyhow::{bail, Context, Result};
-use xla::{ElementType, Literal};
+use xla::{ElementType, Literal, PjRtClient};
 
 /// Dense float32 host tensor.
 #[derive(Debug, Clone, PartialEq)]
@@ -110,6 +112,65 @@ impl HostTensor {
 
     pub fn l2_norm(&self) -> f64 {
         crate::util::stats::l2_norm(&self.data)
+    }
+}
+
+/// A shaped f32 tensor resident on the PJRT device.
+///
+/// Holds the underlying `PjRtBuffer` behind an `Rc` so the device cache
+/// and in-flight operand lists can share one upload; dropping the last
+/// clone releases the device memory. This is the currency of the
+/// device-resident hot path: weights live here between steps
+/// (`runtime::DeviceCache`) and the residual stream `h`/`dh` flows between
+/// segments as `Operand::Buf` without a host round-trip.
+#[derive(Clone)]
+pub struct DeviceTensor {
+    pub shape: Vec<usize>,
+    buf: Rc<xla::PjRtBuffer>,
+}
+
+impl std::fmt::Debug for DeviceTensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "DeviceTensor{:?}", self.shape)
+    }
+}
+
+impl DeviceTensor {
+    /// Upload a host tensor (one memcpy host→device).
+    pub fn from_host(client: &PjRtClient, t: &HostTensor) -> Result<DeviceTensor> {
+        let buf = client
+            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+            .context("uploading host tensor to device")?;
+        Ok(DeviceTensor { shape: t.shape.clone(), buf: Rc::new(buf) })
+    }
+
+    /// Adopt an execution output buffer (no transfer at all).
+    pub(crate) fn wrap(buf: xla::PjRtBuffer, shape: Vec<usize>) -> DeviceTensor {
+        DeviceTensor { shape, buf: Rc::new(buf) }
+    }
+
+    pub fn buffer(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
+
+    pub fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    /// Download to a host literal (the only host transfer the device flow
+    /// ever pays for a chained tensor — and only when the host asks).
+    pub fn to_literal(&self) -> Result<Literal> {
+        self.buf
+            .to_literal_sync()
+            .context("downloading device tensor")
+    }
+
+    pub fn to_host(&self) -> Result<HostTensor> {
+        HostTensor::from_literal(&self.to_literal()?, &self.shape)
     }
 }
 

@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::engine::{Batch, Engine, TrainMask};
+use crate::engine::{Batch, Engine, Touched, TrainMask};
 use crate::lisa::{LisaConfig, LisaScheduler};
 use crate::model::checkpoint::Section;
 use crate::model::ModelParams;
@@ -71,22 +71,21 @@ impl Strategy for LisaStrategy {
         params: &mut ModelParams,
         grad_accum: usize,
         max_grad_norm: Option<f64>,
-    ) -> Result<()> {
-        self.path.apply_finished(engine, params, grad_accum, max_grad_norm);
-        Ok(())
+    ) -> Result<Touched> {
+        Ok(self.path.apply_finished(engine, params, grad_accum, max_grad_norm))
     }
 
     fn state_bytes(&self) -> u64 {
         self.path.opt.state_bytes()
     }
 
-    fn save_state(&self, sec: &mut Section) -> Result<()> {
+    fn save_state<'a>(&'a self, sec: &mut Section<'a>) -> Result<()> {
         self.sched.save_state(sec);
         self.path.save_state(sec);
         Ok(())
     }
 
-    fn load_state(&mut self, sec: &mut Section, params: &ModelParams) -> Result<()> {
+    fn load_state(&mut self, sec: &mut Section<'_>, params: &ModelParams) -> Result<()> {
         self.sched.load_state(sec)?;
         self.path.load_state(sec, &super::param_shape_oracle(params))
     }

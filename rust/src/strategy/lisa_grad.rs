@@ -11,7 +11,7 @@
 
 use anyhow::Result;
 
-use crate::engine::{Batch, Engine, Grads, TrainMask};
+use crate::engine::{Batch, Engine, Grads, Touched, TrainMask};
 use crate::lisa::sample_weighted_distinct;
 use crate::model::checkpoint::Section;
 use crate::model::ModelParams;
@@ -126,19 +126,21 @@ impl Strategy for LisaGradStrategy {
         params: &mut ModelParams,
         grad_accum: usize,
         max_grad_norm: Option<f64>,
-    ) -> Result<()> {
-        if let Some(grads) = self.path.finish(grad_accum, max_grad_norm) {
-            self.observe(&grads);
-            self.path.apply_grads(&grads, engine, params);
+    ) -> Result<Touched> {
+        match self.path.finish(grad_accum, max_grad_norm) {
+            Some(grads) => {
+                self.observe(&grads);
+                Ok(self.path.apply_grads(&grads, engine, params))
+            }
+            None => Ok(Touched::None),
         }
-        Ok(())
     }
 
     fn state_bytes(&self) -> u64 {
         self.path.opt.state_bytes()
     }
 
-    fn save_state(&self, sec: &mut Section) -> Result<()> {
+    fn save_state<'a>(&'a self, sec: &mut Section<'a>) -> Result<()> {
         sec.put_rng("sampler.rng", &self.rng);
         sec.put_u64s(
             "sampler.current",
@@ -150,7 +152,7 @@ impl Strategy for LisaGradStrategy {
         Ok(())
     }
 
-    fn load_state(&mut self, sec: &mut Section, params: &ModelParams) -> Result<()> {
+    fn load_state(&mut self, sec: &mut Section<'_>, params: &ModelParams) -> Result<()> {
         use anyhow::ensure;
         let n_layers = self.ema.len();
         self.rng = sec.take_rng("sampler.rng")?;

@@ -3,7 +3,7 @@
 
 use anyhow::Result;
 
-use crate::engine::{Batch, Engine, MemCategory, TrainMask};
+use crate::engine::{Batch, Engine, MemCategory, Touched, TrainMask};
 use crate::lora::{self, LoraGrads, LoraState};
 use crate::model::checkpoint::Section;
 use crate::model::ModelParams;
@@ -74,14 +74,16 @@ impl Strategy for LoraStrategy {
         _params: &mut ModelParams,
         grad_accum: usize,
         _max_grad_norm: Option<f64>,
-    ) -> Result<()> {
-        let Some(mut grads) = self.acc.take() else { return Ok(()) };
+    ) -> Result<Touched> {
+        let Some(mut grads) = self.acc.take() else { return Ok(Touched::None) };
         if grad_accum > 1 {
             lora::lora_grads_scale(&mut grads, 1.0 / grad_accum as f32);
         }
         lora::apply_lora_grads(&mut self.opt, &mut self.lora, &grads);
         engine.meter.set(MemCategory::OptimState, self.opt.state_bytes());
-        Ok(())
+        // Base weights stay frozen (their cached device buffers survive
+        // forever under LoRA); only the adapters were mutated.
+        Ok(Touched::Keys(self.lora.touched_keys()))
     }
 
     fn state_bytes(&self) -> u64 {
@@ -98,7 +100,7 @@ impl Strategy for LoraStrategy {
         self.eval_params(base).layer_weight_norms()
     }
 
-    fn save_state(&self, sec: &mut Section) -> Result<()> {
+    fn save_state<'a>(&'a self, sec: &mut Section<'a>) -> Result<()> {
         debug_assert!(self.acc.is_none(), "checkpoint mid-accumulation");
         for (l, layer) in self.lora.adapters.iter().enumerate() {
             for (i, t) in layer.iter().enumerate() {
@@ -109,7 +111,7 @@ impl Strategy for LoraStrategy {
         Ok(())
     }
 
-    fn load_state(&mut self, sec: &mut Section, _params: &ModelParams) -> Result<()> {
+    fn load_state(&mut self, sec: &mut Section<'_>, _params: &ModelParams) -> Result<()> {
         use anyhow::ensure;
         for (l, layer) in self.lora.adapters.iter_mut().enumerate() {
             for (i, t) in layer.iter_mut().enumerate() {

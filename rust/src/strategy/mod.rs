@@ -33,7 +33,7 @@ pub use self::lora::LoraStrategy;
 
 use anyhow::{anyhow, ensure, Result};
 
-use crate::engine::{Batch, Engine, Grads, MemCategory, TrainMask};
+use crate::engine::{Batch, Engine, Grads, MemCategory, Touched, TrainMask};
 use crate::lisa::{LayerDist, LisaConfig};
 use crate::model::checkpoint::Section;
 use crate::model::ModelParams;
@@ -79,21 +79,31 @@ pub trait Strategy {
     /// Consume the accumulated gradients: mean over `grad_accum`
     /// microbatches, clip to `max_grad_norm` where the method does so, and
     /// apply the optimizer update to `params` (or to internal adapters).
+    ///
+    /// Returns the parameter keys the update mutated — the device-cache
+    /// invalidation contract (DESIGN.md §8). Under-reporting makes the
+    /// engine serve stale device buffers; over-reporting only costs
+    /// re-uploads. Every mutation path must be covered: the optimizer
+    /// update here, plus anything exotic a strategy does to `params`.
     fn apply(
         &mut self,
         engine: &mut Engine<'_>,
         params: &mut ModelParams,
         grad_accum: usize,
         max_grad_norm: Option<f64>,
-    ) -> Result<()>;
+    ) -> Result<Touched>;
 
     /// Bytes currently held by optimizer state (the Table-1 observable).
     fn state_bytes(&self) -> u64;
 
     /// Parameters to evaluate: the base model for in-place methods, the
-    /// merged model for adapter methods (LoRA's deploy move).
+    /// merged model for adapter methods (LoRA's deploy move). The default
+    /// is an `eval_view` — same bytes, same store generation — so
+    /// periodic evals reuse the engine's warm device cache instead of
+    /// evicting it; strategies whose eval weights differ from `base`
+    /// (LoRA) must return a real clone (fresh generation).
     fn eval_params(&self, base: &ModelParams) -> ModelParams {
-        base.clone()
+        base.eval_view()
     }
 
     /// Layerwise norms of the *effective* weights (Fig 2 observable).
@@ -107,8 +117,10 @@ pub trait Strategy {
     /// strategy of the same spec continues the run bit-for-bit
     /// (`rust/tests/it_resume.rs` is the conformance suite). Called only
     /// at optimizer-step boundaries, so per-step accumulators are always
-    /// empty. Default: stateless (the vanilla baseline).
-    fn save_state(&self, _sec: &mut Section) -> Result<()> {
+    /// empty. Tensor-sized state (moments, adapters) is *borrowed* into
+    /// the section, so saving costs no copy. Default: stateless (the
+    /// vanilla baseline).
+    fn save_state<'a>(&'a self, _sec: &mut Section<'a>) -> Result<()> {
         Ok(())
     }
 
@@ -119,7 +131,7 @@ pub trait Strategy {
     /// every entry it wrote; the session errors on leftovers, so a
     /// checkpoint from a different method/config fails loudly instead of
     /// resuming wrong. Default: stateless.
-    fn load_state(&mut self, _sec: &mut Section, _params: &ModelParams) -> Result<()> {
+    fn load_state(&mut self, _sec: &mut Section<'_>, _params: &ModelParams) -> Result<()> {
         Ok(())
     }
 }
@@ -203,21 +215,31 @@ impl GradPath {
     }
 
     /// Apply a finished gradient set through the optimizer + refresh the
-    /// meter.
-    pub fn apply_grads(&mut self, grads: &Grads, engine: &mut Engine<'_>, params: &mut ModelParams) {
+    /// meter. Returns the mutated keys for device-cache invalidation.
+    pub fn apply_grads(
+        &mut self,
+        grads: &Grads,
+        engine: &mut Engine<'_>,
+        params: &mut ModelParams,
+    ) -> Touched {
         let rt = engine.rt;
         self.opt.apply(params, grads, &rt.manifest.block_params);
         engine.meter.set(MemCategory::OptimState, self.opt.state_bytes());
+        Touched::from_grads(grads)
     }
 
     /// Serialize the owned optimizer (the accumulator never persists —
     /// checkpoints happen at step boundaries where it is empty).
-    pub fn save_state(&self, sec: &mut Section) {
+    pub fn save_state<'a>(&'a self, sec: &mut Section<'a>) {
         debug_assert!(self.accum.is_empty(), "checkpoint mid-accumulation");
         self.opt.save_state(sec);
     }
 
-    pub fn load_state(&mut self, sec: &mut Section, shape: crate::opt::ShapeFn<'_>) -> Result<()> {
+    pub fn load_state(
+        &mut self,
+        sec: &mut Section<'_>,
+        shape: crate::opt::ShapeFn<'_>,
+    ) -> Result<()> {
         self.accum = GradAccum::default();
         self.opt.load_state(sec, shape)
     }
@@ -230,9 +252,10 @@ impl GradPath {
         params: &mut ModelParams,
         grad_accum: usize,
         max_grad_norm: Option<f64>,
-    ) {
-        if let Some(grads) = self.finish(grad_accum, max_grad_norm) {
-            self.apply_grads(&grads, engine, params);
+    ) -> Touched {
+        match self.finish(grad_accum, max_grad_norm) {
+            Some(grads) => self.apply_grads(&grads, engine, params),
+            None => Touched::None,
         }
     }
 }

@@ -173,12 +173,16 @@ impl<'rt> TrainSession<'rt> {
                 self.strategy
                     .accumulate_step(&mut self.engine, &self.params, &batch, &mask)?;
         }
-        self.strategy.apply(
+        // The strategy reports which parameter tensors its update mutated;
+        // the engine drops exactly those device buffers, so next step's
+        // uploads scale with the trainable subset (DESIGN.md §8).
+        let touched = self.strategy.apply(
             &mut self.engine,
             &mut self.params,
             self.cfg.grad_accum,
             self.cfg.max_grad_norm,
         )?;
+        self.engine.invalidate(&touched);
         Ok(mean_loss / self.cfg.grad_accum as f32)
     }
 
@@ -375,9 +379,11 @@ impl<'rt> TrainSession<'rt> {
         self.engine.bwd_skipped = eng.take_u64("bwd_skipped")?;
         let peak = eng.take_u64("meter.peak")?;
         let by_cat = eng.take_u64s("meter.peak_by_cat")?;
+        // `<=`: checkpoints written before a category existed carry a
+        // prefix of the canonical order (ALL only ever appends).
         ensure!(
-            by_cat.len() == crate::engine::MemoryMeter::ALL.len(),
-            "meter peak blob has {} categories, expected {}",
+            by_cat.len() <= crate::engine::MemoryMeter::ALL.len(),
+            "meter peak blob has {} categories, expected at most {}",
             by_cat.len(),
             crate::engine::MemoryMeter::ALL.len()
         );
@@ -391,6 +397,9 @@ impl<'rt> TrainSession<'rt> {
             sections.len(),
             sections.iter().map(|s| s.name.clone()).take(4).collect::<Vec<_>>()
         );
+        // Model weights and strategy state were rewritten in place: every
+        // cached device buffer is now stale.
+        self.engine.invalidate_all();
         Ok(next_step)
     }
 }

@@ -139,6 +139,59 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+// ---------------------------------------------------------------------------
+// Machine-readable output (BENCH_step.json)
+// ---------------------------------------------------------------------------
+
+use super::json::Json;
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("median_ns", Json::num(self.median_ns)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("p95_ns", Json::num(self.p95_ns)),
+            ("stddev_ns", Json::num(self.stddev_ns)),
+            ("iters", Json::num(self.iters as f64)),
+        ];
+        if let Some(e) = self.elements {
+            pairs.push(("elements", Json::num(e as f64)));
+            if let Some(tp) = self.throughput() {
+                pairs.push(("elements_per_sec", Json::num(tp)));
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Serialize a bench run to the `lisa-bench-v1` JSON schema (written as
+/// `BENCH_step.json` at the repo root by `cargo bench`, consumed by the
+/// perf-trajectory tooling and CI's bench smoke job).
+pub fn results_to_json(results: &[BenchResult], quick: bool, note: &str) -> Json {
+    let groups = Json::Obj(
+        results
+            .iter()
+            .map(|r| (r.name.clone(), r.to_json()))
+            .collect(),
+    );
+    Json::obj(vec![
+        ("schema", Json::str("lisa-bench-v1")),
+        ("quick", Json::Bool(quick)),
+        ("note", Json::str(note)),
+        ("groups", groups),
+    ])
+}
+
+/// Write the bench JSON to `path` (best-effort caller decides the path).
+pub fn write_json(
+    path: &std::path::Path,
+    results: &[BenchResult],
+    quick: bool,
+    note: &str,
+) -> std::io::Result<()> {
+    std::fs::write(path, format!("{}\n", results_to_json(results, quick, note)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,5 +224,21 @@ mod tests {
         assert!(fmt_ns(1500.0).contains("µs"));
         assert!(fmt_ns(2.5e6).contains("ms"));
         assert!(fmt_ns(3.2e9).contains(" s"));
+    }
+
+    #[test]
+    fn json_schema_roundtrips() {
+        let b = Bench::quick();
+        let r1 = b.run_with_elements("step/x", 100, || 1u8);
+        let r2 = b.run("host/y", || 2u8);
+        let j = results_to_json(&[r1, r2], true, "unit test");
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.path("schema").unwrap().as_str(), Some("lisa-bench-v1"));
+        assert_eq!(parsed.path("quick").unwrap().as_bool(), Some(true));
+        let g = parsed.path("groups").unwrap();
+        let step = g.get("step/x").unwrap();
+        assert!(step.get("median_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(step.get("elements").unwrap().as_usize(), Some(100));
+        assert!(g.get("host/y").unwrap().get("elements").is_none());
     }
 }

@@ -1,0 +1,247 @@
+//! Device-resident flow conformance (artifact-gated, like `it_train.rs`):
+//!
+//! * the device-cached execution path must reproduce the host-roundtrip
+//!   path **bit for bit** — loss curve, gradients-as-applied (via final
+//!   params) and eval params — for every registered strategy;
+//! * cache invalidation must be airtight: resume-from-checkpoint and the
+//!   LoRA `eval_params` merge must never be served stale device buffers;
+//! * with the cache warm, weight uploads must scale with the *trainable*
+//!   tensor set only (the LISA frozen-majority win the tentpole is for).
+
+use std::path::{Path, PathBuf};
+
+use lisa::data::{corpus, encode_sft, DataLoader, Tokenizer};
+use lisa::engine::Engine;
+use lisa::model::{checkpoint, ModelParams};
+use lisa::runtime::Runtime;
+use lisa::strategy::StrategySpec;
+use lisa::train::{TrainConfig, TrainSession};
+use lisa::util::rng::Rng;
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+fn have() -> bool {
+    artifacts().join("manifest.json").exists()
+}
+
+fn make_loader(rt: &Runtime) -> DataLoader {
+    let m = &rt.manifest;
+    let samples = corpus::gen_instruction_corpus(96, 19);
+    let tok = Tokenizer::build(&corpus::sample_texts(&samples), m.vocab);
+    let enc: Vec<_> = samples.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
+    DataLoader::new(enc, m.batch, m.seq, 5)
+}
+
+fn cfg() -> TrainConfig {
+    TrainConfig {
+        steps: 8,
+        lr: 3e-3,
+        warmup: 3,
+        grad_accum: 2, // exercise within-step buffer reuse across microbatches
+        log_every: 0,
+        ..Default::default()
+    }
+}
+
+fn specs() -> Vec<StrategySpec> {
+    vec![
+        StrategySpec::ft(),
+        StrategySpec::lisa(2, 3),
+        StrategySpec::lisa_fixed(2, 3),
+        StrategySpec::lisa_grad(2, 3),
+        StrategySpec::lora(),
+        StrategySpec::galore(4).with("update-proj-gap", 4),
+    ]
+}
+
+struct RunOut {
+    losses: Vec<f32>,
+    params: Vec<(String, Vec<f32>)>,
+    eval_params: Vec<(String, Vec<f32>)>,
+}
+
+fn snapshot(p: &ModelParams) -> Vec<(String, Vec<f32>)> {
+    p.iter().map(|(k, t)| (k.name(), t.data.clone())).collect()
+}
+
+fn run(spec: &StrategySpec, device_flow: bool) -> RunOut {
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    let mut dl = make_loader(&rt);
+    let mut sess = TrainSession::new(&rt, spec, cfg()).unwrap();
+    sess.engine.device_flow = device_flow;
+    let res = sess.run(&mut dl).unwrap();
+    RunOut {
+        losses: res.loss_curve.iter().map(|&(_, l)| l).collect(),
+        params: snapshot(&sess.params),
+        eval_params: snapshot(&sess.eval_params()),
+    }
+}
+
+fn assert_params_eq(a: &[(String, Vec<f32>)], b: &[(String, Vec<f32>)], what: &str, arm: &str) {
+    assert_eq!(a.len(), b.len(), "[{arm}] {what}: tensor count");
+    for ((na, da), (nb, db)) in a.iter().zip(b) {
+        assert_eq!(na, nb, "[{arm}] {what}: tensor order");
+        let identical = da.len() == db.len()
+            && da.iter().zip(db).all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(
+            identical,
+            "[{arm}] {what}: tensor '{na}' differs between device and host paths"
+        );
+    }
+}
+
+#[test]
+fn device_flow_reproduces_host_path_bit_for_bit() {
+    if !have() {
+        return;
+    }
+    for spec in specs() {
+        let arm = spec.name.clone();
+        let dev = run(&spec, true);
+        let host = run(&spec, false);
+        assert_eq!(dev.losses.len(), host.losses.len(), "[{arm}] curve length");
+        for (i, (a, b)) in dev.losses.iter().zip(&host.losses).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "[{arm}] loss diverged at step {i}: device {a} vs host {b}"
+            );
+        }
+        assert_params_eq(&dev.params, &host.params, "final params", &arm);
+        assert_params_eq(&dev.eval_params, &host.eval_params, "eval params", &arm);
+    }
+}
+
+#[test]
+fn resume_from_checkpoint_never_serves_stale_buffers() {
+    if !have() {
+        return;
+    }
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    let mut dl = make_loader(&rt);
+    let batch = dl.next_batch();
+
+    // Engine A warms its device cache on params_a...
+    let params_a = ModelParams::init(&rt.manifest, &mut Rng::new(5));
+    let params_b = ModelParams::init(&rt.manifest, &mut Rng::new(99));
+    let mut eng = Engine::new(&rt);
+    let loss_a = eng.forward_loss(&params_a, &batch).unwrap();
+
+    // ...then the weights are rewritten *in place* (exactly what
+    // checkpoint resume does) and the cache is invalidated, as
+    // `TrainSession::resume_checkpoint` does.
+    let mut params = params_a;
+    let mut sec = checkpoint::model_section(&params_b);
+    checkpoint::load_model_section(&mut sec, &mut params).unwrap();
+    eng.invalidate_all();
+    let loss_after = eng.forward_loss(&params, &batch).unwrap();
+
+    // Reference: a completely fresh engine on the same weights.
+    let mut fresh = Engine::new(&rt);
+    let loss_fresh = fresh.forward_loss(&params, &batch).unwrap();
+    assert!(
+        loss_after.to_bits() == loss_fresh.to_bits(),
+        "post-restore loss {loss_after} != fresh-engine loss {loss_fresh} — stale device buffers"
+    );
+    assert!(
+        loss_after.to_bits() != loss_a.to_bits(),
+        "restore changed every weight; identical loss means the old buffers were served"
+    );
+}
+
+#[test]
+fn lora_eval_params_never_serve_stale_buffers() {
+    if !have() {
+        return;
+    }
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    let mut dl = make_loader(&rt);
+    let mut sess = TrainSession::new(&rt, &StrategySpec::lora(), cfg()).unwrap();
+    for step in 0..3 {
+        sess.step(step, &mut dl).unwrap();
+    }
+    // The merged eval view is a different parameter store; evaluating it
+    // through the *training* engine (whose cache is full of frozen base
+    // weights under the same keys) must equal a fresh engine's answer.
+    let merged = sess.eval_params();
+    let batch = dl.next_batch();
+    let through_train_engine = sess.engine.forward_loss(&merged, &batch).unwrap();
+    let mut fresh = Engine::new(&rt);
+    let through_fresh_engine = fresh.forward_loss(&merged, &batch).unwrap();
+    assert!(
+        through_train_engine.to_bits() == through_fresh_engine.to_bits(),
+        "merged-LoRA eval through the training engine served stale base buffers \
+         ({through_train_engine} vs {through_fresh_engine})"
+    );
+    // and the base model itself still evaluates unperturbed afterwards
+    let base_loss = sess.engine.forward_loss(&sess.params, &batch).unwrap();
+    let fresh_base = fresh.forward_loss(&sess.params, &batch).unwrap();
+    assert!(base_loss.to_bits() == fresh_base.to_bits());
+}
+
+#[test]
+fn warm_cache_uploads_scale_with_trainable_tensors_only() {
+    if !have() {
+        return;
+    }
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    let m = rt.manifest.clone();
+    let gamma = 1usize;
+    let n_block_tensors = m.block_params.len();
+    let mut dl = make_loader(&rt);
+    // long period so steps 0 and 1 share one mask
+    let spec = StrategySpec::lisa(gamma, 100);
+    let mut sess = TrainSession::new(
+        &rt,
+        &spec,
+        TrainConfig { steps: 0, lr: 1e-3, grad_accum: 1, log_every: 0, ..Default::default() },
+    )
+    .unwrap();
+    assert!(sess.engine.device_flow, "device flow must be the default");
+
+    // Cold step: every parameter tensor is uploaded into the cache once.
+    sess.step(0, &mut dl).unwrap();
+    let cold = sess.engine.device_cache_stats();
+    assert_eq!(
+        cold.misses as usize,
+        m.n_layers * n_block_tensors + 4,
+        "cold step must upload every weight tensor exactly once (+emb/pos/gf/wh)"
+    );
+
+    // Warm step, same mask: only what the optimizer touched re-uploads —
+    // γ blocks' tensors plus embed/head. ~((L-γ)/L) of block-weight
+    // uploads are gone, which is the tentpole's whole point.
+    rt.reset_stats();
+    sess.step(1, &mut dl).unwrap();
+    let warm = sess.engine.device_cache_stats();
+    let warm_misses = warm.misses - cold.misses;
+    assert_eq!(
+        warm_misses as usize,
+        gamma * n_block_tensors + 4,
+        "warm-step uploads must scale with the trainable subset only"
+    );
+    assert!(
+        warm.hits > cold.hits,
+        "frozen-block weights must be served from the device cache"
+    );
+
+    // Per-segment ExecStats: with chainable artifacts, block_fwd moves no
+    // host data at all on a warm step (weights cached, h chained);
+    // with legacy tuple-rooted artifacts the h literal is its only upload.
+    let stats = rt.stats();
+    let bf = stats.get("block_fwd").expect("block_fwd ran");
+    let chainable = m.segment("block_fwd", "pallas").unwrap().device_chainable();
+    if chainable {
+        assert_eq!(
+            bf.uploads, 0,
+            "warm block_fwd must not upload anything (weights cached, h chained)"
+        );
+    } else {
+        assert!(
+            bf.uploads <= m.n_layers as u64,
+            "warm block_fwd may upload at most the chained h per call"
+        );
+    }
+    assert!(bf.buf_hits > 0, "block_fwd operands must be device-served");
+}

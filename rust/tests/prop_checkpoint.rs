@@ -19,7 +19,7 @@ fn tdir() -> PathBuf {
 }
 
 /// A random but valid v2 checkpoint: 1–3 sections mixing every dtype.
-fn random_sections(rng: &mut Rng) -> Vec<Section> {
+fn random_sections(rng: &mut Rng) -> Vec<Section<'static>> {
     let n_sections = 1 + rng.below(3);
     (0..n_sections)
         .map(|s| {
@@ -31,7 +31,7 @@ fn random_sections(rng: &mut Rng) -> Vec<Section> {
                         let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(6)).collect();
                         let mut t = HostTensor::zeros(&shape);
                         rng.fill_normal(&mut t.data, 1.0);
-                        sec.put_tensor(&format!("t{e}"), &t);
+                        sec.put_tensor_owned(&format!("t{e}"), t);
                     }
                     1 => {
                         let n = 1 + rng.below(8);
