@@ -62,6 +62,11 @@ def segment_registry(cfg: ModelConfig, backend: str):
     kw = dict(cfg=cfg, backend=backend)
     n_opt = cfg.d_model * cfg.d_ff  # largest single block tensor
     flat = _spec((n_opt,))
+    # decode ABI (DESIGN.md §9): [B,1] token/position columns, the per-layer
+    # packed K/V block and the whole-model packed decode state
+    tok1 = _spec((b, 1), jnp.int32)
+    kv = _spec((b, 2 * t, d))
+    state = _spec((b, model.decode_state_rows(cfg), d))
 
     return {
         "embed_fwd": (functools.partial(model.embed_fwd, cfg=cfg),
@@ -90,6 +95,17 @@ def segment_registry(cfg: ModelConfig, backend: str):
             lambda p, g, m, vv, hy: adamw_update(p, g, m, vv, hy,
                                                  interpret=True),
             [flat, flat, flat, flat, _spec((HYPER_LEN,))]),
+        # serving: batched KV-cached decode (ABI v1, DESIGN.md §9). All
+        # four are single-output -> bare-rooted -> device-chainable, which
+        # is what keeps the cache state resident across decode steps.
+        "prefill_kv": (functools.partial(model.prefill_kv, **kw),
+                       [h3, bp[0], bp[2], bp[3]]),  # h, g1, wk, wv
+        "pack_state": (functools.partial(model.pack_state, cfg=cfg),
+                       [kv] * cfg.n_layers),
+        "decode_step": (functools.partial(model.decode_step, **kw),
+                        [tok1, tok1, state, emb, pos, *(bp * cfg.n_layers)]),
+        "decode_logits": (functools.partial(model.decode_logits, **kw),
+                          [state, gf, wh]),
     }
 
 
@@ -162,6 +178,14 @@ def export_config(cfg: ModelConfig, out_root: str, backends, force=False,
                 "outputs": _sig(outs),
                 "tuple_root": tuple_root,
             }
+    # Decode-ABI version (DESIGN.md §9): claimed only when every decode
+    # segment is really in the manifest for some backend, so partial
+    # exports can't advertise an ABI they don't carry. Loaders treat a
+    # missing/0 field as "no decode" — legacy artifact dirs keep loading.
+    decode_names = ("prefill_kv", "pack_state", "decode_step", "decode_logits")
+    manifest["decode_abi"] = 1 if any(
+        all(f"{n}.{be}" in manifest["segments"] for n in decode_names)
+        for be in ("pallas", "jnp")) else 0
     with open(os.path.join(out_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1, sort_keys=True)
     return manifest

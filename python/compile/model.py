@@ -195,6 +195,107 @@ def head_logits(h, gf, wh, *, cfg: ModelConfig, backend: str):
 
 
 # ---------------------------------------------------------------------------
+# Serving segments: batched KV-cached decode (DESIGN.md §9)
+#
+# The decode state of a whole model is ONE tensor of shape
+# ``[B, L*2T + 1, D]``: for layer l, rows ``l*2T .. l*2T+T`` hold the K
+# cache and rows ``l*2T+T .. (l+1)*2T`` the V cache (head-merged [T, D]
+# layout), and the final row carries the last computed hidden state. A
+# single tensor because the PJRT wrapper returns tuple-rooted outputs as
+# one fused host literal — packing is what lets the cache chain between
+# ``decode_step`` executions as a bare-rooted device buffer and never
+# touch the host (the same ``tuple_root: false`` contract the residual
+# stream uses).
+#
+# Attention inside ``decode_step`` is plain masked softmax over the cache
+# (query length 1 — the flash kernel's causal [T, T] tiling does not
+# apply); everything else routes through the backend primitives so the
+# pallas/jnp pair stays the ablation axis.
+# ---------------------------------------------------------------------------
+
+
+def decode_state_rows(cfg: ModelConfig) -> int:
+    """Second dim of the packed decode state: L*2T cache rows + 1 h row."""
+    return cfg.n_layers * 2 * cfg.seq + 1
+
+
+def prefill_kv(h, g1, wk, wv, *, cfg: ModelConfig, backend: str):
+    """Per-layer prompt K/V: h [B,T,D] -> packed [B, 2T, D] (K rows then V).
+
+    Runs next to ``block_fwd`` during prefill (same block input h), so the
+    cached K/V are bit-identical to what the full forward computes
+    internally for the prompt positions.
+    """
+    x = _norm(h, g1, cfg, backend)
+    return jnp.concatenate([x @ wk, x @ wv], axis=1)
+
+
+def pack_state(*kvs, cfg: ModelConfig):
+    """Assemble the initial decode state from the L per-layer ``prefill_kv``
+    outputs: -> [B, L*2T+1, D]. The final h row starts zeroed; every
+    ``decode_step`` rewrites it."""
+    assert len(kvs) == cfg.n_layers
+    b = kvs[0].shape[0]
+    h_row = jnp.zeros((b, 1, cfg.d_model), jnp.float32)
+    return jnp.concatenate([*kvs, h_row], axis=1)
+
+
+def _decode_attend(q, kc, vc, mask, cfg: ModelConfig):
+    """Single-position attention over the cache. q [B,1,D], kc/vc [B,T,D],
+    mask [B,T] (True = attendable) -> [B,1,D]."""
+    b, t, _ = kc.shape
+    hd = cfg.head_dim
+    qh = q.reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    kh = kc.reshape(b, t, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    vh = vc.reshape(b, t, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) * (1.0 / (hd ** 0.5))
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vh)
+    return o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.d_model)
+
+
+def decode_step(tok, pidx, state, emb, pos, *bps, cfg: ModelConfig,
+                backend: str):
+    """One cached decode step for the whole model.
+
+    tok/pidx: [B,1] i32 — the token each row just appended and its
+    position; state: [B, L*2T+1, D] (see layout above). Embeds tok at
+    pidx, then per layer writes the new K/V into the cache at pidx
+    (one-hot blend — a fixed-shape scatter) and attends the single query
+    over positions ``t <= pidx``. Returns the updated state with the
+    final row holding the new last hidden state. Exactly one execution
+    per generated token.
+    """
+    t_max = cfg.seq
+    h = emb[tok] + pos[pidx]  # [B,1,D]
+    onehot = jax.nn.one_hot(pidx[:, 0], t_max, dtype=jnp.float32)  # [B,T]
+    mask = jax.lax.iota(jnp.int32, t_max)[None, :] <= pidx  # [B,T]
+    rows = []
+    for l in range(cfg.n_layers):
+        g1, wq, wk, wv, wo, g2, w1, w2 = bps[8 * l:8 * (l + 1)]
+        kc = state[:, l * 2 * t_max:l * 2 * t_max + t_max, :]
+        vc = state[:, l * 2 * t_max + t_max:(l + 1) * 2 * t_max, :]
+        x = _norm(h, g1, cfg, backend)
+        q, k_new, v_new = x @ wq, x @ wk, x @ wv  # [B,1,D]
+        keep = 1.0 - onehot[:, :, None]
+        kc = kc * keep + k_new * onehot[:, :, None]
+        vc = vc * keep + v_new * onehot[:, :, None]
+        h1 = h + _decode_attend(q, kc, vc, mask, cfg) @ wo
+        y = _norm(h1, g2, cfg, backend)
+        h = h1 + jax.nn.gelu(y @ w1) @ w2
+        rows.extend((kc, vc))
+    return jnp.concatenate([*rows, h], axis=1)
+
+
+def decode_logits(state, gf, wh, *, cfg: ModelConfig, backend: str):
+    """Next-token logits from the state's final h row: -> [B, 1, V]."""
+    h = state[:, -1:, :]
+    x = _norm(h, gf, cfg, backend)
+    return x @ wh
+
+
+# ---------------------------------------------------------------------------
 # Whole-model reference (tests + the pytest oracle for segment composition)
 # ---------------------------------------------------------------------------
 

@@ -23,6 +23,7 @@ def test_registry_covers_all_segments():
         "embed_fwd", "embed_bwd", "block_fwd", "block_bwd_full",
         "block_bwd_x", "block_fwd_lora", "block_bwd_lora", "head_fwd_bwd",
         "head_fwd_bwd_x", "head_loss", "head_logits", "adamw_update",
+        "prefill_kv", "pack_state", "decode_step", "decode_logits",
     }
     assert names == expected
 
@@ -91,6 +92,35 @@ def test_orphaned_hlo_without_manifest_entry_is_relowered(tmp_path, capsys):
     assert "[ok]" in out and "[skip]" not in out
     man = json.loads(mpath.read_text())
     assert man["segments"]["block_fwd.jnp"]["tuple_root"] is False
+
+
+def test_decode_segments_are_bare_rooted_and_version_the_manifest(tmp_path):
+    decode = {"prefill_kv", "pack_state", "decode_step", "decode_logits"}
+    aot.export_config(UNIT, str(tmp_path), ["jnp"], segments=decode)
+    man = json.loads((tmp_path / "unitaot" / "manifest.json").read_text())
+    assert man["decode_abi"] == 1
+    t, d, L = UNIT.seq, UNIT.d_model, UNIT.n_layers
+    ds = man["segments"]["decode_step.jnp"]
+    # single-output -> bare root -> device-chainable cache state
+    assert ds["tuple_root"] is False
+    assert ds["outputs"] == [
+        {"shape": [UNIT.batch, L * 2 * t + 1, d], "dtype": "float32"}]
+    # tok, pidx, state, emb, pos, then L x 8 block params
+    assert len(ds["operands"]) == 5 + 8 * L
+    assert ds["operands"][0] == {"shape": [UNIT.batch, 1], "dtype": "int32"}
+    kv = man["segments"]["prefill_kv.jnp"]
+    assert kv["tuple_root"] is False
+    assert kv["outputs"][0]["shape"] == [UNIT.batch, 2 * t, d]
+    assert man["segments"]["decode_logits.jnp"]["outputs"][0]["shape"] == \
+        [UNIT.batch, 1, UNIT.vocab]
+
+
+def test_partial_export_without_decode_segments_claims_no_decode_abi(tmp_path):
+    # a manifest that doesn't carry the full decode segment set must not
+    # advertise the ABI (the Rust gate falls back to the legacy path)
+    aot.export_config(UNIT, str(tmp_path), ["jnp"], segments={"embed_fwd"})
+    man = json.loads((tmp_path / "unitaot" / "manifest.json").read_text())
+    assert man["decode_abi"] == 0
 
 
 def test_reexport_merges_manifest(tmp_path):

@@ -1,0 +1,219 @@
+"""Decode-segment correctness: the batched KV-cached decode path
+(prefill_kv -> pack_state -> decode_step* -> decode_logits) must reproduce
+the full-forward greedy path token-for-token on a mixed-length batch —
+the same contract `rust/tests/it_decode.rs` enforces end-to-end through
+the compiled artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import ModelConfig
+
+CFG = ModelConfig("unitdec", d_model=16, n_layers=2, n_heads=2, vocab=32,
+                  seq=12, batch=3, lora_rank=4, block_q=8, block_k=8,
+                  block_n=8, xent_block_n=4)
+
+PAD, EOS = 0, 2
+
+
+def rand(key, shape, std=0.05):
+    return std * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def make_params(key0=0):
+    bp = []
+    for l in range(CFG.n_layers):
+        layer = []
+        for i, (name, shape) in enumerate(CFG.block_param_shapes()):
+            if name.startswith("g"):
+                layer.append(jnp.ones(shape, jnp.float32))
+            else:
+                layer.append(rand(key0 + 10 * l + i, shape, std=0.3))
+        bp.append(tuple(layer))
+    emb = (rand(100, (CFG.vocab, CFG.d_model), 0.3),
+           rand(101, (CFG.seq, CFG.d_model), 0.15))
+    head = (jnp.ones((CFG.d_model,), jnp.float32),
+            rand(102, (CFG.d_model, CFG.vocab), 0.3))
+    return emb, bp, head
+
+
+def full_logits(tokens, emb, bp, head, backend):
+    """The legacy path: embed -> block_fwd^L -> head_logits. [B,T,V]."""
+    h = model.embed_fwd(tokens, *emb, cfg=CFG)
+    for p in bp:
+        h = model.block_fwd(h, *p, cfg=CFG, backend=backend)
+    return model.head_logits(h, *head, cfg=CFG, backend=backend)
+
+
+def legacy_greedy(prompt, emb, bp, head, max_new, backend):
+    """Mirror of rust `greedy_complete_legacy`: one row, O(T) full forwards."""
+    seq = list(prompt)
+    out = []
+    for _ in range(max_new):
+        if len(seq) >= CFG.seq:
+            break
+        row = seq + [PAD] * (CFG.seq - len(seq))
+        tokens = jnp.array([row] * CFG.batch, jnp.int32)
+        logits = full_logits(tokens, emb, bp, head, backend)
+        nxt = int(jnp.argmax(logits[0, len(seq) - 1]))
+        if nxt == EOS:
+            break
+        seq.append(nxt)
+        out.append(nxt)
+    return out
+
+
+def cached_greedy_batch(prompts, emb, bp, head, max_new, backend):
+    """The serving path over one [B] batch of mixed-length prompts."""
+    t_max = CFG.seq
+    rows = [list(p) for p in prompts]
+    assert len(rows) == CFG.batch and all(len(r) < t_max for r in rows)
+    tokens = jnp.array(
+        [r + [PAD] * (t_max - len(r)) for r in rows], jnp.int32)
+
+    # prefill: block_fwd chain + per-layer prefill_kv on the block inputs
+    h = model.embed_fwd(tokens, *emb, cfg=CFG)
+    kvs = []
+    for p in bp:
+        g1, _, wk, wv = p[0], p[1], p[2], p[3]
+        kvs.append(model.prefill_kv(h, g1, wk, wv, cfg=CFG, backend=backend))
+        h = model.block_fwd(h, *p, cfg=CFG, backend=backend)
+    logits = model.head_logits(h, *head, cfg=CFG, backend=backend)
+    state = model.pack_state(*kvs, cfg=CFG)
+
+    outs = [[] for _ in rows]
+    alive = []
+    for b, r in enumerate(rows):
+        nxt = int(jnp.argmax(logits[b, len(r) - 1]))
+        if nxt == EOS or max_new == 0:
+            alive.append(False)
+            continue
+        r.append(nxt)
+        outs[b].append(nxt)
+        alive.append(len(outs[b]) < max_new and len(r) < t_max)
+
+    flat_bp = [t for p in bp for t in p]
+    steps = 0
+    while any(alive):
+        tok = jnp.array([[r[-1]] for r in rows], jnp.int32)
+        pidx = jnp.array([[len(r) - 1] for r in rows], jnp.int32)
+        state = model.decode_step(tok, pidx, state, *emb, *flat_bp,
+                                  cfg=CFG, backend=backend)
+        lg = model.decode_logits(state, *head, cfg=CFG, backend=backend)
+        steps += 1
+        for b, r in enumerate(rows):
+            if not alive[b]:
+                continue
+            nxt = int(jnp.argmax(lg[b, 0]))
+            if nxt == EOS:
+                alive[b] = False
+                continue
+            r.append(nxt)
+            outs[b].append(nxt)
+            alive[b] = len(outs[b]) < max_new and len(r) < t_max
+    return outs, steps
+
+
+def test_shapes():
+    emb, bp, head = make_params()
+    t = CFG.seq
+    h = rand(1, (CFG.batch, t, CFG.d_model), 1.0)
+    kv = model.prefill_kv(h, bp[0][0], bp[0][2], bp[0][3], cfg=CFG,
+                          backend="jnp")
+    assert kv.shape == (CFG.batch, 2 * t, CFG.d_model)
+    state = model.pack_state(*[kv] * CFG.n_layers, cfg=CFG)
+    assert state.shape == (CFG.batch, model.decode_state_rows(CFG),
+                           CFG.d_model)
+    tok = jnp.zeros((CFG.batch, 1), jnp.int32)
+    flat_bp = [x for p in bp for x in p]
+    state2 = model.decode_step(tok, tok, state, *emb, *flat_bp, cfg=CFG,
+                               backend="jnp")
+    assert state2.shape == state.shape
+    lg = model.decode_logits(state2, *head, cfg=CFG, backend="jnp")
+    assert lg.shape == (CFG.batch, 1, CFG.vocab)
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+def test_prefill_kv_matches_block_internals():
+    """K/V from prefill_kv == the k/v a full block computes for the same h."""
+    from compile.kernels import ref
+    emb, bp, _ = make_params()
+    h = rand(2, (CFG.batch, CFG.seq, CFG.d_model), 1.0)
+    g1, _, wk, wv = bp[0][0], bp[0][1], bp[0][2], bp[0][3]
+    kv = model.prefill_kv(h, g1, wk, wv, cfg=CFG, backend="jnp")
+    x = ref.rmsnorm(h, g1)
+    np.testing.assert_allclose(kv[:, :CFG.seq], x @ wk, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(kv[:, CFG.seq:], x @ wv, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_decode_step_matches_full_forward_logits(backend):
+    """After prefill + one decode_step, decode_logits must equal the full
+    forward's logits at the new position (numerically, not just argmax)."""
+    emb, bp, head = make_params()
+    t_max = CFG.seq
+    lens = [5, 3, 7]
+    rows = [[1] + [(7 * i + b) % (CFG.vocab - 5) + 5 for i in range(n - 1)]
+            for b, n in enumerate(lens)]
+    tokens = jnp.array([r + [PAD] * (t_max - len(r)) for r in rows],
+                       jnp.int32)
+
+    h = model.embed_fwd(tokens, *emb, cfg=CFG)
+    kvs = []
+    for p in bp:
+        kvs.append(model.prefill_kv(h, p[0], p[2], p[3], cfg=CFG,
+                                    backend=backend))
+        h = model.block_fwd(h, *p, cfg=CFG, backend=backend)
+    state = model.pack_state(*kvs, cfg=CFG)
+
+    # append one fixed token per row, decode it through the cache
+    new_tok = [9, 11, 13]
+    flat_bp = [x for p in bp for x in p]
+    tok = jnp.array([[v] for v in new_tok], jnp.int32)
+    pidx = jnp.array([[n] for n in lens], jnp.int32)
+    state = model.decode_step(tok, pidx, state, *emb, *flat_bp, cfg=CFG,
+                              backend=backend)
+    lg = model.decode_logits(state, *head, cfg=CFG, backend=backend)
+
+    # reference: full forward over the extended rows
+    for b, r in enumerate(rows):
+        r.append(new_tok[b])
+    tokens2 = jnp.array([r + [PAD] * (t_max - len(r)) for r in rows],
+                        jnp.int32)
+    ref_lg = full_logits(tokens2, emb, bp, head, backend)
+    for b, n in enumerate(lens):
+        np.testing.assert_allclose(
+            lg[b, 0], ref_lg[b, n], rtol=2e-4, atol=2e-5,
+            err_msg=f"row {b} (backend {backend})")
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_cached_greedy_matches_legacy_token_for_token(backend):
+    emb, bp, head = make_params(key0=4)
+    prompts = [[1, 6, 7], [1, 9, 10, 11, 12], [1, 5]]
+    max_new = 6
+    got, steps = cached_greedy_batch(prompts, emb, bp, head, max_new, backend)
+    assert steps <= max_new
+    for b, p in enumerate(prompts):
+        want = legacy_greedy(p, emb, bp, head, max_new, backend)
+        assert got[b] == want, f"row {b} diverged (backend {backend})"
+
+
+def test_cache_write_is_idempotent():
+    """Re-running decode_step with the same (tok, pidx) — the frozen-row
+    convention for finished rows in a live batch — must not drift."""
+    emb, bp, head = make_params()
+    kv = rand(20, (CFG.batch, 2 * CFG.seq, CFG.d_model), 0.3)
+    state = model.pack_state(*[kv] * CFG.n_layers, cfg=CFG)
+    flat_bp = [x for p in bp for x in p]
+    tok = jnp.array([[5], [6], [7]], jnp.int32)
+    pidx = jnp.array([[2], [4], [1]], jnp.int32)
+    s1 = model.decode_step(tok, pidx, state, *emb, *flat_bp, cfg=CFG,
+                           backend="jnp")
+    s2 = model.decode_step(tok, pidx, s1, *emb, *flat_bp, cfg=CFG,
+                           backend="jnp")
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))

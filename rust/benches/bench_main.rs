@@ -19,7 +19,10 @@
 
 use std::path::Path;
 
+use lisa::data::tokenizer::{EOS, PAD};
 use lisa::data::{corpus, encode_sft, DataLoader, Tokenizer};
+use lisa::engine::{DecodeSession, Engine};
+use lisa::eval::generate;
 use lisa::lisa::{LisaConfig, LisaScheduler};
 use lisa::model::{ModelParams, ParamKey};
 use lisa::opt::{adamw::AdamHp, AdamW, Galore, GaloreHp, StatePolicy};
@@ -240,6 +243,71 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // ---------------- serving: decode throughput (tokens/sec) -------------
+    // legacy-vs-cached before/after pair: `decode/legacy-*` re-runs a full
+    // L-block forward per emitted token, `decode/cached-*` pays one
+    // decode_step per token over the device-resident KV state.
+    if art.join("tiny/manifest.json").exists() {
+        let rt = Runtime::load(&art.join("tiny"), "pallas")?;
+        let m = rt.manifest.clone();
+        let samples = corpus::gen_instruction_corpus(64, 3);
+        let tok = Tokenizer::build(&corpus::sample_texts(&samples), m.vocab);
+        let params = ModelParams::init(&m, &mut Rng::new(7));
+        let prompts: Vec<String> = samples.iter().take(4).map(|s| s.prompt.clone()).collect();
+        let refs: Vec<&str> = prompts.iter().map(|s| s.as_str()).collect();
+        let max_new = 8;
+
+        let mut eng = Engine::new(&rt);
+        // token count for the throughput annotation (greedy = deterministic)
+        let legacy_tokens: usize = refs
+            .iter()
+            .map(|p| {
+                generate::greedy_complete_legacy(&mut eng, &params, &tok, p, max_new)
+                    .unwrap()
+                    .tokens
+                    .len()
+            })
+            .sum();
+        results.push(b.run_with_elements(
+            "decode/legacy-tiny",
+            legacy_tokens.max(1) as u64,
+            || {
+                for p in &refs {
+                    black_box(
+                        generate::greedy_complete_legacy(&mut eng, &params, &tok, p, max_new)
+                            .unwrap(),
+                    );
+                }
+            },
+        ));
+
+        if m.supports_decode("pallas") {
+            let enc: Vec<Vec<i32>> =
+                refs.iter().map(|p| generate::encode_prompt(&tok, p)).collect();
+            let mut eng = Engine::new(&rt);
+            let cached_tokens: usize = {
+                let mut sess = DecodeSession::new(&mut eng, &params)?;
+                sess.greedy(&enc, max_new, EOS, PAD)?
+                    .iter()
+                    .map(|c| c.tokens.len())
+                    .sum()
+            };
+            results.push(b.run_with_elements(
+                "decode/cached-tiny",
+                cached_tokens.max(1) as u64,
+                || {
+                    let mut sess = DecodeSession::new(&mut eng, &params).unwrap();
+                    black_box(sess.greedy(&enc, max_new, EOS, PAD).unwrap());
+                },
+            ));
+        } else {
+            println!(
+                "decode/cached-tiny skipped: artifacts lack the decode ABI — \
+                 re-export with python/compile/aot.py"
+            );
+        }
+    }
+
     println!("\n=== bench results ===");
     for r in &results {
         println!("{}", r.report());
@@ -250,7 +318,8 @@ fn main() -> anyhow::Result<()> {
     // when the parent is not writable.
     let quick = std::env::var("LISA_BENCH_QUICK").is_ok();
     let note = "generated by `cargo bench` (LISA_BENCH_QUICK=1 for the smoke pass); \
-                step/*-hostpath arms run the pre-device-cache host-roundtrip schedule";
+                step/*-hostpath arms run the pre-device-cache host-roundtrip schedule; \
+                decode/{legacy,cached}-* are the serving before/after pair (tokens/sec)";
     let target = Path::new("../BENCH_step.json");
     let path = if lisa::util::bench::write_json(target, &results, quick, note).is_ok() {
         target

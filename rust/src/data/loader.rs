@@ -157,9 +157,40 @@ pub struct DataLoader {
 
 impl DataLoader {
     pub fn new(data: Vec<Encoded>, batch: usize, seq: usize, seed: u64) -> Self {
-        assert!(!data.is_empty(), "empty dataset");
+        Self::try_new(data, batch, seq, seed).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Build a loader, dropping examples with zero supervised positions
+    /// (e.g. an SFT sample whose prompt fills the whole window after
+    /// truncation). Such examples contribute nothing to the masked loss,
+    /// and a batch made entirely of them turns the masked-mean loss
+    /// degenerate (NaN under an unclamped denominator) — which then
+    /// poisons the optimizer moments for good. Drops are logged; a
+    /// dataset with nothing left is an error.
+    pub fn try_new(
+        data: Vec<Encoded>,
+        batch: usize,
+        seq: usize,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        use anyhow::ensure;
+        ensure!(!data.is_empty(), "empty dataset");
+        let n_before = data.len();
+        let data: Vec<Encoded> = data.into_iter().filter(|e| e.n_supervised() > 0).collect();
+        let dropped = n_before - data.len();
+        if dropped > 0 {
+            log::warn!(
+                "dataloader: dropped {dropped}/{n_before} examples with zero supervised \
+                 tokens (prompt fills the whole {seq}-token window?)"
+            );
+        }
+        ensure!(
+            !data.is_empty(),
+            "all {n_before} examples have zero supervised tokens — nothing to learn \
+             from (prompts fill the whole {seq}-token window?)"
+        );
         for e in &data {
-            assert_eq!(e.tokens.len(), seq, "encoded seq length mismatch");
+            ensure!(e.tokens.len() == seq, "encoded seq length mismatch");
         }
         let mut dl = DataLoader {
             order: (0..data.len()).collect(),
@@ -171,7 +202,7 @@ impl DataLoader {
             epochs: 0,
         };
         dl.rng.shuffle(&mut dl.order);
-        dl
+        Ok(dl)
     }
 
     pub fn len(&self) -> usize {
@@ -276,7 +307,8 @@ impl DataLoader {
         ensure!(
             order.len() == self.data.len(),
             "loader order length {} != dataset size {} — resumed with a \
-             different corpus?",
+             different corpus, or a checkpoint written before the loader \
+             filtered zero-supervision examples out of this dataset?",
             order.len(),
             self.data.len()
         );
@@ -418,6 +450,47 @@ mod tests {
         dl.save_state(&mut sec);
         let mut smaller = DataLoader::new(enc[..enc.len() - 2].to_vec(), 4, 32, 9);
         assert!(smaller.load_state(&mut sec).is_err());
+    }
+
+    #[test]
+    fn loader_drops_zero_supervision_examples_with_survivors() {
+        let (tok, samples) = setup();
+        let mut enc: Vec<Encoded> =
+            samples.iter().take(6).map(|s| encode_sft(&tok, s, 32)).collect();
+        let mut dead = enc[0].clone();
+        dead.targets = vec![-1; 32];
+        enc.push(dead);
+        let dl = DataLoader::new(enc, 2, 32, 1);
+        assert_eq!(dl.len(), 6, "the all-masked example must be filtered out");
+        assert!(dl.examples().iter().all(|e| e.n_supervised() > 0));
+    }
+
+    #[test]
+    fn loader_errors_when_nothing_supervised_survives() {
+        let (tok, samples) = setup();
+        let mut e = encode_sft(&tok, &samples[0], 32);
+        e.targets = vec![-1; 32];
+        let err = DataLoader::try_new(vec![e], 2, 32, 1).unwrap_err();
+        assert!(err.to_string().contains("zero supervised"), "got: {err}");
+    }
+
+    #[test]
+    fn window_filling_prompt_encodes_unsupervised_and_is_filtered() {
+        // the real-world shape of the bug: an SFT prompt that fills the
+        // whole window after truncation leaves no supervised position
+        let (tok, samples) = setup();
+        let long = crate::data::Sample {
+            prompt: "what is 1 plus 2 ".repeat(16),
+            response: "answer : 3".to_string(),
+            category: samples[0].category,
+            answer: None,
+            fact_id: None,
+        };
+        let e = encode_sft(&tok, &long, 16);
+        assert_eq!(e.n_supervised(), 0);
+        let good = encode_sft(&tok, &samples[0], 16);
+        let dl = DataLoader::new(vec![e, good], 1, 16, 1);
+        assert_eq!(dl.len(), 1);
     }
 
     #[test]

@@ -1,7 +1,10 @@
-//! Layer-granular training engine + memory accounting.
+//! Layer-granular training engine + memory accounting + the batched
+//! KV-cached decode session (serving).
 
+pub mod decode;
 pub mod memory;
 pub mod trainer;
 
+pub use decode::{Completion, DecodeSession, StopReason};
 pub use memory::{MemCategory, MemoryMeter};
 pub use trainer::{Batch, Engine, Grads, StepOutput, Touched, TrainMask};

@@ -274,6 +274,13 @@ pub(crate) struct SegIds {
     pub head_fwd_bwd_x: SegId,
     pub head_loss: SegId,
     pub head_logits: SegId,
+    // serving: batched KV-cached decode (interned unconditionally; they
+    // compile lazily, so legacy artifact dirs without the decode ABI load
+    // fine and only error if the cached path is actually requested)
+    pub prefill_kv: SegId,
+    pub pack_state: SegId,
+    pub decode_step: SegId,
+    pub decode_logits: SegId,
 }
 
 /// The engine: schedules segment executables over the runtime.
@@ -318,6 +325,10 @@ impl<'rt> Engine<'rt> {
                 head_fwd_bwd_x: rt.seg_id("head_fwd_bwd_x"),
                 head_loss: rt.seg_id("head_loss"),
                 head_logits: rt.seg_id("head_logits"),
+                prefill_kv: rt.seg_id("prefill_kv"),
+                pack_state: rt.seg_id("pack_state"),
+                decode_step: rt.seg_id("decode_step"),
+                decode_logits: rt.seg_id("decode_logits"),
             },
         }
     }
@@ -428,7 +439,7 @@ impl<'rt> Engine<'rt> {
 
     // -- execution helpers -------------------------------------------------
 
-    fn h_shape(&self) -> Vec<usize> {
+    pub(crate) fn h_shape(&self) -> Vec<usize> {
         let m = &self.rt.manifest;
         vec![m.batch, m.seq, m.d_model]
     }

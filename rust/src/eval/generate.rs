@@ -1,22 +1,72 @@
 //! Greedy autoregressive generation through the segment executables —
 //! makes trained checkpoints *usable*, and powers the qualitative samples
-//! in the e2e run.
+//! and generative metrics in the experiment drivers.
 //!
-//! The artifacts are fixed-shape `[B, T]`, so generation teacher-forces the
-//! prompt into row 0, then repeatedly runs the full forward and appends the
-//! argmax at the last filled position. O(T) forwards per sample — fine for
-//! the short answers our corpora use (the serving-optimized path would
-//! export a KV-cached decode segment; noted as future work in DESIGN.md).
+//! Two paths exist (DESIGN.md §9):
+//!
+//! * **batched KV-cached decode** (the default wherever the artifacts
+//!   carry the decode ABI): [`DecodeSession`] fills every row of the
+//!   `[B, T]` artifacts with a different prompt and pays one
+//!   `decode_step` execution per generated token;
+//! * **legacy full-forward** ([`greedy_complete_legacy`]): O(T) full
+//!   forwards per sample through row 0 only. Kept as the differential
+//!   baseline (`rust/tests/it_decode.rs`, the `decode/*` bench arms) and
+//!   as the fallback for legacy artifact dirs; force it with
+//!   `LISA_DECODE=legacy`.
+//!
+//! Prompts longer than the artifact window are truncated to `T - 1`
+//! tokens — loudly: a warning is logged and the returned [`Completion`]
+//! carries `prompt_truncated` so callers can tell a near-empty answer
+//! from a confident one.
 
 use anyhow::Result;
 
 use crate::data::tokenizer::{Tokenizer, BOS, EOS, PAD, SEP};
-use crate::engine::Engine;
+use crate::engine::{Completion, DecodeSession, Engine, StopReason};
 use crate::model::ModelParams;
 use crate::runtime::HostTensorI32;
 
+/// `<bos> prompt <sep>` — the decode-time input convention (matches
+/// `data::encode_sft`'s prompt half).
+pub fn encode_prompt(tok: &Tokenizer, prompt: &str) -> Vec<i32> {
+    let mut seq = vec![BOS];
+    seq.extend(tok.encode(prompt));
+    seq.push(SEP);
+    seq
+}
+
+/// True when [`greedy_complete_batch`] will take the batched KV-cached
+/// path for this engine (the single source of truth for the routing —
+/// reporting code should ask this instead of re-deriving the gate).
+pub fn uses_cached_decode(eng: &Engine) -> bool {
+    let forced = std::env::var("LISA_DECODE").map(|v| v == "legacy").unwrap_or(false);
+    !forced && DecodeSession::supported(eng)
+}
+
+/// Greedily complete a batch of prompts, one [`Completion`] per prompt in
+/// order. Batched KV-cached decode when the artifacts support it, legacy
+/// full-forward otherwise (or under `LISA_DECODE=legacy`).
+pub fn greedy_complete_batch(
+    eng: &mut Engine,
+    params: &ModelParams,
+    tok: &Tokenizer,
+    prompts: &[&str],
+    max_new: usize,
+) -> Result<Vec<Completion>> {
+    if !uses_cached_decode(eng) {
+        return prompts
+            .iter()
+            .map(|p| greedy_complete_legacy(eng, params, tok, p, max_new))
+            .collect();
+    }
+    let encoded: Vec<Vec<i32>> = prompts.iter().map(|p| encode_prompt(tok, p)).collect();
+    let mut sess = DecodeSession::new(eng, params)?;
+    sess.greedy(&encoded, max_new, EOS, PAD)
+}
+
 /// Greedily complete `prompt`, returning the generated token ids (response
-/// only, `<eos>`-terminated or length-capped).
+/// only, `<eos>`-terminated or length-capped). Thin wrapper over
+/// [`greedy_complete_batch`].
 pub fn greedy_complete(
     eng: &mut Engine,
     params: &ModelParams,
@@ -24,18 +74,31 @@ pub fn greedy_complete(
     prompt: &str,
     max_new: usize,
 ) -> Result<Vec<i32>> {
+    let mut out = greedy_complete_batch(eng, params, tok, &[prompt], max_new)?;
+    Ok(out.pop().expect("one completion per prompt").tokens)
+}
+
+/// The pre-decode-ABI path: teacher-force the prompt into batch row 0,
+/// re-run the full forward per emitted token. One full L-block forward
+/// per token — the baseline the cached path is measured against.
+pub fn greedy_complete_legacy(
+    eng: &mut Engine,
+    params: &ModelParams,
+    tok: &Tokenizer,
+    prompt: &str,
+    max_new: usize,
+) -> Result<Completion> {
     let m = eng.rt.manifest.clone();
-    let mut seq = vec![BOS];
-    seq.extend(tok.encode(prompt));
-    seq.push(SEP);
-    if seq.len() >= m.seq {
-        seq.truncate(m.seq - 1);
-    }
-    let prompt_len = seq.len();
+    let mut seq = encode_prompt(tok, prompt);
+    // same clipping policy + warn as the cached planner (shared helper,
+    // so the prompt_truncated flags the parity suite compares can't drift)
+    let prompt_truncated = crate::engine::decode::clip_prompt(&mut seq, m.seq);
     let mut out = Vec::new();
+    let mut stop = StopReason::MaxNew;
 
     for _ in 0..max_new {
         if seq.len() >= m.seq {
+            stop = StopReason::WindowFull;
             break;
         }
         let mut tokens = vec![PAD; m.batch * m.seq];
@@ -43,24 +106,19 @@ pub fn greedy_complete(
         let t = HostTensorI32::from_vec(&[m.batch, m.seq], tokens);
         let logits = eng.logits(params, &t)?; // [B, T, V]
         let pos = seq.len() - 1;
-        let row = &logits.data[pos * m.vocab..(pos + 1) * m.vocab];
-        let mut best = 0usize;
-        let mut bv = f32::NEG_INFINITY;
-        for (i, &x) in row.iter().enumerate() {
-            if x > bv {
-                bv = x;
-                best = i;
-            }
-        }
-        let id = best as i32;
+        // shared first-of-ties argmax — tie-breaking identical to the
+        // cached path by construction
+        let id = crate::engine::decode::argmax(
+            &logits.data[pos * m.vocab..(pos + 1) * m.vocab],
+        );
         if id == EOS {
+            stop = StopReason::Eos;
             break;
         }
         seq.push(id);
         out.push(id);
     }
-    let _ = prompt_len;
-    Ok(out)
+    Ok(Completion { tokens: out, prompt_truncated, stop })
 }
 
 /// Convenience: decode the completion to text.
@@ -100,5 +158,25 @@ mod tests {
         // determinism
         let ids2 = greedy_complete(&mut eng, &params, &tok, "what is 12 plus 10 ?", 6).unwrap();
         assert_eq!(ids, ids2);
+    }
+
+    #[test]
+    fn legacy_path_reports_truncation() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let rt = Runtime::load(&dir, "pallas").unwrap();
+        let m = rt.manifest.clone();
+        let params = ModelParams::init(&m, &mut Rng::new(1));
+        let samples = crate::data::corpus::gen_instruction_corpus(32, 1);
+        let tok = Tokenizer::build(&crate::data::corpus::sample_texts(&samples), m.vocab);
+        let mut eng = Engine::new(&rt);
+        let long = "what is 1 plus 2 ".repeat(m.seq); // way past the window
+        let c = greedy_complete_legacy(&mut eng, &params, &tok, &long, 4).unwrap();
+        assert!(c.prompt_truncated);
+        let short = greedy_complete_legacy(&mut eng, &params, &tok, "what is 1 plus 2 ?", 4)
+            .unwrap();
+        assert!(!short.prompt_truncated);
     }
 }

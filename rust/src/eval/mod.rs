@@ -136,6 +136,44 @@ pub fn evaluate(eng: &mut Engine, params: &ModelParams, dl: &DataLoader) -> Resu
     })
 }
 
+/// Generative exact match: greedy-decode each sample's prompt through the
+/// serving path ([`generate::greedy_complete_batch`] — batched KV-cached
+/// decode wherever the artifacts support it) and score the completion
+/// against the encoded reference response. Unlike
+/// [`EvalReport::exact_match`] (teacher-forced), the model must produce
+/// the whole answer on its own — the deployment-shaped metric.
+pub fn generative_exact_match(
+    eng: &mut Engine,
+    params: &ModelParams,
+    tok: &Tokenizer,
+    samples: &[crate::data::Sample],
+    max_new: usize,
+) -> Result<f64> {
+    Ok(generative_completions(eng, params, tok, samples, max_new)?.0)
+}
+
+/// [`generative_exact_match`] plus the decoded completions themselves, so
+/// callers that also want to display samples don't pay a second decode.
+pub fn generative_completions(
+    eng: &mut Engine,
+    params: &ModelParams,
+    tok: &Tokenizer,
+    samples: &[crate::data::Sample],
+    max_new: usize,
+) -> Result<(f64, Vec<crate::engine::Completion>)> {
+    if samples.is_empty() {
+        return Ok((0.0, Vec::new()));
+    }
+    let prompts: Vec<&str> = samples.iter().map(|s| s.prompt.as_str()).collect();
+    let outs = generate::greedy_complete_batch(eng, params, tok, &prompts, max_new)?;
+    let em = outs
+        .iter()
+        .zip(samples)
+        .filter(|(c, s)| c.tokens == tok.encode(&s.response))
+        .count();
+    Ok((em as f64 / samples.len() as f64, outs))
+}
+
 /// Exact match at an early-exit depth (Table 12: DoLa-style evaluation).
 pub fn exact_match_at_depth(
     eng: &mut Engine,

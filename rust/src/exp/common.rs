@@ -6,7 +6,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context as _, Result};
 
-use crate::data::{corpus, encode_lm_stream, encode_sft, split_train_val, DataLoader, Tokenizer};
+use crate::data::{
+    corpus, encode_lm_stream, encode_sft, split_train_val, DataLoader, Sample, Tokenizer,
+};
 use crate::runtime::Runtime;
 use crate::strategy::StrategySpec;
 use crate::train::{TrainConfig, TrainResult, TrainSession};
@@ -67,11 +69,13 @@ impl Ctx {
     }
 }
 
-/// A ready-to-train SFT task: tokenizer + train/val loaders.
+/// A ready-to-train SFT task: tokenizer + train/val loaders (plus the raw
+/// val samples, which the generative decode metrics prompt from).
 pub struct SftTask {
     pub tok: Tokenizer,
     pub train: DataLoader,
     pub val: DataLoader,
+    pub val_samples: Vec<Sample>,
     pub n_train: usize,
 }
 
@@ -83,13 +87,49 @@ pub fn sft_task(rt: &Runtime, n_samples: usize, val_frac: f64, seed: u64) -> Sft
     let (tr, va) = split_train_val(&samples, val_frac, seed ^ 0x517);
     let enc_tr: Vec<_> = tr.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
     let enc_va: Vec<_> = va.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
-    let n_train = enc_tr.len();
+    let val_samples = supervised_samples(va, &enc_va);
+    let train = DataLoader::new(enc_tr, m.batch, m.seq, seed ^ 0xda7a);
+    let n_train = train.len();
     SftTask {
-        train: DataLoader::new(enc_tr, m.batch, m.seq, seed ^ 0xda7a),
+        train,
         val: DataLoader::new(enc_va, m.batch, m.seq, seed ^ 0xe7a1),
+        val_samples,
         tok,
         n_train,
     }
+}
+
+/// Keep the raw samples aligned with what the loader keeps: it drops
+/// zero-supervision encodings, so the teacher-forced and generative val
+/// metrics must score the same sample set (and `n_train` must report
+/// what was actually trained on — take it from the built loader).
+fn supervised_samples(samples: Vec<Sample>, enc: &[crate::data::Encoded]) -> Vec<Sample> {
+    samples
+        .into_iter()
+        .zip(enc)
+        .filter(|(_, e)| e.n_supervised() > 0)
+        .map(|(s, _)| s)
+        .collect()
+}
+
+/// Slice of val samples for the generative decode metrics, plus a
+/// `max_new` budget that fits the longest reference response (+`<eos>`),
+/// capped at the artifact window. Takes the fields (not the task) so
+/// callers can keep a disjoint `&mut task.train` borrow alive.
+pub fn gen_slice<'a>(
+    val_samples: &'a [Sample],
+    tok: &Tokenizer,
+    cap: usize,
+    seq: usize,
+) -> (&'a [Sample], usize) {
+    let s = &val_samples[..val_samples.len().min(cap)];
+    let max_new = s
+        .iter()
+        .map(|x| tok.encode(&x.response).len() + 1)
+        .max()
+        .unwrap_or(8)
+        .min(seq);
+    (s, max_new)
 }
 
 /// Math-problem task (GSM8K proxy). Tokenizer is built over both the CPT
@@ -128,10 +168,13 @@ pub fn medqa_task(rt: &Runtime, n: usize, seed: u64) -> SftTask {
     let (tr, va) = split_train_val(&samples, 0.2, seed ^ 0x3d);
     let enc_tr: Vec<_> = tr.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
     let enc_va: Vec<_> = va.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
-    let n_train = enc_tr.len();
+    let val_samples = supervised_samples(va, &enc_va);
+    let train = DataLoader::new(enc_tr, m.batch, m.seq, seed ^ 4);
+    let n_train = train.len();
     SftTask {
-        train: DataLoader::new(enc_tr, m.batch, m.seq, seed ^ 4),
+        train,
         val: DataLoader::new(enc_va, m.batch, m.seq, seed ^ 5),
+        val_samples,
         tok,
         n_train,
     }

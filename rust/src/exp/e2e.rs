@@ -80,6 +80,25 @@ pub fn e2e(ctx: &Ctx, config: &str, steps_override: Option<usize>) -> Result<()>
     let params = sess.eval_params();
     let rep = eval::evaluate(&mut sess.engine, &params, &task.val)?;
     let (cats, mt) = eval::category_scores(&mut sess.engine, &params, &task.val)?;
+
+    // Serving-shaped metric: batched KV-cached greedy decode over a val
+    // slice (falls back to the legacy full-forward path for artifact dirs
+    // without the decode ABI, or under LISA_DECODE=legacy).
+    let cached_decode = eval::generate::uses_cached_decode(&sess.engine);
+    let (gen_samples, gen_max_new) =
+        super::common::gen_slice(&task.val_samples, &task.tok, 32, m.seq);
+    // snapshot the *training* memory observable before the decode session
+    // meters its own (serving) activation peak on the same engine
+    let train_peak = sess.engine.meter.peak();
+    let tg = std::time::Instant::now();
+    let (gen_em, gen_completions) = eval::generative_completions(
+        &mut sess.engine,
+        &params,
+        &task.tok,
+        gen_samples,
+        gen_max_new,
+    )?;
+    let gen_ms = tg.elapsed().as_secs_f64() * 1e3;
     let tokens_per_step = (m.batch * m.seq) as f64;
     let med_ms = crate::util::stats::median(&step_times);
 
@@ -107,8 +126,20 @@ pub fn e2e(ctx: &Ctx, config: &str, steps_override: Option<usize>) -> Result<()>
     t.row(vec!["val ppl".to_string(), fnum(rep.ppl, 2)]);
     t.row(vec!["val token acc".to_string(), fnum(rep.token_acc, 3)]);
     t.row(vec!["val exact match".to_string(), fnum(rep.exact_match, 3)]);
+    t.row(vec![
+        "gen exact match".to_string(),
+        format!("{} ({} samples, {gen_ms:.0} ms)", fnum(gen_em, 3), gen_samples.len()),
+    ]);
+    t.row(vec![
+        "decode path".to_string(),
+        if cached_decode { "batched KV-cached".to_string() } else { "legacy full-forward".to_string() },
+    ]);
     t.row(vec!["MT-Bench proxy".to_string(), fnum(mt, 2)]);
-    t.row(vec!["peak tracked mem".to_string(), human_bytes(sess.engine.meter.peak())]);
+    t.row(vec!["peak tracked mem".to_string(), human_bytes(train_peak)]);
+    t.row(vec![
+        "peak tracked mem (incl. decode)".to_string(),
+        human_bytes(sess.engine.meter.peak()),
+    ]);
     let cs = sess.engine.device_cache_stats();
     t.row(vec![
         "device cache".to_string(),
@@ -126,6 +157,10 @@ pub fn e2e(ctx: &Ctx, config: &str, steps_override: Option<usize>) -> Result<()>
     println!("\nper-category proxy scores:");
     for (c, s) in &cats {
         println!("  {:<12} {s:.2}", c.label());
+    }
+    println!("\nqualitative samples (greedy decode):");
+    for (s, c) in gen_samples.iter().zip(&gen_completions).take(3) {
+        println!("  {} -> {}", s.prompt, task.tok.decode(&c.tokens));
     }
 
     ctx.save_table(&format!("e2e-{config}"), &t)?;

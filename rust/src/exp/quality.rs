@@ -45,7 +45,11 @@ pub fn suite_finetune(ctx: &Ctx, config: &str) -> Result<()> {
         "Method", "Knowledge(MMLU-proxy)", "Reasoning(AGIEval-proxy)",
         "Extraction(WinoGrande-proxy)",
     ]);
-    let mut tab3 = Table::new(vec!["Method", "MT-Bench-proxy", "val-loss", "val-ppl"]);
+    let mut tab3 =
+        Table::new(vec!["Method", "MT-Bench-proxy", "val-loss", "val-ppl", "gen-EM"]);
+    // generative decode slice: serving-path exact match per arm
+    let (gen_samples, gen_max_new) =
+        super::common::gen_slice(&task.val_samples, &task.tok, 24, rt.manifest.seq);
     let mut tab8 = Table::new({
         let mut h = vec!["Method".to_string()];
         h.extend(CATEGORIES.iter().map(|c| c.label().to_string()));
@@ -83,11 +87,19 @@ pub fn suite_finetune(ctx: &Ctx, config: &str) -> Result<()> {
             fnum(10.0 * score(C::Reasoning), 2),
             fnum(10.0 * score(C::Extraction), 2),
         ]);
+        let gen_em = eval::generative_exact_match(
+            &mut sess.engine,
+            &params,
+            &task.tok,
+            gen_samples,
+            gen_max_new,
+        )?;
         tab3.row(vec![
             label.clone(),
             fnum(avg, 2),
             fnum(rep.loss, 4),
             fnum(rep.ppl, 2),
+            fnum(gen_em, 3),
         ]);
         let mut row = vec![label.clone()];
         row.extend(CATEGORIES.iter().map(|c| fnum(score(*c), 2)));

@@ -144,12 +144,32 @@ impl LisaScheduler {
         use anyhow::ensure;
         self.rng = sec.take_rng("sampler.rng")?;
         let current = sec.take_u64s("sampler.current")?;
+        // The γ invariant the sampler panics to protect elsewhere: a live
+        // layer set is exactly γ *distinct* in-range blocks. A corrupt or
+        // hand-edited checkpoint must not resume into a run that silently
+        // trains the wrong number of blocks. (Empty is legal: a
+        // checkpoint written before the first resample.)
         ensure!(
-            current.len() <= self.n_layers
-                && current.iter().all(|&l| (l as usize) < self.n_layers),
-            "sampler state does not fit {} layers",
-            self.n_layers
+            current.is_empty() || current.len() == self.cfg.gamma,
+            "sampler state holds {} live layers but γ = {} — corrupt checkpoint \
+             or a different LISA config",
+            current.len(),
+            self.cfg.gamma
         );
+        let mut seen = vec![false; self.n_layers];
+        for &l in &current {
+            let l = l as usize;
+            ensure!(
+                l < self.n_layers,
+                "sampler state names layer {l} but the model has {} layers",
+                self.n_layers
+            );
+            ensure!(
+                !std::mem::replace(&mut seen[l], true),
+                "sampler state lists layer {l} twice — the γ invariant needs \
+                 distinct blocks"
+            );
+        }
         self.current = current.into_iter().map(|l| l as usize).collect();
         self.resamples = sec.take_u64("sampler.resamples")? as usize;
         let flat = sec.take_u64s("sampler.history")?;
@@ -297,6 +317,44 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Hand-build a sampler-state section (what a corrupt/hand-edited
+    /// checkpoint would deserialize to).
+    fn sampler_section(current: Vec<u64>, history: Vec<u64>) -> crate::model::checkpoint::Section<'static> {
+        let mut sec = crate::model::checkpoint::Section::new("strategy");
+        sec.put_rng("sampler.rng", &Rng::new(7));
+        sec.put_u64s("sampler.current", current);
+        sec.put_u64("sampler.resamples", 1);
+        sec.put_u64s("sampler.history", history);
+        sec
+    }
+
+    #[test]
+    fn load_state_rejects_wrong_cardinality_and_duplicates() {
+        // γ=2 over 4 layers
+        let fresh = || LisaScheduler::new(LisaConfig::paper(2, 3), 4, 1);
+
+        // the γ invariant: a non-empty live set must be exactly γ blocks
+        let mut s = fresh();
+        let err = s.load_state(&mut sampler_section(vec![1], vec![1, 3])).unwrap_err();
+        assert!(err.to_string().contains("γ"), "got: {err}");
+
+        // ...of *distinct* blocks
+        let mut s = fresh();
+        let err = s.load_state(&mut sampler_section(vec![3, 3], vec![1, 3])).unwrap_err();
+        assert!(err.to_string().contains("twice"), "got: {err}");
+
+        // ...all in range
+        let mut s = fresh();
+        let err = s.load_state(&mut sampler_section(vec![1, 9], vec![1, 3])).unwrap_err();
+        assert!(err.to_string().contains("9"), "got: {err}");
+
+        // a well-formed section still loads
+        let mut s = fresh();
+        s.load_state(&mut sampler_section(vec![1, 3], vec![1, 3])).unwrap();
+        assert_eq!(s.current_layers(), &[1, 3]);
+        assert_eq!(s.n_resamples(), 1);
     }
 
     #[test]

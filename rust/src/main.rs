@@ -227,6 +227,16 @@ fn real_main() -> Result<()> {
                 m.seq,
                 m.batch
             );
+            println!(
+                "decode ABI: v{} ({})",
+                m.decode_abi,
+                if m.supports_decode(&rt.backend) {
+                    "batched KV-cached decode available"
+                } else {
+                    "no cached decode for this backend — serving falls back to \
+                     legacy full-forward"
+                }
+            );
             println!("segments ({}):", m.segments.len());
             for (k, s) in &m.segments {
                 println!(

@@ -99,9 +99,21 @@ pub struct Manifest {
     pub block_params: Vec<(String, Vec<usize>)>,
     /// LoRA adapter shapes in ABI order (aq, bq, ..., a2, b2).
     pub lora_params: Vec<(String, Vec<usize>)>,
+    /// Decode-ABI version the exporter stamped (DESIGN.md §9). `0` —
+    /// including manifests from before the field existed — means the
+    /// artifact dir carries no KV-cached decode segments; the serving
+    /// path then falls back to the legacy full-forward loop.
+    pub decode_abi: u64,
     /// key = "<segment>.<backend>"
     pub segments: BTreeMap<String, SegmentSig>,
 }
+
+/// Segment names of decode ABI v1, in prefill→decode order.
+pub const DECODE_SEGMENTS: [&str; 4] =
+    ["prefill_kv", "pack_state", "decode_step", "decode_logits"];
+
+/// Current decode-ABI version the engine implements.
+pub const DECODE_ABI: u64 = 1;
 
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
@@ -201,8 +213,28 @@ impl Manifest {
             n_params: us("n_params")?,
             block_params: named_shapes("block_params", "block_param_names")?,
             lora_params: named_shapes("lora_params", "lora_param_names")?,
+            decode_abi: j
+                .get("decode_abi")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0) as u64,
             segments,
         })
+    }
+
+    /// Whether this artifact dir carries the KV-cached decode segments the
+    /// engine's `DecodeSession` schedules (ABI-versioned; a newer or
+    /// missing ABI, or any missing segment, disables the cached path —
+    /// the caller falls back to legacy full-forward greedy).
+    pub fn supports_decode(&self, backend: &str) -> bool {
+        self.decode_abi == DECODE_ABI
+            && DECODE_SEGMENTS
+                .iter()
+                .all(|n| self.segments.contains_key(&format!("{n}.{backend}")))
+    }
+
+    /// Rows of the packed decode state `[B, L*2T+1, D]` (DESIGN.md §9).
+    pub fn decode_state_rows(&self) -> usize {
+        self.n_layers * 2 * self.seq + 1
     }
 
     pub fn segment(&self, name: &str, backend: &str) -> Result<&SegmentSig> {
@@ -264,6 +296,40 @@ mod tests {
         assert!(head.tuple_root);
         assert!(!head.device_chainable());
         assert!(m.segment("nope", "jnp").is_err());
+    }
+
+    #[test]
+    fn decode_abi_gates_the_cached_path() {
+        let dir = std::env::temp_dir().join("lisa_manifest_decode_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), MINI).unwrap();
+        // legacy manifest: no decode_abi field -> 0 -> unsupported
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.decode_abi, 0);
+        assert!(!m.supports_decode("jnp"));
+        assert_eq!(m.decode_state_rows(), 2 * 2 * 4 + 1);
+
+        // versioned manifest with every decode segment present
+        let mut text = MINI.replace(
+            "\"segments\": {",
+            r#""decode_abi": 1, "segments": {"#,
+        );
+        let seg = |name: &str| {
+            format!(
+                r#""{name}.jnp": {{"file": "{name}.jnp.hlo.txt",
+                    "operands": [{{"shape": [1, 4, 8], "dtype": "float32"}}],
+                    "outputs": [{{"shape": [1, 4, 8], "dtype": "float32"}}],
+                    "tuple_root": false}},"#
+            )
+        };
+        let extra: String = super::DECODE_SEGMENTS.iter().map(|n| seg(n)).collect();
+        text = text.replace("\"segments\": {", &format!("\"segments\": {{{extra}"));
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.decode_abi, 1);
+        assert!(m.supports_decode("jnp"));
+        // the other backend has no decode segments
+        assert!(!m.supports_decode("pallas"));
     }
 
     #[test]

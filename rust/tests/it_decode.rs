@@ -1,0 +1,251 @@
+//! Decode parity suite (artifact-gated, like `it_train.rs` — and
+//! additionally gated on the decode ABI, so legacy artifact dirs skip):
+//!
+//! * batched KV-cached greedy decode must match the legacy full-forward
+//!   greedy path **token-for-token** for every prompt in a mixed-length
+//!   batch (including chunking past the artifact batch size, truncated
+//!   prompts and stop-reason agreement);
+//! * the cached path must run exactly one `decode_step` execution per
+//!   generated batch-token (asserted via `ExecStats`) and upload **zero
+//!   weight tensors** on a warm device cache — only the `[B, 1]` i32
+//!   token/position columns cross the host boundary;
+//! * cache invalidation must be airtight: decode after an optimizer step
+//!   or a checkpoint restore must never serve stale weights (stale K/V is
+//!   structurally impossible — the cache lives inside a `DecodeSession`,
+//!   which borrows the engine for its whole lifetime);
+//! * the host-roundtrip flow (`device_flow = false`) must agree with the
+//!   device-resident flow bit-for-bit.
+
+use std::path::{Path, PathBuf};
+
+use lisa::data::tokenizer::{EOS, PAD};
+use lisa::data::{corpus, encode_sft, DataLoader, Tokenizer};
+use lisa::engine::{Completion, DecodeSession, Engine, StopReason};
+use lisa::eval::generate;
+use lisa::model::{checkpoint, ModelParams};
+use lisa::runtime::Runtime;
+use lisa::strategy::StrategySpec;
+use lisa::train::{TrainConfig, TrainSession};
+use lisa::util::rng::Rng;
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+/// Artifacts present *and* exported with the decode ABI.
+fn have_decode() -> Option<Runtime> {
+    if !artifacts().join("manifest.json").exists() {
+        return None;
+    }
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    rt.manifest.supports_decode("pallas").then_some(rt)
+}
+
+fn make_tok(rt: &Runtime) -> Tokenizer {
+    let samples = corpus::gen_instruction_corpus(64, 11);
+    Tokenizer::build(&corpus::sample_texts(&samples), rt.manifest.vocab)
+}
+
+/// Mixed-length prompts; more than one artifact batch so chunking runs.
+fn prompts(rt: &Runtime) -> Vec<String> {
+    let mut p = vec![
+        "what is 12 plus 10 ?".to_string(),
+        "name the capital of france .".to_string(),
+        "what is 3 times 4 ?".to_string(),
+        "who built the eiffel tower ?".to_string(),
+        "what is 9 minus 2 ?".to_string(),
+    ];
+    // one prompt past the window: truncation + near-empty completion
+    p.push("what is 1 plus 2 ".repeat(rt.manifest.seq));
+    p
+}
+
+fn decode_batch(
+    eng: &mut Engine,
+    params: &ModelParams,
+    tok: &Tokenizer,
+    prompts: &[String],
+    max_new: usize,
+) -> Vec<Completion> {
+    let refs: Vec<&str> = prompts.iter().map(String::as_str).collect();
+    generate::greedy_complete_batch(eng, params, tok, &refs, max_new).unwrap()
+}
+
+// Parity caveat: the cached path's q-length-1 attention is plain masked
+// softmax while the legacy forward uses the flash kernel — the two agree
+// to float tolerance, not bit-for-bit (python/tests/test_decode.py pins
+// the logits at rtol 2e-4). Token-for-token equality therefore relies on
+// argmax margins dwarfing that noise, which holds at init and for the
+// trained tiny models these suites run; a near-exact logit tie could in
+// principle flip one token. Both paths share one first-of-ties argmax
+// (engine::decode::argmax) so tie-breaking itself cannot diverge.
+#[test]
+fn cached_decode_matches_legacy_token_for_token() {
+    let Some(rt) = have_decode() else { return };
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(3));
+    let tok = make_tok(&rt);
+    let prompts = prompts(&rt);
+    let max_new = 8;
+
+    let mut eng = Engine::new(&rt);
+    let cached = decode_batch(&mut eng, &params, &tok, &prompts, max_new);
+    assert_eq!(cached.len(), prompts.len());
+    for (i, p) in prompts.iter().enumerate() {
+        let legacy = generate::greedy_complete_legacy(&mut eng, &params, &tok, p, max_new)
+            .unwrap();
+        assert_eq!(cached[i].tokens, legacy.tokens, "prompt {i} diverged");
+        assert_eq!(cached[i].stop, legacy.stop, "prompt {i} stop reason");
+        assert_eq!(
+            cached[i].prompt_truncated, legacy.prompt_truncated,
+            "prompt {i} truncation flag"
+        );
+    }
+    // the oversized prompt was reported, not silently clipped
+    assert!(cached.last().unwrap().prompt_truncated);
+    assert!(cached.iter().take(5).all(|c| !c.prompt_truncated));
+
+    // max_new = 0 decodes nothing on either path
+    let none = decode_batch(&mut eng, &params, &tok, &prompts[..1], 0);
+    assert!(none[0].tokens.is_empty());
+    assert_eq!(none[0].stop, StopReason::MaxNew);
+}
+
+/// `decode_step` executions a chunk of completions needs: the first token
+/// comes from prefill; every later token costs one step; a row stopped by
+/// `<eos>` pays one more step (the one that surfaced it). Rows in a chunk
+/// share steps, so the chunk costs the max over its rows.
+fn expected_steps(completions: &[Completion], batch: usize) -> u64 {
+    completions
+        .chunks(batch)
+        .map(|chunk| {
+            chunk
+                .iter()
+                .map(|c| {
+                    let k = c.tokens.len() as u64;
+                    match c.stop {
+                        StopReason::Eos => k,
+                        _ => k.saturating_sub(1),
+                    }
+                })
+                .max()
+                .unwrap_or(0)
+        })
+        .sum()
+}
+
+#[test]
+fn one_decode_step_per_token_and_zero_weight_uploads_when_warm() {
+    let Some(rt) = have_decode() else { return };
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(5));
+    let tok = make_tok(&rt);
+    let all = prompts(&rt);
+    let enc: Vec<Vec<i32>> = all.iter().map(|p| generate::encode_prompt(&tok, p)).collect();
+    let max_new = 6;
+
+    let mut eng = Engine::new(&rt);
+    assert!(eng.device_flow, "device flow must be the default");
+    // cold pass: compiles executables, uploads every weight tensor once
+    {
+        let mut sess = DecodeSession::new(&mut eng, &params).unwrap();
+        sess.greedy(&enc, max_new, EOS, PAD).unwrap();
+    }
+    let cold = eng.device_cache_stats();
+
+    rt.reset_stats();
+    let (outs, steps) = {
+        let mut sess = DecodeSession::new(&mut eng, &params).unwrap();
+        let outs = sess.greedy(&enc, max_new, EOS, PAD).unwrap();
+        (outs, sess.decode_steps)
+    };
+
+    // acceptance: zero weight tensors uploaded on a warm device cache
+    let warm = eng.device_cache_stats();
+    assert_eq!(
+        warm.misses, cold.misses,
+        "warm decode must serve every weight from the device cache"
+    );
+
+    let stats = rt.stats();
+    let ds = stats.get("decode_step").expect("decode_step ran");
+    // acceptance: exactly one decode_step execution per generated token
+    assert_eq!(ds.calls, steps, "session counter vs ExecStats");
+    assert_eq!(ds.calls, expected_steps(&outs, m.batch), "steps vs completions");
+    // per execution only tok+pidx ([B,1] i32 each) are uploaded; the
+    // state chains on device and the weights are cache-served
+    assert_eq!(ds.uploads, 2 * ds.calls, "decode_step must upload only tok/pidx");
+    assert!(ds.buf_hits > 0, "weights + state must be device-served");
+    let dl = stats.get("decode_logits").expect("decode_logits ran");
+    assert_eq!(dl.uploads, 0, "decode_logits reads only device-resident operands");
+
+    // prefill is one full forward per *chunk*, never per token
+    let n_chunks = enc.len().div_ceil(m.batch) as u64;
+    let bf = stats.get("block_fwd").expect("prefill ran block_fwd");
+    assert_eq!(bf.calls, m.n_layers as u64 * n_chunks);
+    let pk = stats.get("prefill_kv").expect("prefill ran prefill_kv");
+    assert_eq!(pk.calls, m.n_layers as u64 * n_chunks);
+}
+
+#[test]
+fn decode_never_serves_stale_weights_after_step_or_restore() {
+    let Some(rt) = have_decode() else { return };
+    let m = rt.manifest.clone();
+    let tok = make_tok(&rt);
+    let prompts = prompts(&rt);
+
+    // -- optimizer step between decodes --------------------------------
+    let samples = corpus::gen_instruction_corpus(96, 19);
+    let enc: Vec<_> = samples.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
+    let mut dl = DataLoader::new(enc, m.batch, m.seq, 5);
+    let cfg = TrainConfig { steps: 4, lr: 3e-3, warmup: 1, log_every: 0, ..Default::default() };
+    let mut sess = TrainSession::new(&rt, &StrategySpec::lisa(2, 3), cfg).unwrap();
+
+    // warm the engine's device cache with a decode...
+    decode_batch(&mut sess.engine, &sess.params, &tok, &prompts, 6);
+    // ...mutate the weights through the strategy (Touched invalidation)...
+    for step in 0..4 {
+        sess.step(step, &mut dl).unwrap();
+    }
+    // ...then decode again: must equal a completely fresh engine's answer
+    let after = decode_batch(&mut sess.engine, &sess.params, &tok, &prompts, 6);
+    let mut fresh = Engine::new(&rt);
+    let want = decode_batch(&mut fresh, &sess.params, &tok, &prompts, 6);
+    for (i, (a, b)) in after.iter().zip(&want).enumerate() {
+        assert_eq!(a.tokens, b.tokens, "stale weights after optimizer step (prompt {i})");
+    }
+
+    // -- checkpoint restore between decodes ----------------------------
+    // rewrite every weight in place (exactly what resume does) and
+    // invalidate, as TrainSession::resume_checkpoint does
+    let params_b = ModelParams::init(&m, &mut Rng::new(99));
+    let mut sec = checkpoint::model_section(&params_b);
+    checkpoint::load_model_section(&mut sec, &mut sess.params).unwrap();
+    sess.engine.invalidate_all();
+    let restored = decode_batch(&mut sess.engine, &sess.params, &tok, &prompts, 6);
+    let mut fresh = Engine::new(&rt);
+    let want = decode_batch(&mut fresh, &sess.params, &tok, &prompts, 6);
+    for (i, (a, b)) in restored.iter().zip(&want).enumerate() {
+        assert_eq!(a.tokens, b.tokens, "stale weights after restore (prompt {i})");
+    }
+}
+
+#[test]
+fn device_and_host_flow_decode_agree_bit_for_bit() {
+    let Some(rt) = have_decode() else { return };
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(7));
+    let tok = make_tok(&rt);
+    let prompts = prompts(&rt);
+
+    let mut dev = Engine::new(&rt);
+    dev.device_flow = true;
+    let a = decode_batch(&mut dev, &params, &tok, &prompts, 8);
+    let mut host = Engine::new(&rt);
+    host.device_flow = false;
+    let b = decode_batch(&mut host, &params, &tok, &prompts, 8);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.tokens, y.tokens, "device/host flow diverged (prompt {i})");
+        assert_eq!(x.stop, y.stop);
+    }
+}

@@ -60,6 +60,7 @@ fn synth_manifest() -> Manifest {
         n_params: 0,
         block_params,
         lora_params,
+        decode_abi: 0,
         segments: BTreeMap::new(),
     }
 }
