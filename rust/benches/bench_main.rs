@@ -8,6 +8,8 @@
 //! * `galore/*`      — projection cost (baseline overhead)
 //! * `host/*`        — L3 substrate hot paths (tensor bridge, dataloader,
 //!                     tokenizer, sampler)
+//! * `decode/*`      — serving: legacy full-forward vs KV-cached decode
+//! * `serve/*`       — serving: static vs continuous batching (tokens/sec)
 //!
 //! Set `LISA_BENCH_QUICK=1` for a fast smoke pass.
 //!
@@ -21,7 +23,7 @@ use std::path::Path;
 
 use lisa::data::tokenizer::{EOS, PAD};
 use lisa::data::{corpus, encode_sft, DataLoader, Tokenizer};
-use lisa::engine::{DecodeSession, Engine};
+use lisa::engine::{DecodeSession, Engine, Request, ServeSession};
 use lisa::eval::generate;
 use lisa::lisa::{LisaConfig, LisaScheduler};
 use lisa::model::{ModelParams, ParamKey};
@@ -306,6 +308,47 @@ fn main() -> anyhow::Result<()> {
                  re-export with python/compile/aot.py"
             );
         }
+
+        // serving: static vs continuous batching over one mixed-length
+        // queue (tokens/sec). The continuous arm admits queued prompts
+        // into rows freed mid-decode, so long rows no longer gate short
+        // ones — the ISSUE 5 before/after pair.
+        if m.supports_decode("pallas") {
+            let eos_off = -1; // unreachable: every row runs its exact budget
+            let queue: Vec<Request> = samples
+                .iter()
+                .take(2 * m.batch)
+                .enumerate()
+                .map(|(i, s)| {
+                    // one long row per static chunk, the rest short
+                    let budget = if i % m.batch == 0 { 16.min(m.seq / 4) } else { 2 };
+                    Request::greedy(generate::encode_prompt(&tok, &s.prompt), budget)
+                })
+                .collect();
+            let toks = |outs: &[lisa::engine::Completion]| {
+                outs.iter().map(|c| c.tokens.len()).sum::<usize>().max(1) as u64
+            };
+
+            let mut eng = Engine::new(&rt);
+            let n = {
+                let mut sess = ServeSession::new(&mut eng, &params)?;
+                toks(&sess.run_static(&queue, eos_off, PAD)?)
+            };
+            results.push(b.run_with_elements("serve/static-tiny", n, || {
+                let mut sess = ServeSession::new(&mut eng, &params).unwrap();
+                black_box(sess.run_static(&queue, eos_off, PAD).unwrap());
+            }));
+
+            let mut eng = Engine::new(&rt);
+            let n = {
+                let mut sess = ServeSession::new(&mut eng, &params)?;
+                toks(&sess.run(&queue, eos_off, PAD)?)
+            };
+            results.push(b.run_with_elements("serve/continuous-tiny", n, || {
+                let mut sess = ServeSession::new(&mut eng, &params).unwrap();
+                black_box(sess.run(&queue, eos_off, PAD).unwrap());
+            }));
+        }
     }
 
     println!("\n=== bench results ===");
@@ -319,7 +362,8 @@ fn main() -> anyhow::Result<()> {
     let quick = std::env::var("LISA_BENCH_QUICK").is_ok();
     let note = "generated by `cargo bench` (LISA_BENCH_QUICK=1 for the smoke pass); \
                 step/*-hostpath arms run the pre-device-cache host-roundtrip schedule; \
-                decode/{legacy,cached}-* are the serving before/after pair (tokens/sec)";
+                decode/{legacy,cached}-* are the KV-cache before/after pair and \
+                serve/{static,continuous}-* the continuous-batching pair (tokens/sec)";
     let target = Path::new("../BENCH_step.json");
     let path = if lisa::util::bench::write_json(target, &results, quick, note).is_ok() {
         target

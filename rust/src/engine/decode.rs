@@ -1,38 +1,27 @@
-//! Batched KV-cached greedy decode — the serving-scale primitive
+//! Batched KV-cached greedy decode — the static-batch serving primitive
 //! (DESIGN.md §9).
 //!
-//! [`DecodeSession`] schedules the decode-ABI segments over the runtime:
+//! Since the serve subsystem landed (DESIGN.md §10), [`DecodeSession`] is
+//! a thin wrapper over [`ServeSession`]: `greedy` turns each prompt into
+//! a greedy [`Request`] and runs the *static* schedule — batch-width
+//! chunks, each prefilled together and fully drained before the next
+//! starts. That is byte-for-byte the PR 4 execution shape (same segment
+//! sequence, one `decode_step` per generated batch-token, two `[B, 1]`
+//! i32 uploads per step on a warm cache), so the `it_decode.rs` parity
+//! guarantees carry over unchanged; continuous batching and sampling live
+//! in [`crate::engine::serve`].
 //!
-//! ```text
-//! prefill:  embed_fwd -> (prefill_kv + block_fwd)^L -> head_logits
-//!           pack_state(kv_0..kv_{L-1}) -> state
-//! per token: decode_step(tok, pidx, state, weights...) -> state'
-//!            decode_logits(state') -> [B, 1, V]   (the only download)
-//! ```
-//!
-//! The whole-model cache lives in ONE packed device tensor
-//! `[B, L*2T+1, D]` (per-layer K rows, V rows, final h row) so it chains
-//! between `decode_step` executions through the bare-root single-output
-//! path (`Runtime::run_chained`) without ever touching the host — the
-//! PJRT wrapper can only hand tuple-rooted outputs back as one fused
-//! host literal, which is exactly why the state is packed rather than a
-//! tuple of per-layer tensors. Weights come from the engine's
-//! [`crate::runtime::DeviceCache`]: on a warm cache a decode step uploads
-//! only the two `[B, 1]` i32 token/position columns, zero weight tensors.
-//!
-//! Staleness is structural: a session borrows the engine and the
-//! parameter store for its whole lifetime, so no optimizer step or
-//! checkpoint restore can interleave with a live K/V cache — after any
-//! mutation a fresh session re-prefills, and the weight buffers it pulls
-//! go through the store-generation-stamped cache (DESIGN.md §8).
+//! This module keeps the pieces both paths share: [`Completion`] /
+//! [`StopReason`], the prompt-clipping policy and the first-of-ties
+//! [`argmax`] that the legacy full-forward loop (`eval::generate`) must
+//! agree with token for token.
 
-use anyhow::{ensure, Result};
+use anyhow::Result;
 
 use crate::model::ModelParams;
-use crate::runtime::{HostTensorI32, Operand, DECODE_ABI};
 
-use super::memory::MemCategory;
-use super::trainer::{Act, Engine};
+use super::serve::{Request, ServeSession};
+use super::trainer::Engine;
 
 /// Why a row stopped emitting tokens.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -56,24 +45,9 @@ pub struct Completion {
     pub stop: StopReason,
 }
 
-/// Pure per-row decode bookkeeping (unit-tested without a runtime):
-/// mirrors the legacy greedy loop's stop conditions exactly so the
-/// cached path stays token-for-token compatible.
-#[derive(Debug)]
-struct RowPlan {
-    /// Prompt plus everything generated so far.
-    seq: Vec<i32>,
-    truncated: bool,
-    out: Vec<i32>,
-    stop: Option<StopReason>,
-    max_new: usize,
-    seq_cap: usize,
-    eos: i32,
-}
-
 /// Clip a prompt to the `cap - 1` tokens the decode window can serve,
 /// warning loudly; returns whether it clipped. One site for the policy
-/// *and* its report, shared by the cached planner and the legacy
+/// *and* its report, shared by the serve planner and the legacy
 /// full-forward path (`eval::generate`) so the two can't drift apart —
 /// `it_decode.rs` asserts their `prompt_truncated` flags agree.
 pub(crate) fn clip_prompt(seq: &mut Vec<i32>, cap: usize) -> bool {
@@ -90,8 +64,10 @@ pub(crate) fn clip_prompt(seq: &mut Vec<i32>, cap: usize) -> bool {
     true
 }
 
-/// First-of-ties argmax. Shared with the legacy full-forward path:
-/// token-for-token parity depends on both paths tie-breaking identically.
+/// First-of-ties argmax. Shared between the greedy sampler, the serve
+/// degeneracies (`temperature <= 0`, `top_k == 1`) and the legacy
+/// full-forward path: token-for-token parity depends on every path
+/// tie-breaking identically.
 pub(crate) fn argmax(row: &[f32]) -> i32 {
     let mut best = 0usize;
     let mut bv = f32::NEG_INFINITY;
@@ -104,82 +80,31 @@ pub(crate) fn argmax(row: &[f32]) -> i32 {
     best as i32
 }
 
-impl RowPlan {
-    fn new(mut prompt: Vec<i32>, seq_cap: usize, max_new: usize, eos: i32) -> RowPlan {
-        assert!(!prompt.is_empty(), "decode rows need at least one token");
-        let truncated = clip_prompt(&mut prompt, seq_cap);
-        let stop = (max_new == 0).then_some(StopReason::MaxNew);
-        RowPlan { seq: prompt, truncated, out: Vec::new(), stop, max_new, seq_cap, eos }
-    }
-
-    fn alive(&self) -> bool {
-        self.stop.is_none()
-    }
-
-    /// Feed the argmax token the model produced for this row.
-    fn push(&mut self, id: i32) {
-        debug_assert!(self.alive());
-        if id == self.eos {
-            self.stop = Some(StopReason::Eos);
-            return;
-        }
-        self.seq.push(id);
-        self.out.push(id);
-        if self.out.len() >= self.max_new {
-            self.stop = Some(StopReason::MaxNew);
-        } else if self.seq.len() >= self.seq_cap {
-            // the legacy loop breaks at the top of the next iteration
-            self.stop = Some(StopReason::WindowFull);
-        }
-    }
-
-    /// `(token, position)` this row contributes to the next `decode_step`.
-    /// Done rows in a still-running batch freeze on their last token —
-    /// rewriting the same cache slot with the same bytes (idempotent, and
-    /// rows are independent, so live rows are unaffected).
-    fn step_input(&self) -> (i32, i32) {
-        (*self.seq.last().expect("non-empty"), (self.seq.len() - 1) as i32)
-    }
-
-    fn into_completion(self) -> Completion {
-        Completion {
-            tokens: self.out,
-            prompt_truncated: self.truncated,
-            stop: self.stop.unwrap_or(StopReason::MaxNew),
-        }
-    }
-}
-
-/// A batched KV-cached greedy decoder over one engine + parameter store.
+/// A batched KV-cached greedy decoder over one engine + parameter store:
+/// the static-batch wrapper over [`ServeSession`].
 ///
 /// Fills every row of the `[B, T]` artifacts with a different prompt
 /// (chunking when there are more prompts than rows) and pays one
 /// `decode_step` execution per generated token instead of a full L-block
 /// re-forward.
 pub struct DecodeSession<'e, 'rt> {
-    eng: &'e mut Engine<'rt>,
-    params: &'e ModelParams,
-    /// `decode_step` executions across every chunk of this session.
-    pub decode_steps: u64,
+    serve: ServeSession<'e, 'rt>,
 }
 
 impl<'e, 'rt> DecodeSession<'e, 'rt> {
     /// Whether the loaded artifacts carry the decode ABI for this
     /// engine's backend (legacy dirs: no — callers fall back).
     pub fn supported(eng: &Engine) -> bool {
-        eng.rt.manifest.supports_decode(&eng.rt.backend)
+        ServeSession::supported(eng)
     }
 
     pub fn new(eng: &'e mut Engine<'rt>, params: &'e ModelParams) -> Result<Self> {
-        ensure!(
-            Self::supported(eng),
-            "artifact dir '{}' carries no decode-ABI v{DECODE_ABI} segments for \
-             backend '{}' — re-export with python/compile/aot.py or use the \
-             legacy full-forward path",
-            eng.rt.manifest.dir.display(),
-            eng.rt.backend
-        );
-        Ok(DecodeSession { eng, params, decode_steps: 0 })
+        Ok(DecodeSession { serve: ServeSession::new(eng, params)? })
+    }
+
+    /// `decode_step` executions across every chunk of this session.
+    pub fn decode_steps(&self) -> u64 {
+        self.serve.decode_steps
     }
 
     /// Greedily complete every prompt (token-id sequences including any
@@ -193,195 +118,11 @@ impl<'e, 'rt> DecodeSession<'e, 'rt> {
         eos: i32,
         pad: i32,
     ) -> Result<Vec<Completion>> {
-        let bsz = self.eng.rt.manifest.batch;
-        let mut out = Vec::with_capacity(prompts.len());
-        for chunk in prompts.chunks(bsz) {
-            out.extend(self.greedy_chunk(chunk, max_new, eos, pad)?);
-        }
-        Ok(out)
-    }
-
-    fn greedy_chunk(
-        &mut self,
-        prompts: &[Vec<i32>],
-        max_new: usize,
-        eos: i32,
-        pad: i32,
-    ) -> Result<Vec<Completion>> {
-        let m = self.eng.rt.manifest.clone();
-        let (bsz, t_max, d, v) = (m.batch, m.seq, m.d_model, m.vocab);
-        debug_assert!(!prompts.is_empty() && prompts.len() <= bsz);
-        // oversized prompts are clipped (and warned about) by RowPlan::new
-        let mut rows: Vec<RowPlan> = prompts
+        let reqs: Vec<Request> = prompts
             .iter()
-            .map(|p| RowPlan::new(p.clone(), t_max, max_new, eos))
+            .map(|p| Request::greedy(p.clone(), max_new))
             .collect();
-        // unused batch slots decode nothing (max_new = 0)
-        while rows.len() < bsz {
-            rows.push(RowPlan::new(vec![pad], t_max, 0, eos));
-        }
-
-        // ---- prefill: embed -> (prefill_kv + block_fwd)^L -> head_logits
-        let mut tokens = vec![pad; bsz * t_max];
-        for (r, plan) in rows.iter().enumerate() {
-            tokens[r * t_max..r * t_max + plan.seq.len()].copy_from_slice(&plan.seq);
-        }
-        let tokens = HostTensorI32::from_vec(&[bsz, t_max], tokens);
-
-        let ids = self.eng.ids;
-        let device_flow = self.eng.device_flow;
-        let hs = self.eng.h_shape();
-        let kv_shape = vec![bsz, 2 * t_max, d];
-        let state_shape = vec![bsz, m.decode_state_rows(), d];
-
-        let mut h = if device_flow {
-            let (emb, pos) = self.eng.embed_bufs(self.params)?;
-            let ops = [Operand::I32(&tokens), Operand::Buf(&emb), Operand::Buf(&pos)];
-            self.eng.run_chain_act(ids.embed_fwd, &ops, &hs)?
-        } else {
-            let ops = [
-                Operand::I32(&tokens),
-                Operand::F32(&self.params.emb),
-                Operand::F32(&self.params.pos),
-            ];
-            self.eng.run_chain_act(ids.embed_fwd, &ops, &hs)?
-        };
-        let mut kvs: Vec<Act> = Vec::with_capacity(m.n_layers);
-        // meter the real serving peak: the growing per-layer K/V buffers
-        // plus the one live residual are resident together during prefill
-        let mut kv_bytes = 0u64;
-        self.eng.meter.set(MemCategory::Activations, h.bytes() as u64);
-        for l in 0..m.n_layers {
-            let h_next = if device_flow {
-                let bufs = self.eng.block_bufs(self.params, l)?;
-                // prefill_kv ABI: (h, g1, wk, wv) — block ABI indices 0/2/3
-                let kv_ops = [
-                    h.operand(),
-                    Operand::Buf(&bufs[0]),
-                    Operand::Buf(&bufs[2]),
-                    Operand::Buf(&bufs[3]),
-                ];
-                kvs.push(self.eng.run_chain_act(ids.prefill_kv, &kv_ops, &kv_shape)?);
-                let mut ops = vec![h.operand()];
-                ops.extend(bufs.iter().map(|b| Operand::Buf(b.as_ref())));
-                self.eng.run_chain_act(ids.block_fwd, &ops, &hs)?
-            } else {
-                let layer = &self.params.blocks[l];
-                let kv_ops = [
-                    h.operand(),
-                    Operand::F32(&layer[0]),
-                    Operand::F32(&layer[2]),
-                    Operand::F32(&layer[3]),
-                ];
-                kvs.push(self.eng.run_chain_act(ids.prefill_kv, &kv_ops, &kv_shape)?);
-                let mut ops = vec![h.operand()];
-                ops.extend(layer.iter().map(Operand::F32));
-                self.eng.run_chain_act(ids.block_fwd, &ops, &hs)?
-            };
-            h = h_next;
-            kv_bytes += kvs.last().expect("pushed").bytes() as u64;
-            self.eng.meter.set(MemCategory::Activations, kv_bytes + h.bytes() as u64);
-        }
-        let logit_shape = [bsz, t_max, v];
-        let logits = if device_flow {
-            let (gf, wh) = self.eng.head_bufs(self.params)?;
-            let ops = [h.operand(), Operand::Buf(&gf), Operand::Buf(&wh)];
-            self.eng.run_chain_act(ids.head_logits, &ops, &logit_shape)?.into_host()?
-        } else {
-            let ops = [
-                h.operand(),
-                Operand::F32(&self.params.gf),
-                Operand::F32(&self.params.wh),
-            ];
-            self.eng.run_chain_act(ids.head_logits, &ops, &logit_shape)?.into_host()?
-        };
-        let mut state = {
-            let kv_ops: Vec<Operand> = kvs.iter().map(Act::operand).collect();
-            self.eng.run_chain_act(ids.pack_state, &kv_ops, &state_shape)?
-        };
-        // packing peak: the per-layer buffers and the packed state coexist
-        self.eng.meter.set(MemCategory::Activations, kv_bytes + state.bytes() as u64);
-        drop(kvs);
-        self.eng.meter.set(MemCategory::Activations, state.bytes() as u64);
-
-        // first token per row, from the prefill logits at position len-1
-        for (r, plan) in rows.iter_mut().enumerate() {
-            if !plan.alive() {
-                continue;
-            }
-            let p = plan.seq.len() - 1;
-            plan.push(argmax(&logits.data[(r * t_max + p) * v..(r * t_max + p + 1) * v]));
-        }
-
-        // ---- decode loop: one decode_step execution per generated token
-        let (embp, blockb, headp) = if device_flow {
-            let mut blocks = Vec::with_capacity(m.n_layers);
-            for l in 0..m.n_layers {
-                blocks.push(self.eng.block_bufs(self.params, l)?);
-            }
-            (
-                Some(self.eng.embed_bufs(self.params)?),
-                blocks,
-                Some(self.eng.head_bufs(self.params)?),
-            )
-        } else {
-            (None, Vec::new(), None)
-        };
-        let logit1_shape = [bsz, 1, v];
-        while rows.iter().any(RowPlan::alive) {
-            let (mut tok, mut pidx) = (Vec::with_capacity(bsz), Vec::with_capacity(bsz));
-            for plan in &rows {
-                let (t, p) = plan.step_input();
-                tok.push(t);
-                pidx.push(p);
-            }
-            let tok = HostTensorI32::from_vec(&[bsz, 1], tok);
-            let pidx = HostTensorI32::from_vec(&[bsz, 1], pidx);
-            let state_next = {
-                let mut ops: Vec<Operand> =
-                    vec![Operand::I32(&tok), Operand::I32(&pidx), state.operand()];
-                if let Some((emb, pos)) = &embp {
-                    ops.push(Operand::Buf(emb));
-                    ops.push(Operand::Buf(pos));
-                    for bufs in &blockb {
-                        ops.extend(bufs.iter().map(|b| Operand::Buf(b.as_ref())));
-                    }
-                } else {
-                    ops.push(Operand::F32(&self.params.emb));
-                    ops.push(Operand::F32(&self.params.pos));
-                    for layer in &self.params.blocks {
-                        ops.extend(layer.iter().map(Operand::F32));
-                    }
-                }
-                self.eng.run_chain_act(ids.decode_step, &ops, &state_shape)?
-            };
-            state = state_next;
-            self.decode_steps += 1;
-            let lg = {
-                let ops = if let Some((gf, wh)) = &headp {
-                    [state.operand(), Operand::Buf(gf), Operand::Buf(wh)]
-                } else {
-                    [
-                        state.operand(),
-                        Operand::F32(&self.params.gf),
-                        Operand::F32(&self.params.wh),
-                    ]
-                };
-                self.eng.run_chain_act(ids.decode_logits, &ops, &logit1_shape)?.into_host()?
-            };
-            for (r, plan) in rows.iter_mut().enumerate() {
-                if !plan.alive() {
-                    continue;
-                }
-                plan.push(argmax(&lg.data[r * v..(r + 1) * v]));
-            }
-        }
-        self.eng.meter.set(MemCategory::Activations, 0);
-        Ok(rows
-            .into_iter()
-            .take(prompts.len())
-            .map(RowPlan::into_completion)
-            .collect())
+        self.serve.run_static(&reqs, eos, pad)
     }
 }
 
@@ -390,71 +131,18 @@ mod tests {
     use super::*;
 
     #[test]
-    fn row_plan_mirrors_legacy_stop_conditions() {
-        // eos on the first token: nothing emitted
-        let mut r = RowPlan::new(vec![1, 5, 3], 16, 4, 2);
-        assert!(r.alive());
-        r.push(2);
-        assert!(!r.alive());
-        let c = r.into_completion();
-        assert!(c.tokens.is_empty());
-        assert_eq!(c.stop, StopReason::Eos);
-
-        // max_new budget
-        let mut r = RowPlan::new(vec![1, 5, 3], 16, 2, 2);
-        r.push(7);
-        assert!(r.alive());
-        assert_eq!(r.step_input(), (7, 3));
-        r.push(8);
-        assert!(!r.alive());
-        let c = r.into_completion();
-        assert_eq!(c.tokens, vec![7, 8]);
-        assert_eq!(c.stop, StopReason::MaxNew);
-        assert!(!c.prompt_truncated);
-    }
-
-    #[test]
-    fn row_plan_stops_when_the_window_fills() {
-        // cap 5, prompt 3 long: room for exactly 2 generated tokens
-        let mut r = RowPlan::new(vec![1, 5, 3], 5, 10, 2);
-        r.push(7);
-        assert!(r.alive());
-        r.push(8);
-        assert!(!r.alive());
-        let c = r.into_completion();
-        assert_eq!(c.tokens, vec![7, 8]);
-        assert_eq!(c.stop, StopReason::WindowFull);
-    }
-
-    #[test]
-    fn row_plan_truncates_oversized_prompts_like_legacy() {
-        let prompt: Vec<i32> = (0..20).collect();
-        let r = RowPlan::new(prompt, 8, 4, 2);
-        assert!(r.truncated);
-        assert_eq!(r.seq.len(), 7); // T - 1, legacy semantics
-        assert_eq!(r.step_input(), (6, 6));
-    }
-
-    #[test]
-    fn row_plan_max_new_zero_never_decodes() {
-        let r = RowPlan::new(vec![1], 8, 0, 2);
-        assert!(!r.alive());
-        assert_eq!(r.into_completion().stop, StopReason::MaxNew);
-    }
-
-    #[test]
-    fn frozen_rows_repeat_their_last_slot() {
-        let mut r = RowPlan::new(vec![1, 4], 16, 1, 2);
-        r.push(9);
-        assert!(!r.alive());
-        // frozen input: same token, same position, every step
-        assert_eq!(r.step_input(), (9, 2));
-        assert_eq!(r.step_input(), (9, 2));
-    }
-
-    #[test]
     fn argmax_picks_first_of_ties() {
         assert_eq!(argmax(&[0.0, 3.0, 3.0, -1.0]), 1);
         assert_eq!(argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn clip_prompt_reports_and_truncates_to_cap_minus_one() {
+        let mut seq: Vec<i32> = (0..10).collect();
+        assert!(clip_prompt(&mut seq, 8));
+        assert_eq!(seq.len(), 7);
+        let mut short = vec![1, 2, 3];
+        assert!(!clip_prompt(&mut short, 8));
+        assert_eq!(short.len(), 3);
     }
 }

@@ -1,10 +1,12 @@
-//! Layer-granular training engine + memory accounting + the batched
-//! KV-cached decode session (serving).
+//! Layer-granular training engine + memory accounting + the serving
+//! subsystem (static KV-cached decode and continuous batching).
 
 pub mod decode;
 pub mod memory;
+pub mod serve;
 pub mod trainer;
 
 pub use decode::{Completion, DecodeSession, StopReason};
 pub use memory::{MemCategory, MemoryMeter};
+pub use serve::{Request, Sampler, SamplerSpec, ServeSession};
 pub use trainer::{Batch, Engine, Grads, StepOutput, Touched, TrainMask};

@@ -1,0 +1,24 @@
+//! Serving subsystem (DESIGN.md §10): continuous batching + pluggable
+//! sampling over the decode ABI.
+//!
+//! Three layers:
+//!
+//! * [`session`] — [`ServeSession`]: the row-slot lifecycle
+//!   (Vacant → Prefilling → Decoding → Drained) and the admission queue
+//!   that hands freed rows to waiting requests mid-decode;
+//! * [`sampler`] — the [`Sampler`] trait (greedy / temperature / top-k /
+//!   top-p), seeded per request so decodes are reproducible and
+//!   independent of batch placement;
+//! * the shared `Engine` operand builders (`engine::trainer::ParamOp`)
+//!   this subsystem is built on, so the device/host flow decision is
+//!   never re-derived here.
+//!
+//! `engine::decode::DecodeSession` remains the static-batch greedy
+//! wrapper over [`ServeSession`] — the parity baseline (`it_decode.rs`)
+//! and the `LISA_DECODE=legacy` contract are unchanged.
+
+pub mod sampler;
+pub mod session;
+
+pub use sampler::{request_seed, Sampler, SamplerSpec};
+pub use session::{Request, ServeSession};

@@ -1,0 +1,391 @@
+//! Pluggable decode-time sampling over the `decode_logits` download
+//! (DESIGN.md §10).
+//!
+//! **Determinism contract.** A sampler is seeded *per request* (one
+//! [`Rng`] stream each, derived from the request's seed), so a completion
+//! depends only on `(prompt, spec, seed)` — never on batch placement,
+//! admission order, or what the neighbouring rows are doing. That is what
+//! makes continuous batching testable: `tests/it_serve.rs` asserts every
+//! served completion equals a solo static-batch decode of the same
+//! request.
+//!
+//! **Degeneracies** (asserted in tests): `temperature <= 0` and
+//! `top_k == 1` reproduce [`argmax`] token for token by construction —
+//! both short-circuit into the same first-of-ties argmax the greedy path
+//! and the legacy full-forward loop use, so "sampling off" can never
+//! drift from the PR 4 parity baseline. `top_p <= 0` keeps only the head
+//! of the nucleus (argmax again); `top_p >= 1` is full-vocab temperature
+//! sampling.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::engine::decode::argmax;
+use crate::util::rng::Rng;
+
+/// Decode-time sampling policy — CLI-shaped (`--sample` / `--temperature`
+/// / `--top-k` / `--top-p`), cheap to copy into every [`super::Request`].
+/// Build one stateful [`Sampler`] per request via [`SamplerSpec::build`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum SamplerSpec {
+    /// First-of-ties argmax — the PR 4 behavior and the parity baseline.
+    #[default]
+    Greedy,
+    /// Softmax at `temperature` over the full vocabulary.
+    Temperature { temperature: f32 },
+    /// Keep the `k` highest logits (first-of-ties order), renormalize at
+    /// `temperature`.
+    TopK { k: usize, temperature: f32 },
+    /// Nucleus sampling: the smallest probability-sorted prefix with
+    /// cumulative mass `>= p`, renormalized at `temperature`.
+    TopP { p: f32, temperature: f32 },
+}
+
+impl SamplerSpec {
+    /// Parse the CLI surface: `mode` names the policy, the scalars ride
+    /// along (`lisa ... --sample top-k --top-k 40 --temperature 0.8`).
+    pub fn parse(mode: &str, temperature: f32, k: usize, p: f32) -> Result<SamplerSpec> {
+        ensure!(
+            temperature.is_finite() && temperature >= 0.0,
+            "--temperature must be finite and >= 0 (got {temperature})"
+        );
+        Ok(match mode {
+            "greedy" => SamplerSpec::Greedy,
+            "temperature" => SamplerSpec::Temperature { temperature },
+            "top-k" | "topk" => {
+                ensure!(k >= 1, "--sample top-k needs --top-k >= 1");
+                SamplerSpec::TopK { k, temperature }
+            }
+            "top-p" | "topp" | "nucleus" => {
+                ensure!(
+                    p.is_finite() && p > 0.0 && p <= 1.0,
+                    "--sample top-p needs 0 < --top-p <= 1 (got {p})"
+                );
+                SamplerSpec::TopP { p, temperature }
+            }
+            other => bail!(
+                "unknown sampling policy '{other}' — \
+                 expected greedy|temperature|top-k|top-p"
+            ),
+        })
+    }
+
+    /// Whether this spec provably degenerates to first-of-ties argmax (no
+    /// RNG draw ever happens; the decode is greedy-deterministic).
+    pub fn is_greedy(&self) -> bool {
+        match *self {
+            SamplerSpec::Greedy => true,
+            SamplerSpec::Temperature { temperature } => temperature <= 0.0,
+            SamplerSpec::TopK { k, temperature } => k == 1 || temperature <= 0.0,
+            SamplerSpec::TopP { p, temperature } => p <= 0.0 || temperature <= 0.0,
+        }
+    }
+
+    /// Stable display label for tables/bench arms.
+    pub fn label(&self) -> String {
+        match *self {
+            SamplerSpec::Greedy => "greedy".into(),
+            SamplerSpec::Temperature { temperature } => format!("temperature(T={temperature})"),
+            SamplerSpec::TopK { k, temperature } => format!("top-k(k={k},T={temperature})"),
+            SamplerSpec::TopP { p, temperature } => format!("top-p(p={p},T={temperature})"),
+        }
+    }
+
+    /// Instantiate the per-request sampler. `seed` is the request's own
+    /// stream (see [`request_seed`]); greedy-degenerate specs never draw
+    /// from it.
+    pub fn build(&self, seed: u64) -> Box<dyn Sampler> {
+        if self.is_greedy() {
+            return Box::new(GreedySampler);
+        }
+        match *self {
+            SamplerSpec::Greedy => unreachable!("handled by is_greedy"),
+            SamplerSpec::Temperature { temperature } => Box::new(TemperatureSampler {
+                temperature,
+                rng: Rng::new(seed),
+            }),
+            SamplerSpec::TopK { k, temperature } => Box::new(TopKSampler {
+                k,
+                temperature,
+                rng: Rng::new(seed),
+            }),
+            SamplerSpec::TopP { p, temperature } => Box::new(TopPSampler {
+                p,
+                temperature,
+                rng: Rng::new(seed),
+            }),
+        }
+    }
+}
+
+/// Derive request `idx`'s sampler seed from one base seed (`--gen-seed`).
+/// Pure function of `(base, idx)` so the solo-decode parity reference can
+/// reproduce any request's stream without replaying the queue.
+pub fn request_seed(base: u64, idx: usize) -> u64 {
+    // golden-ratio stride, same constant family as util::rng's SplitMix64
+    base ^ (idx as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
+/// Picks the next token id from one row of decode logits `[V]`. Stateful:
+/// owns the request's RNG stream, one draw per sampled token.
+pub trait Sampler {
+    fn pick(&mut self, logits: &[f32]) -> i32;
+}
+
+/// First-of-ties argmax (shared with the legacy path via
+/// [`crate::engine::decode::argmax`]).
+pub struct GreedySampler;
+
+impl Sampler for GreedySampler {
+    fn pick(&mut self, logits: &[f32]) -> i32 {
+        argmax(logits)
+    }
+}
+
+/// `(logit desc, index asc)` — the same first-of-ties order `argmax`
+/// uses, as a total order (the index tiebreak means no two candidates
+/// compare equal), so every cutoff below is deterministic.
+fn by_logit_desc(logits: &[f32], a: usize, b: usize) -> std::cmp::Ordering {
+    logits[b]
+        .partial_cmp(&logits[a])
+        .unwrap_or(std::cmp::Ordering::Equal)
+        .then(a.cmp(&b))
+}
+
+/// Softmax weights at `temperature` for the given candidate logits,
+/// max-subtracted for stability; f64 so the cumulative walk is exact
+/// enough to be reproducible across platforms.
+fn softmax_weights(logits: &[f32], idx: &[usize], temperature: f32) -> Vec<f64> {
+    let t = temperature as f64;
+    let mx = idx
+        .iter()
+        .map(|&i| logits[i] as f64)
+        .fold(f64::NEG_INFINITY, f64::max);
+    idx.iter()
+        .map(|&i| (((logits[i] as f64) - mx) / t).exp())
+        .collect()
+}
+
+/// Candidate indices fully sorted by [`by_logit_desc`] (top-p needs the
+/// whole order to walk the nucleus).
+fn sorted_candidates(logits: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| by_logit_desc(logits, a, b));
+    idx
+}
+
+/// The `k` best candidates in [`by_logit_desc`] order without sorting
+/// the whole vocabulary: O(V + k log k) select-then-sort. The selected
+/// *set* is unique (total order), so this matches a full sort's prefix.
+fn top_k_candidates(logits: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, |&a, &b| by_logit_desc(logits, a, b));
+        idx.truncate(k);
+    }
+    idx.sort_by(|&a, &b| by_logit_desc(logits, a, b));
+    idx
+}
+
+pub struct TemperatureSampler {
+    temperature: f32,
+    rng: Rng,
+}
+
+impl Sampler for TemperatureSampler {
+    fn pick(&mut self, logits: &[f32]) -> i32 {
+        // full-vocab softmax in token order: the drawn index IS the token
+        let t = self.temperature as f64;
+        let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let w: Vec<f64> = logits.iter().map(|&x| (((x as f64) - mx) / t).exp()).collect();
+        self.rng.sample_weighted(&w) as i32
+    }
+}
+
+pub struct TopKSampler {
+    k: usize,
+    temperature: f32,
+    rng: Rng,
+}
+
+impl Sampler for TopKSampler {
+    fn pick(&mut self, logits: &[f32]) -> i32 {
+        let idx = top_k_candidates(logits, self.k.max(1));
+        let w = softmax_weights(logits, &idx, self.temperature);
+        idx[self.rng.sample_weighted(&w)] as i32
+    }
+}
+
+pub struct TopPSampler {
+    p: f32,
+    temperature: f32,
+    rng: Rng,
+}
+
+impl TopPSampler {
+    /// Size of the nucleus: the smallest prefix of the probability-sorted
+    /// candidates whose cumulative mass reaches `p` (always >= 1).
+    fn nucleus_len(weights: &[f64], p: f64) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut cum = 0.0;
+        for (n, w) in weights.iter().enumerate() {
+            cum += w;
+            if cum >= p * total {
+                return n + 1;
+            }
+        }
+        weights.len()
+    }
+}
+
+impl Sampler for TopPSampler {
+    fn pick(&mut self, logits: &[f32]) -> i32 {
+        let mut idx = sorted_candidates(logits);
+        // mass is measured at the sampling temperature (weights are
+        // descending because the candidates are logit-sorted)
+        let mut w = softmax_weights(logits, &idx, self.temperature);
+        let n = Self::nucleus_len(&w, self.p as f64);
+        idx.truncate(n);
+        w.truncate(n);
+        idx[self.rng.sample_weighted(&w)] as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits() -> Vec<f32> {
+        vec![0.5, 2.0, -1.0, 2.0, 1.5, -3.0, 0.0, 1.9]
+    }
+
+    #[test]
+    fn zero_temperature_is_argmax_token_for_token() {
+        let mut rng = Rng::new(3);
+        for spec in [
+            SamplerSpec::Temperature { temperature: 0.0 },
+            SamplerSpec::TopK { k: 5, temperature: 0.0 },
+            SamplerSpec::TopP { p: 0.9, temperature: 0.0 },
+        ] {
+            assert!(spec.is_greedy());
+            let mut s = spec.build(7);
+            for _ in 0..200 {
+                let row: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+                assert_eq!(s.pick(&row), argmax(&row), "{spec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_one_is_argmax_including_ties() {
+        let mut s = SamplerSpec::TopK { k: 1, temperature: 1.0 }.build(11);
+        assert!(SamplerSpec::TopK { k: 1, temperature: 1.0 }.is_greedy());
+        assert_eq!(s.pick(&logits()), 1); // first of the 2.0 tie
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            let row: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+            assert_eq!(s.pick(&row), argmax(&row));
+        }
+    }
+
+    #[test]
+    fn seeded_sampling_is_bit_reproducible() {
+        for spec in [
+            SamplerSpec::Temperature { temperature: 0.8 },
+            SamplerSpec::TopK { k: 4, temperature: 1.2 },
+            SamplerSpec::TopP { p: 0.85, temperature: 1.0 },
+        ] {
+            let mut a = spec.build(42);
+            let mut b = spec.build(42);
+            let mut rng = Rng::new(9);
+            for _ in 0..300 {
+                let row: Vec<f32> = (0..24).map(|_| rng.normal_f32()).collect();
+                assert_eq!(a.pick(&row), b.pick(&row), "{spec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_never_leaves_the_k_best() {
+        let k = 3;
+        let mut s = SamplerSpec::TopK { k, temperature: 2.0 }.build(1);
+        let mut rng = Rng::new(13);
+        for _ in 0..300 {
+            let row: Vec<f32> = (0..20).map(|_| rng.normal_f32()).collect();
+            let allowed: Vec<i32> =
+                sorted_candidates(&row)[..k].iter().map(|&i| i as i32).collect();
+            assert!(allowed.contains(&s.pick(&row)));
+        }
+    }
+
+    #[test]
+    fn top_p_mass_cutoff_property() {
+        // property: the nucleus is the smallest sorted prefix with mass
+        // >= p, and every drawn token lies inside it
+        let mut rng = Rng::new(17);
+        for _ in 0..200 {
+            let row: Vec<f32> = (0..24).map(|_| rng.normal_f32() * 2.0).collect();
+            let p = 0.05 + 0.9 * rng.f64() as f32;
+            let idx = sorted_candidates(&row);
+            let w = softmax_weights(&row, &idx, 1.0);
+            let total: f64 = w.iter().sum();
+            let n = TopPSampler::nucleus_len(&w, p as f64);
+            let mass: f64 = w[..n].iter().sum::<f64>() / total;
+            assert!(mass >= p as f64 - 1e-12, "mass {mass} < p {p}");
+            if n > 1 {
+                let prev: f64 = w[..n - 1].iter().sum::<f64>() / total;
+                assert!(prev < p as f64, "prefix {} already reaches p {p}", n - 1);
+            }
+            let nucleus: Vec<i32> = idx[..n].iter().map(|&i| i as i32).collect();
+            let mut s = SamplerSpec::TopP { p, temperature: 1.0 }.build(23);
+            for _ in 0..20 {
+                assert!(nucleus.contains(&s.pick(&row)));
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_selection_matches_the_full_sort_prefix() {
+        let mut rng = Rng::new(21);
+        for _ in 0..200 {
+            let row: Vec<f32> = (0..40).map(|_| rng.normal_f32()).collect();
+            let k = 1 + rng.below(12);
+            assert_eq!(top_k_candidates(&row, k), &sorted_candidates(&row)[..k]);
+        }
+    }
+
+    #[test]
+    fn top_p_full_mass_covers_the_vocab() {
+        let row = logits();
+        let idx = sorted_candidates(&row);
+        let w = softmax_weights(&row, &idx, 1.0);
+        assert_eq!(TopPSampler::nucleus_len(&w, 1.0), row.len());
+    }
+
+    #[test]
+    fn request_seed_is_per_index_stable() {
+        assert_eq!(request_seed(42, 0), request_seed(42, 0));
+        assert_ne!(request_seed(42, 0), request_seed(42, 1));
+        assert_ne!(request_seed(42, 3), request_seed(43, 3));
+    }
+
+    #[test]
+    fn parse_round_trips_the_cli_surface() {
+        assert_eq!(SamplerSpec::parse("greedy", 1.0, 0, 1.0).unwrap(), SamplerSpec::Greedy);
+        assert_eq!(
+            SamplerSpec::parse("temperature", 0.7, 0, 1.0).unwrap(),
+            SamplerSpec::Temperature { temperature: 0.7 }
+        );
+        assert_eq!(
+            SamplerSpec::parse("top-k", 1.0, 40, 1.0).unwrap(),
+            SamplerSpec::TopK { k: 40, temperature: 1.0 }
+        );
+        assert_eq!(
+            SamplerSpec::parse("top-p", 1.0, 0, 0.9).unwrap(),
+            SamplerSpec::TopP { p: 0.9, temperature: 1.0 }
+        );
+        assert!(SamplerSpec::parse("top-k", 1.0, 0, 1.0).is_err());
+        assert!(SamplerSpec::parse("top-p", 1.0, 0, 0.0).is_err());
+        assert!(SamplerSpec::parse("beam", 1.0, 0, 1.0).is_err());
+        assert!(SamplerSpec::parse("temperature", f32::NAN, 0, 1.0).is_err());
+    }
+}

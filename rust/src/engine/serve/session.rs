@@ -1,0 +1,759 @@
+//! Continuous-batching serve session over the decode ABI (DESIGN.md §10).
+//!
+//! [`ServeSession::run`] drives one device-resident batch through the
+//! decode segments and keeps every row busy: requests past the batch
+//! width wait in an admission queue and are handed a row the moment a
+//! completion drains (EOS / budget / window), instead of the whole batch
+//! blocking on its slowest row. The row-slot lifecycle is
+//!
+//! ```text
+//! Vacant -> Prefilling -> Decoding -> Drained -> (admission) Prefilling ...
+//! ```
+//!
+//! **Two prefill modes, one invariant.** When no row holds in-flight K/V
+//! (session start, or a full drain with requests still queued), admitted
+//! prompts prefill as one batch through the training segments
+//! (`embed_fwd -> (prefill_kv + block_fwd)^L -> [head_logits] ->
+//! pack_state`). When busy rows exist, an admitted row *streams* its
+//! prompt through `decode_step` — one K/V column per step, teacher-forced
+//! — while the other rows keep decoding in the same executions. Either
+//! way a step rewrites only each row's own current column: frozen and
+//! drained rows replay their last `(tok, pidx)`, which rewrites the same
+//! cache bytes (idempotent), so admission never perturbs a busy row and
+//! rides the packed-state ABI without any new segment export.
+//!
+//! `head_logits` is skipped entirely when no prefilled row consumes it —
+//! every first token forced, or every row zero-budget — saving the
+//! `[B, T, V]` download (the ROADMAP serving item; asserted via
+//! `ExecStats` in `tests/it_decode.rs`). The per-step `decode_logits`
+//! download is likewise skipped on steps where no row reads it (only
+//! mid-prompt columns streamed).
+//!
+//! Samplers are per-request seeded ([`super::sampler`]), so a completion
+//! is a function of `(prompt, spec, seed)` alone — `tests/it_serve.rs`
+//! asserts continuous-batching parity against solo decodes. Staleness is
+//! structural, exactly as for the static path: the session borrows the
+//! engine and the parameter store for its whole lifetime.
+
+use anyhow::{ensure, Result};
+
+use crate::engine::decode::{clip_prompt, Completion, StopReason};
+use crate::engine::memory::MemCategory;
+use crate::engine::trainer::{Act, Engine, ParamOp};
+use crate::model::ModelParams;
+use crate::runtime::{HostTensor, HostTensorI32, Operand, DECODE_ABI};
+
+use super::sampler::{Sampler, SamplerSpec};
+
+/// One generation request: a token-id prompt (including leading specials,
+/// see `eval::generate::encode_prompt`) plus its decode policy.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub prompt: Vec<i32>,
+    /// Generation budget; 0 decodes nothing (and costs nothing).
+    pub max_new: usize,
+    /// Sampling policy; [`SamplerSpec::Greedy`] reproduces the static
+    /// greedy path bit for bit.
+    pub sampler: SamplerSpec,
+    /// Seed of this request's sampler stream (ignored when the spec is
+    /// greedy-degenerate).
+    pub seed: u64,
+    /// Forced first generated token: emitted without consulting the
+    /// model. A batch whose every row is forced (or zero-budget) skips
+    /// the prefill `head_logits` download.
+    pub first_token: Option<i32>,
+}
+
+impl Request {
+    pub fn greedy(prompt: Vec<i32>, max_new: usize) -> Request {
+        Request {
+            prompt,
+            max_new,
+            sampler: SamplerSpec::Greedy,
+            seed: 0,
+            first_token: None,
+        }
+    }
+
+    pub fn sampled(prompt: Vec<i32>, max_new: usize, sampler: SamplerSpec, seed: u64) -> Request {
+        Request { prompt, max_new, sampler, seed, first_token: None }
+    }
+}
+
+/// Pure per-row decode bookkeeping (unit-tested without a runtime):
+/// mirrors the legacy greedy loop's stop conditions exactly so the cached
+/// paths stay token-for-token compatible with it.
+#[derive(Debug)]
+pub(crate) struct RowPlan {
+    /// Prompt plus everything generated so far.
+    pub(crate) seq: Vec<i32>,
+    truncated: bool,
+    out: Vec<i32>,
+    stop: Option<StopReason>,
+    max_new: usize,
+    seq_cap: usize,
+    eos: i32,
+}
+
+impl RowPlan {
+    pub(crate) fn new(mut prompt: Vec<i32>, seq_cap: usize, max_new: usize, eos: i32) -> RowPlan {
+        assert!(!prompt.is_empty(), "decode rows need at least one token");
+        let truncated = clip_prompt(&mut prompt, seq_cap);
+        let stop = (max_new == 0).then_some(StopReason::MaxNew);
+        RowPlan { seq: prompt, truncated, out: Vec::new(), stop, max_new, seq_cap, eos }
+    }
+
+    pub(crate) fn alive(&self) -> bool {
+        self.stop.is_none()
+    }
+
+    /// Feed the token chosen for this row (sampled, argmax or forced).
+    pub(crate) fn push(&mut self, id: i32) {
+        debug_assert!(self.alive());
+        if id == self.eos {
+            self.stop = Some(StopReason::Eos);
+            return;
+        }
+        self.seq.push(id);
+        self.out.push(id);
+        if self.out.len() >= self.max_new {
+            self.stop = Some(StopReason::MaxNew);
+        } else if self.seq.len() >= self.seq_cap {
+            // the legacy loop breaks at the top of the next iteration
+            self.stop = Some(StopReason::WindowFull);
+        }
+    }
+
+    /// `(token, position)` this row contributes to the next `decode_step`.
+    /// Done rows in a still-running batch freeze on their last token —
+    /// rewriting the same cache slot with the same bytes (idempotent, and
+    /// rows are independent, so live rows are unaffected).
+    pub(crate) fn step_input(&self) -> (i32, i32) {
+        (*self.seq.last().expect("non-empty"), (self.seq.len() - 1) as i32)
+    }
+
+    pub(crate) fn into_completion(self) -> Completion {
+        Completion {
+            tokens: self.out,
+            prompt_truncated: self.truncated,
+            stop: self.stop.unwrap_or(StopReason::MaxNew),
+        }
+    }
+}
+
+/// Row-slot lifecycle (reported by [`RowSlot::state`]; the unit tier pins
+/// the transitions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum SlotState {
+    /// Never occupied (the queue ran out before this row was needed).
+    Vacant,
+    /// Streaming its prompt into the K/V cache (batched at session start,
+    /// one column per `decode_step` when admitted mid-decode).
+    Prefilling,
+    /// Emitting tokens.
+    Decoding,
+    /// Completion finished; replays its frozen `(tok, pidx)` idempotently
+    /// until harvested by the next admission (or the session end).
+    Drained,
+}
+
+struct Occupant {
+    /// Index into the session's request list (results return in order).
+    req: usize,
+    plan: RowPlan,
+    /// Prompt length after clipping — fixed at admission; `plan.seq`
+    /// grows past it as tokens are generated.
+    prompt_len: usize,
+    /// Prompt tokens whose K/V columns are already written.
+    fed: usize,
+    sampler: Box<dyn Sampler>,
+    first: Option<i32>,
+}
+
+impl Occupant {
+    fn state(&self) -> SlotState {
+        if !self.plan.alive() {
+            SlotState::Drained
+        } else if self.fed < self.prompt_len {
+            SlotState::Prefilling
+        } else {
+            SlotState::Decoding
+        }
+    }
+}
+
+/// One batch row and (maybe) the request occupying it.
+#[derive(Default)]
+pub(crate) struct RowSlot(Option<Occupant>);
+
+impl RowSlot {
+    pub(crate) fn state(&self) -> SlotState {
+        self.0.as_ref().map_or(SlotState::Vacant, Occupant::state)
+    }
+
+    pub(crate) fn live(&self) -> bool {
+        matches!(self.state(), SlotState::Prefilling | SlotState::Decoding)
+    }
+
+    /// No in-flight K/V this occupant still depends on — the row can take
+    /// part in a fresh batch prefill.
+    fn no_progress(&self) -> bool {
+        match self.state() {
+            SlotState::Vacant | SlotState::Drained => true,
+            SlotState::Prefilling => self.0.as_ref().expect("occupied").fed == 0,
+            SlotState::Decoding => false,
+        }
+    }
+
+    fn admit(&mut self, req_idx: usize, req: &Request, seq_cap: usize, eos: i32) {
+        debug_assert!(!self.live(), "admitting into a live row");
+        let plan = RowPlan::new(req.prompt.clone(), seq_cap, req.max_new, eos);
+        let prompt_len = plan.seq.len();
+        self.0 = Some(Occupant {
+            req: req_idx,
+            plan,
+            prompt_len,
+            fed: 0,
+            sampler: req.sampler.build(req.seed),
+            first: req.first_token,
+        });
+    }
+
+    /// Harvest a drained occupant's completion, freeing the row.
+    fn take_done(&mut self) -> Option<(usize, Completion)> {
+        if self.state() != SlotState::Drained {
+            return None;
+        }
+        let occ = self.0.take().expect("drained implies occupied");
+        Some((occ.req, occ.plan.into_completion()))
+    }
+
+    /// Whether this row consumes the prefill `head_logits` row (alive and
+    /// not forced) — all-false across the batch skips the download.
+    fn needs_prefill_logits(&self) -> bool {
+        self.state() == SlotState::Prefilling
+            && self.0.as_ref().expect("occupied").first.is_none()
+    }
+
+    /// Whether this row will read the *next* `decode_logits` row: it is
+    /// decoding, or this step's feed completes its prompt unforced. When
+    /// no row will, the whole `[B, 1, V]` download is skipped.
+    fn consumes_next_logits(&self) -> bool {
+        match &self.0 {
+            None => false,
+            Some(occ) => match occ.state() {
+                SlotState::Decoding => true,
+                SlotState::Prefilling => {
+                    occ.fed + 1 == occ.prompt_len && occ.first.is_none()
+                }
+                SlotState::Vacant | SlotState::Drained => false,
+            },
+        }
+    }
+
+    /// `(token, position)` columns this row feeds the next `decode_step`.
+    fn step_input(&self, pad: i32) -> (i32, i32) {
+        match &self.0 {
+            None => (pad, 0),
+            Some(occ) => match occ.state() {
+                SlotState::Prefilling => (occ.plan.seq[occ.fed], occ.fed as i32),
+                _ => occ.plan.step_input(),
+            },
+        }
+    }
+
+    /// Mark a batch-prefilled row fully fed and push its first token
+    /// (forced, or picked from its prefill-logits row).
+    fn finish_batch_prefill(
+        &mut self,
+        logits: Option<(&HostTensor, usize)>,
+        t_max: usize,
+        v: usize,
+    ) {
+        let Some(occ) = &mut self.0 else { return };
+        if occ.state() != SlotState::Prefilling {
+            return; // drained rows prefilled inertly (their grid row rides along)
+        }
+        occ.fed = occ.prompt_len;
+        let tok = match occ.first.take() {
+            Some(t) => t,
+            None => {
+                let (lg, row) = logits.expect("unforced rows need prefill logits");
+                let p = occ.prompt_len - 1;
+                occ.sampler.pick(&lg.data[(row * t_max + p) * v..(row * t_max + p + 1) * v])
+            }
+        };
+        occ.plan.push(tok);
+    }
+
+    /// Advance one decode step: a prefilling row records its fed column
+    /// (emitting its first token once the prompt is fully cached), a
+    /// decoding row samples its next token. `row_logits` is `None` only
+    /// on steps [`RowSlot::consumes_next_logits`] reported nobody needs.
+    fn consume(&mut self, row_logits: Option<&[f32]>) {
+        let Some(occ) = &mut self.0 else { return };
+        match occ.state() {
+            SlotState::Prefilling => {
+                occ.fed += 1;
+                if occ.fed == occ.prompt_len {
+                    let tok = match occ.first.take() {
+                        Some(t) => t,
+                        None => occ
+                            .sampler
+                            .pick(row_logits.expect("scheduler downloads consumed logits")),
+                    };
+                    occ.plan.push(tok);
+                }
+            }
+            SlotState::Decoding => {
+                let tok = occ
+                    .sampler
+                    .pick(row_logits.expect("scheduler downloads consumed logits"));
+                occ.plan.push(tok);
+            }
+            SlotState::Vacant | SlotState::Drained => {}
+        }
+    }
+}
+
+/// A continuous-batching decode session over one engine + parameter
+/// store. Construct per serving burst; the borrows make weight staleness
+/// structurally impossible (DESIGN.md §9/§10).
+pub struct ServeSession<'e, 'rt> {
+    eng: &'e mut Engine<'rt>,
+    params: &'e ModelParams,
+    /// `decode_step` executions across every batch of this session.
+    pub decode_steps: u64,
+    /// Whole-batch prefill passes (one per static chunk; continuous mode
+    /// pays one at start plus one per full-drain refill).
+    pub batch_prefills: u64,
+    /// Prompt columns written through `decode_step` by mid-decode
+    /// admissions (0 in static mode).
+    pub streamed_prompt_tokens: u64,
+    /// Requests admitted to a row (== requests served at session end).
+    pub admitted: u64,
+}
+
+impl<'e, 'rt> ServeSession<'e, 'rt> {
+    /// Whether the loaded artifacts carry the decode ABI for this
+    /// engine's backend (legacy dirs: no — callers fall back).
+    pub fn supported(eng: &Engine) -> bool {
+        eng.rt.manifest.supports_decode(&eng.rt.backend)
+    }
+
+    pub fn new(eng: &'e mut Engine<'rt>, params: &'e ModelParams) -> Result<Self> {
+        ensure!(
+            Self::supported(eng),
+            "artifact dir '{}' carries no decode-ABI v{DECODE_ABI} segments for \
+             backend '{}' — re-export with python/compile/aot.py or use the \
+             legacy full-forward path",
+            eng.rt.manifest.dir.display(),
+            eng.rt.backend
+        );
+        Ok(ServeSession {
+            eng,
+            params,
+            decode_steps: 0,
+            batch_prefills: 0,
+            streamed_prompt_tokens: 0,
+            admitted: 0,
+        })
+    }
+
+    /// Serve every request with continuous batching: one device-resident
+    /// batch, queued requests admitted into rows as they drain. Returns
+    /// one [`Completion`] per request, in request order. `eos` stops a
+    /// row (not emitted); `pad` fills unused rows and prompt tails.
+    pub fn run(&mut self, requests: &[Request], eos: i32, pad: i32) -> Result<Vec<Completion>> {
+        self.serve_queue(requests, eos, pad)
+    }
+
+    /// The static-batch schedule: requests processed in batch-width
+    /// chunks, each chunk prefilled together and drained completely
+    /// before the next starts. This is `DecodeSession::greedy`'s shape —
+    /// the parity baseline and the bench's "before" arm.
+    pub fn run_static(
+        &mut self,
+        requests: &[Request],
+        eos: i32,
+        pad: i32,
+    ) -> Result<Vec<Completion>> {
+        let bsz = self.eng.rt.manifest.batch;
+        let mut out = Vec::with_capacity(requests.len());
+        for chunk in requests.chunks(bsz) {
+            // a chunk never outnumbers the rows, so the in-loop admission
+            // below has nothing left to admit: no mid-decode admission
+            out.extend(self.serve_queue(chunk, eos, pad)?);
+        }
+        Ok(out)
+    }
+
+    fn serve_queue(&mut self, requests: &[Request], eos: i32, pad: i32) -> Result<Vec<Completion>> {
+        if requests.is_empty() {
+            return Ok(Vec::new());
+        }
+        let m = self.eng.rt.manifest.clone();
+        let (bsz, t_max, v) = (m.batch, m.seq, m.vocab);
+        let state_shape = vec![bsz, m.decode_state_rows(), m.d_model];
+        let logit1_shape = [bsz, 1, v];
+
+        let mut done: Vec<Option<Completion>> = (0..requests.len()).map(|_| None).collect();
+        let mut slots: Vec<RowSlot> = (0..bsz).map(|_| RowSlot::default()).collect();
+        let mut next = 0usize;
+        let mut state: Option<Act> = None;
+        // decode-loop parameter operands, built once on first use and
+        // served from the device cache across every step of the session
+        type DecOps<'p> = ([ParamOp<'p>; 2], Vec<Vec<ParamOp<'p>>>, [ParamOp<'p>; 2]);
+        let mut dec_ops: Option<DecOps<'e>> = None;
+
+        loop {
+            // ---- admission: hand freed rows to the queue head
+            for slot in slots.iter_mut() {
+                while next < requests.len() && !slot.live() {
+                    if let Some((req, c)) = slot.take_done() {
+                        done[req] = Some(c);
+                    }
+                    slot.admit(next, &requests[next], t_max, eos);
+                    self.admitted += 1;
+                    next += 1;
+                    // a zero-budget request drains instantly; the `while`
+                    // hands the same row straight to the next request
+                }
+            }
+            if !slots.iter().any(RowSlot::live) {
+                break; // queue exhausted and every row drained
+            }
+
+            // ---- prefill: batched while no row holds in-flight K/V;
+            // otherwise admitted rows stream through decode_step below
+            if slots.iter().all(RowSlot::no_progress) {
+                state = Some(self.batch_prefill(&mut slots, pad)?);
+                continue; // first tokens may have drained rows: re-admit
+            }
+
+            // ---- one decode step advances every row
+            if dec_ops.is_none() {
+                let ep = self.eng.embed_ops(self.params)?;
+                let mut blocks = Vec::with_capacity(m.n_layers);
+                for l in 0..m.n_layers {
+                    blocks.push(self.eng.block_ops(self.params, l)?);
+                }
+                let ho = self.eng.head_ops(self.params)?;
+                dec_ops = Some((ep, blocks, ho));
+            }
+            let (ep, blocks, ho) = dec_ops.as_ref().expect("just built");
+
+            let (mut tokc, mut pidxc) =
+                (Vec::with_capacity(bsz), Vec::with_capacity(bsz));
+            let mut needs_logits = false;
+            for slot in slots.iter() {
+                if slot.state() == SlotState::Prefilling {
+                    self.streamed_prompt_tokens += 1;
+                }
+                needs_logits |= slot.consumes_next_logits();
+                let (t, p) = slot.step_input(pad);
+                tokc.push(t);
+                pidxc.push(p);
+            }
+            let tok = HostTensorI32::from_vec(&[bsz, 1], tokc);
+            let pidx = HostTensorI32::from_vec(&[bsz, 1], pidxc);
+            let st = state.as_ref().expect("live non-fresh rows imply a prefilled state");
+            let state_next = {
+                let mut ops: Vec<Operand> =
+                    vec![Operand::I32(&tok), Operand::I32(&pidx), st.operand()];
+                ops.push(ep[0].operand());
+                ops.push(ep[1].operand());
+                for bo in blocks {
+                    ops.extend(bo.iter().map(ParamOp::operand));
+                }
+                self.eng.run_chain_act(self.eng.ids.decode_step, &ops, &state_shape)?
+            };
+            state = Some(state_next);
+            self.decode_steps += 1;
+            // the [B, 1, V] download happens only when some row reads it —
+            // a step that only streams mid-prompt columns skips it
+            let lg = if needs_logits {
+                let st = state.as_ref().expect("just stepped");
+                let ops = [st.operand(), ho[0].operand(), ho[1].operand()];
+                Some(
+                    self.eng
+                        .run_chain_act(self.eng.ids.decode_logits, &ops, &logit1_shape)?
+                        .into_host()?,
+                )
+            } else {
+                None
+            };
+            for (r, slot) in slots.iter_mut().enumerate() {
+                slot.consume(lg.as_ref().map(|lg| &lg.data[r * v..(r + 1) * v]));
+            }
+        }
+
+        // final harvest
+        for slot in slots.iter_mut() {
+            if let Some((req, c)) = slot.take_done() {
+                done[req] = Some(c);
+            }
+        }
+        self.eng.meter.set(MemCategory::Activations, 0);
+        Ok(done
+            .into_iter()
+            .map(|c| c.expect("every request drains before the session ends"))
+            .collect())
+    }
+
+    /// Batched prefill of every occupied row's current sequence:
+    /// `embed_fwd -> (prefill_kv + block_fwd)^L -> [head_logits] ->
+    /// pack_state`, returning the packed device-resident state. The
+    /// `head_logits` call (and its `[B, T, V]` download) is skipped when
+    /// no row consumes it.
+    fn batch_prefill(&mut self, slots: &mut [RowSlot], pad: i32) -> Result<Act> {
+        let m = self.eng.rt.manifest.clone();
+        let (bsz, t_max, d, v) = (m.batch, m.seq, m.d_model, m.vocab);
+        let mut tokens = vec![pad; bsz * t_max];
+        for (r, slot) in slots.iter().enumerate() {
+            if let Some(occ) = &slot.0 {
+                tokens[r * t_max..r * t_max + occ.plan.seq.len()]
+                    .copy_from_slice(&occ.plan.seq);
+            }
+        }
+        let tokens = HostTensorI32::from_vec(&[bsz, t_max], tokens);
+
+        let ids = self.eng.ids;
+        let hs = self.eng.h_shape();
+        let kv_shape = vec![bsz, 2 * t_max, d];
+        let state_shape = vec![bsz, m.decode_state_rows(), d];
+
+        let ep = self.eng.embed_ops(self.params)?;
+        let ops = [Operand::I32(&tokens), ep[0].operand(), ep[1].operand()];
+        let mut h = self.eng.run_chain_act(ids.embed_fwd, &ops, &hs)?;
+        let mut kvs: Vec<Act> = Vec::with_capacity(m.n_layers);
+        // meter the real serving peak: the growing per-layer K/V buffers
+        // plus the one live residual are resident together during prefill
+        let mut kv_bytes = 0u64;
+        self.eng.meter.set(MemCategory::Activations, h.bytes() as u64);
+        for l in 0..m.n_layers {
+            let bo = self.eng.block_ops(self.params, l)?;
+            // prefill_kv ABI: (h, g1, wk, wv) — block ABI indices 0/2/3
+            let kv_ops = [h.operand(), bo[0].operand(), bo[2].operand(), bo[3].operand()];
+            kvs.push(self.eng.run_chain_act(ids.prefill_kv, &kv_ops, &kv_shape)?);
+            let mut ops = vec![h.operand()];
+            ops.extend(bo.iter().map(ParamOp::operand));
+            let h_next = self.eng.run_chain_act(ids.block_fwd, &ops, &hs)?;
+            h = h_next;
+            kv_bytes += kvs.last().expect("pushed").bytes() as u64;
+            self.eng
+                .meter
+                .set(MemCategory::Activations, kv_bytes + h.bytes() as u64);
+        }
+        // head_logits only when some prefilled row actually consumes it
+        // (skipped for forced first tokens / zero-budget batches)
+        let logits: Option<HostTensor> = if slots.iter().any(RowSlot::needs_prefill_logits) {
+            let ho = self.eng.head_ops(self.params)?;
+            let ops = [h.operand(), ho[0].operand(), ho[1].operand()];
+            Some(
+                self.eng
+                    .run_chain_act(ids.head_logits, &ops, &[bsz, t_max, v])?
+                    .into_host()?,
+            )
+        } else {
+            None
+        };
+        let state = {
+            let kv_ops: Vec<Operand> = kvs.iter().map(Act::operand).collect();
+            self.eng.run_chain_act(ids.pack_state, &kv_ops, &state_shape)?
+        };
+        // packing peak: the per-layer buffers and the packed state coexist
+        self.eng
+            .meter
+            .set(MemCategory::Activations, kv_bytes + state.bytes() as u64);
+        drop(kvs);
+        self.eng.meter.set(MemCategory::Activations, state.bytes() as u64);
+        self.batch_prefills += 1;
+
+        // first token per prefilled row, from the logits at position len-1
+        for (r, slot) in slots.iter_mut().enumerate() {
+            slot.finish_batch_prefill(logits.as_ref().map(|lg| (lg, r)), t_max, v);
+        }
+        Ok(state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- RowPlan: the legacy-loop stop-condition mirror -----------------
+
+    #[test]
+    fn row_plan_mirrors_legacy_stop_conditions() {
+        // eos on the first token: nothing emitted
+        let mut r = RowPlan::new(vec![1, 5, 3], 16, 4, 2);
+        assert!(r.alive());
+        r.push(2);
+        assert!(!r.alive());
+        let c = r.into_completion();
+        assert!(c.tokens.is_empty());
+        assert_eq!(c.stop, StopReason::Eos);
+
+        // max_new budget
+        let mut r = RowPlan::new(vec![1, 5, 3], 16, 2, 2);
+        r.push(7);
+        assert!(r.alive());
+        assert_eq!(r.step_input(), (7, 3));
+        r.push(8);
+        assert!(!r.alive());
+        let c = r.into_completion();
+        assert_eq!(c.tokens, vec![7, 8]);
+        assert_eq!(c.stop, StopReason::MaxNew);
+        assert!(!c.prompt_truncated);
+    }
+
+    #[test]
+    fn row_plan_stops_when_the_window_fills() {
+        // cap 5, prompt 3 long: room for exactly 2 generated tokens
+        let mut r = RowPlan::new(vec![1, 5, 3], 5, 10, 2);
+        r.push(7);
+        assert!(r.alive());
+        r.push(8);
+        assert!(!r.alive());
+        let c = r.into_completion();
+        assert_eq!(c.tokens, vec![7, 8]);
+        assert_eq!(c.stop, StopReason::WindowFull);
+    }
+
+    #[test]
+    fn row_plan_truncates_oversized_prompts_like_legacy() {
+        let prompt: Vec<i32> = (0..20).collect();
+        let r = RowPlan::new(prompt, 8, 4, 2);
+        assert!(r.truncated);
+        assert_eq!(r.seq.len(), 7); // T - 1, legacy semantics
+        assert_eq!(r.step_input(), (6, 6));
+    }
+
+    #[test]
+    fn row_plan_max_new_zero_never_decodes() {
+        let r = RowPlan::new(vec![1], 8, 0, 2);
+        assert!(!r.alive());
+        assert_eq!(r.into_completion().stop, StopReason::MaxNew);
+    }
+
+    #[test]
+    fn frozen_rows_repeat_their_last_slot() {
+        let mut r = RowPlan::new(vec![1, 4], 16, 1, 2);
+        r.push(9);
+        assert!(!r.alive());
+        // frozen input: same token, same position, every step
+        assert_eq!(r.step_input(), (9, 2));
+        assert_eq!(r.step_input(), (9, 2));
+    }
+
+    // ---- RowSlot: the Vacant -> Prefilling -> Decoding -> Drained walk --
+
+    const EOS: i32 = 2;
+    const PAD: i32 = 0;
+
+    fn req(prompt: Vec<i32>, max_new: usize) -> Request {
+        Request::greedy(prompt, max_new)
+    }
+
+    /// One decode-logits row that makes the greedy sampler pick `tok`.
+    fn row_for(tok: i32, v: usize) -> Vec<f32> {
+        let mut r = vec![0.0; v];
+        r[tok as usize] = 5.0;
+        r
+    }
+
+    #[test]
+    fn slot_walks_the_lifecycle_via_streamed_admission() {
+        let mut s = RowSlot::default();
+        assert_eq!(s.state(), SlotState::Vacant);
+        assert_eq!(s.step_input(PAD), (PAD, 0));
+        assert!(!s.live());
+
+        s.admit(0, &req(vec![1, 5, 3], 2), 16, EOS);
+        assert_eq!(s.state(), SlotState::Prefilling);
+        assert!(s.live() && s.needs_prefill_logits());
+
+        // streamed prefill: one prompt column per step, teacher-forced
+        assert_eq!(s.step_input(PAD), (1, 0));
+        s.consume(Some(&row_for(9, 16))); // logits ignored mid-prompt
+        assert_eq!(s.state(), SlotState::Prefilling);
+        assert_eq!(s.step_input(PAD), (5, 1));
+        s.consume(Some(&row_for(9, 16)));
+        assert_eq!(s.step_input(PAD), (3, 2));
+        s.consume(Some(&row_for(7, 16))); // last prompt column: first token
+        assert_eq!(s.state(), SlotState::Decoding);
+
+        assert_eq!(s.step_input(PAD), (7, 3));
+        s.consume(Some(&row_for(8, 16))); // budget of 2 reached
+        assert_eq!(s.state(), SlotState::Drained);
+        // drained rows freeze idempotently until harvested
+        assert_eq!(s.step_input(PAD), (8, 4));
+        assert_eq!(s.step_input(PAD), (8, 4));
+
+        let (req_idx, c) = s.take_done().expect("drained");
+        assert_eq!(req_idx, 0);
+        assert_eq!(c.tokens, vec![7, 8]);
+        assert_eq!(s.state(), SlotState::Vacant);
+    }
+
+    #[test]
+    fn batch_prefill_completion_skips_streaming() {
+        let mut s = RowSlot::default();
+        s.admit(3, &req(vec![1, 5], 4), 16, EOS);
+        assert!(s.no_progress(), "fed == 0 joins a fresh batch prefill");
+        let lg = HostTensor::from_vec(&[1, 16, 8], {
+            let mut d = vec![0.0; 16 * 8];
+            d[8 + 6] = 5.0; // position len-1 == 1 picks token 6 (vocab 8)
+            d
+        });
+        s.finish_batch_prefill(Some((&lg, 0)), 16, 8);
+        assert_eq!(s.state(), SlotState::Decoding);
+        assert!(!s.no_progress());
+        assert_eq!(s.step_input(PAD), (6, 2));
+    }
+
+    #[test]
+    fn forced_first_token_needs_no_prefill_logits() {
+        let mut s = RowSlot::default();
+        let mut r = req(vec![1, 5], 3);
+        r.first_token = Some(4);
+        s.admit(0, &r, 16, EOS);
+        assert!(!s.needs_prefill_logits());
+        s.finish_batch_prefill(None, 16, 8);
+        assert_eq!(s.state(), SlotState::Decoding);
+        assert_eq!(s.step_input(PAD), (4, 2));
+
+        // forced also works through the streamed path
+        let mut s = RowSlot::default();
+        let mut r = req(vec![9], 3);
+        r.first_token = Some(5);
+        s.admit(1, &r, 16, EOS);
+        assert_eq!(s.step_input(PAD), (9, 0));
+        s.consume(Some(&row_for(2, 16))); // logits ignored: forced wins
+        assert_eq!(s.step_input(PAD), (5, 1));
+    }
+
+    #[test]
+    fn zero_budget_request_drains_on_admission() {
+        let mut s = RowSlot::default();
+        s.admit(0, &req(vec![1, 2, 3], 0), 16, EOS);
+        assert_eq!(s.state(), SlotState::Drained);
+        assert!(!s.needs_prefill_logits());
+        let (_, c) = s.take_done().unwrap();
+        assert!(c.tokens.is_empty());
+        assert_eq!(c.stop, StopReason::MaxNew);
+    }
+
+    #[test]
+    fn eos_as_first_streamed_token_drains_immediately() {
+        let mut s = RowSlot::default();
+        s.admit(0, &req(vec![1, 5], 4), 16, EOS);
+        s.consume(Some(&row_for(9, 16)));
+        s.consume(Some(&row_for(EOS, 16))); // first token is <eos>
+        assert_eq!(s.state(), SlotState::Drained);
+        let (_, c) = s.take_done().unwrap();
+        assert!(c.tokens.is_empty());
+        assert_eq!(c.stop, StopReason::Eos);
+    }
+}

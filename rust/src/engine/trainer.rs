@@ -259,6 +259,28 @@ impl Act {
     }
 }
 
+/// One parameter operand resolved for the engine's current flow mode: a
+/// cached device buffer under `device_flow`, the borrowed host tensor
+/// otherwise. Produced by the `Engine` operand builders
+/// ([`Engine::embed_ops`] / [`Engine::block_ops`] / [`Engine::head_ops`] /
+/// [`Engine::adapter_ops`]) — the single home of the
+/// `if device_flow { Operand::Buf } else { Operand::F32 }` decision that
+/// used to be repeated across the trainer, the LoRA path and the decode
+/// loops.
+pub(crate) enum ParamOp<'p> {
+    Dev(Rc<DeviceTensor>),
+    Host(&'p HostTensor),
+}
+
+impl ParamOp<'_> {
+    pub(crate) fn operand(&self) -> Operand<'_> {
+        match self {
+            ParamOp::Dev(b) => Operand::Buf(b),
+            ParamOp::Host(t) => Operand::F32(t),
+        }
+    }
+}
+
 /// Interned handles for every segment the engine schedules (resolved once
 /// in `Engine::new`; compilation stays lazy).
 #[derive(Debug, Clone, Copy)]
@@ -437,6 +459,63 @@ impl<'rt> Engine<'rt> {
         out
     }
 
+    // -- operand builders --------------------------------------------------
+    // Every schedule (trainer forward/backward, LoRA, serve prefill/decode)
+    // builds its parameter operands through these, so the device/host flow
+    // decision is made in exactly one place per tensor group.
+
+    /// `[emb, pos]` operands for `embed_fwd` / `decode_step`.
+    pub(crate) fn embed_ops<'p>(
+        &mut self,
+        params: &'p ModelParams,
+    ) -> Result<[ParamOp<'p>; 2]> {
+        Ok(if self.device_flow {
+            let (emb, pos) = self.embed_bufs(params)?;
+            [ParamOp::Dev(emb), ParamOp::Dev(pos)]
+        } else {
+            [ParamOp::Host(&params.emb), ParamOp::Host(&params.pos)]
+        })
+    }
+
+    /// `[gf, wh]` operands for the head segments.
+    pub(crate) fn head_ops<'p>(
+        &mut self,
+        params: &'p ModelParams,
+    ) -> Result<[ParamOp<'p>; 2]> {
+        Ok(if self.device_flow {
+            let (gf, wh) = self.head_bufs(params)?;
+            [ParamOp::Dev(gf), ParamOp::Dev(wh)]
+        } else {
+            [ParamOp::Host(&params.gf), ParamOp::Host(&params.wh)]
+        })
+    }
+
+    /// Block `l`'s tensors in ABI order.
+    pub(crate) fn block_ops<'p>(
+        &mut self,
+        params: &'p ModelParams,
+        l: usize,
+    ) -> Result<Vec<ParamOp<'p>>> {
+        Ok(if self.device_flow {
+            self.block_bufs(params, l)?.into_iter().map(ParamOp::Dev).collect()
+        } else {
+            params.blocks[l].iter().map(ParamOp::Host).collect()
+        })
+    }
+
+    /// LoRA adapter tensors of layer `l` in ABI order.
+    pub(crate) fn adapter_ops<'p>(
+        &mut self,
+        lora: &'p crate::lora::LoraState,
+        l: usize,
+    ) -> Result<Vec<ParamOp<'p>>> {
+        Ok(if self.device_flow {
+            self.adapter_bufs(lora, l)?.into_iter().map(ParamOp::Dev).collect()
+        } else {
+            lora.adapters[l].iter().map(ParamOp::Host).collect()
+        })
+    }
+
     // -- execution helpers -------------------------------------------------
 
     pub(crate) fn h_shape(&self) -> Vec<usize> {
@@ -486,33 +565,18 @@ impl<'rt> Engine<'rt> {
         tokens: &HostTensorI32,
     ) -> Result<Vec<Act>> {
         let hs = self.h_shape();
-        let mut h = if self.device_flow {
-            let (emb, pos) = self.embed_bufs(params)?;
-            let ops = [Operand::I32(tokens), Operand::Buf(&emb), Operand::Buf(&pos)];
-            self.run_chain_act(self.ids.embed_fwd, &ops, &hs)?
-        } else {
-            let ops = [
-                Operand::I32(tokens),
-                Operand::F32(&params.emb),
-                Operand::F32(&params.pos),
-            ];
-            self.run_chain_act(self.ids.embed_fwd, &ops, &hs)?
-        };
+        let ep = self.embed_ops(params)?;
+        let ops = [Operand::I32(tokens), ep[0].operand(), ep[1].operand()];
+        let mut h = self.run_chain_act(self.ids.embed_fwd, &ops, &hs)?;
         let mut stash = Vec::with_capacity(params.blocks.len() + 1);
         let mut act_bytes = 0u64;
-        for (l, layer) in params.blocks.iter().enumerate() {
+        for l in 0..params.blocks.len() {
             act_bytes += h.bytes() as u64;
             self.meter.set(MemCategory::Activations, act_bytes);
-            let h_next = if self.device_flow {
-                let bufs = self.block_bufs(params, l)?;
-                let mut ops = vec![h.operand()];
-                ops.extend(bufs.iter().map(|b| Operand::Buf(b.as_ref())));
-                self.run_chain_act(self.ids.block_fwd, &ops, &hs)?
-            } else {
-                let mut ops = vec![h.operand()];
-                ops.extend(layer.iter().map(Operand::F32));
-                self.run_chain_act(self.ids.block_fwd, &ops, &hs)?
-            };
+            let bo = self.block_ops(params, l)?;
+            let mut ops = vec![h.operand()];
+            ops.extend(bo.iter().map(ParamOp::operand));
+            let h_next = self.run_chain_act(self.ids.block_fwd, &ops, &hs)?;
             stash.push(h);
             h = h_next;
         }
@@ -540,24 +604,14 @@ impl<'rt> Engine<'rt> {
 
         // Head: fused loss + grads (head trainable) or loss + dh only.
         let head_id = if mask.head { self.ids.head_fwd_bwd } else { self.ids.head_fwd_bwd_x };
-        let outs = if self.device_flow {
-            let (gf, wh) = self.head_bufs(params)?;
-            let ops = [
-                h_last.operand(),
-                Operand::Buf(&gf),
-                Operand::Buf(&wh),
-                Operand::I32(&batch.targets),
-            ];
-            self.rt.run_id(head_id, &ops)?
-        } else {
-            let ops = [
-                h_last.operand(),
-                Operand::F32(&params.gf),
-                Operand::F32(&params.wh),
-                Operand::I32(&batch.targets),
-            ];
-            self.rt.run_id(head_id, &ops)?
-        };
+        let ho = self.head_ops(params)?;
+        let ops = [
+            h_last.operand(),
+            ho[0].operand(),
+            ho[1].operand(),
+            Operand::I32(&batch.targets),
+        ];
+        let outs = self.rt.run_id(head_id, &ops)?;
         let mut it = outs.into_iter();
         let loss =
             HostTensor::scalar_from_literal(&it.next().context("head: missing loss")?)?;
@@ -596,14 +650,10 @@ impl<'rt> Engine<'rt> {
             }
             if mask.blocks[l] {
                 self.bwd_full_calls += 1;
-                let outs = if self.device_flow {
-                    let bufs = self.block_bufs(params, l)?;
+                let outs = {
+                    let bo = self.block_ops(params, l)?;
                     let mut ops = vec![dh.operand(), stash[l].operand()];
-                    ops.extend(bufs.iter().map(|b| Operand::Buf(b.as_ref())));
-                    self.rt.run_id(self.ids.block_bwd_full, &ops)?
-                } else {
-                    let mut ops = vec![dh.operand(), stash[l].operand()];
-                    ops.extend(params.blocks[l].iter().map(Operand::F32));
+                    ops.extend(bo.iter().map(ParamOp::operand));
                     self.rt.run_id(self.ids.block_bwd_full, &ops)?
                 };
                 let mut it = outs.into_iter();
@@ -621,14 +671,10 @@ impl<'rt> Engine<'rt> {
                 // Single-output segment: the dh chain through frozen blocks
                 // stays device-resident under chainable artifacts — the
                 // LISA frozen-majority walk never touches the host.
-                dh = if self.device_flow {
-                    let bufs = self.block_bufs(params, l)?;
+                dh = {
+                    let bo = self.block_ops(params, l)?;
                     let mut ops = vec![dh.operand(), stash[l].operand()];
-                    ops.extend(bufs.iter().map(|b| Operand::Buf(b.as_ref())));
-                    self.run_chain_act(self.ids.block_bwd_x, &ops, &hs)?
-                } else {
-                    let mut ops = vec![dh.operand(), stash[l].operand()];
-                    ops.extend(params.blocks[l].iter().map(Operand::F32));
+                    ops.extend(bo.iter().map(ParamOp::operand));
                     self.run_chain_act(self.ids.block_bwd_x, &ops, &hs)?
                 };
             }
@@ -650,24 +696,14 @@ impl<'rt> Engine<'rt> {
     /// Eval-only forward loss (no gradients, no stash retention).
     pub fn forward_loss(&mut self, params: &ModelParams, batch: &Batch) -> Result<f32> {
         let h = self.forward_chain(params, &batch.tokens, self.rt.manifest.n_layers)?;
-        if self.device_flow {
-            let (gf, wh) = self.head_bufs(params)?;
-            let ops = [
-                h.operand(),
-                Operand::Buf(&gf),
-                Operand::Buf(&wh),
-                Operand::I32(&batch.targets),
-            ];
-            self.run_scalar(self.ids.head_loss, &ops)
-        } else {
-            let ops = [
-                h.operand(),
-                Operand::F32(&params.gf),
-                Operand::F32(&params.wh),
-                Operand::I32(&batch.targets),
-            ];
-            self.run_scalar(self.ids.head_loss, &ops)
-        }
+        let ho = self.head_ops(params)?;
+        let ops = [
+            h.operand(),
+            ho[0].operand(),
+            ho[1].operand(),
+            Operand::I32(&batch.targets),
+        ];
+        self.run_scalar(self.ids.head_loss, &ops)
     }
 
     /// Chain embed + the first `n_blocks` blocks (no stash).
@@ -678,27 +714,14 @@ impl<'rt> Engine<'rt> {
         n_blocks: usize,
     ) -> Result<Act> {
         let hs = self.h_shape();
-        let mut h = if self.device_flow {
-            let (emb, pos) = self.embed_bufs(params)?;
-            let ops = [Operand::I32(tokens), Operand::Buf(&emb), Operand::Buf(&pos)];
-            self.run_chain_act(self.ids.embed_fwd, &ops, &hs)?
-        } else {
-            let ops = [
-                Operand::I32(tokens),
-                Operand::F32(&params.emb),
-                Operand::F32(&params.pos),
-            ];
-            self.run_chain_act(self.ids.embed_fwd, &ops, &hs)?
-        };
-        for (l, layer) in params.blocks.iter().take(n_blocks).enumerate() {
-            h = if self.device_flow {
-                let bufs = self.block_bufs(params, l)?;
+        let ep = self.embed_ops(params)?;
+        let ops = [Operand::I32(tokens), ep[0].operand(), ep[1].operand()];
+        let mut h = self.run_chain_act(self.ids.embed_fwd, &ops, &hs)?;
+        for l in 0..n_blocks.min(params.blocks.len()) {
+            h = {
+                let bo = self.block_ops(params, l)?;
                 let mut ops = vec![h.operand()];
-                ops.extend(bufs.iter().map(|b| Operand::Buf(b.as_ref())));
-                self.run_chain_act(self.ids.block_fwd, &ops, &hs)?
-            } else {
-                let mut ops = vec![h.operand()];
-                ops.extend(layer.iter().map(Operand::F32));
+                ops.extend(bo.iter().map(ParamOp::operand));
                 self.run_chain_act(self.ids.block_fwd, &ops, &hs)?
             };
         }
@@ -730,15 +753,9 @@ impl<'rt> Engine<'rt> {
         assert!(n_blocks <= m.n_layers);
         let h = self.forward_chain(params, tokens, n_blocks)?;
         let shape = [m.batch, m.seq, m.vocab];
-        let out = if self.device_flow {
-            let (gf, wh) = self.head_bufs(params)?;
-            let ops = [h.operand(), Operand::Buf(&gf), Operand::Buf(&wh)];
-            self.run_chain_act(self.ids.head_logits, &ops, &shape)?
-        } else {
-            let ops = [h.operand(), Operand::F32(&params.gf), Operand::F32(&params.wh)];
-            self.run_chain_act(self.ids.head_logits, &ops, &shape)?
-        };
-        out.into_host()
+        let ho = self.head_ops(params)?;
+        let ops = [h.operand(), ho[0].operand(), ho[1].operand()];
+        self.run_chain_act(self.ids.head_logits, &ops, &shape)?.into_host()
     }
 
     pub fn logits(

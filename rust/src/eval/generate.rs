@@ -1,18 +1,24 @@
-//! Greedy autoregressive generation through the segment executables —
-//! makes trained checkpoints *usable*, and powers the qualitative samples
-//! and generative metrics in the experiment drivers.
+//! Autoregressive generation through the segment executables — makes
+//! trained checkpoints *usable*, and powers the qualitative samples and
+//! generative metrics in the experiment drivers.
 //!
-//! Two paths exist (DESIGN.md §9):
+//! Two paths exist (DESIGN.md §9/§10):
 //!
-//! * **batched KV-cached decode** (the default wherever the artifacts
-//!   carry the decode ABI): [`DecodeSession`] fills every row of the
-//!   `[B, T]` artifacts with a different prompt and pays one
-//!   `decode_step` execution per generated token;
-//! * **legacy full-forward** ([`greedy_complete_legacy`]): O(T) full
-//!   forwards per sample through row 0 only. Kept as the differential
-//!   baseline (`rust/tests/it_decode.rs`, the `decode/*` bench arms) and
-//!   as the fallback for legacy artifact dirs; force it with
+//! * **continuous-batching KV-cached decode** (the default wherever the
+//!   artifacts carry the decode ABI): [`ServeSession`] keeps every row of
+//!   the `[B, T]` artifacts busy — queued prompts are admitted into rows
+//!   freed mid-decode — and pays one `decode_step` execution per
+//!   generated token;
+//! * **legacy full-forward** ([`complete_legacy`]): O(T) full forwards
+//!   per sample through row 0 only. Kept as the differential baseline
+//!   (`rust/tests/it_decode.rs`, the `decode/*` bench arms) and as the
+//!   fallback for legacy artifact dirs; force it with
 //!   `LISA_DECODE=legacy`.
+//!
+//! Sampling (`SamplerSpec`: greedy / temperature / top-k / top-p) applies
+//! identically on both paths; samplers are seeded per request
+//! ([`request_seed`]), so a completion depends only on
+//! `(prompt, spec, seed)` — not on the batch it rode in.
 //!
 //! Prompts longer than the artifact window are truncated to `T - 1`
 //! tokens — loudly: a warning is logged and the returned [`Completion`]
@@ -22,7 +28,8 @@
 use anyhow::Result;
 
 use crate::data::tokenizer::{Tokenizer, BOS, EOS, PAD, SEP};
-use crate::engine::{Completion, DecodeSession, Engine, StopReason};
+use crate::engine::serve::{request_seed, Request, SamplerSpec, ServeSession};
+use crate::engine::{Completion, Engine, StopReason};
 use crate::model::ModelParams;
 use crate::runtime::HostTensorI32;
 
@@ -35,17 +42,50 @@ pub fn encode_prompt(tok: &Tokenizer, prompt: &str) -> Vec<i32> {
     seq
 }
 
-/// True when [`greedy_complete_batch`] will take the batched KV-cached
-/// path for this engine (the single source of truth for the routing —
-/// reporting code should ask this instead of re-deriving the gate).
+/// True when [`complete_batch`] will take the KV-cached serving path for
+/// this engine (the single source of truth for the routing — reporting
+/// code should ask this instead of re-deriving the gate).
 pub fn uses_cached_decode(eng: &Engine) -> bool {
     let forced = std::env::var("LISA_DECODE").map(|v| v == "legacy").unwrap_or(false);
-    !forced && DecodeSession::supported(eng)
+    !forced && ServeSession::supported(eng)
 }
 
-/// Greedily complete a batch of prompts, one [`Completion`] per prompt in
-/// order. Batched KV-cached decode when the artifacts support it, legacy
-/// full-forward otherwise (or under `LISA_DECODE=legacy`).
+/// Complete a batch of prompts under a sampling policy, one
+/// [`Completion`] per prompt in order. Continuous-batching KV-cached
+/// decode when the artifacts support it, legacy full-forward otherwise
+/// (or under `LISA_DECODE=legacy`). Request `i` samples from the stream
+/// seeded `request_seed(gen_seed, i)` on either path.
+pub fn complete_batch(
+    eng: &mut Engine,
+    params: &ModelParams,
+    tok: &Tokenizer,
+    prompts: &[&str],
+    max_new: usize,
+    spec: SamplerSpec,
+    gen_seed: u64,
+) -> Result<Vec<Completion>> {
+    if !uses_cached_decode(eng) {
+        return prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                complete_legacy(eng, params, tok, p, max_new, spec, request_seed(gen_seed, i))
+            })
+            .collect();
+    }
+    let reqs: Vec<Request> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            Request::sampled(encode_prompt(tok, p), max_new, spec, request_seed(gen_seed, i))
+        })
+        .collect();
+    let mut sess = ServeSession::new(eng, params)?;
+    sess.run(&reqs, EOS, PAD)
+}
+
+/// Greedy [`complete_batch`] — the PR 4 surface, kept because greedy is
+/// the parity baseline every differential suite runs.
 pub fn greedy_complete_batch(
     eng: &mut Engine,
     params: &ModelParams,
@@ -53,15 +93,7 @@ pub fn greedy_complete_batch(
     prompts: &[&str],
     max_new: usize,
 ) -> Result<Vec<Completion>> {
-    if !uses_cached_decode(eng) {
-        return prompts
-            .iter()
-            .map(|p| greedy_complete_legacy(eng, params, tok, p, max_new))
-            .collect();
-    }
-    let encoded: Vec<Vec<i32>> = prompts.iter().map(|p| encode_prompt(tok, p)).collect();
-    let mut sess = DecodeSession::new(eng, params)?;
-    sess.greedy(&encoded, max_new, EOS, PAD)
+    complete_batch(eng, params, tok, prompts, max_new, SamplerSpec::Greedy, 0)
 }
 
 /// Greedily complete `prompt`, returning the generated token ids (response
@@ -79,18 +111,22 @@ pub fn greedy_complete(
 }
 
 /// The pre-decode-ABI path: teacher-force the prompt into batch row 0,
-/// re-run the full forward per emitted token. One full L-block forward
-/// per token — the baseline the cached path is measured against.
-pub fn greedy_complete_legacy(
+/// re-run the full forward per emitted token, sample from the same
+/// policy. One full L-block forward per token — the baseline the cached
+/// paths are measured against.
+pub fn complete_legacy(
     eng: &mut Engine,
     params: &ModelParams,
     tok: &Tokenizer,
     prompt: &str,
     max_new: usize,
+    spec: SamplerSpec,
+    seed: u64,
 ) -> Result<Completion> {
     let m = eng.rt.manifest.clone();
+    let mut sampler = spec.build(seed);
     let mut seq = encode_prompt(tok, prompt);
-    // same clipping policy + warn as the cached planner (shared helper,
+    // same clipping policy + warn as the serve planner (shared helper,
     // so the prompt_truncated flags the parity suite compares can't drift)
     let prompt_truncated = crate::engine::decode::clip_prompt(&mut seq, m.seq);
     let mut out = Vec::new();
@@ -106,11 +142,10 @@ pub fn greedy_complete_legacy(
         let t = HostTensorI32::from_vec(&[m.batch, m.seq], tokens);
         let logits = eng.logits(params, &t)?; // [B, T, V]
         let pos = seq.len() - 1;
-        // shared first-of-ties argmax — tie-breaking identical to the
-        // cached path by construction
-        let id = crate::engine::decode::argmax(
-            &logits.data[pos * m.vocab..(pos + 1) * m.vocab],
-        );
+        // one sampler draw per emitted token, same stream shape as the
+        // cached paths — greedy degenerates to the shared first-of-ties
+        // argmax, so tie-breaking itself cannot diverge
+        let id = sampler.pick(&logits.data[pos * m.vocab..(pos + 1) * m.vocab]);
         if id == EOS {
             stop = StopReason::Eos;
             break;
@@ -119,6 +154,18 @@ pub fn greedy_complete_legacy(
         out.push(id);
     }
     Ok(Completion { tokens: out, prompt_truncated, stop })
+}
+
+/// Greedy [`complete_legacy`] — the differential-baseline surface used by
+/// the parity suites and benches.
+pub fn greedy_complete_legacy(
+    eng: &mut Engine,
+    params: &ModelParams,
+    tok: &Tokenizer,
+    prompt: &str,
+    max_new: usize,
+) -> Result<Completion> {
+    complete_legacy(eng, params, tok, prompt, max_new, SamplerSpec::Greedy, 0)
 }
 
 /// Convenience: decode the completion to text.

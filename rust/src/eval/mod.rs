@@ -136,20 +136,24 @@ pub fn evaluate(eng: &mut Engine, params: &ModelParams, dl: &DataLoader) -> Resu
     })
 }
 
-/// Generative exact match: greedy-decode each sample's prompt through the
-/// serving path ([`generate::greedy_complete_batch`] — batched KV-cached
-/// decode wherever the artifacts support it) and score the completion
-/// against the encoded reference response. Unlike
-/// [`EvalReport::exact_match`] (teacher-forced), the model must produce
-/// the whole answer on its own — the deployment-shaped metric.
+/// Generative exact match: decode each sample's prompt through the
+/// serving path ([`generate::complete_batch`] — continuous-batching
+/// KV-cached decode wherever the artifacts support it) under the given
+/// sampling policy, and score the completion against the encoded
+/// reference response. Unlike [`EvalReport::exact_match`]
+/// (teacher-forced), the model must produce the whole answer on its own —
+/// the deployment-shaped metric. `SamplerSpec::Greedy` + any seed
+/// reproduces the PR 4 numbers.
 pub fn generative_exact_match(
     eng: &mut Engine,
     params: &ModelParams,
     tok: &Tokenizer,
     samples: &[crate::data::Sample],
     max_new: usize,
+    spec: crate::engine::SamplerSpec,
+    gen_seed: u64,
 ) -> Result<f64> {
-    Ok(generative_completions(eng, params, tok, samples, max_new)?.0)
+    Ok(generative_completions(eng, params, tok, samples, max_new, spec, gen_seed)?.0)
 }
 
 /// [`generative_exact_match`] plus the decoded completions themselves, so
@@ -160,12 +164,14 @@ pub fn generative_completions(
     tok: &Tokenizer,
     samples: &[crate::data::Sample],
     max_new: usize,
+    spec: crate::engine::SamplerSpec,
+    gen_seed: u64,
 ) -> Result<(f64, Vec<crate::engine::Completion>)> {
     if samples.is_empty() {
         return Ok((0.0, Vec::new()));
     }
     let prompts: Vec<&str> = samples.iter().map(|s| s.prompt.as_str()).collect();
-    let outs = generate::greedy_complete_batch(eng, params, tok, &prompts, max_new)?;
+    let outs = generate::complete_batch(eng, params, tok, &prompts, max_new, spec, gen_seed)?;
     let em = outs
         .iter()
         .zip(samples)

@@ -30,6 +30,12 @@ pub struct Ctx {
     /// Explicit checkpoint to resume the driver's training run from
     /// (`--resume PATH`; e2e).
     pub resume: Option<PathBuf>,
+    /// Decode-time sampling policy for the generative metrics and
+    /// qualitative samples (`--sample/--temperature/--top-k/--top-p`;
+    /// greedy by default, which reproduces the PR 4 tables).
+    pub sampler: crate::engine::SamplerSpec,
+    /// Base seed of the per-request sampler streams (`--gen-seed`).
+    pub gen_seed: u64,
 }
 
 impl Ctx {

@@ -97,6 +97,8 @@ pub fn e2e(ctx: &Ctx, config: &str, steps_override: Option<usize>) -> Result<()>
         &task.tok,
         gen_samples,
         gen_max_new,
+        ctx.sampler,
+        ctx.gen_seed,
     )?;
     let gen_ms = tg.elapsed().as_secs_f64() * 1e3;
     let tokens_per_step = (m.batch * m.seq) as f64;
@@ -132,7 +134,15 @@ pub fn e2e(ctx: &Ctx, config: &str, steps_override: Option<usize>) -> Result<()>
     ]);
     t.row(vec![
         "decode path".to_string(),
-        if cached_decode { "batched KV-cached".to_string() } else { "legacy full-forward".to_string() },
+        if cached_decode {
+            "KV-cached, continuous batching".to_string()
+        } else {
+            "legacy full-forward".to_string()
+        },
+    ]);
+    t.row(vec![
+        "decode sampler".to_string(),
+        format!("{} (gen-seed {})", ctx.sampler.label(), ctx.gen_seed),
     ]);
     t.row(vec!["MT-Bench proxy".to_string(), fnum(mt, 2)]);
     t.row(vec!["peak tracked mem".to_string(), human_bytes(train_peak)]);

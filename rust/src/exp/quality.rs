@@ -93,6 +93,8 @@ pub fn suite_finetune(ctx: &Ctx, config: &str) -> Result<()> {
             &task.tok,
             gen_samples,
             gen_max_new,
+            ctx.sampler,
+            ctx.gen_seed,
         )?;
         tab3.row(vec![
             label.clone(),

@@ -9,6 +9,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::engine::trainer::ParamOp;
 use crate::engine::{Batch, Engine, MemCategory};
 use crate::model::{ModelParams, ParamKey};
 use crate::opt::linalg::matmul_nn;
@@ -157,34 +158,20 @@ pub fn forward_backward_lora(
     eng.meter.set(MemCategory::Params, params.bytes() as u64);
     eng.meter.set(MemCategory::LoraAdapters, lora.bytes());
     // Forward, stashing block inputs.
-    let mut h = if eng.device_flow {
-        let (emb, pos) = eng.embed_bufs(params)?;
-        let ops = [Operand::I32(&batch.tokens), Operand::Buf(&emb), Operand::Buf(&pos)];
-        eng.run_chain_act(ids.embed_fwd, &ops, &hs)?
-    } else {
-        let ops = [
-            Operand::I32(&batch.tokens),
-            Operand::F32(&params.emb),
-            Operand::F32(&params.pos),
-        ];
-        eng.run_chain_act(ids.embed_fwd, &ops, &hs)?
-    };
+    let ep = eng.embed_ops(params)?;
+    let ops = [Operand::I32(&batch.tokens), ep[0].operand(), ep[1].operand()];
+    let mut h = eng.run_chain_act(ids.embed_fwd, &ops, &hs)?;
     let mut stash = Vec::with_capacity(m.n_layers);
     let mut act = 0u64;
     for l in 0..m.n_layers {
         act += h.bytes() as u64;
         eng.meter.set(MemCategory::Activations, act);
-        let h_next = if eng.device_flow {
-            let base = eng.block_bufs(params, l)?;
-            let adap = eng.adapter_bufs(lora, l)?;
+        let h_next = {
+            let base = eng.block_ops(params, l)?;
+            let adap = eng.adapter_ops(lora, l)?;
             let mut ops = vec![h.operand()];
-            ops.extend(base.iter().map(|b| Operand::Buf(b.as_ref())));
-            ops.extend(adap.iter().map(|b| Operand::Buf(b.as_ref())));
-            eng.run_chain_act(ids.block_fwd_lora, &ops, &hs)?
-        } else {
-            let mut ops = vec![h.operand()];
-            ops.extend(params.blocks[l].iter().map(Operand::F32));
-            ops.extend(lora.adapters[l].iter().map(Operand::F32));
+            ops.extend(base.iter().map(ParamOp::operand));
+            ops.extend(adap.iter().map(ParamOp::operand));
             eng.run_chain_act(ids.block_fwd_lora, &ops, &hs)?
         };
         stash.push(h);
@@ -192,20 +179,12 @@ pub fn forward_backward_lora(
     }
 
     // Frozen head: loss + dh only.
-    let outs = if eng.device_flow {
-        let (gf, wh) = eng.head_bufs(params)?;
+    let ho = eng.head_ops(params)?;
+    let outs = {
         let ops = [
             h.operand(),
-            Operand::Buf(&gf),
-            Operand::Buf(&wh),
-            Operand::I32(&batch.targets),
-        ];
-        rt.run_id(ids.head_fwd_bwd_x, &ops)?
-    } else {
-        let ops = [
-            h.operand(),
-            Operand::F32(&params.gf),
-            Operand::F32(&params.wh),
+            ho[0].operand(),
+            ho[1].operand(),
             Operand::I32(&batch.targets),
         ];
         rt.run_id(ids.head_fwd_bwd_x, &ops)?
@@ -222,17 +201,12 @@ pub fn forward_backward_lora(
     grads.resize_with(m.n_layers, Vec::new);
     let mut grad_bytes = 0u64;
     for l in (0..m.n_layers).rev() {
-        let outs = if eng.device_flow {
-            let base = eng.block_bufs(params, l)?;
-            let adap = eng.adapter_bufs(lora, l)?;
+        let outs = {
+            let base = eng.block_ops(params, l)?;
+            let adap = eng.adapter_ops(lora, l)?;
             let mut ops = vec![dh.operand(), stash[l].operand()];
-            ops.extend(base.iter().map(|b| Operand::Buf(b.as_ref())));
-            ops.extend(adap.iter().map(|b| Operand::Buf(b.as_ref())));
-            rt.run_id(ids.block_bwd_lora, &ops)?
-        } else {
-            let mut ops = vec![dh.operand(), stash[l].operand()];
-            ops.extend(params.blocks[l].iter().map(Operand::F32));
-            ops.extend(lora.adapters[l].iter().map(Operand::F32));
+            ops.extend(base.iter().map(ParamOp::operand));
+            ops.extend(adap.iter().map(ParamOp::operand));
             rt.run_id(ids.block_bwd_lora, &ops)?
         };
         let mut it = outs.into_iter();

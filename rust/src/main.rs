@@ -49,6 +49,11 @@ const SPEC: &[(&str, &str, &str)] = &[
     ("ckpt", "", "training-state checkpoint path (default <results>/train-<method>.state)"),
     ("resume", "", "resume training from a --save-every checkpoint"),
     ("seed", "42", "master seed"),
+    ("sample", "greedy", "decode sampling policy: greedy|temperature|top-k|top-p"),
+    ("temperature", "1.0", "decode: softmax temperature (0 = argmax)"),
+    ("top-k", "40", "decode: top-k cutoff (with --sample top-k; 1 = argmax)"),
+    ("top-p", "0.9", "decode: nucleus mass cutoff (with --sample top-p)"),
+    ("gen-seed", "42", "decode: base seed of the per-request sampler streams"),
     ("scale", "1.0", "experiment step-budget multiplier"),
     ("samples", "480", "train: corpus size"),
     ("eval", "true", "train: evaluate on the val split afterwards"),
@@ -89,8 +94,17 @@ fn parse_max_grad_norm(a: &Args) -> Result<Option<f64>> {
     })
 }
 
-fn ctx_from(a: &Args) -> Ctx {
-    Ctx {
+fn parse_sampler(a: &Args) -> Result<lisa::engine::SamplerSpec> {
+    lisa::engine::SamplerSpec::parse(
+        &a.get("sample"),
+        a.get_f64("temperature")? as f32,
+        a.get_usize("top-k")?,
+        a.get_f64("top-p")? as f32,
+    )
+}
+
+fn ctx_from(a: &Args) -> Result<Ctx> {
+    Ok(Ctx {
         artifacts: PathBuf::from(a.get("artifacts")),
         results: PathBuf::from(a.get("results")),
         backend: a.get("backend"),
@@ -98,11 +112,13 @@ fn ctx_from(a: &Args) -> Ctx {
         seed: a.get_u64("seed").unwrap_or(42),
         save_every: a.get_usize("save-every").unwrap_or(0),
         resume: a.get_opt("resume").map(PathBuf::from),
-    }
+        sampler: parse_sampler(a)?,
+        gen_seed: a.get_u64("gen-seed")?,
+    })
 }
 
 fn cmd_train(a: &Args) -> Result<()> {
-    let ctx = ctx_from(a);
+    let ctx = ctx_from(a)?;
     let config = a.get_opt("config").unwrap_or_else(|| "small".into());
     let rt = ctx.runtime(&config)?;
     let m = rt.manifest.clone();
@@ -200,19 +216,19 @@ fn real_main() -> Result<()> {
                 exp::list();
                 return Ok(());
             }
-            let ctx = ctx_from(&a);
+            let ctx = ctx_from(&a)?;
             let steps = a.get_opt("steps").map(|s| s.parse()).transpose()?;
             let cfg_override = a.get_opt("config");
             exp::run(&ctx, id, cfg_override.as_deref(), steps)
         }
         "memory" => {
-            let ctx = ctx_from(&a);
+            let ctx = ctx_from(&a)?;
             let cfg = a.get_opt("config").unwrap_or_else(|| "tiny".into());
             exp::perfmem::tab1_memory(&ctx, &cfg)?;
             exp::perfmem::fig3_memory(&ctx, &cfg)
         }
         "info" => {
-            let ctx = ctx_from(&a);
+            let ctx = ctx_from(&a)?;
             let cfg = a.get_opt("config").unwrap_or_else(|| "small".into());
             let rt = ctx.runtime(&cfg)?;
             let m = &rt.manifest;
@@ -231,7 +247,7 @@ fn real_main() -> Result<()> {
                 "decode ABI: v{} ({})",
                 m.decode_abi,
                 if m.supports_decode(&rt.backend) {
-                    "batched KV-cached decode available"
+                    "KV-cached decode + continuous batching available"
                 } else {
                     "no cached decode for this backend — serving falls back to \
                      legacy full-forward"

@@ -157,7 +157,7 @@ fn one_decode_step_per_token_and_zero_weight_uploads_when_warm() {
     let (outs, steps) = {
         let mut sess = DecodeSession::new(&mut eng, &params).unwrap();
         let outs = sess.greedy(&enc, max_new, EOS, PAD).unwrap();
-        (outs, sess.decode_steps)
+        (outs, sess.decode_steps())
     };
 
     // acceptance: zero weight tensors uploaded on a warm device cache
@@ -185,6 +185,64 @@ fn one_decode_step_per_token_and_zero_weight_uploads_when_warm() {
     assert_eq!(bf.calls, m.n_layers as u64 * n_chunks);
     let pk = stats.get("prefill_kv").expect("prefill ran prefill_kv");
     assert_eq!(pk.calls, m.n_layers as u64 * n_chunks);
+}
+
+/// The ROADMAP serving satellite: prefill must skip the `head_logits`
+/// call — and its `[B, T, V]` download — for a batch whose every row has
+/// a forced first token, without changing a single emitted token.
+#[test]
+fn prefill_skips_head_logits_when_every_first_token_is_forced() {
+    use lisa::engine::{Request, ServeSession};
+
+    let Some(rt) = have_decode() else { return };
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(13));
+    let tok = make_tok(&rt);
+    let eos = -1; // unreachable, so every row emits >= 1 token
+    let max_new = 4;
+    // one static chunk: exactly the batch width
+    let reqs: Vec<Request> = prompts(&rt)
+        .iter()
+        .take(m.batch)
+        .map(|p| Request::greedy(generate::encode_prompt(&tok, p), max_new))
+        .collect();
+
+    // reference pass: unforced greedy, head_logits runs once for the chunk
+    let mut eng = Engine::new(&rt);
+    rt.reset_stats();
+    let want = {
+        let mut sess = ServeSession::new(&mut eng, &params).unwrap();
+        sess.run_static(&reqs, eos, PAD).unwrap()
+    };
+    assert_eq!(rt.stats().get("head_logits").expect("unforced prefill").calls, 1);
+    assert!(want.iter().all(|c| !c.tokens.is_empty()));
+
+    // forced pass: feed each row its known first token
+    let forced: Vec<Request> = reqs
+        .iter()
+        .zip(&want)
+        .map(|(r, c)| {
+            let mut r = r.clone();
+            r.first_token = Some(c.tokens[0]);
+            r
+        })
+        .collect();
+    rt.reset_stats();
+    let got = {
+        let mut sess = ServeSession::new(&mut eng, &params).unwrap();
+        sess.run_static(&forced, eos, PAD).unwrap()
+    };
+    // the saved call and its [B, T, V] download, via ExecStats
+    assert!(
+        rt.stats().get("head_logits").is_none(),
+        "forced-first-token prefill must skip head_logits entirely"
+    );
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(a.tokens, b.tokens, "forcing the first token changed row {i}");
+        assert_eq!(a.stop, b.stop);
+    }
+    // prefill itself still ran (the K/V cache is still needed)
+    assert_eq!(rt.stats().get("prefill_kv").expect("prefill ran").calls, m.n_layers as u64);
 }
 
 #[test]
