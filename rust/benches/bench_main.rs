@@ -9,7 +9,10 @@
 //! * `host/*`        — L3 substrate hot paths (tensor bridge, dataloader,
 //!                     tokenizer, sampler)
 //! * `decode/*`      — serving: legacy full-forward vs KV-cached decode
-//! * `serve/*`       — serving: static vs continuous batching (tokens/sec)
+//! * `serve/*`       — serving: static vs continuous batching (tokens/sec),
+//!                     plus the same queue through the `lisa serve` HTTP
+//!                     front end (`serve/http-tiny`: loopback tokens/sec
+//!                     with TTFT p50/p99 from the /metrics histograms)
 //!
 //! Set `LISA_BENCH_QUICK=1` for a fast smoke pass.
 //!
@@ -349,6 +352,60 @@ fn main() -> anyhow::Result<()> {
                 black_box(sess.run(&queue, eos_off, PAD).unwrap());
             }));
         }
+
+        // serving over HTTP: the same mixed queue through the full front
+        // end — loopback sockets, JSON/SSE framing, bounded admission —
+        // so the serve/continuous-vs-http delta prices the transport
+        // (DESIGN.md §11). TTFT percentiles come from the live /metrics
+        // histograms after the timed burst.
+        if m.supports_decode("pallas") {
+            use lisa::serve_http::{proto::client, HttpFrontend, ServeConfig};
+            let front = HttpFrontend::bind(
+                ServeConfig { addr: "127.0.0.1:0".into(), max_queue: 64, ..Default::default() },
+                Tokenizer::build(&corpus::sample_texts(&samples), m.vocab),
+            )?;
+            let addr = front.local_addr()?.to_string();
+            let state = front.state();
+            let art_dir = art.join("tiny");
+            let server = std::thread::spawn(move || {
+                // the engine is thread-bound: the server thread owns its
+                // own runtime over the same artifacts and parameter seed
+                let rt = Runtime::load(&art_dir, "pallas").unwrap();
+                let params = ModelParams::init(&rt.manifest, &mut Rng::new(7));
+                let mut eng = Engine::new(&rt);
+                let mut sess = ServeSession::new(&mut eng, &params).unwrap();
+                front.run(|src| sess.run_loop(src, -1, PAD)).unwrap();
+            });
+            let mut n_tokens = 0u64;
+            let bodies: Vec<String> = samples
+                .iter()
+                .take(2 * m.batch)
+                .enumerate()
+                .map(|(i, s)| {
+                    let budget = if i % m.batch == 0 { 16.min(m.seq / 4) } else { 2 };
+                    n_tokens += budget as u64; // eos is unreachable: exact
+                    let prompt = generate::encode_prompt(&tok, &s.prompt);
+                    format!(
+                        r#"{{"tokens": {prompt:?}, "max_new": {budget}, "sample": "greedy"}}"#
+                    )
+                })
+                .collect();
+            results.push(b.run_with_elements("serve/http-tiny", n_tokens, || {
+                for body in &bodies {
+                    let resp = client::post(&addr, "/v1/completions", body).unwrap();
+                    assert_eq!(resp.status, 200, "{}", resp.body);
+                    black_box(resp.body.len());
+                }
+            }));
+            println!(
+                "serve/http-tiny TTFT: p50 {:.1} ms, p99 {:.1} ms over {} requests",
+                state.metrics.ttft.quantile(0.5) * 1e3,
+                state.metrics.ttft.quantile(0.99) * 1e3,
+                state.metrics.ttft.count()
+            );
+            state.request_shutdown();
+            server.join().unwrap();
+        }
     }
 
     println!("\n=== bench results ===");
@@ -362,8 +419,10 @@ fn main() -> anyhow::Result<()> {
     let quick = std::env::var("LISA_BENCH_QUICK").is_ok();
     let note = "generated by `cargo bench` (LISA_BENCH_QUICK=1 for the smoke pass); \
                 step/*-hostpath arms run the pre-device-cache host-roundtrip schedule; \
-                decode/{legacy,cached}-* are the KV-cache before/after pair and \
-                serve/{static,continuous}-* the continuous-batching pair (tokens/sec)";
+                decode/{legacy,cached}-* are the KV-cache before/after pair, \
+                serve/{static,continuous}-* the continuous-batching pair (tokens/sec) and \
+                serve/http-tiny the same queue through the `lisa serve` HTTP front end \
+                (loopback tokens/sec; TTFT p50/p99 printed from /metrics)";
     let target = Path::new("../BENCH_step.json");
     let path = if lisa::util::bench::write_json(target, &results, quick, note).is_ok() {
         target

@@ -32,6 +32,21 @@ pub enum StopReason {
     MaxNew,
     /// The `[B, T]` artifact window is full — no room for another token.
     WindowFull,
+    /// A per-request stop sequence matched; the matched suffix is
+    /// excluded from the returned tokens (serve subsystem only).
+    StopSeq,
+}
+
+impl StopReason {
+    /// Stable wire label (HTTP `finish_reason`, metrics labels).
+    pub fn label(&self) -> &'static str {
+        match self {
+            StopReason::Eos => "eos",
+            StopReason::MaxNew => "max_new",
+            StopReason::WindowFull => "window_full",
+            StopReason::StopSeq => "stop_seq",
+        }
+    }
 }
 
 /// One prompt's decode result.

@@ -8,5 +8,7 @@ pub mod trainer;
 
 pub use decode::{Completion, DecodeSession, StopReason};
 pub use memory::{MemCategory, MemoryMeter};
-pub use serve::{Request, Sampler, SamplerSpec, ServeSession};
+pub use serve::{
+    Feed, LoopStats, Request, RequestSink, RequestSource, Sampler, SamplerSpec, ServeSession,
+};
 pub use trainer::{Batch, Engine, Grads, StepOutput, Touched, TrainMask};

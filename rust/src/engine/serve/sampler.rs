@@ -23,9 +23,9 @@ use crate::engine::decode::argmax;
 use crate::util::rng::Rng;
 
 /// Decode-time sampling policy — CLI-shaped (`--sample` / `--temperature`
-/// / `--top-k` / `--top-p`), cheap to copy into every [`super::Request`].
+/// / `--top-k` / `--top-p`), cloned into every [`super::Request`].
 /// Build one stateful [`Sampler`] per request via [`SamplerSpec::build`].
-#[derive(Debug, Clone, Copy, PartialEq, Default)]
+#[derive(Debug, Clone, PartialEq, Default)]
 pub enum SamplerSpec {
     /// First-of-ties argmax — the PR 4 behavior and the parity baseline.
     #[default]
@@ -38,6 +38,14 @@ pub enum SamplerSpec {
     /// Nucleus sampling: the smallest probability-sorted prefix with
     /// cumulative mass `>= p`, renormalized at `temperature`.
     TopP { p: f32, temperature: f32 },
+    /// Per-request additive logit bias applied before the base policy
+    /// picks (the HTTP `logit_bias` surface). A bias of
+    /// `f32::NEG_INFINITY` bans the token outright — it can never be
+    /// selected while any unbanned token remains.
+    Biased {
+        bias: Vec<(i32, f32)>,
+        base: Box<SamplerSpec>,
+    },
 }
 
 impl SamplerSpec {
@@ -69,24 +77,39 @@ impl SamplerSpec {
         })
     }
 
+    /// Wrap this spec with an additive logit bias (no-op when `bias` is
+    /// empty). Nested wrapping composes: biases apply innermost-first.
+    pub fn with_bias(self, bias: Vec<(i32, f32)>) -> SamplerSpec {
+        if bias.is_empty() {
+            return self;
+        }
+        SamplerSpec::Biased { bias, base: Box::new(self) }
+    }
+
     /// Whether this spec provably degenerates to first-of-ties argmax (no
-    /// RNG draw ever happens; the decode is greedy-deterministic).
+    /// RNG draw ever happens; the decode is greedy-deterministic). A
+    /// non-empty bias is never greedy-degenerate here: it changes which
+    /// token the argmax lands on, so the biased path must run.
     pub fn is_greedy(&self) -> bool {
-        match *self {
+        match self {
             SamplerSpec::Greedy => true,
-            SamplerSpec::Temperature { temperature } => temperature <= 0.0,
-            SamplerSpec::TopK { k, temperature } => k == 1 || temperature <= 0.0,
-            SamplerSpec::TopP { p, temperature } => p <= 0.0 || temperature <= 0.0,
+            SamplerSpec::Temperature { temperature } => *temperature <= 0.0,
+            SamplerSpec::TopK { k, temperature } => *k == 1 || *temperature <= 0.0,
+            SamplerSpec::TopP { p, temperature } => *p <= 0.0 || *temperature <= 0.0,
+            SamplerSpec::Biased { bias, base } => bias.is_empty() && base.is_greedy(),
         }
     }
 
     /// Stable display label for tables/bench arms.
     pub fn label(&self) -> String {
-        match *self {
+        match self {
             SamplerSpec::Greedy => "greedy".into(),
             SamplerSpec::Temperature { temperature } => format!("temperature(T={temperature})"),
             SamplerSpec::TopK { k, temperature } => format!("top-k(k={k},T={temperature})"),
             SamplerSpec::TopP { p, temperature } => format!("top-p(p={p},T={temperature})"),
+            SamplerSpec::Biased { bias, base } => {
+                format!("biased(n={},{})", bias.len(), base.label())
+            }
         }
     }
 
@@ -97,22 +120,32 @@ impl SamplerSpec {
         if self.is_greedy() {
             return Box::new(GreedySampler);
         }
-        match *self {
+        match self {
             SamplerSpec::Greedy => unreachable!("handled by is_greedy"),
             SamplerSpec::Temperature { temperature } => Box::new(TemperatureSampler {
-                temperature,
+                temperature: *temperature,
                 rng: Rng::new(seed),
             }),
             SamplerSpec::TopK { k, temperature } => Box::new(TopKSampler {
-                k,
-                temperature,
+                k: *k,
+                temperature: *temperature,
                 rng: Rng::new(seed),
             }),
             SamplerSpec::TopP { p, temperature } => Box::new(TopPSampler {
-                p,
-                temperature,
+                p: *p,
+                temperature: *temperature,
                 rng: Rng::new(seed),
             }),
+            SamplerSpec::Biased { bias, base } => {
+                if bias.is_empty() {
+                    return base.build(seed);
+                }
+                Box::new(BiasedSampler {
+                    bias: bias.clone(),
+                    scratch: Vec::new(),
+                    inner: base.build(seed),
+                })
+            }
         }
     }
 }
@@ -250,6 +283,52 @@ impl Sampler for TopPSampler {
     }
 }
 
+/// Adds a per-request bias to the logits row, then delegates to the base
+/// sampler. `-inf` entries zero the token's softmax weight and sort it
+/// below every finite logit, so it never enters a top-k/top-p cutoff
+/// ahead of an unbanned token and is never drawn.
+pub struct BiasedSampler {
+    bias: Vec<(i32, f32)>,
+    /// Reused biased copy of the logits row (no per-token allocation).
+    scratch: Vec<f32>,
+    inner: Box<dyn Sampler>,
+}
+
+impl Sampler for BiasedSampler {
+    fn pick(&mut self, logits: &[f32]) -> i32 {
+        self.scratch.clear();
+        self.scratch.extend_from_slice(logits);
+        for &(tok, b) in &self.bias {
+            // out-of-vocab (or negative) ids are ignored, not a panic:
+            // the model thread must survive any admitted request
+            if let Some(x) = self.scratch.get_mut(tok as usize) {
+                *x += b;
+            }
+        }
+        // Every token banned: all downstream weights would be zero (an
+        // assert in the RNG). Fall back to the unbiased argmax rather
+        // than poisoning the model thread.
+        if !self.scratch.iter().any(|x| x.is_finite()) {
+            return argmax(logits);
+        }
+        // A `+inf` (or NaN-producing) bias can't flow into softmax
+        // weights; `+inf` means "force this token", so resolve it by
+        // argmax over the biased row (NaNs lose every comparison).
+        if self.scratch.iter().any(|x| x.is_nan() || *x == f32::INFINITY) {
+            return argmax(&self.scratch);
+        }
+        let pick = self.inner.pick(&self.scratch);
+        // The weighted walk can only land on a zero-weight (banned)
+        // token via a measure-zero float edge; re-pick so the ban holds
+        // unconditionally.
+        if self.scratch.get(pick as usize).map_or(false, |x| x.is_finite()) {
+            pick
+        } else {
+            argmax(&self.scratch)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -359,6 +438,103 @@ mod tests {
         let idx = sorted_candidates(&row);
         let w = softmax_weights(&row, &idx, 1.0);
         assert_eq!(TopPSampler::nucleus_len(&w, 1.0), row.len());
+    }
+
+    // ---- logit bias ----------------------------------------------------
+
+    #[test]
+    fn bias_shifts_the_greedy_pick() {
+        // unbiased argmax of `logits()` is token 1 (first of the 2.0 tie)
+        let spec = SamplerSpec::Greedy.with_bias(vec![(3, 1.0)]);
+        assert!(!spec.is_greedy(), "a non-empty bias must run the biased path");
+        let mut s = spec.build(7);
+        assert_eq!(s.pick(&logits()), 3);
+        // empty bias is a structural no-op
+        let spec = SamplerSpec::Greedy.with_bias(vec![]);
+        assert_eq!(spec, SamplerSpec::Greedy);
+        assert!(spec.is_greedy());
+    }
+
+    #[test]
+    fn neg_inf_bias_provably_bans_a_token() {
+        // property: under every base policy, a -inf-biased token is never
+        // drawn, whatever the logits row looks like
+        let mut rng = Rng::new(29);
+        for base in [
+            SamplerSpec::Greedy,
+            SamplerSpec::Temperature { temperature: 1.0 },
+            SamplerSpec::TopK { k: 3, temperature: 0.7 },
+            SamplerSpec::TopP { p: 0.95, temperature: 1.1 },
+        ] {
+            for trial in 0..50 {
+                let banned = rng.below(16) as i32;
+                let spec = base
+                    .clone()
+                    .with_bias(vec![(banned, f32::NEG_INFINITY)]);
+                let mut s = spec.build(1000 + trial);
+                for _ in 0..40 {
+                    let mut row: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+                    // make the banned token the unbiased favourite so the
+                    // ban is actually load-bearing
+                    row[banned as usize] = 50.0;
+                    assert_ne!(s.pick(&row), banned, "{}", spec.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_banned_falls_back_to_unbiased_argmax() {
+        let bias: Vec<(i32, f32)> = (0..8).map(|t| (t, f32::NEG_INFINITY)).collect();
+        for base in [
+            SamplerSpec::Greedy,
+            SamplerSpec::Temperature { temperature: 0.8 },
+        ] {
+            let mut s = base.clone().with_bias(bias.clone()).build(5);
+            // no panic, and the pick is the unbiased argmax (token 1)
+            assert_eq!(s.pick(&logits()), 1);
+        }
+    }
+
+    #[test]
+    fn bias_outside_the_vocab_is_ignored() {
+        let spec = SamplerSpec::Temperature { temperature: 1.0 }
+            .with_bias(vec![(-3, 10.0), (10_000, 10.0), (2, f32::NEG_INFINITY)]);
+        let mut s = spec.build(9);
+        for _ in 0..50 {
+            let t = s.pick(&logits());
+            assert!((0..8).contains(&t));
+            assert_ne!(t, 2);
+        }
+    }
+
+    #[test]
+    fn pos_inf_bias_forces_the_token() {
+        let mut s = SamplerSpec::TopP { p: 0.9, temperature: 1.0 }
+            .with_bias(vec![(6, f32::INFINITY)])
+            .build(4);
+        for _ in 0..20 {
+            assert_eq!(s.pick(&logits()), 6);
+        }
+    }
+
+    #[test]
+    fn biased_sampling_is_seed_reproducible_and_matches_pre_biased_logits() {
+        // adding the bias up front and sampling unbiased must equal the
+        // BiasedSampler on raw logits, draw for draw (same seed)
+        let bias = vec![(0, 2.5f32), (4, -1.5f32), (7, 0.75f32)];
+        let base = SamplerSpec::TopK { k: 5, temperature: 1.3 };
+        let mut a = base.clone().with_bias(bias.clone()).build(77);
+        let mut b = base.build(77);
+        let mut rng = Rng::new(31);
+        for _ in 0..200 {
+            let row: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
+            let mut shifted = row.clone();
+            for &(t, v) in &bias {
+                shifted[t as usize] += v;
+            }
+            assert_eq!(a.pick(&row), b.pick(&shifted));
+        }
     }
 
     #[test]

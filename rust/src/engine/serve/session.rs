@@ -1,10 +1,16 @@
-//! Continuous-batching serve session over the decode ABI (DESIGN.md §10).
+//! Continuous-batching serve session over the decode ABI (DESIGN.md §10,
+//! §11).
 //!
-//! [`ServeSession::run`] drives one device-resident batch through the
-//! decode segments and keeps every row busy: requests past the batch
-//! width wait in an admission queue and are handed a row the moment a
-//! completion drains (EOS / budget / window), instead of the whole batch
-//! blocking on its slowest row. The row-slot lifecycle is
+//! [`ServeSession::run_loop`] drives one device-resident batch through
+//! the decode segments and keeps every row busy: requests are pulled
+//! incrementally from a [`RequestSource`] (an in-memory slice for
+//! [`ServeSession::run`], a bounded channel for `serve_http`) and are
+//! handed a row the moment a completion drains (EOS / budget / window /
+//! stop sequence), instead of the whole batch blocking on its slowest
+//! row. Each admission carries its own [`RequestSink`]; committed tokens
+//! are emitted as each `decode_step` lands (stop-sequence tails held
+//! back, never retracted), which is what the HTTP front end streams over
+//! SSE. The row-slot lifecycle is
 //!
 //! ```text
 //! Vacant -> Prefilling -> Decoding -> Drained -> (admission) Prefilling ...
@@ -62,6 +68,11 @@ pub struct Request {
     /// model. A batch whose every row is forced (or zero-budget) skips
     /// the prefill `head_logits` download.
     pub first_token: Option<i32>,
+    /// Per-request stop sequences (token-id suffix match over the
+    /// *generated* tokens). A match drains the row with
+    /// [`StopReason::StopSeq`] and the matched suffix is excluded from
+    /// the returned tokens. Empty sequences are ignored.
+    pub stop: Vec<Vec<i32>>,
 }
 
 impl Request {
@@ -72,11 +83,18 @@ impl Request {
             sampler: SamplerSpec::Greedy,
             seed: 0,
             first_token: None,
+            stop: Vec::new(),
         }
     }
 
     pub fn sampled(prompt: Vec<i32>, max_new: usize, sampler: SamplerSpec, seed: u64) -> Request {
-        Request { prompt, max_new, sampler, seed, first_token: None }
+        Request { sampler, seed, ..Request::greedy(prompt, max_new) }
+    }
+
+    /// Builder-style stop-sequence attachment.
+    pub fn with_stop(mut self, stop: Vec<Vec<i32>>) -> Request {
+        self.stop = stop;
+        self
     }
 }
 
@@ -93,14 +111,28 @@ pub(crate) struct RowPlan {
     max_new: usize,
     seq_cap: usize,
     eos: i32,
+    /// Per-request stop sequences (suffix-matched over `out`).
+    stop_seqs: Vec<Vec<i32>>,
 }
 
 impl RowPlan {
-    pub(crate) fn new(mut prompt: Vec<i32>, seq_cap: usize, max_new: usize, eos: i32) -> RowPlan {
+    pub(crate) fn new(prompt: Vec<i32>, seq_cap: usize, max_new: usize, eos: i32) -> RowPlan {
+        Self::with_stops(prompt, seq_cap, max_new, eos, Vec::new())
+    }
+
+    pub(crate) fn with_stops(
+        mut prompt: Vec<i32>,
+        seq_cap: usize,
+        max_new: usize,
+        eos: i32,
+        mut stop_seqs: Vec<Vec<i32>>,
+    ) -> RowPlan {
         assert!(!prompt.is_empty(), "decode rows need at least one token");
         let truncated = clip_prompt(&mut prompt, seq_cap);
         let stop = (max_new == 0).then_some(StopReason::MaxNew);
-        RowPlan { seq: prompt, truncated, out: Vec::new(), stop, max_new, seq_cap, eos }
+        // an empty stop sequence would match the empty suffix immediately
+        stop_seqs.retain(|s| !s.is_empty());
+        RowPlan { seq: prompt, truncated, out: Vec::new(), stop, max_new, seq_cap, eos, stop_seqs }
     }
 
     pub(crate) fn alive(&self) -> bool {
@@ -108,6 +140,8 @@ impl RowPlan {
     }
 
     /// Feed the token chosen for this row (sampled, argmax or forced).
+    /// Stop-sequence matches win over the `max_new` budget when the same
+    /// token triggers both — the matched suffix is excluded either way.
     pub(crate) fn push(&mut self, id: i32) {
         debug_assert!(self.alive());
         if id == self.eos {
@@ -116,12 +150,53 @@ impl RowPlan {
         }
         self.seq.push(id);
         self.out.push(id);
-        if self.out.len() >= self.max_new {
+        if let Some(n) = self.stop_hit() {
+            // `seq` keeps the matched tokens: their K/V columns are
+            // already written and the frozen replay stays idempotent
+            self.out.truncate(self.out.len() - n);
+            self.stop = Some(StopReason::StopSeq);
+        } else if self.out.len() >= self.max_new {
             self.stop = Some(StopReason::MaxNew);
         } else if self.seq.len() >= self.seq_cap {
             // the legacy loop breaks at the top of the next iteration
             self.stop = Some(StopReason::WindowFull);
         }
+    }
+
+    /// Length of the longest stop sequence that is a suffix of `out`.
+    fn stop_hit(&self) -> Option<usize> {
+        self.stop_seqs
+            .iter()
+            .filter(|s| self.out.ends_with(s))
+            .map(Vec::len)
+            .max()
+    }
+
+    /// How many generated tokens are safe to stream now: everything
+    /// except the longest tail that could still grow into a stop-sequence
+    /// match. Monotone non-decreasing across pushes (a new partial match
+    /// extends the held tail by at most the one token just pushed), so
+    /// streamed tokens are never retracted; on drain everything left in
+    /// `out` flushes (a `StopSeq` drain has already truncated the match).
+    pub(crate) fn committed(&self) -> usize {
+        if self.stop.is_some() {
+            return self.out.len();
+        }
+        let mut hold = 0;
+        for s in &self.stop_seqs {
+            let longest = (s.len() - 1).min(self.out.len());
+            for h in (hold + 1..=longest).rev() {
+                if self.out.ends_with(&s[..h]) {
+                    hold = h;
+                    break;
+                }
+            }
+        }
+        self.out.len() - hold
+    }
+
+    pub(crate) fn out(&self) -> &[i32] {
+        &self.out
     }
 
     /// `(token, position)` this row contributes to the next `decode_step`.
@@ -141,6 +216,63 @@ impl RowPlan {
     }
 }
 
+/// Per-request event receiver: the serve loop pushes committed tokens
+/// (and the final [`Completion`]) into it from the model thread as each
+/// `decode_step` lands. Implemented by the HTTP front end's channel sink
+/// (`serve_http::server`) and by the in-memory collector behind
+/// [`ServeSession::run`].
+pub trait RequestSink {
+    /// One newly committed generated token. Never retracted: tokens that
+    /// could still complete a stop-sequence match are held back until
+    /// they can't (see `RowPlan::committed`).
+    fn on_token(&mut self, tok: i32);
+    /// The row drained. `completion.tokens` repeats every token already
+    /// delivered through [`RequestSink::on_token`].
+    fn on_done(&mut self, completion: &Completion);
+}
+
+/// One admission poll outcome (see [`RequestSource::poll`]).
+pub enum Feed {
+    /// Admit this request into the freed row now; its events flow into
+    /// the sink.
+    Admit(Request, Box<dyn RequestSink>),
+    /// Nothing queued right now — keep the live rows moving.
+    Pending,
+    /// No request will ever arrive again: drain in-flight rows and exit.
+    Closed,
+}
+
+/// Counters [`RequestSource::observe`] sees once per loop iteration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LoopStats {
+    pub decode_steps: u64,
+    pub batch_prefills: u64,
+    pub streamed_prompt_tokens: u64,
+    pub admitted: u64,
+    /// Rows currently prefilling or decoding.
+    pub live_rows: usize,
+}
+
+/// Feeds requests into [`ServeSession::run_loop`]. The in-memory slice
+/// source behind [`ServeSession::run`] never blocks; the HTTP front end's
+/// channel source blocks in `poll(idle = true)` so an idle server doesn't
+/// spin.
+pub trait RequestSource {
+    /// Ask for the next request. `idle` is true when no row is live — the
+    /// loop has nothing to overlap a wait with, so the source may (and
+    /// should) block until a request arrives, the queue closes, or a
+    /// short heartbeat elapses ([`Feed::Pending`] re-polls).
+    fn poll(&mut self, idle: bool) -> Feed;
+    /// Called once per loop iteration (admissions just handled, before
+    /// the next prefill/step) and once more before [`run_loop`] returns.
+    /// Metrics exporters snapshot [`crate::runtime::Runtime::stats`] here
+    /// — this is the only hook that runs on the model thread, where the
+    /// (`!Sync`) runtime is reachable.
+    ///
+    /// [`run_loop`]: ServeSession::run_loop
+    fn observe(&mut self, _eng: &Engine, _stats: LoopStats) {}
+}
+
 /// Row-slot lifecycle (reported by [`RowSlot::state`]; the unit tier pins
 /// the transitions).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -158,8 +290,6 @@ pub(crate) enum SlotState {
 }
 
 struct Occupant {
-    /// Index into the session's request list (results return in order).
-    req: usize,
     plan: RowPlan,
     /// Prompt length after clipping — fixed at admission; `plan.seq`
     /// grows past it as tokens are generated.
@@ -168,6 +298,10 @@ struct Occupant {
     fed: usize,
     sampler: Box<dyn Sampler>,
     first: Option<i32>,
+    /// Where this request's tokens and completion go.
+    sink: Box<dyn RequestSink>,
+    /// Tokens already delivered to the sink (committed watermark).
+    emitted: usize,
 }
 
 impl Occupant {
@@ -205,27 +339,45 @@ impl RowSlot {
         }
     }
 
-    fn admit(&mut self, req_idx: usize, req: &Request, seq_cap: usize, eos: i32) {
+    fn admit(&mut self, req: Request, sink: Box<dyn RequestSink>, seq_cap: usize, eos: i32) {
         debug_assert!(!self.live(), "admitting into a live row");
-        let plan = RowPlan::new(req.prompt.clone(), seq_cap, req.max_new, eos);
+        let sampler = req.sampler.build(req.seed);
+        let plan = RowPlan::with_stops(req.prompt, seq_cap, req.max_new, eos, req.stop);
         let prompt_len = plan.seq.len();
         self.0 = Some(Occupant {
-            req: req_idx,
             plan,
             prompt_len,
             fed: 0,
-            sampler: req.sampler.build(req.seed),
+            sampler,
             first: req.first_token,
+            sink,
+            emitted: 0,
         });
     }
 
-    /// Harvest a drained occupant's completion, freeing the row.
-    fn take_done(&mut self) -> Option<(usize, Completion)> {
-        if self.state() != SlotState::Drained {
-            return None;
+    /// Flush newly committed tokens to the occupant's sink.
+    fn emit(&mut self) {
+        if let Some(occ) = &mut self.0 {
+            let c = occ.plan.committed();
+            while occ.emitted < c {
+                occ.sink.on_token(occ.plan.out()[occ.emitted]);
+                occ.emitted += 1;
+            }
         }
+    }
+
+    /// Harvest a drained occupant — flush its tail, fire
+    /// [`RequestSink::on_done`], free the row. Returns whether a
+    /// completion was delivered.
+    fn take_done(&mut self) -> bool {
+        if self.state() != SlotState::Drained {
+            return false;
+        }
+        self.emit(); // drained: everything left in `out` is committed
         let occ = self.0.take().expect("drained implies occupied");
-        Some((occ.req, occ.plan.into_completion()))
+        let mut sink = occ.sink;
+        sink.on_done(&occ.plan.into_completion());
+        true
     }
 
     /// Whether this row consumes the prefill `head_logits` row (alive and
@@ -284,6 +436,7 @@ impl RowSlot {
             }
         };
         occ.plan.push(tok);
+        self.emit();
     }
 
     /// Advance one decode step: a prefilling row records its fed column
@@ -313,6 +466,7 @@ impl RowSlot {
             }
             SlotState::Vacant | SlotState::Drained => {}
         }
+        self.emit();
     }
 }
 
@@ -365,7 +519,58 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
     /// one [`Completion`] per request, in request order. `eos` stops a
     /// row (not emitted); `pad` fills unused rows and prompt tails.
     pub fn run(&mut self, requests: &[Request], eos: i32, pad: i32) -> Result<Vec<Completion>> {
-        self.serve_queue(requests, eos, pad)
+        use std::cell::RefCell;
+        use std::rc::Rc;
+
+        if requests.is_empty() {
+            return Ok(Vec::new());
+        }
+        let done: Rc<RefCell<Vec<Option<Completion>>>> =
+            Rc::new(RefCell::new(vec![None; requests.len()]));
+
+        /// Collector sink: drops per-token events, files the completion
+        /// under its request index (results return in request order).
+        struct Collect {
+            idx: usize,
+            done: Rc<RefCell<Vec<Option<Completion>>>>,
+        }
+        impl RequestSink for Collect {
+            fn on_token(&mut self, _tok: i32) {}
+            fn on_done(&mut self, c: &Completion) {
+                self.done.borrow_mut()[self.idx] = Some(c.clone());
+            }
+        }
+
+        /// Non-blocking source over an in-memory slice — the PR 5 burst
+        /// semantics: the queue head is always ready, then the queue
+        /// closes.
+        struct SliceSrc<'a> {
+            requests: &'a [Request],
+            next: usize,
+            done: Rc<RefCell<Vec<Option<Completion>>>>,
+        }
+        impl RequestSource for SliceSrc<'_> {
+            fn poll(&mut self, _idle: bool) -> Feed {
+                if self.next >= self.requests.len() {
+                    return Feed::Closed;
+                }
+                let idx = self.next;
+                self.next += 1;
+                Feed::Admit(
+                    self.requests[idx].clone(),
+                    Box::new(Collect { idx, done: self.done.clone() }),
+                )
+            }
+        }
+
+        let mut src = SliceSrc { requests, next: 0, done: done.clone() };
+        self.run_loop(&mut src, eos, pad)?;
+        let out = done
+            .borrow_mut()
+            .drain(..)
+            .map(|c| c.expect("every request drains before the loop exits"))
+            .collect();
+        Ok(out)
     }
 
     /// The static-batch schedule: requests processed in batch-width
@@ -382,24 +587,31 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
         let mut out = Vec::with_capacity(requests.len());
         for chunk in requests.chunks(bsz) {
             // a chunk never outnumbers the rows, so the in-loop admission
-            // below has nothing left to admit: no mid-decode admission
-            out.extend(self.serve_queue(chunk, eos, pad)?);
+            // has nothing left to admit: no mid-decode admission
+            out.extend(self.run(chunk, eos, pad)?);
         }
         Ok(out)
     }
 
-    fn serve_queue(&mut self, requests: &[Request], eos: i32, pad: i32) -> Result<Vec<Completion>> {
-        if requests.is_empty() {
-            return Ok(Vec::new());
-        }
+    /// The serve loop proper, generalized over *where requests come from*
+    /// (an in-memory slice for [`ServeSession::run`], a bounded channel
+    /// for the HTTP front end) and *where tokens go* (each admission
+    /// carries its own [`RequestSink`]). Runs until the source reports
+    /// [`Feed::Closed`] and every in-flight row has drained; events fire
+    /// on this thread, the only one that touches the engine.
+    pub fn run_loop(
+        &mut self,
+        src: &mut dyn RequestSource,
+        eos: i32,
+        pad: i32,
+    ) -> Result<()> {
         let m = self.eng.rt.manifest.clone();
         let (bsz, t_max, v) = (m.batch, m.seq, m.vocab);
         let state_shape = vec![bsz, m.decode_state_rows(), m.d_model];
         let logit1_shape = [bsz, 1, v];
 
-        let mut done: Vec<Option<Completion>> = (0..requests.len()).map(|_| None).collect();
         let mut slots: Vec<RowSlot> = (0..bsz).map(|_| RowSlot::default()).collect();
-        let mut next = 0usize;
+        let mut closed = false;
         let mut state: Option<Act> = None;
         // decode-loop parameter operands, built once on first use and
         // served from the device cache across every step of the session
@@ -407,21 +619,58 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
         let mut dec_ops: Option<DecOps<'e>> = None;
 
         loop {
-            // ---- admission: hand freed rows to the queue head
+            // ---- admission: harvest drained rows, hand freed rows to
+            // the queue head
             for slot in slots.iter_mut() {
-                while next < requests.len() && !slot.live() {
-                    if let Some((req, c)) = slot.take_done() {
-                        done[req] = Some(c);
+                loop {
+                    if slot.live() {
+                        break;
                     }
-                    slot.admit(next, &requests[next], t_max, eos);
-                    self.admitted += 1;
-                    next += 1;
-                    // a zero-budget request drains instantly; the `while`
-                    // hands the same row straight to the next request
+                    slot.take_done();
+                    if closed {
+                        break;
+                    }
+                    match src.poll(false) {
+                        Feed::Admit(req, sink) => {
+                            slot.admit(req, sink, t_max, eos);
+                            self.admitted += 1;
+                            // a zero-budget request drains instantly; the
+                            // loop hands the row straight to the next one
+                        }
+                        Feed::Pending => break,
+                        Feed::Closed => {
+                            closed = true;
+                            break;
+                        }
+                    }
                 }
             }
-            if !slots.iter().any(RowSlot::live) {
-                break; // queue exhausted and every row drained
+            let live = slots.iter().filter(|s| s.live()).count();
+            src.observe(
+                self.eng,
+                LoopStats {
+                    decode_steps: self.decode_steps,
+                    batch_prefills: self.batch_prefills,
+                    streamed_prompt_tokens: self.streamed_prompt_tokens,
+                    admitted: self.admitted,
+                    live_rows: live,
+                },
+            );
+            if live == 0 {
+                if closed {
+                    break; // queue closed and every row drained
+                }
+                // idle: nothing to overlap a wait with — let the source
+                // block until traffic (or its heartbeat) wakes us
+                match src.poll(true) {
+                    Feed::Admit(req, sink) => {
+                        slots[0].admit(req, sink, t_max, eos);
+                        self.admitted += 1;
+                    }
+                    Feed::Pending => {}
+                    Feed::Closed => closed = true,
+                }
+                continue;
             }
 
             // ---- prefill: batched while no row holds in-flight K/V;
@@ -488,17 +737,10 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             }
         }
 
-        // final harvest
-        for slot in slots.iter_mut() {
-            if let Some((req, c)) = slot.take_done() {
-                done[req] = Some(c);
-            }
-        }
+        // every row was harvested by the admission pass of the final
+        // iteration — only the device state is left to account for
         self.eng.meter.set(MemCategory::Activations, 0);
-        Ok(done
-            .into_iter()
-            .map(|c| c.expect("every request drains before the session ends"))
-            .collect())
+        Ok(())
     }
 
     /// Batched prefill of every occupied row's current sequence:
@@ -647,13 +889,136 @@ mod tests {
         assert_eq!(r.step_input(), (9, 2));
     }
 
+    // ---- stop sequences + streaming commit ------------------------------
+
+    #[test]
+    fn stop_sequence_drains_and_excludes_the_match() {
+        let mut r = RowPlan::with_stops(vec![1], 32, 10, 2, vec![vec![7, 8]]);
+        r.push(5);
+        r.push(7);
+        assert!(r.alive());
+        r.push(8); // completes [7, 8]
+        assert!(!r.alive());
+        let c = r.into_completion();
+        assert_eq!(c.tokens, vec![5], "matched suffix excluded");
+        assert_eq!(c.stop, StopReason::StopSeq);
+        assert_eq!(c.stop.label(), "stop_seq");
+    }
+
+    #[test]
+    fn longest_stop_sequence_wins_and_empty_ones_are_ignored() {
+        let mut r = RowPlan::with_stops(
+            vec![1],
+            32,
+            10,
+            2,
+            vec![vec![], vec![8], vec![7, 8]],
+        );
+        r.push(5);
+        r.push(7);
+        r.push(8); // matches both [8] and [7, 8]: strip the longest
+        let c = r.into_completion();
+        assert_eq!(c.tokens, vec![5]);
+        assert_eq!(c.stop, StopReason::StopSeq);
+    }
+
+    #[test]
+    fn stop_sequence_wins_over_max_new_on_the_same_token() {
+        let mut r = RowPlan::with_stops(vec![1], 32, 2, 2, vec![vec![5, 6]]);
+        r.push(5);
+        r.push(6); // budget reached AND stop matched
+        let c = r.into_completion();
+        assert_eq!(c.stop, StopReason::StopSeq);
+        assert!(c.tokens.is_empty());
+    }
+
+    #[test]
+    fn stop_matches_generated_tokens_only_not_the_prompt() {
+        // prompt ends ... 7; stop [7, 8]: the generated 8 alone must NOT
+        // complete a match across the prompt boundary
+        let mut r = RowPlan::with_stops(vec![1, 7], 32, 4, 2, vec![vec![7, 8]]);
+        r.push(8);
+        assert!(r.alive());
+        r.push(7);
+        r.push(8);
+        let c = r.into_completion();
+        assert_eq!(c.tokens, vec![8]);
+        assert_eq!(c.stop, StopReason::StopSeq);
+    }
+
+    #[test]
+    fn committed_holds_back_partial_matches_and_never_retracts() {
+        let mut r = RowPlan::with_stops(vec![1], 64, 20, 2, vec![vec![7, 8, 9]]);
+        assert_eq!(r.committed(), 0);
+        r.push(5);
+        assert_eq!(r.committed(), 1);
+        r.push(7); // could grow into [7, 8, 9]
+        assert_eq!(r.committed(), 1);
+        r.push(8); // still could
+        assert_eq!(r.committed(), 1);
+        r.push(4); // match broken: everything flushes
+        assert_eq!(r.committed(), 4);
+        r.push(7);
+        r.push(8);
+        r.push(9); // match: drained, committed == out.len() == truncated 4
+        assert!(!r.alive());
+        assert_eq!(r.committed(), 4);
+        let c = r.into_completion();
+        assert_eq!(c.tokens, vec![5, 7, 8, 4]);
+    }
+
+    #[test]
+    fn committed_is_monotone_under_random_pushes() {
+        // property: whatever lands, the committed watermark never moves
+        // backwards (streamed tokens can never be retracted)
+        let mut rng = crate::util::rng::Rng::new(71);
+        for _ in 0..200 {
+            let stops = vec![vec![3, 1], vec![1, 1, 4], vec![2]];
+            let mut r = RowPlan::with_stops(vec![9], 4096, 1000, -1, stops);
+            let mut last = 0;
+            while r.alive() && r.out().len() < 40 {
+                r.push(rng.below(5) as i32);
+                let c = r.committed();
+                assert!(c >= last, "committed retracted: {c} < {last}");
+                assert!(c <= r.out().len());
+                last = c;
+            }
+        }
+    }
+
     // ---- RowSlot: the Vacant -> Prefilling -> Decoding -> Drained walk --
+
+    use std::cell::RefCell;
+    use std::rc::Rc;
 
     const EOS: i32 = 2;
     const PAD: i32 = 0;
 
     fn req(prompt: Vec<i32>, max_new: usize) -> Request {
         Request::greedy(prompt, max_new)
+    }
+
+    /// Sink that records the event stream for assertions.
+    #[derive(Default)]
+    struct Log {
+        toks: Vec<i32>,
+        done: Option<Completion>,
+    }
+
+    struct LogSink(Rc<RefCell<Log>>);
+
+    impl RequestSink for LogSink {
+        fn on_token(&mut self, tok: i32) {
+            self.0.borrow_mut().toks.push(tok);
+        }
+        fn on_done(&mut self, c: &Completion) {
+            self.0.borrow_mut().done = Some(c.clone());
+        }
+    }
+
+    fn log_sink() -> (Box<dyn RequestSink>, Rc<RefCell<Log>>) {
+        let log = Rc::new(RefCell::new(Log::default()));
+        (Box::new(LogSink(log.clone())), log)
     }
 
     /// One decode-logits row that makes the greedy sampler pick `tok`.
@@ -669,8 +1034,10 @@ mod tests {
         assert_eq!(s.state(), SlotState::Vacant);
         assert_eq!(s.step_input(PAD), (PAD, 0));
         assert!(!s.live());
+        assert!(!s.take_done());
 
-        s.admit(0, &req(vec![1, 5, 3], 2), 16, EOS);
+        let (sink, log) = log_sink();
+        s.admit(req(vec![1, 5, 3], 2), sink, 16, EOS);
         assert_eq!(s.state(), SlotState::Prefilling);
         assert!(s.live() && s.needs_prefill_logits());
 
@@ -683,6 +1050,7 @@ mod tests {
         assert_eq!(s.step_input(PAD), (3, 2));
         s.consume(Some(&row_for(7, 16))); // last prompt column: first token
         assert_eq!(s.state(), SlotState::Decoding);
+        assert_eq!(log.borrow().toks, vec![7], "first token streams as it lands");
 
         assert_eq!(s.step_input(PAD), (7, 3));
         s.consume(Some(&row_for(8, 16))); // budget of 2 reached
@@ -691,16 +1059,43 @@ mod tests {
         assert_eq!(s.step_input(PAD), (8, 4));
         assert_eq!(s.step_input(PAD), (8, 4));
 
-        let (req_idx, c) = s.take_done().expect("drained");
-        assert_eq!(req_idx, 0);
-        assert_eq!(c.tokens, vec![7, 8]);
+        assert!(s.take_done());
         assert_eq!(s.state(), SlotState::Vacant);
+        let log = log.borrow();
+        assert_eq!(log.toks, vec![7, 8]);
+        let c = log.done.as_ref().expect("on_done fired");
+        assert_eq!(c.tokens, vec![7, 8]);
+        assert_eq!(c.stop, StopReason::MaxNew);
+    }
+
+    #[test]
+    fn slot_streams_respecting_stop_sequence_holdback() {
+        let mut s = RowSlot::default();
+        let (sink, log) = log_sink();
+        let r = req(vec![1], 10).with_stop(vec![vec![8, 9]]);
+        s.admit(r, sink, 64, EOS);
+        s.consume(Some(&row_for(5, 16))); // last prompt column: first token
+        assert_eq!(log.borrow().toks, vec![5]);
+        s.consume(Some(&row_for(8, 16))); // could open [8, 9]: held back
+        assert_eq!(log.borrow().toks, vec![5]);
+        s.consume(Some(&row_for(4, 16))); // match broken: 8 and 4 flush
+        assert_eq!(log.borrow().toks, vec![5, 8, 4]);
+        s.consume(Some(&row_for(8, 16)));
+        s.consume(Some(&row_for(9, 16))); // match: drains, suffix dropped
+        assert_eq!(s.state(), SlotState::Drained);
+        assert!(s.take_done());
+        let log = log.borrow();
+        assert_eq!(log.toks, vec![5, 8, 4], "held-back suffix never streamed");
+        let c = log.done.as_ref().unwrap();
+        assert_eq!(c.tokens, vec![5, 8, 4]);
+        assert_eq!(c.stop, StopReason::StopSeq);
     }
 
     #[test]
     fn batch_prefill_completion_skips_streaming() {
         let mut s = RowSlot::default();
-        s.admit(3, &req(vec![1, 5], 4), 16, EOS);
+        let (sink, log) = log_sink();
+        s.admit(req(vec![1, 5], 4), sink, 16, EOS);
         assert!(s.no_progress(), "fed == 0 joins a fresh batch prefill");
         let lg = HostTensor::from_vec(&[1, 16, 8], {
             let mut d = vec![0.0; 16 * 8];
@@ -711,6 +1106,7 @@ mod tests {
         assert_eq!(s.state(), SlotState::Decoding);
         assert!(!s.no_progress());
         assert_eq!(s.step_input(PAD), (6, 2));
+        assert_eq!(log.borrow().toks, vec![6], "prefill's first token streams");
     }
 
     #[test]
@@ -718,7 +1114,7 @@ mod tests {
         let mut s = RowSlot::default();
         let mut r = req(vec![1, 5], 3);
         r.first_token = Some(4);
-        s.admit(0, &r, 16, EOS);
+        s.admit(r, log_sink().0, 16, EOS);
         assert!(!s.needs_prefill_logits());
         s.finish_batch_prefill(None, 16, 8);
         assert_eq!(s.state(), SlotState::Decoding);
@@ -728,7 +1124,7 @@ mod tests {
         let mut s = RowSlot::default();
         let mut r = req(vec![9], 3);
         r.first_token = Some(5);
-        s.admit(1, &r, 16, EOS);
+        s.admit(r, log_sink().0, 16, EOS);
         assert_eq!(s.step_input(PAD), (9, 0));
         s.consume(Some(&row_for(2, 16))); // logits ignored: forced wins
         assert_eq!(s.step_input(PAD), (5, 1));
@@ -737,10 +1133,14 @@ mod tests {
     #[test]
     fn zero_budget_request_drains_on_admission() {
         let mut s = RowSlot::default();
-        s.admit(0, &req(vec![1, 2, 3], 0), 16, EOS);
+        let (sink, log) = log_sink();
+        s.admit(req(vec![1, 2, 3], 0), sink, 16, EOS);
         assert_eq!(s.state(), SlotState::Drained);
         assert!(!s.needs_prefill_logits());
-        let (_, c) = s.take_done().unwrap();
+        assert!(s.take_done());
+        let log = log.borrow();
+        assert!(log.toks.is_empty());
+        let c = log.done.as_ref().unwrap();
         assert!(c.tokens.is_empty());
         assert_eq!(c.stop, StopReason::MaxNew);
     }
@@ -748,11 +1148,15 @@ mod tests {
     #[test]
     fn eos_as_first_streamed_token_drains_immediately() {
         let mut s = RowSlot::default();
-        s.admit(0, &req(vec![1, 5], 4), 16, EOS);
+        let (sink, log) = log_sink();
+        s.admit(req(vec![1, 5], 4), sink, 16, EOS);
         s.consume(Some(&row_for(9, 16)));
         s.consume(Some(&row_for(EOS, 16))); // first token is <eos>
         assert_eq!(s.state(), SlotState::Drained);
-        let (_, c) = s.take_done().unwrap();
+        assert!(s.take_done());
+        let log = log.borrow();
+        assert!(log.toks.is_empty());
+        let c = log.done.as_ref().unwrap();
         assert!(c.tokens.is_empty());
         assert_eq!(c.stop, StopReason::Eos);
     }

@@ -69,7 +69,15 @@ pub fn complete_batch(
             .iter()
             .enumerate()
             .map(|(i, p)| {
-                complete_legacy(eng, params, tok, p, max_new, spec, request_seed(gen_seed, i))
+                complete_legacy(
+                    eng,
+                    params,
+                    tok,
+                    p,
+                    max_new,
+                    spec.clone(),
+                    request_seed(gen_seed, i),
+                )
             })
             .collect();
     }
@@ -77,7 +85,12 @@ pub fn complete_batch(
         .iter()
         .enumerate()
         .map(|(i, p)| {
-            Request::sampled(encode_prompt(tok, p), max_new, spec, request_seed(gen_seed, i))
+            Request::sampled(
+                encode_prompt(tok, p),
+                max_new,
+                spec.clone(),
+                request_seed(gen_seed, i),
+            )
         })
         .collect();
     let mut sess = ServeSession::new(eng, params)?;

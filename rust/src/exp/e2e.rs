@@ -97,7 +97,7 @@ pub fn e2e(ctx: &Ctx, config: &str, steps_override: Option<usize>) -> Result<()>
         &task.tok,
         gen_samples,
         gen_max_new,
-        ctx.sampler,
+        ctx.sampler.clone(),
         ctx.gen_seed,
     )?;
     let gen_ms = tg.elapsed().as_secs_f64() * 1e3;

@@ -93,7 +93,7 @@ pub fn suite_finetune(ctx: &Ctx, config: &str) -> Result<()> {
             &task.tok,
             gen_samples,
             gen_max_new,
-            ctx.sampler,
+            ctx.sampler.clone(),
             ctx.gen_seed,
         )?;
         tab3.row(vec![

@@ -21,6 +21,7 @@ pub mod opt;
 pub mod lora;
 pub mod data;
 pub mod eval;
+pub mod serve_http;
 pub mod strategy;
 pub mod train;
 pub mod membench;

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! lisa train  --config small --method lisa --steps 120 ...   one training run
+//! lisa serve  --config small --ckpt results/model.ckpt ...   HTTP serving front end
 //! lisa exp <id> [--config C] [--scale 0.5]                   reproduce a paper table/figure
 //! lisa exp list                                              list experiments + strategies
 //! lisa exp all                                               the full reproduction suite
@@ -54,6 +55,11 @@ const SPEC: &[(&str, &str, &str)] = &[
     ("top-k", "40", "decode: top-k cutoff (with --sample top-k; 1 = argmax)"),
     ("top-p", "0.9", "decode: nucleus mass cutoff (with --sample top-p)"),
     ("gen-seed", "42", "decode: base seed of the per-request sampler streams"),
+    ("addr", "127.0.0.1:8080", "serve: bind address host:port (port 0 = ephemeral)"),
+    ("http-workers", "4", "serve: HTTP worker threads"),
+    ("max-queue", "32", "serve: admission-queue bound (further requests get 429)"),
+    ("max-new", "32", "serve: default per-request generation budget"),
+    ("max-new-cap", "256", "serve: hard per-request cap on max_new (larger asks are clamped)"),
     ("scale", "1.0", "experiment step-budget multiplier"),
     ("samples", "480", "train: corpus size"),
     ("eval", "true", "train: evaluate on the val split afterwards"),
@@ -198,18 +204,84 @@ fn cmd_train(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `lisa serve`: HTTP front end over the continuous-batching decode
+/// loop (DESIGN.md §11). The engine stays on this thread; HTTP workers
+/// only enqueue requests and forward token events.
+fn cmd_serve(a: &Args) -> Result<()> {
+    use lisa::engine::{Engine, ServeSession};
+    use lisa::serve_http::{install_sigint, HttpFrontend, ServeConfig};
+
+    let ctx = ctx_from(a)?;
+    let config = a.get_opt("config").unwrap_or_else(|| "small".into());
+    let rt = ctx.runtime(&config)?;
+    let m = &rt.manifest;
+    if !m.supports_decode(&rt.backend) {
+        bail!(
+            "artifact dir '{}' carries no decode-ABI segments for backend '{}' — \
+             `lisa serve` needs the KV-cached decode path (re-export with \
+             python/compile/aot.py)",
+            m.dir.display(),
+            rt.backend
+        );
+    }
+
+    // Synthetic-corpus tokenizer, same construction as training: a server
+    // for a checkpoint trained with `--samples N --seed S` must be
+    // started with the same two flags to agree on the vocabulary.
+    let samples = corpus::gen_instruction_corpus(a.get_usize("samples")?, ctx.seed);
+    let tok = Tokenizer::build(&corpus::sample_texts(&samples), m.vocab);
+
+    let mut rng = lisa::util::rng::Rng::new(ctx.seed);
+    let mut params = lisa::model::ModelParams::init(m, &mut rng);
+    match a.get_opt("ckpt") {
+        Some(p) => {
+            let path = PathBuf::from(p);
+            lisa::model::checkpoint::load_model(&path, &mut params)?;
+            println!("loaded model checkpoint {}", path.display());
+        }
+        None => println!("no --ckpt given: serving seed-{} initialized weights", ctx.seed),
+    }
+
+    let cfg = ServeConfig {
+        addr: a.get("addr"),
+        workers: a.get_usize("http-workers")?.max(1),
+        max_queue: a.get_usize("max-queue")?.max(1),
+        default_max_new: a.get_usize("max-new")?.max(1),
+        max_new_cap: a.get_usize("max-new-cap")?.max(1),
+        default_spec: ctx.sampler.clone(),
+        gen_seed: ctx.gen_seed,
+        ..Default::default()
+    };
+    let (eos, pad) = (cfg.eos, cfg.pad);
+    let front = HttpFrontend::bind(cfg, tok)?;
+    install_sigint();
+    println!(
+        "serving {config} ({:.1}M params, {} decode rows) on http://{} — ^C drains and exits",
+        m.n_params as f64 / 1e6,
+        m.batch,
+        front.local_addr()?
+    );
+
+    let mut eng = Engine::new(&rt);
+    let mut sess = ServeSession::new(&mut eng, &params)?;
+    front.run(|src| sess.run_loop(src, eos, pad))?;
+    println!("drained in-flight requests; exiting");
+    Ok(())
+}
+
 fn real_main() -> Result<()> {
     lisa::util::logger::init();
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let a = Args::parse(&raw, SPEC)?;
     if a.wants_help() || a.positional.is_empty() {
-        print!("{}", a.help("lisa <train|exp|memory|info> [options]"));
+        print!("{}", a.help("lisa <train|serve|exp|memory|info> [options]"));
         println!("\nexperiments:");
         exp::list();
         return Ok(());
     }
     match a.positional[0].as_str() {
         "train" => cmd_train(&a),
+        "serve" => cmd_serve(&a),
         "exp" => {
             let id = a.positional.get(1).map(|s| s.as_str()).unwrap_or("list");
             if id == "list" {

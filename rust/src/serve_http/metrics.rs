@@ -1,0 +1,305 @@
+//! Serving metrics for `GET /metrics` (DESIGN.md §11): request/status
+//! counters, queue depth, TTFT and per-request throughput histograms,
+//! plus a snapshot of the engine's per-segment `ExecStats` and the serve
+//! loop's `LoopStats`, rendered in the Prometheus text exposition format.
+//!
+//! Everything the HTTP workers touch per request is an atomic or a
+//! lock-free `Histogram`; the only lock is around the engine snapshot,
+//! which the model thread refreshes (throttled, from `observe`) and the
+//! `/metrics` handler clones — neither side ever holds it across I/O.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::engine::LoopStats;
+use crate::runtime::ExecStats;
+use crate::util::hist::Histogram;
+
+/// Status codes with dedicated counters; anything else lands in `other`.
+const STATUS_CODES: [u16; 8] = [200, 400, 404, 405, 413, 429, 500, 503];
+
+/// Engine-side observables, copied out of the model thread.
+#[derive(Debug, Default, Clone)]
+pub struct EngineSnapshot {
+    pub segments: BTreeMap<String, ExecStats>,
+    pub loops: LoopStats,
+}
+
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    /// Seconds from admission-queue entry to the first committed token.
+    pub ttft: Histogram,
+    /// Generated tokens per wall-clock second, one sample per finished
+    /// request (wall clock includes queueing and prefill — the number a
+    /// client actually experiences).
+    pub tok_rate: Histogram,
+    /// Requests sitting in the admission queue right now.
+    queue_depth: AtomicUsize,
+    status: [AtomicU64; STATUS_CODES.len()],
+    status_other: AtomicU64,
+    tokens_out: AtomicU64,
+    completions: AtomicU64,
+    /// Set by request completion, cleared by the model thread when it
+    /// refreshes the engine snapshot — keeps `observe` cheap on the
+    /// decode hot path while guaranteeing a fresh snapshot after bursts.
+    dirty: AtomicBool,
+    engine: Mutex<EngineSnapshot>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            ttft: Histogram::exponential(1e-3, 2.0, 15), // 1 ms .. ~16 s
+            tok_rate: Histogram::exponential(1.0, 2.0, 16), // 1 .. ~32k tok/s
+            queue_depth: AtomicUsize::new(0),
+            status: Default::default(),
+            status_other: AtomicU64::new(0),
+            tokens_out: AtomicU64::new(0),
+            completions: AtomicU64::new(0),
+            dirty: AtomicBool::new(false),
+            engine: Mutex::new(EngineSnapshot::default()),
+        }
+    }
+
+    pub fn inc_status(&self, code: u16) {
+        match STATUS_CODES.iter().position(|c| *c == code) {
+            Some(i) => self.status[i].fetch_add(1, Ordering::Relaxed),
+            None => self.status_other.fetch_add(1, Ordering::Relaxed),
+        };
+    }
+
+    pub fn status_count(&self, code: u16) -> u64 {
+        match STATUS_CODES.iter().position(|c| *c == code) {
+            Some(i) => self.status[i].load(Ordering::Relaxed),
+            None => self.status_other.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn enqueue(&self) {
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dequeue(&self) {
+        // saturating: enqueue/dequeue race only in the direction of a
+        // transiently high reading, never an underflow panic
+        let _ = self
+            .queue_depth
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| d.checked_sub(1));
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Called by the sink when a request finishes: `n` generated tokens
+    /// over `dur_s` of wall clock.
+    pub fn request_done(&self, n: u64, dur_s: f64) {
+        if n > 0 && dur_s > 0.0 {
+            self.tok_rate.observe(n as f64 / dur_s);
+        }
+        self.tokens_out.fetch_add(n, Ordering::Relaxed);
+        self.completions.fetch_add(1, Ordering::Relaxed);
+        self.dirty.store(true, Ordering::Release);
+    }
+
+    pub fn completions(&self) -> u64 {
+        self.completions.load(Ordering::Relaxed)
+    }
+
+    pub fn tokens_out(&self) -> u64 {
+        self.tokens_out.load(Ordering::Relaxed)
+    }
+
+    /// True once per completion burst: the model thread uses this to
+    /// decide when a full (segment-stats) snapshot refresh is due.
+    pub fn take_dirty(&self) -> bool {
+        self.dirty.swap(false, Ordering::Acquire)
+    }
+
+    pub fn set_engine(&self, snap: EngineSnapshot) {
+        *self.engine.lock().unwrap() = snap;
+    }
+
+    /// Cheap per-iteration update: loop counters only, segments kept.
+    pub fn set_loop(&self, loops: LoopStats) {
+        self.engine.lock().unwrap().loops = loops;
+    }
+
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Prometheus text exposition (version 0.0.4).
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut o = String::with_capacity(4096);
+
+        let _ = writeln!(o, "# HELP lisa_http_requests_total HTTP responses by status code.");
+        let _ = writeln!(o, "# TYPE lisa_http_requests_total counter");
+        for (i, code) in STATUS_CODES.iter().enumerate() {
+            let _ = writeln!(
+                o,
+                "lisa_http_requests_total{{code=\"{code}\"}} {}",
+                self.status[i].load(Ordering::Relaxed)
+            );
+        }
+        let _ = writeln!(
+            o,
+            "lisa_http_requests_total{{code=\"other\"}} {}",
+            self.status_other.load(Ordering::Relaxed)
+        );
+
+        let _ = writeln!(o, "# HELP lisa_http_queue_depth Requests waiting in the admission queue.");
+        let _ = writeln!(o, "# TYPE lisa_http_queue_depth gauge");
+        let _ = writeln!(o, "lisa_http_queue_depth {}", self.queue_depth());
+
+        let _ = writeln!(o, "# HELP lisa_serve_completions_total Finished completion requests.");
+        let _ = writeln!(o, "# TYPE lisa_serve_completions_total counter");
+        let _ = writeln!(o, "lisa_serve_completions_total {}", self.completions());
+
+        let _ = writeln!(o, "# HELP lisa_generated_tokens_total Tokens delivered to clients.");
+        let _ = writeln!(o, "# TYPE lisa_generated_tokens_total counter");
+        let _ = writeln!(o, "lisa_generated_tokens_total {}", self.tokens_out());
+
+        let _ = writeln!(o, "# HELP lisa_serve_ttft_seconds Queue entry to first committed token.");
+        let _ = writeln!(o, "# TYPE lisa_serve_ttft_seconds histogram");
+        self.ttft.render_prometheus("lisa_serve_ttft_seconds", &mut o);
+        for (q, name) in [(0.5, "lisa_serve_ttft_p50_seconds"), (0.99, "lisa_serve_ttft_p99_seconds")] {
+            let _ = writeln!(o, "# TYPE {name} gauge");
+            let _ = writeln!(o, "{name} {}", self.ttft.quantile(q));
+        }
+
+        let _ = writeln!(o, "# HELP lisa_serve_tokens_per_sec Per-request generation throughput.");
+        let _ = writeln!(o, "# TYPE lisa_serve_tokens_per_sec histogram");
+        self.tok_rate.render_prometheus("lisa_serve_tokens_per_sec", &mut o);
+        for (q, name) in [(0.5, "lisa_serve_tokens_per_sec_p50"), (0.99, "lisa_serve_tokens_per_sec_p99")] {
+            let _ = writeln!(o, "# TYPE {name} gauge");
+            let _ = writeln!(o, "{name} {}", self.tok_rate.quantile(q));
+        }
+
+        let _ = writeln!(o, "# HELP lisa_serve_uptime_seconds Seconds since the server started.");
+        let _ = writeln!(o, "# TYPE lisa_serve_uptime_seconds gauge");
+        let _ = writeln!(o, "lisa_serve_uptime_seconds {}", self.uptime_s());
+
+        let snap = self.engine.lock().unwrap().clone();
+        let l = snap.loops;
+        for (name, help, v) in [
+            ("lisa_serve_decode_steps_total", "Batched decode_step executions.", l.decode_steps),
+            ("lisa_serve_batch_prefills_total", "Batched prefill executions.", l.batch_prefills),
+            (
+                "lisa_serve_streamed_prompt_tokens_total",
+                "Prompt tokens streamed through vacant decode rows.",
+                l.streamed_prompt_tokens,
+            ),
+            ("lisa_serve_admitted_total", "Requests admitted into decode rows.", l.admitted),
+        ] {
+            let _ = writeln!(o, "# HELP {name} {help}");
+            let _ = writeln!(o, "# TYPE {name} counter");
+            let _ = writeln!(o, "{name} {v}");
+        }
+        let _ = writeln!(o, "# HELP lisa_serve_live_rows Decode rows currently occupied.");
+        let _ = writeln!(o, "# TYPE lisa_serve_live_rows gauge");
+        let _ = writeln!(o, "lisa_serve_live_rows {}", l.live_rows);
+
+        if !snap.segments.is_empty() {
+            let _ = writeln!(o, "# HELP lisa_segment_calls_total Executions per compiled segment.");
+            let _ = writeln!(o, "# TYPE lisa_segment_calls_total counter");
+            for (seg, s) in &snap.segments {
+                let _ = writeln!(o, "lisa_segment_calls_total{{segment=\"{seg}\"}} {}", s.calls);
+            }
+            let _ = writeln!(o, "# HELP lisa_segment_seconds_total Wall clock per compiled segment.");
+            let _ = writeln!(o, "# TYPE lisa_segment_seconds_total counter");
+            for (seg, s) in &snap.segments {
+                let _ = writeln!(
+                    o,
+                    "lisa_segment_seconds_total{{segment=\"{seg}\"}} {}",
+                    s.total_ns as f64 / 1e9
+                );
+            }
+            let _ = writeln!(o, "# HELP lisa_segment_upload_bytes_total Host-to-device bytes per segment.");
+            let _ = writeln!(o, "# TYPE lisa_segment_upload_bytes_total counter");
+            for (seg, s) in &snap.segments {
+                let _ = writeln!(
+                    o,
+                    "lisa_segment_upload_bytes_total{{segment=\"{seg}\"}} {}",
+                    s.upload_bytes
+                );
+            }
+        }
+        o
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_show_up_in_the_export() {
+        let m = Metrics::new();
+        m.inc_status(200);
+        m.inc_status(200);
+        m.inc_status(429);
+        m.inc_status(999); // unknown bucket
+        m.enqueue();
+        m.enqueue();
+        m.dequeue();
+        m.ttft.observe(0.05);
+        m.request_done(32, 2.0);
+        let text = m.render();
+        assert!(text.contains("lisa_http_requests_total{code=\"200\"} 2"), "{text}");
+        assert!(text.contains("lisa_http_requests_total{code=\"429\"} 1"), "{text}");
+        assert!(text.contains("lisa_http_requests_total{code=\"other\"} 1"), "{text}");
+        assert!(text.contains("lisa_http_queue_depth 1"), "{text}");
+        assert!(text.contains("lisa_generated_tokens_total 32"), "{text}");
+        assert!(text.contains("lisa_serve_completions_total 1"), "{text}");
+        assert!(text.contains("lisa_serve_ttft_seconds_count 1"), "{text}");
+        assert!(text.contains("lisa_serve_tokens_per_sec_count 1"), "{text}");
+        assert_eq!(m.status_count(200), 2);
+    }
+
+    #[test]
+    fn queue_depth_never_underflows() {
+        let m = Metrics::new();
+        m.dequeue();
+        m.dequeue();
+        assert_eq!(m.queue_depth(), 0);
+        m.enqueue();
+        assert_eq!(m.queue_depth(), 1);
+    }
+
+    #[test]
+    fn dirty_flag_is_set_by_completions_and_consumed_once() {
+        let m = Metrics::new();
+        assert!(!m.take_dirty());
+        m.request_done(1, 0.1);
+        assert!(m.take_dirty());
+        assert!(!m.take_dirty());
+    }
+
+    #[test]
+    fn engine_snapshot_round_trips() {
+        let m = Metrics::new();
+        let mut segments = BTreeMap::new();
+        segments.insert(
+            "decode_step".to_string(),
+            ExecStats { calls: 7, total_ns: 3_000_000_000, ..Default::default() },
+        );
+        let loops = LoopStats { decode_steps: 7, admitted: 3, ..Default::default() };
+        m.set_engine(EngineSnapshot { segments, loops });
+        let text = m.render();
+        assert!(text.contains("lisa_segment_calls_total{segment=\"decode_step\"} 7"), "{text}");
+        assert!(text.contains("lisa_serve_decode_steps_total 7"), "{text}");
+        assert!(text.contains("lisa_serve_admitted_total 3"), "{text}");
+    }
+}

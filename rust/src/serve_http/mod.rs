@@ -1,0 +1,21 @@
+//! `lisa serve` — an HTTP/1.1 front end over the continuous-batching
+//! serve loop (DESIGN.md §11).
+//!
+//! Built entirely on `std::net` + the crate's own substrates (no async
+//! runtime, no HTTP crate): [`proto`] owns the wire format, [`metrics`]
+//! the Prometheus export, and [`server`] the threading contract — one
+//! model thread driving [`ServeSession::run_loop`] through a bounded
+//! admission channel, N scoped HTTP workers, 429 backpressure past the
+//! queue bound, and a SIGINT-triggered graceful drain.
+//!
+//! [`ServeSession::run_loop`]: crate::engine::ServeSession::run_loop
+
+pub mod metrics;
+pub mod proto;
+pub mod server;
+
+pub use metrics::{EngineSnapshot, Metrics};
+pub use proto::CompletionReq;
+pub use server::{
+    install_sigint, sigint_received, ChannelSource, HttpFrontend, ServeConfig, ServerState,
+};

@@ -1,0 +1,525 @@
+//! Wire protocol for `lisa serve` (DESIGN.md §11): a minimal HTTP/1.1
+//! request reader, the `/v1/completions` JSON schema, SSE framing, and a
+//! raw-TCP client used by the integration tests and the serving bench.
+//!
+//! Scope is deliberately narrow — one request per connection,
+//! `Connection: close` on every response, bodies sized by
+//! `Content-Length` only (no chunked *requests*). Streaming responses
+//! carry no `Content-Length`; HTTP/1.1 defines their end as the server
+//! closing the connection, which keeps the framing trivial on both
+//! sides. This is not a general web server; it is the smallest surface
+//! that makes `ServeSession` reachable over a socket.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, Read, Write};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::engine::SamplerSpec;
+use crate::util::json::Json;
+
+/// Request bodies beyond this are refused with 413 before reading them.
+pub const MAX_BODY: usize = 1 << 20;
+
+/// Stop sequences per request / tokens per stop sequence are capped so a
+/// hostile request can't turn the per-token suffix scan quadratic.
+pub const MAX_STOP_SEQS: usize = 8;
+pub const MAX_STOP_LEN: usize = 32;
+
+/// A parsed HTTP request: header keys are lowercased, the body is raw.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+/// Read one request off the stream. `Ok(None)` means the peer closed
+/// without sending anything (not an error — just hang up too); protocol
+/// violations come back as `(status, message)` for an error response.
+pub fn read_request<R: BufRead>(
+    r: &mut R,
+) -> std::result::Result<Option<HttpRequest>, (u16, String)> {
+    let mut line = String::new();
+    match r.read_line(&mut line) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(_) => return Ok(None), // reset/timeout before a request: drop quietly
+    }
+    let mut parts = line.split_whitespace();
+    let (method, path) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if v.starts_with("HTTP/1.") => {
+            (m.to_string(), p.to_string())
+        }
+        _ => return Err((400, format!("malformed request line {:?}", line.trim_end()))),
+    };
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        match r.read_line(&mut h) {
+            Ok(0) => return Err((400, "connection closed inside headers".to_string())),
+            Ok(_) => {}
+            Err(e) => return Err((400, format!("reading headers: {e}"))),
+        }
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let len: usize = match headers.get("content-length") {
+        Some(v) => v
+            .parse()
+            .map_err(|_| (400, format!("bad Content-Length {v:?}")))?,
+        None => 0,
+    };
+    if len > MAX_BODY {
+        return Err((413, format!("body of {len} bytes exceeds the {MAX_BODY}-byte cap")));
+    }
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        r.read_exact(&mut body)
+            .map_err(|e| (400, format!("short body: {e}")))?;
+    }
+    Ok(Some(HttpRequest { method, path, headers, body }))
+}
+
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete (non-streaming) response and flush it.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {status} {}\r\n", reason(status))?;
+    write!(
+        w,
+        "Content-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        body.len()
+    )?;
+    for (k, v) in extra_headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// JSON error envelope: `{"error": {"code": N, "message": "..."}}`.
+pub fn error_body(status: u16, msg: &str) -> Vec<u8> {
+    Json::obj(vec![(
+        "error",
+        Json::obj(vec![
+            ("code", Json::num(status as f64)),
+            ("message", Json::str(msg)),
+        ]),
+    )])
+    .to_string()
+    .into_bytes()
+}
+
+/// One SSE frame (`data: <json>\n\n`).
+pub fn sse_frame(data: &Json) -> String {
+    format!("data: {data}\n\n")
+}
+
+/// The terminal SSE frame.
+pub const SSE_DONE: &str = "data: [DONE]\n\n";
+
+/// A `/v1/completions` request as it arrives on the wire. Prompt text is
+/// kept as text here — the server owns the tokenizer and resolves
+/// `prompt`/`stop` strings to ids at admission time.
+///
+/// Accepted keys:
+/// - `prompt` (string) or `tokens` ([int]; takes precedence, used
+///   verbatim — callers wanting bit-parity with an offline
+///   `ServeSession` run send exact ids)
+/// - `max_new` (int; clamped to the server's `--max-new-cap`)
+/// - `sample` ("greedy" | "temperature" | "top-k" | "top-p") with
+///   `temperature`, `top_k`, `top_p`; if `sample` is absent but
+///   `temperature` is present, "temperature" is implied; all absent →
+///   the server's default sampler
+/// - `logit_bias` ([[token, bias]]; bias is a number or the string
+///   "-inf"/"inf") and `ban` ([int], shorthand for bias = -inf)
+/// - `stop` ([string], tokenized by the server) and `stop_tokens`
+///   ([[int]]) — generation stops when the output ends with any
+///   sequence; the match is excluded from the result
+/// - `seed` (int; absent → server-assigned, deterministic per request
+///   index under `--gen-seed`)
+/// - `stream` (bool; true → SSE token stream, false → one JSON body)
+#[derive(Debug, Clone, Default)]
+pub struct CompletionReq {
+    pub prompt: Option<String>,
+    pub tokens: Option<Vec<i32>>,
+    pub max_new: Option<usize>,
+    pub sampler: Option<SamplerSpec>,
+    pub bias: Vec<(i32, f32)>,
+    pub stop_texts: Vec<String>,
+    pub stop_tokens: Vec<Vec<i32>>,
+    pub seed: Option<u64>,
+    pub stream: bool,
+}
+
+fn as_token(j: &Json, what: &str) -> Result<i32> {
+    let n = j.as_f64().ok_or_else(|| anyhow!("{what} must be an integer"))?;
+    if n.fract() != 0.0 || !(0.0..=i32::MAX as f64).contains(&n) {
+        bail!("{what} must be a non-negative integer (got {n})");
+    }
+    Ok(n as i32)
+}
+
+fn as_bias(j: &Json) -> Result<f32> {
+    if let Some(s) = j.as_str() {
+        return match s {
+            "-inf" | "-Inf" | "-Infinity" => Ok(f32::NEG_INFINITY),
+            "inf" | "Inf" | "Infinity" => Ok(f32::INFINITY),
+            other => bail!("logit_bias value {other:?} is not a number or \"-inf\"/\"inf\""),
+        };
+    }
+    let n = j.as_f64().ok_or_else(|| anyhow!("logit_bias value must be a number"))?;
+    if n.is_nan() {
+        bail!("logit_bias value must not be NaN");
+    }
+    Ok(n as f32)
+}
+
+fn token_list(j: &Json, what: &str) -> Result<Vec<i32>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("{what} must be an array of integers"))?
+        .iter()
+        .map(|t| as_token(t, what))
+        .collect()
+}
+
+impl CompletionReq {
+    pub fn parse(body: &[u8]) -> Result<CompletionReq> {
+        let text = std::str::from_utf8(body).map_err(|_| anyhow!("body is not UTF-8"))?;
+        let j = Json::parse(text).map_err(|e| anyhow!("invalid JSON: {e}"))?;
+        if j.as_obj().is_none() {
+            bail!("body must be a JSON object");
+        }
+
+        let prompt = match j.get("prompt") {
+            Some(p) => Some(
+                p.as_str()
+                    .ok_or_else(|| anyhow!("prompt must be a string"))?
+                    .to_string(),
+            ),
+            None => None,
+        };
+        let tokens = match j.get("tokens") {
+            Some(t) => Some(token_list(t, "tokens")?),
+            None => None,
+        };
+        if prompt.is_none() && tokens.is_none() {
+            bail!("request needs a prompt (string) or tokens (array of ids)");
+        }
+
+        let max_new = match j.get("max_new") {
+            Some(m) => {
+                let m = m.as_usize().ok_or_else(|| anyhow!("max_new must be a non-negative integer"))?;
+                if m == 0 {
+                    bail!("max_new must be >= 1");
+                }
+                Some(m)
+            }
+            None => None,
+        };
+
+        let temperature = match j.get("temperature") {
+            Some(t) => Some(t.as_f64().ok_or_else(|| anyhow!("temperature must be a number"))? as f32),
+            None => None,
+        };
+        let top_k = match j.get("top_k") {
+            Some(k) => Some(k.as_usize().ok_or_else(|| anyhow!("top_k must be a non-negative integer"))?),
+            None => None,
+        };
+        let top_p = match j.get("top_p") {
+            Some(p) => Some(p.as_f64().ok_or_else(|| anyhow!("top_p must be a number"))? as f32),
+            None => None,
+        };
+        let mode = match j.get("sample") {
+            Some(s) => Some(
+                s.as_str()
+                    .ok_or_else(|| anyhow!("sample must be a policy name string"))?
+                    .to_string(),
+            ),
+            // `{"temperature": 0.7}` without an explicit policy means
+            // temperature sampling, not a silently-ignored knob
+            None => temperature.map(|_| "temperature".to_string()),
+        };
+        let sampler = match mode {
+            Some(m) => Some(SamplerSpec::parse(
+                &m,
+                temperature.unwrap_or(1.0),
+                top_k.unwrap_or(40),
+                top_p.unwrap_or(0.9),
+            )?),
+            None => None,
+        };
+
+        let mut bias: Vec<(i32, f32)> = Vec::new();
+        if let Some(b) = j.get("logit_bias") {
+            for pair in b.as_arr().ok_or_else(|| anyhow!("logit_bias must be [[token, bias], ...]"))? {
+                let arr = pair.as_arr().filter(|a| a.len() == 2).ok_or_else(|| {
+                    anyhow!("logit_bias entries must be [token, bias] pairs")
+                })?;
+                bias.push((as_token(&arr[0], "logit_bias token")?, as_bias(&arr[1])?));
+            }
+        }
+        if let Some(b) = j.get("ban") {
+            for t in token_list(b, "ban")? {
+                bias.push((t, f32::NEG_INFINITY));
+            }
+        }
+
+        let mut stop_texts = Vec::new();
+        if let Some(s) = j.get("stop") {
+            for t in s.as_arr().ok_or_else(|| anyhow!("stop must be an array of strings"))? {
+                stop_texts.push(
+                    t.as_str()
+                        .ok_or_else(|| anyhow!("stop entries must be strings"))?
+                        .to_string(),
+                );
+            }
+        }
+        let mut stop_tokens = Vec::new();
+        if let Some(s) = j.get("stop_tokens") {
+            for seq in s.as_arr().ok_or_else(|| anyhow!("stop_tokens must be an array of token arrays"))? {
+                stop_tokens.push(token_list(seq, "stop_tokens")?);
+            }
+        }
+        if stop_texts.len() + stop_tokens.len() > MAX_STOP_SEQS {
+            bail!("at most {MAX_STOP_SEQS} stop sequences per request");
+        }
+        if stop_tokens.iter().any(|s| s.len() > MAX_STOP_LEN) {
+            bail!("stop sequences are capped at {MAX_STOP_LEN} tokens");
+        }
+
+        let seed = match j.get("seed") {
+            Some(s) => {
+                let n = s.as_f64().ok_or_else(|| anyhow!("seed must be a non-negative integer"))?;
+                if n.fract() != 0.0 || n < 0.0 {
+                    bail!("seed must be a non-negative integer (got {n})");
+                }
+                Some(n as u64)
+            }
+            None => None,
+        };
+        let stream = match j.get("stream") {
+            Some(s) => s.as_bool().ok_or_else(|| anyhow!("stream must be a boolean"))?,
+            None => false,
+        };
+
+        Ok(CompletionReq {
+            prompt,
+            tokens,
+            max_new,
+            sampler,
+            bias,
+            stop_texts,
+            stop_tokens,
+            seed,
+            stream,
+        })
+    }
+}
+
+/// Raw-TCP HTTP client, just enough for the tests and the serving bench:
+/// one request, read to EOF (the server always closes), split head/body.
+pub mod client {
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    use std::time::Duration;
+
+    use anyhow::{anyhow, Context, Result};
+
+    use crate::util::json::Json;
+
+    /// Status code, raw header block, body.
+    pub struct Response {
+        pub status: u16,
+        pub head: String,
+        pub body: String,
+    }
+
+    impl Response {
+        pub fn header(&self, name: &str) -> Option<&str> {
+            let lower = name.to_ascii_lowercase();
+            self.head.lines().find_map(|l| {
+                let (k, v) = l.split_once(':')?;
+                (k.trim().to_ascii_lowercase() == lower).then(|| v.trim())
+            })
+        }
+
+        pub fn json(&self) -> Result<Json> {
+            Json::parse(&self.body).map_err(|e| anyhow!("response body: {e}"))
+        }
+
+        /// Parsed SSE data frames, `[DONE]` excluded.
+        pub fn sse_frames(&self) -> Result<Vec<Json>> {
+            self.body
+                .lines()
+                .filter_map(|l| l.strip_prefix("data: "))
+                .filter(|d| *d != "[DONE]")
+                .map(|d| Json::parse(d).map_err(|e| anyhow!("SSE frame {d:?}: {e}")))
+                .collect()
+        }
+    }
+
+    fn roundtrip(addr: &str, raw: &str) -> Result<Response> {
+        let mut s = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        s.set_read_timeout(Some(Duration::from_secs(120)))?;
+        s.set_nodelay(true)?;
+        s.write_all(raw.as_bytes())?;
+        s.flush()?;
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf).context("reading response")?;
+        let text = String::from_utf8(buf).context("response is not UTF-8")?;
+        let (head, body) = text
+            .split_once("\r\n\r\n")
+            .ok_or_else(|| anyhow!("no header/body separator in response: {text:?}"))?;
+        let status: u16 = head
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow!("bad status line: {head:?}"))?;
+        Ok(Response { status, head: head.to_string(), body: body.to_string() })
+    }
+
+    pub fn get(addr: &str, path: &str) -> Result<Response> {
+        roundtrip(
+            addr,
+            &format!("GET {path} HTTP/1.1\r\nHost: lisa\r\nConnection: close\r\n\r\n"),
+        )
+    }
+
+    pub fn post(addr: &str, path: &str, body: &str) -> Result<Response> {
+        roundtrip(
+            addr,
+            &format!(
+                "POST {path} HTTP/1.1\r\nHost: lisa\r\nContent-Type: application/json\r\n\
+                 Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                body.len()
+            ),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse_ok(body: &str) -> CompletionReq {
+        CompletionReq::parse(body.as_bytes()).unwrap()
+    }
+
+    #[test]
+    fn minimal_prompt_request_parses_with_defaults() {
+        let r = parse_ok(r#"{"prompt": "hello world"}"#);
+        assert_eq!(r.prompt.as_deref(), Some("hello world"));
+        assert!(r.tokens.is_none() && r.sampler.is_none() && r.seed.is_none());
+        assert!(!r.stream && r.bias.is_empty() && r.max_new.is_none());
+    }
+
+    #[test]
+    fn full_request_round_trips_every_field() {
+        let r = parse_ok(
+            r#"{"tokens": [1, 9, 3], "max_new": 8, "sample": "top-k", "top_k": 5,
+               "temperature": 0.5, "logit_bias": [[7, -2.5], [8, "-inf"]], "ban": [9],
+               "stop_tokens": [[6, 7]], "seed": 11, "stream": true}"#,
+        );
+        assert_eq!(r.tokens, Some(vec![1, 9, 3]));
+        assert_eq!(r.max_new, Some(8));
+        assert_eq!(r.sampler, Some(SamplerSpec::TopK { k: 5, temperature: 0.5 }));
+        assert_eq!(r.bias.len(), 3);
+        assert_eq!(r.bias[1], (8, f32::NEG_INFINITY));
+        assert_eq!(r.bias[2], (9, f32::NEG_INFINITY));
+        assert_eq!(r.stop_tokens, vec![vec![6, 7]]);
+        assert_eq!(r.seed, Some(11));
+        assert!(r.stream);
+    }
+
+    #[test]
+    fn temperature_without_sample_implies_temperature_policy() {
+        let r = parse_ok(r#"{"prompt": "x", "temperature": 0.7}"#);
+        assert_eq!(r.sampler, Some(SamplerSpec::Temperature { temperature: 0.7 }));
+    }
+
+    #[test]
+    fn bad_requests_are_rejected_with_a_reason() {
+        for (body, needle) in [
+            (r#"{"max_new": 4}"#, "prompt"),
+            (r#"{"prompt": "x", "max_new": 0}"#, "max_new"),
+            (r#"{"prompt": "x", "seed": -1}"#, "seed"),
+            (r#"{"prompt": "x", "logit_bias": [[1]]}"#, "pairs"),
+            (r#"{"prompt": "x", "tokens": [1.5]}"#, "integer"),
+            (r#"{"prompt": "x", "sample": "magic"}"#, "magic"),
+            (r#"not json"#, "JSON"),
+            (r#"[1, 2]"#, "object"),
+        ] {
+            let err = format!("{:#}", CompletionReq::parse(body.as_bytes()).unwrap_err());
+            assert!(err.contains(needle), "{body} -> {err}");
+        }
+    }
+
+    #[test]
+    fn stop_sequence_caps_are_enforced() {
+        let many: Vec<String> = (0..MAX_STOP_SEQS + 1).map(|i| format!("\"s{i}\"")).collect();
+        let body = format!(r#"{{"prompt": "x", "stop": [{}]}}"#, many.join(","));
+        assert!(CompletionReq::parse(body.as_bytes()).is_err());
+        let long: Vec<String> = (0..MAX_STOP_LEN + 1).map(|i| i.to_string()).collect();
+        let body = format!(r#"{{"prompt": "x", "stop_tokens": [[{}]]}}"#, long.join(","));
+        assert!(CompletionReq::parse(body.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn http_request_reader_handles_the_happy_path_and_violations() {
+        let raw = b"POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: 2\r\n\r\nhi";
+        let req = read_request(&mut BufReader::new(&raw[..])).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/completions");
+        assert_eq!(req.headers.get("host").map(String::as_str), Some("x"));
+        assert_eq!(req.body, b"hi");
+
+        // empty connection: None, not an error
+        assert!(read_request(&mut BufReader::new(&b""[..])).unwrap().is_none());
+        // garbage request line: 400
+        let raw = b"whatever\r\n\r\n";
+        assert_eq!(read_request(&mut BufReader::new(&raw[..])).unwrap_err().0, 400);
+        // oversized body: 413 before the body is read
+        let raw = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        assert_eq!(read_request(&mut BufReader::new(raw.as_bytes())).unwrap_err().0, 413);
+    }
+
+    #[test]
+    fn responses_are_well_formed() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, "application/json", &[("Retry-After", "1")], b"{}")
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 1\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 2\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{}"), "{text}");
+    }
+}

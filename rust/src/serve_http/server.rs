@@ -1,0 +1,651 @@
+//! The `lisa serve` front end (DESIGN.md §11): a dependency-light
+//! HTTP/1.1 server over [`ServeSession`]'s continuous-batching loop.
+//!
+//! Threading contract: the engine is `!Send` (it holds `Rc`/`RefCell`
+//! device state), so the model loop runs on the thread that calls
+//! [`HttpFrontend::run`] and *never* migrates. HTTP workers run on
+//! scoped threads and only parse requests, enqueue [`Admission`]s into a
+//! bounded channel, and forward token events back to their client. The
+//! bounded channel is the backpressure boundary: `try_send` failing
+//! means the queue is full and the worker answers `429 Too Many
+//! Requests` with `Retry-After` — in-flight rows are never disturbed.
+//!
+//! Per-request event channels are *unbounded* in the other direction
+//! (model → worker), so a slow client can never stall the decode loop;
+//! memory is bounded by `max_new` tokens per admitted request.
+//!
+//! Shutdown: `SIGINT` (or [`ServerState::request_shutdown`]) makes the
+//! channel source report `Closed`; the serve loop stops admitting,
+//! drains in-flight rows (their clients get complete responses), and
+//! returns. Queued-but-unadmitted requests are then bounced — their
+//! event channels close and the waiting workers answer `503`. A second
+//! `SIGINT` exits immediately.
+//!
+//! [`ServeSession`]: crate::engine::ServeSession
+
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::data::tokenizer::{Tokenizer, EOS, PAD};
+use crate::engine::serve::request_seed;
+use crate::engine::{
+    Completion, Engine, Feed, LoopStats, Request, RequestSink, RequestSource, SamplerSpec,
+};
+use crate::util::json::Json;
+
+use super::metrics::{EngineSnapshot, Metrics};
+use super::proto::{self, CompletionReq, MAX_STOP_LEN};
+
+/// How often idle workers re-check the (nonblocking) listener.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+/// How long the idle model loop blocks on the admission channel per
+/// tick (bounds shutdown latency when no requests are live).
+const IDLE_POLL: Duration = Duration::from_millis(50);
+/// Socket read/write timeouts on accepted connections.
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+/// Worker-side ceiling on one completion (queue wait + full decode).
+const REQUEST_DEADLINE: Duration = Duration::from_secs(600);
+
+/// Serving knobs, resolved from the CLI in `lisa serve`.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests).
+    pub addr: String,
+    /// HTTP worker threads (the model always has exactly one thread).
+    pub workers: usize,
+    /// Admission-queue bound; the 429 threshold.
+    pub max_queue: usize,
+    /// `max_new` when the request doesn't say.
+    pub default_max_new: usize,
+    /// Hard per-request generation budget; larger asks are clamped.
+    pub max_new_cap: usize,
+    /// Sampler when the request doesn't specify one.
+    pub default_spec: SamplerSpec,
+    /// Base seed for server-assigned per-request sampler streams.
+    pub gen_seed: u64,
+    pub eos: i32,
+    pub pad: i32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            workers: 4,
+            max_queue: 32,
+            default_max_new: 32,
+            max_new_cap: 256,
+            default_spec: SamplerSpec::Greedy,
+            gen_seed: 42,
+            eos: EOS,
+            pad: PAD,
+        }
+    }
+}
+
+/// Shared server state: config, tokenizer, metrics, shutdown flag.
+pub struct ServerState {
+    pub cfg: ServeConfig,
+    pub tok: Tokenizer,
+    pub metrics: Metrics,
+    shutdown: AtomicBool,
+    /// Monotone request counter; feeds server-assigned sampler seeds.
+    seq: AtomicU64,
+}
+
+impl ServerState {
+    pub fn new(cfg: ServeConfig, tok: Tokenizer) -> ServerState {
+        ServerState {
+            cfg,
+            tok,
+            metrics: Metrics::new(),
+            shutdown: AtomicBool::new(false),
+            seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Graceful-shutdown requested (programmatically or via SIGINT)?
+    pub fn stopping(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst) || sigint_received()
+    }
+
+    /// Programmatic equivalent of one SIGINT: stop admitting, drain.
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Model → worker event stream for one request.
+enum Event {
+    Token(i32),
+    Done(Completion),
+}
+
+/// The per-request sink the model thread drives. `Send` so it can cross
+/// the admission channel; after admission it lives on the model thread.
+struct HttpSink {
+    tx: mpsc::Sender<Event>,
+    state: Arc<ServerState>,
+    /// Queue-entry time: TTFT measures what the client experiences.
+    t0: Instant,
+    saw_first: bool,
+    n: u64,
+}
+
+impl RequestSink for HttpSink {
+    fn on_token(&mut self, tok: i32) {
+        if !self.saw_first {
+            self.saw_first = true;
+            self.state.metrics.ttft.observe(self.t0.elapsed().as_secs_f64());
+        }
+        self.n += 1;
+        // a dead client just means nobody is listening; keep decoding
+        let _ = self.tx.send(Event::Token(tok));
+    }
+
+    fn on_done(&mut self, completion: &Completion) {
+        self.state.metrics.request_done(self.n, self.t0.elapsed().as_secs_f64());
+        let _ = self.tx.send(Event::Done(completion.clone()));
+    }
+}
+
+/// What crosses the bounded admission channel.
+struct Admission {
+    req: Request,
+    sink: HttpSink,
+}
+
+/// [`RequestSource`] over the admission channel: `try_recv` while rows
+/// are live, short blocking waits when idle, `Closed` once shutdown is
+/// requested. `observe` publishes loop counters every iteration and a
+/// full per-segment `ExecStats` snapshot when completions marked the
+/// metrics dirty (or 250 ms elapsed) — the decode hot path never pays
+/// for a full snapshot per token.
+pub struct ChannelSource {
+    rx: Receiver<Admission>,
+    state: Arc<ServerState>,
+    last_refresh: Option<Instant>,
+}
+
+impl RequestSource for ChannelSource {
+    fn poll(&mut self, idle: bool) -> Feed {
+        if self.state.stopping() {
+            return Feed::Closed;
+        }
+        let adm = if idle {
+            match self.rx.recv_timeout(IDLE_POLL) {
+                Ok(a) => a,
+                Err(RecvTimeoutError::Timeout) => return Feed::Pending,
+                Err(RecvTimeoutError::Disconnected) => return Feed::Closed,
+            }
+        } else {
+            match self.rx.try_recv() {
+                Ok(a) => a,
+                Err(TryRecvError::Empty) => return Feed::Pending,
+                Err(TryRecvError::Disconnected) => return Feed::Closed,
+            }
+        };
+        self.state.metrics.dequeue();
+        Feed::Admit(adm.req, Box::new(adm.sink))
+    }
+
+    fn observe(&mut self, eng: &Engine, stats: LoopStats) {
+        let refresh = self.state.metrics.take_dirty()
+            || self.last_refresh.map_or(true, |t| t.elapsed() > Duration::from_millis(250));
+        if refresh {
+            self.last_refresh = Some(Instant::now());
+            self.state
+                .metrics
+                .set_engine(EngineSnapshot { segments: eng.rt.stats(), loops: stats });
+        } else {
+            self.state.metrics.set_loop(stats);
+        }
+    }
+}
+
+/// The bound listener plus everything `run` needs. Constructed with
+/// [`HttpFrontend::bind`] (so tests can read the ephemeral port before
+/// starting the model), consumed by [`HttpFrontend::run`].
+pub struct HttpFrontend {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    tx: SyncSender<Admission>,
+    rx: Receiver<Admission>,
+}
+
+impl HttpFrontend {
+    pub fn bind(cfg: ServeConfig, tok: Tokenizer) -> Result<HttpFrontend> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        // nonblocking so workers can poll the shutdown flag between accepts
+        listener.set_nonblocking(true).context("listener nonblocking")?;
+        let (tx, rx) = mpsc::sync_channel(cfg.max_queue.max(1));
+        let state = Arc::new(ServerState::new(cfg, tok));
+        Ok(HttpFrontend { listener, state, tx, rx })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn state(&self) -> Arc<ServerState> {
+        Arc::clone(&self.state)
+    }
+
+    /// Serve until `model` returns. `model` receives the channel-backed
+    /// [`RequestSource`] and is expected to hand it to
+    /// [`ServeSession::run_loop`] on *this* thread (the engine is
+    /// `!Send`); the integration tests drive it with a stub loop
+    /// instead. Workers are joined before this returns.
+    ///
+    /// [`ServeSession::run_loop`]: crate::engine::ServeSession::run_loop
+    pub fn run<T>(self, model: impl FnOnce(&mut ChannelSource) -> T) -> T {
+        let HttpFrontend { listener, state, tx, rx } = self;
+        let mut src =
+            ChannelSource { rx, state: Arc::clone(&state), last_refresh: None };
+        std::thread::scope(|s| {
+            for _ in 0..state.cfg.workers.max(1) {
+                let st = Arc::clone(&state);
+                let tx = tx.clone();
+                let listener = &listener;
+                s.spawn(move || worker_loop(listener, st, tx));
+            }
+            drop(tx); // workers hold the only senders now
+            let out = model(&mut src);
+            // model loop exited: stop accepting, then bounce queued
+            // admissions until every worker is gone — a dropped
+            // admission closes its event channel, so no worker can
+            // block forever on a stream the loop will never feed
+            state.request_shutdown();
+            loop {
+                match src.rx.recv_timeout(ACCEPT_POLL) {
+                    Ok(adm) => {
+                        state.metrics.dequeue();
+                        drop(adm);
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            out
+        })
+    }
+}
+
+fn worker_loop(listener: &TcpListener, st: Arc<ServerState>, tx: SyncSender<Admission>) {
+    while !st.stopping() {
+        match listener.accept() {
+            Ok((stream, _peer)) => handle_conn(stream, &st, &tx),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, st: &Arc<ServerState>, tx: &SyncSender<Admission>) {
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut w = stream;
+    let req = match proto::read_request(&mut reader) {
+        Ok(Some(r)) => r,
+        Ok(None) => return, // peer hung up without a request
+        Err((code, msg)) => return respond_error(&mut w, st, code, &msg),
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let body = Json::obj(vec![
+                ("status", Json::str(if st.stopping() { "stopping" } else { "ok" })),
+                ("queue_depth", Json::num(st.metrics.queue_depth() as f64)),
+                ("uptime_s", Json::num(st.metrics.uptime_s())),
+            ]);
+            st.metrics.inc_status(200);
+            let _ = proto::write_response(
+                &mut w,
+                200,
+                "application/json",
+                &[],
+                body.to_string().as_bytes(),
+            );
+        }
+        ("GET", "/metrics") => {
+            st.metrics.inc_status(200);
+            let _ = proto::write_response(
+                &mut w,
+                200,
+                "text/plain; version=0.0.4",
+                &[],
+                st.metrics.render().as_bytes(),
+            );
+        }
+        ("POST", "/v1/completions") => completions(&mut w, st, tx, &req.body),
+        ("GET", _) | ("POST", _) => respond_error(&mut w, st, 404, "no such endpoint"),
+        (m, _) => respond_error(&mut w, st, 405, &format!("method {m} not supported")),
+    }
+}
+
+fn completions(
+    w: &mut TcpStream,
+    st: &Arc<ServerState>,
+    tx: &SyncSender<Admission>,
+    body: &[u8],
+) {
+    if st.stopping() {
+        return respond_error(w, st, 503, "server is shutting down");
+    }
+    let creq = match CompletionReq::parse(body) {
+        Ok(c) => c,
+        Err(e) => return respond_error(w, st, 400, &format!("{e:#}")),
+    };
+    let stream_mode = creq.stream;
+    let req = match build_request(st, &creq) {
+        Ok(r) => r,
+        Err(e) => return respond_error(w, st, 400, &format!("{e:#}")),
+    };
+    let (etx, erx) = mpsc::channel();
+    let sink = HttpSink {
+        tx: etx,
+        state: Arc::clone(st),
+        t0: Instant::now(),
+        saw_first: false,
+        n: 0,
+    };
+    match tx.try_send(Admission { req, sink }) {
+        Ok(()) => st.metrics.enqueue(),
+        Err(TrySendError::Full(_)) => {
+            st.metrics.inc_status(429);
+            let _ = proto::write_response(
+                w,
+                429,
+                "application/json",
+                &[("Retry-After", "1")],
+                &proto::error_body(429, "admission queue is full — retry shortly"),
+            );
+            return;
+        }
+        Err(TrySendError::Disconnected(_)) => {
+            return respond_error(w, st, 503, "model loop has exited");
+        }
+    }
+    if stream_mode {
+        respond_stream(w, st, erx);
+    } else {
+        respond_full(w, st, erx);
+    }
+}
+
+/// Resolve a wire request against the server's tokenizer and limits.
+fn build_request(st: &ServerState, c: &CompletionReq) -> Result<Request> {
+    let prompt = match &c.tokens {
+        Some(t) => {
+            let vocab = st.tok.vocab_size() as i32;
+            if let Some(bad) = t.iter().find(|&&id| id < 0 || id >= vocab) {
+                bail!("token id {bad} outside the vocabulary (size {vocab})");
+            }
+            t.clone()
+        }
+        None => crate::eval::generate::encode_prompt(
+            &st.tok,
+            c.prompt.as_deref().unwrap_or_default(),
+        ),
+    };
+    ensure!(!prompt.is_empty(), "empty prompt");
+    let max_new = c
+        .max_new
+        .unwrap_or(st.cfg.default_max_new)
+        .min(st.cfg.max_new_cap.max(1));
+    let mut stop = c.stop_tokens.clone();
+    for text in &c.stop_texts {
+        let ids = st.tok.encode(text);
+        ensure!(
+            ids.len() <= MAX_STOP_LEN,
+            "stop string {text:?} tokenizes to {} tokens (cap {MAX_STOP_LEN})",
+            ids.len()
+        );
+        stop.push(ids); // empty encodings are ignored by the row plan
+    }
+    let sampler = c
+        .sampler
+        .clone()
+        .unwrap_or_else(|| st.cfg.default_spec.clone())
+        .with_bias(c.bias.clone());
+    let seed = c.seed.unwrap_or_else(|| {
+        request_seed(st.cfg.gen_seed, st.seq.fetch_add(1, Ordering::Relaxed) as usize)
+    });
+    Ok(Request {
+        prompt,
+        max_new,
+        sampler,
+        seed,
+        first_token: None,
+        stop,
+    })
+}
+
+fn completion_json(st: &ServerState, c: &Completion) -> Json {
+    Json::obj(vec![
+        (
+            "tokens",
+            Json::Arr(c.tokens.iter().map(|t| Json::num(*t as f64)).collect()),
+        ),
+        ("text", Json::str(&st.tok.decode(&c.tokens))),
+        ("n", Json::num(c.tokens.len() as f64)),
+        ("finish_reason", Json::str(c.stop.label())),
+        ("prompt_truncated", Json::Bool(c.prompt_truncated)),
+    ])
+}
+
+fn respond_full(w: &mut TcpStream, st: &ServerState, erx: Receiver<Event>) {
+    // tokens also arrive here; the completion repeats them, so the
+    // non-streaming path just waits for Done
+    let completion = loop {
+        match erx.recv_timeout(REQUEST_DEADLINE) {
+            Ok(Event::Token(_)) => {}
+            Ok(Event::Done(c)) => break c,
+            Err(RecvTimeoutError::Disconnected) => {
+                return respond_error(w, st, 503, "request dropped: server shutting down");
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                return respond_error(w, st, 500, "completion deadline exceeded");
+            }
+        }
+    };
+    st.metrics.inc_status(200);
+    let _ = proto::write_response(
+        w,
+        200,
+        "application/json",
+        &[],
+        completion_json(st, &completion).to_string().as_bytes(),
+    );
+}
+
+fn respond_stream(w: &mut TcpStream, st: &ServerState, erx: Receiver<Event>) {
+    st.metrics.inc_status(200);
+    let head = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+                Cache-Control: no-cache\r\nConnection: close\r\n\r\n";
+    if w.write_all(head.as_bytes()).and_then(|_| w.flush()).is_err() {
+        return; // dropping erx is safe — the sink's sends just no-op
+    }
+    loop {
+        match erx.recv_timeout(REQUEST_DEADLINE) {
+            Ok(Event::Token(t)) => {
+                let frame = proto::sse_frame(&Json::obj(vec![
+                    ("token", Json::num(t as f64)),
+                    ("text", Json::str(st.tok.token(t).unwrap_or("<unk>"))),
+                ]));
+                if w.write_all(frame.as_bytes()).and_then(|_| w.flush()).is_err() {
+                    return; // client went away; the row still drains
+                }
+            }
+            Ok(Event::Done(c)) => {
+                let mut done = completion_json(st, &c);
+                if let Json::Obj(m) = &mut done {
+                    m.insert("done".to_string(), Json::Bool(true));
+                }
+                let _ = w.write_all(proto::sse_frame(&done).as_bytes());
+                let _ = w.write_all(proto::SSE_DONE.as_bytes());
+                let _ = w.flush();
+                return;
+            }
+            Err(e) => {
+                let msg = match e {
+                    RecvTimeoutError::Disconnected => "dropped: server shutting down",
+                    RecvTimeoutError::Timeout => "completion deadline exceeded",
+                };
+                let frame = proto::sse_frame(&Json::obj(vec![("error", Json::str(msg))]));
+                let _ = w.write_all(frame.as_bytes());
+                let _ = w.flush();
+                return;
+            }
+        }
+    }
+}
+
+fn respond_error(w: &mut TcpStream, st: &ServerState, code: u16, msg: &str) {
+    st.metrics.inc_status(code);
+    let _ = proto::write_response(
+        w,
+        code,
+        "application/json",
+        &[],
+        &proto::error_body(code, msg),
+    );
+}
+
+// ---------------------------------------------------------------- SIGINT
+
+static SIGINT_FLAG: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" {
+    fn signal(signum: i32, handler: usize) -> usize;
+    fn _exit(code: i32) -> !;
+}
+
+#[cfg(unix)]
+extern "C" fn on_sigint(_sig: i32) {
+    if SIGINT_FLAG.swap(true, Ordering::SeqCst) {
+        // second ^C: the operator wants out *now*, skip the drain
+        // (_exit is async-signal-safe; nothing here allocates)
+        unsafe { _exit(130) }
+    }
+}
+
+/// Install a SIGINT handler that requests a graceful drain (raw POSIX
+/// `signal(2)` through the C ABI — the image carries no signal crate).
+/// Idempotent; a second ^C exits immediately with status 130.
+pub fn install_sigint() {
+    #[cfg(unix)]
+    unsafe {
+        signal(2 /* SIGINT */, on_sigint as usize);
+    }
+}
+
+/// Has SIGINT fired since [`install_sigint`]? Folded into
+/// [`ServerState::stopping`], checked by workers and the model loop.
+pub fn sigint_received() -> bool {
+    SIGINT_FLAG.load(Ordering::SeqCst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_state(cfg: ServeConfig) -> ServerState {
+        let texts = vec![
+            "the quick brown fox".to_string(),
+            "jumps over the lazy dog".to_string(),
+        ];
+        ServerState::new(cfg, Tokenizer::build(&texts, 32))
+    }
+
+    fn wire(body: &str) -> CompletionReq {
+        CompletionReq::parse(body.as_bytes()).unwrap()
+    }
+
+    #[test]
+    fn build_request_applies_server_defaults() {
+        let st = tiny_state(ServeConfig {
+            default_max_new: 7,
+            default_spec: SamplerSpec::Temperature { temperature: 0.5 },
+            ..Default::default()
+        });
+        let r = build_request(&st, &wire(r#"{"prompt": "quick fox"}"#)).unwrap();
+        assert_eq!(r.max_new, 7);
+        assert_eq!(r.sampler, SamplerSpec::Temperature { temperature: 0.5 });
+        assert!(!r.prompt.is_empty());
+        // BOS ... SEP framing, same as the offline eval path
+        assert_eq!(r.prompt[0], crate::data::tokenizer::BOS);
+        assert_eq!(*r.prompt.last().unwrap(), crate::data::tokenizer::SEP);
+    }
+
+    #[test]
+    fn build_request_clamps_max_new_and_validates_tokens() {
+        let st = tiny_state(ServeConfig { max_new_cap: 8, ..Default::default() });
+        let r = build_request(&st, &wire(r#"{"prompt": "x", "max_new": 999}"#)).unwrap();
+        assert_eq!(r.max_new, 8);
+        let vocab = st.tok.vocab_size() as i32;
+        let bad = format!(r#"{{"tokens": [1, {vocab}]}}"#);
+        let err = build_request(&st, &wire(&bad)).unwrap_err().to_string();
+        assert!(err.contains("outside the vocabulary"), "{err}");
+    }
+
+    #[test]
+    fn explicit_tokens_bypass_the_tokenizer() {
+        let st = tiny_state(ServeConfig::default());
+        let r = build_request(&st, &wire(r#"{"tokens": [1, 9, 3]}"#)).unwrap();
+        assert_eq!(r.prompt, vec![1, 9, 3]);
+    }
+
+    #[test]
+    fn stop_strings_are_tokenized_and_merged_with_stop_tokens() {
+        let st = tiny_state(ServeConfig::default());
+        let c = wire(r#"{"prompt": "x", "stop": ["quick fox"], "stop_tokens": [[6, 7]]}"#);
+        let r = build_request(&st, &c).unwrap();
+        assert_eq!(r.stop.len(), 2);
+        assert_eq!(r.stop[0], vec![6, 7]);
+        assert_eq!(r.stop[1], st.tok.encode("quick fox"));
+    }
+
+    #[test]
+    fn server_assigned_seeds_differ_per_request() {
+        let st = tiny_state(ServeConfig::default());
+        let a = build_request(&st, &wire(r#"{"prompt": "x"}"#)).unwrap();
+        let b = build_request(&st, &wire(r#"{"prompt": "x"}"#)).unwrap();
+        assert_ne!(a.seed, b.seed);
+        let c = build_request(&st, &wire(r#"{"prompt": "x", "seed": 5}"#)).unwrap();
+        assert_eq!(c.seed, 5);
+    }
+
+    #[test]
+    fn logit_bias_lands_in_the_sampler_spec() {
+        let st = tiny_state(ServeConfig::default());
+        let r = build_request(&st, &wire(r#"{"prompt": "x", "ban": [9]}"#)).unwrap();
+        assert!(matches!(&r.sampler, SamplerSpec::Biased { bias, .. }
+            if bias.as_slice() == [(9, f32::NEG_INFINITY)]));
+    }
+
+    #[test]
+    fn shutdown_flag_flips_stopping() {
+        let st = tiny_state(ServeConfig::default());
+        assert!(!st.stopping());
+        st.request_shutdown();
+        assert!(st.stopping());
+    }
+}

@@ -1,0 +1,199 @@
+//! Fixed-bucket latency histograms for the serving metrics endpoint
+//! (DESIGN.md §11).
+//!
+//! Thread-safe by construction: counts are relaxed atomics and the sum is
+//! a bit-CAS'd f64, so HTTP workers observe while the `/metrics` handler
+//! renders without a lock. Buckets are cumulative in the rendered output
+//! (Prometheus `histogram` exposition: `_bucket{le="..."}`, `_sum`,
+//! `_count`) and quantiles are estimated by linear interpolation inside
+//! the owning bucket — good enough for p50/p99 gauges on serving
+//! latencies, where bucket bounds grow exponentially.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A histogram with fixed upper bounds plus an implicit `+Inf` bucket.
+#[derive(Debug)]
+pub struct Histogram {
+    /// Ascending finite upper bounds; `counts` has one extra `+Inf` slot.
+    bounds: Vec<f64>,
+    counts: Vec<AtomicU64>,
+    /// f64 bits, updated by compare-exchange (no atomic f64 in std).
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    /// `bounds` must be ascending and finite; an `+Inf` overflow bucket
+    /// is appended implicitly.
+    pub fn new(bounds: Vec<f64>) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]) && bounds.iter().all(|b| b.is_finite()),
+            "histogram bounds must be ascending and finite"
+        );
+        let counts = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram { bounds, counts, sum_bits: AtomicU64::new(0f64.to_bits()) }
+    }
+
+    /// `n` exponentially growing bounds starting at `start` with the
+    /// given `factor` (the Prometheus `exponential_buckets` shape).
+    pub fn exponential(start: f64, factor: f64, n: usize) -> Histogram {
+        assert!(start > 0.0 && factor > 1.0 && n >= 1);
+        let mut bounds = Vec::with_capacity(n);
+        let mut b = start;
+        for _ in 0..n {
+            bounds.push(b);
+            b *= factor;
+        }
+        Histogram::new(bounds)
+    }
+
+    /// Record one value (non-finite values count into `+Inf` and are
+    /// excluded from the sum, so a stray NaN can't poison the export).
+    pub fn observe(&self, v: f64) {
+        let i = if v.is_finite() {
+            self.bounds.partition_point(|b| *b < v)
+        } else {
+            self.bounds.len()
+        };
+        self.counts[i].fetch_add(1, Ordering::Relaxed);
+        if v.is_finite() {
+            let mut cur = self.sum_bits.load(Ordering::Relaxed);
+            loop {
+                let next = (f64::from_bits(cur) + v).to_bits();
+                match self.sum_bits.compare_exchange_weak(
+                    cur,
+                    next,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(seen) => cur = seen,
+                }
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Estimated quantile (`q` in [0, 1]): linear interpolation inside
+    /// the bucket holding the target rank; the overflow bucket reports
+    /// its lower bound. 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * total as f64).max(1.0);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if (cum as f64) >= rank {
+                if i == self.bounds.len() {
+                    return self.bounds[self.bounds.len() - 1]; // +Inf bucket
+                }
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = self.bounds[i];
+                let into = rank - (cum - c) as f64;
+                return lo + (hi - lo) * (into / c as f64);
+            }
+        }
+        self.bounds[self.bounds.len() - 1]
+    }
+
+    /// Prometheus exposition lines for a histogram named `name` (caller
+    /// provides the `# TYPE` header): cumulative `_bucket` rows, `_sum`,
+    /// `_count`.
+    pub fn render_prometheus(&self, name: &str, out: &mut String) {
+        use std::fmt::Write;
+        let mut cum = 0u64;
+        for (i, b) in self.bounds.iter().enumerate() {
+            cum += self.counts[i].load(Ordering::Relaxed);
+            let _ = writeln!(out, "{name}_bucket{{le=\"{b}\"}} {cum}");
+        }
+        cum += self.counts[self.bounds.len()].load(Ordering::Relaxed);
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+        let _ = writeln!(out, "{name}_sum {}", self.sum());
+        let _ = writeln!(out, "{name}_count {cum}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observations_land_in_the_right_buckets() {
+        let h = Histogram::new(vec![1.0, 2.0, 4.0]);
+        for v in [0.5, 1.0, 1.5, 3.0, 100.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 106.0).abs() < 1e-9);
+        // le-counts: <=1: 2 (0.5, 1.0 — bounds are inclusive), <=2: +1, <=4: +1, +Inf: +1
+        let mut s = String::new();
+        h.render_prometheus("x", &mut s);
+        assert!(s.contains("x_bucket{le=\"1\"} 2"), "{s}");
+        assert!(s.contains("x_bucket{le=\"2\"} 3"), "{s}");
+        assert!(s.contains("x_bucket{le=\"4\"} 4"), "{s}");
+        assert!(s.contains("x_bucket{le=\"+Inf\"} 5"), "{s}");
+        assert!(s.contains("x_sum 106"), "{s}");
+        assert!(s.contains("x_count 5"), "{s}");
+    }
+
+    #[test]
+    fn quantiles_interpolate_and_empty_is_zero() {
+        let h = Histogram::new(vec![10.0, 20.0, 40.0]);
+        assert_eq!(h.quantile(0.5), 0.0);
+        for _ in 0..100 {
+            h.observe(15.0); // all in (10, 20]
+        }
+        let p50 = h.quantile(0.5);
+        assert!((10.0..=20.0).contains(&p50), "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((10.0..=20.0).contains(&p99), "p99={p99}");
+        h.observe(1000.0); // overflow bucket reports the top bound
+        assert_eq!(h.quantile(1.0), 40.0);
+    }
+
+    #[test]
+    fn exponential_bounds_grow_geometrically() {
+        let h = Histogram::exponential(0.001, 2.0, 4);
+        assert_eq!(h.bounds, vec![0.001, 0.002, 0.004, 0.008]);
+    }
+
+    #[test]
+    fn non_finite_observations_cannot_poison_the_sum() {
+        let h = Histogram::new(vec![1.0]);
+        h.observe(f64::NAN);
+        h.observe(f64::INFINITY);
+        h.observe(0.5);
+        assert_eq!(h.count(), 3);
+        assert!((h.sum() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_observers_lose_nothing() {
+        let h = std::sync::Arc::new(Histogram::exponential(1.0, 2.0, 10));
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..1000 {
+                    h.observe((t * 1000 + i) as f64 % 700.0 + 1.0);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+        assert!(h.sum() > 0.0);
+    }
+}

@@ -5,6 +5,7 @@ pub mod bench;
 pub mod cli;
 pub mod crc32;
 pub mod csv;
+pub mod hist;
 pub mod json;
 pub mod logger;
 pub mod prop;

@@ -1,0 +1,499 @@
+//! HTTP serving conformance (DESIGN.md §11), in two tiers:
+//!
+//! * a **stub tier** that always runs: the real `HttpFrontend` (sockets,
+//!   workers, bounded admission, SSE streaming, metrics, shutdown) over
+//!   a scripted model loop, so threading and protocol behaviour are
+//!   exercised with no artifacts and controllable timing — including a
+//!   deterministic 429 overflow;
+//! * an **artifact tier** (gated like `it_serve.rs`): the full stack —
+//!   HTTP → `ChannelSource` → `ServeSession::run_loop` → KV-cached
+//!   decode — asserting that served completions are token-identical to
+//!   solo `ServeSession` runs at the same `(prompt, spec, seed)`,
+//!   streamed == non-streamed, stop sequences and logit bias apply end
+//!   to end, queue overflow answers 429 without disturbing in-flight
+//!   rows, and the burst leaves non-zero TTFT / throughput histograms
+//!   and `ExecStats` in `/metrics`.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use lisa::data::tokenizer::{EOS, PAD};
+use lisa::data::{corpus, Tokenizer};
+use lisa::engine::{
+    Completion, Engine, Feed, Request, RequestSource, SamplerSpec, ServeSession, StopReason,
+};
+use lisa::eval::generate;
+use lisa::model::ModelParams;
+use lisa::runtime::Runtime;
+use lisa::serve_http::proto::client;
+use lisa::serve_http::{ChannelSource, HttpFrontend, ServeConfig, ServerState};
+use lisa::util::json::Json;
+use lisa::util::rng::Rng;
+
+fn make_tok(vocab: usize) -> Tokenizer {
+    let samples = corpus::gen_instruction_corpus(64, 11);
+    Tokenizer::build(&corpus::sample_texts(&samples), vocab)
+}
+
+// ---------------------------------------------------------------- stub tier
+
+/// Scripted model loop: serves one admission at a time, synchronously.
+/// Tokens are a pure function of the prompt (`5 + (sum + i) % 13`), and
+/// `req.seed` doubles as a per-token delay in ms so tests can hold the
+/// loop busy for a known window. Ends on `Feed::Closed` (shutdown).
+fn stub_loop(src: &mut ChannelSource) {
+    loop {
+        match src.poll(true) {
+            Feed::Admit(req, mut sink) => {
+                let delay = Duration::from_millis(req.seed.min(60));
+                let base: i64 = req.prompt.iter().map(|&t| t as i64).sum();
+                let mut tokens = Vec::with_capacity(req.max_new);
+                for i in 0..req.max_new {
+                    thread::sleep(delay);
+                    let t = 5 + ((base as usize + i) % 13) as i32;
+                    sink.on_token(t);
+                    tokens.push(t);
+                }
+                sink.on_done(&Completion {
+                    tokens,
+                    prompt_truncated: false,
+                    stop: StopReason::MaxNew,
+                });
+            }
+            Feed::Pending => {}
+            Feed::Closed => return,
+        }
+    }
+}
+
+/// Bind on an ephemeral port, run `stub_loop` on a server thread, hand
+/// the test `(addr, state, join-handle)`.
+fn start_stub(
+    cfg: ServeConfig,
+) -> (String, Arc<ServerState>, thread::JoinHandle<()>) {
+    let tok = make_tok(64);
+    let front = HttpFrontend::bind(ServeConfig { addr: "127.0.0.1:0".into(), ..cfg }, tok)
+        .expect("bind ephemeral");
+    let addr = front.local_addr().unwrap().to_string();
+    let state = front.state();
+    let h = thread::spawn(move || front.run(stub_loop));
+    (addr, state, h)
+}
+
+fn post_tokens(addr: &str, body: &str) -> (u16, Vec<i32>) {
+    let resp = client::post(addr, "/v1/completions", body).unwrap();
+    if resp.status != 200 {
+        return (resp.status, Vec::new());
+    }
+    let toks = resp
+        .json()
+        .unwrap()
+        .get("tokens")
+        .and_then(|t| t.as_arr().map(|a| a.iter().map(|x| x.as_f64().unwrap() as i32).collect()))
+        .unwrap();
+    (200, toks)
+}
+
+/// Streamed request: per-token SSE frames plus the final done frame.
+fn post_stream_tokens(addr: &str, body: &str) -> (Vec<i32>, Vec<i32>, String) {
+    let resp = client::post(addr, "/v1/completions", body).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    assert_eq!(resp.header("Content-Type"), Some("text/event-stream"));
+    let frames = resp.sse_frames().unwrap();
+    let (done, toks): (Vec<&Json>, Vec<&Json>) =
+        frames.iter().partition(|f| f.get("done").is_some());
+    assert_eq!(done.len(), 1, "exactly one done frame");
+    let streamed = toks
+        .iter()
+        .map(|f| f.get("token").unwrap().as_f64().unwrap() as i32)
+        .collect();
+    let final_tokens = done[0]
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as i32)
+        .collect();
+    let reason = done[0].get("finish_reason").unwrap().as_str().unwrap().to_string();
+    (streamed, final_tokens, reason)
+}
+
+#[test]
+fn stream_and_nonstream_agree_over_real_sockets() {
+    let (addr, state, h) = start_stub(ServeConfig::default());
+    let body = r#"{"tokens": [2, 4, 6], "max_new": 5, "seed": 0}"#;
+    let (code, plain) = post_tokens(&addr, body);
+    assert_eq!(code, 200);
+    assert_eq!(plain.len(), 5);
+
+    let body = r#"{"tokens": [2, 4, 6], "max_new": 5, "seed": 0, "stream": true}"#;
+    let (streamed, final_tokens, reason) = post_stream_tokens(&addr, body);
+    assert_eq!(streamed, plain, "SSE token frames vs JSON body");
+    assert_eq!(final_tokens, plain, "done-frame tokens vs JSON body");
+    assert_eq!(reason, "max_new");
+
+    state.request_shutdown();
+    h.join().unwrap();
+}
+
+#[test]
+fn text_prompts_resolve_through_the_server_tokenizer() {
+    let (addr, state, h) = start_stub(ServeConfig::default());
+    // same text must map to the same token trajectory on repeat
+    let body = r#"{"prompt": "what is 3 times 4 ?", "max_new": 4, "seed": 0}"#;
+    let (c1, t1) = post_tokens(&addr, body);
+    let (c2, t2) = post_tokens(&addr, body);
+    assert_eq!((c1, c2), (200, 200));
+    assert_eq!(t1, t2);
+    assert_eq!(t1.len(), 4);
+    state.request_shutdown();
+    h.join().unwrap();
+}
+
+#[test]
+fn queue_overflow_answers_429_and_spares_in_flight_requests() {
+    let (addr, state, h) = start_stub(ServeConfig {
+        max_queue: 1,
+        workers: 4,
+        ..ServeConfig::default()
+    });
+    // hold the loop busy ~400 ms: 8 tokens at 50 ms each, streamed
+    let slow = addr.clone();
+    let slow_h = thread::spawn(move || {
+        post_stream_tokens(
+            &slow,
+            r#"{"tokens": [1, 2], "max_new": 8, "seed": 50, "stream": true}"#,
+        )
+    });
+    thread::sleep(Duration::from_millis(120)); // slow request is admitted
+
+    // burst of 4 fast requests against a busy loop and a 1-deep queue:
+    // one queues, the rest must bounce with 429 + Retry-After
+    let mut joins = Vec::new();
+    for _ in 0..4 {
+        let a = addr.clone();
+        joins.push(thread::spawn(move || {
+            client::post(&a, "/v1/completions", r#"{"tokens": [9], "max_new": 2, "seed": 0}"#)
+                .unwrap()
+        }));
+    }
+    let responses: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let rejected: Vec<_> = responses.iter().filter(|r| r.status == 429).collect();
+    let served: Vec<_> = responses.iter().filter(|r| r.status == 200).collect();
+    assert_eq!(rejected.len(), 3, "queue bound 1 must bounce 3 of 4 burst requests");
+    assert_eq!(served.len(), 1);
+    for r in &rejected {
+        assert_eq!(r.header("Retry-After"), Some("1"), "{}", r.head);
+    }
+
+    // the in-flight slow request was not disturbed by the overflow
+    let (streamed, final_tokens, _) = slow_h.join().unwrap();
+    assert_eq!(streamed.len(), 8);
+    assert_eq!(streamed, final_tokens);
+
+    // metrics saw it all
+    let metrics = client::get(&addr, "/metrics").unwrap();
+    assert_eq!(metrics.status, 200);
+    assert!(metrics.body.contains("lisa_http_requests_total{code=\"429\"} 3"), "{}", metrics.body);
+    assert_eq!(state.metrics.status_count(429), 3);
+    assert_eq!(state.metrics.completions(), 2); // slow + the queued one
+    assert!(state.metrics.ttft.count() >= 2);
+    assert!(state.metrics.tok_rate.count() >= 2);
+
+    state.request_shutdown();
+    h.join().unwrap();
+}
+
+#[test]
+fn shutdown_drains_the_in_flight_request_before_exiting() {
+    let (addr, state, h) = start_stub(ServeConfig::default());
+    let slow = addr.clone();
+    let slow_h = thread::spawn(move || {
+        post_stream_tokens(
+            &slow,
+            r#"{"tokens": [3], "max_new": 6, "seed": 40, "stream": true}"#,
+        )
+    });
+    thread::sleep(Duration::from_millis(100)); // admitted and generating
+    state.request_shutdown();
+    // the client still receives the complete stream
+    let (streamed, final_tokens, reason) = slow_h.join().unwrap();
+    assert_eq!(streamed.len(), 6);
+    assert_eq!(streamed, final_tokens);
+    assert_eq!(reason, "max_new");
+    // and the server actually exits (workers joined, loop returned)
+    h.join().unwrap();
+    assert!(client::get(&addr, "/healthz").is_err(), "listener must be closed");
+}
+
+#[test]
+fn health_metrics_and_error_paths_speak_http() {
+    let (addr, state, h) = start_stub(ServeConfig::default());
+
+    let health = client::get(&addr, "/healthz").unwrap();
+    assert_eq!(health.status, 200);
+    assert_eq!(health.json().unwrap().get("status").unwrap().as_str(), Some("ok"));
+
+    let m = client::get(&addr, "/metrics").unwrap();
+    assert_eq!(m.status, 200);
+    for series in [
+        "lisa_http_requests_total{code=\"200\"}",
+        "lisa_http_queue_depth",
+        "lisa_serve_ttft_seconds_count",
+        "lisa_serve_tokens_per_sec_count",
+        "lisa_serve_uptime_seconds",
+    ] {
+        assert!(m.body.contains(series), "missing {series} in:\n{}", m.body);
+    }
+
+    let bad = client::post(&addr, "/v1/completions", "{not json").unwrap();
+    assert_eq!(bad.status, 400);
+    assert!(bad.body.contains("JSON"), "{}", bad.body);
+    let missing = client::post(&addr, "/v1/completions", r#"{"max_new": 2}"#).unwrap();
+    assert_eq!(missing.status, 400);
+    let lost = client::get(&addr, "/nope").unwrap();
+    assert_eq!(lost.status, 404);
+    let method = client::post(&addr, "/metrics", "{}").unwrap();
+    assert_eq!(method.status, 404); // POST routes only to /v1/completions
+
+    state.request_shutdown();
+    h.join().unwrap();
+}
+
+// ------------------------------------------------------------ artifact tier
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+/// Artifacts present *and* exported with the decode ABI.
+fn have_decode() -> Option<Runtime> {
+    if !artifacts().join("manifest.json").exists() {
+        return None;
+    }
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    rt.manifest.supports_decode("pallas").then_some(rt)
+}
+
+const PARAM_SEED: u64 = 3;
+
+/// Start the full stack on an ephemeral port: the server thread owns its
+/// own `Runtime`/`Engine` (both are thread-bound) built from the same
+/// artifacts and parameter seed the test uses for its solo baselines.
+fn start_real(
+    cfg: ServeConfig,
+) -> (String, Arc<ServerState>, thread::JoinHandle<()>) {
+    let vocab = { have_decode().unwrap().manifest.vocab };
+    let front = HttpFrontend::bind(
+        ServeConfig { addr: "127.0.0.1:0".into(), ..cfg },
+        make_tok(vocab),
+    )
+    .expect("bind ephemeral");
+    let addr = front.local_addr().unwrap().to_string();
+    let state = front.state();
+    let h = thread::spawn(move || {
+        let rt = have_decode().expect("artifact presence checked by caller");
+        let params = ModelParams::init(&rt.manifest, &mut Rng::new(PARAM_SEED));
+        let mut eng = Engine::new(&rt);
+        let mut sess = ServeSession::new(&mut eng, &params).unwrap();
+        front.run(|src| sess.run_loop(src, EOS, PAD)).unwrap();
+    });
+    (addr, state, h)
+}
+
+fn solo(rt: &Runtime, params: &ModelParams, req: Request) -> Completion {
+    let mut eng = Engine::new(rt);
+    let mut sess = ServeSession::new(&mut eng, params).unwrap();
+    sess.run(&[req], EOS, PAD).unwrap().remove(0)
+}
+
+/// `(prompt tokens, spec, seed, max_new)` for a mixed client population:
+/// greedy rows run longer, sampled rows keep the short budgets the §9
+/// float-parity caveat asks for (see it_serve.rs).
+fn mixed_wire_requests(tok: &Tokenizer) -> Vec<(Vec<i32>, SamplerSpec, u64, usize)> {
+    let texts = [
+        "what is 12 plus 10 ?",
+        "name the capital of france .",
+        "what is 3 times 4 ?",
+        "who built the eiffel tower ?",
+        "what is 9 minus 2 ?",
+        "name the capital of japan .",
+    ];
+    let specs = [
+        SamplerSpec::Greedy,
+        SamplerSpec::Temperature { temperature: 0.8 },
+        SamplerSpec::TopK { k: 5, temperature: 1.0 },
+    ];
+    texts
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let spec = specs[i % specs.len()].clone();
+            let budget = if spec == SamplerSpec::Greedy { 6 } else { 2 };
+            (generate::encode_prompt(tok, t), spec, 1000 + i as u64, budget)
+        })
+        .collect()
+}
+
+fn wire_body(prompt: &[i32], spec: &SamplerSpec, seed: u64, max_new: usize, stream: bool) -> String {
+    let sampler = match spec {
+        SamplerSpec::Greedy => r#""sample": "greedy""#.to_string(),
+        SamplerSpec::Temperature { temperature } => {
+            format!(r#""sample": "temperature", "temperature": {temperature}"#)
+        }
+        SamplerSpec::TopK { k, temperature } => {
+            format!(r#""sample": "top-k", "top_k": {k}, "temperature": {temperature}"#)
+        }
+        SamplerSpec::TopP { p, temperature } => {
+            format!(r#""sample": "top-p", "top_p": {p}, "temperature": {temperature}"#)
+        }
+        other => panic!("no wire form for {other:?}"),
+    };
+    format!(
+        r#"{{"tokens": {prompt:?}, "max_new": {max_new}, {sampler}, "seed": {seed}, "stream": {stream}}}"#
+    )
+}
+
+#[test]
+fn http_completions_match_solo_serve_sessions_streamed_and_not() {
+    let Some(rt) = have_decode() else { return };
+    let params = ModelParams::init(&rt.manifest, &mut Rng::new(PARAM_SEED));
+    let tok = make_tok(rt.manifest.vocab);
+    let reqs = mixed_wire_requests(&tok);
+    let (addr, state, h) = start_real(ServeConfig::default());
+
+    // concurrent mixed clients: even indices stream, odd don't
+    let mut joins = Vec::new();
+    for (i, (prompt, spec, seed, max_new)) in reqs.iter().cloned().enumerate() {
+        let addr = addr.clone();
+        joins.push(thread::spawn(move || {
+            let stream = i % 2 == 0;
+            let body = wire_body(&prompt, &spec, seed, max_new, stream);
+            if stream {
+                let (streamed, done, _) = post_stream_tokens(&addr, &body);
+                assert_eq!(streamed, done, "request {i}: frames vs done tokens");
+                done
+            } else {
+                let (code, toks) = post_tokens(&addr, &body);
+                assert_eq!(code, 200, "request {i}");
+                toks
+            }
+        }));
+    }
+    let served: Vec<Vec<i32>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+
+    // bit-parity with a solo session per request — batch placement and
+    // transport (stream or not) must not change a completion
+    for (i, ((prompt, spec, seed, max_new), got)) in reqs.iter().zip(&served).enumerate() {
+        let want = solo(
+            &rt,
+            &params,
+            Request::sampled(prompt.clone(), *max_new, spec.clone(), *seed),
+        );
+        assert_eq!(got, &want.tokens, "request {i} diverged from solo decode");
+    }
+
+    // the same request over both transports is also identical
+    let (prompt, spec, seed, max_new) = reqs[0].clone();
+    let (_, a) = post_tokens(&addr, &wire_body(&prompt, &spec, seed, max_new, false));
+    let (_, b, _) = post_stream_tokens(&addr, &wire_body(&prompt, &spec, seed, max_new, true));
+    assert_eq!(a, b, "transport changed the completion");
+
+    state.request_shutdown();
+    h.join().unwrap();
+}
+
+#[test]
+fn stop_sequences_and_logit_bias_apply_over_http() {
+    let Some(rt) = have_decode() else { return };
+    let params = ModelParams::init(&rt.manifest, &mut Rng::new(PARAM_SEED));
+    let tok = make_tok(rt.manifest.vocab);
+    let prompt = generate::encode_prompt(&tok, "who built the eiffel tower ?");
+    let base = solo(&rt, &params, Request::greedy(prompt.clone(), 8));
+    let (addr, state, h) = start_real(ServeConfig::default());
+
+    if base.tokens.len() >= 3 {
+        // stop on the greedy trajectory's own [t1, t2]: the served run
+        // must halt there and exclude the match
+        let body = format!(
+            r#"{{"tokens": {prompt:?}, "max_new": 8, "sample": "greedy", "stop_tokens": [[{}, {}]]}}"#,
+            base.tokens[1], base.tokens[2]
+        );
+        let resp = client::post(&addr, "/v1/completions", &body).unwrap();
+        assert_eq!(resp.status, 200);
+        let j = resp.json().unwrap();
+        assert_eq!(j.get("finish_reason").unwrap().as_str(), Some("stop_seq"));
+        let got: Vec<i32> = j.get("tokens").unwrap().as_arr().unwrap().iter()
+            .map(|x| x.as_f64().unwrap() as i32).collect();
+        assert_eq!(got, base.tokens[..1].to_vec(), "matched suffix must be excluded");
+    }
+
+    // banning the greedy first choice provably removes it everywhere
+    let banned = base.tokens[0];
+    let body = format!(
+        r#"{{"tokens": {prompt:?}, "max_new": 8, "sample": "greedy", "ban": [{banned}]}}"#
+    );
+    let resp = client::post(&addr, "/v1/completions", &body).unwrap();
+    assert_eq!(resp.status, 200);
+    let got: Vec<i32> = resp.json().unwrap().get("tokens").unwrap().as_arr().unwrap().iter()
+        .map(|x| x.as_f64().unwrap() as i32).collect();
+    assert!(!got.is_empty());
+    assert!(got.iter().all(|&t| t != banned), "banned token appeared: {got:?}");
+
+    state.request_shutdown();
+    h.join().unwrap();
+}
+
+#[test]
+fn burst_fills_metrics_and_overflow_spares_in_flight_rows() {
+    let Some(rt) = have_decode() else { return };
+    let params = ModelParams::init(&rt.manifest, &mut Rng::new(PARAM_SEED));
+    let tok = make_tok(rt.manifest.vocab);
+    let prompt = generate::encode_prompt(&tok, "name the capital of france .");
+    let budget = 24usize;
+    let want = solo(&rt, &params, Request::greedy(prompt.clone(), budget));
+    let (addr, state, h) = start_real(ServeConfig { max_queue: 1, ..ServeConfig::default() });
+
+    // far more concurrent identical greedy requests than rows + queue:
+    // overflow must answer 429 and every accepted request must still be
+    // bit-identical to the solo baseline (in-flight rows undisturbed)
+    let mut joins = Vec::new();
+    for _ in 0..16 {
+        let addr = addr.clone();
+        let body = format!(r#"{{"tokens": {prompt:?}, "max_new": {budget}, "sample": "greedy"}}"#);
+        joins.push(thread::spawn(move || {
+            client::post(&addr, "/v1/completions", &body).unwrap()
+        }));
+    }
+    let responses: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let served = responses.iter().filter(|r| r.status == 200).count();
+    let rejected = responses.iter().filter(|r| r.status == 429).count();
+    assert_eq!(served + rejected, responses.len(), "only 200/429 expected");
+    assert!(served >= 1, "someone must be served");
+    assert!(rejected >= 1, "a 16-deep burst against a 1-deep queue must overflow");
+    for r in responses.iter().filter(|r| r.status == 200) {
+        let got: Vec<i32> = r.json().unwrap().get("tokens").unwrap().as_arr().unwrap().iter()
+            .map(|x| x.as_f64().unwrap() as i32).collect();
+        assert_eq!(got, want.tokens, "an accepted request diverged under overflow");
+    }
+
+    // acceptance: the burst leaves non-zero latency histograms and the
+    // engine's ExecStats visible in the export
+    assert!(state.metrics.ttft.count() > 0, "TTFT histogram is empty");
+    assert!(state.metrics.tok_rate.count() > 0, "tokens/sec histogram is empty");
+    let m = client::get(&addr, "/metrics").unwrap().body;
+    let steps_line = m.lines().find(|l| l.starts_with("lisa_serve_decode_steps_total"))
+        .expect("decode-steps series");
+    let steps: f64 = steps_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    assert!(steps > 0.0, "{steps_line}");
+    assert!(
+        m.contains("lisa_segment_calls_total{segment=\"decode_step\"}"),
+        "per-segment ExecStats missing:\n{m}"
+    );
+
+    state.request_shutdown();
+    h.join().unwrap();
+}

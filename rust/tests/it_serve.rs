@@ -79,7 +79,7 @@ fn mixed_requests(tok: &Tokenizer, gen_seed: u64) -> Vec<Request> {
             Request::sampled(
                 generate::encode_prompt(tok, t),
                 if greedy { 3 + i } else { 2 + (i % 2) },
-                specs[i % specs.len()],
+                specs[i % specs.len()].clone(),
                 request_seed(gen_seed, i),
             )
         })
@@ -150,7 +150,7 @@ fn degenerate_samplers_reproduce_greedy_end_to_end() {
         let got = run_serve(
             &rt,
             &params,
-            &[Request::sampled(prompt.clone(), 8, spec, 999)],
+            &[Request::sampled(prompt.clone(), 8, spec.clone(), 999)],
             EOS,
         );
         assert_eq!(got[0].tokens, greedy[0].tokens, "{spec:?} must equal greedy");
@@ -176,13 +176,25 @@ fn legacy_full_forward_agrees_with_served_sampling() {
         // parity caveat), so sampled draws get few boundary exposures
         let budget = if spec == SamplerSpec::Greedy { 8 } else { 3 };
         let mut eng = Engine::new(&rt);
-        let legacy =
-            generate::complete_legacy(&mut eng, &params, &tok, text, budget, spec, seed)
-                .unwrap();
+        let legacy = generate::complete_legacy(
+            &mut eng,
+            &params,
+            &tok,
+            text,
+            budget,
+            spec.clone(),
+            seed,
+        )
+        .unwrap();
         let served = run_serve(
             &rt,
             &params,
-            &[Request::sampled(generate::encode_prompt(&tok, text), budget, spec, seed)],
+            &[Request::sampled(
+                generate::encode_prompt(&tok, text),
+                budget,
+                spec.clone(),
+                seed,
+            )],
             EOS,
         );
         assert_eq!(served[0].tokens, legacy.tokens, "{spec:?} legacy/served diverged");
