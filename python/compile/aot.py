@@ -67,6 +67,9 @@ def segment_registry(cfg: ModelConfig, backend: str):
     tok1 = _spec((b, 1), jnp.int32)
     kv = _spec((b, 2 * t, d))
     state = _spec((b, model.decode_state_rows(cfg), d))
+    # decode ABI v2 (DESIGN.md §12): paged pools + per-row page table
+    ptab = _spec((b, cfg.pages_per_row), jnp.int32)
+    pstate = _spec((model.paged_state_rows(cfg), d))
 
     return {
         "embed_fwd": (functools.partial(model.embed_fwd, cfg=cfg),
@@ -106,6 +109,16 @@ def segment_registry(cfg: ModelConfig, backend: str):
                         [tok1, tok1, state, emb, pos, *(bp * cfg.n_layers)]),
         "decode_logits": (functools.partial(model.decode_logits, **kw),
                           [state, gf, wh]),
+        # serving: paged K/V cache (ABI v2, DESIGN.md §12). Single-output
+        # -> bare-rooted -> the paged state chains device-resident exactly
+        # like the v1 packed state; the page table is a per-call i32 input.
+        "paged_scatter": (functools.partial(model.paged_scatter, cfg=cfg),
+                          [pstate, ptab, *([kv] * cfg.n_layers)]),
+        "paged_step": (functools.partial(model.paged_step, **kw),
+                       [tok1, tok1, ptab, pstate, emb, pos,
+                        *(bp * cfg.n_layers)]),
+        "paged_logits": (functools.partial(model.paged_logits, **kw),
+                         [pstate, gf, wh]),
     }
 
 
@@ -178,14 +191,29 @@ def export_config(cfg: ModelConfig, out_root: str, backends, force=False,
                 "outputs": _sig(outs),
                 "tuple_root": tuple_root,
             }
-    # Decode-ABI version (DESIGN.md §9): claimed only when every decode
+    # Decode-ABI version (DESIGN.md §9/§12): claimed only when every decode
     # segment is really in the manifest for some backend, so partial
     # exports can't advertise an ABI they don't carry. Loaders treat a
     # missing/0 field as "no decode" — legacy artifact dirs keep loading.
+    # v2 (paged) is a superset of v1: the batch-prefill pipeline and the
+    # parity baseline both still run the v1 segments, so abi 2 is only
+    # stamped when both sets are complete for one backend.
     decode_names = ("prefill_kv", "pack_state", "decode_step", "decode_logits")
-    manifest["decode_abi"] = 1 if any(
-        all(f"{n}.{be}" in manifest["segments"] for n in decode_names)
-        for be in ("pallas", "jnp")) else 0
+    paged_names = decode_names + ("paged_step", "paged_logits",
+                                  "paged_scatter")
+    has_v1 = any(all(f"{n}.{be}" in manifest["segments"] for n in decode_names)
+                 for be in ("pallas", "jnp"))
+    has_v2 = any(all(f"{n}.{be}" in manifest["segments"] for n in paged_names)
+                 for be in ("pallas", "jnp"))
+    manifest["decode_abi"] = 2 if has_v2 else (1 if has_v1 else 0)
+    if has_v2:
+        # paged geometry the Rust allocator/loader validates against
+        manifest["paged"] = {
+            "page_t": cfg.page_t,
+            "pages_per_row": cfg.pages_per_row,
+            "page_n": cfg.page_n,
+            "state_rows": model.paged_state_rows(cfg),
+        }
     with open(os.path.join(out_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1, sort_keys=True)
     return manifest

@@ -30,11 +30,26 @@ class ModelConfig:
     block_k: int = 128
     block_n: int = 128    # rmsnorm row tile
     xent_block_n: int = 8
+    # Paged decode (ABI v2, DESIGN.md §12): K/V page size in token slots.
+    page_t: int = 16
 
     @property
     def head_dim(self) -> int:
         assert self.d_model % self.n_heads == 0
         return self.d_model // self.n_heads
+
+    @property
+    def pages_per_row(self) -> int:
+        """Page-table width: pages needed to cover the [T] decode window."""
+        return -(-self.seq // self.page_t)
+
+    @property
+    def page_n(self) -> int:
+        """Pool pages per layer-half: page 0 is the reserved scratch page
+        (vacant rows write there, nothing reads it), `batch * pages_per_row`
+        covers every row's worst case, and one extra row's worth is
+        headroom so prefix-cache retention never starves admission."""
+        return (self.batch + 1) * self.pages_per_row + 1
 
     @property
     def d_ff(self) -> int:

@@ -296,6 +296,100 @@ def decode_logits(state, gf, wh, *, cfg: ModelConfig, backend: str):
 
 
 # ---------------------------------------------------------------------------
+# Serving segments: paged K/V cache (decode ABI v2, DESIGN.md §12)
+#
+# Same single-tensor/bare-root trick as v1, different geometry: the state is
+# ``[L*2*N*bt + B, D]`` — per layer one K pool and one V pool of N fixed
+# pages x ``bt = page_t`` token slots each, plus B trailing rows holding the
+# per-row last hidden state. Which pool pages a batch row owns is *not*
+# part of the state: a page table ``[B, P]`` of page ids (P =
+# ``pages_per_row``) is an i32 input uploaded per call, so the Rust
+# allocator can hand pages out, share read-only prompt-prefix pages between
+# rows, and free them at harvest without ever touching device memory.
+#
+# Page 0 is the reserved scratch page: table entries for unallocated slots
+# point there, vacant rows write there, and nothing ever attends to it —
+# the ``iota(P*bt) <= pidx`` mask excludes every unwritten position, and
+# scratch contents stay finite, so masked columns contribute exactly 0.
+#
+# Physical row of (layer l, K half, page g, slot s) is
+# ``(2l*N + g)*bt + s``; the V half adds N pages. Gathering a row's pages
+# in table order reconstructs the v1 logical [P*bt, D] cache window, which
+# is why ``paged_step`` is value-for-value the v1 ``decode_step`` (the
+# parity suites ride on that).
+# ---------------------------------------------------------------------------
+
+
+def paged_state_rows(cfg: ModelConfig) -> int:
+    """First dim of the paged decode state: L*2 pools of N pages x page_t
+    slots each, plus B per-row hidden-state rows."""
+    return cfg.n_layers * 2 * cfg.page_n * cfg.page_t + cfg.batch
+
+
+def paged_step(tok, pidx, table, state, emb, pos, *bps, cfg: ModelConfig,
+               backend: str):
+    """One cached decode step over the paged state.
+
+    tok/pidx: [B,1] i32 as in v1; table: [B,P] i32 page ids; state:
+    [L*2*N*bt + B, D]. Writes each row's new K/V into slot ``pidx % bt``
+    of page ``table[b, pidx // bt]`` (scatter-set — pages are
+    exclusively owned or scratch, see the allocator contract), then
+    gathers the row's pages in table order and attends the single query
+    over positions ``t <= pidx`` exactly like v1. The B trailing rows
+    get the new per-row hidden state.
+    """
+    bt, p, n, b = cfg.page_t, cfg.pages_per_row, cfg.page_n, cfg.batch
+    kv_rows = cfg.n_layers * 2 * n * bt
+    h = emb[tok] + pos[pidx]  # [B,1,D]
+    page = jnp.take_along_axis(table, pidx // bt, axis=1)[:, 0]  # [B]
+    slot = pidx[:, 0] % bt  # [B]
+    mask = jax.lax.iota(jnp.int32, p * bt)[None, :] <= pidx  # [B, P*bt]
+    in_page = jnp.arange(bt, dtype=jnp.int32)
+    for l in range(cfg.n_layers):
+        g1, wq, wk, wv, wo, g2, w1, w2 = bps[8 * l:8 * (l + 1)]
+        x = _norm(h, g1, cfg, backend)
+        q, k_new, v_new = x @ wq, x @ wk, x @ wv  # [B,1,D]
+        k_base, v_base = 2 * l * n, (2 * l + 1) * n
+        # write first, gather after: the current column is attendable
+        state = state.at[(k_base + page) * bt + slot].set(k_new[:, 0, :])
+        state = state.at[(v_base + page) * bt + slot].set(v_new[:, 0, :])
+        k_idx = ((k_base + table) * bt)[:, :, None] + in_page  # [B,P,bt]
+        v_idx = ((v_base + table) * bt)[:, :, None] + in_page
+        kc = state[k_idx.reshape(b, p * bt)]  # [B, P*bt, D]
+        vc = state[v_idx.reshape(b, p * bt)]
+        h1 = h + _decode_attend(q, kc, vc, mask, cfg) @ wo
+        y = _norm(h1, g2, cfg, backend)
+        h = h1 + jax.nn.gelu(y @ w1) @ w2
+    return jnp.concatenate([state[:kv_rows], h[:, 0, :]], axis=0)
+
+
+def paged_scatter(state, table, *kvs, cfg: ModelConfig):
+    """Seed the paged pools from the L per-layer ``prefill_kv`` outputs
+    (batch prefill reuses the v1 prompt pipeline unchanged): position c of
+    row b lands in slot ``c % bt`` of page ``table[b, c // bt]``. The h
+    rows are left as-is — the first ``paged_step`` rewrites them before
+    anything reads them."""
+    assert len(kvs) == cfg.n_layers
+    bt, n, b, t, d = cfg.page_t, cfg.page_n, cfg.batch, cfg.seq, cfg.d_model
+    pos_page = jnp.arange(t, dtype=jnp.int32) // bt  # [T]
+    pos_slot = jnp.arange(t, dtype=jnp.int32) % bt
+    for l, kv in enumerate(kvs):
+        for base, sl in ((2 * l * n, slice(0, t)),
+                         ((2 * l + 1) * n, slice(t, 2 * t))):
+            rows = (base + table[:, pos_page]) * bt + pos_slot[None, :]
+            state = state.at[rows.reshape(-1)].set(
+                kv[:, sl, :].reshape(b * t, d))
+    return state
+
+
+def paged_logits(state, gf, wh, *, cfg: ModelConfig, backend: str):
+    """Next-token logits from the B trailing h rows: -> [B, 1, V]."""
+    h = state[-cfg.batch:, :][:, None, :]
+    x = _norm(h, gf, cfg, backend)
+    return x @ wh
+
+
+# ---------------------------------------------------------------------------
 # Whole-model reference (tests + the pytest oracle for segment composition)
 # ---------------------------------------------------------------------------
 

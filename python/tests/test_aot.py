@@ -13,7 +13,7 @@ from compile.configs import CONFIGS, ModelConfig
 
 UNIT = ModelConfig("unitaot", d_model=16, n_layers=2, n_heads=2, vocab=32,
                    seq=8, batch=1, lora_rank=4, block_q=8, block_k=8,
-                   block_n=8, xent_block_n=4)
+                   block_n=8, xent_block_n=4, page_t=4)
 
 
 def test_registry_covers_all_segments():
@@ -24,6 +24,7 @@ def test_registry_covers_all_segments():
         "block_bwd_x", "block_fwd_lora", "block_bwd_lora", "head_fwd_bwd",
         "head_fwd_bwd_x", "head_loss", "head_logits", "adamw_update",
         "prefill_kv", "pack_state", "decode_step", "decode_logits",
+        "paged_step", "paged_logits", "paged_scatter",
     }
     assert names == expected
 
@@ -112,6 +113,42 @@ def test_decode_segments_are_bare_rooted_and_version_the_manifest(tmp_path):
     assert kv["tuple_root"] is False
     assert kv["outputs"][0]["shape"] == [UNIT.batch, 2 * t, d]
     assert man["segments"]["decode_logits.jnp"]["outputs"][0]["shape"] == \
+        [UNIT.batch, 1, UNIT.vocab]
+
+
+def test_paged_segments_stamp_abi_v2_and_geometry(tmp_path):
+    # v1-only export stays abi 1 (covered above); completing the paged set
+    # upgrades the same manifest to abi 2 and records the pool geometry
+    from compile import model as mdl
+
+    v1 = {"prefill_kv", "pack_state", "decode_step", "decode_logits"}
+    aot.export_config(UNIT, str(tmp_path), ["jnp"], segments=v1)
+    man = json.loads((tmp_path / "unitaot" / "manifest.json").read_text())
+    assert man["decode_abi"] == 1 and "paged" not in man
+
+    paged = {"paged_step", "paged_logits", "paged_scatter"}
+    aot.export_config(UNIT, str(tmp_path), ["jnp"], segments=paged)
+    man = json.loads((tmp_path / "unitaot" / "manifest.json").read_text())
+    assert man["decode_abi"] == 2
+    assert man["paged"] == {
+        "page_t": UNIT.page_t,
+        "pages_per_row": UNIT.pages_per_row,
+        "page_n": UNIT.page_n,
+        "state_rows": mdl.paged_state_rows(UNIT),
+    }
+    rows, d = mdl.paged_state_rows(UNIT), UNIT.d_model
+    ps = man["segments"]["paged_step.jnp"]
+    # single-output -> bare root -> device-chainable paged state
+    assert ps["tuple_root"] is False
+    assert ps["outputs"] == [{"shape": [rows, d], "dtype": "float32"}]
+    # tok, pidx, table, state, emb, pos, then L x 8 block params
+    assert len(ps["operands"]) == 6 + 8 * UNIT.n_layers
+    assert ps["operands"][2] == {
+        "shape": [UNIT.batch, UNIT.pages_per_row], "dtype": "int32"}
+    sc = man["segments"]["paged_scatter.jnp"]
+    assert sc["tuple_root"] is False
+    assert len(sc["operands"]) == 2 + UNIT.n_layers
+    assert man["segments"]["paged_logits.jnp"]["outputs"][0]["shape"] == \
         [UNIT.batch, 1, UNIT.vocab]
 
 

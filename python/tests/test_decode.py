@@ -15,7 +15,7 @@ from compile.configs import ModelConfig
 
 CFG = ModelConfig("unitdec", d_model=16, n_layers=2, n_heads=2, vocab=32,
                   seq=12, batch=3, lora_rank=4, block_q=8, block_k=8,
-                  block_n=8, xent_block_n=4)
+                  block_n=8, xent_block_n=4, page_t=4)
 
 PAD, EOS = 0, 2
 
@@ -201,6 +201,204 @@ def test_cached_greedy_matches_legacy_token_for_token(backend):
     for b, p in enumerate(prompts):
         want = legacy_greedy(p, emb, bp, head, max_new, backend)
         assert got[b] == want, f"row {b} diverged (backend {backend})"
+
+
+# ---------------------------------------------------------------------------
+# Paged cache (decode ABI v2): the paged segments must be value-for-value
+# the v1 packed path — same prefill, page-indirect storage.
+# ---------------------------------------------------------------------------
+
+def default_table():
+    """Each row owns a contiguous run of pages; page 0 stays scratch."""
+    p = CFG.pages_per_row
+    return jnp.array([[1 + b * p + j for j in range(p)]
+                      for b in range(CFG.batch)], jnp.int32)
+
+
+def paged_prefill(prompts, emb, bp, head, backend, table):
+    """v1 prompt pipeline + paged_scatter; returns (rows, logits, state)."""
+    t_max = CFG.seq
+    rows = [list(p) for p in prompts]
+    tokens = jnp.array([r + [PAD] * (t_max - len(r)) for r in rows],
+                       jnp.int32)
+    h = model.embed_fwd(tokens, *emb, cfg=CFG)
+    kvs = []
+    for p in bp:
+        kvs.append(model.prefill_kv(h, p[0], p[2], p[3], cfg=CFG,
+                                    backend=backend))
+        h = model.block_fwd(h, *p, cfg=CFG, backend=backend)
+    logits = model.head_logits(h, *head, cfg=CFG, backend=backend)
+    state = jnp.zeros((model.paged_state_rows(CFG), CFG.d_model),
+                      jnp.float32)
+    state = model.paged_scatter(state, table, *kvs, cfg=CFG)
+    return rows, logits, state
+
+
+def paged_greedy_batch(prompts, emb, bp, head, max_new, backend, table=None):
+    """`cached_greedy_batch`, but over the paged state."""
+    t_max = CFG.seq
+    if table is None:
+        table = default_table()
+    rows, logits, state = paged_prefill(prompts, emb, bp, head, backend,
+                                        table)
+    outs = [[] for _ in rows]
+    alive = []
+    for b, r in enumerate(rows):
+        nxt = int(jnp.argmax(logits[b, len(r) - 1]))
+        if nxt == EOS or max_new == 0:
+            alive.append(False)
+            continue
+        r.append(nxt)
+        outs[b].append(nxt)
+        alive.append(len(outs[b]) < max_new and len(r) < t_max)
+
+    flat_bp = [t for p in bp for t in p]
+    steps = 0
+    while any(alive):
+        tok = jnp.array([[r[-1]] for r in rows], jnp.int32)
+        pidx = jnp.array([[len(r) - 1] for r in rows], jnp.int32)
+        state = model.paged_step(tok, pidx, table, state, *emb, *flat_bp,
+                                 cfg=CFG, backend=backend)
+        lg = model.paged_logits(state, *head, cfg=CFG, backend=backend)
+        steps += 1
+        for b, r in enumerate(rows):
+            if not alive[b]:
+                continue
+            nxt = int(jnp.argmax(lg[b, 0]))
+            if nxt == EOS:
+                alive[b] = False
+                continue
+            r.append(nxt)
+            outs[b].append(nxt)
+            alive[b] = len(outs[b]) < max_new and len(r) < t_max
+    return outs, steps, state
+
+
+def test_paged_shapes():
+    emb, bp, head = make_params()
+    rows = model.paged_state_rows(CFG)
+    assert rows == CFG.n_layers * 2 * CFG.page_n * CFG.page_t + CFG.batch
+    state = jnp.zeros((rows, CFG.d_model), jnp.float32)
+    kv = rand(21, (CFG.batch, 2 * CFG.seq, CFG.d_model), 0.3)
+    table = default_table()
+    state = model.paged_scatter(state, table, *[kv] * CFG.n_layers, cfg=CFG)
+    assert state.shape == (rows, CFG.d_model)
+    tok = jnp.zeros((CFG.batch, 1), jnp.int32)
+    flat_bp = [x for p in bp for x in p]
+    state2 = model.paged_step(tok, tok, table, state, *emb, *flat_bp,
+                              cfg=CFG, backend="jnp")
+    assert state2.shape == state.shape
+    lg = model.paged_logits(state2, *head, cfg=CFG, backend="jnp")
+    assert lg.shape == (CFG.batch, 1, CFG.vocab)
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_paged_step_matches_full_forward_logits(backend):
+    """Paged prefill + one paged_step must equal the full forward's logits
+    at the new position — the v2 mirror of the v1 test above."""
+    emb, bp, head = make_params()
+    t_max = CFG.seq
+    lens = [5, 3, 7]
+    rows = [[1] + [(7 * i + b) % (CFG.vocab - 5) + 5 for i in range(n - 1)]
+            for b, n in enumerate(lens)]
+    table = default_table()
+    rows, _, state = paged_prefill(rows, emb, bp, head, backend, table)
+
+    new_tok = [9, 11, 13]
+    flat_bp = [x for p in bp for x in p]
+    tok = jnp.array([[v] for v in new_tok], jnp.int32)
+    pidx = jnp.array([[n] for n in lens], jnp.int32)
+    state = model.paged_step(tok, pidx, table, state, *emb, *flat_bp,
+                             cfg=CFG, backend=backend)
+    lg = model.paged_logits(state, *head, cfg=CFG, backend=backend)
+
+    for b, r in enumerate(rows):
+        r.append(new_tok[b])
+    tokens2 = jnp.array([r + [PAD] * (t_max - len(r)) for r in rows],
+                        jnp.int32)
+    ref_lg = full_logits(tokens2, emb, bp, head, backend)
+    for b, n in enumerate(lens):
+        np.testing.assert_allclose(
+            lg[b, 0], ref_lg[b, n], rtol=2e-4, atol=2e-5,
+            err_msg=f"row {b} (backend {backend})")
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_paged_greedy_matches_packed_greedy_token_for_token(backend):
+    emb, bp, head = make_params(key0=4)
+    prompts = [[1, 6, 7], [1, 9, 10, 11, 12], [1, 5]]
+    max_new = 6
+    want, _ = cached_greedy_batch(prompts, emb, bp, head, max_new, backend)
+    got, steps, _ = paged_greedy_batch(prompts, emb, bp, head, max_new,
+                                       backend)
+    assert steps <= max_new
+    assert got == want, f"paged vs packed diverged (backend {backend})"
+
+
+def test_paged_decode_is_invariant_to_physical_page_placement():
+    """Only the table order is semantic: scrambling which physical pages
+    back each row must not change a single token."""
+    emb, bp, head = make_params(key0=7)
+    prompts = [[1, 6, 7], [1, 9, 10, 11, 12], [1, 5]]
+    a, _, _ = paged_greedy_batch(prompts, emb, bp, head, 5, "jnp")
+    # same rows, physically scattered across the pool in reverse
+    p, n = CFG.pages_per_row, CFG.page_n
+    scrambled = jnp.array(
+        [[n - 1 - (b * p + j) for j in range(p)] for b in range(CFG.batch)],
+        jnp.int32)
+    b, _, _ = paged_greedy_batch(prompts, emb, bp, head, 5, "jnp",
+                                 table=scrambled)
+    assert a == b
+
+
+def test_paged_shared_prefix_pages_serve_both_rows():
+    """Rows 0 and 1 share their full first page of prompt; aliasing row 1's
+    table onto row 0's physical page must reproduce the unaliased decode
+    bit-for-bit and leave the shared page read-only under decode."""
+    emb, bp, head = make_params(key0=9)
+    bt = CFG.page_t
+    shared = [1, 6, 7, 9]          # exactly one full page
+    assert len(shared) == bt
+    prompts = [shared + [3, 4], shared + [3, 4], [1, 5]]
+    want, _, _ = paged_greedy_batch(prompts, emb, bp, head, 4, "jnp")
+
+    table = np.asarray(default_table()).copy()
+    table[1, 0] = table[0, 0]      # row 1 adopts row 0's prefix page
+    aliased = jnp.array(table, jnp.int32)
+    got, _, state = paged_greedy_batch(prompts, emb, bp, head, 4, "jnp",
+                                       table=aliased)
+    assert got == want
+    assert got[0] == got[1]        # identical prompts, identical rows
+
+    # the shared physical page still holds exactly the prefix K/V: decode
+    # never wrote into it (all writes land at positions >= len(prompt))
+    _, _, reference = paged_prefill(prompts, emb, bp, head, "jnp", aliased)
+    g = int(table[0, 0])
+    for half in range(2 * CFG.n_layers):
+        rows_ = slice((half * CFG.page_n + g) * bt,
+                      (half * CFG.page_n + g + 1) * bt)
+        np.testing.assert_array_equal(
+            np.asarray(state[rows_]), np.asarray(reference[rows_]),
+            err_msg=f"shared page mutated (layer-half {half})")
+
+
+def test_paged_write_is_idempotent():
+    """Frozen-row replay (drained rows in a live batch) must not drift."""
+    emb, bp, _ = make_params()
+    kv = rand(22, (CFG.batch, 2 * CFG.seq, CFG.d_model), 0.3)
+    table = default_table()
+    state = jnp.zeros((model.paged_state_rows(CFG), CFG.d_model),
+                      jnp.float32)
+    state = model.paged_scatter(state, table, *[kv] * CFG.n_layers, cfg=CFG)
+    flat_bp = [x for p in bp for x in p]
+    tok = jnp.array([[5], [6], [7]], jnp.int32)
+    pidx = jnp.array([[2], [4], [1]], jnp.int32)
+    s1 = model.paged_step(tok, pidx, table, state, *emb, *flat_bp, cfg=CFG,
+                          backend="jnp")
+    s2 = model.paged_step(tok, pidx, table, s1, *emb, *flat_bp, cfg=CFG,
+                          backend="jnp")
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
 
 
 def test_cache_write_is_idempotent():

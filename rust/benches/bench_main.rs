@@ -9,10 +9,14 @@
 //! * `host/*`        — L3 substrate hot paths (tensor bridge, dataloader,
 //!                     tokenizer, sampler)
 //! * `decode/*`      — serving: legacy full-forward vs KV-cached decode
+//!                     (`decode/paged-tiny` adds the ABI v2 paged layout)
 //! * `serve/*`       — serving: static vs continuous batching (tokens/sec),
-//!                     plus the same queue through the `lisa serve` HTTP
-//!                     front end (`serve/http-tiny`: loopback tokens/sec
-//!                     with TTFT p50/p99 from the /metrics histograms)
+//!                     the shared-prefix page-reuse arm
+//!                     (`serve/paged-prefix-tiny`: prefill work saved by
+//!                     prefix-cache adoption), plus the same queue through
+//!                     the `lisa serve` HTTP front end (`serve/http-tiny`:
+//!                     loopback tokens/sec with TTFT p50/p99 from the
+//!                     /metrics histograms)
 //!
 //! Set `LISA_BENCH_QUICK=1` for a fast smoke pass.
 //!
@@ -26,7 +30,7 @@ use std::path::Path;
 
 use lisa::data::tokenizer::{EOS, PAD};
 use lisa::data::{corpus, encode_sft, DataLoader, Tokenizer};
-use lisa::engine::{DecodeSession, Engine, Request, ServeSession};
+use lisa::engine::{DecodeSession, Engine, KvMode, Request, ServeSession};
 use lisa::eval::generate;
 use lisa::lisa::{LisaConfig, LisaScheduler};
 use lisa::model::{ModelParams, ParamKey};
@@ -289,9 +293,11 @@ fn main() -> anyhow::Result<()> {
         if m.supports_decode("pallas") {
             let enc: Vec<Vec<i32>> =
                 refs.iter().map(|p| generate::encode_prompt(&tok, p)).collect();
+            // pinned per-layout so the arm names keep meaning on v2
+            // artifact dirs (where `new` would auto-select paged)
             let mut eng = Engine::new(&rt);
             let cached_tokens: usize = {
-                let mut sess = DecodeSession::new(&mut eng, &params)?;
+                let mut sess = DecodeSession::with_mode(&mut eng, &params, KvMode::Packed)?;
                 sess.greedy(&enc, max_new, EOS, PAD)?
                     .iter()
                     .map(|c| c.tokens.len())
@@ -301,10 +307,31 @@ fn main() -> anyhow::Result<()> {
                 "decode/cached-tiny",
                 cached_tokens.max(1) as u64,
                 || {
-                    let mut sess = DecodeSession::new(&mut eng, &params).unwrap();
+                    let mut sess =
+                        DecodeSession::with_mode(&mut eng, &params, KvMode::Packed).unwrap();
                     black_box(sess.greedy(&enc, max_new, EOS, PAD).unwrap());
                 },
             ));
+
+            if m.supports_paged("pallas") {
+                let mut eng = Engine::new(&rt);
+                let paged_tokens: usize = {
+                    let mut sess = DecodeSession::with_mode(&mut eng, &params, KvMode::Paged)?;
+                    sess.greedy(&enc, max_new, EOS, PAD)?
+                        .iter()
+                        .map(|c| c.tokens.len())
+                        .sum()
+                };
+                results.push(b.run_with_elements(
+                    "decode/paged-tiny",
+                    paged_tokens.max(1) as u64,
+                    || {
+                        let mut sess =
+                            DecodeSession::with_mode(&mut eng, &params, KvMode::Paged).unwrap();
+                        black_box(sess.greedy(&enc, max_new, EOS, PAD).unwrap());
+                    },
+                ));
+            }
         } else {
             println!(
                 "decode/cached-tiny skipped: artifacts lack the decode ABI — \
@@ -334,23 +361,55 @@ fn main() -> anyhow::Result<()> {
 
             let mut eng = Engine::new(&rt);
             let n = {
-                let mut sess = ServeSession::new(&mut eng, &params)?;
+                let mut sess = ServeSession::with_mode(&mut eng, &params, KvMode::Packed)?;
                 toks(&sess.run_static(&queue, eos_off, PAD)?)
             };
             results.push(b.run_with_elements("serve/static-tiny", n, || {
-                let mut sess = ServeSession::new(&mut eng, &params).unwrap();
+                let mut sess =
+                    ServeSession::with_mode(&mut eng, &params, KvMode::Packed).unwrap();
                 black_box(sess.run_static(&queue, eos_off, PAD).unwrap());
             }));
 
             let mut eng = Engine::new(&rt);
             let n = {
-                let mut sess = ServeSession::new(&mut eng, &params)?;
+                let mut sess = ServeSession::with_mode(&mut eng, &params, KvMode::Packed)?;
                 toks(&sess.run(&queue, eos_off, PAD)?)
             };
             results.push(b.run_with_elements("serve/continuous-tiny", n, || {
-                let mut sess = ServeSession::new(&mut eng, &params).unwrap();
+                let mut sess =
+                    ServeSession::with_mode(&mut eng, &params, KvMode::Packed).unwrap();
                 black_box(sess.run(&queue, eos_off, PAD).unwrap());
             }));
+
+            // prefix reuse (ABI v2): one session keeps its page pool and
+            // prefix cache across runs, so after the cold warm-up every
+            // timed run adopts the cached prompt pages — prefill FLOPs
+            // saved is the bench; the ExecStats line below is the proof
+            if m.supports_paged("pallas") {
+                let budget = 8usize;
+                let plen = 2 * m.page_t + m.page_t / 2; // 2 full pages + tail
+                let prompt: Vec<i32> =
+                    (0..plen as i32).map(|i| 3 + (i * 5) % (m.vocab as i32 - 4)).collect();
+                let req = Request::greedy(prompt, budget);
+                let mut eng = Engine::new(&rt);
+                let mut sess = ServeSession::with_mode(&mut eng, &params, KvMode::Paged)?;
+                sess.run(std::slice::from_ref(&req), eos_off, PAD)?; // cold: registers
+                rt.reset_stats();
+                results.push(b.run_with_elements(
+                    "serve/paged-prefix-tiny",
+                    budget as u64,
+                    || {
+                        black_box(sess.run(std::slice::from_ref(&req), eos_off, PAD).unwrap());
+                    },
+                ));
+                let stats = rt.stats();
+                let pk = stats.get("prefill_kv").map_or(0, |s| s.calls);
+                let steps = stats.get("paged_step").map_or(0, |s| s.calls);
+                println!(
+                    "serve/paged-prefix-tiny: {pk} prefill_kv executions with a warm \
+                     prefix cache (reuse target 0), {steps} paged_step executions"
+                );
+            }
         }
 
         // serving over HTTP: the same mixed queue through the full front
@@ -419,8 +478,11 @@ fn main() -> anyhow::Result<()> {
     let quick = std::env::var("LISA_BENCH_QUICK").is_ok();
     let note = "generated by `cargo bench` (LISA_BENCH_QUICK=1 for the smoke pass); \
                 step/*-hostpath arms run the pre-device-cache host-roundtrip schedule; \
-                decode/{legacy,cached}-* are the KV-cache before/after pair, \
-                serve/{static,continuous}-* the continuous-batching pair (tokens/sec) and \
+                decode/{legacy,cached}-* are the KV-cache before/after pair \
+                (decode/paged-tiny adds the ABI v2 paged layout on v2 artifacts), \
+                serve/{static,continuous}-* the continuous-batching pair (tokens/sec), \
+                serve/paged-prefix-tiny the shared-prefix page-reuse arm (tokens/sec with \
+                prefill_kv executions printed; reuse target 0) and \
                 serve/http-tiny the same queue through the `lisa serve` HTTP front end \
                 (loopback tokens/sec; TTFT p50/p99 printed from /metrics)";
     let target = Path::new("../BENCH_step.json");

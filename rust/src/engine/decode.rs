@@ -16,11 +16,13 @@
 //! [`argmax`] that the legacy full-forward loop (`eval::generate`) must
 //! agree with token for token.
 
-use anyhow::Result;
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
 
 use crate::model::ModelParams;
 
-use super::serve::{Request, ServeSession};
+use super::serve::{KvMode, Request, ServeSession};
 use super::trainer::Engine;
 
 /// Why a row stopped emitting tokens.
@@ -95,6 +97,223 @@ pub(crate) fn argmax(row: &[f32]) -> i32 {
     best as i32
 }
 
+// ---------------------------------------------------------------------------
+// Paged K/V pool: block allocator + prompt-prefix cache (decode ABI v2,
+// DESIGN.md §12)
+// ---------------------------------------------------------------------------
+
+/// Seed of every prompt's page-key hash chain (arbitrary fixed constant;
+/// baked into no artifact, so it can change freely).
+const CHAIN_SEED: u64 = 0x0005_ca1a_b1e0_dd1e;
+
+/// FNV-1a over the block's token bytes, chained through `parent` so a
+/// page's key commits to the *entire* prefix before it, not just its own
+/// tokens: `key_i = h(key_{i-1}, tokens[i*bt .. (i+1)*bt])`.
+fn chain_key(parent: u64, block: &[i32]) -> u64 {
+    let mut h = parent ^ 0xcbf2_9ce4_8422_2325;
+    for &t in block {
+        for b in t.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// One cached, fully prefilled prompt page. The entry holds exactly one
+/// refcount on `page` for as long as it lives in the cache.
+struct CachedPage {
+    page: u32,
+    /// Chain key of the preceding page ([`CHAIN_SEED`] for page 0 of a
+    /// prompt), verified on lookup alongside `tokens` so a 64-bit hash
+    /// collision can never alias two different prefixes.
+    parent: u64,
+    /// The `page_t` prompt tokens whose K/V this page holds.
+    tokens: Vec<i32>,
+}
+
+/// Refcounted allocator over the fixed-size K/V page pool of a paged
+/// (`decode_abi == 2`) artifact, plus the prompt-prefix cache that lets a
+/// request adopt pages another request already prefilled (DESIGN.md §12).
+///
+/// Page ids index the per-layer-half pools of the device-resident state
+/// tensor; the allocator itself is pure host bookkeeping. Page 0 is the
+/// *scratch* page: never handed out, it absorbs the writes of vacant and
+/// pageless rows (whatever lands there is garbage by contract — the
+/// position mask keeps it out of every real row's attention).
+///
+/// Lifecycle: [`PageAllocator::alloc`] hands a page to a row at admission
+/// (refcount 1); adopting a cached prefix page bumps its count instead of
+/// recomputing it; harvest releases every page a row held. A page returns
+/// to the free list when its count hits zero — cache entries each hold
+/// one count, so cached prefixes survive their donor row and are evicted
+/// (idle entries only) when the pool runs dry.
+pub struct PageAllocator {
+    page_t: usize,
+    /// Per-page refcounts, indexed by page id; `refs[0]` pins scratch.
+    refs: Vec<u32>,
+    /// Free page ids; low ids are handed out first (determinism only).
+    free: Vec<u32>,
+    cache: BTreeMap<u64, CachedPage>,
+    /// Prompts that adopted at least one cached page.
+    pub prefix_hits: u64,
+    /// Prefilled pages served from the cache instead of recomputed.
+    pub prefix_pages_served: u64,
+    /// Cache entries evicted to satisfy allocations.
+    pub evictions: u64,
+}
+
+impl PageAllocator {
+    /// `n_pages` is the whole pool (`page_n` from the manifest),
+    /// *including* the reserved scratch page 0.
+    pub fn new(n_pages: usize, page_t: usize) -> PageAllocator {
+        assert!(n_pages >= 2, "pool needs scratch + at least one real page");
+        assert!(page_t > 0);
+        let mut refs = vec![0u32; n_pages];
+        refs[0] = 1; // scratch: pinned forever
+        PageAllocator {
+            page_t,
+            refs,
+            free: (1..n_pages as u32).rev().collect(),
+            cache: BTreeMap::new(),
+            prefix_hits: 0,
+            prefix_pages_served: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn page_t(&self) -> usize {
+        self.page_t
+    }
+
+    /// Allocate one page (refcount 1), evicting idle cached prefixes if
+    /// the free list is dry. Errors only when every page is pinned by a
+    /// live row — the default export geometry (`page_n = (B+1)*P + 1`)
+    /// makes that unreachable for `B` rows of at most `P` pages each.
+    pub fn alloc(&mut self) -> Result<u32> {
+        if self.free.is_empty() {
+            self.evict_idle();
+        }
+        match self.free.pop() {
+            Some(g) => {
+                debug_assert_eq!(self.refs[g as usize], 0);
+                self.refs[g as usize] = 1;
+                Ok(g)
+            }
+            None => bail!(
+                "paged K/V pool exhausted: all {} pages are held by live rows",
+                self.refs.len()
+            ),
+        }
+    }
+
+    /// Bump a page's refcount (prefix adoption).
+    pub fn retain(&mut self, page: u32) {
+        debug_assert_ne!(page, 0, "scratch is never adopted");
+        debug_assert!(self.refs[page as usize] > 0, "retain of a free page");
+        self.refs[page as usize] += 1;
+    }
+
+    /// Drop one refcount; the page rejoins the free list at zero.
+    /// Releasing scratch is a no-op (vacant table entries all read 0).
+    pub fn release(&mut self, page: u32) {
+        if page == 0 {
+            return;
+        }
+        let r = &mut self.refs[page as usize];
+        debug_assert!(*r > 0, "release of a free page");
+        *r -= 1;
+        if *r == 0 {
+            self.free.push(page);
+        }
+    }
+
+    /// Evict every cache entry whose page only the cache itself still
+    /// holds (refcount 1). Entries adopted by live rows are untouchable.
+    pub fn evict_idle(&mut self) {
+        let idle: Vec<u64> = self
+            .cache
+            .iter()
+            .filter(|(_, e)| self.refs[e.page as usize] == 1)
+            .map(|(k, _)| *k)
+            .collect();
+        for k in idle {
+            let e = self.cache.remove(&k).expect("key just listed");
+            self.release(e.page);
+            self.evictions += 1;
+        }
+    }
+
+    /// Longest cached chain of fully prefilled pages matching `prompt`'s
+    /// leading tokens, each page retained for the caller. Covers at most
+    /// `(prompt.len() - 1) / page_t` pages: the last prompt token is
+    /// always left to recompute so the adopting row still produces
+    /// first-token logits (DESIGN.md §12 `shared_len` invariant).
+    pub fn lookup_prefix(&mut self, prompt: &[i32]) -> Vec<u32> {
+        let bt = self.page_t;
+        let max_pages = prompt.len().saturating_sub(1) / bt;
+        let mut key = CHAIN_SEED;
+        let mut adopted = Vec::new();
+        for i in 0..max_pages {
+            let block = &prompt[i * bt..(i + 1) * bt];
+            let next = chain_key(key, block);
+            match self.cache.get(&next) {
+                Some(e) if e.parent == key && e.tokens == block => adopted.push(e.page),
+                _ => break,
+            }
+            key = next;
+        }
+        for &g in &adopted {
+            self.retain(g);
+        }
+        if !adopted.is_empty() {
+            self.prefix_hits += 1;
+            self.prefix_pages_served += adopted.len() as u64;
+        }
+        adopted
+    }
+
+    /// Register a drained row's *fully prefilled* prompt pages. Only full
+    /// pages are cacheable (a partial page would be rewritten by whoever
+    /// adopts it); first registration of a chain key wins, so aliased
+    /// re-registrations by adopters are no-ops. Each new entry takes one
+    /// refcount on its page.
+    pub fn register_prefix(&mut self, prompt: &[i32], pages: &[u32]) {
+        let bt = self.page_t;
+        let full = (prompt.len() / bt).min(pages.len());
+        let mut key = CHAIN_SEED;
+        for i in 0..full {
+            let block = &prompt[i * bt..(i + 1) * bt];
+            let next = chain_key(key, block);
+            if let std::collections::btree_map::Entry::Vacant(v) = self.cache.entry(next) {
+                let g = pages[i];
+                debug_assert_ne!(g, 0, "prompt pages are real pages");
+                self.refs[g as usize] += 1;
+                v.insert(CachedPage { page: g, parent: key, tokens: block.to_vec() });
+            }
+            key = next;
+        }
+    }
+
+    // -- observability (metrics + leak assertions in `it_paged.rs`) -------
+
+    pub fn n_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn n_cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Refcounts held by rows: total non-scratch counts minus the one
+    /// count each cache entry owns. Zero after a full queue drain — the
+    /// no-leak invariant `it_paged.rs` asserts.
+    pub fn outstanding(&self) -> usize {
+        let total: u32 = self.refs.iter().skip(1).sum();
+        total as usize - self.cache.len()
+    }
+}
+
 /// A batched KV-cached greedy decoder over one engine + parameter store:
 /// the static-batch wrapper over [`ServeSession`].
 ///
@@ -115,6 +334,17 @@ impl<'e, 'rt> DecodeSession<'e, 'rt> {
 
     pub fn new(eng: &'e mut Engine<'rt>, params: &'e ModelParams) -> Result<Self> {
         Ok(DecodeSession { serve: ServeSession::new(eng, params)? })
+    }
+
+    /// Force a specific K/V layout. Parity suites pin [`KvMode::Packed`]
+    /// so their per-segment `ExecStats` assertions don't depend on which
+    /// decode ABI the artifact dir happens to carry.
+    pub fn with_mode(
+        eng: &'e mut Engine<'rt>,
+        params: &'e ModelParams,
+        mode: KvMode,
+    ) -> Result<Self> {
+        Ok(DecodeSession { serve: ServeSession::with_mode(eng, params, mode)? })
     }
 
     /// `decode_step` executions across every chunk of this session.
@@ -159,5 +389,147 @@ mod tests {
         let mut short = vec![1, 2, 3];
         assert!(!clip_prompt(&mut short, 8));
         assert_eq!(short.len(), 3);
+    }
+
+    // ---- PageAllocator + prefix cache (pure host bookkeeping) -----------
+
+    #[test]
+    fn allocator_hands_out_real_pages_and_recycles_on_release() {
+        let mut a = PageAllocator::new(5, 4); // scratch + 4 real pages
+        assert_eq!(a.n_free(), 4);
+        let g1 = a.alloc().unwrap();
+        let g2 = a.alloc().unwrap();
+        assert!(g1 != 0 && g2 != 0 && g1 != g2, "scratch never allocated");
+        assert_eq!(a.n_free(), 2);
+        assert_eq!(a.outstanding(), 2);
+        a.release(g1);
+        assert_eq!(a.n_free(), 3);
+        assert_eq!(a.outstanding(), 1);
+        // releasing scratch (a vacant table entry) is a no-op
+        a.release(0);
+        assert_eq!(a.n_free(), 3);
+        a.release(g2);
+        assert_eq!(a.outstanding(), 0);
+        assert_eq!(a.n_free(), 4);
+    }
+
+    #[test]
+    fn allocator_errors_when_every_page_is_row_held() {
+        let mut a = PageAllocator::new(3, 4);
+        let _g1 = a.alloc().unwrap();
+        let _g2 = a.alloc().unwrap();
+        assert!(a.alloc().is_err(), "no idle cache to evict: must error");
+    }
+
+    #[test]
+    fn retain_defers_release_until_the_last_holder() {
+        let mut a = PageAllocator::new(3, 4);
+        let g = a.alloc().unwrap();
+        a.retain(g);
+        a.release(g);
+        assert_eq!(a.n_free(), 1, "still held once");
+        a.release(g);
+        assert_eq!(a.n_free(), 2);
+    }
+
+    #[test]
+    fn prefix_cache_round_trips_full_pages_only() {
+        let mut a = PageAllocator::new(9, 2);
+        // donor prompt: 5 tokens over page_t = 2 -> pages [p0 p1 | tail]
+        let prompt = vec![10, 11, 12, 13, 14];
+        let pages = vec![a.alloc().unwrap(), a.alloc().unwrap(), a.alloc().unwrap()];
+        a.register_prefix(&prompt, &pages);
+        assert_eq!(a.n_cached(), 2, "only the 2 full pages are cacheable");
+        // donor harvest: cache keeps the registered pages alive
+        for &g in &pages {
+            a.release(g);
+        }
+        assert_eq!(a.outstanding(), 0);
+        assert_eq!(a.n_free(), 8 - 2);
+
+        // identical prompt adopts both full pages, each retained
+        let adopted = a.lookup_prefix(&prompt);
+        assert_eq!(adopted, pages[..2]);
+        assert_eq!(a.prefix_hits, 1);
+        assert_eq!(a.prefix_pages_served, 2);
+        assert_eq!(a.outstanding(), 2);
+        for &g in &adopted {
+            a.release(g);
+        }
+
+        // sharing only the first block adopts exactly one page
+        let partial = a.lookup_prefix(&[10, 11, 99, 13]);
+        assert_eq!(partial, pages[..1]);
+        a.release(partial[0]);
+
+        // a different first block adopts nothing
+        assert!(a.lookup_prefix(&[99, 11, 12, 13]).is_empty());
+        assert_eq!(a.prefix_hits, 2);
+    }
+
+    #[test]
+    fn lookup_always_leaves_the_last_prompt_token_to_recompute() {
+        let mut a = PageAllocator::new(9, 2);
+        let prompt = vec![1, 2, 3, 4]; // exactly 2 full pages
+        let pages = vec![a.alloc().unwrap(), a.alloc().unwrap()];
+        a.register_prefix(&prompt, &pages);
+        // a 100% identical prompt may adopt only page 0: position 3 (the
+        // last token) must be recomputed for first-token logits
+        let adopted = a.lookup_prefix(&prompt);
+        assert_eq!(adopted, pages[..1]);
+        a.release(adopted[0]);
+        // a longer prompt sharing both blocks adopts both
+        let adopted = a.lookup_prefix(&[1, 2, 3, 4, 5]);
+        assert_eq!(adopted, pages[..2]);
+    }
+
+    #[test]
+    fn first_registration_wins_and_aliased_reregistration_is_a_noop() {
+        let mut a = PageAllocator::new(9, 2);
+        let prompt = vec![7, 8];
+        let g1 = a.alloc().unwrap();
+        a.register_prefix(&prompt, &[g1]);
+        let before = a.n_free();
+        // an adopter re-registering the same chain must not double-count
+        a.register_prefix(&prompt, &[g1]);
+        assert_eq!(a.n_cached(), 1);
+        a.release(g1);
+        assert_eq!(a.outstanding(), 0);
+        // exactly one cache refcount holds g1
+        a.evict_idle();
+        assert_eq!(a.n_free(), before + 1);
+        assert_eq!(a.n_cached(), 0);
+        assert_eq!(a.evictions, 1);
+    }
+
+    #[test]
+    fn exhaustion_evicts_idle_cache_entries_but_not_adopted_ones() {
+        let mut a = PageAllocator::new(4, 2); // 3 real pages
+        let d1 = a.alloc().unwrap();
+        let d2 = a.alloc().unwrap();
+        a.register_prefix(&[1, 2], &[d1]); // idle once the donor releases
+        a.register_prefix(&[5, 6], &[d2]);
+        a.release(d1);
+        a.release(d2);
+        // adopt [5, 6]: its page is now row-held, [1, 2]'s is idle
+        let adopted = a.lookup_prefix(&[5, 6, 9]);
+        assert_eq!(adopted, vec![d2]);
+        let g3 = a.alloc().unwrap();
+        // pool dry: the next alloc must evict the idle entry, not d2's
+        let g4 = a.alloc().unwrap();
+        assert_eq!(g4, d1, "idle cached page recycled");
+        assert_eq!(a.evictions, 1);
+        assert!(a.lookup_prefix(&[1, 2, 9]).is_empty(), "evicted");
+        assert_eq!(a.lookup_prefix(&[5, 6, 9]), vec![d2], "survivor intact");
+        let _ = (g3, g4);
+    }
+
+    #[test]
+    fn chain_keys_commit_to_the_whole_prefix() {
+        // same second block after different first blocks must not collide
+        let k1 = chain_key(chain_key(CHAIN_SEED, &[1, 2]), &[3, 4]);
+        let k2 = chain_key(chain_key(CHAIN_SEED, &[9, 9]), &[3, 4]);
+        assert_ne!(k1, k2);
+        assert_ne!(chain_key(CHAIN_SEED, &[1]), chain_key(CHAIN_SEED, &[2]));
     }
 }

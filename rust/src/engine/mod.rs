@@ -6,9 +6,10 @@ pub mod memory;
 pub mod serve;
 pub mod trainer;
 
-pub use decode::{Completion, DecodeSession, StopReason};
+pub use decode::{Completion, DecodeSession, PageAllocator, StopReason};
 pub use memory::{MemCategory, MemoryMeter};
 pub use serve::{
-    Feed, LoopStats, Request, RequestSink, RequestSource, Sampler, SamplerSpec, ServeSession,
+    Feed, KvMode, LoopStats, Request, RequestSink, RequestSource, Sampler, SamplerSpec,
+    ServeSession,
 };
 pub use trainer::{Batch, Engine, Grads, StepOutput, Touched, TrainMask};

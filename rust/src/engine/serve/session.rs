@@ -40,16 +40,72 @@
 //! asserts continuous-batching parity against solo decodes. Staleness is
 //! structural, exactly as for the static path: the session borrows the
 //! engine and the parameter store for its whole lifetime.
+//!
+//! **K/V layouts.** On a decode-ABI v2 artifact dir the session runs
+//! [`KvMode::Paged`] by default (DESIGN.md §12): the packed per-row
+//! window is replaced by fixed-size pages in a shared pool, a per-step
+//! `[B, P]` page table routes each row's reads/writes, and a drained
+//! row's fully prefilled prompt pages go to a prefix cache
+//! ([`PageAllocator`]) so later requests sharing the prefix adopt them —
+//! skipping that many prompt columns (and, for a 100% shared prefix, the
+//! whole batch prefill). Token streams are identical in both modes
+//! (`tests/it_paged.rs`); `LISA_PAGED=0` forces the packed v1 path.
 
 use anyhow::{ensure, Result};
 
-use crate::engine::decode::{clip_prompt, Completion, StopReason};
+use crate::engine::decode::{clip_prompt, Completion, PageAllocator, StopReason};
 use crate::engine::memory::MemCategory;
 use crate::engine::trainer::{Act, Engine, ParamOp};
 use crate::model::ModelParams;
-use crate::runtime::{HostTensor, HostTensorI32, Operand, DECODE_ABI};
+use crate::runtime::{HostTensor, HostTensorI32, Operand, DECODE_ABI, PAGED_ABI};
 
 use super::sampler::{Sampler, SamplerSpec};
+
+/// Which K/V layout a session runs on.
+///
+/// [`KvMode::Packed`] is decode ABI v1 (DESIGN.md §9): one
+/// `[B, L*2T+1, D]` tensor, rebuilt from scratch by every batch prefill.
+/// [`KvMode::Paged`] is decode ABI v2 (DESIGN.md §12): fixed-size K/V
+/// pages in a shared per-layer-half pool, indexed by a per-step
+/// `[B, P]` page table, with prompt pages reusable across requests
+/// through the [`PageAllocator`] prefix cache. Both modes are
+/// token-for-token identical (`tests/it_paged.rs`); v1 artifact dirs can
+/// only run `Packed`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvMode {
+    Packed,
+    Paged,
+}
+
+/// Session-lifetime paged-mode state: the host-side page bookkeeping and
+/// the device-resident `[rows, D]` pool tensor. Unlike the packed state
+/// (rebuilt per prefill, dropped at loop exit), the pool *persists
+/// across* [`ServeSession::run`] calls — that's what keeps cached prefix
+/// pages adoptable by later bursts.
+struct PagedPool {
+    alloc: PageAllocator,
+    /// Device-chained `[state_rows, D]` pool; `None` until first prefill.
+    state: Option<Act>,
+    /// Pages per row (`P` — the page-table width).
+    p: usize,
+    /// Pool tensor rows (`L*2*page_n*page_t + B`).
+    rows: usize,
+}
+
+/// The per-step `[B, P]` page table: row r's logical page j maps to its
+/// j-th allocated page, scratch (0) beyond — writes by pageless rows
+/// land on scratch, reads of unwritten positions are masked out.
+fn page_table(slots: &[RowSlot], bsz: usize, p: usize) -> HostTensorI32 {
+    let mut t = vec![0i32; bsz * p];
+    for (r, slot) in slots.iter().enumerate() {
+        if let Some(occ) = &slot.0 {
+            for (j, &g) in occ.pages.iter().enumerate().take(p) {
+                t[r * p + j] = g as i32;
+            }
+        }
+    }
+    HostTensorI32::from_vec(&[bsz, p], t)
+}
 
 /// One generation request: a token-id prompt (including leading specials,
 /// see `eval::generate::encode_prompt`) plus its decode policy.
@@ -302,6 +358,10 @@ struct Occupant {
     sink: Box<dyn RequestSink>,
     /// Tokens already delivered to the sink (committed watermark).
     emitted: usize,
+    /// Paged mode only: this row's K/V pages in logical order — adopted
+    /// prefix pages first, then freshly allocated ones. Always empty in
+    /// packed mode.
+    pages: Vec<u32>,
 }
 
 impl Occupant {
@@ -352,7 +412,69 @@ impl RowSlot {
             first: req.first_token,
             sink,
             emitted: 0,
+            pages: Vec::new(),
         });
+    }
+
+    /// Paged admission: adopt cached prefix pages, then allocate the rest
+    /// of the prompt's pages. Adopted pages are already prefilled, so
+    /// `fed` starts at the adopted length — a multiple of `page_t`, at
+    /// most `prompt_len - 1` ([`PageAllocator::lookup_prefix`] clamps) —
+    /// and the row streams only the remaining prompt columns. A non-zero
+    /// `fed` also keeps the row out of `no_progress`, so a 100% shared
+    /// prefix re-runs *zero* batch-prefill segments (`tests/it_paged.rs`).
+    fn attach_pages(&mut self, alloc: &mut PageAllocator) -> Result<()> {
+        let Some(occ) = &mut self.0 else { return Ok(()) };
+        debug_assert!(occ.pages.is_empty() && occ.fed == 0);
+        if !occ.plan.alive() {
+            return Ok(()); // zero-budget: drained at admission, no pages
+        }
+        let bt = alloc.page_t();
+        occ.pages = alloc.lookup_prefix(&occ.plan.seq);
+        occ.fed = occ.pages.len() * bt;
+        let need = (occ.plan.seq.len() + bt - 1) / bt;
+        while occ.pages.len() < need {
+            occ.pages.push(alloc.alloc()?);
+        }
+        Ok(())
+    }
+
+    /// Paged decode growth: make sure the position this row writes next
+    /// step has a backing page. Drained rows replay a position they
+    /// already wrote (covered by construction) and rows that never wrote
+    /// (zero-budget) fall through to scratch, so only live rows grow.
+    fn ensure_page(&mut self, alloc: &mut PageAllocator) -> Result<()> {
+        if !self.live() {
+            return Ok(());
+        }
+        let occ = self.0.as_mut().expect("live implies occupied");
+        let pos = match occ.state() {
+            SlotState::Prefilling => occ.fed,
+            _ => occ.plan.seq.len() - 1,
+        };
+        let need = pos / alloc.page_t() + 1;
+        while occ.pages.len() < need {
+            occ.pages.push(alloc.alloc()?);
+        }
+        Ok(())
+    }
+
+    /// Paged harvest, run just before [`RowSlot::take_done`]: register the
+    /// drained row's fully prefilled prompt pages with the prefix cache
+    /// (registration retains them first, so they survive the release),
+    /// then release everything the row held.
+    fn harvest_pages(&mut self, alloc: &mut PageAllocator) {
+        if self.state() != SlotState::Drained {
+            return;
+        }
+        let occ = self.0.as_mut().expect("drained implies occupied");
+        let pages = std::mem::take(&mut occ.pages);
+        if occ.fed == occ.prompt_len {
+            alloc.register_prefix(&occ.plan.seq[..occ.prompt_len], &pages);
+        }
+        for &g in &pages {
+            alloc.release(g);
+        }
     }
 
     /// Flush newly committed tokens to the occupant's sink.
@@ -476,7 +598,10 @@ impl RowSlot {
 pub struct ServeSession<'e, 'rt> {
     eng: &'e mut Engine<'rt>,
     params: &'e ModelParams,
-    /// `decode_step` executions across every batch of this session.
+    /// `Some` iff the session runs [`KvMode::Paged`].
+    paged: Option<PagedPool>,
+    /// `decode_step` (or `paged_step`) executions across every batch of
+    /// this session.
     pub decode_steps: u64,
     /// Whole-batch prefill passes (one per static chunk; continuous mode
     /// pays one at start plus one per full-drain refill).
@@ -495,7 +620,28 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
         eng.rt.manifest.supports_decode(&eng.rt.backend)
     }
 
+    /// Whether the loaded artifacts additionally carry the paged decode
+    /// ABI (v2: `paged_scatter` / `paged_step` / `paged_logits` plus the
+    /// pool geometry) for this engine's backend.
+    pub fn paged_supported(eng: &Engine) -> bool {
+        eng.rt.manifest.supports_paged(&eng.rt.backend)
+    }
+
+    /// Auto-select the K/V layout: paged when the artifacts support it
+    /// (`LISA_PAGED=0` forces the packed v1 path), packed otherwise.
     pub fn new(eng: &'e mut Engine<'rt>, params: &'e ModelParams) -> Result<Self> {
+        let paged = Self::paged_supported(eng)
+            && std::env::var("LISA_PAGED").map_or(true, |v| v != "0");
+        Self::with_mode(eng, params, if paged { KvMode::Paged } else { KvMode::Packed })
+    }
+
+    /// Construct with an explicit K/V layout — parity suites pin
+    /// [`KvMode::Packed`] on v2 artifact dirs to get the v1 baseline.
+    pub fn with_mode(
+        eng: &'e mut Engine<'rt>,
+        params: &'e ModelParams,
+        mode: KvMode,
+    ) -> Result<Self> {
         ensure!(
             Self::supported(eng),
             "artifact dir '{}' carries no decode-ABI v{DECODE_ABI} segments for \
@@ -504,14 +650,50 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             eng.rt.manifest.dir.display(),
             eng.rt.backend
         );
+        let paged = match mode {
+            KvMode::Packed => None,
+            KvMode::Paged => {
+                ensure!(
+                    Self::paged_supported(eng),
+                    "artifact dir '{}' carries no paged decode-ABI v{PAGED_ABI} \
+                     segments for backend '{}' — re-export with \
+                     python/compile/aot.py",
+                    eng.rt.manifest.dir.display(),
+                    eng.rt.backend
+                );
+                let m = &eng.rt.manifest;
+                Some(PagedPool {
+                    alloc: PageAllocator::new(m.page_n, m.page_t),
+                    state: None,
+                    p: m.pages_per_row,
+                    rows: m.paged_state_rows(),
+                })
+            }
+        };
         Ok(ServeSession {
             eng,
             params,
+            paged,
             decode_steps: 0,
             batch_prefills: 0,
             streamed_prompt_tokens: 0,
             admitted: 0,
         })
+    }
+
+    /// The K/V layout this session runs on.
+    pub fn kv_mode(&self) -> KvMode {
+        if self.paged.is_some() {
+            KvMode::Paged
+        } else {
+            KvMode::Packed
+        }
+    }
+
+    /// Paged mode's allocator (refcount / prefix-cache observability);
+    /// `None` in packed mode.
+    pub fn page_allocator(&self) -> Option<&PageAllocator> {
+        self.paged.as_ref().map(|p| &p.alloc)
     }
 
     /// Serve every request with continuous batching: one device-resident
@@ -608,10 +790,14 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
         let m = self.eng.rt.manifest.clone();
         let (bsz, t_max, v) = (m.batch, m.seq, m.vocab);
         let state_shape = vec![bsz, m.decode_state_rows(), m.d_model];
+        let paged_shape = vec![m.paged_state_rows(), m.d_model];
         let logit1_shape = [bsz, 1, v];
 
         let mut slots: Vec<RowSlot> = (0..bsz).map(|_| RowSlot::default()).collect();
         let mut closed = false;
+        // packed mode's state is loop-local (rebuilt by every batch
+        // prefill); paged mode's pool lives in `self.paged` and persists
+        // across run_loop calls so cached prefix pages stay adoptable
         let mut state: Option<Act> = None;
         // decode-loop parameter operands, built once on first use and
         // served from the device cache across every step of the session
@@ -626,6 +812,9 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
                     if slot.live() {
                         break;
                     }
+                    if let Some(pool) = self.paged.as_mut() {
+                        slot.harvest_pages(&mut pool.alloc);
+                    }
                     slot.take_done();
                     if closed {
                         break;
@@ -633,6 +822,9 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
                     match src.poll(false) {
                         Feed::Admit(req, sink) => {
                             slot.admit(req, sink, t_max, eos);
+                            if let Some(pool) = self.paged.as_mut() {
+                                slot.attach_pages(&mut pool.alloc)?;
+                            }
                             self.admitted += 1;
                             // a zero-budget request drains instantly; the
                             // loop hands the row straight to the next one
@@ -665,6 +857,9 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
                 match src.poll(true) {
                     Feed::Admit(req, sink) => {
                         slots[0].admit(req, sink, t_max, eos);
+                        if let Some(pool) = self.paged.as_mut() {
+                            slots[0].attach_pages(&mut pool.alloc)?;
+                        }
                         self.admitted += 1;
                     }
                     Feed::Pending => {}
@@ -674,9 +869,12 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             }
 
             // ---- prefill: batched while no row holds in-flight K/V;
-            // otherwise admitted rows stream through decode_step below
+            // otherwise admitted rows stream through decode_step below.
+            // A paged row that adopted cached prefix pages counts as
+            // in-flight (`fed > 0`), so it streams its remaining prompt
+            // instead of re-running the prefill segments.
             if slots.iter().all(RowSlot::no_progress) {
-                state = Some(self.batch_prefill(&mut slots, pad)?);
+                state = self.batch_prefill(&mut slots, pad)?;
                 continue; // first tokens may have drained rows: re-admit
             }
 
@@ -692,6 +890,13 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             }
             let (ep, blocks, ho) = dec_ops.as_ref().expect("just built");
 
+            // paged: grow each live row's page list to cover the position
+            // it writes this step (one page at a time at page boundaries)
+            if let Some(pool) = self.paged.as_mut() {
+                for slot in slots.iter_mut() {
+                    slot.ensure_page(&mut pool.alloc)?;
+                }
+            }
             let (mut tokc, mut pidxc) =
                 (Vec::with_capacity(bsz), Vec::with_capacity(bsz));
             let mut needs_logits = false;
@@ -706,29 +911,51 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             }
             let tok = HostTensorI32::from_vec(&[bsz, 1], tokc);
             let pidx = HostTensorI32::from_vec(&[bsz, 1], pidxc);
-            let st = state.as_ref().expect("live non-fresh rows imply a prefilled state");
+            // paged: the `[B, P]` table is a per-step i32 input, uploaded
+            // alongside tok/pidx (three small uploads instead of two)
+            let table = self.paged.as_ref().map(|pool| page_table(&slots, bsz, pool.p));
+            let st = match self.paged.as_mut() {
+                Some(pool) => pool
+                    .state
+                    .take()
+                    .expect("live non-fresh rows imply a prefilled pool"),
+                None => state
+                    .take()
+                    .expect("live non-fresh rows imply a prefilled state"),
+            };
             let state_next = {
-                let mut ops: Vec<Operand> =
-                    vec![Operand::I32(&tok), Operand::I32(&pidx), st.operand()];
+                let mut ops: Vec<Operand> = vec![Operand::I32(&tok), Operand::I32(&pidx)];
+                if let Some(t) = &table {
+                    ops.push(Operand::I32(t));
+                }
+                ops.push(st.operand());
                 ops.push(ep[0].operand());
                 ops.push(ep[1].operand());
                 for bo in blocks {
                     ops.extend(bo.iter().map(ParamOp::operand));
                 }
-                self.eng.run_chain_act(self.eng.ids.decode_step, &ops, &state_shape)?
+                let (seg, shape) = if table.is_some() {
+                    (self.eng.ids.paged_step, &paged_shape)
+                } else {
+                    (self.eng.ids.decode_step, &state_shape)
+                };
+                self.eng.run_chain_act(seg, &ops, shape)?
             };
-            state = Some(state_next);
+            match self.paged.as_mut() {
+                Some(pool) => pool.state = Some(state_next),
+                None => state = Some(state_next),
+            }
             self.decode_steps += 1;
             // the [B, 1, V] download happens only when some row reads it —
             // a step that only streams mid-prompt columns skips it
             let lg = if needs_logits {
-                let st = state.as_ref().expect("just stepped");
+                let (st, seg) = match self.paged.as_ref() {
+                    Some(pool) => (pool.state.as_ref(), self.eng.ids.paged_logits),
+                    None => (state.as_ref(), self.eng.ids.decode_logits),
+                };
+                let st = st.expect("just stepped");
                 let ops = [st.operand(), ho[0].operand(), ho[1].operand()];
-                Some(
-                    self.eng
-                        .run_chain_act(self.eng.ids.decode_logits, &ops, &logit1_shape)?
-                        .into_host()?,
-                )
+                Some(self.eng.run_chain_act(seg, &ops, &logit1_shape)?.into_host()?)
             } else {
                 None
             };
@@ -738,17 +965,25 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
         }
 
         // every row was harvested by the admission pass of the final
-        // iteration — only the device state is left to account for
-        self.eng.meter.set(MemCategory::Activations, 0);
+        // iteration. Packed state dies with the loop; the paged pool (and
+        // its cached prefix pages) stays resident for the next burst.
+        let resident = self
+            .paged
+            .as_ref()
+            .and_then(|p| p.state.as_ref())
+            .map_or(0, |s| s.bytes() as u64);
+        self.eng.meter.set(MemCategory::Activations, resident);
         Ok(())
     }
 
     /// Batched prefill of every occupied row's current sequence:
-    /// `embed_fwd -> (prefill_kv + block_fwd)^L -> [head_logits] ->
-    /// pack_state`, returning the packed device-resident state. The
+    /// `embed_fwd -> (prefill_kv + block_fwd)^L -> [head_logits]`, then
+    /// either `pack_state` (packed mode — the state is returned) or
+    /// `paged_scatter` (paged mode — the per-layer K/V lands in each
+    /// row's pages inside `self.paged` and `None` is returned). The
     /// `head_logits` call (and its `[B, T, V]` download) is skipped when
     /// no row consumes it.
-    fn batch_prefill(&mut self, slots: &mut [RowSlot], pad: i32) -> Result<Act> {
+    fn batch_prefill(&mut self, slots: &mut [RowSlot], pad: i32) -> Result<Option<Act>> {
         let m = self.eng.rt.manifest.clone();
         let (bsz, t_max, d, v) = (m.batch, m.seq, m.d_model, m.vocab);
         let mut tokens = vec![pad; bsz * t_max];
@@ -800,16 +1035,50 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
         } else {
             None
         };
-        let state = {
-            let kv_ops: Vec<Operand> = kvs.iter().map(Act::operand).collect();
-            self.eng.run_chain_act(ids.pack_state, &kv_ops, &state_shape)?
+        let state = if self.paged.is_some() {
+            // paged: scatter each layer's [B, 2T, D] K/V into the rows'
+            // pages. Rows without a page for a column (vacant rows, tails
+            // past a row's last page) scatter onto scratch — garbage by
+            // contract, masked out of every read. The previous pool state
+            // (zeros before the first prefill) rides through unchanged
+            // outside the written rows, so cached pages survive.
+            let (p, rows, prev) = {
+                let pool = self.paged.as_mut().expect("paged mode");
+                let prev = match pool.state.take() {
+                    Some(st) => st,
+                    None => Act::Host(HostTensor::from_vec(
+                        &[pool.rows, d],
+                        vec![0.0; pool.rows * d],
+                    )),
+                };
+                (pool.p, pool.rows, prev)
+            };
+            let table = page_table(slots, bsz, p);
+            let st = {
+                let mut ops: Vec<Operand> = vec![prev.operand(), Operand::I32(&table)];
+                ops.extend(kvs.iter().map(Act::operand));
+                self.eng.run_chain_act(ids.paged_scatter, &ops, &[rows, d])?
+            };
+            self.eng
+                .meter
+                .set(MemCategory::Activations, kv_bytes + st.bytes() as u64);
+            drop(kvs);
+            self.eng.meter.set(MemCategory::Activations, st.bytes() as u64);
+            self.paged.as_mut().expect("paged mode").state = Some(st);
+            None
+        } else {
+            let state = {
+                let kv_ops: Vec<Operand> = kvs.iter().map(Act::operand).collect();
+                self.eng.run_chain_act(ids.pack_state, &kv_ops, &state_shape)?
+            };
+            // packing peak: per-layer buffers and the packed state coexist
+            self.eng
+                .meter
+                .set(MemCategory::Activations, kv_bytes + state.bytes() as u64);
+            drop(kvs);
+            self.eng.meter.set(MemCategory::Activations, state.bytes() as u64);
+            Some(state)
         };
-        // packing peak: the per-layer buffers and the packed state coexist
-        self.eng
-            .meter
-            .set(MemCategory::Activations, kv_bytes + state.bytes() as u64);
-        drop(kvs);
-        self.eng.meter.set(MemCategory::Activations, state.bytes() as u64);
         self.batch_prefills += 1;
 
         // first token per prefilled row, from the logits at position len-1
@@ -1143,6 +1412,156 @@ mod tests {
         let c = log.done.as_ref().unwrap();
         assert!(c.tokens.is_empty());
         assert_eq!(c.stop, StopReason::MaxNew);
+    }
+
+    // ---- non-StopSeq drains flush the stop-sequence holdback tail -------
+
+    #[test]
+    fn window_full_drain_flushes_the_held_back_stop_tail() {
+        // cap 5, prompt 3: room for exactly 2 generated tokens. The
+        // second one opens a partial [8, 9] match at the same moment the
+        // window fills — the held token must flush with the WindowFull
+        // drain, not be swallowed as if the stop had matched.
+        let mut r = RowPlan::with_stops(vec![1, 5, 3], 5, 10, 2, vec![vec![8, 9]]);
+        r.push(7);
+        assert_eq!(r.committed(), 1);
+        r.push(8); // partial match AND window full
+        assert!(!r.alive());
+        assert_eq!(r.committed(), 2, "drain flushes the held tail");
+        let c = r.into_completion();
+        assert_eq!(c.tokens, vec![7, 8]);
+        assert_eq!(c.stop, StopReason::WindowFull);
+    }
+
+    #[test]
+    fn slot_flushes_held_back_tail_when_the_window_fills() {
+        let mut s = RowSlot::default();
+        let (sink, log) = log_sink();
+        let r = req(vec![1, 5], 10).with_stop(vec![vec![8, 9]]);
+        s.admit(r, sink, 5, EOS); // cap 5: room for 3 generated tokens
+        s.consume(Some(&row_for(4, 16)));
+        s.consume(Some(&row_for(7, 16))); // prompt fed: first token 7
+        s.consume(Some(&row_for(4, 16)));
+        assert_eq!(log.borrow().toks, vec![7, 4]);
+        s.consume(Some(&row_for(8, 16))); // opens [8, 9]; window fills
+        assert_eq!(s.state(), SlotState::Drained);
+        assert!(s.take_done());
+        let log = log.borrow();
+        assert_eq!(log.toks, vec![7, 4, 8], "held 8 streamed on drain");
+        let c = log.done.as_ref().unwrap();
+        assert_eq!(c.tokens, vec![7, 4, 8]);
+        assert_eq!(c.stop, StopReason::WindowFull);
+    }
+
+    #[test]
+    fn slot_flushes_held_back_tail_when_draining_for_max_new() {
+        let mut s = RowSlot::default();
+        let (sink, log) = log_sink();
+        let r = req(vec![1], 2).with_stop(vec![vec![8, 9]]);
+        s.admit(r, sink, 64, EOS);
+        s.consume(Some(&row_for(5, 16))); // first token
+        assert_eq!(log.borrow().toks, vec![5]);
+        s.consume(Some(&row_for(8, 16))); // partial match + budget reached
+        assert_eq!(s.state(), SlotState::Drained);
+        assert!(s.take_done());
+        let log = log.borrow();
+        assert_eq!(log.toks, vec![5, 8], "tail flushed, not swallowed");
+        let c = log.done.as_ref().unwrap();
+        assert_eq!(c.tokens, vec![5, 8]);
+        assert_eq!(c.stop, StopReason::MaxNew);
+    }
+
+    // ---- paged mode: page attachment, growth, harvest -------------------
+
+    #[test]
+    fn attach_pages_allocates_prompt_pages_and_streams_all_when_cold() {
+        let mut a = PageAllocator::new(13, 2);
+        let mut s = RowSlot::default();
+        s.admit(req(vec![1, 2, 3, 4, 5], 1), log_sink().0, 16, EOS);
+        s.attach_pages(&mut a).unwrap();
+        let occ = s.0.as_ref().unwrap();
+        assert_eq!(occ.pages.len(), 3, "ceil(5 / 2) pages at admission");
+        assert_eq!(occ.fed, 0, "cold cache: stream the whole prompt");
+        assert_eq!(a.outstanding(), 3);
+    }
+
+    #[test]
+    fn drained_row_registers_its_prefix_and_a_twin_adopts_it() {
+        let mut a = PageAllocator::new(13, 2);
+        let prompt = vec![1, 2, 3, 4, 5];
+
+        // donor: streams its prompt, emits one token, drains, harvests
+        let mut s = RowSlot::default();
+        s.admit(req(prompt.clone(), 1), log_sink().0, 16, EOS);
+        s.attach_pages(&mut a).unwrap();
+        let donor_pages = s.0.as_ref().unwrap().pages.clone();
+        for _ in 0..5 {
+            s.ensure_page(&mut a).unwrap();
+            s.consume(Some(&row_for(7, 16)));
+        }
+        assert_eq!(s.state(), SlotState::Drained); // max_new 1
+        s.harvest_pages(&mut a);
+        assert!(s.take_done());
+        assert_eq!(a.n_cached(), 2, "both full prompt pages cached");
+        assert_eq!(a.outstanding(), 0, "donor's refs all released");
+
+        // twin: adopts the 2 full pages, resumes at the shared boundary
+        let mut s = RowSlot::default();
+        s.admit(req(prompt, 1), log_sink().0, 16, EOS);
+        s.attach_pages(&mut a).unwrap();
+        let occ = s.0.as_ref().unwrap();
+        assert_eq!(occ.fed, 4, "2 adopted pages x page_t 2");
+        assert_eq!(occ.pages[..2], donor_pages[..2]);
+        assert_eq!(s.state(), SlotState::Prefilling);
+        assert_eq!(s.step_input(PAD), (5, 4), "streams only the last token");
+        assert!(!s.no_progress(), "adopters never join a batch prefill");
+        assert_eq!(a.prefix_hits, 1);
+        assert_eq!(a.prefix_pages_served, 2);
+    }
+
+    #[test]
+    fn zero_budget_rows_take_no_pages_and_register_nothing() {
+        let mut a = PageAllocator::new(13, 2);
+        let mut s = RowSlot::default();
+        s.admit(req(vec![1, 2, 3], 0), log_sink().0, 16, EOS);
+        s.attach_pages(&mut a).unwrap();
+        assert_eq!(s.state(), SlotState::Drained);
+        assert_eq!(a.outstanding(), 0, "no pages for an unprefilled row");
+        s.harvest_pages(&mut a);
+        assert!(s.take_done());
+        assert_eq!(a.n_cached(), 0, "unprefilled prompts are never cached");
+    }
+
+    #[test]
+    fn ensure_page_grows_exactly_at_page_boundaries() {
+        let mut a = PageAllocator::new(13, 2);
+        let mut s = RowSlot::default();
+        s.admit(req(vec![1, 2], 6), log_sink().0, 64, EOS);
+        s.attach_pages(&mut a).unwrap();
+        assert_eq!(s.0.as_ref().unwrap().pages.len(), 1);
+        s.ensure_page(&mut a).unwrap(); // writes position 0: covered
+        s.consume(Some(&row_for(7, 16)));
+        s.ensure_page(&mut a).unwrap(); // position 1: covered
+        s.consume(Some(&row_for(7, 16))); // prompt fed, first token pushed
+        s.ensure_page(&mut a).unwrap(); // position 2 next: page boundary
+        assert_eq!(s.0.as_ref().unwrap().pages.len(), 2);
+        s.consume(Some(&row_for(7, 16)));
+        s.ensure_page(&mut a).unwrap(); // position 3: same page
+        assert_eq!(s.0.as_ref().unwrap().pages.len(), 2);
+    }
+
+    #[test]
+    fn page_table_maps_pages_in_logical_order_and_scratch_elsewhere() {
+        let mut a = PageAllocator::new(13, 2);
+        let mut slots = vec![RowSlot::default(), RowSlot::default()];
+        slots[1].admit(req(vec![1, 2, 3], 1), log_sink().0, 16, EOS);
+        slots[1].attach_pages(&mut a).unwrap();
+        let pages = slots[1].0.as_ref().unwrap().pages.clone();
+        let t = page_table(&slots, 2, 3);
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.data[..3], [0, 0, 0], "vacant row: all scratch");
+        assert_eq!(t.data[3..5], [pages[0] as i32, pages[1] as i32]);
+        assert_eq!(t.data[5], 0, "beyond the row's pages: scratch");
     }
 
     #[test]

@@ -303,6 +303,11 @@ pub(crate) struct SegIds {
     pub pack_state: SegId,
     pub decode_step: SegId,
     pub decode_logits: SegId,
+    // serving: paged K/V cache (decode ABI v2, DESIGN.md §12); same
+    // lazy-compile contract, so v1 artifact dirs still load
+    pub paged_scatter: SegId,
+    pub paged_step: SegId,
+    pub paged_logits: SegId,
 }
 
 /// The engine: schedules segment executables over the runtime.
@@ -351,6 +356,9 @@ impl<'rt> Engine<'rt> {
                 pack_state: rt.seg_id("pack_state"),
                 decode_step: rt.seg_id("decode_step"),
                 decode_logits: rt.seg_id("decode_logits"),
+                paged_scatter: rt.seg_id("paged_scatter"),
+                paged_step: rt.seg_id("paged_step"),
+                paged_logits: rt.seg_id("paged_logits"),
             },
         }
     }

@@ -99,11 +99,18 @@ pub struct Manifest {
     pub block_params: Vec<(String, Vec<usize>)>,
     /// LoRA adapter shapes in ABI order (aq, bq, ..., a2, b2).
     pub lora_params: Vec<(String, Vec<usize>)>,
-    /// Decode-ABI version the exporter stamped (DESIGN.md §9). `0` —
+    /// Decode-ABI version the exporter stamped (DESIGN.md §9/§12). `0` —
     /// including manifests from before the field existed — means the
     /// artifact dir carries no KV-cached decode segments; the serving
-    /// path then falls back to the legacy full-forward loop.
+    /// path then falls back to the legacy full-forward loop. `2` adds the
+    /// paged-cache segments on top of the complete v1 set.
     pub decode_abi: u64,
+    /// Paged-cache geometry (ABI v2, DESIGN.md §12): token slots per K/V
+    /// page, page-table width per row, and pool pages per layer-half.
+    /// All zero for v0/v1 manifests.
+    pub page_t: usize,
+    pub pages_per_row: usize,
+    pub page_n: usize,
     /// key = "<segment>.<backend>"
     pub segments: BTreeMap<String, SegmentSig>,
 }
@@ -112,8 +119,23 @@ pub struct Manifest {
 pub const DECODE_SEGMENTS: [&str; 4] =
     ["prefill_kv", "pack_state", "decode_step", "decode_logits"];
 
-/// Current decode-ABI version the engine implements.
+/// Oldest decode-ABI version the engine implements.
 pub const DECODE_ABI: u64 = 1;
+
+/// Segment names decode ABI v2 adds (paged K/V cache, DESIGN.md §12).
+pub const PAGED_SEGMENTS: [&str; 3] = ["paged_scatter", "paged_step", "paged_logits"];
+
+/// Newest decode-ABI version the engine implements.
+pub const PAGED_ABI: u64 = 2;
+
+/// One field of the optional `"paged"` geometry object (ABI v2); absent —
+/// every v0/v1 manifest — reads as 0, which `supports_paged` rejects.
+fn paged_us(j: &Json, k: &str) -> usize {
+    j.get("paged")
+        .and_then(|p| p.get(k))
+        .and_then(|v| v.as_usize())
+        .unwrap_or(0)
+}
 
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
@@ -217,6 +239,9 @@ impl Manifest {
                 .get("decode_abi")
                 .and_then(|v| v.as_usize())
                 .unwrap_or(0) as u64,
+            page_t: paged_us(&j, "page_t"),
+            pages_per_row: paged_us(&j, "pages_per_row"),
+            page_n: paged_us(&j, "page_n"),
             segments,
         })
     }
@@ -224,10 +249,27 @@ impl Manifest {
     /// Whether this artifact dir carries the KV-cached decode segments the
     /// engine's `DecodeSession` schedules (ABI-versioned; a newer or
     /// missing ABI, or any missing segment, disables the cached path —
-    /// the caller falls back to legacy full-forward greedy).
+    /// the caller falls back to legacy full-forward greedy). A v2 (paged)
+    /// manifest still supports the v1 schedule: the paged set is a strict
+    /// superset and the packed segments remain the parity baseline.
     pub fn supports_decode(&self, backend: &str) -> bool {
-        self.decode_abi == DECODE_ABI
+        (DECODE_ABI..=PAGED_ABI).contains(&self.decode_abi)
             && DECODE_SEGMENTS
+                .iter()
+                .all(|n| self.segments.contains_key(&format!("{n}.{backend}")))
+    }
+
+    /// Whether this artifact dir additionally carries the paged-cache
+    /// segments and geometry of decode ABI v2 (DESIGN.md §12). Requires
+    /// `supports_decode` too — batch prefill reuses the v1 prompt
+    /// pipeline verbatim.
+    pub fn supports_paged(&self, backend: &str) -> bool {
+        self.decode_abi == PAGED_ABI
+            && self.page_t > 0
+            && self.pages_per_row > 0
+            && self.page_n > 0
+            && self.supports_decode(backend)
+            && PAGED_SEGMENTS
                 .iter()
                 .all(|n| self.segments.contains_key(&format!("{n}.{backend}")))
     }
@@ -235,6 +277,13 @@ impl Manifest {
     /// Rows of the packed decode state `[B, L*2T+1, D]` (DESIGN.md §9).
     pub fn decode_state_rows(&self) -> usize {
         self.n_layers * 2 * self.seq + 1
+    }
+
+    /// Rows of the paged decode state `[L*2*N*page_t + B, D]`
+    /// (DESIGN.md §12): one K and one V pool of `page_n` pages per layer
+    /// plus the B trailing hidden-state rows.
+    pub fn paged_state_rows(&self) -> usize {
+        self.n_layers * 2 * self.page_n * self.page_t + self.batch
     }
 
     pub fn segment(&self, name: &str, backend: &str) -> Result<&SegmentSig> {
@@ -330,6 +379,71 @@ mod tests {
         assert!(m.supports_decode("jnp"));
         // the other backend has no decode segments
         assert!(!m.supports_decode("pallas"));
+        // a v1 manifest never claims the paged path
+        assert!(!m.supports_paged("jnp"));
+        assert_eq!(m.page_t, 0);
+    }
+
+    #[test]
+    fn paged_abi_gates_the_paged_path_and_v1_still_loads() {
+        let dir = std::env::temp_dir().join("lisa_manifest_paged_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let seg = |name: &str| {
+            format!(
+                r#""{name}.jnp": {{"file": "{name}.jnp.hlo.txt",
+                    "operands": [{{"shape": [1, 4, 8], "dtype": "float32"}}],
+                    "outputs": [{{"shape": [1, 4, 8], "dtype": "float32"}}],
+                    "tuple_root": false}},"#
+            )
+        };
+        let extra: String = super::DECODE_SEGMENTS
+            .iter()
+            .chain(super::PAGED_SEGMENTS.iter())
+            .map(|n| seg(n))
+            .collect();
+        let text = MINI
+            .replace(
+                "\"segments\": {",
+                r#""decode_abi": 2,
+                   "paged": {"page_t": 2, "pages_per_row": 2, "page_n": 5,
+                             "state_rows": 41},
+                   "segments": {"#,
+            )
+            .replace("\"segments\": {", &format!("\"segments\": {{{extra}"));
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.decode_abi, 2);
+        assert_eq!((m.page_t, m.pages_per_row, m.page_n), (2, 2, 5));
+        // a v2 dir serves BOTH schedules: paged, and packed-v1 as the
+        // parity baseline
+        assert!(m.supports_paged("jnp"));
+        assert!(m.supports_decode("jnp"));
+        assert!(!m.supports_paged("pallas"));
+        // L*2*N*page_t + B
+        assert_eq!(m.paged_state_rows(), 2 * 2 * 5 * 2 + 1);
+
+        // decode_abi 2 without the paged segment set (partial export)
+        // falls back to v1-only
+        let text2 = MINI.replace(
+            "\"segments\": {",
+            &format!(
+                r#""decode_abi": 2,
+                   "paged": {{"page_t": 2, "pages_per_row": 2, "page_n": 5}},
+                   "segments": {{{}"#,
+                super::DECODE_SEGMENTS.iter().map(|n| seg(n)).collect::<String>()
+            ),
+        );
+        std::fs::write(dir.join("manifest.json"), text2).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.supports_paged("jnp"));
+        assert!(m.supports_decode("jnp"));
+
+        // a future ABI the engine doesn't implement disables everything
+        let text3 = MINI.replace("\"segments\": {", r#""decode_abi": 3, "segments": {"#);
+        std::fs::write(dir.join("manifest.json"), text3).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.supports_decode("jnp"));
+        assert!(!m.supports_paged("jnp"));
     }
 
     #[test]

@@ -11,7 +11,9 @@ pub mod client;
 pub mod device_cache;
 pub mod tensor;
 
-pub use artifacts::{DType, Manifest, SegmentSig, TensorSig, DECODE_ABI, DECODE_SEGMENTS};
+pub use artifacts::{
+    DType, Manifest, SegmentSig, TensorSig, DECODE_ABI, DECODE_SEGMENTS, PAGED_ABI, PAGED_SEGMENTS,
+};
 pub use client::{ChainVal, ExecStats, Operand, Runtime, SegId, Segment};
 pub use device_cache::{CacheStats, DeviceCache};
 pub use tensor::{numel, DeviceTensor, HostTensor, HostTensorI32};

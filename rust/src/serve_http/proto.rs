@@ -21,6 +21,11 @@ use crate::util::json::Json;
 /// Request bodies beyond this are refused with 413 before reading them.
 pub const MAX_BODY: usize = 1 << 20;
 
+/// Request line + headers beyond this are refused with 400 — the reader
+/// never buffers more head bytes than this, so a hostile peer can't grow
+/// a header line without bound.
+pub const MAX_HEAD: usize = 16 << 10;
+
 /// Stop sequences per request / tokens per stop sequence are capped so a
 /// hostile request can't turn the per-token suffix scan quadratic.
 pub const MAX_STOP_SEQS: usize = 8;
@@ -41,8 +46,11 @@ pub struct HttpRequest {
 pub fn read_request<R: BufRead>(
     r: &mut R,
 ) -> std::result::Result<Option<HttpRequest>, (u16, String)> {
+    // the whole head reads through a byte cap: a header line can never
+    // grow the line buffer past MAX_HEAD no matter what the peer sends
+    let mut head = r.by_ref().take(MAX_HEAD as u64);
     let mut line = String::new();
-    match r.read_line(&mut line) {
+    match head.read_line(&mut line) {
         Ok(0) => return Ok(None),
         Ok(_) => {}
         Err(_) => return Ok(None), // reset/timeout before a request: drop quietly
@@ -57,28 +65,50 @@ pub fn read_request<R: BufRead>(
     let mut headers = BTreeMap::new();
     loop {
         let mut h = String::new();
-        match r.read_line(&mut h) {
+        match head.read_line(&mut h) {
             Ok(0) => return Err((400, "connection closed inside headers".to_string())),
             Ok(_) => {}
             Err(e) => return Err((400, format!("reading headers: {e}"))),
+        }
+        if !h.ends_with('\n') && head.limit() == 0 {
+            return Err((400, format!("head exceeds the {MAX_HEAD}-byte cap")));
         }
         let t = h.trim_end();
         if t.is_empty() {
             break;
         }
         if let Some((k, v)) = t.split_once(':') {
-            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+            let k = k.trim().to_ascii_lowercase();
+            // a duplicated Content-Length is a request-smuggling staple:
+            // never pick one silently (RFC 9112 §6.3 says reject)
+            if headers.insert(k.clone(), v.trim().to_string()).is_some()
+                && k == "content-length"
+            {
+                return Err((400, "duplicate Content-Length header".to_string()));
+            }
         }
     }
+    drop(head);
+    // strict digit-only parse: `parse::<usize>` alone would admit a
+    // leading `+`, and the value must be vetted *before* it sizes any
+    // buffer — over-cap (or usize-overflowing) lengths 413 right here
     let len: usize = match headers.get("content-length") {
-        Some(v) => v
-            .parse()
-            .map_err(|_| (400, format!("bad Content-Length {v:?}")))?,
+        Some(v) => {
+            if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit()) {
+                return Err((400, format!("bad Content-Length {v:?}")));
+            }
+            match v.parse::<usize>() {
+                Ok(n) if n <= MAX_BODY => n,
+                _ => {
+                    return Err((
+                        413,
+                        format!("body of {v} bytes exceeds the {MAX_BODY}-byte cap"),
+                    ))
+                }
+            }
+        }
         None => 0,
     };
-    if len > MAX_BODY {
-        return Err((413, format!("body of {len} bytes exceeds the {MAX_BODY}-byte cap")));
-    }
     let mut body = vec![0u8; len];
     if len > 0 {
         r.read_exact(&mut body)
@@ -509,6 +539,50 @@ mod tests {
         // oversized body: 413 before the body is read
         let raw = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
         assert_eq!(read_request(&mut BufReader::new(raw.as_bytes())).unwrap_err().0, 413);
+    }
+
+    fn read_err(raw: &str) -> (u16, String) {
+        read_request(&mut BufReader::new(raw.as_bytes())).unwrap_err()
+    }
+
+    #[test]
+    fn content_length_must_be_a_single_plain_digit_string() {
+        // `parse::<usize>` alone would accept the leading `+`
+        for bad in ["+2", "-2", "2 2", "0x10", "2,2", "", "two"] {
+            let raw = format!("POST / HTTP/1.1\r\nContent-Length: {bad}\r\n\r\nhi");
+            let (code, msg) = read_err(&raw);
+            assert_eq!(code, 400, "Content-Length {bad:?} -> {msg}");
+            assert!(msg.contains("Content-Length"), "{msg}");
+        }
+        // duplicate headers must never pick one silently, even when equal
+        for dup in ["2", "3"] {
+            let raw = format!(
+                "POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: {dup}\r\n\r\nhi"
+            );
+            let (code, msg) = read_err(&raw);
+            assert_eq!(code, 400, "{msg}");
+            assert!(msg.contains("duplicate"), "{msg}");
+        }
+        // a value that overflows usize is over-cap, not a panic: 413
+        let raw = "POST / HTTP/1.1\r\nContent-Length: 99999999999999999999999\r\n\r\n";
+        assert_eq!(read_err(raw).0, 413);
+        // other duplicated headers stay legal (last one wins)
+        let raw = b"GET / HTTP/1.1\r\nX-A: 1\r\nX-A: 2\r\n\r\n";
+        let req = read_request(&mut BufReader::new(&raw[..])).unwrap().unwrap();
+        assert_eq!(req.headers.get("x-a").map(String::as_str), Some("2"));
+    }
+
+    #[test]
+    fn head_larger_than_the_cap_is_rejected_not_buffered() {
+        // one giant header line: the reader must stop at MAX_HEAD rather
+        // than grow its line buffer to match the peer's appetite
+        let raw = format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(2 * MAX_HEAD));
+        let (code, msg) = read_err(&raw);
+        assert_eq!(code, 400, "{msg}");
+        assert!(msg.contains("cap"), "{msg}");
+        // a head just under the cap still parses
+        let raw = format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(1024));
+        assert!(read_request(&mut BufReader::new(raw.as_bytes())).unwrap().is_some());
     }
 
     #[test]

@@ -20,7 +20,7 @@ use std::path::{Path, PathBuf};
 
 use lisa::data::tokenizer::{EOS, PAD};
 use lisa::data::{corpus, encode_sft, DataLoader, Tokenizer};
-use lisa::engine::{Completion, DecodeSession, Engine, StopReason};
+use lisa::engine::{Completion, DecodeSession, Engine, KvMode, StopReason};
 use lisa::eval::generate;
 use lisa::model::{checkpoint, ModelParams};
 use lisa::runtime::Runtime;
@@ -144,18 +144,21 @@ fn one_decode_step_per_token_and_zero_weight_uploads_when_warm() {
     let enc: Vec<Vec<i32>> = all.iter().map(|p| generate::encode_prompt(&tok, p)).collect();
     let max_new = 6;
 
+    // pinned to the packed v1 layout: this test's upload arithmetic
+    // (tok+pidx only) is the v1 contract — the paged path adds a page
+    // table per step and has its own accounting suite (it_paged.rs)
     let mut eng = Engine::new(&rt);
     assert!(eng.device_flow, "device flow must be the default");
     // cold pass: compiles executables, uploads every weight tensor once
     {
-        let mut sess = DecodeSession::new(&mut eng, &params).unwrap();
+        let mut sess = DecodeSession::with_mode(&mut eng, &params, KvMode::Packed).unwrap();
         sess.greedy(&enc, max_new, EOS, PAD).unwrap();
     }
     let cold = eng.device_cache_stats();
 
     rt.reset_stats();
     let (outs, steps) = {
-        let mut sess = DecodeSession::new(&mut eng, &params).unwrap();
+        let mut sess = DecodeSession::with_mode(&mut eng, &params, KvMode::Packed).unwrap();
         let outs = sess.greedy(&enc, max_new, EOS, PAD).unwrap();
         (outs, sess.decode_steps())
     };

@@ -27,7 +27,7 @@ use lisa::engine::{
 use lisa::eval::generate;
 use lisa::model::ModelParams;
 use lisa::runtime::Runtime;
-use lisa::serve_http::proto::client;
+use lisa::serve_http::proto::{self, client};
 use lisa::serve_http::{ChannelSource, HttpFrontend, ServeConfig, ServerState};
 use lisa::util::json::Json;
 use lisa::util::rng::Rng;
@@ -258,6 +258,73 @@ fn health_metrics_and_error_paths_speak_http() {
     assert_eq!(lost.status, 404);
     let method = client::post(&addr, "/metrics", "{}").unwrap();
     assert_eq!(method.status, 404); // POST routes only to /v1/completions
+
+    state.request_shutdown();
+    h.join().unwrap();
+}
+
+/// Hand-written wire bytes: `client::post` always emits one correct
+/// `Content-Length`, so the framing taxonomy below needs raw writes.
+/// Requests stop at the blank line (no body bytes) so a rejecting server
+/// never leaves unread data behind — the close is a clean FIN, not RST.
+fn raw_status(addr: &str, raw: &str) -> (u16, String) {
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(raw.as_bytes()).unwrap();
+    s.flush().unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let status = buf
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in {buf:?}"));
+    (status, buf)
+}
+
+#[test]
+fn content_length_taxonomy_over_real_sockets() {
+    let (addr, state, h) = start_stub(ServeConfig::default());
+
+    // non-numeric, signed, spaced, hex: 400 — never leniently parsed
+    for bad in ["+2", "-2", "2 2", "0x10", "two"] {
+        let raw = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: lisa\r\nContent-Length: {bad}\r\n\r\n"
+        );
+        let (code, body) = raw_status(&addr, &raw);
+        assert_eq!(code, 400, "Content-Length {bad:?}:\n{body}");
+        assert!(body.contains("Content-Length"), "{body}");
+    }
+
+    // duplicated Content-Length: 400, even when the copies agree
+    for dup in ["2", "3"] {
+        let raw = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: lisa\r\n\
+             Content-Length: 2\r\nContent-Length: {dup}\r\n\r\n"
+        );
+        let (code, body) = raw_status(&addr, &raw);
+        assert_eq!(code, 400, "{body}");
+        assert!(body.contains("duplicate"), "{body}");
+    }
+
+    // over-cap and usize-overflowing lengths: 413 before any buffer is
+    // sized — note no body bytes follow, yet the server answers at once
+    for big in [format!("{}", proto::MAX_BODY + 1), "9".repeat(24)] {
+        let raw = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: lisa\r\nContent-Length: {big}\r\n\r\n"
+        );
+        let (code, body) = raw_status(&addr, &raw);
+        assert_eq!(code, 413, "Content-Length {big}:\n{body}");
+    }
+
+    // every rejection is visible in the status metrics, and the server
+    // is still healthy for well-formed traffic afterwards
+    assert_eq!(state.metrics.status_count(400), 7);
+    assert_eq!(state.metrics.status_count(413), 2);
+    let (code, toks) = post_tokens(&addr, r#"{"tokens": [2, 4], "max_new": 3, "seed": 0}"#);
+    assert_eq!((code, toks.len()), (200, 3));
 
     state.request_shutdown();
     h.join().unwrap();

@@ -1,0 +1,224 @@
+//! Paged K/V conformance suite (decode ABI v2, DESIGN.md §12) — gated on
+//! artifacts that carry the paged segment set, like `it_serve.rs` is
+//! gated on the v1 decode ABI:
+//!
+//! * **layout parity** — the paged schedule must serve the PR 5 mixed
+//!   continuous queue token-for-token identical to the packed-v1
+//!   schedule: the K/V layout is an execution detail, never a semantic;
+//! * **prefix reuse saves prefill** — a second request sharing a 100%
+//!   prompt prefix must adopt the drained donor's cached pages and
+//!   execute **zero** prefill segments (asserted via `ExecStats`): the
+//!   un-paged remainder streams through `paged_step` columns instead;
+//! * **no page leaks** — after a full queue drain every page is back in
+//!   the allocator: rows hold nothing, and free + cached accounts for
+//!   the whole pool minus the pinned scratch page.
+//!
+//! Parity caveat (same class as it_serve.rs): `paged_step` gathers page
+//! rows where `decode_step` slices a packed window — the attention sums
+//! run in a different order, so logits agree to float tolerance, not
+//! bit-for-bit (python/tests/test_decode.py pins the tolerance).
+//! Token-for-token equality relies on argmax margins / short sampled
+//! budgets exactly as the packed-vs-legacy suites do.
+
+use std::path::{Path, PathBuf};
+
+use lisa::data::tokenizer::{EOS, PAD};
+use lisa::data::{corpus, Tokenizer};
+use lisa::engine::serve::request_seed;
+use lisa::engine::{Engine, KvMode, Request, SamplerSpec, ServeSession, StopReason};
+use lisa::eval::generate;
+use lisa::model::ModelParams;
+use lisa::runtime::Runtime;
+use lisa::util::rng::Rng;
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+/// Artifacts present *and* exported with the paged decode ABI (v2).
+fn have_paged() -> Option<Runtime> {
+    if !artifacts().join("manifest.json").exists() {
+        return None;
+    }
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    rt.manifest.supports_paged("pallas").then_some(rt)
+}
+
+fn make_tok(rt: &Runtime) -> Tokenizer {
+    let samples = corpus::gen_instruction_corpus(64, 11);
+    Tokenizer::build(&corpus::sample_texts(&samples), rt.manifest.vocab)
+}
+
+/// The it_serve.rs mixed queue: longer than the batch, mixed prompt
+/// lengths, budgets and sampling policies.
+fn mixed_requests(tok: &Tokenizer, gen_seed: u64) -> Vec<Request> {
+    let texts = [
+        "what is 12 plus 10 ?",
+        "name the capital of france .",
+        "what is 3 times 4 ?",
+        "who built the eiffel tower ?",
+        "what is 9 minus 2 ?",
+        "in what year was the eiffel tower built ?",
+        "what is 7 times 8 ?",
+        "name the capital of japan .",
+    ];
+    let specs = [
+        SamplerSpec::Greedy,
+        SamplerSpec::Temperature { temperature: 0.8 },
+        SamplerSpec::TopK { k: 5, temperature: 1.0 },
+        SamplerSpec::TopP { p: 0.9, temperature: 1.0 },
+    ];
+    texts
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let greedy = i % specs.len() == 0;
+            Request::sampled(
+                generate::encode_prompt(tok, t),
+                if greedy { 3 + i } else { 2 + (i % 2) },
+                specs[i % specs.len()].clone(),
+                request_seed(gen_seed, i),
+            )
+        })
+        .collect()
+}
+
+fn run_mode(
+    rt: &Runtime,
+    params: &ModelParams,
+    reqs: &[Request],
+    mode: KvMode,
+) -> Vec<lisa::engine::Completion> {
+    let mut eng = Engine::new(rt);
+    let mut sess = ServeSession::with_mode(&mut eng, params, mode).unwrap();
+    assert_eq!(sess.kv_mode(), mode);
+    sess.run(reqs, EOS, PAD).unwrap()
+}
+
+/// A prompt long enough to span full pages (the corpus prompts are all
+/// shorter than one tiny-config page). Plain token ids below `vocab` —
+/// `Request` takes ids verbatim, no tokenizer round trip needed.
+fn long_prompt(vocab: usize, len: usize, salt: i32) -> Vec<i32> {
+    (0..len as i32).map(|i| 3 + (salt + i * 7) % (vocab as i32 - 4)).collect()
+}
+
+#[test]
+fn paged_serving_matches_packed_token_for_token() {
+    let Some(rt) = have_paged() else { return };
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(3));
+    let tok = make_tok(&rt);
+    let reqs = mixed_requests(&tok, 42);
+    assert!(reqs.len() > m.batch, "queue must force mid-decode admission");
+
+    rt.reset_stats();
+    let paged = run_mode(&rt, &params, &reqs, KvMode::Paged);
+    let stats = rt.stats();
+    assert!(stats.get("paged_step").is_some(), "paged mode must run paged_step");
+    assert!(stats.get("paged_scatter").is_some(), "prefill must seed the pools");
+    assert!(stats.get("pack_state").is_none(), "the packed layout must not run");
+    assert!(stats.get("decode_step").is_none());
+
+    let packed = run_mode(&rt, &params, &reqs, KvMode::Packed);
+    assert_eq!(paged.len(), packed.len());
+    for (i, (a, b)) in paged.iter().zip(&packed).enumerate() {
+        assert_eq!(a.tokens, b.tokens, "request {i}: paged vs packed tokens");
+        assert_eq!(a.stop, b.stop, "request {i}: stop reason");
+        assert_eq!(a.prompt_truncated, b.prompt_truncated);
+    }
+}
+
+// The ISSUE 7 acceptance gate: a second request sharing a 100% prompt
+// prefix adopts the drained donor's registered pages and pays zero
+// prefill segments — only the page-tail remainder of the prompt streams
+// through paged_step columns.
+#[test]
+fn shared_prefix_request_executes_zero_prefill_segments() {
+    let Some(rt) = have_paged() else { return };
+    let m = rt.manifest.clone();
+    let bt = m.page_t;
+    let params = ModelParams::init(&m, &mut Rng::new(5));
+    let eos = -1; // unreachable: budgets run exactly
+    // 2.5 pages of prompt: two full (cacheable) pages + a tail
+    let prompt = long_prompt(m.vocab, 2 * bt + bt / 2, 1);
+    let full = (prompt.len() / bt) * bt;
+
+    let mut eng = Engine::new(&rt);
+    let mut sess = ServeSession::with_mode(&mut eng, &params, KvMode::Paged).unwrap();
+
+    // donor: cold, so the whole prompt goes through one batch prefill
+    let a = sess.run(&[Request::greedy(prompt.clone(), 4)], eos, PAD).unwrap().remove(0);
+    assert_eq!(a.tokens.len(), 4);
+    assert_eq!(sess.batch_prefills, 1);
+    assert_eq!(sess.streamed_prompt_tokens, 0, "a solo cold prompt never streams");
+    {
+        let alloc = sess.page_allocator().expect("paged session");
+        assert_eq!(alloc.outstanding(), 0, "drained donor must return its pages");
+        assert_eq!(alloc.n_cached(), full / bt, "full prompt pages must be registered");
+    }
+
+    // adopter: same prompt, same session — the registered pages carry
+    // positions [0, full); no prefill segment may run
+    rt.reset_stats();
+    let b = sess.run(&[Request::greedy(prompt.clone(), 4)], eos, PAD).unwrap().remove(0);
+    let stats = rt.stats();
+    assert!(stats.get("prefill_kv").is_none(), "shared prefix must skip prefill_kv");
+    assert!(stats.get("block_fwd").is_none(), "shared prefix must skip the prompt forward");
+    assert!(stats.get("embed_fwd").is_none());
+    assert!(stats.get("paged_scatter").is_none(), "nothing to scatter without a prefill");
+    assert!(stats.get("paged_step").is_some(), "the remainder streams through paged_step");
+    assert_eq!(sess.batch_prefills, 1, "no second batch prefill");
+    assert_eq!(
+        sess.streamed_prompt_tokens as usize,
+        prompt.len() - full,
+        "exactly the un-paged prompt tail streams"
+    );
+    let alloc = sess.page_allocator().expect("paged session");
+    assert_eq!(alloc.prefix_hits, 1, "the adopter must hit the prefix cache");
+    assert_eq!(alloc.prefix_pages_served as usize, full / bt);
+
+    // adoption must not change the completion (greedy, same prompt)
+    assert_eq!(b.tokens, a.tokens, "prefix adoption changed the decode");
+    assert_eq!(b.stop, StopReason::MaxNew);
+
+    // a diverging prompt (same first page, different second) only adopts
+    // the pages it actually shares
+    let mut fork = prompt.clone();
+    fork[bt + 1] ^= 1;
+    sess.run(&[Request::greedy(fork, 2)], eos, PAD).unwrap();
+    let alloc = sess.page_allocator().expect("paged session");
+    assert_eq!(alloc.prefix_pages_served as usize, full / bt + 1, "fork shares one page");
+}
+
+#[test]
+fn full_queue_drain_returns_every_page_to_the_allocator() {
+    let Some(rt) = have_paged() else { return };
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(7));
+    let tok = make_tok(&rt);
+    let eos = -1;
+
+    // the mixed queue plus two distinct page-spanning prompts, so the
+    // drain exercises both uncached short rows and registered long ones
+    let mut reqs = mixed_requests(&tok, 43);
+    reqs.push(Request::greedy(long_prompt(m.vocab, 2 * m.page_t + 3, 5), 3));
+    reqs.push(Request::greedy(long_prompt(m.vocab, 2 * m.page_t + 3, 11), 3));
+
+    let mut eng = Engine::new(&rt);
+    let mut sess = ServeSession::with_mode(&mut eng, &params, KvMode::Paged).unwrap();
+    let served = sess.run(&reqs, eos, PAD).unwrap();
+    assert_eq!(served.len(), reqs.len());
+    assert!(served.iter().all(|c| !c.tokens.is_empty()));
+
+    let alloc = sess.page_allocator().expect("paged session");
+    // the leak gate: no row holds a page, and free + cached is the whole
+    // pool minus the pinned scratch page
+    assert_eq!(alloc.outstanding(), 0, "pages leaked across the queue drain");
+    assert_eq!(
+        alloc.n_free() + alloc.n_cached(),
+        m.page_n - 1,
+        "free + cached must account for every non-scratch page"
+    );
+    // both long prompts registered their two full pages
+    assert_eq!(alloc.n_cached(), 4);
+}

@@ -25,7 +25,10 @@ use std::path::{Path, PathBuf};
 use lisa::data::tokenizer::{EOS, PAD};
 use lisa::data::{corpus, Tokenizer};
 use lisa::engine::serve::request_seed;
-use lisa::engine::{Completion, Engine, Request, SamplerSpec, ServeSession, StopReason};
+use lisa::engine::{
+    Completion, Engine, Feed, KvMode, LoopStats, Request, RequestSink, RequestSource,
+    SamplerSpec, ServeSession, StopReason,
+};
 use lisa::eval::generate;
 use lisa::model::ModelParams;
 use lisa::runtime::Runtime;
@@ -259,11 +262,13 @@ fn continuous_batching_admits_mid_decode_and_saves_steps() {
         reqs.push(Request::greedy(tail.clone(), 2));
     }
 
-    // ---- continuous
+    // ---- continuous — pinned to the packed v1 layout: the decode_step
+    // ExecStats arithmetic below is the v1 contract (the paged path runs
+    // paged_step and has its own accounting suite, it_paged.rs)
     rt.reset_stats();
     let mut eng = Engine::new(&rt);
     let (served, steps, streamed, prefills) = {
-        let mut sess = ServeSession::new(&mut eng, &params).unwrap();
+        let mut sess = ServeSession::with_mode(&mut eng, &params, KvMode::Packed).unwrap();
         let served = sess.run(&reqs, eos, PAD).unwrap();
         (served, sess.decode_steps, sess.streamed_prompt_tokens, sess.batch_prefills)
     };
@@ -288,7 +293,7 @@ fn continuous_batching_admits_mid_decode_and_saves_steps() {
     rt.reset_stats();
     let mut eng2 = Engine::new(&rt);
     let (static_served, static_ran, static_prefills) = {
-        let mut sess = ServeSession::new(&mut eng2, &params).unwrap();
+        let mut sess = ServeSession::with_mode(&mut eng2, &params, KvMode::Packed).unwrap();
         let out = sess.run_static(&reqs, eos, PAD).unwrap();
         (out, sess.decode_steps, sess.batch_prefills)
     };
@@ -320,6 +325,170 @@ fn zero_budget_queue_runs_no_segments_at_all() {
         rt.stats().is_empty(),
         "zero-budget requests must not execute any segment"
     );
+}
+
+// The ISSUE 7 fairness gate: the admission queue is FIFO — a request
+// that arrived earlier must never start decoding after one that arrived
+// later, no matter which row frees first. The recording source below
+// logs (arrival index, decode-step at admission) for every poll the loop
+// takes; completions carry distinct per-index budgets so any cross-wired
+// sink association would surface as a wrong length.
+#[test]
+fn admission_queue_is_fifo_in_arrival_order() {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    let Some(rt) = have_decode() else { return };
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(17));
+    let tok = make_tok(&rt);
+    let eos = -1; // unreachable: every row runs its exact budget
+    let n = 2 * m.batch + 3; // forces several mid-decode admissions
+    let texts = ["what is 3 times 4 ?", "paris .", "name the capital of japan ."];
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| Request::greedy(generate::encode_prompt(&tok, texts[i % 3]), 1 + (i % 3)))
+        .collect();
+
+    struct Collect {
+        idx: usize,
+        done: Rc<RefCell<Vec<Option<Completion>>>>,
+    }
+    impl RequestSink for Collect {
+        fn on_token(&mut self, _tok: i32) {}
+        fn on_done(&mut self, c: &Completion) {
+            self.done.borrow_mut()[self.idx] = Some(c.clone());
+        }
+    }
+
+    struct RecSrc {
+        reqs: Vec<Request>,
+        next: usize,
+        /// `(arrival index, decode-step count at admission)` per poll.
+        log: Vec<(usize, u64)>,
+        steps: u64,
+        admitted: u64,
+        done: Rc<RefCell<Vec<Option<Completion>>>>,
+    }
+    impl RequestSource for RecSrc {
+        fn poll(&mut self, _idle: bool) -> Feed {
+            if self.next >= self.reqs.len() {
+                return Feed::Closed;
+            }
+            let idx = self.next;
+            self.next += 1;
+            self.log.push((idx, self.steps));
+            Feed::Admit(
+                self.reqs[idx].clone(),
+                Box::new(Collect { idx, done: self.done.clone() }),
+            )
+        }
+        fn observe(&mut self, _eng: &Engine, s: LoopStats) {
+            self.steps = s.decode_steps;
+            self.admitted = s.admitted;
+        }
+    }
+
+    let done = Rc::new(RefCell::new(vec![None; n]));
+    let mut src = RecSrc {
+        reqs: reqs.clone(),
+        next: 0,
+        log: Vec::new(),
+        steps: 0,
+        admitted: 0,
+        done: done.clone(),
+    };
+    let mut eng = Engine::new(&rt);
+    let mut sess = ServeSession::new(&mut eng, &params).unwrap();
+    sess.run_loop(&mut src, eos, PAD).unwrap();
+
+    // every request the source handed out was admitted — the loop never
+    // buffered, dropped or re-queued one (that is what could reorder)
+    assert_eq!(src.admitted, n as u64, "polls vs admissions");
+    let order: Vec<usize> = src.log.iter().map(|&(i, _)| i).collect();
+    assert_eq!(order, (0..n).collect::<Vec<_>>(), "admission order vs arrival order");
+    // earlier arrivals are admitted at earlier-or-equal decode steps
+    for w in src.log.windows(2) {
+        assert!(
+            w[0].1 <= w[1].1,
+            "request {} admitted at step {} after request {} at step {}",
+            w[0].0, w[0].1, w[1].0, w[1].1
+        );
+    }
+    // sink association survived out-of-order row frees: each completion
+    // has its own request's budget
+    let done = done.borrow();
+    for (i, c) in done.iter().enumerate() {
+        let c = c.as_ref().unwrap_or_else(|| panic!("request {i} never completed"));
+        assert_eq!(c.tokens.len(), 1 + (i % 3), "request {i} got another row's budget");
+        assert_eq!(c.stop, StopReason::MaxNew);
+    }
+}
+
+// The ISSUE 7 stop-holdback gate, end to end: a stop sequence whose
+// prefix keeps matching the live tail holds tokens back from the
+// streamed sink — when the row then drains for a *non*-StopSeq reason
+// (here WindowFull), the held-back tail must flush, not vanish. The
+// baseline pass learns the greedy trajectory; the streamed pass stops on
+// `[last_token, -7]`, a sequence that partially matches every time the
+// final token recurs but can never complete (-7 is not emittable).
+#[test]
+fn streamed_sink_receives_the_held_back_tail_on_window_full_drain() {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    let Some(rt) = have_decode() else { return };
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(19));
+    let tok = make_tok(&rt);
+    let eos = -1;
+    let prompt = generate::encode_prompt(&tok, "what is 9 minus 2 ?");
+    let budget = m.seq; // clipped by the window: the row drains WindowFull
+
+    let mut eng = Engine::new(&rt);
+    let baseline = {
+        let mut sess = ServeSession::new(&mut eng, &params).unwrap();
+        sess.run(&[Request::greedy(prompt.clone(), budget)], eos, PAD).unwrap().remove(0)
+    };
+    assert_eq!(baseline.stop, StopReason::WindowFull, "budget must exceed the window");
+    let last = *baseline.tokens.last().unwrap();
+
+    struct Stream {
+        events: Rc<RefCell<(Vec<i32>, Option<Completion>)>>,
+    }
+    impl RequestSink for Stream {
+        fn on_token(&mut self, tok: i32) {
+            self.events.borrow_mut().0.push(tok);
+        }
+        fn on_done(&mut self, c: &Completion) {
+            self.events.borrow_mut().1 = Some(c.clone());
+        }
+    }
+    struct OneShot {
+        req: Option<Request>,
+        events: Rc<RefCell<(Vec<i32>, Option<Completion>)>>,
+    }
+    impl RequestSource for OneShot {
+        fn poll(&mut self, _idle: bool) -> Feed {
+            match self.req.take() {
+                Some(r) => Feed::Admit(r, Box::new(Stream { events: self.events.clone() })),
+                None => Feed::Closed,
+            }
+        }
+    }
+
+    let events = Rc::new(RefCell::new((Vec::new(), None)));
+    let req = Request::greedy(prompt, budget).with_stop(vec![vec![last, -7]]);
+    let mut src = OneShot { req: Some(req), events: events.clone() };
+    let mut sess = ServeSession::new(&mut eng, &params).unwrap();
+    sess.run_loop(&mut src, eos, PAD).unwrap();
+
+    let (streamed, done) = Rc::try_unwrap(events).unwrap().into_inner();
+    let done = done.expect("row drained");
+    assert_eq!(done.stop, StopReason::WindowFull, "the stop sequence must never complete");
+    assert_eq!(done.tokens, baseline.tokens, "an uncompletable stop changed the decode");
+    // the acceptance bit: the streamed events cover every token — the
+    // tail held back behind the partial match flushed on drain
+    assert_eq!(streamed, done.tokens, "held-back tail was swallowed on WindowFull drain");
 }
 
 // ---- pure tier (no artifacts): the public sampling surface ------------
