@@ -16,11 +16,14 @@
 //! [`argmax`] that the legacy full-forward loop (`eval::generate`) must
 //! agree with token for token.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::rc::Rc;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::model::ModelParams;
+use crate::runtime::fault::{FaultError, FaultInjector};
 
 use super::serve::{KvMode, Request, ServeSession};
 use super::trainer::Engine;
@@ -37,6 +40,11 @@ pub enum StopReason {
     /// A per-request stop sequence matched; the matched suffix is
     /// excluded from the returned tokens (serve subsystem only).
     StopSeq,
+    /// The row was drained by a failure (segment error, pool pressure);
+    /// the completion carries whatever tokens were emitted before it.
+    Error,
+    /// The request was cancelled (client disconnect or deadline).
+    Cancelled,
 }
 
 impl StopReason {
@@ -47,6 +55,56 @@ impl StopReason {
             StopReason::MaxNew => "max_new",
             StopReason::WindowFull => "window_full",
             StopReason::StopSeq => "stop_seq",
+            StopReason::Error => "error",
+            StopReason::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Failure class of an error-drained request: the HTTP status family and
+/// the `/metrics` counter label are both derived from this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailClass {
+    /// Unrecoverable runtime error (HTTP 500).
+    Internal,
+    /// Resource pressure — the request was rejected or preempted to
+    /// protect the rest of the batch; safe to retry (HTTP 503).
+    Overloaded,
+    /// Cancelled by the client or a deadline; nobody is listening.
+    Cancelled,
+}
+
+impl FailClass {
+    /// Stable label (metrics `class="..."`, logs).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FailClass::Internal => "internal",
+            FailClass::Overloaded => "overloaded",
+            FailClass::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// A failed (error-drained) request, as delivered to its sink: the
+/// failure class, a human-readable reason, and any tokens that were
+/// already emitted before the failure.
+#[derive(Debug, Clone)]
+pub struct ServeFail {
+    pub class: FailClass,
+    pub message: String,
+    pub tokens: Vec<i32>,
+}
+
+impl ServeFail {
+    pub fn new(class: FailClass, message: impl Into<String>) -> ServeFail {
+        ServeFail { class, message: message.into(), tokens: Vec::new() }
+    }
+
+    /// The [`StopReason`] a sink without a failure channel reports.
+    pub fn stop_reason(&self) -> StopReason {
+        match self.class {
+            FailClass::Cancelled => StopReason::Cancelled,
+            _ => StopReason::Error,
         }
     }
 }
@@ -130,6 +188,9 @@ struct CachedPage {
     parent: u64,
     /// The `page_t` prompt tokens whose K/V this page holds.
     tokens: Vec<i32>,
+    /// Allocator tick of the last registration or adoption: the LRU
+    /// ordering key for eviction under pool pressure.
+    last_used: u64,
 }
 
 /// Refcounted allocator over the fixed-size K/V page pool of a paged
@@ -155,6 +216,11 @@ pub struct PageAllocator {
     /// Free page ids; low ids are handed out first (determinism only).
     free: Vec<u32>,
     cache: BTreeMap<u64, CachedPage>,
+    /// Monotonic use counter driving the LRU ordering of cache entries.
+    tick: u64,
+    /// Deterministic fault injection (shared with the runtime); `None`
+    /// outside a serve/decode session.
+    fault: Option<Rc<RefCell<FaultInjector>>>,
     /// Prompts that adopted at least one cached page.
     pub prefix_hits: u64,
     /// Prefilled pages served from the cache instead of recomputed.
@@ -176,6 +242,8 @@ impl PageAllocator {
             refs,
             free: (1..n_pages as u32).rev().collect(),
             cache: BTreeMap::new(),
+            tick: 0,
+            fault: None,
             prefix_hits: 0,
             prefix_pages_served: 0,
             evictions: 0,
@@ -186,13 +254,28 @@ impl PageAllocator {
         self.page_t
     }
 
-    /// Allocate one page (refcount 1), evicting idle cached prefixes if
-    /// the free list is dry. Errors only when every page is pinned by a
-    /// live row — the default export geometry (`page_n = (B+1)*P + 1`)
-    /// makes that unreachable for `B` rows of at most `P` pages each.
+    /// Arm deterministic fault injection on this allocator (the serve
+    /// session shares the runtime's injector so `pool:` plans fire here).
+    pub fn set_fault_injector(&mut self, fault: Rc<RefCell<FaultInjector>>) {
+        self.fault = Some(fault);
+    }
+
+    /// Allocate one page (refcount 1), evicting the least-recently-used
+    /// idle cached prefix if the free list is dry. Errors only when every
+    /// page is pinned by a live row — the default export geometry
+    /// (`page_n = (B+1)*P + 1`) makes that unreachable for `B` rows of at
+    /// most `P` pages each — or when an armed `pool:` fault plan fires.
+    /// Both failures carry a typed [`FaultError`] with
+    /// [`FaultKind::PoolExhausted`](crate::runtime::FaultKind) so the
+    /// serve loop classifies earned and injected pressure identically.
     pub fn alloc(&mut self) -> Result<u32> {
+        if let Some(f) = &self.fault {
+            if let Some(e) = f.borrow_mut().on_alloc() {
+                return Err(anyhow::Error::new(e));
+            }
+        }
         if self.free.is_empty() {
-            self.evict_idle();
+            self.evict_lru();
         }
         match self.free.pop() {
             Some(g) => {
@@ -200,10 +283,10 @@ impl PageAllocator {
                 self.refs[g as usize] = 1;
                 Ok(g)
             }
-            None => bail!(
+            None => Err(anyhow::Error::new(FaultError::pool_exhausted()).context(format!(
                 "paged K/V pool exhausted: all {} pages are held by live rows",
                 self.refs.len()
-            ),
+            ))),
         }
     }
 
@@ -228,20 +311,33 @@ impl PageAllocator {
         }
     }
 
-    /// Evict every cache entry whose page only the cache itself still
-    /// holds (refcount 1). Entries adopted by live rows are untouchable.
-    pub fn evict_idle(&mut self) {
-        let idle: Vec<u64> = self
+    /// Evict the single least-recently-used idle cache entry (refcount 1
+    /// — only the cache itself holds its page). Entries adopted by live
+    /// rows are untouchable. Under pool pressure `alloc` calls this once
+    /// per grant, so a hot prefix keeps its pages while cold ones are
+    /// reclaimed one at a time; returns whether an entry was evicted.
+    pub fn evict_lru(&mut self) -> bool {
+        let lru: Option<u64> = self
             .cache
             .iter()
             .filter(|(_, e)| self.refs[e.page as usize] == 1)
-            .map(|(k, _)| *k)
-            .collect();
-        for k in idle {
-            let e = self.cache.remove(&k).expect("key just listed");
-            self.release(e.page);
-            self.evictions += 1;
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| *k);
+        match lru {
+            Some(k) => {
+                let e = self.cache.remove(&k).expect("key just listed");
+                self.release(e.page);
+                self.evictions += 1;
+                true
+            }
+            None => false,
         }
+    }
+
+    /// Evict every idle cache entry (bulk flush — explicit callers only;
+    /// pool-pressure eviction goes through the LRU path in `alloc`).
+    pub fn evict_idle(&mut self) {
+        while self.evict_lru() {}
     }
 
     /// Longest cached chain of fully prefilled pages matching `prompt`'s
@@ -254,14 +350,24 @@ impl PageAllocator {
         let max_pages = prompt.len().saturating_sub(1) / bt;
         let mut key = CHAIN_SEED;
         let mut adopted = Vec::new();
+        let mut keys = Vec::new();
         for i in 0..max_pages {
             let block = &prompt[i * bt..(i + 1) * bt];
             let next = chain_key(key, block);
             match self.cache.get(&next) {
-                Some(e) if e.parent == key && e.tokens == block => adopted.push(e.page),
+                Some(e) if e.parent == key && e.tokens == block => {
+                    adopted.push(e.page);
+                    keys.push(next);
+                }
                 _ => break,
             }
             key = next;
+        }
+        self.tick += 1;
+        for k in keys {
+            // an adoption is a use: the whole matched chain moves to the
+            // front of the LRU order
+            self.cache.get_mut(&k).expect("key just matched").last_used = self.tick;
         }
         for &g in &adopted {
             self.retain(g);
@@ -282,6 +388,8 @@ impl PageAllocator {
         let bt = self.page_t;
         let full = (prompt.len() / bt).min(pages.len());
         let mut key = CHAIN_SEED;
+        self.tick += 1;
+        let now = self.tick;
         for i in 0..full {
             let block = &prompt[i * bt..(i + 1) * bt];
             let next = chain_key(key, block);
@@ -289,7 +397,12 @@ impl PageAllocator {
                 let g = pages[i];
                 debug_assert_ne!(g, 0, "prompt pages are real pages");
                 self.refs[g as usize] += 1;
-                v.insert(CachedPage { page: g, parent: key, tokens: block.to_vec() });
+                v.insert(CachedPage {
+                    page: g,
+                    parent: key,
+                    tokens: block.to_vec(),
+                    last_used: now,
+                });
             }
             key = next;
         }
@@ -303,6 +416,13 @@ impl PageAllocator {
 
     pub fn n_cached(&self) -> usize {
         self.cache.len()
+    }
+
+    /// Cache entries only the cache itself still holds — the pages LRU
+    /// eviction could reclaim right now. `n_free() + n_idle_cached()` is
+    /// the admission-time page budget.
+    pub fn n_idle_cached(&self) -> usize {
+        self.cache.values().filter(|e| self.refs[e.page as usize] == 1).count()
     }
 
     /// Refcounts held by rows: total non-scratch counts minus the one
@@ -522,6 +642,70 @@ mod tests {
         assert!(a.lookup_prefix(&[1, 2, 9]).is_empty(), "evicted");
         assert_eq!(a.lookup_prefix(&[5, 6, 9]), vec![d2], "survivor intact");
         let _ = (g3, g4);
+    }
+
+    #[test]
+    fn eviction_under_pressure_is_lru_one_entry_at_a_time() {
+        let mut a = PageAllocator::new(4, 2); // 3 real pages
+        let d1 = a.alloc().unwrap();
+        let d2 = a.alloc().unwrap();
+        let d3 = a.alloc().unwrap();
+        a.register_prefix(&[1, 2], &[d1]); // oldest registration
+        a.register_prefix(&[5, 6], &[d2]);
+        a.register_prefix(&[8, 9], &[d3]);
+        for g in [d1, d2, d3] {
+            a.release(g); // all three idle, LRU order d1 < d2 < d3
+        }
+        // touching [1, 2] moves the oldest entry to the front...
+        let adopted = a.lookup_prefix(&[1, 2, 7]);
+        assert_eq!(adopted, vec![d1]);
+        a.release(d1);
+        // ...so pressure reclaims d2 first, then d3, and d1 last
+        assert_eq!(a.alloc().unwrap(), d2, "least-recently-used evicted first");
+        assert_eq!(a.n_cached(), 2, "one entry per grant, not a bulk flush");
+        assert_eq!(a.alloc().unwrap(), d3);
+        assert_eq!(a.alloc().unwrap(), d1);
+        assert_eq!(a.evictions, 3);
+        assert_eq!(a.n_cached(), 0);
+    }
+
+    #[test]
+    fn adopted_entries_survive_lru_eviction() {
+        let mut a = PageAllocator::new(3, 2); // 2 real pages
+        let d1 = a.alloc().unwrap();
+        let d2 = a.alloc().unwrap();
+        a.register_prefix(&[1, 2], &[d1]);
+        a.register_prefix(&[5, 6], &[d2]);
+        a.release(d1);
+        a.release(d2);
+        // [1, 2] is LRU *and* row-held: eviction must skip it
+        let adopted = a.lookup_prefix(&[1, 2, 7]);
+        assert_eq!(adopted, vec![d1]);
+        assert_eq!(a.alloc().unwrap(), d2, "idle entry evicted, adopted one kept");
+        assert_eq!(a.lookup_prefix(&[1, 2, 9]), vec![d1], "survivor intact");
+    }
+
+    #[test]
+    fn real_exhaustion_and_injected_pool_faults_are_both_typed() {
+        use crate::runtime::fault::{FaultError, FaultInjector, FaultKind};
+
+        let mut a = PageAllocator::new(3, 4);
+        let _g1 = a.alloc().unwrap();
+        let _g2 = a.alloc().unwrap();
+        let err = a.alloc().unwrap_err();
+        let f = err.downcast_ref::<FaultError>().expect("earned exhaustion is typed");
+        assert_eq!(f.kind, FaultKind::PoolExhausted);
+        assert!(format!("{err:#}").contains("pool exhausted"), "{err:#}");
+
+        let mut a = PageAllocator::new(8, 4);
+        let inj = Rc::new(RefCell::new(FaultInjector::parse("pool:nth=2").unwrap()));
+        a.set_fault_injector(inj.clone());
+        assert!(a.alloc().is_ok());
+        let err = a.alloc().unwrap_err();
+        let f = err.downcast_ref::<FaultError>().expect("injected fault is typed");
+        assert_eq!((f.kind, f.hit), (FaultKind::PoolExhausted, 2));
+        assert_eq!(inj.borrow().injected, 1);
+        assert!(a.alloc().is_ok(), "plan spent: the pool recovers");
     }
 
     #[test]

@@ -6,10 +6,10 @@ pub mod memory;
 pub mod serve;
 pub mod trainer;
 
-pub use decode::{Completion, DecodeSession, PageAllocator, StopReason};
+pub use decode::{Completion, DecodeSession, FailClass, PageAllocator, ServeFail, StopReason};
 pub use memory::{MemCategory, MemoryMeter};
 pub use serve::{
-    Feed, KvMode, LoopStats, Request, RequestSink, RequestSource, Sampler, SamplerSpec,
-    ServeSession,
+    CancelToken, Feed, KvMode, LoopStats, Request, RequestSink, RequestSource, Sampler,
+    SamplerSpec, ServeSession,
 };
 pub use trainer::{Batch, Engine, Grads, StepOutput, Touched, TrainMask};

@@ -21,4 +21,6 @@ pub mod sampler;
 pub mod session;
 
 pub use sampler::{request_seed, Sampler, SamplerSpec};
-pub use session::{Feed, KvMode, LoopStats, Request, RequestSink, RequestSource, ServeSession};
+pub use session::{
+    CancelToken, Feed, KvMode, LoopStats, Request, RequestSink, RequestSource, ServeSession,
+};

@@ -51,15 +51,42 @@
 //! whole batch prefill). Token streams are identical in both modes
 //! (`tests/it_paged.rs`); `LISA_PAGED=0` forces the packed v1 path.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
 use anyhow::{ensure, Result};
 
-use crate::engine::decode::{clip_prompt, Completion, PageAllocator, StopReason};
+use crate::engine::decode::{
+    clip_prompt, Completion, FailClass, PageAllocator, ServeFail, StopReason,
+};
 use crate::engine::memory::MemCategory;
 use crate::engine::trainer::{Act, Engine, ParamOp};
 use crate::model::ModelParams;
+use crate::runtime::fault::{FaultError, FaultKind};
 use crate::runtime::{HostTensor, HostTensorI32, Operand, DECODE_ABI, PAGED_ABI};
 
 use super::sampler::{Sampler, SamplerSpec};
+
+/// Per-request cancellation flag, shared between the connection thread
+/// (which flips it on client disconnect or deadline) and the model thread
+/// (which observes it between steps and drains the row, releasing its
+/// pages). Cloning shares the flag.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
 
 /// Which K/V layout a session runs on.
 ///
@@ -129,6 +156,10 @@ pub struct Request {
     /// [`StopReason::StopSeq`] and the matched suffix is excluded from
     /// the returned tokens. Empty sequences are ignored.
     pub stop: Vec<Vec<i32>>,
+    /// Cancellation flag, observed between steps: once flipped the row is
+    /// drained with [`FailClass::Cancelled`] and its pages are released.
+    /// `None` makes the request uncancellable.
+    pub cancel: Option<CancelToken>,
 }
 
 impl Request {
@@ -140,6 +171,7 @@ impl Request {
             seed: 0,
             first_token: None,
             stop: Vec::new(),
+            cancel: None,
         }
     }
 
@@ -255,6 +287,13 @@ impl RowPlan {
         &self.out
     }
 
+    /// Upper bound on this row's final sequence length: everything in
+    /// `seq` plus the remaining generation budget, clamped to the window.
+    /// Page-budget reservation sizes a row's worst-case need from this.
+    pub(crate) fn max_total_len(&self) -> usize {
+        (self.seq.len() + self.max_new.saturating_sub(self.out.len())).min(self.seq_cap)
+    }
+
     /// `(token, position)` this row contributes to the next `decode_step`.
     /// Done rows in a still-running batch freeze on their last token —
     /// rewriting the same cache slot with the same bytes (idempotent, and
@@ -285,6 +324,19 @@ pub trait RequestSink {
     /// The row drained. `completion.tokens` repeats every token already
     /// delivered through [`RequestSink::on_token`].
     fn on_done(&mut self, completion: &Completion);
+    /// The request failed (error drain, overload rejection, cancellation)
+    /// and will never reach [`RequestSink::on_done`]. The default
+    /// implementation folds the failure into a completion with
+    /// [`StopReason::Error`] / [`StopReason::Cancelled`], so sinks
+    /// without a failure channel still observe exactly one terminal
+    /// event per request.
+    fn on_fail(&mut self, fail: &ServeFail) {
+        self.on_done(&Completion {
+            tokens: fail.tokens.clone(),
+            prompt_truncated: false,
+            stop: fail.stop_reason(),
+        });
+    }
 }
 
 /// One admission poll outcome (see [`RequestSource::poll`]).
@@ -305,8 +357,21 @@ pub struct LoopStats {
     pub batch_prefills: u64,
     pub streamed_prompt_tokens: u64,
     pub admitted: u64,
-    /// Rows currently prefilling or decoding.
+    /// Rows currently prefilling, decoding or parked.
     pub live_rows: usize,
+    /// Transient execution failures absorbed by in-place retry.
+    pub retries: u64,
+    /// Rows that rebuilt their K/V from host bookkeeping after a fault.
+    pub reprefills: u64,
+    /// Rows drained with a typed error (fault budget exceeded, or shed
+    /// under unrecoverable pool pressure).
+    pub error_drains: u64,
+    /// Rows preempted (pages released, parked) under pool pressure.
+    pub preemptions: u64,
+    /// Requests drained because their cancel token flipped.
+    pub cancelled: u64,
+    /// Admissions rejected by page-budget reservation (503 upstream).
+    pub rejected: u64,
 }
 
 /// Feeds requests into [`ServeSession::run_loop`]. The in-memory slice
@@ -340,6 +405,10 @@ pub(crate) enum SlotState {
     Prefilling,
     /// Emitting tokens.
     Decoding,
+    /// Preempted under page-pool pressure: pages released, K/V forgotten,
+    /// waiting for headroom to re-prefill. The occupant (and its sampler
+    /// stream) is intact, so an unparked row resumes token-identically.
+    Parked,
     /// Completion finished; replays its frozen `(tok, pidx)` idempotently
     /// until harvested by the next admission (or the session end).
     Drained,
@@ -362,17 +431,40 @@ struct Occupant {
     /// prefix pages first, then freshly allocated ones. Always empty in
     /// packed mode.
     pages: Vec<u32>,
+    /// Execution failures charged to this row (bumped per quarantine);
+    /// past the session's budget the row drains with a typed error.
+    faults: u32,
+    /// Preempted under pool pressure (see [`SlotState::Parked`]).
+    parked: bool,
+    /// How many times this row has been preempted; a second preemption
+    /// drains it instead (the degradation ladder bottoms out).
+    preempts: u32,
+    /// Cancellation flag, observed by the loop between steps.
+    cancel: Option<CancelToken>,
 }
 
 impl Occupant {
     fn state(&self) -> SlotState {
         if !self.plan.alive() {
             SlotState::Drained
+        } else if self.parked {
+            SlotState::Parked
         } else if self.fed < self.prompt_len {
             SlotState::Prefilling
         } else {
             SlotState::Decoding
         }
+    }
+
+    /// Forget the device K/V and schedule a full rebuild: the entire
+    /// current sequence (prompt + generated tokens) becomes the "prompt"
+    /// the next prefill teacher-forces. The sampler stream is untouched
+    /// and failed steps never consumed a pick, so the rebuilt row
+    /// continues token-identically — tokens are a function of
+    /// `(prompt, spec, seed)` alone.
+    fn re_prefill(&mut self) {
+        self.prompt_len = self.plan.seq.len();
+        self.fed = 0;
     }
 }
 
@@ -385,18 +477,63 @@ impl RowSlot {
         self.0.as_ref().map_or(SlotState::Vacant, Occupant::state)
     }
 
+    /// The row is spoken for: its request has not terminated. Parked rows
+    /// count — their occupant is waiting for pool headroom, so admission
+    /// must not overwrite them.
     pub(crate) fn live(&self) -> bool {
-        matches!(self.state(), SlotState::Prefilling | SlotState::Decoding)
+        matches!(
+            self.state(),
+            SlotState::Prefilling | SlotState::Decoding | SlotState::Parked
+        )
     }
 
     /// No in-flight K/V this occupant still depends on — the row can take
     /// part in a fresh batch prefill.
     fn no_progress(&self) -> bool {
         match self.state() {
-            SlotState::Vacant | SlotState::Drained => true,
+            SlotState::Vacant | SlotState::Drained | SlotState::Parked => true,
             SlotState::Prefilling => self.0.as_ref().expect("occupied").fed == 0,
             SlotState::Decoding => false,
         }
+    }
+
+    /// Whether the occupant's cancel token flipped while its request is
+    /// still in flight (already-drained rows deliver normally).
+    fn cancel_requested(&self) -> bool {
+        self.0.as_ref().is_some_and(|occ| {
+            occ.plan.alive() && occ.cancel.as_ref().is_some_and(CancelToken::is_cancelled)
+        })
+    }
+
+    /// Give every page this row holds back to the allocator (refcounts
+    /// drop; cache-adopted pages stay cached). No-op in packed mode.
+    fn release_pages(&mut self, alloc: &mut PageAllocator) {
+        if let Some(occ) = &mut self.0 {
+            for g in std::mem::take(&mut occ.pages) {
+                alloc.release(g);
+            }
+        }
+    }
+
+    /// Terminal error drain: fire [`RequestSink::on_fail`] with the tokens
+    /// already delivered and free the row. Pages must already be released.
+    fn fail(&mut self, class: FailClass, msg: &str) {
+        let Some(occ) = self.0.take() else { return };
+        debug_assert!(occ.pages.is_empty(), "pages must be released before fail");
+        let mut fail = ServeFail::new(class, msg);
+        fail.tokens = occ.plan.out()[..occ.emitted].to_vec();
+        let mut sink = occ.sink;
+        sink.on_fail(&fail);
+    }
+
+    /// Preempt under pool pressure: release every page, forget the device
+    /// K/V (host bookkeeping rebuilds it on unpark) and park the row.
+    fn park(&mut self, alloc: &mut PageAllocator) {
+        self.release_pages(alloc);
+        let occ = self.0.as_mut().expect("parking an empty row");
+        occ.re_prefill();
+        occ.parked = true;
+        occ.preempts += 1;
     }
 
     fn admit(&mut self, req: Request, sink: Box<dyn RequestSink>, seq_cap: usize, eos: i32) {
@@ -413,6 +550,10 @@ impl RowSlot {
             sink,
             emitted: 0,
             pages: Vec::new(),
+            faults: 0,
+            parked: false,
+            preempts: 0,
+            cancel: req.cancel,
         });
     }
 
@@ -444,8 +585,8 @@ impl RowSlot {
     /// already wrote (covered by construction) and rows that never wrote
     /// (zero-budget) fall through to scratch, so only live rows grow.
     fn ensure_page(&mut self, alloc: &mut PageAllocator) -> Result<()> {
-        if !self.live() {
-            return Ok(());
+        if !matches!(self.state(), SlotState::Prefilling | SlotState::Decoding) {
+            return Ok(()); // parked rows hold no pages and write scratch
         }
         let occ = self.0.as_mut().expect("live implies occupied");
         let pos = match occ.state() {
@@ -520,7 +661,7 @@ impl RowSlot {
                 SlotState::Prefilling => {
                     occ.fed + 1 == occ.prompt_len && occ.first.is_none()
                 }
-                SlotState::Vacant | SlotState::Drained => false,
+                SlotState::Vacant | SlotState::Parked | SlotState::Drained => false,
             },
         }
     }
@@ -531,6 +672,8 @@ impl RowSlot {
             None => (pad, 0),
             Some(occ) => match occ.state() {
                 SlotState::Prefilling => (occ.plan.seq[occ.fed], occ.fed as i32),
+                // parked rows hold no pages: write inertly onto scratch
+                SlotState::Parked => (pad, 0),
                 _ => occ.plan.step_input(),
             },
         }
@@ -586,7 +729,7 @@ impl RowSlot {
                     .pick(row_logits.expect("scheduler downloads consumed logits"));
                 occ.plan.push(tok);
             }
-            SlotState::Vacant | SlotState::Drained => {}
+            SlotState::Vacant | SlotState::Parked | SlotState::Drained => {}
         }
         self.emit();
     }
@@ -611,6 +754,28 @@ pub struct ServeSession<'e, 'rt> {
     pub streamed_prompt_tokens: u64,
     /// Requests admitted to a row (== requests served at session end).
     pub admitted: u64,
+    /// Transient execution failures absorbed by in-place retry.
+    pub retries: u64,
+    /// Rows whose K/V was rebuilt from host bookkeeping after a fault.
+    pub reprefills: u64,
+    /// Rows drained with [`StopReason::Error`] (fault budget exceeded, or
+    /// shed under unrecoverable pool pressure).
+    pub error_drains: u64,
+    /// Rows preempted (pages released, parked) under pool pressure.
+    pub preemptions: u64,
+    /// Requests drained because their [`CancelToken`] flipped.
+    pub cancelled: u64,
+    /// Admissions refused by page-budget reservation (503 upstream).
+    pub rejected: u64,
+    /// Max in-place retries of one failed execution before quarantining
+    /// the batch (transient faults only; persistent ones skip straight to
+    /// quarantine).
+    retry_max: u32,
+    /// Backoff before the n-th retry is `n * backoff_ms` milliseconds.
+    backoff_ms: u64,
+    /// Quarantines a row survives (by re-prefilling) before it drains
+    /// with a typed error.
+    row_fault_budget: u32,
 }
 
 impl<'e, 'rt> ServeSession<'e, 'rt> {
@@ -662,8 +827,12 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
                     eng.rt.backend
                 );
                 let m = &eng.rt.manifest;
+                let mut alloc = PageAllocator::new(m.page_n, m.page_t);
+                // page grants share the runtime's fault injector, so a
+                // `pool:` plan starves the allocator deterministically
+                alloc.set_fault_injector(eng.rt.fault_handle());
                 Some(PagedPool {
-                    alloc: PageAllocator::new(m.page_n, m.page_t),
+                    alloc,
                     state: None,
                     p: m.pages_per_row,
                     rows: m.paged_state_rows(),
@@ -678,7 +847,24 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             batch_prefills: 0,
             streamed_prompt_tokens: 0,
             admitted: 0,
+            retries: 0,
+            reprefills: 0,
+            error_drains: 0,
+            preemptions: 0,
+            cancelled: 0,
+            rejected: 0,
+            retry_max: 2,
+            backoff_ms: 2,
+            row_fault_budget: 2,
         })
+    }
+
+    /// Tune the recovery ladder (defaults: 2 retries, 2 ms backoff unit,
+    /// 2 quarantines per row). Chaos tests zero the backoff.
+    pub fn set_recovery(&mut self, retry_max: u32, backoff_ms: u64, row_fault_budget: u32) {
+        self.retry_max = retry_max;
+        self.backoff_ms = backoff_ms;
+        self.row_fault_budget = row_fault_budget;
     }
 
     /// The K/V layout this session runs on.
@@ -803,8 +989,28 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
         // served from the device cache across every step of the session
         type DecOps<'p> = ([ParamOp<'p>; 2], Vec<Vec<ParamOp<'p>>>, [ParamOp<'p>; 2]);
         let mut dec_ops: Option<DecOps<'e>> = None;
+        // consecutive failures of the execution the loop is stuck on;
+        // reset whenever an iteration completes (or quarantine resolves it)
+        let mut step_failures: u32 = 0;
 
         loop {
+            // ---- cancellation: flipped tokens drain their row between
+            // steps — pages released, neighbors untouched
+            for slot in slots.iter_mut() {
+                if !slot.cancel_requested() {
+                    continue;
+                }
+                if let Some(pool) = self.paged.as_mut() {
+                    slot.release_pages(&mut pool.alloc);
+                }
+                slot.fail(FailClass::Cancelled, "request cancelled");
+                self.cancelled += 1;
+            }
+
+            // ---- pool pressure: re-prefill parked rows once there is
+            // headroom (or shed one if nothing can ever run)
+            self.unpark_parked(&mut slots);
+
             // ---- admission: harvest drained rows, hand freed rows to
             // the queue head
             for slot in slots.iter_mut() {
@@ -821,13 +1027,10 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
                     }
                     match src.poll(false) {
                         Feed::Admit(req, sink) => {
-                            slot.admit(req, sink, t_max, eos);
-                            if let Some(pool) = self.paged.as_mut() {
-                                slot.attach_pages(&mut pool.alloc)?;
-                            }
-                            self.admitted += 1;
-                            // a zero-budget request drains instantly; the
-                            // loop hands the row straight to the next one
+                            // a zero-budget request drains instantly (and a
+                            // rejected one leaves the row free): the loop
+                            // hands the row straight to the next request
+                            self.try_admit(slot, req, sink, t_max, eos);
                         }
                         Feed::Pending => break,
                         Feed::Closed => {
@@ -846,6 +1049,12 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
                     streamed_prompt_tokens: self.streamed_prompt_tokens,
                     admitted: self.admitted,
                     live_rows: live,
+                    retries: self.retries,
+                    reprefills: self.reprefills,
+                    error_drains: self.error_drains,
+                    preemptions: self.preemptions,
+                    cancelled: self.cancelled,
+                    rejected: self.rejected,
                 },
             );
             if live == 0 {
@@ -856,11 +1065,7 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
                 // block until traffic (or its heartbeat) wakes us
                 match src.poll(true) {
                     Feed::Admit(req, sink) => {
-                        slots[0].admit(req, sink, t_max, eos);
-                        if let Some(pool) = self.paged.as_mut() {
-                            slots[0].attach_pages(&mut pool.alloc)?;
-                        }
-                        self.admitted += 1;
+                        self.try_admit(&mut slots[0], req, sink, t_max, eos);
                     }
                     Feed::Pending => {}
                     Feed::Closed => closed = true,
@@ -872,9 +1077,27 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             // otherwise admitted rows stream through decode_step below.
             // A paged row that adopted cached prefix pages counts as
             // in-flight (`fed > 0`), so it streams its remaining prompt
-            // instead of re-running the prefill segments.
-            if slots.iter().all(RowSlot::no_progress) {
-                state = self.batch_prefill(&mut slots, pad)?;
+            // instead of re-running the prefill segments. Parked rows sit
+            // this out (no pages); the `any Prefilling` guard keeps an
+            // all-parked batch from prefilling nothing forever.
+            if slots.iter().all(RowSlot::no_progress)
+                && slots.iter().any(|s| s.state() == SlotState::Prefilling)
+            {
+                match self.batch_prefill(&mut slots, pad) {
+                    Ok(s) => {
+                        state = s;
+                        step_failures = 0;
+                    }
+                    Err(e) => {
+                        // nothing was consumed and the paged pool state
+                        // survived (scatter restores it on failure), so the
+                        // whole prefill can be retried or quarantined away
+                        if self.absorb_failure(&e, "batch prefill", &mut slots, &mut step_failures)
+                        {
+                            state = None;
+                        }
+                    }
+                }
                 continue; // first tokens may have drained rows: re-admit
             }
 
@@ -891,10 +1114,35 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             let (ep, blocks, ho) = dec_ops.as_ref().expect("just built");
 
             // paged: grow each live row's page list to cover the position
-            // it writes this step (one page at a time at page boundaries)
-            if let Some(pool) = self.paged.as_mut() {
+            // it writes this step (one page at a time at page boundaries).
+            // A failed grant is pool pressure, not a loop error: preempt
+            // the row (first offense) or shed it (second) — its neighbors
+            // keep their pages and keep decoding.
+            if self.paged.is_some() {
                 for slot in slots.iter_mut() {
-                    slot.ensure_page(&mut pool.alloc)?;
+                    let pool = self.paged.as_mut().expect("paged mode");
+                    if let Err(e) = slot.ensure_page(&mut pool.alloc) {
+                        if slot.0.as_ref().is_some_and(|o| o.preempts >= 1) {
+                            slot.release_pages(&mut pool.alloc);
+                            slot.fail(
+                                FailClass::Overloaded,
+                                &format!("preempted twice under page-pool pressure: {e:#}"),
+                            );
+                            self.error_drains += 1;
+                        } else {
+                            log::warn!("page pool pressure, preempting a row: {e:#}");
+                            slot.park(&mut pool.alloc);
+                            self.preemptions += 1;
+                        }
+                    }
+                }
+                // preemption may have idled the whole batch: let the next
+                // iteration unpark/admit instead of stepping nothing
+                if !slots
+                    .iter()
+                    .any(|s| matches!(s.state(), SlotState::Prefilling | SlotState::Decoding))
+                {
+                    continue;
                 }
             }
             let (mut tokc, mut pidxc) =
@@ -939,11 +1187,26 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
                 } else {
                     (self.eng.ids.decode_step, &state_shape)
                 };
-                self.eng.run_chain_act(seg, &ops, shape)?
+                self.eng.run_chain_act(seg, &ops, shape)
             };
-            match self.paged.as_mut() {
-                Some(pool) => pool.state = Some(state_next),
-                None => state = Some(state_next),
+            match state_next {
+                Ok(next) => match self.paged.as_mut() {
+                    Some(pool) => pool.state = Some(next),
+                    None => state = Some(next),
+                },
+                Err(e) => {
+                    // executions are functional: a failed step never
+                    // touched `st`, so put it back and either retry the
+                    // identical step or quarantine the batch
+                    match self.paged.as_mut() {
+                        Some(pool) => pool.state = Some(st),
+                        None => state = Some(st),
+                    }
+                    if self.absorb_failure(&e, "decode step", &mut slots, &mut step_failures) {
+                        state = None; // quarantine cleared the paged pool itself
+                    }
+                    continue;
+                }
             }
             self.decode_steps += 1;
             // the [B, 1, V] download happens only when some row reads it —
@@ -955,13 +1218,31 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
                 };
                 let st = st.expect("just stepped");
                 let ops = [st.operand(), ho[0].operand(), ho[1].operand()];
-                Some(self.eng.run_chain_act(seg, &ops, &logit1_shape)?.into_host()?)
+                match self.eng.run_chain_act(seg, &ops, &logit1_shape).and_then(Act::into_host) {
+                    Ok(h) => Some(h),
+                    Err(e) => {
+                        // the state advanced but no row consumed anything:
+                        // re-issuing the whole step next iteration rewrites
+                        // the same columns with the same bytes (frozen-row
+                        // idempotence), so retry is safe here too
+                        if self.absorb_failure(
+                            &e,
+                            "logits download",
+                            &mut slots,
+                            &mut step_failures,
+                        ) {
+                            state = None;
+                        }
+                        continue;
+                    }
+                }
             } else {
                 None
             };
             for (r, slot) in slots.iter_mut().enumerate() {
                 slot.consume(lg.as_ref().map(|lg| &lg.data[r * v..(r + 1) * v]));
             }
+            step_failures = 0;
         }
 
         // every row was harvested by the admission pass of the final
@@ -974,6 +1255,222 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             .map_or(0, |s| s.bytes() as u64);
         self.eng.meter.set(MemCategory::Activations, resident);
         Ok(())
+    }
+
+    /// Admission with graceful degradation (DESIGN.md §13). A request
+    /// whose cancel token already flipped drains immediately; in paged
+    /// mode a request whose worst-case page need exceeds what the pool
+    /// could free right now (free + idle-cached pages) is refused with
+    /// [`FailClass::Overloaded`] — the HTTP layer maps that to 503 +
+    /// `Retry-After` — instead of being admitted into certain preemption.
+    /// On success the row is occupied and `admitted` is bumped; on any
+    /// refusal the row stays free for the next queued request.
+    fn try_admit(
+        &mut self,
+        slot: &mut RowSlot,
+        req: Request,
+        mut sink: Box<dyn RequestSink>,
+        t_max: usize,
+        eos: i32,
+    ) {
+        if req.cancel.as_ref().is_some_and(CancelToken::is_cancelled) {
+            sink.on_fail(&ServeFail::new(FailClass::Cancelled, "cancelled before admission"));
+            self.cancelled += 1;
+            return;
+        }
+        if let Some(pool) = self.paged.as_ref() {
+            // zero-budget requests drain at admission and take no pages
+            if req.max_new > 0 {
+                let bt = pool.alloc.page_t();
+                let plen = req.prompt.len().min(t_max - 1); // clip_prompt bound
+                let total = (plen + req.max_new).min(t_max);
+                let need = (total.div_ceil(bt)).min(pool.p);
+                let avail = pool.alloc.n_free() + pool.alloc.n_idle_cached();
+                if need > avail {
+                    sink.on_fail(&ServeFail::new(
+                        FailClass::Overloaded,
+                        format!(
+                            "page pool at capacity ({need} pages needed, {avail} reclaimable)"
+                        ),
+                    ));
+                    self.rejected += 1;
+                    return;
+                }
+            }
+        }
+        slot.admit(req, sink, t_max, eos);
+        if let Some(pool) = self.paged.as_mut() {
+            if let Err(e) = slot.attach_pages(&mut pool.alloc) {
+                // reservation raced an injected pool fault (or a sudden
+                // adoption): refuse late rather than admit a pageless row
+                slot.release_pages(&mut pool.alloc);
+                slot.fail(
+                    FailClass::Overloaded,
+                    &format!("page pool exhausted at admission: {e:#}"),
+                );
+                self.rejected += 1;
+                return;
+            }
+        }
+        self.admitted += 1;
+    }
+
+    /// Decide what a failed execution means for the loop: bounded
+    /// retry-with-backoff for transient failures (unclassified errors get
+    /// the benefit of the doubt), quarantine once the budget is spent or
+    /// the fault is known-persistent. Returns whether the batch was
+    /// quarantined — the caller must then drop its packed state (the
+    /// paged pool is cleared here).
+    fn absorb_failure(
+        &mut self,
+        err: &anyhow::Error,
+        what: &str,
+        slots: &mut [RowSlot],
+        step_failures: &mut u32,
+    ) -> bool {
+        let transient = err
+            .downcast_ref::<FaultError>()
+            .is_none_or(|f| f.kind == FaultKind::Transient);
+        *step_failures += 1;
+        if transient && *step_failures <= self.retry_max {
+            self.retries += 1;
+            log::warn!("serve: {what} failed (attempt {step_failures}), retrying: {err:#}");
+            if self.backoff_ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(
+                    self.backoff_ms * u64::from(*step_failures),
+                ));
+            }
+            return false;
+        }
+        *step_failures = 0;
+        log::warn!("serve: {what} failed persistently, quarantining the batch: {err:#}");
+        self.quarantine(slots, &format!("{what} failed: {err:#}"));
+        true
+    }
+
+    /// Containment after an unrecoverable execution failure: the device
+    /// K/V (shared state tensor) is suspect, but every row's tokens live
+    /// in host bookkeeping, so each in-flight row either re-prefills its
+    /// whole sequence (token-identical — the sampler stream never saw the
+    /// failed step) or, past its fault budget, drains with a typed error.
+    /// The prefix cache is flushed: its pages' device bytes die with the
+    /// discarded pool state.
+    fn quarantine(&mut self, slots: &mut [RowSlot], msg: &str) {
+        for slot in slots.iter_mut() {
+            match slot.state() {
+                SlotState::Prefilling | SlotState::Decoding => {}
+                SlotState::Drained => {
+                    // its completion already fired, but its prompt pages
+                    // now hold garbage: forget them so the harvest pass
+                    // doesn't register a poisoned prefix
+                    if let Some(occ) = &mut slot.0 {
+                        occ.fed = 0;
+                    }
+                    continue;
+                }
+                // parked rows hold no K/V; vacant rows hold nothing
+                SlotState::Vacant | SlotState::Parked => continue,
+            }
+            if let Some(pool) = self.paged.as_mut() {
+                slot.release_pages(&mut pool.alloc);
+            }
+            let occ = slot.0.as_mut().expect("live implies occupied");
+            occ.faults += 1;
+            if occ.faults > self.row_fault_budget {
+                slot.fail(FailClass::Internal, msg);
+                self.error_drains += 1;
+                continue;
+            }
+            occ.re_prefill();
+            self.reprefills += 1;
+            // paged: cover the rebuilt sequence up front so the next batch
+            // prefill scatters every column into a real page. No prefix
+            // adoption here — the cache is about to be flushed.
+            if let Some(pool) = self.paged.as_mut() {
+                let occ = slot.0.as_mut().expect("still occupied");
+                let need = occ.plan.seq.len().div_ceil(pool.alloc.page_t());
+                while occ.pages.len() < need {
+                    match pool.alloc.alloc() {
+                        Ok(g) => occ.pages.push(g),
+                        Err(e) => {
+                            // pool pressure on top of the fault: park
+                            log::warn!("serve: quarantine preempts a row: {e:#}");
+                            slot.park(&mut pool.alloc);
+                            self.preemptions += 1;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(pool) = self.paged.as_mut() {
+            // cached pages' K/V dies with the pool state; survivors'
+            // pages are rewritten by the next batch prefill from zeros
+            pool.alloc.evict_idle();
+            pool.state = None;
+        }
+    }
+
+    /// Re-admit parked rows once the pool has headroom for their
+    /// worst-case need; if nothing is runnable and no parked row fits,
+    /// shed the largest one so the loop always makes progress.
+    fn unpark_parked(&mut self, slots: &mut [RowSlot]) {
+        if self.paged.is_none() {
+            return;
+        }
+        for slot in slots.iter_mut() {
+            if slot.state() != SlotState::Parked {
+                continue;
+            }
+            let pool = self.paged.as_mut().expect("paged mode");
+            let bt = pool.alloc.page_t();
+            let avail = pool.alloc.n_free() + pool.alloc.n_idle_cached();
+            let occ = slot.0.as_mut().expect("parked implies occupied");
+            let need_full = (occ.plan.max_total_len().div_ceil(bt)).min(pool.p);
+            if need_full > avail {
+                continue; // not enough headroom yet — stay parked
+            }
+            // allocate the pages its current sequence needs now; the next
+            // batch prefill rebuilds the K/V (fed == 0 after parking)
+            let need_now = occ.plan.seq.len().div_ceil(bt);
+            let mut granted = true;
+            while occ.pages.len() < need_now {
+                match pool.alloc.alloc() {
+                    Ok(g) => occ.pages.push(g),
+                    Err(_) => {
+                        granted = false;
+                        break;
+                    }
+                }
+            }
+            if granted {
+                occ.parked = false; // Prefilling again, from scratch
+            } else {
+                slot.release_pages(&mut pool.alloc); // raced: stay parked
+            }
+        }
+        // degradation ladder's last rung: nothing runnable and nothing
+        // unparkable means the pool can never cover the parked rows —
+        // shed the hungriest so the rest (and new admissions) can run
+        let runnable = slots
+            .iter()
+            .any(|s| matches!(s.state(), SlotState::Prefilling | SlotState::Decoding));
+        if runnable {
+            return;
+        }
+        let victim = slots
+            .iter_mut()
+            .filter(|s| s.state() == SlotState::Parked)
+            .max_by_key(|s| s.0.as_ref().map_or(0, |o| o.plan.seq.len()));
+        if let Some(slot) = victim {
+            let pool = self.paged.as_mut().expect("paged mode");
+            slot.release_pages(&mut pool.alloc);
+            slot.fail(
+                FailClass::Overloaded,
+                "page pool cannot cover any parked row",
+            );
+            self.error_drains += 1;
+        }
     }
 
     /// Batched prefill of every occupied row's current sequence:
@@ -1054,10 +1551,20 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
                 (pool.p, pool.rows, prev)
             };
             let table = page_table(slots, bsz, p);
-            let st = {
+            let scattered = {
                 let mut ops: Vec<Operand> = vec![prev.operand(), Operand::I32(&table)];
                 ops.extend(kvs.iter().map(Act::operand));
-                self.eng.run_chain_act(ids.paged_scatter, &ops, &[rows, d])?
+                self.eng.run_chain_act(ids.paged_scatter, &ops, &[rows, d])
+            };
+            let st = match scattered {
+                Ok(st) => st,
+                Err(e) => {
+                    // scatter is functional: `prev` — and the cached
+                    // prefix K/V inside it — is intact, so put it back
+                    // and let the caller re-issue the whole prefill
+                    self.paged.as_mut().expect("paged mode").state = Some(prev);
+                    return Err(e);
+                }
             };
             self.eng
                 .meter
@@ -1578,5 +2085,112 @@ mod tests {
         let c = log.done.as_ref().unwrap();
         assert!(c.tokens.is_empty());
         assert_eq!(c.stop, StopReason::Eos);
+    }
+
+    // ---- fault isolation: cancel, error drain, park/re-prefill ----------
+
+    #[test]
+    fn cancel_token_is_shared_and_observed_only_while_in_flight() {
+        let mut s = RowSlot::default();
+        assert!(!s.cancel_requested(), "vacant rows have nothing to cancel");
+        let token = CancelToken::new();
+        let mut r = req(vec![1, 5], 4);
+        r.cancel = Some(token.clone());
+        s.admit(r, log_sink().0, 16, EOS);
+        assert!(!s.cancel_requested());
+        token.cancel();
+        assert!(token.is_cancelled(), "clones share the flag");
+        assert!(s.cancel_requested());
+
+        // an uncancellable request never reports
+        let mut s = RowSlot::default();
+        s.admit(req(vec![1], 2), log_sink().0, 16, EOS);
+        assert!(!s.cancel_requested());
+
+        // a drained row delivers normally even if the flag flips late
+        let mut s = RowSlot::default();
+        let token = CancelToken::new();
+        let mut r = req(vec![1], 0); // zero budget: drained at admission
+        r.cancel = Some(token.clone());
+        s.admit(r, log_sink().0, 16, EOS);
+        token.cancel();
+        assert!(!s.cancel_requested(), "finished completions still deliver");
+    }
+
+    #[test]
+    fn fail_fires_on_fail_with_the_delivered_tokens() {
+        let mut s = RowSlot::default();
+        let (sink, log) = log_sink();
+        let r = req(vec![1], 10).with_stop(vec![vec![8, 9]]);
+        s.admit(r, sink, 64, EOS);
+        s.consume(Some(&row_for(5, 16))); // first token streams
+        s.consume(Some(&row_for(8, 16))); // held back (partial stop match)
+        assert_eq!(log.borrow().toks, vec![5]);
+        s.fail(FailClass::Internal, "injected failure");
+        assert_eq!(s.state(), SlotState::Vacant, "the row is freed");
+        let log = log.borrow();
+        // the default on_fail folds into a Completion that repeats exactly
+        // the delivered tokens — the held-back 8 is not smuggled out
+        let c = log.done.as_ref().expect("terminal event fired");
+        assert_eq!(c.tokens, vec![5]);
+        assert_eq!(c.stop, StopReason::Error);
+        assert_eq!(c.stop.label(), "error");
+    }
+
+    #[test]
+    fn fail_with_cancelled_class_maps_to_the_cancelled_stop() {
+        let mut s = RowSlot::default();
+        let (sink, log) = log_sink();
+        s.admit(req(vec![1, 2], 4), sink, 16, EOS);
+        s.fail(FailClass::Cancelled, "client went away");
+        let log = log.borrow();
+        let c = log.done.as_ref().unwrap();
+        assert!(c.tokens.is_empty());
+        assert_eq!(c.stop, StopReason::Cancelled);
+        assert_eq!(c.stop.label(), "cancelled");
+    }
+
+    #[test]
+    fn park_releases_pages_and_re_prefill_rebuilds_token_identically() {
+        let mut a = PageAllocator::new(13, 2);
+        let mut s = RowSlot::default();
+        s.admit(req(vec![1, 2, 3], 6), log_sink().0, 64, EOS);
+        s.attach_pages(&mut a).unwrap();
+        for _ in 0..4 {
+            s.ensure_page(&mut a).unwrap();
+            s.consume(Some(&row_for(7, 16)));
+        }
+        assert_eq!(s.state(), SlotState::Decoding);
+        assert!(a.outstanding() > 0);
+
+        s.park(&mut a);
+        assert_eq!(s.state(), SlotState::Parked);
+        assert_eq!(a.outstanding(), 0, "parking released every page");
+        assert!(s.live(), "parked rows stay spoken for");
+        assert!(s.no_progress(), "parked rows can join nothing");
+        assert_eq!(s.step_input(PAD), (PAD, 0), "parked rows write scratch");
+        assert!(!s.consumes_next_logits());
+        s.ensure_page(&mut a).unwrap();
+        assert_eq!(a.outstanding(), 0, "parked rows never grow pages");
+
+        // unparking is re_prefill: the whole sequence (prompt + the 2
+        // generated tokens) becomes the new prompt, sampler untouched
+        let occ = s.0.as_mut().unwrap();
+        assert_eq!(occ.prompt_len, 5, "3 prompt + 2 generated");
+        assert_eq!(occ.fed, 0);
+        assert_eq!(occ.preempts, 1);
+        occ.parked = false;
+        assert_eq!(s.state(), SlotState::Prefilling);
+        assert!(s.needs_prefill_logits(), "resumes by sampling the next token");
+    }
+
+    #[test]
+    fn max_total_len_tracks_budget_and_window() {
+        let mut r = RowPlan::new(vec![1, 2, 3], 64, 4, EOS);
+        assert_eq!(r.max_total_len(), 7, "3 prompt + 4 budget");
+        r.push(9);
+        assert_eq!(r.max_total_len(), 7, "spending budget moves nothing");
+        let r = RowPlan::new(vec![1, 2, 3], 5, 100, EOS);
+        assert_eq!(r.max_total_len(), 5, "clamped to the window");
     }
 }

@@ -60,6 +60,8 @@ const SPEC: &[(&str, &str, &str)] = &[
     ("max-queue", "32", "serve: admission-queue bound (further requests get 429)"),
     ("max-new", "32", "serve: default per-request generation budget"),
     ("max-new-cap", "256", "serve: hard per-request cap on max_new (larger asks are clamped)"),
+    ("event-buf", "512", "serve: per-request event buffer (stalled clients beyond it are dropped)"),
+    ("fault", "", "serve: deterministic fault plan (LISA_FAULT syntax; chaos testing)"),
     ("scale", "1.0", "experiment step-budget multiplier"),
     ("samples", "480", "train: corpus size"),
     ("eval", "true", "train: evaluate on the val split afterwards"),
@@ -225,6 +227,13 @@ fn cmd_serve(a: &Args) -> Result<()> {
         );
     }
 
+    // Deterministic fault injection (DESIGN.md §13): `--fault` overrides
+    // any LISA_FAULT already picked up from the environment.
+    if let Some(spec) = a.get_opt("fault") {
+        rt.set_fault_plan(&spec)?;
+        println!("fault injection armed: {spec}");
+    }
+
     // Synthetic-corpus tokenizer, same construction as training: a server
     // for a checkpoint trained with `--samples N --seed S` must be
     // started with the same two flags to agree on the vocabulary.
@@ -248,6 +257,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
         max_queue: a.get_usize("max-queue")?.max(1),
         default_max_new: a.get_usize("max-new")?.max(1),
         max_new_cap: a.get_usize("max-new-cap")?.max(1),
+        event_buf: a.get_usize("event-buf")?.max(1),
         default_spec: ctx.sampler.clone(),
         gen_seed: ctx.gen_seed,
         ..Default::default()

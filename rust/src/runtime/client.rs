@@ -30,6 +30,7 @@ use anyhow::{bail, Context, Result};
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
 
 use super::artifacts::{DType, Manifest, SegmentSig};
+use super::fault::FaultInjector;
 use super::tensor::{DeviceTensor, HostTensor, HostTensorI32};
 
 /// A training-step operand: host f32/i32 tensor (uploaded per call), a
@@ -239,6 +240,9 @@ pub struct Runtime {
     pub backend: String,
     ids: RefCell<BTreeMap<String, SegId>>,
     slots: RefCell<Vec<SegSlot>>,
+    /// Deterministic fault injection (armed from `LISA_FAULT` or
+    /// [`Runtime::set_fault_plan`]); shared with the page allocator.
+    fault: Rc<RefCell<FaultInjector>>,
 }
 
 impl Runtime {
@@ -258,7 +262,33 @@ impl Runtime {
             backend: backend.to_string(),
             ids: RefCell::new(BTreeMap::new()),
             slots: RefCell::new(Vec::new()),
+            fault: Rc::new(RefCell::new(FaultInjector::from_env())),
         })
+    }
+
+    /// Replace the armed fault plans (tests / `--fault`). An empty spec
+    /// disarms injection.
+    pub fn set_fault_plan(&self, spec: &str) -> Result<()> {
+        *self.fault.borrow_mut() = FaultInjector::parse(spec)?;
+        Ok(())
+    }
+
+    /// Shared handle to the injector, for wiring into the page allocator.
+    pub fn fault_handle(&self) -> Rc<RefCell<FaultInjector>> {
+        self.fault.clone()
+    }
+
+    /// Consult the injector before executing segment `id`.
+    fn check_fault(&self, id: SegId) -> Result<()> {
+        let mut f = self.fault.borrow_mut();
+        if f.is_empty() {
+            return Ok(());
+        }
+        let name = self.slots.borrow()[id.0].name.clone();
+        match f.on_segment(&name) {
+            Some(e) => Err(e.into()),
+            None => Ok(()),
+        }
     }
 
     /// Intern a segment name (no compilation; that stays lazy).
@@ -342,6 +372,7 @@ impl Runtime {
 
     /// Execute an interned segment, outputs as host literals.
     pub fn run_id(&self, id: SegId, operands: &[Operand]) -> Result<Vec<Literal>> {
+        self.check_fault(id)?;
         let seg = self.segment_by_id(id)?;
         let t0 = Instant::now();
         let out = seg.run(operands)?;
@@ -353,6 +384,7 @@ impl Runtime {
     /// when the artifact allows it (falling back to host literals for
     /// tuple-rooted/legacy artifacts).
     pub fn run_chained(&self, id: SegId, operands: &[Operand]) -> Result<ChainVal> {
+        self.check_fault(id)?;
         let seg = self.segment_by_id(id)?;
         let t0 = Instant::now();
         let out = if seg.sig.device_chainable() {

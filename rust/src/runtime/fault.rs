@@ -1,0 +1,412 @@
+//! Deterministic fault injection for the execution hot path.
+//!
+//! Production hardware faults (a wedged device, a failed allocation, a
+//! transient runtime hiccup) are not reproducible in CI. This module makes
+//! them so: a [`FaultInjector`] holds a list of [`FaultPlan`]s — "fail the
+//! Nth execution of segment X", "fail every Kth page allocation" — and the
+//! runtime consults it at the top of every segment execution while the
+//! [`PageAllocator`](crate::engine::PageAllocator) consults it on every
+//! page grant. Counting is per-site and strictly deterministic, so a chaos
+//! test that replays the same request mix under the same plan sees the
+//! fault land on exactly the same step every run.
+//!
+//! Plans come from the `LISA_FAULT` environment variable (or
+//! `Runtime::set_fault_plan` in tests), a `;`-separated list:
+//!
+//! ```text
+//! seg:<name>:nth=<k>[:every=<k>][:count=<n>|:count=*][:transient|:persistent]
+//! pool:nth=<k>[:every=<k>][:count=<n>|:count=*]
+//! ```
+//!
+//! * `seg:<name>` targets a segment by manifest name; a trailing `*`
+//!   makes it a prefix match (`seg:blk_*` hits every block segment).
+//! * `nth` is the 1-based execution index at which the plan first fires
+//!   (default 1); `every` repeats it each `every` executions after that
+//!   (default: fire once, at `nth` only).
+//! * `count` caps the total number of firings (`*` = unlimited; default
+//!   unlimited — a plan without `every` fires once regardless).
+//! * `transient` faults are expected to succeed on retry; `persistent`
+//!   faults fail every retry of the same execution. Default `transient`.
+//!   Pool plans always surface as [`FaultKind::PoolExhausted`].
+//!
+//! Injected failures surface as [`FaultError`] inside `anyhow::Error`, so
+//! the serve loop can `downcast_ref::<FaultError>()` to classify them; the
+//! allocator's *real* exhaustion error reuses the same type with
+//! `hit == 0`, giving pool pressure one classification path whether it was
+//! injected or earned.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+/// How an injected (or classified) failure behaves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Goes away if the same work is retried (spurious runtime error).
+    Transient,
+    /// Fails every retry; the work must be abandoned or re-planned.
+    Persistent,
+    /// A page-pool allocation failure: schedulable, not fatal.
+    PoolExhausted,
+}
+
+impl FaultKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Transient => "transient",
+            FaultKind::Persistent => "persistent",
+            FaultKind::PoolExhausted => "pool-exhausted",
+        }
+    }
+}
+
+/// A typed injected failure. Carried inside `anyhow::Error`; consumers
+/// classify with `err.downcast_ref::<FaultError>()`.
+#[derive(Debug, Clone)]
+pub struct FaultError {
+    pub kind: FaultKind,
+    /// The site that failed: a segment name, or `"page_pool"`.
+    pub site: String,
+    /// 1-based execution index at which the plan fired (0 for errors that
+    /// were not injected but reuse this type for classification).
+    pub hit: u64,
+}
+
+impl FaultError {
+    /// The allocator's real (non-injected) exhaustion error: same type as
+    /// an injected pool fault so callers classify both the same way.
+    pub fn pool_exhausted() -> FaultError {
+        FaultError { kind: FaultKind::PoolExhausted, site: "page_pool".to_string(), hit: 0 }
+    }
+}
+
+impl fmt::Display for FaultError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.hit == 0 {
+            write!(f, "{} failure at {}", self.kind.label(), self.site)
+        } else {
+            write!(
+                f,
+                "injected {} fault at {} (execution #{})",
+                self.kind.label(),
+                self.site,
+                self.hit
+            )
+        }
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Target {
+    /// Segment-name match; `prefix` selects starts-with matching.
+    Segment { name: String, prefix: bool },
+    Pool,
+}
+
+/// One parsed fault plan (see the module docs for the spec grammar).
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    target: Target,
+    nth: u64,
+    every: u64,
+    /// Firings left; `None` = unlimited.
+    remaining: Option<u64>,
+    kind: FaultKind,
+}
+
+impl FaultPlan {
+    fn matches_count(&self, n: u64) -> bool {
+        if self.remaining == Some(0) {
+            return false;
+        }
+        if self.every > 0 {
+            n >= self.nth && (n - self.nth) % self.every == 0
+        } else {
+            n == self.nth
+        }
+    }
+
+    fn matches_site(&self, site: Option<&str>) -> bool {
+        match (&self.target, site) {
+            (Target::Pool, None) => true,
+            (Target::Segment { name, prefix }, Some(s)) => {
+                if *prefix {
+                    s.starts_with(name.as_str())
+                } else {
+                    s == name
+                }
+            }
+            _ => false,
+        }
+    }
+}
+
+/// Deterministic fault injector: per-site execution counters + plans.
+#[derive(Debug, Default)]
+pub struct FaultInjector {
+    plans: Vec<FaultPlan>,
+    seg_counts: BTreeMap<String, u64>,
+    alloc_count: u64,
+    /// Total faults injected so far (observability + test assertions).
+    pub injected: u64,
+}
+
+impl FaultInjector {
+    /// Parse a `;`-separated plan spec. An empty/whitespace spec yields an
+    /// injector with no plans.
+    pub fn parse(spec: &str) -> Result<FaultInjector> {
+        let mut plans = Vec::new();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            plans.push(Self::parse_plan(part)?);
+        }
+        Ok(FaultInjector { plans, ..FaultInjector::default() })
+    }
+
+    fn parse_plan(part: &str) -> Result<FaultPlan> {
+        let mut fields = part.split(':');
+        let target = match fields.next() {
+            Some("seg") => {
+                let name = fields.next().filter(|n| !n.is_empty()).map(str::to_string);
+                match name {
+                    Some(mut name) => {
+                        let prefix = name.ends_with('*');
+                        if prefix {
+                            name.pop();
+                        }
+                        Target::Segment { name, prefix }
+                    }
+                    None => bail!("fault plan {part:?}: seg needs a segment name"),
+                }
+            }
+            Some("pool") => Target::Pool,
+            _ => bail!("fault plan {part:?}: must start with seg:<name> or pool"),
+        };
+        let mut nth = 1u64;
+        let mut every = 0u64;
+        let mut remaining = None;
+        let mut kind = match target {
+            Target::Pool => FaultKind::PoolExhausted,
+            Target::Segment { .. } => FaultKind::Transient,
+        };
+        for f in fields {
+            if let Some(v) = f.strip_prefix("nth=") {
+                nth = v.parse().ok().filter(|&n| n >= 1).ok_or_else(|| {
+                    anyhow::anyhow!("fault plan {part:?}: nth must be an integer >= 1")
+                })?;
+            } else if let Some(v) = f.strip_prefix("every=") {
+                every = v.parse().ok().filter(|&n| n >= 1).ok_or_else(|| {
+                    anyhow::anyhow!("fault plan {part:?}: every must be an integer >= 1")
+                })?;
+            } else if let Some(v) = f.strip_prefix("count=") {
+                remaining = if v == "*" {
+                    None
+                } else {
+                    Some(v.parse::<u64>().ok().filter(|&n| n >= 1).ok_or_else(|| {
+                        anyhow::anyhow!("fault plan {part:?}: count must be >= 1 or *")
+                    })?)
+                };
+            } else if f == "transient" || f == "persistent" {
+                if target == Target::Pool {
+                    bail!("fault plan {part:?}: pool faults are always pool-exhausted");
+                }
+                kind = if f == "transient" {
+                    FaultKind::Transient
+                } else {
+                    FaultKind::Persistent
+                };
+            } else {
+                bail!("fault plan {part:?}: unknown field {f:?}");
+            }
+        }
+        Ok(FaultPlan { target, nth, every, remaining, kind })
+    }
+
+    /// Read `LISA_FAULT`; an unset/empty variable yields no plans, a
+    /// malformed spec is logged and ignored (a typo must not take down a
+    /// production server at boot).
+    pub fn from_env() -> FaultInjector {
+        match std::env::var("LISA_FAULT") {
+            Ok(spec) if !spec.trim().is_empty() => match Self::parse(&spec) {
+                Ok(inj) => {
+                    log::warn!("fault injection armed: LISA_FAULT={spec}");
+                    inj
+                }
+                Err(e) => {
+                    log::warn!("ignoring malformed LISA_FAULT={spec:?}: {e:#}");
+                    FaultInjector::default()
+                }
+            },
+            _ => FaultInjector::default(),
+        }
+    }
+
+    /// True when no plans are armed (hot paths skip all bookkeeping).
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+
+    fn fire(plans: &mut [FaultPlan], injected: &mut u64, site: &str, n: u64) -> Option<FaultError> {
+        let is_pool = site == "page_pool";
+        for p in plans.iter_mut() {
+            let site_arg = if is_pool { None } else { Some(site) };
+            if p.matches_site(site_arg) && p.matches_count(n) {
+                if let Some(r) = &mut p.remaining {
+                    *r -= 1;
+                }
+                *injected += 1;
+                return Some(FaultError { kind: p.kind, site: site.to_string(), hit: n });
+            }
+        }
+        None
+    }
+
+    /// Called by the runtime before executing segment `name`. Advances the
+    /// per-segment execution counter and returns the fault to inject, if
+    /// any. A transient fault does NOT consume the execution slot: the
+    /// retry of the same logical execution re-runs under the same index
+    /// and succeeds (its plan already fired), while a persistent plan with
+    /// `count=*` keeps failing the retries too.
+    pub fn on_segment(&mut self, name: &str) -> Option<FaultError> {
+        if self.plans.is_empty() {
+            return None;
+        }
+        let n = {
+            let c = self.seg_counts.entry(name.to_string()).or_insert(0);
+            *c += 1;
+            *c
+        };
+        let hit = Self::fire(&mut self.plans, &mut self.injected, name, n);
+        if let Some(e) = &hit {
+            if e.kind == FaultKind::Transient {
+                // the failed execution never ran: rewind so the retry
+                // replays the same index (now spent) and goes through
+                *self.seg_counts.get_mut(name).expect("counter was just inserted") -= 1;
+            }
+        }
+        hit
+    }
+
+    /// Called by the page allocator before granting a page.
+    pub fn on_alloc(&mut self) -> Option<FaultError> {
+        if self.plans.is_empty() {
+            return None;
+        }
+        self.alloc_count += 1;
+        Self::fire(&mut self.plans, &mut self.injected, "page_pool", self.alloc_count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg_hits(inj: &mut FaultInjector, name: &str, n: usize) -> Vec<bool> {
+        (0..n).map(|_| inj.on_segment(name).is_some()).collect()
+    }
+
+    #[test]
+    fn nth_plan_fires_exactly_once_at_the_nth_execution() {
+        let mut inj = FaultInjector::parse("seg:step:nth=3:persistent").unwrap();
+        assert_eq!(seg_hits(&mut inj, "step", 5), vec![false, false, true, false, false]);
+        assert_eq!(inj.injected, 1);
+        // other segments share nothing with the targeted one
+        assert_eq!(seg_hits(&mut inj, "other", 4), vec![false; 4]);
+    }
+
+    #[test]
+    fn transient_fault_leaves_the_execution_slot_for_the_retry() {
+        let mut inj = FaultInjector::parse("seg:step:nth=2:transient").unwrap();
+        let e = [
+            inj.on_segment("step"), // #1: clean
+            inj.on_segment("step"), // #2: fires, counter rewound
+            inj.on_segment("step"), // retry of #2: plan spent, clean
+            inj.on_segment("step"), // #3: clean
+        ];
+        assert!(e[0].is_none() && e[2].is_none() && e[3].is_none());
+        let f = e[1].as_ref().unwrap();
+        assert_eq!((f.kind, f.hit), (FaultKind::Transient, 2));
+    }
+
+    #[test]
+    fn every_and_count_control_repetition() {
+        let mut inj = FaultInjector::parse("seg:step:nth=2:every=3:count=2:persistent").unwrap();
+        // fires at 2 and 5, then the count cap stops 8
+        let hits = seg_hits(&mut inj, "step", 9);
+        let fired: Vec<usize> =
+            hits.iter().enumerate().filter(|(_, h)| **h).map(|(i, _)| i + 1).collect();
+        assert_eq!(fired, vec![2, 5]);
+
+        let mut inj = FaultInjector::parse("seg:step:every=2:count=*:persistent").unwrap();
+        let hits = seg_hits(&mut inj, "step", 6);
+        assert_eq!(hits, vec![true, false, true, false, true, false]);
+    }
+
+    #[test]
+    fn prefix_target_matches_any_segment_with_that_stem() {
+        let mut inj = FaultInjector::parse("seg:blk_*:nth=1:count=2:persistent").unwrap();
+        assert!(inj.on_segment("blk_0_fwd").is_some());
+        assert!(inj.on_segment("embed_fwd").is_none());
+        assert!(inj.on_segment("blk_1_fwd").is_some()); // separate counter, nth=1
+        assert!(inj.on_segment("blk_2_fwd").is_none()); // count exhausted
+    }
+
+    #[test]
+    fn pool_plans_fire_on_allocation_counts_with_pool_exhausted_kind() {
+        let mut inj = FaultInjector::parse("pool:nth=2").unwrap();
+        assert!(inj.on_alloc().is_none());
+        let e = inj.on_alloc().unwrap();
+        assert_eq!((e.kind, e.site.as_str(), e.hit), (FaultKind::PoolExhausted, "page_pool", 2));
+        assert!(inj.on_alloc().is_none());
+        // segment executions never consume the alloc counter
+        let mut inj = FaultInjector::parse("pool:nth=1").unwrap();
+        assert!(inj.on_segment("step").is_none());
+        assert!(inj.on_alloc().is_some());
+    }
+
+    #[test]
+    fn multiple_plans_are_independent() {
+        let mut inj =
+            FaultInjector::parse("seg:a:nth=1:persistent; pool:nth=1; seg:b:nth=2").unwrap();
+        assert!(inj.on_segment("a").is_some());
+        assert!(inj.on_segment("b").is_none());
+        assert!(inj.on_segment("b").is_some());
+        assert!(inj.on_alloc().is_some());
+        assert_eq!(inj.injected, 3);
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected_with_a_reason() {
+        for (spec, needle) in [
+            ("step:nth=1", "seg:<name> or pool"),
+            ("seg::nth=1", "needs a segment name"),
+            ("seg:x:nth=0", "nth"),
+            ("seg:x:every=zero", "every"),
+            ("seg:x:count=0", "count"),
+            ("seg:x:flaky", "unknown field"),
+            ("pool:persistent", "always pool-exhausted"),
+        ] {
+            let err = format!("{:#}", FaultInjector::parse(spec).unwrap_err());
+            assert!(err.contains(needle), "{spec} -> {err}");
+        }
+        assert!(FaultInjector::parse("").unwrap().is_empty());
+        assert!(FaultInjector::parse(" ; ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn fault_error_classifies_through_anyhow_downcast() {
+        let mut inj = FaultInjector::parse("seg:x:nth=1:persistent").unwrap();
+        let err: anyhow::Error = inj.on_segment("x").unwrap().into();
+        let err = err.context("executing segment x");
+        let f = err.downcast_ref::<FaultError>().expect("typed fault survives context");
+        assert_eq!(f.kind, FaultKind::Persistent);
+        let real = anyhow::Error::new(FaultError::pool_exhausted());
+        assert_eq!(real.downcast_ref::<FaultError>().unwrap().kind, FaultKind::PoolExhausted);
+    }
+}

@@ -9,6 +9,7 @@
 pub mod artifacts;
 pub mod client;
 pub mod device_cache;
+pub mod fault;
 pub mod tensor;
 
 pub use artifacts::{
@@ -16,4 +17,5 @@ pub use artifacts::{
 };
 pub use client::{ChainVal, ExecStats, Operand, Runtime, SegId, Segment};
 pub use device_cache::{CacheStats, DeviceCache};
+pub use fault::{FaultError, FaultInjector, FaultKind, FaultPlan};
 pub use tensor::{numel, DeviceTensor, HostTensor, HostTensorI32};

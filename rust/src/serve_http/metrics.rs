@@ -13,12 +13,16 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::engine::LoopStats;
+use crate::engine::{FailClass, LoopStats};
 use crate::runtime::ExecStats;
 use crate::util::hist::Histogram;
 
 /// Status codes with dedicated counters; anything else lands in `other`.
 const STATUS_CODES: [u16; 8] = [200, 400, 404, 405, 413, 429, 500, 503];
+
+/// Failure classes with dedicated counters (`lisa_serve_failures_total`).
+const FAIL_CLASSES: [FailClass; 3] =
+    [FailClass::Internal, FailClass::Overloaded, FailClass::Cancelled];
 
 /// Engine-side observables, copied out of the model thread.
 #[derive(Debug, Default, Clone)]
@@ -40,6 +44,10 @@ pub struct Metrics {
     queue_depth: AtomicUsize,
     status: [AtomicU64; STATUS_CODES.len()],
     status_other: AtomicU64,
+    /// Terminal request failures by [`FailClass`], counted at the sink
+    /// (the serve loop's `on_fail`), independent of what HTTP status the
+    /// worker later manages to write.
+    failures: [AtomicU64; FAIL_CLASSES.len()],
     tokens_out: AtomicU64,
     completions: AtomicU64,
     /// Set by request completion, cleared by the model thread when it
@@ -58,6 +66,7 @@ impl Metrics {
             queue_depth: AtomicUsize::new(0),
             status: Default::default(),
             status_other: AtomicU64::new(0),
+            failures: Default::default(),
             tokens_out: AtomicU64::new(0),
             completions: AtomicU64::new(0),
             dirty: AtomicBool::new(false),
@@ -77,6 +86,17 @@ impl Metrics {
             Some(i) => self.status[i].load(Ordering::Relaxed),
             None => self.status_other.load(Ordering::Relaxed),
         }
+    }
+
+    /// Count a terminal request failure by class.
+    pub fn fail(&self, class: FailClass) {
+        let i = FAIL_CLASSES.iter().position(|c| *c == class).expect("all classes have a slot");
+        self.failures[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn fail_count(&self, class: FailClass) -> u64 {
+        let i = FAIL_CLASSES.iter().position(|c| *c == class).expect("all classes have a slot");
+        self.failures[i].load(Ordering::Relaxed)
     }
 
     pub fn enqueue(&self) {
@@ -181,6 +201,21 @@ impl Metrics {
             let _ = writeln!(o, "{name} {}", self.tok_rate.quantile(q));
         }
 
+        let _ = writeln!(
+            o,
+            "# HELP lisa_serve_failures_total Terminal request failures by class \
+             (internal = error drain, overloaded = pool pressure, cancelled = client gone)."
+        );
+        let _ = writeln!(o, "# TYPE lisa_serve_failures_total counter");
+        for (i, class) in FAIL_CLASSES.iter().enumerate() {
+            let _ = writeln!(
+                o,
+                "lisa_serve_failures_total{{class=\"{}\"}} {}",
+                class.label(),
+                self.failures[i].load(Ordering::Relaxed)
+            );
+        }
+
         let _ = writeln!(o, "# HELP lisa_serve_uptime_seconds Seconds since the server started.");
         let _ = writeln!(o, "# TYPE lisa_serve_uptime_seconds gauge");
         let _ = writeln!(o, "lisa_serve_uptime_seconds {}", self.uptime_s());
@@ -196,6 +231,28 @@ impl Metrics {
                 l.streamed_prompt_tokens,
             ),
             ("lisa_serve_admitted_total", "Requests admitted into decode rows.", l.admitted),
+            ("lisa_serve_retries_total", "Failed executions retried in place.", l.retries),
+            (
+                "lisa_serve_reprefills_total",
+                "Rows rebuilt from scratch after a quarantine.",
+                l.reprefills,
+            ),
+            (
+                "lisa_serve_error_drains_total",
+                "Rows drained with a terminal error.",
+                l.error_drains,
+            ),
+            (
+                "lisa_serve_preemptions_total",
+                "Rows parked (pages released) under pool pressure.",
+                l.preemptions,
+            ),
+            ("lisa_serve_cancelled_total", "Rows drained on client cancellation.", l.cancelled),
+            (
+                "lisa_serve_rejected_total",
+                "Requests refused at admission (pool reservation failed).",
+                l.rejected,
+            ),
         ] {
             let _ = writeln!(o, "# HELP {name} {help}");
             let _ = writeln!(o, "# TYPE {name} counter");
@@ -285,6 +342,43 @@ mod tests {
         m.request_done(1, 0.1);
         assert!(m.take_dirty());
         assert!(!m.take_dirty());
+    }
+
+    #[test]
+    fn failure_classes_count_independently_and_render() {
+        let m = Metrics::new();
+        m.fail(FailClass::Internal);
+        m.fail(FailClass::Overloaded);
+        m.fail(FailClass::Overloaded);
+        assert_eq!(m.fail_count(FailClass::Internal), 1);
+        assert_eq!(m.fail_count(FailClass::Overloaded), 2);
+        assert_eq!(m.fail_count(FailClass::Cancelled), 0);
+        let text = m.render();
+        assert!(text.contains("lisa_serve_failures_total{class=\"internal\"} 1"), "{text}");
+        assert!(text.contains("lisa_serve_failures_total{class=\"overloaded\"} 2"), "{text}");
+        assert!(text.contains("lisa_serve_failures_total{class=\"cancelled\"} 0"), "{text}");
+    }
+
+    #[test]
+    fn recovery_loop_counters_render() {
+        let m = Metrics::new();
+        let loops = LoopStats {
+            retries: 4,
+            reprefills: 2,
+            error_drains: 1,
+            preemptions: 3,
+            cancelled: 5,
+            rejected: 6,
+            ..Default::default()
+        };
+        m.set_loop(loops);
+        let text = m.render();
+        assert!(text.contains("lisa_serve_retries_total 4"), "{text}");
+        assert!(text.contains("lisa_serve_reprefills_total 2"), "{text}");
+        assert!(text.contains("lisa_serve_error_drains_total 1"), "{text}");
+        assert!(text.contains("lisa_serve_preemptions_total 3"), "{text}");
+        assert!(text.contains("lisa_serve_cancelled_total 5"), "{text}");
+        assert!(text.contains("lisa_serve_rejected_total 6"), "{text}");
     }
 
     #[test]

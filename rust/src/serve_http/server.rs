@@ -10,16 +10,23 @@
 //! means the queue is full and the worker answers `429 Too Many
 //! Requests` with `Retry-After` — in-flight rows are never disturbed.
 //!
-//! Per-request event channels are *unbounded* in the other direction
-//! (model → worker), so a slow client can never stall the decode loop;
-//! memory is bounded by `max_new` tokens per admitted request.
+//! Per-request event channels are *bounded* in the other direction too
+//! (model → worker, [`ServeConfig::event_buf`] events): the model thread
+//! never blocks on them — a client that stalls past the buffer (or hangs
+//! up) is marked dead, its [`CancelToken`] flips, and the serve loop
+//! drains the row between steps, releasing its K/V pages (DESIGN.md
+//! §13). Failures surface the same way: [`RequestSink::on_fail`] crosses
+//! the channel as [`Event::Fail`] and maps to `500` (internal), `503 +
+//! Retry-After` (overloaded) or a terminal SSE error frame, with a
+//! per-class `lisa_serve_failures_total` counter.
 //!
-//! Shutdown: `SIGINT` (or [`ServerState::request_shutdown`]) makes the
-//! channel source report `Closed`; the serve loop stops admitting,
-//! drains in-flight rows (their clients get complete responses), and
-//! returns. Queued-but-unadmitted requests are then bounced — their
-//! event channels close and the waiting workers answer `503`. A second
-//! `SIGINT` exits immediately.
+//! Shutdown: `SIGINT` or `SIGTERM` (or
+//! [`ServerState::request_shutdown`]) makes the channel source report
+//! `Closed`; the serve loop stops admitting, drains in-flight rows
+//! (their clients get complete responses), and returns.
+//! Queued-but-unadmitted requests are then bounced — their event
+//! channels close and the waiting workers answer `503`. A second signal
+//! exits immediately.
 //!
 //! [`ServeSession`]: crate::engine::ServeSession
 
@@ -35,7 +42,8 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::data::tokenizer::{Tokenizer, EOS, PAD};
 use crate::engine::serve::request_seed;
 use crate::engine::{
-    Completion, Engine, Feed, LoopStats, Request, RequestSink, RequestSource, SamplerSpec,
+    CancelToken, Completion, Engine, FailClass, Feed, LoopStats, Request, RequestSink,
+    RequestSource, SamplerSpec, ServeFail,
 };
 use crate::util::json::Json;
 
@@ -71,6 +79,10 @@ pub struct ServeConfig {
     pub gen_seed: u64,
     pub eos: i32,
     pub pad: i32,
+    /// Model → worker event buffer per request. A client that stalls
+    /// long enough to fill it is dropped and its row cancelled — the
+    /// model thread never blocks on a slow consumer.
+    pub event_buf: usize,
 }
 
 impl Default for ServeConfig {
@@ -85,6 +97,7 @@ impl Default for ServeConfig {
             gen_seed: 42,
             eos: EOS,
             pad: PAD,
+            event_buf: 512,
         }
     }
 }
@@ -125,17 +138,41 @@ impl ServerState {
 enum Event {
     Token(i32),
     Done(Completion),
+    /// Terminal failure (error drain, overload rejection, cancellation).
+    Fail(ServeFail),
 }
 
 /// The per-request sink the model thread drives. `Send` so it can cross
 /// the admission channel; after admission it lives on the model thread.
 struct HttpSink {
-    tx: mpsc::Sender<Event>,
+    tx: SyncSender<Event>,
+    /// Shared with the request handed to the serve loop: flipped when the
+    /// client is unreachable so the loop drains the row between steps.
+    cancel: CancelToken,
+    /// The event channel stalled or closed — stop sending, row cancelled.
+    dead: bool,
     state: Arc<ServerState>,
     /// Queue-entry time: TTFT measures what the client experiences.
     t0: Instant,
     saw_first: bool,
     n: u64,
+}
+
+impl HttpSink {
+    /// Non-blocking send with drop-on-stall: the model thread must never
+    /// wait on a client. A full buffer (stalled reader) or a closed one
+    /// (worker gone: client hung up, deadline hit) marks the sink dead
+    /// and cancels the row so its pages free up instead of decoding to
+    /// nobody.
+    fn push(&mut self, ev: Event) {
+        if self.dead {
+            return;
+        }
+        if self.tx.try_send(ev).is_err() {
+            self.dead = true;
+            self.cancel.cancel();
+        }
+    }
 }
 
 impl RequestSink for HttpSink {
@@ -145,13 +182,17 @@ impl RequestSink for HttpSink {
             self.state.metrics.ttft.observe(self.t0.elapsed().as_secs_f64());
         }
         self.n += 1;
-        // a dead client just means nobody is listening; keep decoding
-        let _ = self.tx.send(Event::Token(tok));
+        self.push(Event::Token(tok));
     }
 
     fn on_done(&mut self, completion: &Completion) {
         self.state.metrics.request_done(self.n, self.t0.elapsed().as_secs_f64());
-        let _ = self.tx.send(Event::Done(completion.clone()));
+        self.push(Event::Done(completion.clone()));
+    }
+
+    fn on_fail(&mut self, fail: &ServeFail) {
+        self.state.metrics.fail(fail.class);
+        self.push(Event::Fail(fail.clone()));
     }
 }
 
@@ -353,13 +394,17 @@ fn completions(
         Err(e) => return respond_error(w, st, 400, &format!("{e:#}")),
     };
     let stream_mode = creq.stream;
-    let req = match build_request(st, &creq) {
+    let mut req = match build_request(st, &creq) {
         Ok(r) => r,
         Err(e) => return respond_error(w, st, 400, &format!("{e:#}")),
     };
-    let (etx, erx) = mpsc::channel();
+    let cancel = CancelToken::new();
+    req.cancel = Some(cancel.clone());
+    let (etx, erx) = mpsc::sync_channel(st.cfg.event_buf.max(1));
     let sink = HttpSink {
         tx: etx,
+        cancel: cancel.clone(),
+        dead: false,
         state: Arc::clone(st),
         t0: Instant::now(),
         saw_first: false,
@@ -383,10 +428,14 @@ fn completions(
         }
     }
     if stream_mode {
-        respond_stream(w, st, erx);
+        respond_stream(w, st, erx, &cancel);
     } else {
-        respond_full(w, st, erx);
+        respond_full(w, st, erx, &cancel);
     }
+    // nobody reads events past this point (the responder returned or the
+    // client went away): flip the token so a still-decoding row drains
+    // and frees its pages. Completed rows ignore a late cancel.
+    cancel.cancel();
 }
 
 /// Resolve a wire request against the server's tokenizer and limits.
@@ -434,6 +483,7 @@ fn build_request(st: &ServerState, c: &CompletionReq) -> Result<Request> {
         seed,
         first_token: None,
         stop,
+        cancel: None, // attached per connection in `completions`
     })
 }
 
@@ -450,17 +500,41 @@ fn completion_json(st: &ServerState, c: &Completion) -> Json {
     ])
 }
 
-fn respond_full(w: &mut TcpStream, st: &ServerState, erx: Receiver<Event>) {
+/// Status line + extra headers for a failed request. Overloaded maps to
+/// 503 with `Retry-After` (the pool will drain); internal errors and
+/// cancellations (a deadline can cancel a request whose client is still
+/// connected) map to 500.
+fn fail_status(f: &ServeFail) -> (u16, &'static [(&'static str, &'static str)]) {
+    match f.class {
+        FailClass::Overloaded => (503, &[("Retry-After", "1")]),
+        FailClass::Internal | FailClass::Cancelled => (500, &[]),
+    }
+}
+
+fn respond_full(w: &mut TcpStream, st: &ServerState, erx: Receiver<Event>, cancel: &CancelToken) {
     // tokens also arrive here; the completion repeats them, so the
     // non-streaming path just waits for Done
     let completion = loop {
         match erx.recv_timeout(REQUEST_DEADLINE) {
             Ok(Event::Token(_)) => {}
             Ok(Event::Done(c)) => break c,
+            Ok(Event::Fail(f)) => {
+                let (code, extra) = fail_status(&f);
+                st.metrics.inc_status(code);
+                let _ = proto::write_response(
+                    w,
+                    code,
+                    "application/json",
+                    extra,
+                    &proto::error_body(code, &f.message),
+                );
+                return;
+            }
             Err(RecvTimeoutError::Disconnected) => {
                 return respond_error(w, st, 503, "request dropped: server shutting down");
             }
             Err(RecvTimeoutError::Timeout) => {
+                cancel.cancel(); // free the row; nobody will read the result
                 return respond_error(w, st, 500, "completion deadline exceeded");
             }
         }
@@ -475,12 +549,18 @@ fn respond_full(w: &mut TcpStream, st: &ServerState, erx: Receiver<Event>) {
     );
 }
 
-fn respond_stream(w: &mut TcpStream, st: &ServerState, erx: Receiver<Event>) {
+fn respond_stream(
+    w: &mut TcpStream,
+    st: &ServerState,
+    erx: Receiver<Event>,
+    cancel: &CancelToken,
+) {
     st.metrics.inc_status(200);
     let head = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
                 Cache-Control: no-cache\r\nConnection: close\r\n\r\n";
     if w.write_all(head.as_bytes()).and_then(|_| w.flush()).is_err() {
-        return; // dropping erx is safe — the sink's sends just no-op
+        cancel.cancel(); // client already gone: drain the row
+        return;
     }
     loop {
         match erx.recv_timeout(REQUEST_DEADLINE) {
@@ -490,7 +570,10 @@ fn respond_stream(w: &mut TcpStream, st: &ServerState, erx: Receiver<Event>) {
                     ("text", Json::str(st.tok.token(t).unwrap_or("<unk>"))),
                 ]));
                 if w.write_all(frame.as_bytes()).and_then(|_| w.flush()).is_err() {
-                    return; // client went away; the row still drains
+                    // client went away mid-stream: cancel so the row's
+                    // pages free up instead of decoding to nobody
+                    cancel.cancel();
+                    return;
                 }
             }
             Ok(Event::Done(c)) => {
@@ -503,10 +586,24 @@ fn respond_stream(w: &mut TcpStream, st: &ServerState, erx: Receiver<Event>) {
                 let _ = w.flush();
                 return;
             }
+            Ok(Event::Fail(f)) => {
+                // the stream already committed a 200: surface the failure
+                // as a terminal SSE error frame with its class
+                let frame = proto::sse_frame(&Json::obj(vec![
+                    ("error", Json::str(&f.message)),
+                    ("class", Json::str(f.class.label())),
+                ]));
+                let _ = w.write_all(frame.as_bytes());
+                let _ = w.flush();
+                return;
+            }
             Err(e) => {
                 let msg = match e {
                     RecvTimeoutError::Disconnected => "dropped: server shutting down",
-                    RecvTimeoutError::Timeout => "completion deadline exceeded",
+                    RecvTimeoutError::Timeout => {
+                        cancel.cancel();
+                        "completion deadline exceeded"
+                    }
                 };
                 let frame = proto::sse_frame(&Json::obj(vec![("error", Json::str(msg))]));
                 let _ = w.write_all(frame.as_bytes());
@@ -528,7 +625,7 @@ fn respond_error(w: &mut TcpStream, st: &ServerState, code: u16, msg: &str) {
     );
 }
 
-// ---------------------------------------------------------------- SIGINT
+// ------------------------------------------------------ SIGINT / SIGTERM
 
 static SIGINT_FLAG: AtomicBool = AtomicBool::new(false);
 
@@ -541,23 +638,27 @@ extern "C" {
 #[cfg(unix)]
 extern "C" fn on_sigint(_sig: i32) {
     if SIGINT_FLAG.swap(true, Ordering::SeqCst) {
-        // second ^C: the operator wants out *now*, skip the drain
+        // second signal: the operator wants out *now*, skip the drain
         // (_exit is async-signal-safe; nothing here allocates)
         unsafe { _exit(130) }
     }
 }
 
-/// Install a SIGINT handler that requests a graceful drain (raw POSIX
-/// `signal(2)` through the C ABI — the image carries no signal crate).
-/// Idempotent; a second ^C exits immediately with status 130.
+/// Install handlers that turn `SIGINT` *and* `SIGTERM` into a graceful
+/// drain (raw POSIX `signal(2)` through the C ABI — the image carries no
+/// signal crate). Orchestrators stop containers with SIGTERM, so it must
+/// behave exactly like ^C: stop admitting, drain in-flight rows, exit.
+/// Idempotent; a second signal of either kind exits immediately with
+/// status 130.
 pub fn install_sigint() {
     #[cfg(unix)]
     unsafe {
         signal(2 /* SIGINT */, on_sigint as usize);
+        signal(15 /* SIGTERM */, on_sigint as usize);
     }
 }
 
-/// Has SIGINT fired since [`install_sigint`]? Folded into
+/// Has SIGINT or SIGTERM fired since [`install_sigint`]? Folded into
 /// [`ServerState::stopping`], checked by workers and the model loop.
 pub fn sigint_received() -> bool {
     SIGINT_FLAG.load(Ordering::SeqCst)
@@ -647,5 +748,70 @@ mod tests {
         assert!(!st.stopping());
         st.request_shutdown();
         assert!(st.stopping());
+    }
+
+    fn sink_with_buf(buf: usize) -> (HttpSink, Receiver<Event>) {
+        let (tx, rx) = mpsc::sync_channel(buf);
+        let sink = HttpSink {
+            tx,
+            cancel: CancelToken::new(),
+            dead: false,
+            state: Arc::new(tiny_state(ServeConfig::default())),
+            t0: Instant::now(),
+            saw_first: false,
+            n: 0,
+        };
+        (sink, rx)
+    }
+
+    #[test]
+    fn stalled_event_buffer_kills_the_sink_and_cancels_the_row() {
+        // nobody reads rx: the second token overflows the 1-slot buffer
+        let (mut sink, rx) = sink_with_buf(1);
+        sink.on_token(5);
+        assert!(!sink.dead);
+        assert!(!sink.cancel.is_cancelled());
+        sink.on_token(6); // buffer full: drop the client, cancel the row
+        assert!(sink.dead);
+        assert!(sink.cancel.is_cancelled(), "stall flips the cancel token");
+        sink.on_token(7); // dead sinks no-op; the model thread never blocks
+        let delivered: Vec<_> = rx.try_iter().collect();
+        assert_eq!(delivered.len(), 1, "only the pre-stall token crossed");
+    }
+
+    #[test]
+    fn disconnected_event_channel_cancels_the_row() {
+        let (mut sink, rx) = sink_with_buf(8);
+        drop(rx); // worker returned: client hung up or deadline hit
+        sink.on_token(5);
+        assert!(sink.dead);
+        assert!(sink.cancel.is_cancelled());
+    }
+
+    #[test]
+    fn on_fail_counts_by_class_and_forwards_the_event() {
+        let (mut sink, rx) = sink_with_buf(8);
+        let before = sink.state.metrics.fail_count(FailClass::Overloaded);
+        sink.on_fail(&ServeFail::new(FailClass::Overloaded, "pool full"));
+        assert_eq!(sink.state.metrics.fail_count(FailClass::Overloaded), before + 1);
+        match rx.try_recv() {
+            Ok(Event::Fail(f)) => {
+                assert_eq!(f.class, FailClass::Overloaded);
+                assert_eq!(f.message, "pool full");
+            }
+            other => panic!("expected Event::Fail, got {:?}", other.map(|_| "event")),
+        }
+    }
+
+    #[test]
+    fn fail_status_maps_classes_to_http() {
+        let (code, extra) = fail_status(&ServeFail::new(FailClass::Overloaded, "x"));
+        assert_eq!(code, 503);
+        assert_eq!(extra, &[("Retry-After", "1")]);
+        let (code, extra) = fail_status(&ServeFail::new(FailClass::Internal, "x"));
+        assert_eq!(code, 500);
+        assert!(extra.is_empty());
+        let (code, _) = fail_status(&ServeFail::new(FailClass::Cancelled, "x"));
+        assert_eq!(code, 500);
     }
 }

@@ -1,0 +1,485 @@
+//! Fault-isolation chaos suite (DESIGN.md §13) — a pure unit tier that
+//! always runs (injector grammar through `anyhow` chains, typed page-pool
+//! exhaustion) plus an artifact-gated tier that drives the serve loop
+//! through deterministic `FaultPlan`s and asserts the containment
+//! contract:
+//!
+//! * **transient faults retry in place** — a `seg:*:transient` hit is
+//!   absorbed by restore-and-retry and the completions are token-identical
+//!   to the fault-free run (XLA executions are functional: a failed step
+//!   never mutated the pre-step state, and it consumed no sampler picks);
+//! * **persistent faults quarantine, neighbors survive** — rows rebuild
+//!   their K/V by re-prefill (teacher-forcing the full host-side
+//!   sequence), again token-identical; a fault that never clears drains
+//!   its rows with [`StopReason::Error`] while the loop itself survives
+//!   to serve the rest of the queue;
+//! * **pool pressure degrades, never crashes** — an injected allocation
+//!   failure mid-decode parks the row (pages released) and the row
+//!   completes identically after unparking; allocation failures at
+//!   admission surface as typed overload rejections;
+//! * **cancellation is prompt and leak-free** — a [`CancelToken`] flipped
+//!   mid-decode drains exactly that row with [`FailClass::Cancelled`],
+//!   neighbors finish token-identical, and the allocator ends with zero
+//!   outstanding pages (the ISSUE 7 leak gate, now under faults).
+//!
+//! Token-identity caveats are the same float-tolerance class as
+//! `it_serve.rs` / `it_paged.rs`: re-prefilled K/V comes through the
+//! prefill kernels while the original came through step columns, so
+//! identity relies on argmax margins over short greedy budgets.
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use lisa::data::tokenizer::PAD;
+use lisa::data::{corpus, Tokenizer};
+use lisa::engine::{
+    CancelToken, Completion, Engine, FailClass, Feed, KvMode, PageAllocator, Request, RequestSink,
+    RequestSource, ServeFail, ServeSession, StopReason,
+};
+use lisa::eval::generate;
+use lisa::model::ModelParams;
+use lisa::runtime::{FaultError, FaultInjector, FaultKind, Runtime};
+use lisa::util::rng::Rng;
+
+// ------------------------------------------------------------ unit tier
+
+fn injector(spec: &str) -> Rc<RefCell<FaultInjector>> {
+    Rc::new(RefCell::new(FaultInjector::parse(spec).unwrap()))
+}
+
+#[test]
+fn fault_error_survives_anyhow_context_chains() {
+    let mut inj = FaultInjector::parse("seg:decode_step:nth=2:persistent").unwrap();
+    assert!(inj.on_segment("decode_step").is_none());
+    let f = inj.on_segment("decode_step").expect("nth=2 fires on the second execution");
+    let err = anyhow::Error::from(f).context("running segment").context("decode step");
+    let back = err.downcast_ref::<FaultError>().expect("typed fault survives context");
+    assert_eq!(back.kind, FaultKind::Persistent);
+    assert_eq!(back.site, "decode_step");
+    assert_eq!(back.hit, 2);
+    assert!(format!("{back}").contains("injected persistent fault at decode_step"));
+}
+
+#[test]
+fn injected_pool_fault_is_typed_and_spends_its_plan() {
+    let mut alloc = PageAllocator::new(8, 4);
+    alloc.set_fault_injector(injector("pool:nth=2"));
+    let a = alloc.alloc().unwrap();
+    let err = alloc.alloc().expect_err("the second allocation is the injected one");
+    let f = err.downcast_ref::<FaultError>().expect("pool faults are typed");
+    assert_eq!(f.kind, FaultKind::PoolExhausted);
+    assert_eq!(f.site, "page_pool");
+    assert_eq!(f.hit, 2);
+    // the plan fired once: the pool is healthy again
+    let b = alloc.alloc().unwrap();
+    alloc.release(a);
+    alloc.release(b);
+    assert_eq!(alloc.outstanding(), 0);
+}
+
+#[test]
+fn real_exhaustion_carries_the_same_class_as_an_injected_one() {
+    let mut alloc = PageAllocator::new(4, 4); // page 0 is pinned scratch
+    let mut held = Vec::new();
+    while alloc.n_free() > 0 {
+        held.push(alloc.alloc().unwrap());
+    }
+    let err = alloc.alloc().expect_err("an empty pool must refuse");
+    let f = err.downcast_ref::<FaultError>().expect("exhaustion is typed");
+    assert_eq!(f.kind, FaultKind::PoolExhausted);
+    assert_eq!(f.hit, 0, "a real (non-injected) failure reports hit 0");
+    for p in held {
+        alloc.release(p);
+    }
+    assert_eq!(alloc.outstanding(), 0);
+}
+
+#[test]
+fn transient_plans_rewind_so_the_retry_goes_through() {
+    let mut inj = FaultInjector::parse("seg:step:nth=2:transient").unwrap();
+    assert!(inj.on_segment("step").is_none()); // execution 1
+    assert!(inj.on_segment("step").is_some()); // execution 2 fails...
+    assert!(inj.on_segment("step").is_none()); // ...its retry replays index 2
+    assert!(inj.on_segment("step").is_none());
+    assert_eq!(inj.injected, 1);
+}
+
+#[test]
+fn armed_environment_never_panics_the_parser() {
+    // the CI fault-matrix smoke step runs this suite under LISA_FAULT
+    // (including deliberately malformed specs): from_env must always
+    // yield a usable injector
+    let mut inj = FaultInjector::from_env();
+    let _ = inj.on_segment("decode_step");
+    let _ = inj.on_alloc();
+}
+
+// -------------------------------------------------------- artifact tier
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+/// Artifacts present *and* exported with the decode ABI.
+fn have_decode() -> Option<Runtime> {
+    if !artifacts().join("manifest.json").exists() {
+        return None;
+    }
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    rt.manifest.supports_decode("pallas").then_some(rt)
+}
+
+/// Artifacts additionally exported with the paged decode ABI (v2).
+fn have_paged() -> Option<Runtime> {
+    have_decode().filter(|rt| rt.manifest.supports_paged("pallas"))
+}
+
+fn make_tok(rt: &Runtime) -> Tokenizer {
+    let samples = corpus::gen_instruction_corpus(64, 11);
+    Tokenizer::build(&corpus::sample_texts(&samples), rt.manifest.vocab)
+}
+
+/// Greedy-only mixed-length queue: short argmax budgets keep the
+/// re-prefill float-tolerance caveat negligible (same policy as the
+/// parity suites).
+fn greedy_queue(tok: &Tokenizer) -> Vec<Request> {
+    [
+        "what is 12 plus 10 ?",
+        "name the capital of france .",
+        "what is 3 times 4 ?",
+        "who built the eiffel tower ?",
+        "what is 9 minus 2 ?",
+        "name the capital of japan .",
+    ]
+    .iter()
+    .enumerate()
+    .map(|(i, t)| Request::greedy(generate::encode_prompt(tok, t), 3 + i % 3))
+    .collect()
+}
+
+/// Plain token ids below `vocab`, long enough to span pages.
+fn long_prompt(vocab: usize, len: usize, salt: i32) -> Vec<i32> {
+    (0..len as i32).map(|i| 3 + (salt + i * 7) % (vocab as i32 - 4)).collect()
+}
+
+/// Post-run counters + the allocator leak gate, snapshotted before the
+/// session drops.
+#[derive(Debug)]
+struct RunOut {
+    done: Vec<Completion>,
+    retries: u64,
+    reprefills: u64,
+    error_drains: u64,
+    preemptions: u64,
+    cancelled: u64,
+    rejected: u64,
+    injected: u64,
+    /// `(outstanding, free + cached)` — paged sessions only.
+    pool: Option<(usize, usize)>,
+}
+
+/// Arm `plan` on the runtime and serve `reqs` in a fresh session.
+/// `eos = -1` is unreachable: budgets run exactly.
+fn serve_with_plan(
+    rt: &Runtime,
+    params: &ModelParams,
+    reqs: &[Request],
+    mode: KvMode,
+    plan: &str,
+) -> RunOut {
+    rt.set_fault_plan(plan).unwrap();
+    let mut eng = Engine::new(rt);
+    let mut sess = ServeSession::with_mode(&mut eng, params, mode).unwrap();
+    sess.set_recovery(2, 0, 2); // zero backoff: tests never sleep
+    let done = sess.run(reqs, -1, PAD).unwrap();
+    RunOut {
+        done,
+        retries: sess.retries,
+        reprefills: sess.reprefills,
+        error_drains: sess.error_drains,
+        preemptions: sess.preemptions,
+        cancelled: sess.cancelled,
+        rejected: sess.rejected,
+        injected: rt.fault_handle().borrow().injected,
+        pool: sess.page_allocator().map(|a| (a.outstanding(), a.n_free() + a.n_cached())),
+    }
+}
+
+fn assert_token_identical(faulted: &RunOut, baseline: &RunOut, what: &str) {
+    assert_eq!(faulted.done.len(), baseline.done.len());
+    for (i, (a, b)) in faulted.done.iter().zip(&baseline.done).enumerate() {
+        assert_eq!(a.tokens, b.tokens, "{what}: request {i} diverged under faults");
+        assert_eq!(a.stop, b.stop, "{what}: request {i} stop reason");
+    }
+}
+
+fn assert_no_leak(out: &RunOut, page_n: usize) {
+    if let Some((outstanding, free_cached)) = out.pool {
+        assert_eq!(outstanding, 0, "pages leaked across the faulted drain");
+        assert_eq!(free_cached, page_n - 1, "free + cached must account for every page");
+    }
+}
+
+#[test]
+fn transient_decode_fault_retries_in_place_token_identical() {
+    let Some(rt) = have_decode() else { return };
+    let params = ModelParams::init(&rt.manifest, &mut Rng::new(3));
+    let reqs = greedy_queue(&make_tok(&rt));
+    let base = serve_with_plan(&rt, &params, &reqs, KvMode::Packed, "");
+    assert!(base.done.iter().all(|c| c.stop == StopReason::MaxNew));
+
+    let out =
+        serve_with_plan(&rt, &params, &reqs, KvMode::Packed, "seg:decode_step:nth=3:transient");
+    assert_eq!(out.injected, 1, "the plan must actually fire");
+    assert!(out.retries >= 1, "a transient fault is absorbed by retry, not quarantine");
+    assert_eq!(out.reprefills, 0);
+    assert_eq!(out.error_drains, 0);
+    assert_token_identical(&out, &base, "transient retry");
+}
+
+#[test]
+fn persistent_fault_quarantines_and_reprefills_token_identical() {
+    let Some(rt) = have_decode() else { return };
+    let params = ModelParams::init(&rt.manifest, &mut Rng::new(3));
+    let reqs = greedy_queue(&make_tok(&rt));
+    let base = serve_with_plan(&rt, &params, &reqs, KvMode::Packed, "");
+
+    let out =
+        serve_with_plan(&rt, &params, &reqs, KvMode::Packed, "seg:decode_step:nth=3:persistent");
+    assert_eq!(out.injected, 1);
+    assert!(out.reprefills >= 1, "a persistent fault rebuilds rows by re-prefill");
+    assert_eq!(out.error_drains, 0, "one recoverable fault must not drain anybody");
+    assert_token_identical(&out, &base, "quarantine + re-prefill");
+}
+
+#[test]
+fn unrecoverable_fault_drains_rows_but_the_loop_survives() {
+    let Some(rt) = have_decode() else { return };
+    let params = ModelParams::init(&rt.manifest, &mut Rng::new(3));
+    let reqs = greedy_queue(&make_tok(&rt));
+
+    // every decode step fails, forever: rows burn their fault budget and
+    // drain with a typed error — but run() itself must return Ok with one
+    // completion per request
+    let out = serve_with_plan(
+        &rt,
+        &params,
+        &reqs,
+        KvMode::Packed,
+        "seg:decode_step:nth=1:every=1:count=*:persistent",
+    );
+    assert_eq!(out.done.len(), reqs.len(), "the loop must survive to serve the whole queue");
+    // each re-prefill round still commits one token off the prefill
+    // logits, so the shortest budgets can finish legitimately before
+    // their fault budget runs out — everything else drains typed
+    assert!(
+        out.done.iter().all(|c| matches!(c.stop, StopReason::Error | StopReason::MaxNew)),
+        "{:?}",
+        out.done
+    );
+    let errs = out.done.iter().filter(|c| c.stop == StopReason::Error).count();
+    assert!(errs >= 1, "some rows must exhaust the fault budget");
+    assert_eq!(out.error_drains as usize, errs);
+    assert!(out.reprefills >= 1, "rows got their re-prefill chances before draining");
+}
+
+#[test]
+fn paged_transient_fault_retries_with_the_leak_gate_held() {
+    let Some(rt) = have_paged() else { return };
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(5));
+    let reqs = greedy_queue(&make_tok(&rt));
+    let base = serve_with_plan(&rt, &params, &reqs, KvMode::Paged, "");
+
+    let out = serve_with_plan(&rt, &params, &reqs, KvMode::Paged, "seg:paged_step:nth=4:transient");
+    assert_eq!(out.injected, 1);
+    assert!(out.retries >= 1);
+    assert_token_identical(&out, &base, "paged transient retry");
+    assert_no_leak(&out, m.page_n);
+}
+
+#[test]
+fn failed_prefill_scatter_restores_the_pool_and_recovers() {
+    let Some(rt) = have_paged() else { return };
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(5));
+    let reqs = greedy_queue(&make_tok(&rt));
+    let base = serve_with_plan(&rt, &params, &reqs, KvMode::Paged, "");
+
+    // the very first batch prefill's scatter fails persistently once:
+    // the pool state is restored, the batch quarantines and the retry
+    // prefill succeeds — completions unchanged, nothing leaked
+    let out =
+        serve_with_plan(&rt, &params, &reqs, KvMode::Paged, "seg:paged_scatter:nth=1:persistent");
+    assert_eq!(out.injected, 1);
+    assert!(out.reprefills >= 1);
+    assert_eq!(out.error_drains, 0);
+    assert_token_identical(&out, &base, "scatter restore");
+    assert_no_leak(&out, m.page_n);
+}
+
+#[test]
+fn pool_fault_mid_decode_parks_the_row_and_completes_identically() {
+    let Some(rt) = have_paged() else { return };
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(7));
+    // prompt two short of a page boundary, budget across it: allocation
+    // #1 is admission, #2 is the mid-decode page growth — the injected
+    // failure point
+    let reqs = vec![Request::greedy(long_prompt(m.vocab, m.page_t - 2, 1), 6)];
+    let base = serve_with_plan(&rt, &params, &reqs, KvMode::Paged, "");
+    assert_eq!(base.done[0].tokens.len(), 6);
+
+    let out = serve_with_plan(&rt, &params, &reqs, KvMode::Paged, "pool:nth=2");
+    assert_eq!(out.injected, 1);
+    assert_eq!(out.preemptions, 1, "the row parks instead of failing");
+    assert_eq!(out.error_drains, 0);
+    assert_eq!(out.rejected, 0);
+    assert_token_identical(&out, &base, "park + unpark");
+    assert_no_leak(&out, m.page_n);
+}
+
+#[test]
+fn admission_under_a_dead_pool_rejects_with_overload_and_survives() {
+    let Some(rt) = have_paged() else { return };
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(7));
+    let tok = make_tok(&rt);
+    let reqs = vec![
+        Request::greedy(generate::encode_prompt(&tok, "what is 3 times 4 ?"), 3),
+        Request::greedy(generate::encode_prompt(&tok, "name the capital of france ."), 3),
+    ];
+
+    // every allocation fails: page-budget reservation passes (free pages
+    // exist on paper) but attach fails — both requests drain as typed
+    // overload rejections, the loop exits cleanly, nothing leaks
+    let out = serve_with_plan(&rt, &params, &reqs, KvMode::Paged, "pool:nth=1:every=1:count=*");
+    assert_eq!(out.done.len(), reqs.len());
+    assert!(out.done.iter().all(|c| c.stop == StopReason::Error));
+    assert!(out.done.iter().all(|c| c.tokens.is_empty()));
+    assert_eq!(out.rejected as usize, reqs.len());
+    assert_eq!(out.error_drains, 0);
+    assert_no_leak(&out, m.page_n);
+}
+
+// ------------------------------------------------- cancellation harness
+
+#[derive(Default)]
+struct Observed {
+    done: Option<Completion>,
+    fail: Option<ServeFail>,
+}
+
+/// Sink that records the terminal event and optionally flips a
+/// [`CancelToken`] after `cancel_after` delivered tokens — cancellation
+/// originating mid-decode, exactly like a disconnecting HTTP client.
+struct ChaosSink {
+    obs: Rc<RefCell<Observed>>,
+    cancel_after: Option<(CancelToken, usize)>,
+    n: usize,
+}
+
+impl RequestSink for ChaosSink {
+    fn on_token(&mut self, _tok: i32) {
+        self.n += 1;
+        if let Some((c, after)) = &self.cancel_after {
+            if self.n >= *after {
+                c.cancel();
+            }
+        }
+    }
+    fn on_done(&mut self, c: &Completion) {
+        self.obs.borrow_mut().done = Some(c.clone());
+    }
+    fn on_fail(&mut self, f: &ServeFail) {
+        self.obs.borrow_mut().fail = Some(f.clone());
+    }
+}
+
+struct VecSrc {
+    feeds: Vec<(Request, ChaosSink)>,
+}
+
+impl RequestSource for VecSrc {
+    fn poll(&mut self, _idle: bool) -> Feed {
+        match self.feeds.pop() {
+            Some((req, sink)) => Feed::Admit(req, Box::new(sink)),
+            None => Feed::Closed,
+        }
+    }
+}
+
+#[test]
+fn mid_decode_cancellation_drains_one_row_and_spares_the_rest() {
+    let Some(rt) = have_decode() else { return };
+    let m = rt.manifest.clone();
+    if m.batch < 2 {
+        return; // the test needs a concurrent neighbor
+    }
+    let params = ModelParams::init(&m, &mut Rng::new(9));
+    let tok = make_tok(&rt);
+    let victim_req = Request::greedy(generate::encode_prompt(&tok, "what is 12 plus 10 ?"), 8);
+    let neighbor_req =
+        Request::greedy(generate::encode_prompt(&tok, "name the capital of japan ."), 5);
+
+    // solo fault-free baselines for both prompts
+    rt.set_fault_plan("").unwrap();
+    let base_victim =
+        serve_with_plan(&rt, &params, std::slice::from_ref(&victim_req), KvMode::Packed, "");
+    let base_neighbor =
+        serve_with_plan(&rt, &params, std::slice::from_ref(&neighbor_req), KvMode::Packed, "");
+
+    let token = CancelToken::new();
+    let mut victim = victim_req.clone();
+    victim.cancel = Some(token.clone());
+    let mut pre_cancelled = neighbor_req.clone();
+    let dead = CancelToken::new();
+    dead.cancel();
+    pre_cancelled.cancel = Some(dead);
+
+    let obs_victim = Rc::new(RefCell::new(Observed::default()));
+    let obs_neighbor = Rc::new(RefCell::new(Observed::default()));
+    let obs_pre = Rc::new(RefCell::new(Observed::default()));
+    // popped back-to-front: victim admits first, then the neighbor, then
+    // the request that was cancelled before it ever reached a row
+    let mut src = VecSrc {
+        feeds: vec![
+            (pre_cancelled, ChaosSink { obs: obs_pre.clone(), cancel_after: None, n: 0 }),
+            (neighbor_req, ChaosSink { obs: obs_neighbor.clone(), cancel_after: None, n: 0 }),
+            (
+                victim,
+                ChaosSink { obs: obs_victim.clone(), cancel_after: Some((token.clone(), 2)), n: 0 },
+            ),
+        ],
+    };
+
+    let mut eng = Engine::new(&rt);
+    let mut sess = ServeSession::with_mode(&mut eng, &params, KvMode::Packed).unwrap();
+    sess.run_loop(&mut src, -1, PAD).unwrap();
+    assert_eq!(sess.cancelled, 2, "the mid-decode victim and the pre-cancelled request");
+
+    let v = obs_victim.borrow();
+    let fail = v.fail.as_ref().expect("the victim fails, it does not complete");
+    assert!(v.done.is_none());
+    assert_eq!(fail.class, FailClass::Cancelled);
+    assert_eq!(fail.stop_reason(), StopReason::Cancelled);
+    assert!(
+        fail.tokens.len() >= 2 && fail.tokens.len() < 8,
+        "cancellation lands between steps: {} tokens",
+        fail.tokens.len()
+    );
+    // everything delivered before the cancel is the greedy prefix
+    assert_eq!(&fail.tokens[..], &base_victim.done[0].tokens[..fail.tokens.len()]);
+
+    let p = obs_pre.borrow();
+    let pre_fail = p.fail.as_ref().expect("pre-cancelled requests fail at admission");
+    assert_eq!(pre_fail.class, FailClass::Cancelled);
+    assert!(pre_fail.tokens.is_empty());
+
+    let n = obs_neighbor.borrow();
+    let done = n.done.as_ref().expect("the neighbor must be untouched");
+    assert!(n.fail.is_none());
+    assert_eq!(done.tokens, base_neighbor.done[0].tokens, "neighbor diverged after the cancel");
+    assert_eq!(done.stop, StopReason::MaxNew);
+}

@@ -22,7 +22,8 @@ use std::time::Duration;
 use lisa::data::tokenizer::{EOS, PAD};
 use lisa::data::{corpus, Tokenizer};
 use lisa::engine::{
-    Completion, Engine, Feed, Request, RequestSource, SamplerSpec, ServeSession, StopReason,
+    Completion, Engine, FailClass, Feed, Request, RequestSource, SamplerSpec, ServeFail,
+    ServeSession, StopReason,
 };
 use lisa::eval::generate;
 use lisa::model::ModelParams;
@@ -42,7 +43,10 @@ fn make_tok(vocab: usize) -> Tokenizer {
 /// Scripted model loop: serves one admission at a time, synchronously.
 /// Tokens are a pure function of the prompt (`5 + (sum + i) % 13`), and
 /// `req.seed` doubles as a per-token delay in ms so tests can hold the
-/// loop busy for a known window. Ends on `Feed::Closed` (shutdown).
+/// loop busy for a known window. Mirrors the real serve loop's
+/// cancellation contract: `req.cancel` is observed between tokens and a
+/// flipped token drains the request through `on_fail`. Ends on
+/// `Feed::Closed` (shutdown).
 fn stub_loop(src: &mut ChannelSource) {
     loop {
         match src.poll(true) {
@@ -50,17 +54,29 @@ fn stub_loop(src: &mut ChannelSource) {
                 let delay = Duration::from_millis(req.seed.min(60));
                 let base: i64 = req.prompt.iter().map(|&t| t as i64).sum();
                 let mut tokens = Vec::with_capacity(req.max_new);
+                let mut cancelled = false;
                 for i in 0..req.max_new {
+                    if req.cancel.as_ref().is_some_and(|c| c.is_cancelled()) {
+                        cancelled = true;
+                        break;
+                    }
                     thread::sleep(delay);
                     let t = 5 + ((base as usize + i) % 13) as i32;
                     sink.on_token(t);
                     tokens.push(t);
                 }
-                sink.on_done(&Completion {
-                    tokens,
-                    prompt_truncated: false,
-                    stop: StopReason::MaxNew,
-                });
+                if cancelled {
+                    sink.on_fail(&ServeFail {
+                        tokens,
+                        ..ServeFail::new(FailClass::Cancelled, "request cancelled")
+                    });
+                } else {
+                    sink.on_done(&Completion {
+                        tokens,
+                        prompt_truncated: false,
+                        stop: StopReason::MaxNew,
+                    });
+                }
             }
             Feed::Pending => {}
             Feed::Closed => return,
@@ -328,6 +344,125 @@ fn content_length_taxonomy_over_real_sockets() {
 
     state.request_shutdown();
     h.join().unwrap();
+}
+
+#[test]
+fn client_disconnect_cancels_the_row_and_counts_in_metrics() {
+    let (addr, state, h) = start_stub(ServeConfig { event_buf: 4, ..ServeConfig::default() });
+
+    // a long, slow, streamed request; read the response head plus the
+    // first frames, then hang up mid-stream
+    {
+        use std::io::{Read, Write};
+        use std::net::TcpStream;
+        let body = r#"{"tokens": [2], "max_new": 50, "seed": 20, "stream": true}"#;
+        let raw = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: lisa\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut buf = [0u8; 256];
+        let n = s.read(&mut buf).unwrap();
+        assert!(n > 0, "the stream must have started before the disconnect");
+    } // drop = disconnect
+
+    // the worker's failed write (or the dead event channel) flips the
+    // request's CancelToken; the loop observes it between tokens and
+    // drains the row with the cancelled class — poll until it lands
+    let t0 = std::time::Instant::now();
+    while state.metrics.fail_count(FailClass::Cancelled) == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "cancellation never observed");
+        thread::sleep(Duration::from_millis(20));
+    }
+
+    // the loop survived: the next client is served normally, and the
+    // failure shows up under its class in the export
+    let (code, toks) = post_tokens(&addr, r#"{"tokens": [2, 4], "max_new": 3, "seed": 0}"#);
+    assert_eq!((code, toks.len()), (200, 3));
+    let m = client::get(&addr, "/metrics").unwrap().body;
+    assert!(m.contains("lisa_serve_failures_total{class=\"cancelled\"} 1"), "{m}");
+
+    state.request_shutdown();
+    h.join().unwrap();
+}
+
+/// Deterministic fuzz over the wire parser: truncated, byte-mangled and
+/// interleaved heads/bodies must always yield a 4xx taxonomy error, a
+/// clean drop (`Ok(None)`), or a well-formed request — never a panic,
+/// and never a read past the framed body.
+#[test]
+fn proto_parser_survives_mangled_wire_bytes() {
+    use std::io::{BufReader, Read};
+
+    let body: &[u8] = br#"{"tokens": [2, 4, 6], "max_new": 5, "seed": 7, "stream": true}"#;
+    let mut wire = format!(
+        "POST /v1/completions HTTP/1.1\r\nHost: lisa\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    )
+    .into_bytes();
+    wire.extend_from_slice(body);
+
+    let mut rng = Rng::new(0xFA_0175);
+    for case in 0..2000u32 {
+        let mut bytes = wire.clone();
+        match case % 4 {
+            // truncated anywhere: head, header boundary, or mid-body
+            0 => bytes.truncate(rng.below(bytes.len())),
+            // a single flipped bit
+            1 => {
+                let i = rng.below(bytes.len());
+                bytes[i] ^= 1 << rng.below(8);
+            }
+            // injected garbage bytes
+            2 => {
+                let i = rng.below(bytes.len());
+                let junk: Vec<u8> =
+                    (0..rng.below(7) + 1).map(|_| rng.next_u64() as u8).collect();
+                bytes.splice(i..i, junk);
+            }
+            // a second request spliced into the middle of the first
+            _ => {
+                let i = rng.below(bytes.len());
+                let other = wire.clone();
+                bytes.splice(i..i, other);
+            }
+        }
+        let mut r = BufReader::new(&bytes[..]);
+        // a mangled stream may still contain several parseable requests;
+        // drain it to EOF or the first protocol error
+        for _ in 0..100 {
+            match proto::read_request(&mut r) {
+                Ok(Some(req)) => {
+                    assert!(req.body.len() <= proto::MAX_BODY, "case {case} over-read");
+                    // the JSON layer must reject or accept, never panic
+                    let _ = proto::CompletionReq::parse(&req.body);
+                }
+                Ok(None) => break,
+                Err((code, msg)) => {
+                    assert!(
+                        (400..500).contains(&code),
+                        "case {case}: non-4xx {code} ({msg})"
+                    );
+                    break;
+                }
+            }
+        }
+    }
+
+    // framing is exact: two pipelined requests parse back to back and
+    // leave nothing unread behind them
+    let mut two = wire.clone();
+    two.extend_from_slice(&wire);
+    let mut r = BufReader::new(&two[..]);
+    let a = proto::read_request(&mut r).unwrap().expect("first pipelined request");
+    let b = proto::read_request(&mut r).unwrap().expect("second pipelined request");
+    assert_eq!(a.body, body);
+    assert_eq!(b.body, body);
+    assert!(proto::read_request(&mut r).unwrap().is_none(), "phantom third request");
+    let mut rest = Vec::new();
+    r.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "parser left {} unread bytes", rest.len());
 }
 
 // ------------------------------------------------------------ artifact tier
