@@ -19,6 +19,7 @@ fn main() {
     let params = ModelParams::init(&m, &mut rng);
     let mut h = HostTensor::zeros(&[m.batch, m.seq, m.d_model]);
     rng.fill_normal(&mut h.data, 1.0);
+    // lisa-lint: allow(operand_builder): deliberately drives the raw execute path to measure buffer leaks
     let mut ops: Vec<Operand> = vec![Operand::F32(&h)];
     ops.extend(params.blocks[0].iter().map(Operand::F32));
     rt.run("block_fwd", &ops).unwrap();

@@ -16,6 +16,9 @@
 //! [`argmax`] that the legacy full-forward loop (`eval::generate`) must
 //! agree with token for token.
 
+// Clippy backstop for the no-panic serving contract (DESIGN.md §13,
+// enforced structurally by lisa-lint's serve_panic pass).
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::rc::Rc;
@@ -323,9 +326,8 @@ impl PageAllocator {
             .filter(|(_, e)| self.refs[e.page as usize] == 1)
             .min_by_key(|(_, e)| e.last_used)
             .map(|(k, _)| *k);
-        match lru {
-            Some(k) => {
-                let e = self.cache.remove(&k).expect("key just listed");
+        match lru.and_then(|k| self.cache.remove(&k)) {
+            Some(e) => {
                 self.release(e.page);
                 self.evictions += 1;
                 true
@@ -367,7 +369,9 @@ impl PageAllocator {
         for k in keys {
             // an adoption is a use: the whole matched chain moves to the
             // front of the LRU order
-            self.cache.get_mut(&k).expect("key just matched").last_used = self.tick;
+            if let Some(e) = self.cache.get_mut(&k) {
+                e.last_used = self.tick;
+            }
         }
         for &g in &adopted {
             self.retain(g);
@@ -492,6 +496,7 @@ impl<'e, 'rt> DecodeSession<'e, 'rt> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -17,6 +17,9 @@
 //! wrapper over [`ServeSession`] — the parity baseline (`it_decode.rs`)
 //! and the `LISA_DECODE=legacy` contract are unchanged.
 
+// Clippy backstop for the no-panic serving contract (DESIGN.md §13,
+// enforced structurally by lisa-lint's serve_panic pass).
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 pub mod sampler;
 pub mod session;
 

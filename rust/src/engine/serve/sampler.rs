@@ -17,6 +17,9 @@
 //! of the nucleus (argmax again); `top_p >= 1` is full-vocab temperature
 //! sampling.
 
+// Clippy backstop for the no-panic serving contract (DESIGN.md §13,
+// enforced structurally by lisa-lint's serve_panic pass).
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 use anyhow::{bail, ensure, Result};
 
 use crate::engine::decode::argmax;
@@ -121,7 +124,9 @@ impl SamplerSpec {
             return Box::new(GreedySampler);
         }
         match self {
-            SamplerSpec::Greedy => unreachable!("handled by is_greedy"),
+            // is_greedy() returned above; a stray Greedy spec still gets
+            // a working sampler rather than a panic
+            SamplerSpec::Greedy => Box::new(GreedySampler),
             SamplerSpec::Temperature { temperature } => Box::new(TemperatureSampler {
                 temperature: *temperature,
                 rng: Rng::new(seed),
@@ -330,6 +335,7 @@ impl Sampler for BiasedSampler {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests panic by design
 mod tests {
     use super::*;
 

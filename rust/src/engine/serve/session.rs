@@ -51,6 +51,9 @@
 //! whole batch prefill). Token streams are identical in both modes
 //! (`tests/it_paged.rs`); `LISA_PAGED=0` forces the packed v1 path.
 
+// Clippy backstop for the no-panic serving contract (DESIGN.md §13,
+// enforced structurally by lisa-lint's serve_panic pass).
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
@@ -287,6 +290,13 @@ impl RowPlan {
         &self.out
     }
 
+    /// Terminal stop outside the sampling path — used when a scheduler
+    /// contract is breached, so the row drains with `stop` instead of
+    /// panicking the whole batch.
+    pub(crate) fn halt(&mut self, stop: StopReason) {
+        self.stop = Some(stop);
+    }
+
     /// Upper bound on this row's final sequence length: everything in
     /// `seq` plus the remaining generation budget, clamped to the window.
     /// Page-budget reservation sizes a row's worst-case need from this.
@@ -298,7 +308,9 @@ impl RowPlan {
     /// Done rows in a still-running batch freeze on their last token —
     /// rewriting the same cache slot with the same bytes (idempotent, and
     /// rows are independent, so live rows are unaffected).
+    #[allow(clippy::expect_used)] // invariant: see the lint allow below
     pub(crate) fn step_input(&self) -> (i32, i32) {
+        // lisa-lint: allow(serve_panic): the constructor asserts a non-empty prompt and `seq` only grows
         (*self.seq.last().expect("non-empty"), (self.seq.len() - 1) as i32)
     }
 
@@ -492,7 +504,7 @@ impl RowSlot {
     fn no_progress(&self) -> bool {
         match self.state() {
             SlotState::Vacant | SlotState::Drained | SlotState::Parked => true,
-            SlotState::Prefilling => self.0.as_ref().expect("occupied").fed == 0,
+            SlotState::Prefilling => self.0.as_ref().map_or(true, |occ| occ.fed == 0),
             SlotState::Decoding => false,
         }
     }
@@ -521,7 +533,7 @@ impl RowSlot {
         let Some(occ) = self.0.take() else { return };
         debug_assert!(occ.pages.is_empty(), "pages must be released before fail");
         let mut fail = ServeFail::new(class, msg);
-        fail.tokens = occ.plan.out()[..occ.emitted].to_vec();
+        fail.tokens = occ.plan.out().get(..occ.emitted).unwrap_or_default().to_vec();
         let mut sink = occ.sink;
         sink.on_fail(&fail);
     }
@@ -530,7 +542,10 @@ impl RowSlot {
     /// K/V (host bookkeeping rebuilds it on unpark) and park the row.
     fn park(&mut self, alloc: &mut PageAllocator) {
         self.release_pages(alloc);
-        let occ = self.0.as_mut().expect("parking an empty row");
+        let Some(occ) = self.0.as_mut() else {
+            debug_assert!(false, "parking an empty row");
+            return;
+        };
         occ.re_prefill();
         occ.parked = true;
         occ.preempts += 1;
@@ -588,7 +603,7 @@ impl RowSlot {
         if !matches!(self.state(), SlotState::Prefilling | SlotState::Decoding) {
             return Ok(()); // parked rows hold no pages and write scratch
         }
-        let occ = self.0.as_mut().expect("live implies occupied");
+        let Some(occ) = self.0.as_mut() else { return Ok(()) };
         let pos = match occ.state() {
             SlotState::Prefilling => occ.fed,
             _ => occ.plan.seq.len() - 1,
@@ -608,7 +623,7 @@ impl RowSlot {
         if self.state() != SlotState::Drained {
             return;
         }
-        let occ = self.0.as_mut().expect("drained implies occupied");
+        let Some(occ) = self.0.as_mut() else { return };
         let pages = std::mem::take(&mut occ.pages);
         if occ.fed == occ.prompt_len {
             alloc.register_prefix(&occ.plan.seq[..occ.prompt_len], &pages);
@@ -623,7 +638,8 @@ impl RowSlot {
         if let Some(occ) = &mut self.0 {
             let c = occ.plan.committed();
             while occ.emitted < c {
-                occ.sink.on_token(occ.plan.out()[occ.emitted]);
+                let Some(&tok) = occ.plan.out().get(occ.emitted) else { break };
+                occ.sink.on_token(tok);
                 occ.emitted += 1;
             }
         }
@@ -637,7 +653,7 @@ impl RowSlot {
             return false;
         }
         self.emit(); // drained: everything left in `out` is committed
-        let occ = self.0.take().expect("drained implies occupied");
+        let Some(occ) = self.0.take() else { return false };
         let mut sink = occ.sink;
         sink.on_done(&occ.plan.into_completion());
         true
@@ -647,7 +663,7 @@ impl RowSlot {
     /// not forced) — all-false across the batch skips the download.
     fn needs_prefill_logits(&self) -> bool {
         self.state() == SlotState::Prefilling
-            && self.0.as_ref().expect("occupied").first.is_none()
+            && self.0.as_ref().is_some_and(|occ| occ.first.is_none())
     }
 
     /// Whether this row will read the *next* `decode_logits` row: it is
@@ -692,12 +708,20 @@ impl RowSlot {
             return; // drained rows prefilled inertly (their grid row rides along)
         }
         occ.fed = occ.prompt_len;
-        let tok = match occ.first.take() {
-            Some(t) => t,
-            None => {
-                let (lg, row) = logits.expect("unforced rows need prefill logits");
+        let tok = match (occ.first.take(), logits) {
+            (Some(t), _) => t,
+            (None, Some((lg, row))) => {
                 let p = occ.prompt_len - 1;
                 occ.sampler.pick(&lg.data[(row * t_max + p) * v..(row * t_max + p + 1) * v])
+            }
+            (None, None) => {
+                // scheduler contract breach: an unforced row reached the
+                // end of prefill with no logits downloaded. Drain this
+                // row with an error instead of killing its neighbors.
+                debug_assert!(false, "unforced rows need prefill logits");
+                occ.plan.halt(StopReason::Error);
+                self.emit();
+                return;
             }
         };
         occ.plan.push(tok);
@@ -714,19 +738,30 @@ impl RowSlot {
             SlotState::Prefilling => {
                 occ.fed += 1;
                 if occ.fed == occ.prompt_len {
-                    let tok = match occ.first.take() {
-                        Some(t) => t,
-                        None => occ
-                            .sampler
-                            .pick(row_logits.expect("scheduler downloads consumed logits")),
+                    let tok = match (occ.first.take(), row_logits) {
+                        (Some(t), _) => t,
+                        (None, Some(lg)) => occ.sampler.pick(lg),
+                        (None, None) => {
+                            // scheduler contract breach (see
+                            // `consumes_next_logits`): drain the row
+                            // instead of panicking the batch
+                            debug_assert!(false, "scheduler downloads consumed logits");
+                            occ.plan.halt(StopReason::Error);
+                            self.emit();
+                            return;
+                        }
                     };
                     occ.plan.push(tok);
                 }
             }
             SlotState::Decoding => {
-                let tok = occ
-                    .sampler
-                    .pick(row_logits.expect("scheduler downloads consumed logits"));
+                let Some(lg) = row_logits else {
+                    debug_assert!(false, "scheduler downloads consumed logits");
+                    occ.plan.halt(StopReason::Error);
+                    self.emit();
+                    return;
+                };
+                let tok = occ.sampler.pick(lg);
                 occ.plan.push(tok);
             }
             SlotState::Vacant | SlotState::Parked | SlotState::Drained => {}
@@ -905,7 +940,9 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
         impl RequestSink for Collect {
             fn on_token(&mut self, _tok: i32) {}
             fn on_done(&mut self, c: &Completion) {
-                self.done.borrow_mut()[self.idx] = Some(c.clone());
+                if let Some(slot) = self.done.borrow_mut().get_mut(self.idx) {
+                    *slot = Some(c.clone());
+                }
             }
         }
 
@@ -936,8 +973,13 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
         let out = done
             .borrow_mut()
             .drain(..)
-            .map(|c| c.expect("every request drains before the loop exits"))
-            .collect();
+            .map(|c| {
+                // a row that exhausted the degradation ladder drained via
+                // `on_fail`, leaving its slot empty: surface that as an
+                // error instead of panicking the whole batch
+                c.ok_or_else(|| anyhow::anyhow!("request failed before completing"))
+            })
+            .collect::<Result<Vec<_>>>()?;
         Ok(out)
     }
 
@@ -1102,16 +1144,18 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             }
 
             // ---- one decode step advances every row
-            if dec_ops.is_none() {
-                let ep = self.eng.embed_ops(self.params)?;
-                let mut blocks = Vec::with_capacity(m.n_layers);
-                for l in 0..m.n_layers {
-                    blocks.push(self.eng.block_ops(self.params, l)?);
+            let (ep, blocks, ho) = match &mut dec_ops {
+                Some(ops) => &*ops,
+                cache => {
+                    let ep = self.eng.embed_ops(self.params)?;
+                    let mut blocks = Vec::with_capacity(m.n_layers);
+                    for l in 0..m.n_layers {
+                        blocks.push(self.eng.block_ops(self.params, l)?);
+                    }
+                    let ho = self.eng.head_ops(self.params)?;
+                    &*cache.insert((ep, blocks, ho))
                 }
-                let ho = self.eng.head_ops(self.params)?;
-                dec_ops = Some((ep, blocks, ho));
-            }
-            let (ep, blocks, ho) = dec_ops.as_ref().expect("just built");
+            };
 
             // paged: grow each live row's page list to cover the position
             // it writes this step (one page at a time at page boundaries).
@@ -1120,7 +1164,9 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             // keep their pages and keep decoding.
             if self.paged.is_some() {
                 for slot in slots.iter_mut() {
-                    let pool = self.paged.as_mut().expect("paged mode");
+                    // re-borrowed per row: `slot.fail` below needs the
+                    // pool borrow released between iterations
+                    let Some(pool) = self.paged.as_mut() else { break };
                     if let Err(e) = slot.ensure_page(&mut pool.alloc) {
                         if slot.0.as_ref().is_some_and(|o| o.preempts >= 1) {
                             slot.release_pages(&mut pool.alloc);
@@ -1163,13 +1209,18 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             // alongside tok/pidx (three small uploads instead of two)
             let table = self.paged.as_ref().map(|pool| page_table(&slots, bsz, pool.p));
             let st = match self.paged.as_mut() {
-                Some(pool) => pool
-                    .state
-                    .take()
-                    .expect("live non-fresh rows imply a prefilled pool"),
-                None => state
-                    .take()
-                    .expect("live non-fresh rows imply a prefilled state"),
+                Some(pool) => pool.state.take(),
+                None => state.take(),
+            };
+            let Some(st) = st else {
+                // loop invariant breach (live non-fresh rows imply a
+                // prefilled state): quarantine rebuilds every live row's
+                // K/V from scratch, restoring the invariant, instead of
+                // panicking mid-burst
+                debug_assert!(false, "live non-fresh rows imply a prefilled state");
+                self.quarantine(&mut slots, "decode step found no prefilled state");
+                state = None;
+                continue;
             };
             let state_next = {
                 let mut ops: Vec<Operand> = vec![Operand::I32(&tok), Operand::I32(&pidx)];
@@ -1216,7 +1267,11 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
                     Some(pool) => (pool.state.as_ref(), self.eng.ids.paged_logits),
                     None => (state.as_ref(), self.eng.ids.decode_logits),
                 };
-                let st = st.expect("just stepped");
+                let Some(st) = st else {
+                    // unreachable: the step above just stored this state
+                    debug_assert!(false, "decode step just stored a state");
+                    continue;
+                };
                 let ops = [st.operand(), ho[0].operand(), ho[1].operand()];
                 match self.eng.run_chain_act(seg, &ops, &logit1_shape).and_then(Act::into_host) {
                     Ok(h) => Some(h),
@@ -1374,7 +1429,7 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             if let Some(pool) = self.paged.as_mut() {
                 slot.release_pages(&mut pool.alloc);
             }
-            let occ = slot.0.as_mut().expect("live implies occupied");
+            let Some(occ) = slot.0.as_mut() else { continue };
             occ.faults += 1;
             if occ.faults > self.row_fault_budget {
                 slot.fail(FailClass::Internal, msg);
@@ -1387,7 +1442,7 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             // prefill scatters every column into a real page. No prefix
             // adoption here — the cache is about to be flushed.
             if let Some(pool) = self.paged.as_mut() {
-                let occ = slot.0.as_mut().expect("still occupied");
+                let Some(occ) = slot.0.as_mut() else { continue };
                 let need = occ.plan.seq.len().div_ceil(pool.alloc.page_t());
                 while occ.pages.len() < need {
                     match pool.alloc.alloc() {
@@ -1422,10 +1477,10 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             if slot.state() != SlotState::Parked {
                 continue;
             }
-            let pool = self.paged.as_mut().expect("paged mode");
+            let Some(pool) = self.paged.as_mut() else { return };
             let bt = pool.alloc.page_t();
             let avail = pool.alloc.n_free() + pool.alloc.n_idle_cached();
-            let occ = slot.0.as_mut().expect("parked implies occupied");
+            let Some(occ) = slot.0.as_mut() else { continue };
             let need_full = (occ.plan.max_total_len().div_ceil(bt)).min(pool.p);
             if need_full > avail {
                 continue; // not enough headroom yet — stay parked
@@ -1463,7 +1518,7 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             .filter(|s| s.state() == SlotState::Parked)
             .max_by_key(|s| s.0.as_ref().map_or(0, |o| o.plan.seq.len()));
         if let Some(slot) = victim {
-            let pool = self.paged.as_mut().expect("paged mode");
+            let Some(pool) = self.paged.as_mut() else { return };
             slot.release_pages(&mut pool.alloc);
             slot.fail(
                 FailClass::Overloaded,
@@ -1509,12 +1564,13 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             let bo = self.eng.block_ops(self.params, l)?;
             // prefill_kv ABI: (h, g1, wk, wv) — block ABI indices 0/2/3
             let kv_ops = [h.operand(), bo[0].operand(), bo[2].operand(), bo[3].operand()];
-            kvs.push(self.eng.run_chain_act(ids.prefill_kv, &kv_ops, &kv_shape)?);
+            let kv = self.eng.run_chain_act(ids.prefill_kv, &kv_ops, &kv_shape)?;
+            kv_bytes += kv.bytes() as u64;
+            kvs.push(kv);
             let mut ops = vec![h.operand()];
             ops.extend(bo.iter().map(ParamOp::operand));
             let h_next = self.eng.run_chain_act(ids.block_fwd, &ops, &hs)?;
             h = h_next;
-            kv_bytes += kvs.last().expect("pushed").bytes() as u64;
             self.eng
                 .meter
                 .set(MemCategory::Activations, kv_bytes + h.bytes() as u64);
@@ -1540,7 +1596,10 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             // (zeros before the first prefill) rides through unchanged
             // outside the written rows, so cached pages survive.
             let (p, rows, prev) = {
-                let pool = self.paged.as_mut().expect("paged mode");
+                let Some(pool) = self.paged.as_mut() else {
+                    // unreachable: this branch is `self.paged.is_some()`
+                    return Err(anyhow::anyhow!("paged scatter without a paged pool"));
+                };
                 let prev = match pool.state.take() {
                     Some(st) => st,
                     None => Act::Host(HostTensor::from_vec(
@@ -1562,7 +1621,9 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
                     // scatter is functional: `prev` — and the cached
                     // prefix K/V inside it — is intact, so put it back
                     // and let the caller re-issue the whole prefill
-                    self.paged.as_mut().expect("paged mode").state = Some(prev);
+                    if let Some(pool) = self.paged.as_mut() {
+                        pool.state = Some(prev);
+                    }
                     return Err(e);
                 }
             };
@@ -1571,7 +1632,9 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
                 .set(MemCategory::Activations, kv_bytes + st.bytes() as u64);
             drop(kvs);
             self.eng.meter.set(MemCategory::Activations, st.bytes() as u64);
-            self.paged.as_mut().expect("paged mode").state = Some(st);
+            if let Some(pool) = self.paged.as_mut() {
+                pool.state = Some(st);
+            }
             None
         } else {
             let state = {
@@ -1597,6 +1660,7 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests panic by design
 mod tests {
     use super::*;
 

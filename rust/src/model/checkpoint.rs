@@ -296,12 +296,17 @@ fn atomic_write(
 // ---------------------------------------------------------------------------
 
 fn f32s_as_bytes(data: &[f32]) -> &[u8] {
+    // SAFETY: an f32 slice is valid to view as initialized bytes — same
+    // allocation, same length in bytes, stricter source alignment, and
+    // the borrow pins the data for the returned lifetime.
     unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
 }
 
 fn u64s_as_bytes(data: &[u64]) -> &[u8] {
     // u64 is little-endian on every platform this runs on (x86-64/aarch64);
     // the format is defined as LE and the loader reads words explicitly.
+    // SAFETY: as above — a u64 slice viewed as bytes covers the same
+    // allocation with a stricter source alignment.
     unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 8) }
 }
 
@@ -417,6 +422,9 @@ impl<R: Read> Rd<R> {
 
     fn f32_data(&mut self, numel: usize) -> Result<Vec<f32>> {
         let mut data = vec![0f32; numel];
+        // SAFETY: the zero-initialized f32 buffer is viewed as exactly
+        // its own `numel * 4` bytes; every bit pattern is a valid f32,
+        // so filling the bytes cannot create an invalid value.
         let bytes: &mut [u8] = unsafe {
             std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4)
         };

@@ -35,6 +35,9 @@
 //! `hit == 0`, giving pool pressure one classification path whether it was
 //! injected or earned.
 
+// Clippy backstop for the no-panic serving contract (DESIGN.md §13,
+// enforced structurally by lisa-lint's serve_panic pass).
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 use std::collections::BTreeMap;
 use std::fmt;
 
@@ -287,7 +290,9 @@ impl FaultInjector {
             if e.kind == FaultKind::Transient {
                 // the failed execution never ran: rewind so the retry
                 // replays the same index (now spent) and goes through
-                *self.seg_counts.get_mut(name).expect("counter was just inserted") -= 1;
+                if let Some(c) = self.seg_counts.get_mut(name) {
+                    *c -= 1;
+                }
             }
         }
         hit
@@ -304,6 +309,7 @@ impl FaultInjector {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -53,6 +53,9 @@ impl HostTensor {
 
     /// Convert to an `xla::Literal` (memcpy of the raw buffer).
     pub fn to_literal(&self) -> Result<Literal> {
+        // SAFETY: viewing the f32 buffer as its own bytes — same
+        // allocation, same length, stricter source alignment, lifetime
+        // bound to `&self` for the duration of the copy below.
         let bytes: &[u8] = unsafe {
             std::slice::from_raw_parts(
                 self.data.as_ptr() as *const u8,
@@ -185,6 +188,8 @@ impl HostTensorI32 {
     }
 
     pub fn to_literal(&self) -> Result<Literal> {
+        // SAFETY: as for `HostTensor::to_literal` — an i32 buffer viewed
+        // as its own bytes for the duration of the copy.
         let bytes: &[u8] = unsafe {
             std::slice::from_raw_parts(
                 self.data.as_ptr() as *const u8,

@@ -8,6 +8,9 @@
 //! which the model thread refreshes (throttled, from `observe`) and the
 //! `/metrics` handler clones — neither side ever holds it across I/O.
 
+// Clippy backstop for the no-panic serving contract (DESIGN.md §13,
+// enforced structurally by lisa-lint's serve_panic pass).
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -90,13 +93,16 @@ impl Metrics {
 
     /// Count a terminal request failure by class.
     pub fn fail(&self, class: FailClass) {
-        let i = FAIL_CLASSES.iter().position(|c| *c == class).expect("all classes have a slot");
-        self.failures[i].fetch_add(1, Ordering::Relaxed);
+        if let Some(i) = FAIL_CLASSES.iter().position(|c| *c == class) {
+            self.failures[i].fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     pub fn fail_count(&self, class: FailClass) -> u64 {
-        let i = FAIL_CLASSES.iter().position(|c| *c == class).expect("all classes have a slot");
-        self.failures[i].load(Ordering::Relaxed)
+        match FAIL_CLASSES.iter().position(|c| *c == class) {
+            Some(i) => self.failures[i].load(Ordering::Relaxed),
+            None => 0,
+        }
     }
 
     pub fn enqueue(&self) {
@@ -141,12 +147,15 @@ impl Metrics {
     }
 
     pub fn set_engine(&self, snap: EngineSnapshot) {
-        *self.engine.lock().unwrap() = snap;
+        // a writer that panicked mid-store left a stale-but-consistent
+        // snapshot behind: metrics keep flowing rather than cascading
+        // the poison into /metrics handlers
+        *self.engine.lock().unwrap_or_else(std::sync::PoisonError::into_inner) = snap;
     }
 
     /// Cheap per-iteration update: loop counters only, segments kept.
     pub fn set_loop(&self, loops: LoopStats) {
-        self.engine.lock().unwrap().loops = loops;
+        self.engine.lock().unwrap_or_else(std::sync::PoisonError::into_inner).loops = loops;
     }
 
     pub fn uptime_s(&self) -> f64 {
@@ -220,7 +229,7 @@ impl Metrics {
         let _ = writeln!(o, "# TYPE lisa_serve_uptime_seconds gauge");
         let _ = writeln!(o, "lisa_serve_uptime_seconds {}", self.uptime_s());
 
-        let snap = self.engine.lock().unwrap().clone();
+        let snap = self.engine.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clone();
         let l = snap.loops;
         for (name, help, v) in [
             ("lisa_serve_decode_steps_total", "Batched decode_step executions.", l.decode_steps),
@@ -298,6 +307,7 @@ impl Default for Metrics {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -10,6 +10,9 @@
 //! sides. This is not a general web server; it is the smallest surface
 //! that makes `ServeSession` reachable over a socket.
 
+// Clippy backstop for the no-panic serving contract (DESIGN.md §13,
+// enforced structurally by lisa-lint's serve_panic pass).
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 use std::collections::BTreeMap;
 use std::io::{BufRead, Read, Write};
 
@@ -455,6 +458,7 @@ pub mod client {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests panic by design
 mod tests {
     use super::*;
     use std::io::BufReader;

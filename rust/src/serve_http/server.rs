@@ -30,6 +30,9 @@
 //!
 //! [`ServeSession`]: crate::engine::ServeSession
 
+// Clippy backstop for the no-panic serving contract (DESIGN.md §13,
+// enforced structurally by lisa-lint's serve_panic pass).
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -639,7 +642,8 @@ extern "C" {
 extern "C" fn on_sigint(_sig: i32) {
     if SIGINT_FLAG.swap(true, Ordering::SeqCst) {
         // second signal: the operator wants out *now*, skip the drain
-        // (_exit is async-signal-safe; nothing here allocates)
+        // SAFETY: `_exit` is async-signal-safe and never returns;
+        // nothing here allocates or takes locks.
         unsafe { _exit(130) }
     }
 }
@@ -651,6 +655,9 @@ extern "C" fn on_sigint(_sig: i32) {
 /// Idempotent; a second signal of either kind exits immediately with
 /// status 130.
 pub fn install_sigint() {
+    // SAFETY: `signal(2)` with a handler that only touches an atomic
+    // flag or calls `_exit` — both async-signal-safe; the handler
+    // pointer outlives the process (it is a plain fn item).
     #[cfg(unix)]
     unsafe {
         signal(2 /* SIGINT */, on_sigint as usize);
@@ -665,6 +672,7 @@ pub fn sigint_received() -> bool {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -3,7 +3,22 @@
 //!
 //! Thread-safe by construction: counts are relaxed atomics and the sum is
 //! a bit-CAS'd f64, so HTTP workers observe while the `/metrics` handler
-//! renders without a lock. Buckets are cumulative in the rendered output
+//! renders without a lock.
+//!
+//! **Ordering audit.** `Relaxed` is deliberate and sufficient here: each
+//! counter is an independent monotone tally, the CAS loop on `sum_bits`
+//! is made atomic by the compare-exchange itself (no other memory is
+//! published under it), and readers only ever see a *slightly stale*
+//! snapshot — never a torn or decreasing one. Nothing synchronizes
+//! *through* a histogram; cross-field consistency (e.g. a rendered
+//! `_count` lagging `_sum` by an in-flight observation) is explicitly
+//! tolerated by the Prometheus scrape model. The one place the metrics
+//! layer does need ordering — the dirty-flag handoff in
+//! `serve_http/metrics.rs` — uses a Release store paired with an
+//! Acquire swap. `lisa_hist_hammer` in the tests pins the
+//! lose-nothing guarantee under contention.
+//!
+//! Buckets are cumulative in the rendered output
 //! (Prometheus `histogram` exposition: `_bucket{le="..."}`, `_sum`,
 //! `_count`) and quantiles are estimated by linear interpolation inside
 //! the owning bucket — good enough for p50/p99 gauges on serving
@@ -195,5 +210,56 @@ mod tests {
         }
         assert_eq!(h.count(), 4000);
         assert!(h.sum() > 0.0);
+    }
+
+    /// The TSan-shaped hammer: writers race readers (`render_prometheus`
+    /// and `quantile` run mid-stream) and the final tallies must be
+    /// exact. Observing `1.0` keeps every partial sum representable, so
+    /// any lost CAS update or torn read shows up as a hard inequality,
+    /// not float noise. This is also the test the CI ThreadSanitizer job
+    /// runs over `--lib` (`.github/workflows/ci.yml`).
+    #[test]
+    fn lisa_hist_hammer_exact_under_reader_writer_races() {
+        const WRITERS: usize = 8;
+        const PER: usize = 5_000;
+        let h = std::sync::Arc::new(Histogram::exponential(0.5, 2.0, 6));
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut readers = Vec::new();
+        for _ in 0..2 {
+            let h = h.clone();
+            let stop = stop.clone();
+            readers.push(std::thread::spawn(move || {
+                let mut renders = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let mut s = String::new();
+                    h.render_prometheus("hammer", &mut s);
+                    // monotone sanity on the racing snapshot
+                    assert!(h.quantile(0.5) >= 0.0);
+                    assert!(h.sum() >= 0.0);
+                    renders += 1;
+                }
+                renders
+            }));
+        }
+        let writers: Vec<_> = (0..WRITERS)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..PER {
+                        h.observe(1.0);
+                    }
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        for r in readers {
+            assert!(r.join().unwrap() > 0, "reader never ran");
+        }
+        let n = (WRITERS * PER) as u64;
+        assert_eq!(h.count(), n, "lost bucket increments under contention");
+        assert_eq!(h.sum(), n as f64, "lost CAS sum updates under contention");
     }
 }

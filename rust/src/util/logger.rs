@@ -1,11 +1,10 @@
 //! Tiny `log`-facade backend writing leveled, timestamped lines to stderr.
 
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::LazyLock;
 use std::time::Instant;
 
-use once_cell::sync::Lazy;
-
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: LazyLock<Instant> = LazyLock::new(Instant::now);
 static INSTALLED: AtomicBool = AtomicBool::new(false);
 
 struct StderrLogger;
@@ -40,7 +39,7 @@ pub fn init() {
     if INSTALLED.swap(true, Ordering::SeqCst) {
         return;
     }
-    Lazy::force(&START);
+    LazyLock::force(&START);
     let level = match std::env::var("LISA_LOG").as_deref() {
         Ok("error") => log::LevelFilter::Error,
         Ok("warn") => log::LevelFilter::Warn,

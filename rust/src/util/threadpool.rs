@@ -49,7 +49,12 @@ where
 }
 
 struct SendPtr<T>(*mut T);
+// SAFETY: SendPtr is only used inside `scope` above, where the atomic
+// index counter hands each slot to exactly one worker — no two threads
+// ever dereference the same offset, and the pointee outlives the scope.
 unsafe impl<T> Sync for SendPtr<T> {}
+// SAFETY: as above — exclusive slot ownership per worker within the
+// scope makes moving the pointer across threads sound.
 unsafe impl<T> Send for SendPtr<T> {}
 
 /// Default worker count: physical parallelism minus one (leave a core for

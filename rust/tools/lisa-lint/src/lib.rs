@@ -1,0 +1,1086 @@
+//! `lisa-lint` — invariant-enforcing static analysis over `rust/src`
+//! (DESIGN.md §14).
+//!
+//! The repo's correctness rests on cross-cutting contracts that no type
+//! checker sees: the serving path must never panic (DESIGN.md §13), the
+//! `Operand` device/host decision lives in one funnel (§8), strategies
+//! that write weights must report `Touched` (§8), the model thread never
+//! blocks on a bounded channel (§11), `unsafe` carries a justification,
+//! and completions are a function of `(prompt, spec, seed)` alone (§10).
+//! Each contract is a [`Pass`] here, enforced at CI time on every path —
+//! not just the ones integration tests happen to execute.
+//!
+//! The scanner is lexical, not `syn`-based (this build image has no
+//! registry access, and the tool must stay dependency-free): source is
+//! scrubbed of comments and string/char literals with a line-preserving
+//! lexer, `#[cfg(test)]`/`#[test]` regions are tracked by brace
+//! matching, and enclosing-`fn` names/return types are recovered from
+//! the token stream. That is enough to make every pass precise on this
+//! tree; the residual blind spots of each heuristic are documented on
+//! the pass and in DESIGN.md §14.
+//!
+//! Suppression is explicit and audited: only
+//! `// lisa-lint: allow(<pass>): <reason>` on the violating line or the
+//! line above is honored, and the reason is mandatory — an allow without
+//! one is itself a violation.
+
+use std::fmt;
+use std::path::Path;
+
+/// Every pass, in reporting order.
+pub const PASSES: &[&str] = &[
+    "serve_panic",
+    "operand_builder",
+    "touched_contract",
+    "blocking_send",
+    "safety_comment",
+    "determinism",
+];
+
+/// One violation, addressed `file:line`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub pass: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.pass, self.msg)
+    }
+}
+
+// --------------------------------------------------------------- lexer
+
+/// Comment- and literal-scrubbed source: `code` keeps the lexical
+/// skeleton (string contents blanked, quotes kept), `comments` keeps
+/// only comment text. Both preserve byte-for-byte line structure.
+pub struct Scrubbed {
+    pub code: String,
+    pub comments: String,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Scrub comments and string/char literals out of Rust source while
+/// preserving line structure. Handles nested block comments, raw
+/// strings (`r#".."#`), byte strings, escapes, and the char-literal vs
+/// lifetime ambiguity (`'a'` vs `'a`).
+pub fn scrub(src: &str) -> Scrubbed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut code = String::with_capacity(src.len());
+    let mut com = String::with_capacity(src.len());
+    let blank = |s: &mut String, c: char| s.push(if c == '\n' { '\n' } else { ' ' });
+    let mut i = 0;
+    let mut prev_code = '\0'; // last char emitted to `code` (ident guard)
+    while i < n {
+        let c = b[i];
+        // line comment
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                blank(&mut code, b[i]);
+                com.push(b[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // block comment (nested)
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 0;
+            while i < n {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    com.push('/');
+                    com.push('*');
+                    blank(&mut code, b[i]);
+                    blank(&mut code, b[i + 1]);
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    com.push('*');
+                    com.push('/');
+                    blank(&mut code, b[i]);
+                    blank(&mut code, b[i + 1]);
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    com.push(b[i]);
+                    blank(&mut code, b[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw (byte) string: r"..", r#".."#, br#".."# — only when the
+        // `r`/`b` does not continue an identifier
+        if (c == 'r' || c == 'b') && !is_ident(prev_code) {
+            let mut j = i + 1;
+            if c == 'b' && j < n && b[j] == 'r' {
+                j += 1;
+            }
+            let mut hashes = 0;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' && (b[i] == 'r' || (b[i] == 'b' && b[i + 1] == 'r') || hashes == 0 && c == 'r') {
+                // emit the prefix + opening quote, blank the contents
+                for k in i..=j {
+                    code.push(b[k]);
+                    blank(&mut com, b[k]);
+                }
+                i = j + 1;
+                while i < n {
+                    if b[i] == '"' {
+                        let mut m = 0;
+                        while m < hashes && i + 1 + m < n && b[i + 1 + m] == '#' {
+                            m += 1;
+                        }
+                        if m == hashes {
+                            for k in i..=(i + hashes) {
+                                code.push(b[k]);
+                                blank(&mut com, b[k]);
+                            }
+                            i += hashes + 1;
+                            break;
+                        }
+                    }
+                    blank(&mut code, b[i]);
+                    blank(&mut com, b[i]);
+                    i += 1;
+                }
+                prev_code = '"';
+                continue;
+            }
+        }
+        // plain (byte) string
+        if c == '"' {
+            code.push('"');
+            blank(&mut com, '"');
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    blank(&mut code, b[i]);
+                    blank(&mut code, b[i + 1]);
+                    blank(&mut com, b[i]);
+                    blank(&mut com, b[i + 1]);
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '"' {
+                    code.push('"');
+                    blank(&mut com, '"');
+                    i += 1;
+                    break;
+                }
+                blank(&mut code, b[i]);
+                blank(&mut com, b[i]);
+                i += 1;
+            }
+            prev_code = '"';
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            let next = b.get(i + 1).copied().unwrap_or('\0');
+            let is_char = next == '\\'
+                || (next != '\0' && b.get(i + 2).copied() == Some('\''))
+                || !(next.is_ascii_alphabetic() || next == '_');
+            if is_char && next != '\0' {
+                code.push('\'');
+                blank(&mut com, '\'');
+                i += 1;
+                while i < n {
+                    if b[i] == '\\' && i + 1 < n {
+                        blank(&mut code, b[i]);
+                        blank(&mut code, b[i + 1]);
+                        blank(&mut com, b[i]);
+                        blank(&mut com, b[i + 1]);
+                        i += 2;
+                        continue;
+                    }
+                    if b[i] == '\'' {
+                        code.push('\'');
+                        blank(&mut com, '\'');
+                        i += 1;
+                        break;
+                    }
+                    blank(&mut code, b[i]);
+                    blank(&mut com, b[i]);
+                    i += 1;
+                }
+                prev_code = '\'';
+                continue;
+            }
+            // lifetime: emit as-is
+        }
+        code.push(c);
+        blank(&mut com, c);
+        if !c.is_whitespace() {
+            prev_code = c;
+        }
+        i += 1;
+    }
+    Scrubbed { code, comments: com }
+}
+
+// ------------------------------------------------- structural analysis
+
+/// A function item recovered from the token stream.
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    /// Raw text between the argument list and the body (return type +
+    /// where clause).
+    pub ret: String,
+    /// Byte range of the body (inclusive of both braces) in the
+    /// scrubbed code.
+    pub body: std::ops::Range<usize>,
+}
+
+/// Per-file analysis every pass consumes.
+pub struct Analysis {
+    /// Path with `/` separators, relative to the lint root.
+    pub rel: String,
+    /// Scrubbed code, joined.
+    pub code: String,
+    /// Scrubbed code, split into lines.
+    pub code_lines: Vec<String>,
+    /// Comment text per line.
+    pub comment_lines: Vec<String>,
+    /// Line (0-based) → inside a `#[cfg(test)]` / `#[test]` region.
+    pub in_test: Vec<bool>,
+    pub fns: Vec<FnSpan>,
+    /// Byte offset of each line start in `code`.
+    line_starts: Vec<usize>,
+}
+
+impl Analysis {
+    pub fn new(rel: &str, src: &str) -> Analysis {
+        let Scrubbed { code, comments } = scrub(src);
+        let code_lines: Vec<String> = code.split('\n').map(str::to_string).collect();
+        let comment_lines: Vec<String> = comments.split('\n').map(str::to_string).collect();
+        let mut line_starts = vec![0usize];
+        for (off, ch) in code.char_indices() {
+            if ch == '\n' {
+                line_starts.push(off + 1);
+            }
+        }
+        let in_test = mark_test_regions(&code, &line_starts);
+        let fns = find_fns(&code);
+        Analysis {
+            rel: rel.replace('\\', "/"),
+            code,
+            code_lines,
+            comment_lines,
+            in_test,
+            fns,
+            line_starts,
+        }
+    }
+
+    /// 0-based line of a byte offset into `code`.
+    pub fn line_of(&self, off: usize) -> usize {
+        match self.line_starts.binary_search(&off) {
+            Ok(l) => l,
+            Err(l) => l - 1,
+        }
+    }
+
+    /// Innermost function whose body contains `off`.
+    pub fn enclosing_fn(&self, off: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.body.contains(&off))
+            .min_by_key(|f| f.body.end - f.body.start)
+    }
+
+    fn is_test_line(&self, line: usize) -> bool {
+        self.in_test.get(line).copied().unwrap_or(false)
+    }
+}
+
+/// Mark lines inside `#[cfg(test)]` / `#[test]` items by brace
+/// matching. An attribute whose item ends in `;` before any `{` (e.g.
+/// `#[cfg(test)] use ...;`) opens no region.
+fn mark_test_regions(code: &str, line_starts: &[usize]) -> Vec<bool> {
+    let b: Vec<char> = code.chars().collect();
+    let n = b.len();
+    let nlines = line_starts.len();
+    let mut in_test = vec![false; nlines];
+    let mut depth: i64 = 0;
+    let mut bracket: i64 = 0; // () + [] nesting, for the `;` cancel rule
+    let mut test_stack: Vec<i64> = Vec::new();
+    let mut pending = false;
+    let mut line = 0usize;
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if !test_stack.is_empty() {
+            in_test[line] = true;
+        }
+        match c {
+            '#' if i + 1 < n && b[i + 1] == '[' => {
+                // read the attribute to its matching ]
+                let mut j = i + 2;
+                let mut d = 1;
+                let mut attr = String::new();
+                while j < n && d > 0 {
+                    match b[j] {
+                        '[' => d += 1,
+                        ']' => d -= 1,
+                        '\n' => line += 1,
+                        _ => {}
+                    }
+                    if d > 0 && !b[j].is_whitespace() {
+                        attr.push(b[j]);
+                    }
+                    j += 1;
+                }
+                if attr == "test"
+                    || (attr.starts_with("cfg(")
+                        && attr.contains("test")
+                        && !attr.contains("not(test"))
+                {
+                    pending = true;
+                }
+                i = j;
+                continue;
+            }
+            '(' | '[' => bracket += 1,
+            ')' | ']' => bracket -= 1,
+            ';' if pending && bracket == 0 => pending = false,
+            '{' => {
+                if pending {
+                    test_stack.push(depth);
+                    pending = false;
+                    in_test[line] = true;
+                }
+                depth += 1;
+            }
+            '}' => {
+                depth -= 1;
+                if test_stack.last() == Some(&depth) {
+                    in_test[line] = true; // the closing brace line too
+                    test_stack.pop();
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    in_test
+}
+
+/// Recover `fn` items (name, return-type text, body range) from the
+/// scrubbed token stream. Fn-pointer types (`fn(i32)`) carry no name
+/// and are skipped; trait-method declarations without a body likewise.
+fn find_fns(code: &str) -> Vec<FnSpan> {
+    let b: Vec<char> = code.chars().collect();
+    let n = b.len();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < n {
+        // find the keyword `fn` at an identifier boundary
+        if b[i] == 'f'
+            && i + 1 < n
+            && b[i + 1] == 'n'
+            && (i == 0 || !is_ident(b[i - 1]))
+            && (i + 2 >= n || !is_ident(b[i + 2]))
+        {
+            let mut j = i + 2;
+            while j < n && b[j].is_whitespace() {
+                j += 1;
+            }
+            // need an identifier: `fn(` is a type, not an item
+            if j >= n || !(b[j].is_ascii_alphabetic() || b[j] == '_') {
+                i += 2;
+                continue;
+            }
+            let mut name = String::new();
+            while j < n && is_ident(b[j]) {
+                name.push(b[j]);
+                j += 1;
+            }
+            while j < n && b[j].is_whitespace() {
+                j += 1;
+            }
+            // skip generics, ignoring `->`'s `>`
+            if j < n && b[j] == '<' {
+                let mut d = 0i64;
+                while j < n {
+                    match b[j] {
+                        '<' => d += 1,
+                        '>' if j > 0 && b[j - 1] != '-' => d -= 1,
+                        _ => {}
+                    }
+                    j += 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                while j < n && b[j].is_whitespace() {
+                    j += 1;
+                }
+            }
+            // argument list
+            if j >= n || b[j] != '(' {
+                i = j;
+                continue;
+            }
+            let mut d = 0i64;
+            while j < n {
+                match b[j] {
+                    '(' => d += 1,
+                    ')' => d -= 1,
+                    _ => {}
+                }
+                j += 1;
+                if d == 0 {
+                    break;
+                }
+            }
+            // return type + where clause: up to `{` (body) or `;` (decl)
+            let ret_start = j;
+            while j < n && b[j] != '{' && b[j] != ';' {
+                j += 1;
+            }
+            let ret: String = b[ret_start..j.min(n)].iter().collect();
+            if j >= n || b[j] == ';' {
+                i = j;
+                continue;
+            }
+            // body: match braces
+            let body_start = j;
+            let mut d = 0i64;
+            while j < n {
+                match b[j] {
+                    '{' => d += 1,
+                    '}' => d -= 1,
+                    _ => {}
+                }
+                j += 1;
+                if d == 0 {
+                    break;
+                }
+            }
+            out.push(FnSpan { name, ret: ret.trim().to_string(), body: body_start..j });
+            // continue scanning *inside* the body for nested fns
+            i = body_start + 1;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+// -------------------------------------------------------------- passes
+
+fn in_serve_scope(rel: &str) -> bool {
+    rel.contains("engine/serve/")
+        || rel.contains("serve_http/")
+        || rel.ends_with("engine/decode.rs")
+        || rel.ends_with("runtime/fault.rs")
+}
+
+fn in_determinism_scope(rel: &str) -> bool {
+    rel.contains("engine/serve/") || rel.ends_with("eval/generate.rs")
+}
+
+/// Positions of `needle` in `hay` at identifier boundaries on both
+/// sides (so `Instant` does not match `Instantiate`).
+fn word_positions(hay: &str, needle: &str) -> Vec<usize> {
+    let hb: Vec<char> = hay.chars().collect();
+    let mut out = Vec::new();
+    let mut start = 0;
+    while let Some(pos) = hay[start..].find(needle) {
+        let at = start + pos;
+        let before_ok = at == 0 || {
+            let c = hb[hay[..at].chars().count() - 1];
+            !is_ident(c)
+        };
+        let after = at + needle.len();
+        let after_ok = after >= hay.len() || {
+            let c = hay[after..].chars().next().unwrap();
+            !is_ident(c)
+        };
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        start = at + needle.len();
+    }
+    out
+}
+
+/// Pass 1 — panic-freedom on the serving path (DESIGN.md §13): no
+/// `unwrap()`/`expect()`/panic-family macros/indexing-of-temporaries in
+/// non-test code under `engine/serve/`, `serve_http/`,
+/// `engine/decode.rs`, `runtime/fault.rs`. `assert!` is allowed: an
+/// invariant check with a message is a contract, a stray unwrap is not.
+fn pass_serve_panic(a: &Analysis, out: &mut Vec<Diagnostic>) {
+    if !in_serve_scope(&a.rel) {
+        return;
+    }
+    const CALLS: &[(&str, &str)] = &[
+        (".unwrap()", "`.unwrap()` can kill the model thread"),
+        (".expect(", "`.expect()` can kill the model thread"),
+        (".get_unchecked(", "unchecked indexing on the serving path"),
+        (".get_unchecked_mut(", "unchecked indexing on the serving path"),
+        (")[", "indexing a temporary cannot be bounds-checked first"),
+    ];
+    const MACROS: &[&str] = &["panic!", "todo!", "unimplemented!", "unreachable!"];
+    for (ln, line) in a.code_lines.iter().enumerate() {
+        if a.is_test_line(ln) {
+            continue;
+        }
+        for (pat, why) in CALLS {
+            if line.contains(pat) {
+                out.push(Diagnostic {
+                    pass: "serve_panic",
+                    file: a.rel.clone(),
+                    line: ln + 1,
+                    msg: format!(
+                        "{why}; return a typed error through the FailClass ladder \
+                         (DESIGN.md §13) instead"
+                    ),
+                });
+            }
+        }
+        for mac in MACROS {
+            for at in word_positions(line, &mac[..mac.len() - 1]) {
+                if line[at..].starts_with(mac) {
+                    out.push(Diagnostic {
+                        pass: "serve_panic",
+                        file: a.rel.clone(),
+                        line: ln + 1,
+                        msg: format!(
+                            "`{mac}` aborts the model thread; drain the row with \
+                             StopReason::Error instead (DESIGN.md §13)"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// The only places allowed to construct `Operand::F32` / `Operand::Buf`
+/// (the device/host decision funnel, DESIGN.md §8).
+const OPERAND_FUNNEL_FILE: &str = "engine/trainer.rs";
+const OPERAND_FUNNEL_FNS: &[&str] =
+    &["operand", "embed_ops", "block_ops", "head_ops", "adapter_ops"];
+
+/// Pass 2 — operand-builder discipline: `Operand::Buf(..)` /
+/// `Operand::F32(..)` may be *constructed* only inside the Engine
+/// operand-builder funnel in `engine/trainer.rs`. Match patterns
+/// (`Operand::F32(t) => ...`, `| Operand::Buf(b)`) consume, not
+/// construct, and are exempt.
+fn pass_operand_builder(a: &Analysis, out: &mut Vec<Diagnostic>) {
+    for variant in ["Operand::F32(", "Operand::Buf("] {
+        let mut start = 0;
+        while let Some(pos) = a.code[start..].find(variant) {
+            let at = start + pos;
+            start = at + variant.len();
+            // identifier boundary on the left (reject e.g. `MyOperand::F32`)
+            if a.code[..at].chars().next_back().map(is_ident).unwrap_or(false) {
+                continue;
+            }
+            let ln = a.line_of(at);
+            if a.is_test_line(ln) {
+                continue;
+            }
+            // preceded by `|` → or-pattern
+            let before = a.code[..at].trim_end();
+            if before.ends_with('|') {
+                continue;
+            }
+            // followed (after the matching paren) by `=>`, `|`, or `if`
+            // → match pattern
+            let open = at + variant.len() - 1;
+            let mut d = 0i64;
+            let mut close = None;
+            for (off, ch) in a.code[open..].char_indices() {
+                match ch {
+                    '(' => d += 1,
+                    ')' => {
+                        d -= 1;
+                        if d == 0 {
+                            close = Some(open + off);
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            if let Some(close) = close {
+                let after = a.code[close + 1..].trim_start();
+                if after.starts_with("=>") || after.starts_with('|') || after.starts_with("if ") {
+                    continue;
+                }
+            }
+            // construction: allowed only in the funnel
+            let blessed = a.rel.ends_with(OPERAND_FUNNEL_FILE)
+                && a
+                    .enclosing_fn(at)
+                    .map(|f| OPERAND_FUNNEL_FNS.contains(&f.name.as_str()))
+                    .unwrap_or(false);
+            if !blessed {
+                out.push(Diagnostic {
+                    pass: "operand_builder",
+                    file: a.rel.clone(),
+                    line: ln + 1,
+                    msg: format!(
+                        "`{}..)` constructed outside the Engine operand-builder funnel \
+                         ({OPERAND_FUNNEL_FILE}: {}); route device/host operand \
+                         decisions through it (DESIGN.md §8)",
+                        variant,
+                        OPERAND_FUNNEL_FNS.join("/")
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Pass 3 — `Touched` contract heuristic: in `strategy/`, an assignment
+/// whose left-hand side writes through `params.` / `lora.` must sit in
+/// a function whose signature returns `Touched` (the invalidation
+/// contract, DESIGN.md §8). Catches direct-field-write escapes that
+/// would let the device cache serve stale bytes.
+fn pass_touched_contract(a: &Analysis, out: &mut Vec<Diagnostic>) {
+    if !a.rel.contains("strategy/") {
+        return;
+    }
+    for (ln, line) in a.code_lines.iter().enumerate() {
+        if a.is_test_line(ln) {
+            continue;
+        }
+        let chars: Vec<char> = line.chars().collect();
+        for (i, &c) in chars.iter().enumerate() {
+            if c != '=' {
+                continue;
+            }
+            let next = chars.get(i + 1).copied().unwrap_or('\0');
+            let prev = if i > 0 { chars[i - 1] } else { '\0' };
+            if next == '=' || next == '>' || matches!(prev, '=' | '!' | '<' | '>') {
+                continue; // ==, =>, !=, <=, >=
+            }
+            // LHS: this statement's text before the operator
+            let lhs_full: String = chars[..i].iter().collect();
+            let lhs = lhs_full.rsplit(';').next().unwrap_or("");
+            let writes_params = word_positions(lhs, "params")
+                .into_iter()
+                .any(|p| lhs[p..].starts_with("params."))
+                || word_positions(lhs, "lora")
+                    .into_iter()
+                    .any(|p| lhs[p..].starts_with("lora."));
+            if !writes_params {
+                continue;
+            }
+            let off = a.line_starts[ln] + i;
+            let ret = a.enclosing_fn(off).map(|f| f.ret.clone()).unwrap_or_default();
+            if !ret.contains("Touched") {
+                out.push(Diagnostic {
+                    pass: "touched_contract",
+                    file: a.rel.clone(),
+                    line: ln + 1,
+                    msg: "direct write to model/LoRA parameters in a function that does \
+                          not return `Touched`; the device cache will serve stale bytes \
+                          unless the write is reported (DESIGN.md §8)"
+                        .to_string(),
+                });
+                break; // one diagnostic per line is enough
+            }
+        }
+    }
+}
+
+/// Pass 4 — blocking-send discipline: code reachable from the model
+/// thread (`engine/serve/`, `serve_http/`, `engine/decode.rs`) must
+/// never call a blocking `.send(..)`; bounded channels are
+/// try_send-or-shed (DESIGN.md §11/§13).
+fn pass_blocking_send(a: &Analysis, out: &mut Vec<Diagnostic>) {
+    if !(a.rel.contains("engine/serve/")
+        || a.rel.contains("serve_http/")
+        || a.rel.ends_with("engine/decode.rs"))
+    {
+        return;
+    }
+    for (ln, line) in a.code_lines.iter().enumerate() {
+        if a.is_test_line(ln) {
+            continue;
+        }
+        if line.contains(".send(") {
+            out.push(Diagnostic {
+                pass: "blocking_send",
+                file: a.rel.clone(),
+                line: ln + 1,
+                msg: "blocking `.send()` on the model-thread path; a stalled consumer \
+                      would wedge the serve loop — use `try_send` and shed \
+                      (DESIGN.md §11)"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Pass 5 — SAFETY-comment coverage: every `unsafe` keyword (blocks,
+/// `unsafe impl`, `unsafe fn`) must have a `// SAFETY:` justification
+/// on the same line or in the comment block directly above. Applies to
+/// test code too — unsafety does not care where it runs.
+fn pass_safety_comment(a: &Analysis, out: &mut Vec<Diagnostic>) {
+    for (ln, line) in a.code_lines.iter().enumerate() {
+        if word_positions(line, "unsafe").is_empty() {
+            continue;
+        }
+        let mut justified = a.comment_lines[ln].contains("SAFETY:");
+        // scan upward through comment-only / attribute-only / blank lines
+        let mut k = ln;
+        while !justified && k > 0 {
+            k -= 1;
+            if a.comment_lines[k].contains("SAFETY:") {
+                justified = true;
+                break;
+            }
+            let code = a.code_lines[k].trim();
+            let pure_comment_or_attr =
+                code.is_empty() || (code.starts_with("#[") && code.ends_with(']'));
+            if !pure_comment_or_attr {
+                break;
+            }
+        }
+        if !justified {
+            out.push(Diagnostic {
+                pass: "safety_comment",
+                file: a.rel.clone(),
+                line: ln + 1,
+                msg: "`unsafe` without a `// SAFETY:` justification on the same line \
+                      or directly above"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Pass 6 — determinism discipline: nothing in `engine/serve/` or
+/// `eval/generate.rs` may derive values from wall/monotonic clocks or
+/// unordered-map iteration — completions must stay a function of
+/// `(prompt, spec, seed)` (DESIGN.md §10). Use `BTreeMap` and counters
+/// instead.
+fn pass_determinism(a: &Analysis, out: &mut Vec<Diagnostic>) {
+    if !in_determinism_scope(&a.rel) {
+        return;
+    }
+    const BANNED: &[(&str, &str)] = &[
+        ("SystemTime", "wall-clock time feeding serve-path state"),
+        ("Instant", "monotonic-clock time feeding serve-path state"),
+        ("HashMap", "iteration order is seeded per process"),
+        ("HashSet", "iteration order is seeded per process"),
+        ("thread_rng", "unseeded randomness"),
+    ];
+    for (ln, line) in a.code_lines.iter().enumerate() {
+        if a.is_test_line(ln) {
+            continue;
+        }
+        for (word, why) in BANNED {
+            if !word_positions(line, word).is_empty() {
+                out.push(Diagnostic {
+                    pass: "determinism",
+                    file: a.rel.clone(),
+                    line: ln + 1,
+                    msg: format!(
+                        "`{word}` on a determinism-scoped path ({why}); completions \
+                         must be a function of (prompt, spec, seed) alone \
+                         (DESIGN.md §10)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------- allow + driving
+
+/// Parsed `// lisa-lint: allow(<pass>): <reason>` comment.
+struct Allow {
+    pass: String,
+    has_reason: bool,
+}
+
+fn allows_on_line(comment: &str) -> Vec<Allow> {
+    const NEEDLE: &str = "lisa-lint: allow(";
+    let mut out = Vec::new();
+    let mut start = 0;
+    while let Some(pos) = comment[start..].find(NEEDLE) {
+        let at = start + pos + NEEDLE.len();
+        let rest = &comment[at..];
+        let Some(close) = rest.find(')') else {
+            break;
+        };
+        let pass = rest[..close].trim().to_string();
+        let after = &rest[close + 1..];
+        let has_reason = after
+            .strip_prefix(':')
+            .map(|r| {
+                let r = r.trim();
+                !r.is_empty() && r.chars().any(|c| c.is_alphanumeric())
+            })
+            .unwrap_or(false);
+        out.push(Allow { pass, has_reason });
+        start = at + close;
+    }
+    out
+}
+
+/// Run `passes` over one file and apply the allow-comment rules.
+pub fn lint_file(rel: &str, src: &str, passes: &[&str]) -> Vec<Diagnostic> {
+    let a = Analysis::new(rel, src);
+    let mut raw = Vec::new();
+    if passes.contains(&"serve_panic") {
+        pass_serve_panic(&a, &mut raw);
+    }
+    if passes.contains(&"operand_builder") {
+        pass_operand_builder(&a, &mut raw);
+    }
+    if passes.contains(&"touched_contract") {
+        pass_touched_contract(&a, &mut raw);
+    }
+    if passes.contains(&"blocking_send") {
+        pass_blocking_send(&a, &mut raw);
+    }
+    if passes.contains(&"safety_comment") {
+        pass_safety_comment(&a, &mut raw);
+    }
+    if passes.contains(&"determinism") {
+        pass_determinism(&a, &mut raw);
+    }
+
+    // collect allows: line → (pass, ok)
+    let mut out = Vec::new();
+    for d in raw {
+        // an allow on the diagnostic's line or the line above suppresses it
+        let lines = [d.line.checked_sub(1), d.line.checked_sub(2)];
+        let mut suppressed = false;
+        for l in lines.into_iter().flatten() {
+            for al in allows_on_line(a.comment_lines.get(l).map(String::as_str).unwrap_or("")) {
+                if al.pass == d.pass && al.has_reason {
+                    suppressed = true;
+                }
+            }
+        }
+        if !suppressed {
+            out.push(d);
+        }
+    }
+    // malformed allow comments are violations themselves: a reason is
+    // the audit trail that makes the escape hatch reviewable
+    for (ln, comment) in a.comment_lines.iter().enumerate() {
+        for al in allows_on_line(comment) {
+            let known = PASSES.contains(&al.pass.as_str());
+            if !known {
+                out.push(Diagnostic {
+                    pass: "serve_panic", // unknown pass: attribute to pass 1 arbitrarily
+                    file: a.rel.clone(),
+                    line: ln + 1,
+                    msg: format!(
+                        "allow comment names unknown pass `{}` (known: {})",
+                        al.pass,
+                        PASSES.join(", ")
+                    ),
+                });
+            } else if !al.has_reason && passes.contains(&al.pass.as_str()) {
+                out.push(Diagnostic {
+                    pass: PASSES[PASSES.iter().position(|p| *p == al.pass).unwrap()],
+                    file: a.rel.clone(),
+                    line: ln + 1,
+                    msg: format!(
+                        "`lisa-lint: allow({})` requires a reason: \
+                         `// lisa-lint: allow({}): <why this is sound>`",
+                        al.pass, al.pass
+                    ),
+                });
+            }
+        }
+    }
+    out.sort_by(|x, y| (x.line, x.pass).cmp(&(y.line, y.pass)));
+    out
+}
+
+/// Recursively lint every `.rs` file under `root` (or `root` itself if
+/// it is a file). Paths in diagnostics are relative to `root`.
+pub fn lint_tree(root: &Path, passes: &[&str]) -> std::io::Result<Vec<Diagnostic>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for f in files {
+        let rel = f
+            .strip_prefix(root)
+            .map(|p| p.to_string_lossy().replace('\\', "/"))
+            .unwrap_or_else(|_| f.to_string_lossy().replace('\\', "/"));
+        let src = std::fs::read_to_string(&f)?;
+        out.extend(lint_file(&rel, &src, passes));
+    }
+    Ok(out)
+}
+
+fn collect_rs(path: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    if path.is_file() {
+        if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    let mut entries: Vec<_> =
+        std::fs::read_dir(path)?.collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            // never descend into build output
+            if p.file_name().map(|n| n == "target").unwrap_or(false) {
+                continue;
+            }
+            collect_rs(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrub_blanks_comments_and_strings_but_keeps_structure() {
+        let src = r##"let x = "a { b"; // unwrap() in comment
+let r = r#"raw " str"#; /* block
+   .expect( */ let c = 'x'; let lt: &'static str = "s";"##;
+        let s = scrub(src);
+        assert!(!s.code.contains("unwrap"));
+        assert!(!s.code.contains("a { b"));
+        assert!(!s.code.contains("raw"));
+        assert!(!s.code.contains(".expect("));
+        assert!(s.code.contains("let c ="));
+        assert!(s.code.contains("'static"));
+        assert!(s.comments.contains("unwrap() in comment"));
+        assert_eq!(s.code.lines().count(), src.lines().count());
+    }
+
+    #[test]
+    fn test_regions_cover_cfg_test_modules_not_cfg_test_uses() {
+        let src = "fn live() {}\n#[cfg(test)]\nuse foo::bar;\nfn live2() {}\n\
+                   #[cfg(test)]\nmod tests {\n    fn inner() {}\n}\nfn live3() {}\n";
+        let a = Analysis::new("x.rs", src);
+        assert!(!a.in_test[0] && !a.in_test[2] && !a.in_test[3]);
+        assert!(a.in_test[5] && a.in_test[6] && a.in_test[7]);
+        assert!(!a.in_test[8]);
+    }
+
+    #[test]
+    fn fn_spans_capture_name_and_return_type() {
+        let src = "impl X {\n    fn apply(&mut self) -> Result<Touched> {\n        body();\n    }\n}\nfn plain() {}\n";
+        let a = Analysis::new("x.rs", src);
+        let names: Vec<&str> = a.fns.iter().map(|f| f.name.as_str()).collect();
+        assert!(names.contains(&"apply") && names.contains(&"plain"));
+        let apply = a.fns.iter().find(|f| f.name == "apply").unwrap();
+        assert!(apply.ret.contains("Touched"));
+        let off = a.code.find("body").unwrap();
+        assert_eq!(a.enclosing_fn(off).unwrap().name, "apply");
+    }
+
+    #[test]
+    fn serve_panic_flags_unwrap_only_outside_tests_and_scope() {
+        let src = "fn f() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn g() { y.unwrap(); }\n}\n";
+        let d = lint_file("engine/serve/session.rs", src, PASSES);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].line, 1);
+        assert!(lint_file("lisa/mod.rs", src, PASSES).is_empty());
+    }
+
+    #[test]
+    fn operand_patterns_are_not_construction() {
+        let src = "fn f(op: &Operand) -> u32 {\n    match op {\n        Operand::F32(t) => 1,\n        Operand::Buf(b) if b.big() => 2,\n        Operand::F32(_) | Operand::Buf(_) => 3,\n    }\n}\n";
+        assert!(lint_file("runtime/client.rs", src, PASSES).is_empty());
+        let bad = "fn f() { run(&[Operand::F32(&t)]); }\n";
+        let d = lint_file("engine/memory.rs", bad, PASSES);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].pass, "operand_builder");
+    }
+
+    #[test]
+    fn operand_construction_allowed_in_the_funnel() {
+        let src = "impl Act {\n    fn operand(&self) -> Operand<'_> {\n        Operand::F32(&self.t)\n    }\n}\n";
+        assert!(lint_file("engine/trainer.rs", src, PASSES).is_empty());
+        // same code outside the funnel file is a violation
+        assert_eq!(lint_file("engine/serve/mod.rs", src, PASSES).len(), 1);
+    }
+
+    #[test]
+    fn touched_contract_requires_touched_return() {
+        let bad = "fn apply(params: &mut P) {\n    params.blocks[0].w = 1.0;\n}\n";
+        let d = lint_file("strategy/lomo.rs", bad, PASSES);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].pass, "touched_contract");
+        let ok = "fn apply(params: &mut P) -> Touched {\n    params.blocks[0].w = 1.0;\n    Touched::All\n}\n";
+        assert!(lint_file("strategy/lomo.rs", ok, PASSES).is_empty());
+        // comparisons are not writes
+        let cmp = "fn check(params: &P) -> bool {\n    params.lr == 0.1\n}\n";
+        assert!(lint_file("strategy/lomo.rs", cmp, PASSES).is_empty());
+    }
+
+    #[test]
+    fn allow_comment_with_reason_suppresses_without_reason_errors() {
+        let src = "fn f() {\n    // lisa-lint: allow(serve_panic): constructor asserts non-empty\n    x.unwrap();\n}\n";
+        assert!(lint_file("engine/serve/session.rs", src, PASSES).is_empty());
+        let bare = "fn f() {\n    // lisa-lint: allow(serve_panic)\n    x.unwrap();\n}\n";
+        let d = lint_file("engine/serve/session.rs", bare, PASSES);
+        assert_eq!(d.len(), 2, "{d:?}"); // the unwrap AND the reasonless allow
+    }
+
+    #[test]
+    fn safety_comments_are_required_adjacent() {
+        let ok = "// SAFETY: the slice outlives the call\nlet b = unsafe { cast(x) };\n";
+        assert!(lint_file("model/checkpoint.rs", ok, PASSES).is_empty());
+        let far = "// SAFETY: stale\nfn g() {}\nlet b = unsafe { cast(x) };\n";
+        assert_eq!(lint_file("model/checkpoint.rs", far, PASSES).len(), 1);
+    }
+
+    #[test]
+    fn determinism_scope_bans_clocks_and_hash_iteration() {
+        let bad = "fn pick() { let t = Instant::now(); let m = HashMap::new(); }\n";
+        let d = lint_file("engine/serve/sampler.rs", bad, PASSES);
+        assert_eq!(d.len(), 2, "{d:?}");
+        // Instant is fine outside the determinism scope (metrics want it)
+        assert!(lint_file("serve_http/metrics.rs", bad, PASSES)
+            .iter()
+            .all(|d| d.pass != "determinism"));
+        // the word inside an identifier does not match
+        let ok = "/// Instantiate the sampler.\nfn build() {}\n";
+        assert!(lint_file("engine/serve/sampler.rs", ok, PASSES).is_empty());
+    }
+
+    #[test]
+    fn blocking_send_flags_send_not_try_send() {
+        let bad = "fn f(tx: &SyncSender<u8>) { tx.send(1).ok(); }\n";
+        let d = lint_file("serve_http/server.rs", bad, PASSES);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].pass, "blocking_send");
+        let ok = "fn f(tx: &SyncSender<u8>) { tx.try_send(1).ok(); }\n";
+        assert!(lint_file("serve_http/server.rs", ok, PASSES).is_empty());
+    }
+}

@@ -1,0 +1,107 @@
+//! CLI for `lisa-lint` (DESIGN.md §14).
+//!
+//! ```text
+//! lisa-lint [--pass <name>]... [--list-passes] [paths...]
+//! ```
+//!
+//! Default path is `rust/src` (run from the repo root; CI does).
+//! Exit codes: 0 clean, 1 violations found, 2 usage / I/O error.
+//! Diagnostics go to stdout as `file:line: [pass] message`; the summary
+//! goes to stderr so tooling can consume stdout alone.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut passes: Vec<&'static str> = Vec::new();
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--pass" => {
+                let Some(name) = args.next() else {
+                    eprintln!("lisa-lint: --pass requires a pass name");
+                    return ExitCode::from(2);
+                };
+                match lisa_lint::PASSES.iter().find(|p| **p == name) {
+                    Some(p) => passes.push(p),
+                    None => {
+                        eprintln!(
+                            "lisa-lint: unknown pass `{name}` (known: {})",
+                            lisa_lint::PASSES.join(", ")
+                        );
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+            "--list-passes" => {
+                for p in lisa_lint::PASSES {
+                    println!("{p}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--help" | "-h" => {
+                eprintln!(
+                    "usage: lisa-lint [--pass <name>]... [--list-passes] [paths...]\n\
+                     default path: rust/src    passes: {}",
+                    lisa_lint::PASSES.join(", ")
+                );
+                return ExitCode::SUCCESS;
+            }
+            flag if flag.starts_with("--") => {
+                eprintln!("lisa-lint: unknown flag `{flag}` (try --help)");
+                return ExitCode::from(2);
+            }
+            path => paths.push(PathBuf::from(path)),
+        }
+    }
+    if passes.is_empty() {
+        passes = lisa_lint::PASSES.to_vec();
+    }
+    if paths.is_empty() {
+        paths.push(PathBuf::from("rust/src"));
+    }
+
+    let mut diags = Vec::new();
+    let mut files_seen = false;
+    for root in &paths {
+        if !root.exists() {
+            eprintln!("lisa-lint: no such path: {}", root.display());
+            return ExitCode::from(2);
+        }
+        files_seen = true;
+        match lisa_lint::lint_tree(root, &passes) {
+            Ok(mut d) => {
+                // prefix diagnostics with the root so multi-root runs
+                // stay unambiguous (single-root runs keep bare rels)
+                if paths.len() > 1 {
+                    let tag = root.display().to_string();
+                    for diag in &mut d {
+                        diag.file = format!("{tag}/{}", diag.file);
+                    }
+                }
+                diags.extend(d);
+            }
+            Err(e) => {
+                eprintln!("lisa-lint: error reading {}: {e}", root.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let _ = files_seen;
+
+    for d in &diags {
+        println!("{d}");
+    }
+    if diags.is_empty() {
+        eprintln!("lisa-lint: clean ({} passes)", passes.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "lisa-lint: {} violation(s) across {} pass(es)",
+            diags.len(),
+            passes.len()
+        );
+        ExitCode::from(1)
+    }
+}

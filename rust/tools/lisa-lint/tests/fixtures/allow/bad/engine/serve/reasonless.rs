@@ -1,0 +1,7 @@
+//! Allow-comment fixture: a reasonless allow is itself a violation and
+//! suppresses nothing.
+
+fn first(xs: &[i32]) -> i32 {
+    // lisa-lint: allow(serve_panic)
+    *xs.first().expect("non-empty")
+}

@@ -1,0 +1,10 @@
+//! Allow-comment fixture: a justified suppression silences the pass.
+
+fn first(xs: &[i32]) -> i32 {
+    // lisa-lint: allow(serve_panic): the caller asserts non-empty at admission
+    *xs.first().expect("non-empty")
+}
+
+fn same_line(xs: &[i32]) -> i32 {
+    xs.iter().copied().next().unwrap() // lisa-lint: allow(serve_panic): iterator is never empty here
+}

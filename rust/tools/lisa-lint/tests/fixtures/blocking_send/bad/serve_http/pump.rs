@@ -1,0 +1,5 @@
+//! Negative fixture: blocking send on a model-thread-reachable path.
+
+fn forward(tx: &std::sync::mpsc::SyncSender<i32>, tok: i32) {
+    tx.send(tok).ok();
+}

@@ -1,0 +1,15 @@
+//! Positive fixture: try_send-or-shed, never a blocking send.
+
+fn forward(tx: &std::sync::mpsc::SyncSender<i32>, tok: i32) -> bool {
+    tx.try_send(tok).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_block() {
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        tx.send(7).unwrap();
+        assert_eq!(rx.recv().unwrap(), 7);
+    }
+}

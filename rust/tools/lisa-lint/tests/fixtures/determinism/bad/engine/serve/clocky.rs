@@ -1,0 +1,15 @@
+//! Negative fixture: clocks and unordered maps feeding token selection.
+
+use std::collections::HashMap;
+use std::time::{Instant, SystemTime};
+
+fn pick(logits: &[f32]) -> usize {
+    let t = Instant::now().elapsed().subsec_nanos() as usize;
+    let s = SystemTime::now();
+    let mut seen: HashMap<usize, f32> = HashMap::new();
+    for (i, &l) in logits.iter().enumerate() {
+        seen.insert(i, l);
+    }
+    let _ = s;
+    seen.keys().next().copied().unwrap_or(t % logits.len())
+}

@@ -1,0 +1,28 @@
+//! Positive fixture: deterministic selection — seeded streams, ordered
+//! maps, counters instead of clocks.
+//!
+//! Doc text may Instantiate words that embed banned stems; the scrubber
+//! must not flag them.
+
+use std::collections::BTreeMap;
+
+fn pick(logits: &[f32], seed: u64) -> usize {
+    let mut ranked: BTreeMap<usize, u32> = BTreeMap::new();
+    for (i, &l) in logits.iter().enumerate() {
+        ranked.insert(i, l.to_bits());
+    }
+    let step = (seed as usize).wrapping_mul(31);
+    ranked.keys().next().copied().unwrap_or(step % logits.len().max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Instant;
+
+    #[test]
+    fn tests_may_time_things() {
+        let t0 = Instant::now();
+        assert!(super::pick(&[0.5, 0.25], 7) < 2);
+        assert!(t0.elapsed().as_secs() < 60);
+    }
+}

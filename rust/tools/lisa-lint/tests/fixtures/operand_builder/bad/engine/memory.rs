@@ -1,0 +1,8 @@
+//! Negative fixture: Operand constructed outside the blessed funnel.
+
+fn run_direct(t: &HostTensor, b: &DeviceTensor) {
+    let ops = [Operand::F32(t), Operand::Buf(b)];
+    execute(&ops);
+}
+
+fn execute(_ops: &[Operand]) {}

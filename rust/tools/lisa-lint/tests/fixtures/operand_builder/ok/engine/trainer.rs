@@ -1,0 +1,19 @@
+//! Positive fixture: construction inside the funnel, matches elsewhere.
+
+impl Act {
+    fn operand(&self) -> Operand<'_> {
+        match self {
+            Act::Host(t) => Operand::F32(t),
+            Act::Dev(b) => Operand::Buf(b),
+        }
+    }
+}
+
+fn classify(op: &Operand) -> &'static str {
+    // consuming a variant in a match pattern is not construction
+    match op {
+        Operand::F32(_) | Operand::Buf(_) => "tensor",
+        Operand::Buf(b) if b.big() => "big",
+        _ => "other",
+    }
+}

@@ -1,0 +1,8 @@
+//! Negative fixture: unsafe without an adjacent SAFETY justification.
+
+fn as_bytes(data: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+struct Ptr(*mut u8);
+unsafe impl Send for Ptr {}

@@ -1,0 +1,17 @@
+//! Positive fixture: every unsafe carries a SAFETY justification.
+
+fn as_bytes(data: &[f32]) -> &[u8] {
+    // SAFETY: an f32 slice viewed as its own bytes — same allocation,
+    // same length, stricter source alignment.
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+struct Ptr(*mut u8);
+// SAFETY: the pointer is only dereferenced by the one thread that owns
+// the slot it points to.
+#[allow(dead_code)]
+unsafe impl Send for Ptr {}
+
+fn same_line(x: &[u8]) -> u8 {
+    unsafe { *x.as_ptr() } // SAFETY: caller guarantees non-empty
+}

@@ -1,0 +1,27 @@
+//! Negative fixture: every serve_panic trigger in non-test code.
+
+fn drive(xs: &[i32], opt: Option<i32>) -> i32 {
+    let a = opt.unwrap();
+    let b = opt.expect("present");
+    let c = xs.first().copied().unwrap_or(0); // fine: unwrap_or is total
+    if xs.is_empty() {
+        panic!("empty batch");
+    }
+    match a {
+        0 => todo!(),
+        1 => unimplemented!(),
+        2 => unreachable!("impossible"),
+        _ => {}
+    }
+    let d = head(xs)[0];
+    a + b + c + d
+}
+
+fn head(xs: &[i32]) -> &[i32] {
+    xs
+}
+
+unsafe fn raw(xs: &[i32]) -> i32 {
+    // SAFETY: fixture only; index checked by the caller.
+    *xs.get_unchecked(0)
+}

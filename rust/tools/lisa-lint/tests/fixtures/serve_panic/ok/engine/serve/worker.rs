@@ -1,0 +1,20 @@
+//! Positive fixture: the same logic written panic-free, plus test code
+//! where panics are allowed.
+
+fn drive(xs: &[i32], opt: Option<i32>) -> Result<i32, String> {
+    let a = opt.ok_or_else(|| "missing operand".to_string())?;
+    let c = xs.first().copied().unwrap_or(0);
+    assert!(a >= 0, "invariant checks are contracts, not strays");
+    let d = xs.get(0).copied().unwrap_or_default();
+    Ok(a + c + d)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_panic() {
+        let v: Option<i32> = Some(3);
+        assert_eq!(v.unwrap(), 3);
+        v.expect("tests panic by design");
+    }
+}

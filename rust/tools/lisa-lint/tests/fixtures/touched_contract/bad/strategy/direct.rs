@@ -1,0 +1,7 @@
+//! Negative fixture: parameter writes in a function not returning
+//! `Touched`.
+
+fn clobber(params: &mut ModelParams, lora: &mut LoraState) {
+    params.blocks[0].data[0] = 1.0;
+    lora.a.data[3] += 0.5;
+}

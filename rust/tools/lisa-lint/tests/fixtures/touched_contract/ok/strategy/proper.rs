@@ -1,0 +1,13 @@
+//! Positive fixture: writes report `Touched`; reads and comparisons are
+//! free.
+
+fn apply(params: &mut ModelParams, lora: &mut LoraState) -> Touched {
+    params.blocks[0].data[0] = 1.0;
+    lora.a.data[3] += 0.5;
+    Touched::Blocks(vec![0])
+}
+
+fn inspect(params: &ModelParams) -> bool {
+    let lr = params.lr;
+    params.step == 0 && lr >= 0.0
+}

@@ -1,0 +1,158 @@
+//! Self-test: run the built `lisa-lint` binary over each pass's fixture
+//! pair. Every pass must flag its `bad/` tree (exit 1, diagnostics on
+//! stdout) and pass its `ok/` tree (exit 0) under a `--pass` filter, so
+//! a regression in any one pass fails exactly its own case.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn fixture(pass: &str, kind: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(pass)
+        .join(kind)
+}
+
+fn run_lint(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_lisa-lint"))
+        .args(args)
+        .output()
+        .expect("spawn lisa-lint")
+}
+
+fn run_pass(pass: &str, kind: &str) -> Output {
+    let root = fixture(pass, kind);
+    assert!(root.is_dir(), "missing fixture tree {}", root.display());
+    run_lint(&["--pass", pass, root.to_str().expect("utf-8 path")])
+}
+
+fn check_pair(pass: &str, expect_bad: usize) {
+    let bad = run_pass(pass, "bad");
+    let stdout = String::from_utf8_lossy(&bad.stdout);
+    assert_eq!(
+        bad.status.code(),
+        Some(1),
+        "[{pass}] bad fixture must exit 1; stdout:\n{stdout}"
+    );
+    let flagged = stdout.lines().filter(|l| l.contains(&format!("[{pass}]"))).count();
+    assert_eq!(
+        flagged, expect_bad,
+        "[{pass}] bad fixture diagnostic count; stdout:\n{stdout}"
+    );
+    // diagnostics carry file:line anchors relative to the lint root
+    assert!(
+        stdout.lines().all(|l| l.is_empty() || l.contains(".rs:")),
+        "[{pass}] diagnostics must be file:line addressed; stdout:\n{stdout}"
+    );
+
+    let ok = run_pass(pass, "ok");
+    assert_eq!(
+        ok.status.code(),
+        Some(0),
+        "[{pass}] ok fixture must exit 0; stdout:\n{}",
+        String::from_utf8_lossy(&ok.stdout)
+    );
+}
+
+#[test]
+fn serve_panic_fixtures() {
+    check_pair("serve_panic", 8);
+}
+
+#[test]
+fn operand_builder_fixtures() {
+    check_pair("operand_builder", 2);
+}
+
+#[test]
+fn touched_contract_fixtures() {
+    check_pair("touched_contract", 2);
+}
+
+#[test]
+fn blocking_send_fixtures() {
+    check_pair("blocking_send", 1);
+}
+
+#[test]
+fn safety_comment_fixtures() {
+    check_pair("safety_comment", 2);
+}
+
+#[test]
+fn determinism_fixtures() {
+    check_pair("determinism", 6);
+}
+
+#[test]
+fn allow_comment_with_reason_suppresses() {
+    let out = run_pass("serve_panic", "../allow/ok");
+    assert_eq!(
+        out.status.code(),
+        Some(0),
+        "justified allows must suppress; stdout:\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+}
+
+#[test]
+fn allow_comment_without_reason_is_a_violation() {
+    let out = run_pass("serve_panic", "../allow/bad");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(1), "stdout:\n{stdout}");
+    assert!(
+        stdout.contains("requires a reason"),
+        "the reasonless allow itself must be flagged; stdout:\n{stdout}"
+    );
+    // and it suppresses nothing: the underlying violation still fires
+    assert!(
+        stdout.lines().filter(|l| l.contains("[serve_panic]")).count() >= 2,
+        "stdout:\n{stdout}"
+    );
+}
+
+#[test]
+fn unknown_pass_name_is_a_usage_error() {
+    let out = run_lint(&["--pass", "no_such_pass", "."]);
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn list_passes_names_all_six() {
+    let out = run_lint(&["--list-passes"]);
+    assert_eq!(out.status.code(), Some(0));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for p in [
+        "serve_panic",
+        "operand_builder",
+        "touched_contract",
+        "blocking_send",
+        "safety_comment",
+        "determinism",
+    ] {
+        assert!(stdout.contains(p), "missing pass {p} in --list-passes");
+    }
+}
+
+/// The whole suite at once over every `bad/` tree: all passes fire
+/// together and the summary goes to stderr, diagnostics to stdout.
+#[test]
+fn full_run_over_all_bad_fixtures_reports_everything() {
+    let base = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+    let mut args: Vec<String> = Vec::new();
+    for p in [
+        "serve_panic",
+        "operand_builder",
+        "touched_contract",
+        "blocking_send",
+        "safety_comment",
+        "determinism",
+    ] {
+        args.push(base.join(p).join("bad").to_string_lossy().into_owned());
+    }
+    let arg_refs: Vec<&str> = args.iter().map(String::as_str).collect();
+    let out = run_lint(&arg_refs);
+    assert_eq!(out.status.code(), Some(1));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("violation"), "summary on stderr: {stderr}");
+}

@@ -1,0 +1,320 @@
+//! Vendored offline shim of `anyhow` (rust/vendor/README.md).
+//!
+//! The workspace depends on a specific subset of anyhow's semantics,
+//! all kept here:
+//!
+//! * [`Error`] wraps a typed root error (`dyn std::error::Error`) under
+//!   a stack of string context frames;
+//! * [`Error::downcast_ref`] reaches the root **through** any number of
+//!   `.context(...)` frames — the serve loop classifies
+//!   `FaultError` this way (DESIGN.md §13);
+//! * `Display` shows the outermost message, `{:#}` the whole chain
+//!   (`outer: inner: root`), matching what the error-path tests assert;
+//! * [`Context`] is implemented for `Result` (any std error *or*
+//!   already-`anyhow` error) and `Option`;
+//! * `anyhow!` / `bail!` / `ensure!` with format args, plus the
+//!   autoref-specialized single-expression `anyhow!(err)` form that
+//!   preserves the error type for downcasting.
+
+use std::error::Error as StdError;
+use std::fmt::{self, Debug, Display};
+
+/// `Result` defaulted to [`Error`], as in real anyhow.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error: a typed root plus context frames (outermost first).
+pub struct Error {
+    context: Vec<String>,
+    root: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// Root for message-only errors (`anyhow!("...")`).
+struct Message(String);
+
+impl Display for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl Debug for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for Message {}
+
+impl Error {
+    /// Wrap a typed error; it stays downcastable at the root.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { context: Vec::new(), root: Box::new(error) }
+    }
+
+    /// A message-only error.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { context: Vec::new(), root: Box::new(Message(message.to_string())) }
+    }
+
+    /// Push a context frame; the typed root is untouched, so
+    /// `downcast_ref` keeps working.
+    pub fn context<C: Display + Send + Sync + 'static>(mut self, context: C) -> Error {
+        self.context.insert(0, context.to_string());
+        self
+    }
+
+    /// Downcast to the typed root error, looking through every context
+    /// frame (the property `runtime::fault` pins in its tests).
+    pub fn downcast_ref<T: StdError + 'static>(&self) -> Option<&T> {
+        let root: &(dyn StdError + Send + Sync + 'static) = self.root.as_ref();
+        root.downcast_ref::<T>()
+    }
+
+    /// The innermost (root) error.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        self.root.as_ref()
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain, outermost context first
+            for c in &self.context {
+                write!(f, "{c}: ")?;
+            }
+            write!(f, "{}", self.root)
+        } else {
+            match self.context.first() {
+                Some(c) => f.write_str(c),
+                None => write!(f, "{}", self.root),
+            }
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:#}")?;
+        if !self.context.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in self.context.iter().skip(1) {
+                write!(f, "\n    {c}")?;
+            }
+            write!(f, "\n    {}", self.root)?;
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`: that is
+// what makes this blanket conversion coherent (same shape as real
+// anyhow).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+mod ext {
+    use super::*;
+
+    /// Sealed dispatch for [`Context`]: either a std error (wrap it)
+    /// or an [`Error`] (push a frame). Mirrors anyhow's `ext::StdError`.
+    pub trait ExtContext {
+        fn ext_context<C: Display + Send + Sync + 'static>(self, context: C) -> Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> ExtContext for E {
+        fn ext_context<C: Display + Send + Sync + 'static>(self, context: C) -> Error {
+            Error::new(self).context(context)
+        }
+    }
+
+    impl ExtContext for Error {
+        fn ext_context<C: Display + Send + Sync + 'static>(self, context: C) -> Error {
+            self.context(context)
+        }
+    }
+}
+
+/// `.context(...)` / `.with_context(...)` on `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::ExtContext> Context<T, E> for Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Autoref-specialization plumbing for the `anyhow!($expr)` form:
+/// `(&e).anyhow_kind()` picks `Trait` when the expression converts
+/// into [`Error`] (typed errors — preserved for downcast) and `Adhoc`
+/// when it is merely `Display` (becomes a message). Not a stable API.
+#[doc(hidden)]
+pub mod kind {
+    use super::*;
+
+    pub struct Adhoc;
+
+    pub trait AdhocKind: Sized {
+        fn anyhow_kind(&self) -> Adhoc {
+            Adhoc
+        }
+    }
+
+    impl<T: ?Sized + Display> AdhocKind for &T {}
+
+    impl Adhoc {
+        pub fn new<M: Display>(self, message: M) -> Error {
+            Error::msg(message)
+        }
+    }
+
+    pub struct Trait;
+
+    pub trait TraitKind: Sized {
+        fn anyhow_kind(&self) -> Trait {
+            Trait
+        }
+    }
+
+    impl<E: Into<Error>> TraitKind for E {}
+
+    impl Trait {
+        pub fn new<E: Into<Error>>(self, error: E) -> Error {
+            error.into()
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {{
+        use $crate::kind::*;
+        let error = $err;
+        (&error).anyhow_kind().new(error)
+    }};
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(::std::concat!("condition failed: ", ::std::stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug)]
+    struct Typed(u32);
+
+    impl Display for Typed {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "typed error #{}", self.0)
+        }
+    }
+
+    impl StdError for Typed {}
+
+    #[test]
+    fn downcast_survives_context_frames() {
+        let err: Error = Typed(7).into();
+        let err = err.context("outer").context("outermost");
+        assert_eq!(err.downcast_ref::<Typed>().unwrap().0, 7);
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let err = Error::new(Typed(1)).context("reading header");
+        assert_eq!(format!("{err}"), "reading header");
+        assert_eq!(format!("{err:#}"), "reading header: typed error #1");
+    }
+
+    #[test]
+    fn result_and_option_context() {
+        fn fails() -> Result<(), Typed> {
+            Err(Typed(2))
+        }
+        let e = fails().context("step").unwrap_err();
+        assert_eq!(format!("{e:#}"), "step: typed error #2");
+        assert!(e.downcast_ref::<Typed>().is_some());
+
+        let none: Option<u8> = None;
+        let e = none.with_context(|| "missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+
+    #[test]
+    fn macros_build_messages_and_preserve_typed_errors() {
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let n = 3;
+        let e = anyhow!("got {n} and {}", 4);
+        assert_eq!(format!("{e}"), "got 3 and 4");
+        let e = anyhow!(Typed(9));
+        assert!(e.downcast_ref::<Typed>().is_some());
+
+        fn bails() -> Result<()> {
+            bail!("bad {}", "news");
+        }
+        assert_eq!(format!("{}", bails().unwrap_err()), "bad news");
+
+        fn ensures(x: u32) -> Result<()> {
+            ensure!(x > 2, "x was {x}");
+            Ok(())
+        }
+        assert!(ensures(3).is_ok());
+        assert_eq!(format!("{}", ensures(1).unwrap_err()), "x was 1");
+    }
+}
