@@ -70,6 +70,15 @@ def segment_registry(cfg: ModelConfig, backend: str):
     # decode ABI v2 (DESIGN.md §12): paged pools + per-row page table
     ptab = _spec((b, cfg.pages_per_row), jnp.int32)
     pstate = _spec((model.paged_state_rows(cfg), d))
+    # quantized-base ABI (DESIGN.md §15): every 2-D weight expands in place
+    # to its (q int8, s f32[out]) pair; 1-D norm gains stay f32
+    def _qpair(shape):
+        return [_spec(shape, jnp.int8), _spec((shape[-1],))]
+    qbp = []
+    for _, s in cfg.block_param_shapes():
+        qbp.extend(_qpair(s) if len(s) == 2 else [_spec(s)])
+    emb_q, pos_q = [_qpair(s) for _, s in cfg.embed_param_shapes()]
+    wh_q = _qpair(cfg.head_param_shapes()[1][1])
 
     return {
         "embed_fwd": (functools.partial(model.embed_fwd, cfg=cfg),
@@ -119,6 +128,44 @@ def segment_registry(cfg: ModelConfig, backend: str):
                         *(bp * cfg.n_layers)]),
         "paged_logits": (functools.partial(model.paged_logits, **kw),
                          [pstate, gf, wh]),
+        # quantized-base twins (DESIGN.md §15): frozen weights arrive as
+        # (int8, per-output-channel f32 scale) pairs, dequant fused into the
+        # matmul. Only freezable segments have twins — backward variants
+        # that emit weight gradients stay f32-only by construction.
+        "embed_fwd_q8": (functools.partial(model.embed_fwd_q8, cfg=cfg),
+                         [tok, *emb_q, *pos_q]),
+        "block_fwd_q8": (functools.partial(model.block_fwd_q8, **kw),
+                         [h3, *qbp]),
+        "block_bwd_x_q8": (functools.partial(model.block_bwd_x_q8, **kw),
+                           [h3, h3, *qbp]),
+        "block_fwd_lora_q8": (
+            functools.partial(model.block_fwd_lora_q8, **kw),
+            [h3, *qbp, *lp]),
+        "block_bwd_lora_q8": (
+            functools.partial(model.block_bwd_lora_q8, **kw),
+            [h3, h3, *qbp, *lp]),
+        "head_fwd_bwd_x_q8": (
+            functools.partial(model.head_fwd_bwd_x_q8, **kw),
+            [h3, gf, *wh_q, tok]),
+        "head_loss_q8": (functools.partial(model.head_loss_q8, **kw),
+                         [h3, gf, *wh_q, tok]),
+        "head_logits_q8": (functools.partial(model.head_logits_q8, **kw),
+                           [h3, gf, *wh_q]),
+        "prefill_kv_q8": (functools.partial(model.prefill_kv_q8, **kw),
+                          # h, g1, wk_q, wk_s, wv_q, wv_s
+                          [h3, qbp[0], qbp[3], qbp[4], qbp[5], qbp[6]]),
+        "decode_step_q8": (functools.partial(model.decode_step_q8, **kw),
+                           [tok1, tok1, state, *emb_q, *pos_q,
+                            *(qbp * cfg.n_layers)]),
+        "decode_logits_q8": (
+            functools.partial(model.decode_logits_q8, **kw),
+            [state, gf, *wh_q]),
+        "paged_step_q8": (functools.partial(model.paged_step_q8, **kw),
+                          [tok1, tok1, ptab, pstate, *emb_q, *pos_q,
+                           *(qbp * cfg.n_layers)]),
+        "paged_logits_q8": (
+            functools.partial(model.paged_logits_q8, **kw),
+            [pstate, gf, *wh_q]),
     }
 
 
@@ -214,6 +261,23 @@ def export_config(cfg: ModelConfig, out_root: str, backends, force=False,
             "page_n": cfg.page_n,
             "state_rows": model.paged_state_rows(cfg),
         }
+    # Quantized-base mode (DESIGN.md §15): stamped only when the full q8
+    # core set is present for some backend, same completeness rule as the
+    # decode ABI — a partial export can't advertise quant support. Loaders
+    # treat a missing block as "f32 only"; legacy dirs keep loading.
+    quant_core = ("embed_fwd_q8", "block_fwd_q8", "block_bwd_x_q8",
+                  "block_fwd_lora_q8", "block_bwd_lora_q8",
+                  "head_fwd_bwd_x_q8", "head_loss_q8", "head_logits_q8")
+    quant_decode = ("prefill_kv_q8", "decode_step_q8", "decode_logits_q8")
+    quant_paged = ("paged_step_q8", "paged_logits_q8")
+    has_q = any(
+        all(f"{n}.{be}" in manifest["segments"] for n in quant_core)
+        for be in ("pallas", "jnp"))
+    if has_q:
+        stamped = [n for n in (*quant_core, *quant_decode, *quant_paged)
+                   if any(f"{n}.{be}" in manifest["segments"]
+                          for be in ("pallas", "jnp"))]
+        manifest["quant"] = {"mode": "int8-chan", "segments": stamped}
     with open(os.path.join(out_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1, sort_keys=True)
     return manifest

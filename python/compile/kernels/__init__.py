@@ -7,5 +7,6 @@ Mosaic custom-calls) and are float32-exact against the oracles in ``ref.py``.
 from . import ref  # noqa: F401
 from .adamw import adamw_update, pack_hyper  # noqa: F401
 from .flash_attention import flash_attention  # noqa: F401
+from .quant import q8_matmul, quantize_per_channel  # noqa: F401
 from .rmsnorm import rmsnorm  # noqa: F401
 from .softmax_xent import softmax_xent  # noqa: F401

@@ -1,0 +1,110 @@
+"""Per-output-channel int8 quantization + the fused-dequant matmul kernel.
+
+Scheme (DESIGN.md §15): a 2-D weight ``w [in, out]`` stores as
+``(q int8[in, out], s float32[out])`` with ``s[c] = absmax(w[:, c]) / 127``
+and ``q = clip(round_half_even(w / s), -127, 127)``; an all-zero channel
+keeps ``s[c] = 0`` so dequant reproduces it exactly. Dequant is fused into
+the matmul — the f32 weight tensor is never materialized:
+
+    y = (x @ q.astype(f32)) * s[None, :]
+
+That exact expression is the contract on BOTH backends (the jnp path in
+``model._q8_lin`` evaluates it verbatim; the Pallas kernel below computes
+the same product per row tile), because ``(x @ q) * s`` and ``x @ (q * s)``
+round differently in f32 and the Rust differential suites pin the former.
+
+The Rust twin of ``quantize_per_channel`` lives in ``rust/src/opt/quant.rs``
+and must stay bit-identical: f32 scale division, ``round_ties_even``
+(= ``np.rint``), clamp to [-127, 127].
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .rmsnorm import _pick_block
+
+
+def quantize_per_channel(w):
+    """w f32[in, out] -> (q int8[in, out], s f32[out]). Rejects NaN/Inf."""
+    w = np.asarray(w, np.float32)
+    if w.ndim != 2:
+        raise ValueError(f"only 2-D tensors quantize, got shape {w.shape}")
+    if not np.all(np.isfinite(w)):
+        raise ValueError("quantize_per_channel: NaN/Inf in weight tensor")
+    s = (np.max(np.abs(w), axis=0) / 127.0).astype(np.float32)
+    safe = np.where(s > 0, s, 1.0).astype(np.float32)
+    q = np.rint((w / safe[None, :]).astype(np.float32))
+    q = np.clip(q, -127.0, 127.0).astype(np.int8)
+    q = np.where(s[None, :] > 0, q, 0).astype(np.int8)
+    return q, s
+
+
+def dequantize(q, s):
+    """Reference dequant (tests only — the runtime never materializes it)."""
+    return np.asarray(q, np.float32) * np.asarray(s, np.float32)[None, :]
+
+
+def _q8_kernel(x_ref, q_ref, s_ref, y_ref):
+    x = x_ref[...]                                  # [block_n, din]
+    qf = q_ref[...].astype(jnp.float32)             # [din, dout]
+    s = s_ref[...]                                  # [dout]
+    y = jnp.dot(x, qf, preferred_element_type=jnp.float32)
+    y_ref[...] = y * s[None, :]
+
+
+def _q8_fwd(x2, q, s, block_n, interpret):
+    n, din = x2.shape
+    dout = q.shape[1]
+    bn = _pick_block(n, block_n)
+    return pl.pallas_call(
+        _q8_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, din), lambda i: (i, 0)),
+            pl.BlockSpec((din, dout), lambda i: (0, 0)),
+            pl.BlockSpec((dout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, dout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dout), jnp.float32),
+        interpret=interpret,
+    )(x2, q, s)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _q8_mm(x2, q, s, block_n, interpret):
+    return _q8_fwd(x2, q, s, block_n, interpret)
+
+
+def _q8_vjp_fwd(x2, q, s, block_n, interpret):
+    return _q8_fwd(x2, q, s, block_n, interpret), (q, s)
+
+
+def _q8_vjp_bwd(block_n, interpret, res, dy):
+    q, s = res
+    # dx = (dy * s) @ dequant(q)^T — plain jnp: the weights are frozen by
+    # construction (only frozen tensors quantize), so dq/ds are never used.
+    dx = (dy * s[None, :]) @ q.astype(jnp.float32).T
+    return dx, np.zeros(q.shape, jax.dtypes.float0), jnp.zeros_like(s)
+
+
+_q8_mm.defvjp(_q8_vjp_fwd, _q8_vjp_bwd)
+
+
+def q8_matmul(x, q, s, block_n=128, interpret=True):
+    """Fused dequant matmul: x f32[..., in] @ (q i8[in, out], s f32[out])
+    -> f32[..., out], computed as ``(x @ q.f32) * s`` per row tile."""
+    shp = x.shape
+    x2 = x.reshape(-1, shp[-1])
+    y = _q8_mm(x2, q, s, block_n, interpret)
+    return y.reshape((*shp[:-1], q.shape[1]))
+
+
+def vmem_bytes(din: int, dout: int, block_n: int) -> int:
+    """Peak VMEM per grid step: x tile (f32), q (i8), s + y tile (f32)."""
+    return 4 * (block_n * din + dout + block_n * dout) + din * dout

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from .configs import ModelConfig
 from .kernels import ref
 from .kernels.flash_attention import flash_attention
+from .kernels.quant import q8_matmul
 from .kernels.rmsnorm import rmsnorm
 from .kernels.softmax_xent import xent_loss
 
@@ -54,6 +55,23 @@ def _attention(q, k, v, cfg: ModelConfig, backend: str):
         return flash_attention(q, k, v, True, None, cfg.block_q, cfg.block_k,
                                True)
     return ref.attention(q, k, v, causal=True)
+
+
+def _q8_lin(x, q, s, cfg: ModelConfig, backend: str):
+    """Fused dequant linear over an int8 weight: ``(x @ q.f32) * s``.
+
+    The exact expression is the cross-backend contract (DESIGN.md §15):
+    ``(x @ q) * s`` and ``x @ (q * s)`` round differently in f32, and the
+    Rust differential suites pin the former on both paths.
+    """
+    if backend == "pallas":
+        return q8_matmul(x, q, s, cfg.block_n, True)
+    return (x @ q.astype(jnp.float32)) * s
+
+
+def _q8_embed(idx, q, s):
+    """Gather-dequant an int8 embedding row block: q[idx].f32 * s."""
+    return q[idx].astype(jnp.float32) * s
 
 
 def _xent(logits, targets, cfg: ModelConfig, backend: str):
@@ -387,6 +405,195 @@ def paged_logits(state, gf, wh, *, cfg: ModelConfig, backend: str):
     h = state[-cfg.batch:, :][:, None, :]
     x = _norm(h, gf, cfg, backend)
     return x @ wh
+
+
+# ---------------------------------------------------------------------------
+# Quantized-base segments (int8-chan, DESIGN.md §15)
+#
+# Every frozen weight matmul has a ``*_q8`` twin whose 2-D weights arrive as
+# ``(q int8, s f32[out])`` pairs with dequant fused into the matmul
+# (``kernels/quant.py`` on the pallas backend, the identical jnp expression
+# otherwise) — no f32 weight tensor is ever materialized on device. The
+# operand ABI mirrors the f32 one with each 2-D weight expanded in place to
+# its (q, s) pair; 1-D norm gains stay f32. Per-block quantized param order:
+#
+#     (g1, wq_q, wq_s, wk_q, wk_s, wv_q, wv_s, wo_q, wo_s,
+#      g2, w1_q, w1_s, w2_q, w2_s)
+#
+# Only segments whose weights can be frozen get a q8 twin: backward
+# variants that produce weight gradients (``block_bwd_full``,
+# ``head_fwd_bwd``, ``embed_bwd``) have none by construction — a trainable
+# tensor is always f32 (the Rust engine enforces the selection per key).
+# ---------------------------------------------------------------------------
+
+
+Q8_BLOCK_PARAMS = 14  # the 8-tuple with each of the six 2-D weights split
+
+
+def embed_fwd_q8(tokens, emb_q, emb_s, pos_q, pos_s, *, cfg: ModelConfig):
+    """Quantized embedding: gather-dequant, no matmul to fuse into."""
+    return _q8_embed(tokens, emb_q, emb_s) + (
+        pos_q.astype(jnp.float32) * pos_s)[None, :, :]
+
+
+def block_core_q8(h, qp, cfg: ModelConfig, backend: str, lora=None):
+    """``block_core`` over a quantized 14-tuple; LoRA adapters stay f32."""
+    (g1, wq_q, wq_s, wk_q, wk_s, wv_q, wv_s, wo_q, wo_s,
+     g2, w1_q, w1_s, w2_q, w2_s) = qp
+    scale = cfg.lora_alpha / cfg.lora_rank if lora is not None else 0.0
+    la = lora if lora is not None else [None] * 12
+
+    def lin(x, q, s, a, b):
+        y = _q8_lin(x, q, s, cfg, backend)
+        if lora is not None:
+            y = y + (x @ a) @ b * scale
+        return y
+
+    x = _norm(h, g1, cfg, backend)
+    q = _split_heads(lin(x, wq_q, wq_s, la[0], la[1]), cfg)
+    k = _split_heads(lin(x, wk_q, wk_s, la[2], la[3]), cfg)
+    v = _split_heads(lin(x, wv_q, wv_s, la[4], la[5]), cfg)
+    o = _merge_heads(_attention(q, k, v, cfg, backend), cfg)
+    h1 = h + lin(o, wo_q, wo_s, la[6], la[7])
+    y = _norm(h1, g2, cfg, backend)
+    ff = lin(jax.nn.gelu(lin(y, w1_q, w1_s, la[8], la[9])),
+             w2_q, w2_s, la[10], la[11])
+    return h1 + ff
+
+
+def block_fwd_q8(h, *qp, cfg: ModelConfig, backend: str):
+    return block_core_q8(h, qp, cfg, backend)
+
+
+def block_bwd_x_q8(dh_out, h_in, *qp, cfg: ModelConfig, backend: str):
+    """Frozen quantized block backward: input gradient only -> dh_in."""
+    _, vjp = jax.vjp(lambda h: block_core_q8(h, qp, cfg, backend), h_in)
+    (dh_in,) = vjp(dh_out)
+    return dh_in
+
+
+def block_fwd_lora_q8(h, *ps, cfg: ModelConfig, backend: str):
+    qp, lora = ps[:Q8_BLOCK_PARAMS], ps[Q8_BLOCK_PARAMS:]
+    return block_core_q8(h, qp, cfg, backend, lora=lora)
+
+
+def block_bwd_lora_q8(dh_out, h_in, *ps, cfg: ModelConfig, backend: str):
+    """LoRA backward over a quantized base: -> (dh_in, dA/dB x6 pairs)."""
+    qp, lora = ps[:Q8_BLOCK_PARAMS], ps[Q8_BLOCK_PARAMS:]
+    _, vjp = jax.vjp(
+        lambda h, *l: block_core_q8(h, qp, cfg, backend, lora=l),
+        h_in, *lora)
+    return vjp(dh_out)  # (dh_in, *dlora)
+
+
+def _head_loss_q8(h, gf, wh_q, wh_s, targets, cfg: ModelConfig, backend: str):
+    x = _norm(h, gf, cfg, backend)
+    logits = _q8_lin(x.reshape(-1, cfg.d_model), wh_q, wh_s, cfg, backend)
+    return _xent(logits, targets.reshape(-1), cfg, backend)
+
+
+def head_fwd_bwd_x_q8(h, gf, wh_q, wh_s, targets, *, cfg: ModelConfig,
+                      backend: str):
+    """Frozen quantized head: -> (loss, dh)."""
+    loss, vjp = jax.vjp(
+        lambda h: _head_loss_q8(h, gf, wh_q, wh_s, targets, cfg, backend), h)
+    (dh,) = vjp(jnp.float32(1.0))
+    return loss, dh
+
+
+def head_loss_q8(h, gf, wh_q, wh_s, targets, *, cfg: ModelConfig,
+                 backend: str):
+    return _head_loss_q8(h, gf, wh_q, wh_s, targets, cfg, backend)
+
+
+def head_logits_q8(h, gf, wh_q, wh_s, *, cfg: ModelConfig, backend: str):
+    x = _norm(h, gf, cfg, backend)
+    return _q8_lin(x, wh_q, wh_s, cfg, backend)
+
+
+def prefill_kv_q8(h, g1, wk_q, wk_s, wv_q, wv_s, *, cfg: ModelConfig,
+                  backend: str):
+    """Quantized per-layer prompt K/V: same packing as ``prefill_kv``."""
+    x = _norm(h, g1, cfg, backend)
+    return jnp.concatenate([_q8_lin(x, wk_q, wk_s, cfg, backend),
+                            _q8_lin(x, wv_q, wv_s, cfg, backend)], axis=1)
+
+
+def decode_step_q8(tok, pidx, state, emb_q, emb_s, pos_q, pos_s, *qbps,
+                   cfg: ModelConfig, backend: str):
+    """Quantized ``decode_step``: same state layout, (q, s) weight pairs."""
+    t_max = cfg.seq
+    h = _q8_embed(tok, emb_q, emb_s) + _q8_embed(pidx, pos_q, pos_s)
+    onehot = jax.nn.one_hot(pidx[:, 0], t_max, dtype=jnp.float32)  # [B,T]
+    mask = jax.lax.iota(jnp.int32, t_max)[None, :] <= pidx  # [B,T]
+    rows = []
+    for l in range(cfg.n_layers):
+        (g1, wq_q, wq_s, wk_q, wk_s, wv_q, wv_s, wo_q, wo_s,
+         g2, w1_q, w1_s, w2_q, w2_s) = \
+            qbps[Q8_BLOCK_PARAMS * l:Q8_BLOCK_PARAMS * (l + 1)]
+        kc = state[:, l * 2 * t_max:l * 2 * t_max + t_max, :]
+        vc = state[:, l * 2 * t_max + t_max:(l + 1) * 2 * t_max, :]
+        x = _norm(h, g1, cfg, backend)
+        q = _q8_lin(x, wq_q, wq_s, cfg, backend)
+        k_new = _q8_lin(x, wk_q, wk_s, cfg, backend)
+        v_new = _q8_lin(x, wv_q, wv_s, cfg, backend)
+        keep = 1.0 - onehot[:, :, None]
+        kc = kc * keep + k_new * onehot[:, :, None]
+        vc = vc * keep + v_new * onehot[:, :, None]
+        o = _decode_attend(q, kc, vc, mask, cfg)
+        h1 = h + _q8_lin(o, wo_q, wo_s, cfg, backend)
+        y = _norm(h1, g2, cfg, backend)
+        h = h1 + _q8_lin(jax.nn.gelu(_q8_lin(y, w1_q, w1_s, cfg, backend)),
+                         w2_q, w2_s, cfg, backend)
+        rows.extend((kc, vc))
+    return jnp.concatenate([*rows, h], axis=1)
+
+
+def decode_logits_q8(state, gf, wh_q, wh_s, *, cfg: ModelConfig,
+                     backend: str):
+    h = state[:, -1:, :]
+    x = _norm(h, gf, cfg, backend)
+    return _q8_lin(x, wh_q, wh_s, cfg, backend)
+
+
+def paged_step_q8(tok, pidx, table, state, emb_q, emb_s, pos_q, pos_s,
+                  *qbps, cfg: ModelConfig, backend: str):
+    """Quantized ``paged_step``: same paged geometry, (q, s) weight pairs."""
+    bt, p, n, b = cfg.page_t, cfg.pages_per_row, cfg.page_n, cfg.batch
+    kv_rows = cfg.n_layers * 2 * n * bt
+    h = _q8_embed(tok, emb_q, emb_s) + _q8_embed(pidx, pos_q, pos_s)
+    page = jnp.take_along_axis(table, pidx // bt, axis=1)[:, 0]  # [B]
+    slot = pidx[:, 0] % bt  # [B]
+    mask = jax.lax.iota(jnp.int32, p * bt)[None, :] <= pidx  # [B, P*bt]
+    in_page = jnp.arange(bt, dtype=jnp.int32)
+    for l in range(cfg.n_layers):
+        (g1, wq_q, wq_s, wk_q, wk_s, wv_q, wv_s, wo_q, wo_s,
+         g2, w1_q, w1_s, w2_q, w2_s) = \
+            qbps[Q8_BLOCK_PARAMS * l:Q8_BLOCK_PARAMS * (l + 1)]
+        x = _norm(h, g1, cfg, backend)
+        q = _q8_lin(x, wq_q, wq_s, cfg, backend)
+        k_new = _q8_lin(x, wk_q, wk_s, cfg, backend)
+        v_new = _q8_lin(x, wv_q, wv_s, cfg, backend)
+        k_base, v_base = 2 * l * n, (2 * l + 1) * n
+        state = state.at[(k_base + page) * bt + slot].set(k_new[:, 0, :])
+        state = state.at[(v_base + page) * bt + slot].set(v_new[:, 0, :])
+        k_idx = ((k_base + table) * bt)[:, :, None] + in_page  # [B,P,bt]
+        v_idx = ((v_base + table) * bt)[:, :, None] + in_page
+        kc = state[k_idx.reshape(b, p * bt)]  # [B, P*bt, D]
+        vc = state[v_idx.reshape(b, p * bt)]
+        o = _decode_attend(q, kc, vc, mask, cfg)
+        h1 = h + _q8_lin(o, wo_q, wo_s, cfg, backend)
+        y = _norm(h1, g2, cfg, backend)
+        h = h1 + _q8_lin(jax.nn.gelu(_q8_lin(y, w1_q, w1_s, cfg, backend)),
+                         w2_q, w2_s, cfg, backend)
+    return jnp.concatenate([state[:kv_rows], h[:, 0, :]], axis=0)
+
+
+def paged_logits_q8(state, gf, wh_q, wh_s, *, cfg: ModelConfig,
+                    backend: str):
+    h = state[-cfg.batch:, :][:, None, :]
+    x = _norm(h, gf, cfg, backend)
+    return _q8_lin(x, wh_q, wh_s, cfg, backend)
 
 
 # ---------------------------------------------------------------------------

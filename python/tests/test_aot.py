@@ -25,6 +25,12 @@ def test_registry_covers_all_segments():
         "head_fwd_bwd_x", "head_loss", "head_logits", "adamw_update",
         "prefill_kv", "pack_state", "decode_step", "decode_logits",
         "paged_step", "paged_logits", "paged_scatter",
+        # q8 twins: frozen-base int8 variants (DESIGN.md §15)
+        "embed_fwd_q8", "block_fwd_q8", "block_bwd_x_q8",
+        "block_fwd_lora_q8", "block_bwd_lora_q8", "head_fwd_bwd_x_q8",
+        "head_loss_q8", "head_logits_q8", "prefill_kv_q8",
+        "decode_step_q8", "decode_logits_q8", "paged_step_q8",
+        "paged_logits_q8",
     }
     assert names == expected
 

@@ -467,6 +467,124 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---------------- quantized frozen-base residency (ISSUE 10) ----------
+    // f32-twin / int8 pairs at each tier: the timed arm gives tokens/sec
+    // (or step/sec), the printed lines give the upload-byte and
+    // device-resident-byte deltas the quantization exists to shrink.
+    if art.join("tiny/manifest.json").exists() {
+        use lisa::engine::QuantMode;
+        let rt = Runtime::load(&art.join("tiny"), "pallas")?;
+        let m = rt.manifest.clone();
+        let samples = corpus::gen_instruction_corpus(64, 3);
+        let tok = Tokenizer::build(&corpus::sample_texts(&samples), m.vocab);
+
+        if m.supports_quant("pallas") {
+            let enc: Vec<_> = samples.iter().map(|s| encode_sft(&tok, s, m.seq)).collect();
+            for (mode, name) in
+                [(QuantMode::Off, "step/quant-f32-twin-tiny"), (QuantMode::Int8, "step/quant-tiny")]
+            {
+                let mut dl = DataLoader::new(enc.clone(), m.batch, m.seq, 1);
+                let cfg = TrainConfig { steps: 0, lr: 1e-3, log_every: 0, ..Default::default() };
+                let mut sess = TrainSession::new(&rt, &StrategySpec::lisa(2, 5), cfg)?;
+                sess.engine.set_quant(mode);
+                sess.step(0, &mut dl)?; // warm executables + device cache
+                let mut step = 1usize;
+                results.push(b.run_with_elements(name, (m.batch * m.seq) as u64, || {
+                    step += 1;
+                    black_box(sess.step(step, &mut dl).unwrap());
+                }));
+                // cold re-upload traffic: how many bytes a full weight
+                // refresh moves under each residency format
+                sess.engine.invalidate_all();
+                rt.reset_stats();
+                step += 1;
+                sess.step(step, &mut dl)?;
+                let up: u64 = rt.stats().values().map(|s| s.upload_bytes).sum();
+                let cs = sess.engine.device_cache_stats();
+                println!(
+                    "{name}: cold re-upload {up} B; device-resident {} B \
+                     (f32 {} B, i8 {} B)",
+                    cs.resident_bytes, cs.resident_f32_bytes, cs.resident_i8_bytes
+                );
+            }
+        } else {
+            println!("step/quant-tiny skipped: artifacts carry no q8 segment twins");
+        }
+
+        if m.supports_quant("pallas") && m.supports_quant_decode("pallas") {
+            let params = ModelParams::init(&m, &mut Rng::new(7));
+            let prompts: Vec<String> = samples.iter().take(4).map(|s| s.prompt.clone()).collect();
+            let enc: Vec<Vec<i32>> =
+                prompts.iter().map(|p| generate::encode_prompt(&tok, p)).collect();
+            let max_new = 8;
+            for (mode, name) in [
+                (QuantMode::Off, "decode/quant-f32-twin-tiny"),
+                (QuantMode::Int8, "decode/quant-tiny"),
+            ] {
+                let mut eng = Engine::new(&rt);
+                eng.set_quant(mode);
+                rt.reset_stats();
+                let n_tokens: usize = {
+                    let mut sess = DecodeSession::with_mode(&mut eng, &params, KvMode::Packed)?;
+                    sess.greedy(&enc, max_new, EOS, PAD)?.iter().map(|c| c.tokens.len()).sum()
+                };
+                let cold_up: u64 = rt.stats().values().map(|s| s.upload_bytes).sum();
+                results.push(b.run_with_elements(name, n_tokens.max(1) as u64, || {
+                    let mut sess =
+                        DecodeSession::with_mode(&mut eng, &params, KvMode::Packed).unwrap();
+                    black_box(sess.greedy(&enc, max_new, EOS, PAD).unwrap());
+                }));
+                let cs = eng.device_cache_stats();
+                println!(
+                    "{name}: cold weight upload {cold_up} B; device-resident {} B \
+                     (f32 {} B, i8 {} B)",
+                    cs.resident_bytes, cs.resident_f32_bytes, cs.resident_i8_bytes
+                );
+            }
+
+            let eos_off = -1;
+            let queue: Vec<Request> = samples
+                .iter()
+                .take(2 * m.batch)
+                .enumerate()
+                .map(|(i, s)| {
+                    let budget = if i % m.batch == 0 { 16.min(m.seq / 4) } else { 2 };
+                    Request::greedy(generate::encode_prompt(&tok, &s.prompt), budget)
+                })
+                .collect();
+            for (mode, name) in [
+                (QuantMode::Off, "serve/quant-f32-twin-tiny"),
+                (QuantMode::Int8, "serve/quant-tiny"),
+            ] {
+                let mut eng = Engine::new(&rt);
+                eng.set_quant(mode);
+                rt.reset_stats();
+                let n_tokens = {
+                    let mut sess = ServeSession::with_mode(&mut eng, &params, KvMode::Packed)?;
+                    sess.run(&queue, eos_off, PAD)?
+                        .iter()
+                        .map(|c| c.tokens.len())
+                        .sum::<usize>()
+                        .max(1) as u64
+                };
+                let cold_up: u64 = rt.stats().values().map(|s| s.upload_bytes).sum();
+                results.push(b.run_with_elements(name, n_tokens, || {
+                    let mut sess =
+                        ServeSession::with_mode(&mut eng, &params, KvMode::Packed).unwrap();
+                    black_box(sess.run(&queue, eos_off, PAD).unwrap());
+                }));
+                let cs = eng.device_cache_stats();
+                println!(
+                    "{name}: cold weight upload {cold_up} B; device-resident {} B \
+                     (f32 {} B, i8 {} B)",
+                    cs.resident_bytes, cs.resident_f32_bytes, cs.resident_i8_bytes
+                );
+            }
+        } else if m.supports_quant("pallas") {
+            println!("decode/quant-tiny skipped: no q8 decode-ABI twins in the artifacts");
+        }
+    }
+
     println!("\n=== bench results ===");
     for r in &results {
         println!("{}", r.report());
@@ -484,7 +602,10 @@ fn main() -> anyhow::Result<()> {
                 serve/paged-prefix-tiny the shared-prefix page-reuse arm (tokens/sec with \
                 prefill_kv executions printed; reuse target 0) and \
                 serve/http-tiny the same queue through the `lisa serve` HTTP front end \
-                (loopback tokens/sec; TTFT p50/p99 printed from /metrics)";
+                (loopback tokens/sec; TTFT p50/p99 printed from /metrics); \
+                {step,decode,serve}/quant-tiny vs their -f32-twin arms are the int8 \
+                frozen-base residency pair (upload-byte and device-resident-byte deltas \
+                printed per arm)";
     let target = Path::new("../BENCH_step.json");
     let path = if lisa::util::bench::write_json(target, &results, quick, note).is_ok() {
         target
@@ -494,5 +615,15 @@ fn main() -> anyhow::Result<()> {
         fallback
     };
     println!("\nwrote {} ({} groups)", path.display(), results.len());
+
+    // Append-per-run history next to the snapshot: the snapshot answers
+    // "how fast is HEAD", the trajectory answers "how has it moved".
+    let traj = if path.starts_with("..") {
+        Path::new("../BENCH_trajectory.jsonl")
+    } else {
+        Path::new("BENCH_trajectory.jsonl")
+    };
+    lisa::util::bench::append_trajectory(traj, &results, quick, note)?;
+    println!("appended run to {}", traj.display());
     Ok(())
 }

@@ -155,7 +155,7 @@ pub(crate) fn argmax(row: &[f32]) -> i32 {
             best = i;
         }
     }
-    best as i32
+    crate::util::cast::idx_i32(best)
 }
 
 // ---------------------------------------------------------------------------
@@ -243,7 +243,7 @@ impl PageAllocator {
         PageAllocator {
             page_t,
             refs,
-            free: (1..n_pages as u32).rev().collect(),
+            free: (1..crate::util::cast::idx_u32(n_pages)).rev().collect(),
             cache: BTreeMap::new(),
             tick: 0,
             fault: None,

@@ -12,4 +12,4 @@ pub use serve::{
     CancelToken, Feed, KvMode, LoopStats, Request, RequestSink, RequestSource, Sampler,
     SamplerSpec, ServeSession,
 };
-pub use trainer::{Batch, Engine, Grads, StepOutput, Touched, TrainMask};
+pub use trainer::{Batch, Engine, Grads, QuantMode, StepOutput, Touched, TrainMask};

@@ -63,7 +63,7 @@ use crate::engine::decode::{
     clip_prompt, Completion, FailClass, PageAllocator, ServeFail, StopReason,
 };
 use crate::engine::memory::MemCategory;
-use crate::engine::trainer::{Act, Engine, ParamOp};
+use crate::engine::trainer::{Act, Engine, ParamOp, QuantMode, TrainMask};
 use crate::model::ModelParams;
 use crate::runtime::fault::{FaultError, FaultKind};
 use crate::runtime::{HostTensor, HostTensorI32, Operand, DECODE_ABI, PAGED_ABI};
@@ -130,7 +130,7 @@ fn page_table(slots: &[RowSlot], bsz: usize, p: usize) -> HostTensorI32 {
     for (r, slot) in slots.iter().enumerate() {
         if let Some(occ) = &slot.0 {
             for (j, &g) in occ.pages.iter().enumerate().take(p) {
-                t[r * p + j] = g as i32;
+                t[r * p + j] = crate::util::cast::idx_i32(g as usize);
             }
         }
     }
@@ -311,7 +311,7 @@ impl RowPlan {
     #[allow(clippy::expect_used)] // invariant: see the lint allow below
     pub(crate) fn step_input(&self) -> (i32, i32) {
         // lisa-lint: allow(serve_panic): the constructor asserts a non-empty prompt and `seq` only grows
-        (*self.seq.last().expect("non-empty"), (self.seq.len() - 1) as i32)
+        (*self.seq.last().expect("non-empty"), crate::util::cast::idx_i32(self.seq.len() - 1))
     }
 
     pub(crate) fn into_completion(self) -> Completion {
@@ -687,7 +687,9 @@ impl RowSlot {
         match &self.0 {
             None => (pad, 0),
             Some(occ) => match occ.state() {
-                SlotState::Prefilling => (occ.plan.seq[occ.fed], occ.fed as i32),
+                SlotState::Prefilling => {
+                    (occ.plan.seq[occ.fed], crate::util::cast::idx_i32(occ.fed))
+                }
                 // parked rows hold no pages: write inertly onto scratch
                 SlotState::Parked => (pad, 0),
                 _ => occ.plan.step_input(),
@@ -778,6 +780,11 @@ pub struct ServeSession<'e, 'rt> {
     params: &'e ModelParams,
     /// `Some` iff the session runs [`KvMode::Paged`].
     paged: Option<PagedPool>,
+    /// Session-wide quantized serving (DESIGN.md §15): every step of this
+    /// session runs the q8 twins, or none does. Decided once at
+    /// construction from the engine's quant mode + the manifest's q8
+    /// decode (and, in paged mode, paged) twin coverage.
+    q8: bool,
     /// `decode_step` (or `paged_step`) executions across every batch of
     /// this session.
     pub decode_steps: u64,
@@ -874,10 +881,29 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
                 })
             }
         };
+        // Session-wide quant selection: the decode loop builds one operand
+        // set and reuses it every step, so q8 is all-or-nothing per
+        // session — on only when the decode q8 twins (and the paged ones,
+        // in paged mode) are in the manifest. The engine's operand
+        // builders follow its trainable mask, so pinning the mask here
+        // keeps operand format and segment choice in lockstep: all-frozen
+        // selects q8, all-trainable forces f32 even when the core q8 set
+        // exists but the decode twins don't.
+        let m = &eng.rt.manifest;
+        let q8 = eng.quant() == QuantMode::Int8
+            && m.supports_quant_decode(&eng.rt.backend)
+            && (paged.is_none() || m.supports_quant_paged(&eng.rt.backend));
+        let n_layers = m.n_layers;
+        eng.set_train_mask(&if q8 {
+            TrainMask::none(n_layers)
+        } else {
+            TrainMask::all(n_layers)
+        });
         Ok(ServeSession {
             eng,
             params,
             paged,
+            q8,
             decode_steps: 0,
             batch_prefills: 0,
             streamed_prompt_tokens: 0,
@@ -1228,15 +1254,18 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
                     ops.push(Operand::I32(t));
                 }
                 ops.push(st.operand());
-                ops.push(ep[0].operand());
-                ops.push(ep[1].operand());
+                ep[0].push_operands(&mut ops);
+                ep[1].push_operands(&mut ops);
                 for bo in blocks {
-                    ops.extend(bo.iter().map(ParamOp::operand));
+                    for p in bo {
+                        p.push_operands(&mut ops);
+                    }
                 }
-                let (seg, shape) = if table.is_some() {
-                    (self.eng.ids.paged_step, &paged_shape)
-                } else {
-                    (self.eng.ids.decode_step, &state_shape)
+                let (seg, shape) = match (table.is_some(), self.q8) {
+                    (true, true) => (self.eng.ids.paged_step_q8, &paged_shape),
+                    (true, false) => (self.eng.ids.paged_step, &paged_shape),
+                    (false, true) => (self.eng.ids.decode_step_q8, &state_shape),
+                    (false, false) => (self.eng.ids.decode_step, &state_shape),
                 };
                 self.eng.run_chain_act(seg, &ops, shape)
             };
@@ -1263,16 +1292,21 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
             // the [B, 1, V] download happens only when some row reads it —
             // a step that only streams mid-prompt columns skips it
             let lg = if needs_logits {
-                let (st, seg) = match self.paged.as_ref() {
-                    Some(pool) => (pool.state.as_ref(), self.eng.ids.paged_logits),
-                    None => (state.as_ref(), self.eng.ids.decode_logits),
+                let (st, seg) = match (self.paged.as_ref(), self.q8) {
+                    (Some(pool), true) => (pool.state.as_ref(), self.eng.ids.paged_logits_q8),
+                    (Some(pool), false) => (pool.state.as_ref(), self.eng.ids.paged_logits),
+                    (None, true) => (state.as_ref(), self.eng.ids.decode_logits_q8),
+                    (None, false) => (state.as_ref(), self.eng.ids.decode_logits),
                 };
                 let Some(st) = st else {
                     // unreachable: the step above just stored this state
                     debug_assert!(false, "decode step just stored a state");
                     continue;
                 };
-                let ops = [st.operand(), ho[0].operand(), ho[1].operand()];
+                let mut ops = vec![st.operand()];
+                for p in ho {
+                    p.push_operands(&mut ops);
+                }
                 match self.eng.run_chain_act(seg, &ops, &logit1_shape).and_then(Act::into_host) {
                     Ok(h) => Some(h),
                     Err(e) => {
@@ -1552,24 +1586,42 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
         let kv_shape = vec![bsz, 2 * t_max, d];
         let state_shape = vec![bsz, m.decode_state_rows(), d];
 
+        let eid = if self.q8 { ids.embed_fwd_q8 } else { ids.embed_fwd };
         let ep = self.eng.embed_ops(self.params)?;
-        let ops = [Operand::I32(&tokens), ep[0].operand(), ep[1].operand()];
-        let mut h = self.eng.run_chain_act(ids.embed_fwd, &ops, &hs)?;
+        let mut ops = vec![Operand::I32(&tokens)];
+        for p in &ep {
+            p.push_operands(&mut ops);
+        }
+        let mut h = self.eng.run_chain_act(eid, &ops, &hs)?;
+        drop(ops);
         let mut kvs: Vec<Act> = Vec::with_capacity(m.n_layers);
         // meter the real serving peak: the growing per-layer K/V buffers
         // plus the one live residual are resident together during prefill
         let mut kv_bytes = 0u64;
         self.eng.meter.set(MemCategory::Activations, h.bytes() as u64);
+        let (kv_id, fwd_id) = if self.q8 {
+            (ids.prefill_kv_q8, ids.block_fwd_q8)
+        } else {
+            (ids.prefill_kv, ids.block_fwd)
+        };
         for l in 0..m.n_layers {
             let bo = self.eng.block_ops(self.params, l)?;
             // prefill_kv ABI: (h, g1, wk, wv) — block ABI indices 0/2/3
-            let kv_ops = [h.operand(), bo[0].operand(), bo[2].operand(), bo[3].operand()];
-            let kv = self.eng.run_chain_act(ids.prefill_kv, &kv_ops, &kv_shape)?;
+            // (under q8 the wk/wv entries expand to their (q, s) pairs)
+            let mut kv_ops = vec![h.operand()];
+            bo[0].push_operands(&mut kv_ops);
+            bo[2].push_operands(&mut kv_ops);
+            bo[3].push_operands(&mut kv_ops);
+            let kv = self.eng.run_chain_act(kv_id, &kv_ops, &kv_shape)?;
+            drop(kv_ops);
             kv_bytes += kv.bytes() as u64;
             kvs.push(kv);
             let mut ops = vec![h.operand()];
-            ops.extend(bo.iter().map(ParamOp::operand));
-            let h_next = self.eng.run_chain_act(ids.block_fwd, &ops, &hs)?;
+            for p in &bo {
+                p.push_operands(&mut ops);
+            }
+            let h_next = self.eng.run_chain_act(fwd_id, &ops, &hs)?;
+            drop(ops);
             h = h_next;
             self.eng
                 .meter
@@ -1578,11 +1630,15 @@ impl<'e, 'rt> ServeSession<'e, 'rt> {
         // head_logits only when some prefilled row actually consumes it
         // (skipped for forced first tokens / zero-budget batches)
         let logits: Option<HostTensor> = if slots.iter().any(RowSlot::needs_prefill_logits) {
+            let lid = if self.q8 { ids.head_logits_q8 } else { ids.head_logits };
             let ho = self.eng.head_ops(self.params)?;
-            let ops = [h.operand(), ho[0].operand(), ho[1].operand()];
+            let mut ops = vec![h.operand()];
+            for p in &ho {
+                p.push_operands(&mut ops);
+            }
             Some(
                 self.eng
-                    .run_chain_act(ids.head_logits, &ops, &[bsz, t_max, v])?
+                    .run_chain_act(lid, &ops, &[bsz, t_max, v])?
                     .into_host()?,
             )
         } else {

@@ -30,17 +30,29 @@
 //! differential baseline for `tests/it_device.rs` and the bench's
 //! before/after comparison.
 
+use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use anyhow::{Context, Result};
 use xla::Literal;
 
 use crate::model::{ModelParams, ParamKey};
+use crate::opt::quant::{quantize_per_channel, QuantTensor};
 use crate::runtime::{
     ChainVal, DeviceCache, DeviceTensor, HostTensor, HostTensorI32, Operand, Runtime, SegId,
+    CLASS_F32, CLASS_I8,
 };
 
 use super::memory::{MemCategory, MemoryMeter};
+
+/// Residency/compute format for frozen-base weights (DESIGN.md §15).
+/// `Int8` routes frozen tensors through the `*_q8` fused-dequant segments
+/// with int8+scales device residency; trainable tensors always stay f32.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMode {
+    Off,
+    Int8,
+}
 
 /// Which components are trainable this step (LISA resamples this every K
 /// steps; FT sets everything true; LoRA uses its own path).
@@ -270,15 +282,41 @@ impl Act {
 pub(crate) enum ParamOp<'p> {
     Dev(Rc<DeviceTensor>),
     Host(&'p HostTensor),
+    /// Quantized pair resident on device: `(q, scales)` buffers. Expands
+    /// to two segment operands.
+    DevQ8(Rc<DeviceTensor>, Rc<DeviceTensor>),
+    /// Quantized pair on the host path (uploaded per call, still a
+    /// quarter of the f32 wire bytes).
+    HostQ8(Rc<QuantTensor>),
 }
 
 impl ParamOp<'_> {
-    pub(crate) fn operand(&self) -> Operand<'_> {
+    /// Append this parameter's segment operand(s): one for f32, the
+    /// `(q, s)` pair for quantized tensors — which is why every operand
+    /// list is built by pushing, not by a 1:1 map.
+    pub(crate) fn push_operands<'o>(&'o self, ops: &mut Vec<Operand<'o>>) {
         match self {
-            ParamOp::Dev(b) => Operand::Buf(b),
-            ParamOp::Host(t) => Operand::F32(t),
+            ParamOp::Dev(b) => ops.push(Operand::Buf(b)),
+            ParamOp::Host(t) => ops.push(Operand::F32(t)),
+            ParamOp::DevQ8(q, s) => {
+                ops.push(Operand::Buf(q));
+                ops.push(Operand::Buf(s));
+            }
+            ParamOp::HostQ8(p) => {
+                ops.push(Operand::I8(&p.q));
+                ops.push(Operand::F32(&p.s));
+            }
         }
     }
+}
+
+/// A parameter's cached device residency: one f32 buffer, or the
+/// quantized `(q, scales)` pair — the two classes of the dual-format
+/// [`DeviceCache`] (`CLASS_F32` / `CLASS_I8`).
+#[derive(Clone)]
+pub(crate) enum DevParam {
+    F32(Rc<DeviceTensor>),
+    Q8(Rc<DeviceTensor>, Rc<DeviceTensor>),
 }
 
 /// Interned handles for every segment the engine schedules (resolved once
@@ -308,6 +346,22 @@ pub(crate) struct SegIds {
     pub paged_scatter: SegId,
     pub paged_step: SegId,
     pub paged_logits: SegId,
+    // quantized frozen-base twins (DESIGN.md §15); interned
+    // unconditionally under the same lazy-compile contract, selected only
+    // when the manifest's quant block gates them on
+    pub embed_fwd_q8: SegId,
+    pub block_fwd_q8: SegId,
+    pub block_bwd_x_q8: SegId,
+    pub block_fwd_lora_q8: SegId,
+    pub block_bwd_lora_q8: SegId,
+    pub head_fwd_bwd_x_q8: SegId,
+    pub head_loss_q8: SegId,
+    pub head_logits_q8: SegId,
+    pub prefill_kv_q8: SegId,
+    pub decode_step_q8: SegId,
+    pub decode_logits_q8: SegId,
+    pub paged_step_q8: SegId,
+    pub paged_logits_q8: SegId,
 }
 
 /// The engine: schedules segment executables over the runtime.
@@ -323,7 +377,21 @@ pub struct Engine<'rt> {
     /// (or setting the field) restores the seed's host-roundtrip schedule
     /// — the bit-for-bit baseline for equivalence tests and benches.
     pub device_flow: bool,
-    cache: DeviceCache<ParamKey, Rc<DeviceTensor>>,
+    cache: DeviceCache<ParamKey, DevParam>,
+    /// Host-side quantized bytes, keyed `(key, store-generation)` like the
+    /// device cache; invalidated together with it so a mutated tensor is
+    /// never served stale codes.
+    qhost: BTreeMap<(ParamKey, u64), Rc<QuantTensor>>,
+    /// Frozen-base quantization mode. `LISA_QUANT=0`/`off` pins `Off`
+    /// (the kill switch beats `set_quant`); `LISA_QUANT=int8`/`1` starts
+    /// in `Int8`.
+    quant: QuantMode,
+    quant_pinned: bool,
+    /// Last trainable mask seen: the per-key frozen/trainable oracle the
+    /// operand builders select q8 vs f32 with. Starts all-frozen, which
+    /// is exactly right for eval/decode/LoRA engines that never call
+    /// [`Engine::forward_backward`].
+    train_mask: TrainMask,
     pub(crate) ids: SegIds,
 }
 
@@ -332,6 +400,12 @@ impl<'rt> Engine<'rt> {
         let device_flow = std::env::var("LISA_DEVICE_FLOW")
             .map(|v| v != "0")
             .unwrap_or(true);
+        let (quant, quant_pinned) = match std::env::var("LISA_QUANT").as_deref() {
+            Ok("0") | Ok("off") => (QuantMode::Off, true),
+            Ok("int8") | Ok("1") => (QuantMode::Int8, false),
+            _ => (QuantMode::Off, false),
+        };
+        let n_layers = rt.manifest.n_layers;
         Engine {
             rt,
             meter: MemoryMeter::new(),
@@ -340,6 +414,10 @@ impl<'rt> Engine<'rt> {
             bwd_skipped: 0,
             device_flow,
             cache: DeviceCache::new(),
+            qhost: BTreeMap::new(),
+            quant,
+            quant_pinned,
+            train_mask: TrainMask::none(n_layers),
             ids: SegIds {
                 embed_fwd: rt.seg_id("embed_fwd"),
                 embed_bwd: rt.seg_id("embed_bwd"),
@@ -359,21 +437,80 @@ impl<'rt> Engine<'rt> {
                 paged_scatter: rt.seg_id("paged_scatter"),
                 paged_step: rt.seg_id("paged_step"),
                 paged_logits: rt.seg_id("paged_logits"),
+                embed_fwd_q8: rt.seg_id("embed_fwd_q8"),
+                block_fwd_q8: rt.seg_id("block_fwd_q8"),
+                block_bwd_x_q8: rt.seg_id("block_bwd_x_q8"),
+                block_fwd_lora_q8: rt.seg_id("block_fwd_lora_q8"),
+                block_bwd_lora_q8: rt.seg_id("block_bwd_lora_q8"),
+                head_fwd_bwd_x_q8: rt.seg_id("head_fwd_bwd_x_q8"),
+                head_loss_q8: rt.seg_id("head_loss_q8"),
+                head_logits_q8: rt.seg_id("head_logits_q8"),
+                prefill_kv_q8: rt.seg_id("prefill_kv_q8"),
+                decode_step_q8: rt.seg_id("decode_step_q8"),
+                decode_logits_q8: rt.seg_id("decode_logits_q8"),
+                paged_step_q8: rt.seg_id("paged_step_q8"),
+                paged_logits_q8: rt.seg_id("paged_logits_q8"),
             },
         }
     }
 
+    // -- quantization ------------------------------------------------------
+
+    /// Request a quantization mode (`--quant`). A `LISA_QUANT=0`/`off`
+    /// pin wins: the env kill switch cannot be overridden from code.
+    pub fn set_quant(&mut self, mode: QuantMode) {
+        if !self.quant_pinned {
+            self.quant = mode;
+        }
+    }
+
+    pub fn quant(&self) -> QuantMode {
+        self.quant
+    }
+
+    /// Record the trainable mask the q8/f32 per-key selection reads.
+    /// [`Engine::forward_backward`] does this on every call; strategies
+    /// that resample between steps don't need to call it directly.
+    pub fn set_train_mask(&mut self, mask: &TrainMask) {
+        self.train_mask = mask.clone();
+    }
+
+    /// Quantized segments are in play at all (mode on + artifacts carry
+    /// the core q8 set for this backend).
+    pub(crate) fn q8_avail(&self) -> bool {
+        self.quant == QuantMode::Int8
+            && self.rt.manifest.supports_quant(&self.rt.backend)
+    }
+
+    pub(crate) fn q8_embed(&self) -> bool {
+        self.q8_avail() && !self.train_mask.embed
+    }
+
+    pub(crate) fn q8_head(&self) -> bool {
+        self.q8_avail() && !self.train_mask.head
+    }
+
+    pub(crate) fn q8_block(&self, l: usize) -> bool {
+        self.q8_avail() && !self.train_mask.blocks.get(l).copied().unwrap_or(false)
+    }
+
     // -- device cache ------------------------------------------------------
 
-    /// Drop cached device buffers for the keys a strategy mutated.
+    /// Drop cached device buffers for the keys a strategy mutated. The
+    /// host-side quantized codes go with them: stale int8 of a moved
+    /// tensor is as wrong as a stale device buffer.
     pub fn invalidate(&mut self, touched: &Touched) {
         match touched {
             Touched::None => {}
-            Touched::All => self.cache.invalidate_all(),
+            Touched::All => {
+                self.cache.invalidate_all();
+                self.qhost.clear();
+            }
             Touched::Keys(keys) => {
                 for k in keys {
                     self.cache.invalidate(k);
                 }
+                self.qhost.retain(|(k, _), _| !keys.contains(k));
             }
         }
         self.sync_device_meter();
@@ -382,6 +519,7 @@ impl<'rt> Engine<'rt> {
     /// Drop every cached device buffer (checkpoint restore, store swap).
     pub fn invalidate_all(&mut self) {
         self.cache.invalidate_all();
+        self.qhost.clear();
         self.sync_device_meter();
     }
 
@@ -395,6 +533,9 @@ impl<'rt> Engine<'rt> {
     }
 
     /// Cached device buffer for one parameter tensor (uploads on miss).
+    /// Asking for f32 evicts a quantized residency of the same tensor and
+    /// vice versa — the cache's class swap, which is how a LISA resample
+    /// flips a tensor's format with exactly one upload.
     pub(crate) fn param_buf(
         &mut self,
         key: ParamKey,
@@ -402,10 +543,58 @@ impl<'rt> Engine<'rt> {
         t: &HostTensor,
     ) -> Result<Rc<DeviceTensor>> {
         let rt = self.rt;
-        self.cache.get_or_upload(key, src, || {
+        let v = self.cache.get_or_upload_class(key, src, CLASS_F32, || {
             let dt = DeviceTensor::from_host(&rt.client, t)?;
             let bytes = dt.bytes() as u64;
-            Ok((Rc::new(dt), bytes))
+            Ok((DevParam::F32(Rc::new(dt)), bytes))
+        })?;
+        match v {
+            DevParam::F32(b) => Ok(b),
+            DevParam::Q8(..) => unreachable!("CLASS_F32 entry holds f32"),
+        }
+    }
+
+    /// Cached device residency for one *quantized* parameter: the
+    /// `(q, scales)` buffer pair under `CLASS_I8`.
+    pub(crate) fn param_buf_q8(
+        &mut self,
+        key: ParamKey,
+        src: u64,
+        qt: &QuantTensor,
+    ) -> Result<(Rc<DeviceTensor>, Rc<DeviceTensor>)> {
+        let rt = self.rt;
+        let v = self.cache.get_or_upload_class(key, src, CLASS_I8, || {
+            let q = DeviceTensor::from_host_i8(&rt.client, &qt.q)?;
+            let s = DeviceTensor::from_host(&rt.client, &qt.s)?;
+            let bytes = (q.bytes() + s.bytes()) as u64;
+            Ok((DevParam::Q8(Rc::new(q), Rc::new(s)), bytes))
+        })?;
+        match v {
+            DevParam::Q8(q, s) => Ok((q, s)),
+            DevParam::F32(_) => unreachable!("CLASS_I8 entry holds q8"),
+        }
+    }
+
+    /// Host-side quantized codes for one tensor, memoized per
+    /// `(key, store-generation)` so the absmax scan runs once per freeze
+    /// period, not once per step.
+    fn qhost(&mut self, key: ParamKey, src: u64, t: &HostTensor) -> Result<Rc<QuantTensor>> {
+        if let Some(q) = self.qhost.get(&(key, src)) {
+            return Ok(q.clone());
+        }
+        let qt = Rc::new(quantize_per_channel(t)?);
+        self.qhost.insert((key, src), qt.clone());
+        Ok(qt)
+    }
+
+    /// One frozen parameter as a q8 [`ParamOp`] for the current flow mode.
+    fn q8_op<'p>(&mut self, key: ParamKey, src: u64, t: &HostTensor) -> Result<ParamOp<'p>> {
+        let qt = self.qhost(key, src, t)?;
+        Ok(if self.device_flow {
+            let (q, s) = self.param_buf_q8(key, src, &qt)?;
+            ParamOp::DevQ8(q, s)
+        } else {
+            ParamOp::HostQ8(qt)
         })
     }
 
@@ -472,11 +661,21 @@ impl<'rt> Engine<'rt> {
     // builds its parameter operands through these, so the device/host flow
     // decision is made in exactly one place per tensor group.
 
-    /// `[emb, pos]` operands for `embed_fwd` / `decode_step`.
+    /// `[emb, pos]` operands for `embed_fwd` / `decode_step` (or their q8
+    /// twins when the embedding is frozen and quantization is on — the
+    /// caller picks the segment with the same [`Engine::q8_embed`]
+    /// predicate this builder uses).
     pub(crate) fn embed_ops<'p>(
         &mut self,
         params: &'p ModelParams,
     ) -> Result<[ParamOp<'p>; 2]> {
+        if self.q8_embed() {
+            let src = params.store_id();
+            let emb = self.q8_op(ParamKey::Emb, src, &params.emb)?;
+            let pos = self.q8_op(ParamKey::Pos, src, &params.pos)?;
+            self.sync_device_meter();
+            return Ok([emb, pos]);
+        }
         Ok(if self.device_flow {
             let (emb, pos) = self.embed_bufs(params)?;
             [ParamOp::Dev(emb), ParamOp::Dev(pos)]
@@ -485,11 +684,24 @@ impl<'rt> Engine<'rt> {
         })
     }
 
-    /// `[gf, wh]` operands for the head segments.
+    /// `[gf, wh]` operands for the head segments. Under q8 the norm gain
+    /// `gf` stays f32 (1-D tensors never quantize) and `wh` becomes the
+    /// `(q, s)` pair.
     pub(crate) fn head_ops<'p>(
         &mut self,
         params: &'p ModelParams,
     ) -> Result<[ParamOp<'p>; 2]> {
+        if self.q8_head() {
+            let src = params.store_id();
+            let gf = if self.device_flow {
+                ParamOp::Dev(self.param_buf(ParamKey::HeadNorm, src, &params.gf)?)
+            } else {
+                ParamOp::Host(&params.gf)
+            };
+            let wh = self.q8_op(ParamKey::HeadProj, src, &params.wh)?;
+            self.sync_device_meter();
+            return Ok([gf, wh]);
+        }
         Ok(if self.device_flow {
             let (gf, wh) = self.head_bufs(params)?;
             [ParamOp::Dev(gf), ParamOp::Dev(wh)]
@@ -498,12 +710,30 @@ impl<'rt> Engine<'rt> {
         })
     }
 
-    /// Block `l`'s tensors in ABI order.
+    /// Block `l`'s tensors in ABI order. Under q8 (frozen block, quant
+    /// on) every 2-D weight becomes its `(q, s)` pair in place while the
+    /// norm gains stay f32 — exactly the 14-operand q8 block ABI.
     pub(crate) fn block_ops<'p>(
         &mut self,
         params: &'p ModelParams,
         l: usize,
     ) -> Result<Vec<ParamOp<'p>>> {
+        if self.q8_block(l) {
+            let src = params.store_id();
+            let mut out = Vec::with_capacity(params.blocks[l].len());
+            for (t, x) in params.blocks[l].iter().enumerate() {
+                let key = ParamKey::Block(l, t);
+                if x.shape.len() == 2 {
+                    out.push(self.q8_op(key, src, x)?);
+                } else if self.device_flow {
+                    out.push(ParamOp::Dev(self.param_buf(key, src, x)?));
+                } else {
+                    out.push(ParamOp::Host(x));
+                }
+            }
+            self.sync_device_meter();
+            return Ok(out);
+        }
         Ok(if self.device_flow {
             self.block_bufs(params, l)?.into_iter().map(ParamOp::Dev).collect()
         } else {
@@ -573,18 +803,26 @@ impl<'rt> Engine<'rt> {
         tokens: &HostTensorI32,
     ) -> Result<Vec<Act>> {
         let hs = self.h_shape();
+        let eid = if self.q8_embed() { self.ids.embed_fwd_q8 } else { self.ids.embed_fwd };
         let ep = self.embed_ops(params)?;
-        let ops = [Operand::I32(tokens), ep[0].operand(), ep[1].operand()];
-        let mut h = self.run_chain_act(self.ids.embed_fwd, &ops, &hs)?;
+        let mut ops = vec![Operand::I32(tokens)];
+        for p in &ep {
+            p.push_operands(&mut ops);
+        }
+        let mut h = self.run_chain_act(eid, &ops, &hs)?;
         let mut stash = Vec::with_capacity(params.blocks.len() + 1);
         let mut act_bytes = 0u64;
         for l in 0..params.blocks.len() {
             act_bytes += h.bytes() as u64;
             self.meter.set(MemCategory::Activations, act_bytes);
+            let fid = if self.q8_block(l) { self.ids.block_fwd_q8 } else { self.ids.block_fwd };
             let bo = self.block_ops(params, l)?;
             let mut ops = vec![h.operand()];
-            ops.extend(bo.iter().map(ParamOp::operand));
-            let h_next = self.run_chain_act(self.ids.block_fwd, &ops, &hs)?;
+            for p in &bo {
+                p.push_operands(&mut ops);
+            }
+            let h_next = self.run_chain_act(fid, &ops, &hs)?;
+            drop(ops);
             stash.push(h);
             h = h_next;
         }
@@ -604,21 +842,28 @@ impl<'rt> Engine<'rt> {
         let rt = self.rt;
         let m = &rt.manifest;
         assert_eq!(mask.blocks.len(), m.n_layers, "mask arity");
+        self.set_train_mask(mask);
         let hs = self.h_shape();
         self.meter.set(MemCategory::Params, params.bytes() as u64);
 
         let mut stash = self.forward_stash(params, &batch.tokens)?;
         let h_last = stash.pop().expect("stash has final h");
 
-        // Head: fused loss + grads (head trainable) or loss + dh only.
-        let head_id = if mask.head { self.ids.head_fwd_bwd } else { self.ids.head_fwd_bwd_x };
+        // Head: fused loss + grads (head trainable) or loss + dh only
+        // (through the q8 twin when the frozen head is quantized).
+        let head_id = if mask.head {
+            self.ids.head_fwd_bwd
+        } else if self.q8_head() {
+            self.ids.head_fwd_bwd_x_q8
+        } else {
+            self.ids.head_fwd_bwd_x
+        };
         let ho = self.head_ops(params)?;
-        let ops = [
-            h_last.operand(),
-            ho[0].operand(),
-            ho[1].operand(),
-            Operand::I32(&batch.targets),
-        ];
+        let mut ops = vec![h_last.operand()];
+        for p in &ho {
+            p.push_operands(&mut ops);
+        }
+        ops.push(Operand::I32(&batch.targets));
         let outs = self.rt.run_id(head_id, &ops)?;
         let mut it = outs.into_iter();
         let loss =
@@ -659,9 +904,13 @@ impl<'rt> Engine<'rt> {
             if mask.blocks[l] {
                 self.bwd_full_calls += 1;
                 let outs = {
+                    // trainable: always f32 (block_ops returns f32 here
+                    // by construction — the mask says not frozen)
                     let bo = self.block_ops(params, l)?;
                     let mut ops = vec![dh.operand(), stash[l].operand()];
-                    ops.extend(bo.iter().map(ParamOp::operand));
+                    for p in &bo {
+                        p.push_operands(&mut ops);
+                    }
                     self.rt.run_id(self.ids.block_bwd_full, &ops)?
                 };
                 let mut it = outs.into_iter();
@@ -680,10 +929,17 @@ impl<'rt> Engine<'rt> {
                 // stays device-resident under chainable artifacts — the
                 // LISA frozen-majority walk never touches the host.
                 dh = {
+                    let xid = if self.q8_block(l) {
+                        self.ids.block_bwd_x_q8
+                    } else {
+                        self.ids.block_bwd_x
+                    };
                     let bo = self.block_ops(params, l)?;
                     let mut ops = vec![dh.operand(), stash[l].operand()];
-                    ops.extend(bo.iter().map(ParamOp::operand));
-                    self.run_chain_act(self.ids.block_bwd_x, &ops, &hs)?
+                    for p in &bo {
+                        p.push_operands(&mut ops);
+                    }
+                    self.run_chain_act(xid, &ops, &hs)?
                 };
             }
         }
@@ -704,14 +960,14 @@ impl<'rt> Engine<'rt> {
     /// Eval-only forward loss (no gradients, no stash retention).
     pub fn forward_loss(&mut self, params: &ModelParams, batch: &Batch) -> Result<f32> {
         let h = self.forward_chain(params, &batch.tokens, self.rt.manifest.n_layers)?;
+        let lid = if self.q8_head() { self.ids.head_loss_q8 } else { self.ids.head_loss };
         let ho = self.head_ops(params)?;
-        let ops = [
-            h.operand(),
-            ho[0].operand(),
-            ho[1].operand(),
-            Operand::I32(&batch.targets),
-        ];
-        self.run_scalar(self.ids.head_loss, &ops)
+        let mut ops = vec![h.operand()];
+        for p in &ho {
+            p.push_operands(&mut ops);
+        }
+        ops.push(Operand::I32(&batch.targets));
+        self.run_scalar(lid, &ops)
     }
 
     /// Chain embed + the first `n_blocks` blocks (no stash).
@@ -722,15 +978,22 @@ impl<'rt> Engine<'rt> {
         n_blocks: usize,
     ) -> Result<Act> {
         let hs = self.h_shape();
+        let eid = if self.q8_embed() { self.ids.embed_fwd_q8 } else { self.ids.embed_fwd };
         let ep = self.embed_ops(params)?;
-        let ops = [Operand::I32(tokens), ep[0].operand(), ep[1].operand()];
-        let mut h = self.run_chain_act(self.ids.embed_fwd, &ops, &hs)?;
+        let mut ops = vec![Operand::I32(tokens)];
+        for p in &ep {
+            p.push_operands(&mut ops);
+        }
+        let mut h = self.run_chain_act(eid, &ops, &hs)?;
         for l in 0..n_blocks.min(params.blocks.len()) {
             h = {
+                let fid = if self.q8_block(l) { self.ids.block_fwd_q8 } else { self.ids.block_fwd };
                 let bo = self.block_ops(params, l)?;
                 let mut ops = vec![h.operand()];
-                ops.extend(bo.iter().map(ParamOp::operand));
-                self.run_chain_act(self.ids.block_fwd, &ops, &hs)?
+                for p in &bo {
+                    p.push_operands(&mut ops);
+                }
+                self.run_chain_act(fid, &ops, &hs)?
             };
         }
         Ok(h)
@@ -761,9 +1024,13 @@ impl<'rt> Engine<'rt> {
         assert!(n_blocks <= m.n_layers);
         let h = self.forward_chain(params, tokens, n_blocks)?;
         let shape = [m.batch, m.seq, m.vocab];
+        let lid = if self.q8_head() { self.ids.head_logits_q8 } else { self.ids.head_logits };
         let ho = self.head_ops(params)?;
-        let ops = [h.operand(), ho[0].operand(), ho[1].operand()];
-        self.run_chain_act(self.ids.head_logits, &ops, &shape)?.into_host()
+        let mut ops = vec![h.operand()];
+        for p in &ho {
+            p.push_operands(&mut ops);
+        }
+        self.run_chain_act(lid, &ops, &shape)?.into_host()
     }
 
     pub fn logits(

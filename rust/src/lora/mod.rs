@@ -157,37 +157,48 @@ pub fn forward_backward_lora(
     let hs = vec![m.batch, m.seq, m.d_model];
     eng.meter.set(MemCategory::Params, params.bytes() as u64);
     eng.meter.set(MemCategory::LoraAdapters, lora.bytes());
-    // Forward, stashing block inputs.
+    // Forward, stashing block inputs. The whole base is frozen, so with
+    // quantization on every base group routes through its q8 twin.
+    let eid = if eng.q8_embed() { ids.embed_fwd_q8 } else { ids.embed_fwd };
     let ep = eng.embed_ops(params)?;
-    let ops = [Operand::I32(&batch.tokens), ep[0].operand(), ep[1].operand()];
-    let mut h = eng.run_chain_act(ids.embed_fwd, &ops, &hs)?;
+    let mut ops = vec![Operand::I32(&batch.tokens)];
+    for p in &ep {
+        p.push_operands(&mut ops);
+    }
+    let mut h = eng.run_chain_act(eid, &ops, &hs)?;
+    drop(ops);
     let mut stash = Vec::with_capacity(m.n_layers);
     let mut act = 0u64;
     for l in 0..m.n_layers {
         act += h.bytes() as u64;
         eng.meter.set(MemCategory::Activations, act);
         let h_next = {
+            let fid = if eng.q8_block(l) { ids.block_fwd_lora_q8 } else { ids.block_fwd_lora };
             let base = eng.block_ops(params, l)?;
             let adap = eng.adapter_ops(lora, l)?;
             let mut ops = vec![h.operand()];
-            ops.extend(base.iter().map(ParamOp::operand));
-            ops.extend(adap.iter().map(ParamOp::operand));
-            eng.run_chain_act(ids.block_fwd_lora, &ops, &hs)?
+            for p in &base {
+                p.push_operands(&mut ops);
+            }
+            for p in &adap {
+                p.push_operands(&mut ops);
+            }
+            eng.run_chain_act(fid, &ops, &hs)?
         };
         stash.push(h);
         h = h_next;
     }
 
     // Frozen head: loss + dh only.
+    let hid = if eng.q8_head() { ids.head_fwd_bwd_x_q8 } else { ids.head_fwd_bwd_x };
     let ho = eng.head_ops(params)?;
     let outs = {
-        let ops = [
-            h.operand(),
-            ho[0].operand(),
-            ho[1].operand(),
-            Operand::I32(&batch.targets),
-        ];
-        rt.run_id(ids.head_fwd_bwd_x, &ops)?
+        let mut ops = vec![h.operand()];
+        for p in &ho {
+            p.push_operands(&mut ops);
+        }
+        ops.push(Operand::I32(&batch.targets));
+        rt.run_id(hid, &ops)?
     };
     let mut it = outs.into_iter();
     let loss = HostTensor::scalar_from_literal(&it.next().context("head: missing loss")?)?;
@@ -202,12 +213,17 @@ pub fn forward_backward_lora(
     let mut grad_bytes = 0u64;
     for l in (0..m.n_layers).rev() {
         let outs = {
+            let bid = if eng.q8_block(l) { ids.block_bwd_lora_q8 } else { ids.block_bwd_lora };
             let base = eng.block_ops(params, l)?;
             let adap = eng.adapter_ops(lora, l)?;
             let mut ops = vec![dh.operand(), stash[l].operand()];
-            ops.extend(base.iter().map(ParamOp::operand));
-            ops.extend(adap.iter().map(ParamOp::operand));
-            rt.run_id(ids.block_bwd_lora, &ops)?
+            for p in &base {
+                p.push_operands(&mut ops);
+            }
+            for p in &adap {
+                p.push_operands(&mut ops);
+            }
+            rt.run_id(bid, &ops)?
         };
         let mut it = outs.into_iter();
         let new_dh_lit = it.next().context("bwd_lora: missing dh")?;

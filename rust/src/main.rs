@@ -46,6 +46,7 @@ const SPEC: &[(&str, &str, &str)] = &[
     ("galore-scale", "1.0", "GaLore update scale α"),
     ("grad-accum", "1", "microbatch accumulation"),
     ("device-flow", "", "train: device-resident params/activations (on|off; default on, or LISA_DEVICE_FLOW)"),
+    ("quant", "", "int8 frozen-base weights (int8|off; default off, or LISA_QUANT)"),
     ("save-every", "0", "checkpoint full training state every N steps (0 = final save only)"),
     ("ckpt", "", "training-state checkpoint path (default <results>/train-<method>.state)"),
     ("resume", "", "resume training from a --save-every checkpoint"),
@@ -109,6 +110,22 @@ fn parse_sampler(a: &Args) -> Result<lisa::engine::SamplerSpec> {
         a.get_usize("top-k")?,
         a.get_f64("top-p")? as f32,
     )
+}
+
+/// `--quant` resolves to the `LISA_QUANT` environment variable before any
+/// engine is constructed, so every entry point (train, serve, exp, memory)
+/// picks it up through the one code path engines already read. An explicit
+/// `--quant off` pins pure-f32 (the engine refuses later `set_quant` calls),
+/// matching the env kill-switch semantics.
+fn apply_quant_flag(a: &Args) -> Result<()> {
+    if let Some(v) = a.get_opt("quant") {
+        match v.as_str() {
+            "int8" | "1" => std::env::set_var("LISA_QUANT", "int8"),
+            "off" | "0" => std::env::set_var("LISA_QUANT", "0"),
+            other => bail!("--quant expects int8|off (got '{other}')"),
+        }
+    }
+    Ok(())
 }
 
 fn ctx_from(a: &Args) -> Result<Ctx> {
@@ -289,6 +306,7 @@ fn real_main() -> Result<()> {
         exp::list();
         return Ok(());
     }
+    apply_quant_flag(&a)?;
     match a.positional[0].as_str() {
         "train" => cmd_train(&a),
         "serve" => cmd_serve(&a),
@@ -333,6 +351,21 @@ fn real_main() -> Result<()> {
                 } else {
                     "no cached decode for this backend — serving falls back to \
                      legacy full-forward"
+                }
+            );
+            println!(
+                "quant: {}",
+                if m.supports_quant(&rt.backend) {
+                    let mut caps = vec!["train"];
+                    if m.supports_quant_decode(&rt.backend) {
+                        caps.push("decode");
+                    }
+                    if m.supports_quant_paged(&rt.backend) {
+                        caps.push("paged");
+                    }
+                    format!("int8-chan frozen-base available ({})", caps.join("+"))
+                } else {
+                    "f32 only (no q8 segment twins exported)".into()
                 }
             );
             println!("segments ({}):", m.segments.len());

@@ -3,9 +3,11 @@
 pub mod adamw;
 pub mod galore;
 pub mod linalg;
+pub mod quant;
 
 pub use adamw::{AdamHp, AdamW, StatePolicy};
 pub use galore::{Galore, GaloreHp};
+pub use quant::{dequantize, quantize_per_channel, quantized_bytes, QuantTensor};
 
 use crate::engine::Grads;
 use crate::model::{ModelParams, ParamKey};

@@ -1,0 +1,182 @@
+//! Per-output-channel int8 weight quantization (DESIGN.md §15).
+//!
+//! Frozen-base weights are stored and uploaded as `(i8 q, f32 scales)`
+//! pairs: `scale[c] = absmax(w[:, c]) / 127`, `q = clip(rhe(w / scale),
+//! -127, 127)` with round-half-even — bit-for-bit the convention of
+//! `python/compile/kernels/quant.py`, which the q8 Pallas segments fuse
+//! the dequant against. Only 2-D tensors quantize; 1-D norm gains stay
+//! f32 at the call sites. Checkpoints NEVER contain quantized bytes —
+//! quantization is a device-residency format, not a storage format.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::tensor::{HostTensor, HostTensorI8};
+
+/// A quantized host-side weight: int8 values + per-output-channel f32
+/// scales over the last axis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantTensor {
+    pub q: HostTensorI8,
+    pub s: HostTensor,
+}
+
+impl QuantTensor {
+    /// Host bytes of the pair (what a device upload of both costs).
+    pub fn bytes(&self) -> usize {
+        self.q.bytes() + self.s.bytes()
+    }
+}
+
+/// Device/upload bytes for a 2-D `[rows, cols]` tensor held as int8 +
+/// per-channel scales: `rows*cols` q bytes + `cols*4` scale bytes. The
+/// f32 twin costs `rows*cols*4`, so the shrink ratio is `4r / (r + 4)` —
+/// ≥ 3.5x for every r ≥ 28, i.e. any real weight matrix.
+pub fn quantized_bytes(shape: &[usize]) -> usize {
+    assert_eq!(shape.len(), 2, "only 2-D tensors quantize");
+    shape[0] * shape[1] + shape[1] * 4
+}
+
+/// Quantize a 2-D f32 tensor to int8 with per-output-channel absmax
+/// scales. Errors on non-2-D shapes and on NaN/Inf (a corrupt weight
+/// must fail loudly, not round to garbage).
+pub fn quantize_per_channel(w: &HostTensor) -> Result<QuantTensor> {
+    if w.shape.len() != 2 {
+        bail!("only 2-D tensors quantize (got shape {:?})", w.shape);
+    }
+    let (rows, cols) = (w.shape[0], w.shape[1]);
+    if !w.data.iter().all(|x| x.is_finite()) {
+        bail!("quantize_per_channel: NaN/Inf in weight tensor");
+    }
+    let mut s = vec![0.0f32; cols];
+    for r in 0..rows {
+        let row = &w.data[r * cols..(r + 1) * cols];
+        for (c, x) in row.iter().enumerate() {
+            let a = x.abs();
+            if a > s[c] {
+                s[c] = a;
+            }
+        }
+    }
+    for v in s.iter_mut() {
+        *v /= 127.0;
+    }
+    let mut q = vec![0i8; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            let sc = s[c];
+            // absmax == 0 means the whole channel is zero: scale 0, q 0.
+            if sc > 0.0 {
+                let v = (w.data[r * cols + c] / sc).round_ties_even();
+                q[r * cols + c] = crate::util::cast::sat_i8(v);
+            }
+        }
+    }
+    Ok(QuantTensor {
+        q: HostTensorI8::from_vec(&w.shape, q),
+        s: HostTensor::from_vec(&[cols], s),
+    })
+}
+
+/// Inverse of [`quantize_per_channel`] (reference/tests; the hot path
+/// never materializes this — dequant is fused into the q8 segments).
+pub fn dequantize(t: &QuantTensor) -> HostTensor {
+    let (rows, cols) = (t.q.shape[0], t.q.shape[1]);
+    let mut w = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            w[r * cols + c] = t.q.data[r * cols + c] as f32 * t.s.data[c];
+        }
+    }
+    HostTensor::from_vec(&t.q.shape, w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], data: Vec<f32>) -> HostTensor {
+        HostTensor::from_vec(shape, data)
+    }
+
+    #[test]
+    fn scale_is_per_output_channel_absmax_over_127() {
+        let w = t(&[2, 3], vec![1.0, -2.0, 0.5, -4.0, 1.0, 0.25]);
+        let qt = quantize_per_channel(&w).unwrap();
+        assert_eq!(qt.s.shape, vec![3]);
+        for (c, want) in [4.0f32, 2.0, 0.5].iter().enumerate() {
+            assert!((qt.s.data[c] - want / 127.0).abs() < 1e-7);
+        }
+        // the absmax element of each channel lands exactly on ±127
+        assert_eq!(qt.q.data[3], -127); // w[1,0] = -4.0
+        assert_eq!(qt.q.data[1], -127); // w[0,1] = -2.0
+    }
+
+    #[test]
+    fn round_trip_error_is_bounded_by_half_scale() {
+        // deterministic pseudo-random weights, no RNG dep
+        let mut v = Vec::with_capacity(64 * 16);
+        let mut x = 0x9e3779b97f4a7c15u64;
+        for _ in 0..64 * 16 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            v.push(((x >> 33) as i32 % 2000) as f32 / 1000.0);
+        }
+        let w = t(&[64, 16], v);
+        let qt = quantize_per_channel(&w).unwrap();
+        let back = dequantize(&qt);
+        for r in 0..64 {
+            for c in 0..16 {
+                let err = (w.data[r * 16 + c] - back.data[r * 16 + c]).abs();
+                assert!(
+                    err <= qt.s.data[c] * 0.5 + 1e-6,
+                    "err {err} > half-scale {} at [{r},{c}]",
+                    qt.s.data[c] * 0.5
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rounding_is_half_even_matching_the_exporter() {
+        // scale = 1/127 per channel via absmax 1.0, so w*127 is the
+        // pre-round value: 63.5 -> 64, 62.5 -> 62 (banker's rounding)
+        let w = t(&[3, 2], vec![63.5 / 127.0, 62.5 / 127.0, -63.5 / 127.0,
+                                -62.5 / 127.0, 1.0, 1.0]);
+        let qt = quantize_per_channel(&w).unwrap();
+        assert_eq!(&qt.q.data[..4], &[64, 62, -64, -62]);
+    }
+
+    #[test]
+    fn zero_channel_gets_zero_scale_and_zero_codes() {
+        let w = t(&[2, 2], vec![0.0, 3.0, 0.0, -1.0]);
+        let qt = quantize_per_channel(&w).unwrap();
+        assert_eq!(qt.s.data[0], 0.0);
+        assert_eq!((qt.q.data[0], qt.q.data[2]), (0, 0));
+        let back = dequantize(&qt);
+        assert_eq!((back.data[0], back.data[2]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn nan_and_inf_are_rejected_not_rounded() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let w = t(&[1, 2], vec![1.0, bad]);
+            let err = quantize_per_channel(&w).unwrap_err();
+            assert!(err.to_string().contains("NaN/Inf"), "{err}");
+        }
+    }
+
+    #[test]
+    fn non_2d_is_rejected() {
+        let err = quantize_per_channel(&t(&[4], vec![1.0; 4])).unwrap_err();
+        assert!(err.to_string().contains("only 2-D"), "{err}");
+    }
+
+    #[test]
+    fn quantized_bytes_matches_the_pair_and_shrinks_3_5x() {
+        let w = t(&[128, 64], vec![0.5; 128 * 64]);
+        let qt = quantize_per_channel(&w).unwrap();
+        assert_eq!(qt.bytes(), quantized_bytes(&[128, 64]));
+        let f32_bytes = 128 * 64 * 4;
+        let ratio = f32_bytes as f64 / quantized_bytes(&[128, 64]) as f64;
+        assert!(ratio >= 3.5, "ratio {ratio}");
+    }
+}

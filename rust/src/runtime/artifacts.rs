@@ -18,6 +18,7 @@ use crate::util::json::Json;
 pub enum DType {
     F32,
     I32,
+    I8,
 }
 
 impl DType {
@@ -25,7 +26,17 @@ impl DType {
         match s {
             "float32" => Ok(DType::F32),
             "int32" => Ok(DType::I32),
+            "int8" => Ok(DType::I8),
             other => bail!("unsupported dtype in manifest: {other}"),
+        }
+    }
+
+    /// Bytes per element — what upload accounting and the memory meter
+    /// count for a tensor of this dtype.
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
         }
     }
 }
@@ -111,6 +122,11 @@ pub struct Manifest {
     pub page_t: usize,
     pub pages_per_row: usize,
     pub page_n: usize,
+    /// Quantized-base mode the exporter stamped (DESIGN.md §15): the
+    /// `"quant": {"mode": ...}` block's mode string, empty when absent —
+    /// every pre-quant manifest — meaning the dir carries no `*_q8`
+    /// segments and the engine pins pure f32.
+    pub quant_mode: String,
     /// key = "<segment>.<backend>"
     pub segments: BTreeMap<String, SegmentSig>,
 }
@@ -127,6 +143,31 @@ pub const PAGED_SEGMENTS: [&str; 3] = ["paged_scatter", "paged_step", "paged_log
 
 /// Newest decode-ABI version the engine implements.
 pub const PAGED_ABI: u64 = 2;
+
+/// The quantized-base mode string the engine implements (DESIGN.md §15):
+/// per-output-channel int8 with dequant fused into the segment matmuls.
+pub const QUANT_MODE: &str = "int8-chan";
+
+/// Core quantized segment set: the training/eval twins every quant-capable
+/// dir must carry (the backward twins that emit weight gradients have no
+/// q8 variant by construction — trainable tensors are always f32).
+pub const QUANT_SEGMENTS: [&str; 8] = [
+    "embed_fwd_q8",
+    "block_fwd_q8",
+    "block_bwd_x_q8",
+    "block_fwd_lora_q8",
+    "block_bwd_lora_q8",
+    "head_fwd_bwd_x_q8",
+    "head_loss_q8",
+    "head_logits_q8",
+];
+
+/// Quantized twins of the packed-decode (ABI v1) serving segments.
+pub const QUANT_DECODE_SEGMENTS: [&str; 3] =
+    ["prefill_kv_q8", "decode_step_q8", "decode_logits_q8"];
+
+/// Quantized twins of the paged (ABI v2) serving segments.
+pub const QUANT_PAGED_SEGMENTS: [&str; 2] = ["paged_step_q8", "paged_logits_q8"];
 
 /// One field of the optional `"paged"` geometry object (ABI v2); absent —
 /// every v0/v1 manifest — reads as 0, which `supports_paged` rejects.
@@ -242,6 +283,12 @@ impl Manifest {
             page_t: paged_us(&j, "page_t"),
             pages_per_row: paged_us(&j, "pages_per_row"),
             page_n: paged_us(&j, "page_n"),
+            quant_mode: j
+                .get("quant")
+                .and_then(|q| q.get("mode"))
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
             segments,
         })
     }
@@ -270,6 +317,39 @@ impl Manifest {
             && self.page_n > 0
             && self.supports_decode(backend)
             && PAGED_SEGMENTS
+                .iter()
+                .all(|n| self.segments.contains_key(&format!("{n}.{backend}")))
+    }
+
+    /// Whether this artifact dir carries the quantized-base core set
+    /// (DESIGN.md §15): the stamped mode must be exactly the one the
+    /// engine implements AND every core q8 segment must be present for
+    /// `backend` — same completeness rule as the decode ABI, so a partial
+    /// export (or an unknown future mode, e.g. int4) reads as "f32 only"
+    /// and legacy dirs load unchanged.
+    pub fn supports_quant(&self, backend: &str) -> bool {
+        self.quant_mode == QUANT_MODE
+            && QUANT_SEGMENTS
+                .iter()
+                .all(|n| self.segments.contains_key(&format!("{n}.{backend}")))
+    }
+
+    /// Whether the packed-decode (v1) serving schedule can run quantized:
+    /// the core set plus every decode twin.
+    pub fn supports_quant_decode(&self, backend: &str) -> bool {
+        self.supports_quant(backend)
+            && self.supports_decode(backend)
+            && QUANT_DECODE_SEGMENTS
+                .iter()
+                .all(|n| self.segments.contains_key(&format!("{n}.{backend}")))
+    }
+
+    /// Whether the paged (v2) serving schedule can run quantized: the
+    /// quantized decode set plus every paged twin.
+    pub fn supports_quant_paged(&self, backend: &str) -> bool {
+        self.supports_quant_decode(backend)
+            && self.supports_paged(backend)
+            && QUANT_PAGED_SEGMENTS
                 .iter()
                 .all(|n| self.segments.contains_key(&format!("{n}.{backend}")))
     }
@@ -450,5 +530,92 @@ mod tests {
     fn rejects_bad_dtype() {
         let j = Json::parse(r#"{"shape": [1], "dtype": "float64"}"#).unwrap();
         assert!(TensorSig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn parses_int8_dtype_and_sizes() {
+        let j = Json::parse(r#"{"shape": [4, 2], "dtype": "int8"}"#).unwrap();
+        let sig = TensorSig::from_json(&j).unwrap();
+        assert_eq!(sig.dtype, DType::I8);
+        assert_eq!(sig.dtype.size_bytes(), 1);
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::I32.size_bytes(), 4);
+    }
+
+    #[test]
+    fn quant_block_gates_the_q8_path() {
+        let dir = std::env::temp_dir().join("lisa_manifest_quant_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // legacy manifest: no quant block -> f32 only
+        std::fs::write(dir.join("manifest.json"), MINI).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.quant_mode, "");
+        assert!(!m.supports_quant("jnp"));
+
+        let seg = |name: &str| {
+            format!(
+                r#""{name}.jnp": {{"file": "{name}.jnp.hlo.txt",
+                    "operands": [{{"shape": [8, 8], "dtype": "int8"}},
+                                 {{"shape": [8], "dtype": "float32"}}],
+                    "outputs": [{{"shape": [1, 4, 8], "dtype": "float32"}}],
+                    "tuple_root": false}},"#
+            )
+        };
+
+        // mode stamped but segments incomplete (partial export): rejected
+        let core_minus_one: String =
+            super::QUANT_SEGMENTS.iter().skip(1).map(|n| seg(n)).collect();
+        let text = MINI.replace(
+            "\"segments\": {",
+            &format!(
+                r#""quant": {{"mode": "int8-chan"}}, "segments": {{{core_minus_one}"#
+            ),
+        );
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.quant_mode, "int8-chan");
+        assert!(!m.supports_quant("jnp"), "partial q8 export must not claim quant");
+
+        // full core set: quant yes, quant_decode still no (no decode twins)
+        let core: String = super::QUANT_SEGMENTS.iter().map(|n| seg(n)).collect();
+        let text = MINI.replace(
+            "\"segments\": {",
+            &format!(r#""quant": {{"mode": "int8-chan"}}, "segments": {{{core}"#),
+        );
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.supports_quant("jnp"));
+        assert!(!m.supports_quant("pallas"), "other backend has no q8 set");
+        assert!(!m.supports_quant_decode("jnp"));
+        assert!(!m.supports_quant_paged("jnp"));
+
+        // an unknown future mode (int4) reads as f32-only
+        let text = MINI.replace(
+            "\"segments\": {",
+            &format!(r#""quant": {{"mode": "int4-nf4"}}, "segments": {{{core}"#),
+        );
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.quant_mode, "int4-nf4");
+        assert!(!m.supports_quant("jnp"));
+
+        // core + decode twins + v1 decode set: quant_decode yes
+        let all: String = super::QUANT_SEGMENTS
+            .iter()
+            .chain(super::QUANT_DECODE_SEGMENTS.iter())
+            .chain(super::DECODE_SEGMENTS.iter())
+            .map(|n| seg(n))
+            .collect();
+        let text = MINI.replace(
+            "\"segments\": {",
+            &format!(
+                r#""decode_abi": 1, "quant": {{"mode": "int8-chan"}},
+                   "segments": {{{all}"#
+            ),
+        );
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.supports_quant_decode("jnp"));
+        assert!(!m.supports_quant_paged("jnp"), "v1 dir can't claim paged q8");
     }
 }

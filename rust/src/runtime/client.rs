@@ -31,13 +31,16 @@ use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
 
 use super::artifacts::{DType, Manifest, SegmentSig};
 use super::fault::FaultInjector;
-use super::tensor::{DeviceTensor, HostTensor, HostTensorI32};
+use super::tensor::{DeviceTensor, HostTensor, HostTensorI32, HostTensorI8};
 
-/// A training-step operand: host f32/i32 tensor (uploaded per call), a
+/// A training-step operand: host f32/i32/i8 tensor (uploaded per call), a
 /// borrowed literal, or an already-device-resident buffer (no transfer).
 pub enum Operand<'a> {
     F32(&'a HostTensor),
     I32(&'a HostTensorI32),
+    /// Quantized frozen weight (one byte per element on the wire —
+    /// DESIGN.md §15).
+    I8(&'a HostTensorI8),
     Lit(&'a Literal),
     Buf(&'a DeviceTensor),
 }
@@ -104,17 +107,30 @@ impl Segment {
                             .buffer_from_host_buffer::<i32>(&t.data, &t.shape, None)?,
                     )
                 }
+                Operand::I8(t) => {
+                    if sig.dtype != DType::I8 || t.shape != sig.shape {
+                        bail!(
+                            "segment {} operand {i}: shape/dtype mismatch \
+                             (got i8 {:?}, want {:?} {:?})",
+                            self.name, t.shape, sig.dtype, sig.shape
+                        );
+                    }
+                    InBuf::Owned(
+                        self.client
+                            .buffer_from_host_buffer::<i8>(&t.data, &t.shape, None)?,
+                    )
+                }
                 Operand::Lit(l) => InBuf::Owned(
                     self.client
                         .buffer_from_host_literal(None, l)
                         .with_context(|| format!("uploading literal operand {i}"))?,
                 ),
                 Operand::Buf(dt) => {
-                    if sig.dtype != DType::F32 || dt.shape != sig.shape {
+                    if dt.dtype != sig.dtype || dt.shape != sig.shape {
                         bail!(
                             "segment {} operand {i}: shape/dtype mismatch \
-                             (got device f32 {:?}, want {:?} {:?})",
-                            self.name, dt.shape, sig.dtype, sig.shape
+                             (got device {:?} {:?}, want {:?} {:?})",
+                            self.name, dt.dtype, dt.shape, sig.dtype, sig.shape
                         );
                     }
                     InBuf::Ext(dt.buffer())
@@ -358,6 +374,10 @@ impl Runtime {
                     e.upload_bytes += t.bytes() as u64;
                 }
                 Operand::I32(t) => {
+                    e.uploads += 1;
+                    e.upload_bytes += t.bytes() as u64;
+                }
+                Operand::I8(t) => {
                     e.uploads += 1;
                     e.upload_bytes += t.bytes() as u64;
                 }

@@ -33,10 +33,19 @@ use anyhow::Result;
 /// one eval/fork view. A third generation evicts the least-recently-used.
 pub const MAX_GENERATIONS: usize = 2;
 
+/// Residency class of a cached value: full-precision f32.
+pub const CLASS_F32: u8 = 0;
+/// Residency class of a cached value: quantized int8 + scales
+/// (DESIGN.md §15). A key holds exactly one class per store generation;
+/// asking for the other class evicts and re-uploads (a *swap*).
+pub const CLASS_I8: u8 = 1;
+
 struct Entry<V> {
     val: V,
     /// Store-generation id the value was uploaded from.
     src: u64,
+    /// Residency class ([`CLASS_F32`] / [`CLASS_I8`]).
+    class: u8,
     bytes: u64,
     /// Logical timestamp of the last hit/upload (LRU within the key).
     last_use: u64,
@@ -49,8 +58,17 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub invalidations: u64,
+    /// Same-`(key, src)` format transitions — a frozen tensor promoted to
+    /// trainable (i8→f32) or demoted back on a LISA resample (f32→i8).
+    pub swaps: u64,
+    /// Cumulative device bytes uploaded through `make` closures.
+    pub upload_bytes: u64,
     pub entries: u64,
     pub resident_bytes: u64,
+    /// Resident bytes currently held as full-precision f32.
+    pub resident_f32_bytes: u64,
+    /// Resident bytes currently held as quantized int8 (+scales).
+    pub resident_i8_bytes: u64,
 }
 
 pub struct DeviceCache<K: Ord + Copy, V> {
@@ -59,7 +77,11 @@ pub struct DeviceCache<K: Ord + Copy, V> {
     hits: u64,
     misses: u64,
     invalidations: u64,
+    swaps: u64,
+    upload_bytes: u64,
     resident_bytes: u64,
+    /// Resident bytes by class, indexed [`CLASS_F32`] / [`CLASS_I8`].
+    class_bytes: [u64; 2],
 }
 
 impl<K: Ord + Copy, V> Default for DeviceCache<K, V> {
@@ -70,9 +92,16 @@ impl<K: Ord + Copy, V> Default for DeviceCache<K, V> {
             hits: 0,
             misses: 0,
             invalidations: 0,
+            swaps: 0,
+            upload_bytes: 0,
             resident_bytes: 0,
+            class_bytes: [0; 2],
         }
     }
+}
+
+fn cls(class: u8) -> usize {
+    (class.min(1)) as usize
 }
 
 impl<K: Ord + Copy, V: Clone> DeviceCache<K, V> {
@@ -84,27 +113,51 @@ impl<K: Ord + Copy, V: Clone> DeviceCache<K, V> {
     /// `make` (which returns the value plus its device byte size). Other
     /// generations of the same key are left resident (up to
     /// [`MAX_GENERATIONS`]); beyond that the least-recently-used one is
-    /// released.
+    /// released. Callers with a single residency format ([`CLASS_F32`]).
     pub fn get_or_upload(
         &mut self,
         key: K,
         src: u64,
         make: impl FnOnce() -> Result<(V, u64)>,
     ) -> Result<V> {
+        self.get_or_upload_class(key, src, CLASS_F32, make)
+    }
+
+    /// As [`Self::get_or_upload`], but format-aware: a hit requires both
+    /// the store generation *and* the residency class to match. The same
+    /// `(key, src)` resident in the *other* class is evicted first and the
+    /// transition counted in [`CacheStats::swaps`] — this is how a LISA
+    /// resample turns a frozen int8 tensor into a trainable f32 one (and
+    /// back) with exactly one upload per direction (DESIGN.md §15).
+    pub fn get_or_upload_class(
+        &mut self,
+        key: K,
+        src: u64,
+        class: u8,
+        make: impl FnOnce() -> Result<(V, u64)>,
+    ) -> Result<V> {
         self.tick += 1;
         if let Some(list) = self.entries.get_mut(&key) {
-            if let Some(e) = list.iter_mut().find(|e| e.src == src) {
-                e.last_use = self.tick;
-                self.hits += 1;
-                return Ok(e.val.clone());
+            if let Some(pos) = list.iter().position(|e| e.src == src) {
+                if list[pos].class == class {
+                    list[pos].last_use = self.tick;
+                    self.hits += 1;
+                    return Ok(list[pos].val.clone());
+                }
+                let old = list.remove(pos);
+                self.resident_bytes -= old.bytes;
+                self.class_bytes[cls(old.class)] -= old.bytes;
+                self.swaps += 1;
             }
         }
         self.misses += 1;
         let (val, bytes) = make()?;
+        self.upload_bytes += bytes;
         let tick = self.tick;
         let list = self.entries.entry(key).or_default();
-        list.push(Entry { val: val.clone(), src, bytes, last_use: tick });
+        list.push(Entry { val: val.clone(), src, class, bytes, last_use: tick });
         self.resident_bytes += bytes;
+        self.class_bytes[cls(class)] += bytes;
         if list.len() > MAX_GENERATIONS {
             let (lru, _) = list
                 .iter()
@@ -113,6 +166,7 @@ impl<K: Ord + Copy, V: Clone> DeviceCache<K, V> {
                 .expect("non-empty list");
             let old = list.remove(lru);
             self.resident_bytes -= old.bytes;
+            self.class_bytes[cls(old.class)] -= old.bytes;
         }
         Ok(val)
     }
@@ -128,7 +182,10 @@ impl<K: Ord + Copy, V: Clone> DeviceCache<K, V> {
         match self.entries.remove(key) {
             Some(list) => {
                 self.invalidations += list.len() as u64;
-                self.resident_bytes -= list.iter().map(|e| e.bytes).sum::<u64>();
+                for e in &list {
+                    self.resident_bytes -= e.bytes;
+                    self.class_bytes[cls(e.class)] -= e.bytes;
+                }
                 true
             }
             None => false,
@@ -140,6 +197,7 @@ impl<K: Ord + Copy, V: Clone> DeviceCache<K, V> {
         self.invalidations += self.len() as u64;
         self.entries.clear();
         self.resident_bytes = 0;
+        self.class_bytes = [0; 2];
     }
 
     pub fn resident_bytes(&self) -> u64 {
@@ -160,8 +218,12 @@ impl<K: Ord + Copy, V: Clone> DeviceCache<K, V> {
             hits: self.hits,
             misses: self.misses,
             invalidations: self.invalidations,
+            swaps: self.swaps,
+            upload_bytes: self.upload_bytes,
             entries: self.len() as u64,
             resident_bytes: self.resident_bytes,
+            resident_f32_bytes: self.class_bytes[cls(CLASS_F32)],
+            resident_i8_bytes: self.class_bytes[cls(CLASS_I8)],
         }
     }
 }
@@ -237,6 +299,61 @@ mod tests {
         assert_eq!(c.resident_bytes(), 0);
         assert!(c.is_empty());
         assert_eq!(c.stats().invalidations, 3);
+    }
+
+    #[test]
+    fn class_swap_evicts_the_other_format_and_counts_bytes() {
+        let mut c: DeviceCache<u32, String> = DeviceCache::new();
+        // frozen weight resident as int8+scales (a quarter of the bytes)
+        c.get_or_upload_class(1, 10, CLASS_I8, up("q8", 25)).unwrap();
+        let s = c.stats();
+        assert_eq!((s.resident_i8_bytes, s.resident_f32_bytes), (25, 0));
+        assert_eq!(s.upload_bytes, 25);
+        // LISA resample promotes it to trainable: same (key, src), other
+        // class — the int8 copy is evicted, one f32 upload, one swap
+        assert_eq!(
+            c.get_or_upload_class(1, 10, CLASS_F32, up("f32", 100)).unwrap(),
+            "f32"
+        );
+        let s = c.stats();
+        assert_eq!(s.swaps, 1);
+        assert_eq!((s.resident_i8_bytes, s.resident_f32_bytes), (0, 100));
+        assert_eq!(s.resident_bytes, 100);
+        assert_eq!(s.entries, 1, "swap replaces, never duplicates");
+        // ...and demoted back on the next resample: second swap
+        c.get_or_upload_class(1, 10, CLASS_I8, up("q8b", 25)).unwrap();
+        let s = c.stats();
+        assert_eq!(s.swaps, 2);
+        assert_eq!((s.resident_i8_bytes, s.resident_f32_bytes), (25, 0));
+        assert_eq!(s.upload_bytes, 150);
+        // steady state: same class is a plain hit, no re-upload
+        c.get_or_upload_class(1, 10, CLASS_I8, || panic!("hit expected"))
+            .unwrap();
+    }
+
+    #[test]
+    fn legacy_get_or_upload_is_class_f32_and_per_class_books_balance() {
+        let mut c: DeviceCache<u32, String> = DeviceCache::new();
+        c.get_or_upload(1, 1, up("a", 8)).unwrap();
+        c.get_or_upload_class(2, 1, CLASS_I8, up("b", 2)).unwrap();
+        let s = c.stats();
+        assert_eq!((s.resident_f32_bytes, s.resident_i8_bytes), (8, 2));
+        assert_eq!(s.resident_bytes, 10);
+        // invalidation returns the class ledger to zero, not just the total
+        assert!(c.invalidate(&2));
+        assert_eq!(c.stats().resident_i8_bytes, 0);
+        c.invalidate_all();
+        let s = c.stats();
+        assert_eq!((s.resident_f32_bytes, s.resident_i8_bytes), (0, 0));
+        // LRU eviction of a mixed-class key keeps the ledger balanced too
+        c.get_or_upload_class(7, 1, CLASS_I8, up("x", 2)).unwrap();
+        c.get_or_upload_class(7, 2, CLASS_F32, up("y", 8)).unwrap();
+        c.get_or_upload_class(7, 1, CLASS_I8, || panic!("hit expected"))
+            .unwrap();
+        c.get_or_upload_class(7, 3, CLASS_F32, up("z", 8)).unwrap(); // evicts src=2
+        let s = c.stats();
+        assert_eq!((s.resident_i8_bytes, s.resident_f32_bytes), (2, 8));
+        assert_eq!(s.swaps, 0, "different src is a generation, not a swap");
     }
 
     #[test]

@@ -14,8 +14,9 @@ pub mod tensor;
 
 pub use artifacts::{
     DType, Manifest, SegmentSig, TensorSig, DECODE_ABI, DECODE_SEGMENTS, PAGED_ABI, PAGED_SEGMENTS,
+    QUANT_DECODE_SEGMENTS, QUANT_MODE, QUANT_PAGED_SEGMENTS, QUANT_SEGMENTS,
 };
 pub use client::{ChainVal, ExecStats, Operand, Runtime, SegId, Segment};
-pub use device_cache::{CacheStats, DeviceCache};
+pub use device_cache::{CacheStats, DeviceCache, CLASS_F32, CLASS_I8};
 pub use fault::{FaultError, FaultInjector, FaultKind, FaultPlan};
-pub use tensor::{numel, DeviceTensor, HostTensor, HostTensorI32};
+pub use tensor::{numel, DeviceTensor, HostTensor, HostTensorI32, HostTensorI8};

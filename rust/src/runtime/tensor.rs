@@ -25,6 +25,13 @@ pub struct HostTensorI32 {
     pub data: Vec<i32>,
 }
 
+/// Dense int8 host tensor (quantized frozen weights, DESIGN.md §15).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensorI8 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i8>,
+}
+
 pub fn numel(shape: &[usize]) -> usize {
     shape.iter().product()
 }
@@ -129,12 +136,16 @@ impl HostTensor {
 #[derive(Clone)]
 pub struct DeviceTensor {
     pub shape: Vec<usize>,
+    /// Element dtype of the resident buffer. `F32` for every activation
+    /// and full-precision weight; `I8` for quantized frozen weights
+    /// (DESIGN.md §15) — what makes `bytes()` count real device bytes.
+    pub dtype: crate::runtime::artifacts::DType,
     buf: Rc<xla::PjRtBuffer>,
 }
 
 impl std::fmt::Debug for DeviceTensor {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "DeviceTensor{:?}", self.shape)
+        write!(f, "DeviceTensor{:?}/{:?}", self.shape, self.dtype)
     }
 }
 
@@ -144,12 +155,34 @@ impl DeviceTensor {
         let buf = client
             .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
             .context("uploading host tensor to device")?;
-        Ok(DeviceTensor { shape: t.shape.clone(), buf: Rc::new(buf) })
+        Ok(DeviceTensor {
+            shape: t.shape.clone(),
+            dtype: crate::runtime::artifacts::DType::F32,
+            buf: Rc::new(buf),
+        })
     }
 
-    /// Adopt an execution output buffer (no transfer at all).
+    /// Upload a quantized int8 host tensor (one memcpy, a quarter of the
+    /// f32 bytes — the residency win of DESIGN.md §15).
+    pub fn from_host_i8(client: &PjRtClient, t: &HostTensorI8) -> Result<DeviceTensor> {
+        let buf = client
+            .buffer_from_host_buffer::<i8>(&t.data, &t.shape, None)
+            .context("uploading i8 host tensor to device")?;
+        Ok(DeviceTensor {
+            shape: t.shape.clone(),
+            dtype: crate::runtime::artifacts::DType::I8,
+            buf: Rc::new(buf),
+        })
+    }
+
+    /// Adopt an execution output buffer (no transfer at all). Segment
+    /// outputs are always f32 in this ABI.
     pub(crate) fn wrap(buf: xla::PjRtBuffer, shape: Vec<usize>) -> DeviceTensor {
-        DeviceTensor { shape, buf: Rc::new(buf) }
+        DeviceTensor {
+            shape,
+            dtype: crate::runtime::artifacts::DType::F32,
+            buf: Rc::new(buf),
+        }
     }
 
     pub fn buffer(&self) -> &xla::PjRtBuffer {
@@ -160,8 +193,10 @@ impl DeviceTensor {
         numel(&self.shape)
     }
 
+    /// Real device bytes: dtype-sized, so an i8 resident tensor counts a
+    /// quarter of its f32 twin.
     pub fn bytes(&self) -> usize {
-        self.numel() * 4
+        self.numel() * self.dtype.size_bytes()
     }
 
     /// Download to a host literal (the only host transfer the device flow
@@ -174,6 +209,37 @@ impl DeviceTensor {
 
     pub fn to_host(&self) -> Result<HostTensor> {
         HostTensor::from_literal(&self.to_literal()?, &self.shape)
+    }
+}
+
+impl HostTensorI8 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostTensorI8 { shape: shape.to_vec(), data: vec![0; numel(shape)] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i8>) -> Self {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        HostTensorI8 { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// One byte per element — the point of the format.
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        // SAFETY: as for `HostTensor::to_literal` — an i8 buffer viewed
+        // as its own bytes for the duration of the copy (i8 -> u8 is a
+        // same-size, same-alignment reinterpretation).
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len())
+        };
+        Literal::create_from_shape_and_untyped_data(ElementType::S8, &self.shape, bytes)
+            .context("creating s8 literal")
     }
 }
 

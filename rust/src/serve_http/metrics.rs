@@ -17,7 +17,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::engine::{FailClass, LoopStats};
-use crate::runtime::ExecStats;
+use crate::runtime::{CacheStats, ExecStats};
 use crate::util::hist::Histogram;
 
 /// Status codes with dedicated counters; anything else lands in `other`.
@@ -32,6 +32,9 @@ const FAIL_CLASSES: [FailClass; 3] =
 pub struct EngineSnapshot {
     pub segments: BTreeMap<String, ExecStats>,
     pub loops: LoopStats,
+    /// Device parameter-cache snapshot; feeds the per-format
+    /// resident-bytes gauges (quantized residency, DESIGN.md §15).
+    pub cache: CacheStats,
 }
 
 #[derive(Debug)]
@@ -271,6 +274,22 @@ impl Metrics {
         let _ = writeln!(o, "# TYPE lisa_serve_live_rows gauge");
         let _ = writeln!(o, "lisa_serve_live_rows {}", l.live_rows);
 
+        let _ = writeln!(
+            o,
+            "# HELP lisa_device_resident_bytes Parameter bytes resident on device by storage format."
+        );
+        let _ = writeln!(o, "# TYPE lisa_device_resident_bytes gauge");
+        let _ = writeln!(
+            o,
+            "lisa_device_resident_bytes{{format=\"f32\"}} {}",
+            snap.cache.resident_f32_bytes
+        );
+        let _ = writeln!(
+            o,
+            "lisa_device_resident_bytes{{format=\"i8\"}} {}",
+            snap.cache.resident_i8_bytes
+        );
+
         if !snap.segments.is_empty() {
             let _ = writeln!(o, "# HELP lisa_segment_calls_total Executions per compiled segment.");
             let _ = writeln!(o, "# TYPE lisa_segment_calls_total counter");
@@ -400,10 +419,20 @@ mod tests {
             ExecStats { calls: 7, total_ns: 3_000_000_000, ..Default::default() },
         );
         let loops = LoopStats { decode_steps: 7, admitted: 3, ..Default::default() };
-        m.set_engine(EngineSnapshot { segments, loops });
+        let cache = CacheStats { resident_f32_bytes: 4096, resident_i8_bytes: 1024, ..Default::default() };
+        m.set_engine(EngineSnapshot { segments, loops, cache });
         let text = m.render();
         assert!(text.contains("lisa_segment_calls_total{segment=\"decode_step\"} 7"), "{text}");
         assert!(text.contains("lisa_serve_decode_steps_total 7"), "{text}");
         assert!(text.contains("lisa_serve_admitted_total 3"), "{text}");
+        assert!(text.contains("lisa_device_resident_bytes{format=\"f32\"} 4096"), "{text}");
+        assert!(text.contains("lisa_device_resident_bytes{format=\"i8\"} 1024"), "{text}");
+    }
+
+    #[test]
+    fn resident_bytes_gauges_render_zero_before_any_snapshot() {
+        let text = Metrics::new().render();
+        assert!(text.contains("lisa_device_resident_bytes{format=\"f32\"} 0"), "{text}");
+        assert!(text.contains("lisa_device_resident_bytes{format=\"i8\"} 0"), "{text}");
     }
 }

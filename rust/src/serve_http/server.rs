@@ -246,7 +246,11 @@ impl RequestSource for ChannelSource {
             self.last_refresh = Some(Instant::now());
             self.state
                 .metrics
-                .set_engine(EngineSnapshot { segments: eng.rt.stats(), loops: stats });
+                .set_engine(EngineSnapshot {
+                    segments: eng.rt.stats(),
+                    loops: stats,
+                    cache: eng.device_cache_stats(),
+                });
         } else {
             self.state.metrics.set_loop(stats);
         }

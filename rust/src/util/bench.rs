@@ -192,6 +192,37 @@ pub fn write_json(
     std::fs::write(path, format!("{}\n", results_to_json(results, quick, note)))
 }
 
+/// Append one run to the bench trajectory (`BENCH_trajectory.jsonl` at
+/// the repo root): a single JSON line per `cargo bench` invocation, so
+/// perf history accumulates across commits instead of being overwritten
+/// the way the `BENCH_step.json` snapshot is. Schema
+/// `lisa-bench-trajectory-v1`: the snapshot object plus a Unix
+/// timestamp.
+pub fn append_trajectory(
+    path: &std::path::Path,
+    results: &[BenchResult],
+    quick: bool,
+    note: &str,
+) -> std::io::Result<()> {
+    use std::io::Write;
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let line = Json::obj(vec![
+        ("schema", Json::str("lisa-bench-trajectory-v1")),
+        ("unix_s", Json::num(unix_s as f64)),
+        ("quick", Json::Bool(quick)),
+        ("note", Json::str(note)),
+        (
+            "groups",
+            Json::Obj(results.iter().map(|r| (r.name.clone(), r.to_json())).collect()),
+        ),
+    ]);
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    writeln!(f, "{line}")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -224,6 +255,29 @@ mod tests {
         assert!(fmt_ns(1500.0).contains("µs"));
         assert!(fmt_ns(2.5e6).contains("ms"));
         assert!(fmt_ns(3.2e9).contains(" s"));
+    }
+
+    #[test]
+    fn trajectory_appends_one_parseable_line_per_run() {
+        let b = Bench::quick();
+        let r = b.run_with_elements("serve/quant-tiny", 64, || 1u8);
+        let dir = std::env::temp_dir().join(format!("lisa-bench-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_trajectory.jsonl");
+        let _ = std::fs::remove_file(&path);
+        append_trajectory(&path, std::slice::from_ref(&r), true, "run one").unwrap();
+        append_trajectory(&path, std::slice::from_ref(&r), false, "run two").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "append-per-run, one line each: {text}");
+        for (i, line) in lines.iter().enumerate() {
+            let j = crate::util::json::Json::parse(line).unwrap();
+            assert_eq!(j.path("schema").unwrap().as_str(), Some("lisa-bench-trajectory-v1"));
+            assert_eq!(j.path("quick").unwrap().as_bool(), Some(i == 0));
+            assert!(j.path("groups").unwrap().get("serve/quant-tiny").is_some());
+        }
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
     }
 
     #[test]

@@ -1,0 +1,80 @@
+//! Audited integer narrowing (the lisa-lint `int_cast` pass,
+//! DESIGN.md §14).
+//!
+//! Page tables, decode row bookkeeping, and the int8 quantizer all
+//! narrow machine-width values into the i32/u32/i8 the segment ABI
+//! speaks. A bare `as` silently truncates on overflow; every such cast
+//! on those paths routes through one of these helpers instead, which
+//! pin the overflow behavior (saturate, never wrap) and concentrate the
+//! justification in one reviewable file. lisa-lint flags any `as`
+//! narrowing in the scoped files that bypasses this module.
+
+/// usize position/index → the i32 the segment ABI carries (token ids,
+/// row cursors, gather indices). Saturates at `i32::MAX`; sequence
+/// lengths and row counts in this codebase are bounded by `seq`/`batch`
+/// (≤ tens of thousands), so saturation is unreachable in practice and
+/// a saturated value still fails loudly downstream (a gather at 2^31
+/// is out of range for every table we build) rather than aliasing a
+/// small index the way wrapping would.
+#[inline]
+pub fn idx_i32(v: usize) -> i32 {
+    debug_assert!(v <= i32::MAX as usize, "index {v} overflows i32");
+    v.min(i32::MAX as usize) as i32
+}
+
+/// usize count → u32 (page ids, pool sizes). Saturates at `u32::MAX`;
+/// same bounded-domain argument as [`idx_i32`].
+#[inline]
+pub fn idx_u32(v: usize) -> u32 {
+    debug_assert!(v <= u32::MAX as usize, "count {v} overflows u32");
+    v.min(u32::MAX as usize) as u32
+}
+
+/// f32 → i8 for the int8 quantizer: clamps to the symmetric
+/// quantization range [-127, 127] before the cast, so the `as` can
+/// never saturate or wrap. The caller rounds first (`round_ties_even`);
+/// any residual fraction truncates toward zero, matching the cast the
+/// quantizer has always done. NaN follows Rust's float-to-int cast
+/// semantics and maps to 0, the correct quantized value for a channel
+/// the quantizer already rejected or zeroed.
+#[inline]
+pub fn sat_i8(v: f32) -> i8 {
+    v.clamp(-127.0, 127.0) as i8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idx_i32_passes_small_and_saturates_large() {
+        assert_eq!(idx_i32(0), 0);
+        assert_eq!(idx_i32(4095), 4095);
+        assert_eq!(idx_i32(i32::MAX as usize), i32::MAX);
+        // release-mode saturation (the debug_assert fires under cfg(debug))
+        if cfg!(not(debug_assertions)) {
+            assert_eq!(idx_i32(usize::MAX), i32::MAX);
+        }
+    }
+
+    #[test]
+    fn idx_u32_passes_small_and_saturates_large() {
+        assert_eq!(idx_u32(0), 0);
+        assert_eq!(idx_u32(65_536), 65_536);
+        assert_eq!(idx_u32(u32::MAX as usize), u32::MAX);
+        if cfg!(not(debug_assertions)) {
+            assert_eq!(idx_u32(usize::MAX), u32::MAX);
+        }
+    }
+
+    #[test]
+    fn sat_i8_clamps_to_the_symmetric_range() {
+        assert_eq!(sat_i8(0.0), 0);
+        assert_eq!(sat_i8(127.0), 127);
+        assert_eq!(sat_i8(126.6), 126); // callers pre-round; residue truncates
+        assert_eq!(sat_i8(500.0), 127);
+        assert_eq!(sat_i8(-500.0), -127);
+        assert_eq!(sat_i8(-128.0), -127); // -128 is outside the symmetric range
+        assert_eq!(sat_i8(f32::NAN), 0);
+    }
+}

@@ -2,6 +2,7 @@
 //! crates.io beyond the `xla` closure — see DESIGN.md §2).
 
 pub mod bench;
+pub mod cast;
 pub mod cli;
 pub mod crc32;
 pub mod csv;

@@ -261,6 +261,8 @@ fn health_metrics_and_error_paths_speak_http() {
         "lisa_serve_ttft_seconds_count",
         "lisa_serve_tokens_per_sec_count",
         "lisa_serve_uptime_seconds",
+        "lisa_device_resident_bytes{format=\"f32\"}",
+        "lisa_device_resident_bytes{format=\"i8\"}",
     ] {
         assert!(m.body.contains(series), "missing {series} in:\n{}", m.body);
     }

@@ -1,0 +1,459 @@
+//! Quantized frozen-base residency: the ISSUE 10 conformance gate.
+//!
+//! Always-on tiers (no artifacts needed):
+//! * quantize/dequantize round-trip error is bounded by half a scale
+//!   step per channel, and a channel's absmax maps to ±127 exactly;
+//! * the `quantized_bytes` arithmetic delivers the ≥3.5x upload shrink
+//!   for every row count ≥ 28 (4r / (r+4), DESIGN.md §15);
+//! * `DeviceCache` dual-format accounting: class swaps move bytes
+//!   between the f32/i8 ledgers with exactly one re-upload and one
+//!   `swaps` tick per transition.
+//!
+//! Artifact-gated tiers (quant-stamped AOT artifacts):
+//! * the `LISA_QUANT=0` kill switch pins `Off` against `set_quant`;
+//! * frozen eval under `--quant int8` uploads ≥3.5x fewer weight bytes
+//!   than the f32 twin — byte-for-byte against the manifest shapes —
+//!   while logits stay inside the documented drift bound and greedy
+//!   argmax rows are token-identical;
+//! * a LISA resample (trainable block 0 → trainable block 1) swaps
+//!   exactly the 12 two-D block weights between formats, with exact
+//!   upload-byte accounting in both directions;
+//! * a mixed continuous-batching queue under `--quant int8` serves
+//!   token-identical completions to the f32 session.
+//!
+//! Engine construction reads `LISA_QUANT`, so every test that builds an
+//! `Engine` serializes on `ENV_LOCK` — tests in one binary share the
+//! process environment across threads.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
+
+use lisa::engine::{Batch, Engine, KvMode, QuantMode, Request, ServeSession, TrainMask};
+use lisa::model::ModelParams;
+use lisa::opt::{dequantize, quantize_per_channel, quantized_bytes};
+use lisa::runtime::{DeviceCache, HostTensor, HostTensorI32, Runtime, CLASS_F32, CLASS_I8};
+use lisa::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Hold this across any `Engine::new` or `LISA_QUANT` mutation: the env
+/// var is process-global and the test harness runs threads in parallel.
+fn env_guard() -> MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+/// Artifacts present *and* stamped with the core q8 segment set.
+fn have_quant() -> Option<Runtime> {
+    if !artifacts().join("manifest.json").exists() {
+        return None;
+    }
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    rt.manifest.supports_quant("pallas").then_some(rt)
+}
+
+/// Additionally carries the q8 decode twins (serving-path tier).
+fn have_quant_decode() -> Option<Runtime> {
+    let rt = have_quant()?;
+    rt.manifest.supports_quant_decode("pallas").then_some(rt)
+}
+
+fn make_batch(m: &lisa::runtime::Manifest, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let n = m.batch * m.seq;
+    let tokens: Vec<i32> = (0..n).map(|_| rng.below(m.vocab) as i32).collect();
+    let targets: Vec<i32> = tokens
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| if i % 3 == 0 { -1 } else { t })
+        .collect();
+    Batch {
+        tokens: HostTensorI32::from_vec(&[m.batch, m.seq], tokens),
+        targets: HostTensorI32::from_vec(&[m.batch, m.seq], targets),
+    }
+}
+
+fn rand_tensor(shape: &[usize], seed: u64) -> HostTensor {
+    let mut rng = Rng::new(seed);
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> = (0..n)
+        .map(|_| (rng.below(20_000) as f32 / 10_000.0 - 1.0) * 0.7)
+        .collect();
+    HostTensor::from_vec(shape, data)
+}
+
+fn numel(shape: &[usize]) -> u64 {
+    shape.iter().product::<usize>() as u64
+}
+
+fn f32_bytes(shape: &[usize]) -> u64 {
+    4 * numel(shape)
+}
+
+// ---------------------------------------------------------------------------
+// always-on tier: quantizer properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn round_trip_error_bounded_by_half_scale_per_channel() {
+    for (i, shape) in [[64usize, 128], [128, 512], [28, 4], [512, 128]]
+        .iter()
+        .enumerate()
+    {
+        let w = rand_tensor(shape, 100 + i as u64);
+        let qt = quantize_per_channel(&w).unwrap();
+        let d = dequantize(&qt);
+        let (rows, cols) = (shape[0], shape[1]);
+        for r in 0..rows {
+            for c in 0..cols {
+                let err = (w.data[r * cols + c] - d.data[r * cols + c]).abs();
+                // round-half-even: |w - q*s| <= s/2 (+ float slack)
+                let bound = qt.s.data[c] * 0.5 + 1e-6;
+                assert!(
+                    err <= bound,
+                    "shape {shape:?} [{r},{c}]: err {err} > s/2 {bound}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn channel_absmax_maps_to_full_scale() {
+    // col 0 peaks at +2.0, col 1 at -0.5; the peak must land on ±127.
+    let w = HostTensor::from_vec(&[3, 2], vec![0.1, -0.5, 2.0, 0.2, -1.0, 0.0]);
+    let qt = quantize_per_channel(&w).unwrap();
+    assert_eq!(qt.q.data[2], 127, "col-0 absmax (+2.0) -> +127");
+    assert_eq!(qt.q.data[1], -127, "col-1 absmax (-0.5) -> -127");
+    assert!((qt.s.data[0] - 2.0 / 127.0).abs() < 1e-7);
+    assert!((qt.s.data[1] - 0.5 / 127.0).abs() < 1e-7);
+}
+
+#[test]
+fn non_2d_tensors_refuse_to_quantize() {
+    assert!(quantize_per_channel(&rand_tensor(&[8], 1)).is_err());
+    assert!(quantize_per_channel(&rand_tensor(&[2, 2, 2], 2)).is_err());
+}
+
+#[test]
+fn upload_shrink_ratio_is_at_least_3_5x_for_real_weight_rows() {
+    // ratio = 4rc / (rc + 4c) = 4r / (r + 4): ≥ 3.5 ⟺ r ≥ 28.
+    for shape in [[28usize, 4], [64, 64], [64, 256], [512, 128]] {
+        let q8 = quantized_bytes(&shape) as f64;
+        let f32b = f32_bytes(&shape) as f64;
+        assert!(
+            f32b / q8 >= 3.5,
+            "shape {shape:?}: ratio {} < 3.5",
+            f32b / q8
+        );
+    }
+    // sanity of the bound itself: below 28 rows the ratio dips under
+    let tiny = [16usize, 16];
+    assert!(f32_bytes(&tiny) as f64 / quantized_bytes(&tiny) as f64 < 3.5);
+}
+
+// ---------------------------------------------------------------------------
+// always-on tier: dual-format cache accounting
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cache_class_swap_moves_bytes_between_ledgers() {
+    let mut cache: DeviceCache<u32, u32> = DeviceCache::new();
+
+    // cold f32 upload
+    let v = cache
+        .get_or_upload_class(1, 7, CLASS_F32, || Ok((400u32, 400)))
+        .unwrap();
+    assert_eq!(v, 400);
+    let s = cache.stats();
+    assert_eq!((s.misses, s.hits, s.swaps), (1, 0, 0));
+    assert_eq!(s.upload_bytes, 400);
+    assert_eq!((s.resident_f32_bytes, s.resident_i8_bytes), (400, 0));
+
+    // warm hit, same class: no upload
+    cache
+        .get_or_upload_class(1, 7, CLASS_F32, || panic!("must not re-upload"))
+        .unwrap();
+    assert_eq!(cache.stats().hits, 1);
+
+    // demote to i8: one swap, one re-upload, bytes move ledgers
+    let v = cache
+        .get_or_upload_class(1, 7, CLASS_I8, || Ok((115u32, 115)))
+        .unwrap();
+    assert_eq!(v, 115);
+    let s = cache.stats();
+    assert_eq!(s.swaps, 1);
+    assert_eq!(s.misses, 2, "a swap re-uploads through the miss path");
+    assert_eq!(s.upload_bytes, 400 + 115);
+    assert_eq!((s.resident_f32_bytes, s.resident_i8_bytes), (0, 115));
+    assert_eq!(s.resident_bytes, 115);
+    assert_eq!(s.entries, 1, "a swap replaces, never duplicates");
+
+    // promote back to f32: the reverse transition is symmetric
+    cache
+        .get_or_upload_class(1, 7, CLASS_F32, || Ok((400u32, 400)))
+        .unwrap();
+    let s = cache.stats();
+    assert_eq!(s.swaps, 2);
+    assert_eq!(s.upload_bytes, 400 + 115 + 400);
+    assert_eq!((s.resident_f32_bytes, s.resident_i8_bytes), (400, 0));
+
+    // a second key's class is independent
+    cache
+        .get_or_upload_class(2, 7, CLASS_I8, || Ok((60u32, 60)))
+        .unwrap();
+    let s = cache.stats();
+    assert_eq!((s.resident_f32_bytes, s.resident_i8_bytes), (400, 60));
+    assert_eq!(s.resident_bytes, 460);
+    assert_eq!(s.swaps, 2, "no swap across distinct keys");
+}
+
+// ---------------------------------------------------------------------------
+// artifact-gated tier: engine semantics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lisa_quant_env_pin_beats_set_quant() {
+    let Some(rt) = have_quant() else { return };
+    let _g = env_guard();
+
+    std::env::set_var("LISA_QUANT", "0");
+    let mut eng = Engine::new(&rt);
+    assert_eq!(eng.quant(), QuantMode::Off);
+    eng.set_quant(QuantMode::Int8);
+    assert_eq!(eng.quant(), QuantMode::Off, "the kill switch is a pin");
+
+    std::env::set_var("LISA_QUANT", "int8");
+    let mut eng = Engine::new(&rt);
+    assert_eq!(eng.quant(), QuantMode::Int8);
+    eng.set_quant(QuantMode::Off);
+    assert_eq!(eng.quant(), QuantMode::Off, "int8 start is not a pin");
+
+    std::env::remove_var("LISA_QUANT");
+    let eng = Engine::new(&rt);
+    assert_eq!(eng.quant(), QuantMode::Off, "default is f32");
+}
+
+/// Expected quantized upload bytes for the whole frozen model (every
+/// 2-D tensor as `(q, s)`, every 1-D norm gain as f32), straight from
+/// the manifest/param shapes — the oracle the cache ledgers must hit.
+fn expected_frozen_bytes(m: &lisa::runtime::Manifest, p: &ModelParams) -> (u64, u64) {
+    let mut i8b = 0u64;
+    let mut f32b = 0u64;
+    for t in [&p.emb, &p.pos, &p.wh] {
+        i8b += quantized_bytes(&t.shape) as u64;
+    }
+    f32b += f32_bytes(&p.gf.shape);
+    for (_, shape) in &m.block_params {
+        if shape.len() == 2 {
+            i8b += m.n_layers as u64 * quantized_bytes(shape) as u64;
+        } else {
+            f32b += m.n_layers as u64 * f32_bytes(shape);
+        }
+    }
+    (i8b, f32b)
+}
+
+// The ISSUE 10 acceptance gate, part 1: a fully frozen eval under
+// `--quant int8` must upload ≥3.5x fewer weight bytes than the f32 twin
+// (byte-exact against the manifest shapes), keep every logit inside the
+// documented drift bound, and pick the same greedy token everywhere.
+#[test]
+fn frozen_eval_shrinks_uploads_3_5x_within_logit_drift_bound() {
+    let Some(rt) = have_quant() else { return };
+    let _g = env_guard();
+    std::env::remove_var("LISA_QUANT");
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(3));
+    let batch = make_batch(&m, 5);
+
+    let mut ef = Engine::new(&rt);
+    ef.device_flow = true;
+    let lf = ef.logits(&params, &batch.tokens).unwrap();
+
+    let mut eq = Engine::new(&rt);
+    eq.device_flow = true;
+    eq.set_quant(QuantMode::Int8);
+    let lq = eq.logits(&params, &batch.tokens).unwrap();
+
+    // -- drift bound (DESIGN.md §15): 4e-2, magnitude-normalized
+    assert_eq!(lf.shape, lq.shape);
+    let scale = lf.data.iter().fold(1.0f32, |a, x| a.max(x.abs()));
+    let bound = 4e-2 * scale;
+    let mut max_err = 0.0f32;
+    for (a, b) in lf.data.iter().zip(&lq.data) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err <= bound, "logit drift {max_err} > bound {bound}");
+
+    // -- greedy argmax identity at every position
+    let v = m.vocab;
+    for (row, (rf, rq)) in lf.data.chunks(v).zip(lq.data.chunks(v)).enumerate() {
+        let am = |r: &[f32]| {
+            r.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        assert_eq!(am(rf), am(rq), "argmax flips at position {row}");
+    }
+
+    // -- byte-exact ledger accounting, then the headline ratio
+    let sf = ef.device_cache_stats();
+    let sq = eq.device_cache_stats();
+    let (want_i8, want_1d_f32) = expected_frozen_bytes(&m, &params);
+    assert_eq!(sq.resident_i8_bytes, want_i8);
+    assert_eq!(sq.resident_f32_bytes, want_1d_f32);
+    assert_eq!(sq.upload_bytes, want_i8 + want_1d_f32);
+    assert_eq!(sf.upload_bytes, sf.resident_bytes, "cold f32 run: no evictions");
+    assert_eq!(sq.swaps, 0, "a frozen eval never changes format");
+
+    // frozen-tensor (2-D) uploads: f32 twin bytes / quantized bytes
+    let f32_2d = sf.upload_bytes - sq.resident_f32_bytes;
+    let ratio = f32_2d as f64 / sq.resident_i8_bytes as f64;
+    assert!(
+        ratio >= 3.5,
+        "frozen warm-upload shrink {ratio:.2}x < 3.5x (f32 2-D {f32_2d}B vs q8 {}B)",
+        sq.resident_i8_bytes
+    );
+}
+
+// The ISSUE 10 acceptance gate, part 2: a LISA resample that moves the
+// trainable block from layer 0 to layer 1 must swap exactly the twelve
+// 2-D block weights (six demoted f32→i8, six promoted i8→f32) with
+// byte-exact uploads — and the reverse resample is symmetric.
+#[test]
+fn lisa_resample_swaps_block_residency_byte_for_byte() {
+    let Some(rt) = have_quant() else { return };
+    let _g = env_guard();
+    std::env::remove_var("LISA_QUANT");
+    let m = rt.manifest.clone();
+    assert!(m.n_layers >= 2, "resample test needs two blocks");
+    let params = ModelParams::init(&m, &mut Rng::new(3));
+    let batch = make_batch(&m, 5);
+
+    let mut eng = Engine::new(&rt);
+    eng.device_flow = true;
+    eng.set_quant(QuantMode::Int8);
+
+    let mask_with = |l: usize| {
+        let mut mk = TrainMask::none(m.n_layers);
+        mk.embed = true;
+        mk.head = true;
+        mk.blocks[l] = true;
+        mk
+    };
+
+    // per-block 2-D byte totals (all blocks share shapes)
+    let two_d: Vec<&Vec<usize>> = m
+        .block_params
+        .iter()
+        .filter(|(_, s)| s.len() == 2)
+        .map(|(_, s)| s)
+        .collect();
+    assert_eq!(two_d.len(), 6, "block ABI: 6 weight matrices + 2 gains");
+    let q8_block: u64 = two_d.iter().map(|s| quantized_bytes(s) as u64).sum();
+    let f32_block: u64 = two_d.iter().map(|s| f32_bytes(s)).sum();
+
+    eng.forward_backward(&params, &batch, &mask_with(0)).unwrap();
+    let s0 = eng.device_cache_stats();
+
+    // resample: block 0 freezes (f32→i8), block 1 promotes (i8→f32)
+    eng.forward_backward(&params, &batch, &mask_with(1)).unwrap();
+    let s1 = eng.device_cache_stats();
+    assert_eq!(s1.swaps - s0.swaps, 12, "6 demotions + 6 promotions");
+    assert_eq!(s1.misses - s0.misses, 12, "each swap re-uploads once");
+    assert_eq!(
+        s1.upload_bytes - s0.upload_bytes,
+        q8_block + f32_block,
+        "demotions upload quantized bytes, promotions full f32"
+    );
+    assert_eq!(s1.entries, s0.entries, "swaps replace entries in place");
+
+    // exact residency after the resample: one trainable block f32, the
+    // rest quantized; embed/head trainable (f32) and gains always f32
+    let want_i8 = (m.n_layers as u64 - 1) * q8_block;
+    let gains_f32: u64 = m
+        .block_params
+        .iter()
+        .filter(|(_, s)| s.len() != 2)
+        .map(|(_, s)| m.n_layers as u64 * f32_bytes(s))
+        .sum();
+    let mut want_f32 = f32_block + gains_f32;
+    for t in [&params.emb, &params.pos, &params.gf, &params.wh] {
+        want_f32 += f32_bytes(&t.shape);
+    }
+    assert_eq!(s1.resident_i8_bytes, want_i8);
+    assert_eq!(s1.resident_f32_bytes, want_f32);
+
+    // resample back: the mirror transition, same byte bill
+    eng.forward_backward(&params, &batch, &mask_with(0)).unwrap();
+    let s2 = eng.device_cache_stats();
+    assert_eq!(s2.swaps - s1.swaps, 12);
+    assert_eq!(s2.upload_bytes - s1.upload_bytes, q8_block + f32_block);
+    assert_eq!(s2.resident_i8_bytes, want_i8);
+    assert_eq!(s2.resident_f32_bytes, want_f32);
+}
+
+// ---------------------------------------------------------------------------
+// artifact-gated tier: serving parity
+// ---------------------------------------------------------------------------
+
+/// Mixed continuous-batching queue (longer than the device batch so
+/// admission streams queued rows into freed slots): greedy rows with
+/// mixed prompt lengths and budgets, the shape the ISSUE 5 suite pins.
+fn mixed_greedy_queue(m: &lisa::runtime::Manifest, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..2 * m.batch)
+        .map(|i| {
+            let len = 3 + rng.below((m.seq / 2).max(4) - 2);
+            let prompt: Vec<i32> =
+                (0..len).map(|_| rng.below(m.vocab) as i32).collect();
+            let budget = if i % m.batch == 0 { 16.min(m.seq / 4).max(2) } else { 2 + i % 3 };
+            Request::greedy(prompt, budget)
+        })
+        .collect()
+}
+
+// The ISSUE 10 acceptance gate, part 3: `--quant int8` greedy decode
+// over the mixed continuous queue is token-identical to the f32 run.
+#[test]
+fn quantized_mixed_queue_serves_token_identical_to_f32() {
+    let Some(rt) = have_quant_decode() else { return };
+    let _g = env_guard();
+    std::env::remove_var("LISA_QUANT");
+    let m = rt.manifest.clone();
+    let params = ModelParams::init(&m, &mut Rng::new(3));
+    let reqs = mixed_greedy_queue(&m, 21);
+    assert!(reqs.len() > m.batch, "queue must force admission");
+    const PAD: i32 = 0;
+
+    let served_f32 = {
+        let mut eng = Engine::new(&rt);
+        let mut sess = ServeSession::with_mode(&mut eng, &params, KvMode::Packed).unwrap();
+        sess.run(&reqs, -1, PAD).unwrap()
+    };
+    let served_q8 = {
+        let mut eng = Engine::new(&rt);
+        eng.set_quant(QuantMode::Int8);
+        let mut sess = ServeSession::with_mode(&mut eng, &params, KvMode::Packed).unwrap();
+        sess.run(&reqs, -1, PAD).unwrap()
+    };
+
+    assert_eq!(served_f32.len(), served_q8.len());
+    for (i, (a, b)) in served_f32.iter().zip(&served_q8).enumerate() {
+        assert_eq!(
+            a.tokens, b.tokens,
+            "request {i}: quantized completion diverged from f32"
+        );
+        assert_eq!(a.stop, b.stop, "request {i}: stop reason diverged");
+    }
+}

@@ -14,6 +14,7 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use lisa::data::{corpus, encode_sft, DataLoader, Tokenizer};
+use lisa::engine::QuantMode;
 use lisa::model::checkpoint::Section;
 use lisa::model::ModelParams;
 use lisa::runtime::{Manifest, Runtime};
@@ -404,4 +405,111 @@ fn kill_during_save_preserves_resumable_checkpoint() {
         assert!(a.to_bits() == b.to_bits(), "loss diverged at step {i}");
     }
     assert_params_eq(&full.params, &snapshot(&sess2.params), "base params", "lisa-kill");
+}
+
+// ---------------------------------------------------------------------------
+// Quantized-base runs (ISSUE 10): checkpoints are ALWAYS f32
+// ---------------------------------------------------------------------------
+
+/// Artifacts present *and* stamped with the q8 segment set.
+fn have_quant() -> bool {
+    have()
+        && Runtime::load(&artifacts(), "pallas")
+            .map(|rt| rt.manifest.supports_quant("pallas"))
+            .unwrap_or(false)
+}
+
+/// `run_uninterrupted` with `--quant int8` switched on for the session.
+fn run_uninterrupted_q8(spec: &StrategySpec) -> RunOut {
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    let mut dl = make_loader(&rt);
+    let mut sess = TrainSession::new(&rt, spec, cfg()).unwrap();
+    sess.engine.set_quant(QuantMode::Int8);
+    let res = sess.run(&mut dl).unwrap();
+    let losses = res.loss_curve.iter().map(|&(_, l)| l).collect();
+    finish(&sess, losses)
+}
+
+// Quantization is a device-residency format, not a storage format
+// (DESIGN.md §15): a `--quant int8` run trains on f32 masters, so an
+// interrupted q8 run must resume bit-identical to the uninterrupted q8
+// run — the checkpoint round-trip crosses the qhost/device-cache
+// teardown and must not leak quantized state into it.
+#[test]
+fn quantized_run_resumes_bit_identical() {
+    if !have_quant() {
+        return;
+    }
+    let dir = tdir("quant-diff");
+    let spec = StrategySpec::lisa(2, 3);
+    let path = dir.join("lisa-q8.state");
+
+    let full = run_uninterrupted_q8(&spec);
+
+    // interrupted twin: K q8 steps, save, tear down, rebuild, resume q8
+    let mut losses = Vec::new();
+    {
+        let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+        let mut dl = make_loader(&rt);
+        let mut sess = TrainSession::new(&rt, &spec, cfg()).unwrap();
+        sess.engine.set_quant(QuantMode::Int8);
+        for step in 0..K {
+            losses.push(sess.step(step, &mut dl).unwrap());
+        }
+        sess.save_checkpoint(&path, K, &dl).unwrap();
+    }
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    let mut dl = make_loader(&rt);
+    let mut sess = TrainSession::new(&rt, &spec, cfg()).unwrap();
+    sess.engine.set_quant(QuantMode::Int8);
+    let res = sess.run_resumable(&mut dl, None, Some(&path)).unwrap();
+    assert_eq!(res.loss_curve.first().map(|&(s, _)| s), Some(K), "resume step offset");
+    losses.extend(res.loss_curve.iter().map(|&(_, l)| l));
+    let resumed = finish(&sess, losses);
+
+    assert_eq!(full.losses.len(), resumed.losses.len(), "[q8] loss curve length");
+    for (i, (a, b)) in full.losses.iter().zip(&resumed.losses).enumerate() {
+        assert!(a.to_bits() == b.to_bits(), "[q8] loss diverged at step {i}: {a} vs {b}");
+    }
+    assert_params_eq(&full.params, &resumed.params, "base params", "lisa-q8");
+    assert_params_eq(&full.eval_params, &resumed.eval_params, "eval params", "lisa-q8");
+    assert_eq!(full.bwd, resumed.bwd, "[q8] backward-call counters");
+}
+
+// The storage-format half of the rule: a checkpoint written by a
+// `--quant int8` session contains exactly the f32 masters — an
+// *unquantized* session resumes it cleanly and holds bit-identical
+// parameters to what the quantized session held at save time.
+#[test]
+fn quantized_checkpoint_is_f32_and_loads_into_unquantized_session() {
+    if !have_quant() {
+        return;
+    }
+    let dir = tdir("quant-f32");
+    let spec = StrategySpec::lisa(2, 3);
+    let path = dir.join("lisa-q8-to-f32.state");
+
+    let rt = Runtime::load(&artifacts(), "pallas").unwrap();
+    let mut dl = make_loader(&rt);
+    let saved_at = {
+        let mut sess = TrainSession::new(&rt, &spec, cfg()).unwrap();
+        sess.engine.set_quant(QuantMode::Int8);
+        for step in 0..K {
+            sess.step(step, &mut dl).unwrap();
+        }
+        sess.save_checkpoint(&path, K, &dl).unwrap();
+        snapshot(&sess.params)
+    };
+
+    // a pure-f32 session resumes the quantized run's checkpoint
+    let mut dl2 = make_loader(&rt);
+    let mut f32_sess = TrainSession::new(&rt, &spec, cfg()).unwrap();
+    assert_eq!(f32_sess.engine.quant(), QuantMode::Off);
+    f32_sess.resume_checkpoint(&path, &mut dl2).unwrap();
+    assert_params_eq(
+        &saved_at,
+        &snapshot(&f32_sess.params),
+        "q8-written checkpoint into f32 session",
+        "lisa-q8-f32",
+    );
 }

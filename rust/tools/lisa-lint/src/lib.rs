@@ -35,6 +35,7 @@ pub const PASSES: &[&str] = &[
     "blocking_send",
     "safety_comment",
     "determinism",
+    "int_cast",
 ];
 
 /// One violation, addressed `file:line`.
@@ -811,6 +812,60 @@ fn pass_determinism(a: &Analysis, out: &mut Vec<Diagnostic>) {
     }
 }
 
+/// Files where integer-narrowing `as` casts are load-bearing: page-table
+/// and row-cursor arithmetic feeding the segment ABI, and the int8
+/// quantizer. `util/cast.rs` is the audited funnel and is deliberately
+/// outside the scope.
+fn in_int_cast_scope(rel: &str) -> bool {
+    rel.ends_with("engine/decode.rs")
+        || rel.ends_with("engine/serve/session.rs")
+        || rel.contains("opt/quant")
+        || rel.contains("runtime/")
+}
+
+/// Pass 7 — audited narrowing: in page/quant arithmetic, a bare
+/// `as i8|u8|i16|u16|i32|u32` silently truncates on overflow. Non-test
+/// code in the scoped files must route through the saturating helpers
+/// in `util/cast.rs` (`idx_i32` / `idx_u32` / `sat_i8`), which pin the
+/// overflow behavior in one reviewable place (DESIGN.md §14). Widening
+/// casts (`as usize`, `as u64`, `as f32`) are exempt.
+fn pass_int_cast(a: &Analysis, out: &mut Vec<Diagnostic>) {
+    if !in_int_cast_scope(&a.rel) {
+        return;
+    }
+    const NARROW: &[&str] = &["i8", "u8", "i16", "u16", "i32", "u32"];
+    for (ln, line) in a.code_lines.iter().enumerate() {
+        if a.is_test_line(ln) {
+            continue;
+        }
+        for at in word_positions(line, "as") {
+            let after = line[at + 2..].trim_start();
+            for ty in NARROW {
+                let boundary_ok = after.len() == ty.len()
+                    || after
+                        .chars()
+                        .nth(ty.len())
+                        .map(|c| !is_ident(c))
+                        .unwrap_or(true);
+                if after.starts_with(ty) && boundary_ok {
+                    out.push(Diagnostic {
+                        pass: "int_cast",
+                        file: a.rel.clone(),
+                        line: ln + 1,
+                        msg: format!(
+                            "unchecked `as {ty}` narrowing in page/quant arithmetic; \
+                             route through the audited util/cast.rs helpers \
+                             (idx_i32/idx_u32/sat_i8) so overflow saturates instead \
+                             of wrapping (DESIGN.md §14)"
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------- allow + driving
 
 /// Parsed `// lisa-lint: allow(<pass>): <reason>` comment.
@@ -865,6 +920,9 @@ pub fn lint_file(rel: &str, src: &str, passes: &[&str]) -> Vec<Diagnostic> {
     }
     if passes.contains(&"determinism") {
         pass_determinism(&a, &mut raw);
+    }
+    if passes.contains(&"int_cast") {
+        pass_int_cast(&a, &mut raw);
     }
 
     // collect allows: line → (pass, ok)
@@ -1072,6 +1130,28 @@ let r = r#"raw " str"#; /* block
         // the word inside an identifier does not match
         let ok = "/// Instantiate the sampler.\nfn build() {}\n";
         assert!(lint_file("engine/serve/sampler.rs", ok, PASSES).is_empty());
+    }
+
+    #[test]
+    fn int_cast_flags_bare_narrowing_only_in_scope() {
+        let bad = "fn f(n: usize) -> i32 { n as i32 }\n";
+        let d = lint_file("engine/decode.rs", bad, PASSES);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].pass, "int_cast");
+        // in scope for runtime/ and the quantizer too
+        assert_eq!(lint_file("runtime/device_cache.rs", bad, PASSES).len(), 1);
+        assert_eq!(lint_file("opt/quant.rs", bad, PASSES).len(), 1);
+        // widening casts are exempt; so are out-of-scope files (including
+        // the audited funnel itself)
+        let wide = "fn f(n: u32) -> usize { n as usize }\n";
+        assert!(lint_file("engine/decode.rs", wide, PASSES).is_empty());
+        assert!(lint_file("model/checkpoint.rs", bad, PASSES).is_empty());
+        assert!(lint_file("util/cast.rs", bad, PASSES).is_empty());
+        // test code is exempt, and `as` inside an identifier is not a cast
+        let test = "#[cfg(test)]\nmod tests {\n    fn g(n: usize) -> i32 { n as i32 }\n}\n";
+        assert!(lint_file("engine/decode.rs", test, PASSES).is_empty());
+        let ident = "fn f(x: &T) -> V { x.astype(i32_kind) }\n";
+        assert!(lint_file("engine/decode.rs", ident, PASSES).is_empty());
     }
 
     #[test]

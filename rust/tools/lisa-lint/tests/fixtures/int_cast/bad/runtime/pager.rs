@@ -1,0 +1,13 @@
+//! Negative fixture: bare narrowing `as` casts in page/quant arithmetic.
+
+fn page_id(n_pages: usize) -> u32 {
+    n_pages as u32
+}
+
+fn row_cursor(fed: usize) -> i32 {
+    fed as i32
+}
+
+fn quantize_one(v: f32) -> i8 {
+    v as i8
+}

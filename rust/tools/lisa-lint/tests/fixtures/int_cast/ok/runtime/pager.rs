@@ -1,0 +1,28 @@
+//! Positive fixture: narrowing routes through the audited helpers;
+//! widening casts and test code stay exempt.
+
+fn page_id(n_pages: usize) -> u32 {
+    crate::util::cast::idx_u32(n_pages)
+}
+
+fn widen(x: u32) -> usize {
+    x as usize
+}
+
+fn to_float(x: i32) -> f32 {
+    x as f32
+}
+
+fn justified(v: usize) -> i32 {
+    // lisa-lint: allow(int_cast): v is a loop index bounded by batch size
+    v as i32
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_narrow() {
+        let n = 5usize;
+        assert_eq!(n as i32, 5);
+    }
+}

@@ -85,6 +85,11 @@ fn determinism_fixtures() {
 }
 
 #[test]
+fn int_cast_fixtures() {
+    check_pair("int_cast", 3);
+}
+
+#[test]
 fn allow_comment_with_reason_suppresses() {
     let out = run_pass("serve_panic", "../allow/ok");
     assert_eq!(
@@ -118,7 +123,7 @@ fn unknown_pass_name_is_a_usage_error() {
 }
 
 #[test]
-fn list_passes_names_all_six() {
+fn list_passes_names_all_seven() {
     let out = run_lint(&["--list-passes"]);
     assert_eq!(out.status.code(), Some(0));
     let stdout = String::from_utf8_lossy(&out.stdout);
@@ -129,6 +134,7 @@ fn list_passes_names_all_six() {
         "blocking_send",
         "safety_comment",
         "determinism",
+        "int_cast",
     ] {
         assert!(stdout.contains(p), "missing pass {p} in --list-passes");
     }
@@ -147,6 +153,7 @@ fn full_run_over_all_bad_fixtures_reports_everything() {
         "blocking_send",
         "safety_comment",
         "determinism",
+        "int_cast",
     ] {
         args.push(base.join(p).join("bad").to_string_lossy().into_owned());
     }

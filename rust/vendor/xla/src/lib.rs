@@ -44,6 +44,7 @@ pub type Result<T> = std::result::Result<T, Error>;
 pub enum ElementType {
     F32,
     S32,
+    S8,
 }
 
 /// Host-native scalar types admissible in buffers/literals.
@@ -57,6 +58,10 @@ impl NativeType for f32 {
 
 impl NativeType for i32 {
     const DTYPE: ElementType = ElementType::S32;
+}
+
+impl NativeType for i8 {
+    const DTYPE: ElementType = ElementType::S8;
 }
 
 /// A host-side literal value. Never constructible through the stub
